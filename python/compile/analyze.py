@@ -1,0 +1,92 @@
+"""L2 profiling tool: static cost analysis of every lowered artifact.
+
+``python -m compile.analyze`` prints, per artifact: XLA's own FLOP /
+byte-traffic estimates (jax cost analysis of the compiled module), the
+arithmetic-intensity ratio, and the Pallas-side VMEM footprint of one
+grid step — the inputs behind DESIGN.md §6's TPU performance estimate
+and the §Perf "no redundant recomputation" check (EXPERIMENTS.md).
+
+Pure build-time tooling; never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .kernels import wavefront
+
+
+def cost_of(fn, *specs) -> dict:
+    """Compile and return XLA's cost analysis for a jax callable."""
+    compiled = jax.jit(fn).lower(*specs).compile()
+    analyses = compiled.cost_analysis()
+    # jax returns one dict (new API) or a list of dicts (old API)
+    ca = analyses[0] if isinstance(analyses, (list, tuple)) else analyses
+    return dict(ca) if ca else {}
+
+
+def analyze_strategy(name: str, h: int, w: int, bins: int, tile: int) -> dict:
+    fn = model.STRATEGIES[name]
+    spec = jax.ShapeDtypeStruct((h, w), jnp.int32)
+    ca = cost_of(lambda img: (fn(img, bins, tile),), spec)
+    flops = float(ca.get("flops", 0.0))
+    bytes_total = float(ca.get("bytes accessed", 0.0))
+    tensor_bytes = bins * h * w * 4
+    out = {
+        "strategy": name,
+        "size": f"{h}x{w}",
+        "bins": bins,
+        "tile": tile,
+        "flops": flops,
+        "bytes_accessed": bytes_total,
+        "intensity_flops_per_byte": flops / bytes_total if bytes_total else 0.0,
+        "tensor_passes_equiv": bytes_total / tensor_bytes if tensor_bytes else 0.0,
+    }
+    if name == "wf_tis":
+        out["vmem_per_grid_step_bytes"] = wavefront.vmem_bytes(tile, w)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--size", type=int, default=256)
+    ap.add_argument("--bins", type=int, default=32)
+    ap.add_argument("--json", action="store_true", help="emit machine-readable JSON")
+    args = ap.parse_args()
+
+    rows = []
+    for name, tile in [("cw_b", 32), ("cw_sts", 32), ("cw_tis", 64), ("wf_tis", 64)]:
+        rows.append(analyze_strategy(name, args.size, args.size, args.bins, tile))
+
+    if args.json:
+        print(json.dumps(rows, indent=2))
+        return
+    print(f"artifact cost analysis @ {args.size}x{args.size}, {args.bins} bins")
+    print(f"{'strategy':<8} {'GFLOP':>8} {'GB moved':>9} {'F/B':>6} {'tensor passes':>14}")
+    for r in rows:
+        print(
+            f"{r['strategy']:<8} {r['flops'] / 1e9:>8.3f} {r['bytes_accessed'] / 1e9:>9.3f}"
+            f" {r['intensity_flops_per_byte']:>6.2f} {r['tensor_passes_equiv']:>14.1f}"
+        )
+    wf = rows[-1]
+    if "vmem_per_grid_step_bytes" in wf:
+        print(
+            f"\nWF-TiS VMEM per grid step: {wf['vmem_per_grid_step_bytes'] / 1024:.1f} KiB"
+            f" (budget 16 MiB — {wf['vmem_per_grid_step_bytes'] / (16 << 20) * 100:.2f}%)"
+        )
+    ordered = sorted(rows, key=lambda r: r["bytes_accessed"])
+    print(
+        "traffic ordering: "
+        + " < ".join(r["strategy"] for r in ordered)
+        + "   (paper §3.5 predicts wf_tis < cw_tis < cw_sts ≤ cw_b)"
+    )
+
+
+if __name__ == "__main__":
+    main()

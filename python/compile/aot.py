@@ -1,0 +1,252 @@
+"""AOT compile path: lower every artifact the Rust runtime needs to HLO text.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target).  Produces one ``<name>.hlo.txt`` per entry in the
+artifact matrix plus ``manifest.json`` describing each artifact's
+strategy, geometry and I/O signature — the Rust ``runtime::artifact``
+module consumes the manifest.
+
+Python runs exactly once, at build time; the Rust binary is self-contained
+afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import asdict, dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Artifact matrix
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Artifact:
+    """One AOT-lowered HLO module plus the metadata Rust needs to run it."""
+
+    name: str
+    kind: str  # "strategy" | "init" | "query" | "serve"
+    strategy: str
+    height: int  # true image height (pre-padding)
+    width: int
+    padded_h: int
+    padded_w: int
+    bins: int
+    tile: int
+    n_rects: int = 0
+    file: str = ""
+    inputs: list = field(default_factory=list)
+    outputs: list = field(default_factory=list)
+
+
+def _strategy_artifacts(quick: bool) -> list[Artifact]:
+    arts: list[Artifact] = []
+
+    def add(strategy, size, bins, tile, true_hw=None):
+        h = w = size if isinstance(size, int) else None
+        if h is None:
+            h, w = size
+        th, tw = true_hw if true_hw else (h, w)
+        name = f"{strategy}_{th}x{tw}_b{bins}_t{tile}"
+        arts.append(
+            Artifact(
+                name=name,
+                kind="strategy",
+                strategy=strategy,
+                height=th,
+                width=tw,
+                padded_h=h,
+                padded_w=w,
+                bins=bins,
+                tile=tile,
+            )
+        )
+
+    if quick:
+        for s in model.STRATEGIES:
+            add(s, 128, 8, 32)
+        return arts
+
+    # Fig. 7 / Fig. 11 / Fig. 19a: the four strategies across image sizes,
+    # 32 bins.  CW-B's per-bin unrolled graph is capped at 512² (the paper
+    # itself shows it 30× off the chart; see EXPERIMENTS.md).
+    for size in (128, 256, 512):
+        for s in ("cw_b", "cw_sts", "cw_tis", "wf_tis"):
+            tile = 32 if s in ("cw_b", "cw_sts") else 64
+            add(s, size, 32, tile)
+    for size in (1024,):
+        for s in ("cw_sts", "cw_tis", "wf_tis"):
+            tile = 32 if s == "cw_sts" else 64
+            add(s, size, 32, tile)
+
+    # Fig. 9 / Fig. 10: WF-TiS tile-size sweep at 512²×32.
+    for tile in (16, 32):
+        add("wf_tis", 512, 32, tile)
+
+    # Fig. 15c,d / Fig. 19b: bins sweep at 512².
+    for bins in (16, 64, 128):
+        add("wf_tis", 512, bins, 64)
+
+    # Fig. 20: standard 640×480, 32 bins (divisible by tile 32).
+    add("wf_tis", (480, 640), 32, 32)
+
+    # Fig. 13 / Fig. 15a,b: HD frames (1280×720 padded to 1280×768).
+    for bins in (16, 32):
+        add("wf_tis", (768, 1280), bins, 64, true_hw=(720, 1280))
+
+    # Fig. 16/17 large-image path runs per-bin-group: a single-bin-group
+    # WF-TiS artifact reused by the multi-device task queue (8 bins/task).
+    add("wf_tis", 512, 8, 64)
+    add("wf_tis", (768, 1280), 8, 64, true_hw=(720, 1280))
+    return arts
+
+
+def _aux_artifacts(quick: bool) -> list[Artifact]:
+    arts = []
+    size, bins, tile = (128, 8, 32) if quick else (512, 32, 64)
+    arts.append(
+        Artifact(
+            name=f"init_only_{size}x{size}_b{bins}_t{tile}",
+            kind="init",
+            strategy="init_only",
+            height=size,
+            width=size,
+            padded_h=size,
+            padded_w=size,
+            bins=bins,
+            tile=tile,
+        )
+    )
+    n_rects = 64
+    arts.append(
+        Artifact(
+            name=f"region_query_{size}x{size}_b{bins}_n{n_rects}",
+            kind="query",
+            strategy="region_query",
+            height=size,
+            width=size,
+            padded_h=size,
+            padded_w=size,
+            bins=bins,
+            tile=tile,
+            n_rects=n_rects,
+        )
+    )
+    arts.append(
+        Artifact(
+            name=f"serve_{size}x{size}_b{bins}_t{tile}_n{n_rects}",
+            kind="serve",
+            strategy="wf_tis_with_query",
+            height=size,
+            width=size,
+            padded_h=size,
+            padded_w=size,
+            bins=bins,
+            tile=tile,
+            n_rects=n_rects,
+        )
+    )
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def set_signature(art: Artifact) -> None:
+    """Record the artifact's I/O signature (always, even when cached)."""
+    image = {"name": "image", "dtype": "i32", "shape": [art.padded_h, art.padded_w]}
+    ih = {"name": "ih", "dtype": "f32", "shape": [art.bins, art.padded_h, art.padded_w]}
+    rects = {"name": "rects", "dtype": "i32", "shape": [art.n_rects, 4]}
+    hists = {"name": "hists", "dtype": "f32", "shape": [art.n_rects, art.bins]}
+    if art.kind in ("strategy", "init"):
+        art.inputs, art.outputs = [image], [ih]
+    elif art.kind == "query":
+        art.inputs, art.outputs = [ih, rects], [hists]
+    elif art.kind == "serve":
+        art.inputs, art.outputs = [image, rects], [ih, hists]
+    else:
+        raise ValueError(art.kind)
+
+
+def lower_artifact(art: Artifact) -> str:
+    img_spec = jax.ShapeDtypeStruct((art.padded_h, art.padded_w), jnp.int32)
+    if art.kind in ("strategy", "init"):
+        fn = model.STRATEGIES.get(art.strategy, None) or getattr(model, art.strategy)
+        lowered = jax.jit(lambda img: (fn(img, art.bins, art.tile),)).lower(img_spec)
+    elif art.kind == "query":
+        ih_spec = jax.ShapeDtypeStruct((art.bins, art.padded_h, art.padded_w), jnp.float32)
+        rects_spec = jax.ShapeDtypeStruct((art.n_rects, 4), jnp.int32)
+        lowered = jax.jit(lambda ih, rects: (model.region_query(ih, rects),)).lower(
+            ih_spec, rects_spec
+        )
+    elif art.kind == "serve":
+        rects_spec = jax.ShapeDtypeStruct((art.n_rects, 4), jnp.int32)
+        lowered = jax.jit(
+            lambda img, rects: model.wf_tis_with_query(img, rects, art.bins, art.tile)
+        ).lower(img_spec, rects_spec)
+    else:
+        raise ValueError(art.kind)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--profile",
+        default=os.environ.get("AOT_PROFILE", "full"),
+        choices=("quick", "full"),
+        help="quick = tiny artifact set for CI smoke tests",
+    )
+    ap.add_argument("--force", action="store_true", help="re-lower even if the file exists")
+    args = ap.parse_args()
+
+    quick = args.profile == "quick"
+    os.makedirs(args.out_dir, exist_ok=True)
+    artifacts = _strategy_artifacts(quick) + _aux_artifacts(quick)
+
+    manifest = []
+    for art in artifacts:
+        art.file = f"{art.name}.hlo.txt"
+        set_signature(art)
+        path = os.path.join(args.out_dir, art.file)
+        if os.path.exists(path) and not args.force:
+            print(f"kept    {art.name}")
+        else:
+            text = lower_artifact(art)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"lowered {art.name}: {len(text)} chars")
+        manifest.append(asdict(art))
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"profile": args.profile, "artifacts": manifest}, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} artifacts to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Layer-1 Pallas kernels for the integral histogram.
+
+Every kernel is written for the TPU memory model (tiles staged through
+VMEM via BlockSpec, boundary carries in VMEM scratch) and lowered with
+``interpret=True`` so the resulting HLO runs on any PJRT backend —
+including the Rust CPU client on the request path.  See DESIGN.md
+§Hardware-Adaptation for the CUDA→TPU mapping.
+
+Modules
+-------
+binning     Q function: image → one-hot bin planes (tiled).
+prescan     Blelloch up-/down-sweep exclusive scan — the CUDA-SDK kernel
+            that CW-B and CW-STS reuse (deliberately work-inefficient).
+transpose   Tiled 2-D/3-D transpose (the CUDA-SDK transpose kernel).
+tiled_scan  CW-TiS strip kernels: tiled horizontal / vertical scans.
+wavefront   WF-TiS: the fused single-pass wavefront tiled scan.
+ref         Pure-jnp oracle all of the above are tested against.
+"""
+
+from .. import interpret_patch
+
+interpret_patch.apply()
+
+from . import binning, prescan, ref, tiled_scan, transpose, wavefront  # noqa: F401,E402

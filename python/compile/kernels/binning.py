@@ -1,0 +1,52 @@
+"""Tiled binning kernel — the Q function of Eq. 1 as a Pallas kernel.
+
+The paper initializes the integral histogram tensor on the GPU
+(``IH(I(x,y), x, y) ← 1`` in Algorithms 2–5) because transferring a
+pre-initialized b×h×w tensor over PCIe is slower than shipping the h×w
+image and scattering on-device.  This kernel is that initialization step:
+each grid step stages one image tile into VMEM and writes the one-hot
+indicator plane for one bin.
+
+Grid: (bins, h/tile, w/tile).  The image block index map ignores the bin
+coordinate, so the same tile is revisited once per bin — mirroring the
+paper's bin-parallel scheme where every bin's plane reads the image
+independently (and letting the L2 strategies fuse or split binning freely).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 64
+
+
+def _binning_kernel(img_ref, out_ref):
+    b = pl.program_id(0)
+    tile = img_ref[0]
+    out_ref[0] = (tile == b).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def binning(image: jnp.ndarray, bins: int, tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    """One-hot bin planes, tiled through VMEM.
+
+    ``image``: int32 (h, w) of bin indices; h and w must be multiples of
+    ``tile`` (the L2 layer pads, matching the paper's padding note in
+    §3.4).  Returns f32 (bins, h, w).
+    """
+    h, w = image.shape
+    if h % tile or w % tile:
+        raise ValueError(f"image {h}x{w} not divisible by tile {tile}")
+    grid = (bins, h // tile, w // tile)
+    return pl.pallas_call(
+        _binning_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, tile, tile), lambda b, i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((1, tile, tile), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((bins, h, w), jnp.float32),
+        interpret=True,
+    )(image[None])

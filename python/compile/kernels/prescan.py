@@ -1,0 +1,113 @@
+"""Blelloch work-parallel exclusive prescan — the CUDA-SDK scan kernel.
+
+CW-B and CW-STS (Algorithms 2 and 3) reuse the NVIDIA SDK's all-prefix-sums
+kernel [Harris et al., GPU Gems 3].  This module reproduces that kernel's
+*structure* in Pallas: an up-sweep (reduce) phase that builds a balanced
+binary tree followed by a down-sweep phase that distributes partial sums,
+2·log2(n) steps in total (Fig. 3 of the paper).
+
+On SIMT hardware every step schedules all n lanes and masks the inactive
+ones, which is where the paper's Eq. 4 efficiency bound 3(n−1)/(n·log n)
+comes from.  We keep that shape deliberately: each step does an O(n)
+masked update (roll + where over the whole row block), so the lowered HLO
+performs the same n·log n work the SDK kernel does — this is what makes
+CW-B/CW-STS measurably slower than the custom CW-TiS/WF-TiS kernels, on
+our substrate exactly as on the GPU.
+
+The kernel scans each row of a 2-D block independently; row length must be
+a power of two (callers pad, as the SDK kernel does).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROWS_PER_BLOCK = 8
+
+
+def _log2(n: int) -> int:
+    if n & (n - 1):
+        raise ValueError(f"prescan length {n} is not a power of two")
+    return n.bit_length() - 1
+
+
+def _blelloch_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Exclusive Blelloch scan of every row of x (rows, n), n a power of 2."""
+    n = x.shape[-1]
+    steps = _log2(n)
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, len(x.shape) - 1)
+
+    # Up-sweep / reduce: for d in [0, steps): x[k] += x[k - 2^d] at every
+    # k ≡ 2^(d+1)-1 (mod 2^(d+1)).  All lanes compute, inactive ones masked
+    # — the SIMT execution model of Fig. 3 (top).
+    for d in range(steps):
+        stride = 1 << (d + 1)
+        half = 1 << d
+        is_k = (iota + 1) % stride == 0
+        from_left = jnp.roll(x, half, axis=-1)
+        x = jnp.where(is_k, x + from_left, x)
+
+    # Clear the root, then down-sweep: swap-and-accumulate from root to
+    # leaves (Fig. 3, bottom).
+    x = jnp.where(iota == n - 1, 0.0, x)
+    for d in range(steps - 1, -1, -1):
+        stride = 1 << (d + 1)
+        half = 1 << d
+        is_k = (iota + 1) % stride == 0
+        is_j = jnp.roll(is_k, -half, axis=-1)  # positions k - half
+        from_right = jnp.roll(x, -half, axis=-1)  # x[k] seen from k - half
+        from_left = jnp.roll(x, half, axis=-1)  # x[k - half] seen from k
+        x = jnp.where(is_j, from_right, jnp.where(is_k, x + from_left, x))
+    return x
+
+
+def _prescan_kernel(x_ref, o_ref):
+    o_ref[...] = _blelloch_rows(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def prescan_rows(x: jnp.ndarray, rows_per_block: int = DEFAULT_ROWS_PER_BLOCK) -> jnp.ndarray:
+    """Exclusive scan of every row of a 2-D array via the Blelloch kernel.
+
+    ``x``: f32 (rows, n); n must be a power of two and rows divisible by
+    ``rows_per_block``.  One grid step scans ``rows_per_block`` rows staged
+    in VMEM — the analogue of one SDK thread-block scanning one array
+    segment in shared memory.
+    """
+    rows, n = x.shape
+    if rows % rows_per_block:
+        raise ValueError(f"{rows} rows not divisible by block of {rows_per_block}")
+    _log2(n)  # validate power of two
+    return pl.pallas_call(
+        _prescan_kernel,
+        grid=(rows // rows_per_block,),
+        in_specs=[pl.BlockSpec((rows_per_block, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows_per_block, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two ≥ n (SDK-kernel padding rule)."""
+    return 1 << (n - 1).bit_length()
+
+
+def inclusive_scan_rows(x: jnp.ndarray, rows_per_block: int = DEFAULT_ROWS_PER_BLOCK) -> jnp.ndarray:
+    """Inclusive row scan built on the exclusive prescan (pad → scan → add).
+
+    Accepts any row length; pads to the next power of two like the SDK
+    wrapper, then converts exclusive → inclusive by adding the input back.
+    """
+    rows, n = x.shape
+    n2 = next_pow2(n)
+    if n2 != n:
+        x_padded = jnp.pad(x, ((0, 0), (0, n2 - n)))
+    else:
+        x_padded = x
+    ex = prescan_rows(x_padded, rows_per_block)[:, :n]
+    return ex + x

@@ -1,0 +1,75 @@
+"""Pure-jnp correctness oracle for the integral histogram.
+
+This module is the ground truth every Pallas kernel and every strategy in
+``model.py`` is validated against (pytest + hypothesis sweeps in
+``python/tests/``).  It implements the paper's Eq. 1 directly:
+
+    H(b, x, y) = sum_{r<=x, c<=y} Q(I(r,c), b)
+
+with the *inclusive* convention used by Algorithm 1 (the histogram at
+(x, y) includes pixel (x, y) itself).  Region queries implement Eq. 2.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def binning(image: jnp.ndarray, bins: int) -> jnp.ndarray:
+    """Q function of Eq. 1: one-hot bin indicator tensor.
+
+    ``image`` is an integer array of shape (h, w) whose values are already
+    bin indices in [0, bins).  Returns f32 of shape (bins, h, w) where
+    plane b is 1.0 where ``image == b``.
+    """
+    return (image[None, :, :] == jnp.arange(bins, dtype=image.dtype)[:, None, None]).astype(
+        jnp.float32
+    )
+
+
+def quantize(image: jnp.ndarray, bins: int, levels: int = 256) -> jnp.ndarray:
+    """Map raw intensities in [0, levels) to bin indices in [0, bins)."""
+    return (image.astype(jnp.int32) * bins) // levels
+
+
+def integral_histogram(image: jnp.ndarray, bins: int) -> jnp.ndarray:
+    """Reference integral histogram: double inclusive cumsum of the one-hot.
+
+    Shape (bins, h, w) f32.  This is Algorithm 1 written as two scans.
+    """
+    q = binning(image, bins)
+    return jnp.cumsum(jnp.cumsum(q, axis=1), axis=2)
+
+
+def region_histogram(ih: jnp.ndarray, r0: int, c0: int, r1: int, c1: int) -> jnp.ndarray:
+    """Eq. 2: histogram of the inclusive rectangle [r0..r1] x [c0..c1].
+
+    Uses the inclusive-integral convention: the subtracted corners are just
+    outside the region, guarded at the image border.
+    """
+    h = ih[:, r1, c1]
+    if r0 > 0:
+        h = h - ih[:, r0 - 1, c1]
+    if c0 > 0:
+        h = h - ih[:, r1, c0 - 1]
+    if r0 > 0 and c0 > 0:
+        h = h + ih[:, r0 - 1, c0 - 1]
+    return h
+
+
+def region_histogram_batch(ih: jnp.ndarray, rects: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized Eq. 2 for a batch of rectangles.
+
+    ``rects`` is int32 (n, 4) rows (r0, c0, r1, c1), inclusive coordinates.
+    Returns (n, bins).  Implemented with a zero-padded integral histogram so
+    the border guards become plain indexing (this is also exactly what the
+    lowered HLO artifact does — keep in sync with model.region_query).
+    """
+    padded = jnp.pad(ih, ((0, 0), (1, 0), (1, 0)))
+    r0, c0, r1, c1 = rects[:, 0], rects[:, 1], rects[:, 2], rects[:, 3]
+    # padded[r+1, c+1] == ih[r, c]; padded[r0, ...] is the exclusive corner.
+    a = padded[:, r1 + 1, c1 + 1]
+    b = padded[:, r0, c1 + 1]
+    c = padded[:, r1 + 1, c0]
+    d = padded[:, r0, c0]
+    return (a - b - c + d).T

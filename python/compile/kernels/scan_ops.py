@@ -1,0 +1,46 @@
+"""In-tile scan primitives shared by the custom kernels.
+
+``jnp.cumsum`` lowers to a reduce-window op whose CPU implementation in
+the runtime's XLA (xla_extension 0.5.1, behind the published ``xla``
+crate) is O(n) *per element* — an O(n²)-per-row scan that made larger
+tiles slower at execution time, inverting the paper's Fig. 10 tuning
+result (see EXPERIMENTS.md §Perf, L1 iteration 2).
+
+``tile_cumsum`` instead emits a Hillis–Steele scan: log2(n) steps of
+shift-and-add over the whole tile, each a plain pad/slice/add that XLA
+vectorizes.  Work is O(n log n) element ops but fully data-parallel —
+the same trade the paper's GPU kernels make inside a thread block — and
+on both the modern jaxlib CPU and the 0.5.1 runtime it is strictly
+faster than reduce-window for our tile sizes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tile_cumsum(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Inclusive scan along ``axis`` via log-step shift-and-add.
+
+    Requires the scanned extent to be a power of two (kernel tiles are
+    16/32/64); falls back to ``jnp.cumsum`` otherwise so the kernels
+    stay correct for exotic tile sizes.
+    """
+    n = x.shape[axis]
+    if n & (n - 1):
+        return jnp.cumsum(x, axis=axis)
+    d = 1
+    while d < n:
+        x = x + _shift_right(x, d, axis)
+        d *= 2
+    return x
+
+
+def _shift_right(x: jnp.ndarray, by: int, axis: int) -> jnp.ndarray:
+    """Shift ``x`` by ``by`` positions along ``axis``, zero-filling."""
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (by, 0)
+    padded = jnp.pad(x, pad)
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(0, x.shape[axis])
+    return padded[tuple(idx)]

@@ -1,0 +1,116 @@
+"""CW-TiS strip-scan kernels (Algorithm 4, Fig. 5).
+
+The cross-weave tiled scan removes both the SDK prescan (work-inefficient,
+Eq. 4) and the transpose (pure data movement) by writing *custom* scan
+kernels that sweep tiles strip-wise:
+
+  * horizontal pass — vertical strips of width TILE are processed left to
+    right; within a strip every (bin, tile-row) pair is independent.  Each
+    tile is staged into VMEM, cumsum'd along rows, and the tile's right
+    edge is carried to the next strip.
+  * vertical pass — horizontal strips top to bottom, carrying the bottom
+    edge.
+
+On the GPU the carry lives in global memory between kernel launches; here
+it lives in VMEM scratch that persists across the sequential Pallas grid
+(DESIGN.md §Hardware-Adaptation).  The grid is ordered so the strip
+coordinate is innermost: tile (b, i, j) runs right after (b, i, j−1),
+which is the same producer→consumer order the strip-wise launches enforce
+on the GPU.
+
+The drawback the paper calls out — and fixes with WF-TiS — is preserved:
+the two passes each read AND write the full b×h×w tensor through
+VMEM/global memory, i.e. 2× the traffic of the fused wavefront kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .scan_ops import tile_cumsum
+
+DEFAULT_TILE = 64
+
+
+def _hscan_kernel(x_ref, o_ref, carry_ref):
+    """Horizontal tiled scan: inclusive row cumsum with carried left edge."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    tile = x_ref[0]
+    h = tile_cumsum(tile, 1) + carry_ref[...][:, None]
+    carry_ref[...] = h[:, -1]
+    o_ref[0] = h
+
+
+def _vscan_kernel(x_ref, o_ref, carry_ref):
+    """Vertical tiled scan: inclusive column cumsum with carried top edge."""
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    tile = x_ref[0]
+    v = tile_cumsum(tile, 0) + carry_ref[...][None, :]
+    carry_ref[...] = v[-1, :]
+    o_ref[0] = v
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def tiled_hscan(q: jnp.ndarray, tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    """Row-wise inclusive scan of every bin plane, tile-by-tile.
+
+    ``q``: f32 (b, h, w) one-hot planes; h, w divisible by ``tile``.
+    Grid (b, h/tile, w/tile) with the strip index j innermost.
+    """
+    b, h, w = q.shape
+    if h % tile or w % tile:
+        raise ValueError(f"tensor {b}x{h}x{w} not divisible by tile {tile}")
+    return pl.pallas_call(
+        _hscan_kernel,
+        grid=(b, h // tile, w // tile),
+        in_specs=[pl.BlockSpec((1, tile, tile), lambda b, i, j: (b, i, j))],
+        out_specs=pl.BlockSpec((1, tile, tile), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tile,), jnp.float32)],
+        interpret=True,
+    )(q)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def tiled_vscan(x: jnp.ndarray, tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    """Column-wise inclusive scan of every bin plane, tile-by-tile.
+
+    Grid (b, w/tile, h/tile): the tile-row index i is innermost so each
+    column strip is swept top to bottom with the bottom-edge carry.
+    """
+    b, h, w = x.shape
+    if h % tile or w % tile:
+        raise ValueError(f"tensor {b}x{h}x{w} not divisible by tile {tile}")
+    return pl.pallas_call(
+        _vscan_kernel,
+        grid=(b, w // tile, h // tile),
+        in_specs=[pl.BlockSpec((1, tile, tile), lambda b, j, i: (b, i, j))],
+        out_specs=pl.BlockSpec((1, tile, tile), lambda b, j, i: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tile,), jnp.float32)],
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def cw_tis(image: jnp.ndarray, bins: int, tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    """Full CW-TiS strategy: binning → tiled h-scan → tiled v-scan."""
+    from . import binning as _binning
+
+    q = _binning.binning(image, bins, tile)
+    return tiled_vscan(tiled_hscan(q, tile), tile)

@@ -1,0 +1,68 @@
+"""Tiled 2-D / 3-D transpose — the CUDA-SDK transpose kernel.
+
+CW-B transposes each bin plane separately (Algorithm 2, line 8); CW-STS
+upgrades it to a single 3-D transpose over the whole b×h×w tensor by
+folding the bin offset into the indexing (§3.3, Fig. 4).  On the GPU the
+kernel stages BLOCK_DIM×BLOCK_DIM tiles through shared memory with +1
+padding to avoid bank conflicts; in the TPU/VMEM model the staging is the
+BlockSpec itself and banking does not apply (DESIGN.md
+§Hardware-Adaptation), so the kernel body is just the in-VMEM transpose of
+one tile written back to the swapped block coordinate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper sets BLOCK_DIM to the shared-memory bank count (32); we keep
+# the same default tile edge for the lowered artifacts.
+BLOCK_DIM = 32
+
+
+def _transpose2d_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def transpose2d(x: jnp.ndarray, tile: int = BLOCK_DIM) -> jnp.ndarray:
+    """Tiled transpose of a 2-D array (h, w) → (w, h)."""
+    h, w = x.shape
+    if h % tile or w % tile:
+        raise ValueError(f"array {h}x{w} not divisible by tile {tile}")
+    return pl.pallas_call(
+        _transpose2d_kernel,
+        grid=(h // tile, w // tile),
+        in_specs=[pl.BlockSpec((tile, tile), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((w, h), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _transpose3d_kernel(x_ref, o_ref):
+    o_ref[0] = x_ref[0].T
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def transpose3d(x: jnp.ndarray, tile: int = BLOCK_DIM) -> jnp.ndarray:
+    """Tiled per-bin transpose of a 3-D tensor (b, h, w) → (b, w, h).
+
+    This is the CW-STS 3-D transpose: one kernel launch over a grid of
+    (b, w/tile, h/tile) blocks, with the bin offset folded into the block
+    index map exactly as §3.3 folds it into the CUDA indexing.
+    """
+    b, h, w = x.shape
+    if h % tile or w % tile:
+        raise ValueError(f"tensor {b}x{h}x{w} not divisible by tile {tile}")
+    return pl.pallas_call(
+        _transpose3d_kernel,
+        grid=(b, h // tile, w // tile),
+        in_specs=[pl.BlockSpec((1, tile, tile), lambda b, i, j: (b, i, j))],
+        out_specs=pl.BlockSpec((1, tile, tile), lambda b, i, j: (b, j, i)),
+        out_shape=jax.ShapeDtypeStruct((b, w, h), jnp.float32),
+        interpret=True,
+    )(x)

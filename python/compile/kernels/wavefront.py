@@ -1,0 +1,102 @@
+"""WF-TiS — wave-front tiled scan, the paper's fastest kernel (Algorithm 5).
+
+A single fused kernel computes binning, horizontal scan and vertical scan
+per tile, so the b×h×w tensor crosses the global-memory boundary exactly
+once in each direction (§3.5) — versus twice for CW-TiS and four times
+plus transposes for CW-STS.  The data-dependence pattern is the
+Needleman–Wunsch wavefront: tile (i, j) needs the right edge of (i, j−1)
+after *horizontal* scan and the bottom edge of (i−1, j) after *vertical*
+scan.  The paper's "tricky part" — preserving each tile's post-horizontal
+last column before the vertical scan overwrites it — maps here to the
+``colc`` scratch carry, and the h-element global array for the row carry
+maps to the ``rowc`` scratch of width w.
+
+Scheduling: on the GPU, anti-diagonal strips of tiles run concurrently
+(Fig. 6).  The Pallas grid on a single core is sequential in row-major
+order, which is a linear extension of the wavefront partial order — every
+dependency is produced before it is consumed, and the single-pass memory
+traffic (the actual source of the speedup) is identical.  Cross-tile
+parallelism is recovered one level up: bins are the outer grid dimension
+here and are spread across devices by the L3 task queue (DESIGN.md
+§Hardware-Adaptation).
+
+Grid: (bins, h/tile, w/tile); image tile is re-read once per bin exactly
+as every GPU thread-block re-reads its image tile per bin plane.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .scan_ops import tile_cumsum
+
+DEFAULT_TILE = 64
+
+
+def _wavefront_kernel(img_ref, o_ref, colc_ref, rowc_ref):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    t = o_ref.shape[1]
+
+    # Binning fused into the scan kernel: the IH initialization of
+    # Algorithm 5 line 1, for this tile and bin.
+    tile = img_ref[0]
+    q = (tile == b).astype(jnp.float32)
+
+    # Horizontal scan with the carried right edge of tile (i, j-1).
+    @pl.when(j == 0)
+    def _():
+        colc_ref[...] = jnp.zeros_like(colc_ref)
+
+    h = tile_cumsum(q, 1) + colc_ref[...][:, None]
+    # Preserve the post-horizontal last column for tile (i, j+1) BEFORE
+    # the vertical scan overwrites the tile — the paper's extra h-element
+    # buffer in global memory.
+    colc_ref[...] = h[:, -1]
+
+    # Vertical scan with the carried bottom edge of tile (i-1, j).
+    @pl.when(i == 0)
+    def _():
+        rowc_ref[pl.ds(j * t, t)] = jnp.zeros((t,), jnp.float32)
+
+    v = tile_cumsum(h, 0) + rowc_ref[pl.ds(j * t, t)][None, :]
+    rowc_ref[pl.ds(j * t, t)] = v[-1, :]
+    o_ref[0] = v
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def wf_tis(image: jnp.ndarray, bins: int, tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    """Full WF-TiS strategy in one Pallas call.
+
+    ``image``: int32 (h, w) of bin indices, h and w divisible by ``tile``.
+    Returns the f32 (bins, h, w) integral histogram.
+    """
+    h, w = image.shape
+    if h % tile or w % tile:
+        raise ValueError(f"image {h}x{w} not divisible by tile {tile}")
+    return pl.pallas_call(
+        _wavefront_kernel,
+        grid=(bins, h // tile, w // tile),
+        in_specs=[pl.BlockSpec((1, tile, tile), lambda b, i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((1, tile, tile), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((bins, h, w), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((tile,), jnp.float32),  # colc: right edge carry
+            pltpu.VMEM((w,), jnp.float32),  # rowc: bottom edge carries per strip
+        ],
+        interpret=True,
+    )(image[None])
+
+
+def vmem_bytes(tile: int, w: int) -> int:
+    """Static VMEM footprint of one grid step (for the DESIGN.md §6 model).
+
+    image tile (int32) + output tile (f32) + colc + rowc scratch.
+    """
+    return tile * tile * 4 + tile * tile * 4 + tile * 4 + w * 4

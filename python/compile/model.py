@@ -1,0 +1,148 @@
+"""Layer-2: the four integral-histogram strategies as jax graphs.
+
+Each strategy is a function ``image[int32 h×w] → IH[f32 b×h×w]`` composed
+from the Layer-1 Pallas kernels, mirroring Algorithms 2–5 of the paper.
+``aot.py`` lowers each (strategy, h, w, bins) instance to HLO text that
+the Rust runtime loads via PJRT; nothing in this module ever runs on the
+request path.
+
+Strategy inventory (paper §3):
+
+  cw_b    Algorithm 2 — per-bin Blelloch prescans + per-bin 2-D tiled
+          transposes.  Many small kernel bodies, SDK-style scans: the
+          deliberately naive baseline.
+  cw_sts  Algorithm 3 — ONE big prescan over all (b·h) rows, one 3-D
+          transpose, one big prescan over all (b·w) rows, transpose back.
+  cw_tis  Algorithm 4 — custom tiled horizontal + vertical strip scans,
+          no transpose, no Blelloch inefficiency.
+  wf_tis  Algorithm 5 — single fused wavefront kernel, one read + one
+          write of the tensor.
+
+Also exported for AOT: ``init_only`` (binning alone — the "init" bar of
+the paper's Fig. 8 breakdown) and ``region_query`` (Eq. 2 as a batched
+lookup graph, the O(1) service the integral histogram exists to enable).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import binning as _binning
+from .kernels import prescan as _prescan
+from .kernels import tiled_scan as _tiled
+from .kernels import transpose as _transpose
+from .kernels import wavefront as _wavefront
+
+# ---------------------------------------------------------------------------
+# Strategies
+# ---------------------------------------------------------------------------
+
+
+def cw_b(image: jnp.ndarray, bins: int, tile: int = 32) -> jnp.ndarray:
+    """Algorithm 2: naive cross-weave baseline.
+
+    The GPU version launches b×h one-row scans, b 2-D transposes and b×w
+    more one-row scans — bins are processed one at a time with small
+    generic kernels.  A single HLO module cannot "launch" kernels, so the
+    per-bin sequencing is expressed as ``lax.map`` over bins (one bin's
+    full scan→transpose→scan→transpose chain per loop step), and the
+    Rust ``simulator`` module adds the measured per-launch cost on top —
+    the paper itself attributes CW-B's 30×+ deficit to launch overhead
+    and under-utilization (§3.3), which is exactly what the model
+    charges.  (An earlier trace-time-unrolled formulation produced an
+    HLO that xla_extension 0.5.1 took ~8 minutes to compile; see
+    EXPERIMENTS.md §Perf, L2 iteration 1.)
+    """
+
+    def per_bin(b):
+        q = (image == b).astype(jnp.float32)
+        hs = _prescan.inclusive_scan_rows(q)  # b×h row scans
+        ht = _transpose.transpose2d(hs, tile)  # per-bin 2-D transpose
+        vs = _prescan.inclusive_scan_rows(ht)  # b×w column scans
+        return _transpose.transpose2d(vs, tile)
+
+    return jax.lax.map(per_bin, jnp.arange(bins, dtype=image.dtype))
+
+
+def cw_sts(image: jnp.ndarray, bins: int, tile: int = 32) -> jnp.ndarray:
+    """Algorithm 3: single scan → 3-D transpose → single scan.
+
+    The SDK prescan kernel is launched over one large 2-D grid covering
+    all (b·h) rows at once, fixing CW-B's under-utilization while keeping
+    the work-inefficient Blelloch scan and the transpose data movement.
+    """
+    h, w = image.shape
+    q = _binning.binning(image, bins, tile)
+    hs = _prescan.inclusive_scan_rows(q.reshape(bins * h, w)).reshape(bins, h, w)
+    ht = _transpose.transpose3d(hs, tile)  # (b, w, h)
+    vs = _prescan.inclusive_scan_rows(ht.reshape(bins * w, h)).reshape(bins, w, h)
+    return _transpose.transpose3d(vs, tile)
+
+
+def cw_tis(image: jnp.ndarray, bins: int, tile: int = 64) -> jnp.ndarray:
+    """Algorithm 4: cross-weave tiled horizontal-vertical strip scans."""
+    q = _binning.binning(image, bins, tile)
+    return _tiled.tiled_vscan(_tiled.tiled_hscan(q, tile), tile)
+
+
+def wf_tis(image: jnp.ndarray, bins: int, tile: int = 64) -> jnp.ndarray:
+    """Algorithm 5: fused wavefront tiled scan (binning fused in-kernel)."""
+    return _wavefront.wf_tis(image, bins, tile)
+
+
+STRATEGIES = {
+    "cw_b": cw_b,
+    "cw_sts": cw_sts,
+    "cw_tis": cw_tis,
+    "wf_tis": wf_tis,
+}
+
+# ---------------------------------------------------------------------------
+# Auxiliary graphs
+# ---------------------------------------------------------------------------
+
+
+def init_only(image: jnp.ndarray, bins: int, tile: int = 64) -> jnp.ndarray:
+    """Binning/initialization alone — the "init" slice of Fig. 8."""
+    return _binning.binning(image, bins, tile)
+
+
+def region_query(ih: jnp.ndarray, rects: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 2 as a batched gather graph: (b,h,w) IH + (n,4) rects → (n,b).
+
+    Rectangles are inclusive (r0, c0, r1, c1).  The IH is zero-padded on
+    the top/left so border guards become plain gathers; must stay in sync
+    with kernels.ref.region_histogram_batch.
+    """
+    padded = jnp.pad(ih, ((0, 0), (1, 0), (1, 0)))
+    r0, c0, r1, c1 = rects[:, 0], rects[:, 1], rects[:, 2], rects[:, 3]
+    a = padded[:, r1 + 1, c1 + 1]
+    b = padded[:, r0, c1 + 1]
+    c = padded[:, r1 + 1, c0]
+    d = padded[:, r0, c0]
+    return (a - b - c + d).T
+
+
+def wf_tis_with_query(image: jnp.ndarray, rects: jnp.ndarray, bins: int, tile: int = 64):
+    """Fused serving graph: integral histogram + batched region queries.
+
+    This is the shape the L3 batcher actually serves: one frame in, the
+    IH *and* the histograms of a batch of query rectangles out.
+    """
+    ih = wf_tis(image, bins, tile)
+    return ih, region_query(ih, rects)
+
+
+def pad_image(image: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """Pad an image so both dims are tile multiples (§3.4 padding rule).
+
+    Padding uses bin value −1 so padded pixels fall in no bin and the
+    integral histogram of the original extent is unchanged.
+    """
+    h, w = image.shape
+    ph = (tile - h % tile) % tile
+    pw = (tile - w % tile) % tile
+    if ph == 0 and pw == 0:
+        return image
+    return jnp.pad(image, ((0, ph), (0, pw)), constant_values=-1)

@@ -1,0 +1,227 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Every Pallas kernel and every composed strategy must match the pure-jnp
+oracle in ``kernels/ref.py`` exactly (integral histograms are integer
+counts stored as f32, so we assert exact equality up to f32 addition
+order — allclose with tight tolerance).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import binning, prescan, ref, tiled_scan, transpose, wavefront
+
+
+def random_image(h, w, bins, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (h, w), 0, bins, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-consistency
+# ---------------------------------------------------------------------------
+
+
+class TestOracle:
+    def test_binning_is_partition(self):
+        img = random_image(16, 24, 8)
+        q = ref.binning(img, 8)
+        # every pixel falls in exactly one bin
+        np.testing.assert_array_equal(np.asarray(q.sum(axis=0)), np.ones((16, 24)))
+
+    def test_integral_corner_is_total_histogram(self):
+        img = random_image(32, 16, 4, seed=1)
+        ih = ref.integral_histogram(img, 4)
+        expected = np.bincount(np.asarray(img).ravel(), minlength=4)
+        np.testing.assert_allclose(np.asarray(ih[:, -1, -1]), expected)
+
+    def test_region_full_image(self):
+        img = random_image(16, 16, 4, seed=2)
+        ih = ref.integral_histogram(img, 4)
+        h = ref.region_histogram(ih, 0, 0, 15, 15)
+        expected = np.bincount(np.asarray(img).ravel(), minlength=4)
+        np.testing.assert_allclose(np.asarray(h), expected)
+
+    def test_region_single_pixel(self):
+        img = random_image(8, 8, 4, seed=3)
+        ih = ref.integral_histogram(img, 4)
+        for r, c in [(0, 0), (3, 5), (7, 7)]:
+            h = np.asarray(ref.region_histogram(ih, r, c, r, c))
+            expected = np.zeros(4)
+            expected[int(img[r, c])] = 1
+            np.testing.assert_allclose(h, expected)
+
+    def test_region_batch_matches_scalar(self):
+        img = random_image(16, 16, 8, seed=4)
+        ih = ref.integral_histogram(img, 8)
+        rects = jnp.array([[0, 0, 15, 15], [2, 3, 9, 11], [5, 5, 5, 5], [0, 7, 8, 15]], jnp.int32)
+        batch = np.asarray(ref.region_histogram_batch(ih, rects))
+        for k, (r0, c0, r1, c1) in enumerate(np.asarray(rects)):
+            np.testing.assert_allclose(
+                batch[k], np.asarray(ref.region_histogram(ih, r0, c0, r1, c1))
+            )
+
+    def test_quantize_range(self):
+        img = jnp.arange(256, dtype=jnp.int32).reshape(16, 16)
+        q = ref.quantize(img, 16)
+        assert int(q.min()) == 0 and int(q.max()) == 15
+
+
+# ---------------------------------------------------------------------------
+# L1 kernels vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestBinningKernel:
+    @pytest.mark.parametrize("h,w,bins,tile", [(64, 64, 8, 32), (64, 128, 16, 64), (96, 64, 4, 32)])
+    def test_matches_ref(self, h, w, bins, tile):
+        img = random_image(h, w, bins)
+        np.testing.assert_array_equal(
+            np.asarray(binning.binning(img, bins, tile)), np.asarray(ref.binning(img, bins))
+        )
+
+    def test_rejects_indivisible(self):
+        with pytest.raises(ValueError):
+            binning.binning(random_image(48, 64, 4), 4, 32)
+
+
+class TestPrescan:
+    @pytest.mark.parametrize("rows,n", [(8, 64), (16, 128), (8, 1024)])
+    def test_exclusive_scan(self, rows, n):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (rows, n))
+        out = prescan.prescan_rows(x)
+        expected = jnp.cumsum(x, axis=1) - x  # exclusive
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("n", [48, 100, 720])
+    def test_inclusive_non_pow2(self, n):
+        x = jax.random.uniform(jax.random.PRNGKey(1), (8, n))
+        out = prescan.inclusive_scan_rows(x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.cumsum(x, axis=1)), rtol=1e-5, atol=1e-5)
+
+    def test_rejects_non_pow2_direct(self):
+        with pytest.raises(ValueError):
+            prescan.prescan_rows(jnp.ones((8, 48)))
+
+    def test_next_pow2(self):
+        assert [prescan.next_pow2(n) for n in (1, 2, 3, 480, 512, 513)] == [1, 2, 4, 512, 512, 1024]
+
+
+class TestTranspose:
+    @pytest.mark.parametrize("h,w", [(64, 64), (64, 96), (128, 32)])
+    def test_2d(self, h, w):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (h, w))
+        np.testing.assert_array_equal(np.asarray(transpose.transpose2d(x)), np.asarray(x.T))
+
+    @pytest.mark.parametrize("b,h,w", [(4, 64, 64), (8, 32, 96)])
+    def test_3d(self, b, h, w):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (b, h, w))
+        np.testing.assert_array_equal(
+            np.asarray(transpose.transpose3d(x)), np.asarray(jnp.transpose(x, (0, 2, 1)))
+        )
+
+
+class TestTiledScan:
+    @pytest.mark.parametrize("b,h,w,tile", [(4, 64, 64, 32), (2, 64, 128, 64), (8, 96, 32, 32)])
+    def test_hscan(self, b, h, w, tile):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (b, h, w))
+        np.testing.assert_allclose(
+            np.asarray(tiled_scan.tiled_hscan(x, tile)),
+            np.asarray(jnp.cumsum(x, axis=2)),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    @pytest.mark.parametrize("b,h,w,tile", [(4, 64, 64, 32), (2, 128, 64, 64), (8, 32, 96, 32)])
+    def test_vscan(self, b, h, w, tile):
+        x = jax.random.uniform(jax.random.PRNGKey(1), (b, h, w))
+        np.testing.assert_allclose(
+            np.asarray(tiled_scan.tiled_vscan(x, tile)),
+            np.asarray(jnp.cumsum(x, axis=1)),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+class TestWavefront:
+    @pytest.mark.parametrize(
+        "h,w,bins,tile",
+        [(64, 64, 8, 32), (64, 96, 16, 32), (128, 64, 4, 64), (32, 32, 32, 16)],
+    )
+    def test_matches_ref(self, h, w, bins, tile):
+        img = random_image(h, w, bins)
+        out = wavefront.wf_tis(img, bins, tile)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.integral_histogram(img, bins)), atol=1e-4
+        )
+
+    def test_values_outside_bins_ignored(self):
+        # padding pixels carry bin value -1 and must count in no bin
+        img = jnp.full((32, 32), -1, jnp.int32)
+        out = wavefront.wf_tis(img, 4, 16)
+        np.testing.assert_array_equal(np.asarray(out), np.zeros((4, 32, 32)))
+
+    def test_vmem_model(self):
+        assert wavefront.vmem_bytes(64, 512) == 64 * 64 * 8 + 64 * 4 + 512 * 4
+
+
+# ---------------------------------------------------------------------------
+# L2 strategies vs oracle — all four must agree with Eq. 1
+# ---------------------------------------------------------------------------
+
+
+class TestStrategies:
+    @pytest.mark.parametrize("name", ["cw_b", "cw_sts", "cw_tis", "wf_tis"])
+    @pytest.mark.parametrize("h,w,bins", [(64, 64, 8), (64, 128, 4)])
+    def test_matches_ref(self, name, h, w, bins):
+        img = random_image(h, w, bins, seed=5)
+        tile = 32
+        out = model.STRATEGIES[name](img, bins, tile)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.integral_histogram(img, bins)), atol=1e-3
+        )
+
+    def test_strategies_mutually_equal(self):
+        img = random_image(64, 64, 8, seed=6)
+        outs = [np.asarray(fn(img, 8, 32)) for fn in model.STRATEGIES.values()]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], atol=1e-3)
+
+    def test_pad_image(self):
+        img = random_image(60, 70, 8)
+        padded = model.pad_image(img, 32)
+        assert padded.shape == (64, 96)
+        np.testing.assert_array_equal(np.asarray(padded[:60, :70]), np.asarray(img))
+        assert int(padded[60:, :].max()) == -1
+
+    def test_padded_region_matches_unpadded(self):
+        # IH of the padded image restricted to the true extent == IH of the original
+        img = random_image(60, 70, 8, seed=7)
+        padded = model.pad_image(img, 32)
+        ih_p = np.asarray(model.wf_tis(padded, 8, 32))[:, :60, :70]
+        ih = np.asarray(ref.integral_histogram(img, 8))
+        np.testing.assert_allclose(ih_p, ih, atol=1e-4)
+
+
+class TestRegionQueryGraph:
+    def test_matches_ref_batch(self):
+        img = random_image(64, 64, 8, seed=8)
+        ih = ref.integral_histogram(img, 8)
+        rects = jnp.array(
+            [[0, 0, 63, 63], [1, 2, 30, 40], [10, 10, 10, 10], [0, 32, 31, 63]], jnp.int32
+        )
+        np.testing.assert_allclose(
+            np.asarray(model.region_query(ih, rects)),
+            np.asarray(ref.region_histogram_batch(ih, rects)),
+        )
+
+    def test_serve_graph(self):
+        img = random_image(64, 64, 8, seed=9)
+        rects = jnp.array([[0, 0, 63, 63], [4, 4, 20, 20]], jnp.int32)
+        ih, hists = model.wf_tis_with_query(img, rects, 8, 32)
+        np.testing.assert_allclose(
+            np.asarray(ih), np.asarray(ref.integral_histogram(img, 8)), atol=1e-4
+        )
+        np.testing.assert_allclose(np.asarray(hists[0]), np.bincount(np.asarray(img).ravel(), minlength=8))

@@ -1,0 +1,135 @@
+"""Hypothesis property sweeps over the Pallas kernels.
+
+Randomized shapes/bins/tiles/contents against the pure-jnp oracle —
+the L1 analogue of the Rust property suite.  Sizes are kept small so the
+sweep stays fast; the fixed-size artifact geometries are covered by
+test_kernel.py and the Rust integration tests.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import prescan, ref, tiled_scan, transpose, wavefront
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+# tile must divide both dims: draw multipliers instead of raw sizes
+tiles = st.sampled_from([8, 16, 32])
+mults = st.integers(min_value=1, max_value=3)
+bins_s = st.integers(min_value=1, max_value=16)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def image_for(seed, h, w, bins):
+    return jax.random.randint(jax.random.PRNGKey(seed), (h, w), 0, bins, dtype=jnp.int32)
+
+
+class TestWavefrontProperties:
+    @settings(**SETTINGS)
+    @given(tile=tiles, mh=mults, mw=mults, bins=bins_s, seed=seeds)
+    def test_matches_oracle(self, tile, mh, mw, bins, seed):
+        h, w = tile * mh, tile * mw
+        img = image_for(seed, h, w, bins)
+        out = wavefront.wf_tis(img, bins, tile)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.integral_histogram(img, bins)), atol=1e-4
+        )
+
+    @settings(**SETTINGS)
+    @given(tile=tiles, m=mults, bins=bins_s, seed=seeds)
+    def test_corner_is_total_mass(self, tile, m, bins, seed):
+        h = w = tile * m
+        img = image_for(seed, h, w, bins)
+        out = wavefront.wf_tis(img, bins, tile)
+        assert float(out[:, -1, -1].sum()) == h * w
+
+    @settings(**SETTINGS)
+    @given(tile=tiles, m=mults, bins=bins_s, seed=seeds)
+    def test_monotone_along_axes(self, tile, m, bins, seed):
+        h = w = tile * m
+        img = image_for(seed, h, w, bins)
+        out = np.asarray(wavefront.wf_tis(img, bins, tile))
+        assert (np.diff(out, axis=1) >= -1e-5).all()
+        assert (np.diff(out, axis=2) >= -1e-5).all()
+
+
+class TestTiledScanProperties:
+    @settings(**SETTINGS)
+    @given(tile=tiles, mh=mults, mw=mults, b=st.integers(1, 8), seed=seeds)
+    def test_hscan_then_vscan_is_integral(self, tile, mh, mw, b, seed):
+        h, w = tile * mh, tile * mw
+        x = jax.random.uniform(jax.random.PRNGKey(seed), (b, h, w))
+        out = tiled_scan.tiled_vscan(tiled_scan.tiled_hscan(x, tile), tile)
+        expected = jnp.cumsum(jnp.cumsum(x, axis=1), axis=2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=2e-4, atol=1e-3)
+
+    @settings(**SETTINGS)
+    @given(tile=tiles, mh=mults, mw=mults, seed=seeds)
+    def test_scan_order_commutes(self, tile, mh, mw, seed):
+        # cross-weave property: h-then-v equals v-then-h
+        h, w = tile * mh, tile * mw
+        x = jax.random.uniform(jax.random.PRNGKey(seed), (2, h, w))
+        a = tiled_scan.tiled_vscan(tiled_scan.tiled_hscan(x, tile), tile)
+        b = tiled_scan.tiled_hscan(tiled_scan.tiled_vscan(x, tile), tile)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-3)
+
+
+class TestPrescanProperties:
+    @settings(**SETTINGS)
+    @given(rows=st.integers(1, 4), n=st.sampled_from([32, 64, 128, 256]), seed=seeds)
+    def test_blelloch_is_exclusive_scan(self, rows, n, seed):
+        x = jax.random.uniform(jax.random.PRNGKey(seed), (rows * 8, n))
+        out = prescan.prescan_rows(x)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(jnp.cumsum(x, axis=1) - x), rtol=1e-5, atol=1e-5
+        )
+
+    @settings(**SETTINGS)
+    @given(n=st.integers(1, 300), seed=seeds)
+    def test_inclusive_any_width(self, n, seed):
+        x = jax.random.uniform(jax.random.PRNGKey(seed), (8, n))
+        out = prescan.inclusive_scan_rows(x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.cumsum(x, axis=1)), rtol=1e-5, atol=1e-5)
+
+
+class TestTransposeProperties:
+    @settings(**SETTINGS)
+    @given(tile=st.sampled_from([8, 16, 32]), mh=mults, mw=mults, seed=seeds)
+    def test_transpose_involution(self, tile, mh, mw, seed):
+        h, w = tile * mh, tile * mw
+        x = jax.random.uniform(jax.random.PRNGKey(seed), (h, w))
+        back = transpose.transpose2d(transpose.transpose2d(x, tile), tile)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+class TestStrategyEquivalenceProperties:
+    @settings(max_examples=8, deadline=None)
+    @given(bins=st.integers(1, 8), seed=seeds)
+    def test_all_strategies_agree(self, bins, seed):
+        img = image_for(seed, 64, 64, bins)
+        outs = {n: np.asarray(fn(img, bins, 32)) for n, fn in model.STRATEGIES.items()}
+        expected = np.asarray(ref.integral_histogram(img, bins))
+        for n, o in outs.items():
+            np.testing.assert_allclose(o, expected, atol=1e-3, err_msg=n)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        bins=st.integers(1, 8),
+        seed=seeds,
+        r0=st.integers(0, 63),
+        c0=st.integers(0, 63),
+        dr=st.integers(0, 63),
+        dc=st.integers(0, 63),
+    )
+    def test_region_query_counts_pixels(self, bins, seed, r0, c0, dr, dc):
+        img = image_for(seed, 64, 64, bins)
+        ih = ref.integral_histogram(img, bins)
+        r1, c1 = min(r0 + dr, 63), min(c0 + dc, 63)
+        rects = jnp.array([[r0, c0, r1, c1]], jnp.int32)
+        hist = np.asarray(model.region_query(ih, rects))[0]
+        window = np.asarray(img)[r0 : r1 + 1, c0 : c1 + 1]
+        expected = np.bincount(window.ravel(), minlength=bins).astype(np.float32)
+        np.testing.assert_allclose(hist, expected, atol=1e-3)

@@ -1,0 +1,15 @@
+//! Bench: kernel-side figures — Fig. 7 (cumulative kernel time per
+//! strategy × size), Fig. 8 (breakdown), Fig. 9/10 (tuning), Eq. 4.
+//!
+//! Custom harness (the offline build has no criterion); timing and
+//! percentile machinery lives in `inthist::util::stats`.
+
+fn main() {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let reps = std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    for fig in ["eq4", "fig7", "fig8", "fig9", "fig10"] {
+        if let Err(e) = inthist::figures::run(&dir, fig, reps) {
+            eprintln!("[{fig}] skipped: {e:#}");
+        }
+    }
+}

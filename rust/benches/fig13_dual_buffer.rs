@@ -1,0 +1,12 @@
+//! Bench: transfer-bound figures — Fig. 11 (kernel vs transfer),
+//! Fig. 13 (dual-buffering on HD sequences), Fig. 15 (frame rates).
+
+fn main() {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let reps = std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    for fig in ["fig11", "fig13", "fig15"] {
+        if let Err(e) = inthist::figures::run(&dir, fig, reps) {
+            eprintln!("[{fig}] skipped: {e:#}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Bench: scaling figures — Fig. 16 (multi-device frame rate), Fig. 17
+//! (pool vs CPU threading), Fig. 19 (GPU vs CPU speedups), Fig. 20
+//! (cross-platform comparison on 640×480).
+
+fn main() {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let reps = std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    for fig in ["fig16", "fig17", "fig19", "fig20"] {
+        if let Err(e) = inthist::figures::run(&dir, fig, reps) {
+            eprintln!("[{fig}] skipped: {e:#}");
+        }
+    }
+}

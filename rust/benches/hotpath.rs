@@ -1,0 +1,82 @@
+//! Bench: CPU-substrate hot paths (ablation + §Perf pass input).
+//!
+//! Covers the design choices DESIGN.md calls out: Algorithm-1 literal vs
+//! running-row-sum vs image-major vs tiled single-pass vs tiled two-pass
+//! (the §3.5 memory-traffic ablation on CPU), thread scaling of the
+//! parallel baseline, and region-query/batcher throughput.
+
+use inthist::coordinator::batcher::QueryBatcher;
+use inthist::histogram::parallel::{integral_histogram_crossweave, integral_histogram_parallel};
+use inthist::histogram::region::{region_histogram, Rect};
+use inthist::histogram::sequential::{
+    integral_histogram_seq, integral_histogram_seq_imagemajor, integral_histogram_seq_rowsum,
+};
+use inthist::histogram::tiled::{integral_histogram_tiled, integral_histogram_tiled_twopass};
+use inthist::util::stats::{render_table, BenchRow};
+use inthist::video::synth::SyntheticVideo;
+
+fn main() {
+    let reps = std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let video = SyntheticVideo::new(512, 512, 4, 7);
+    let img = video.frame(0).binned(32);
+
+    // --- single-thread variants (ablation of the data-movement scheme) ---
+    let mut rows = Vec::new();
+    rows.push(BenchRow::measure("alg1 literal (4-term recurrence)", 1, reps, || {
+        std::hint::black_box(integral_histogram_seq(&img));
+    }));
+    rows.push(BenchRow::measure("rowsum (running row sums)", 1, reps, || {
+        std::hint::black_box(integral_histogram_seq_rowsum(&img));
+    }));
+    rows.push(BenchRow::measure("image-major (1 image pass)", 1, reps, || {
+        std::hint::black_box(integral_histogram_seq_imagemajor(&img));
+    }));
+    rows.push(BenchRow::measure("tiled single-pass (WF-TiS on CPU)", 1, reps, || {
+        std::hint::black_box(integral_histogram_tiled(&img, 64));
+    }));
+    rows.push(BenchRow::measure("tiled two-pass (CW-TiS on CPU)", 1, reps, || {
+        std::hint::black_box(integral_histogram_tiled_twopass(&img, 64));
+    }));
+    print!("{}", render_table("CPU single-thread variants, 512x512x32", &rows));
+
+    // --- tile-size sweep of the cache-blocked variant ---
+    let mut rows = Vec::new();
+    for tile in [16usize, 32, 64, 128, 256] {
+        rows.push(BenchRow::measure(format!("tile {tile}x{tile}"), 1, reps, || {
+            std::hint::black_box(integral_histogram_tiled(&img, tile));
+        }));
+    }
+    print!("{}", render_table("tile-size sweep (single-pass), 512x512x32", &rows));
+
+    // --- thread scaling (the OpenMP-baseline analogue, Fig. 19 input) ---
+    let mut rows = Vec::new();
+    for threads in [1usize, 2, 4, 8, 16] {
+        rows.push(BenchRow::measure(format!("bin-parallel, {threads} threads"), 1, reps, || {
+            std::hint::black_box(integral_histogram_parallel(&img, threads));
+        }));
+    }
+    rows.push(BenchRow::measure("cross-weave, 8 threads", 1, reps, || {
+        std::hint::black_box(integral_histogram_crossweave(&img, 8));
+    }));
+    print!("{}", render_table("CPU thread scaling, 512x512x32", &rows));
+
+    // --- region-query service throughput ---
+    let ih = integral_histogram_seq(&img);
+    let rects: Vec<Rect> = (0..1000)
+        .map(|i| Rect::with_size((i * 7) % 300, (i * 13) % 300, 64 + i % 100, 64 + i % 64))
+        .collect();
+    let mut rows = Vec::new();
+    rows.push(BenchRow::measure("1000 region queries (Eq. 2)", 1, reps, || {
+        for &r in &rects {
+            std::hint::black_box(region_histogram(&ih, r));
+        }
+    }));
+    rows.push(BenchRow::measure("1000 queries via batcher (20% dup)", 1, reps, || {
+        let mut b = QueryBatcher::new();
+        for (i, &r) in rects.iter().enumerate() {
+            b.submit(i as u64, if i % 5 == 0 { rects[0] } else { r });
+        }
+        std::hint::black_box(b.flush(&ih));
+    }));
+    print!("{}", render_table("region-query service, 32 bins", &rows));
+}

@@ -1,0 +1,18 @@
+//! Video-analytics consumers built on integral-histogram region queries
+//! — the application layer the paper's introduction motivates.
+//!
+//! * [`tracker`] — histogram-matching object tracker in the style of the
+//!   fragments-based tracker the paper cites ([13], Adam et al.):
+//!   exhaustive local search scored by histogram intersection, O(1) per
+//!   candidate window thanks to Eq. 2.
+//! * [`motion`] — block-wise temporal change detector: per-block
+//!   histogram distance between consecutive frames (the likelihood-map
+//!   building block of the paper's surveillance use cases [16, 28]).
+
+//! * [`search`] — multi-scale exhaustive histogram search with the
+//!   O(bins)-per-window cost model (the abstract's "multi-scale
+//!   histogram-based search problem").
+
+pub mod motion;
+pub mod search;
+pub mod tracker;

@@ -1,0 +1,170 @@
+//! Block-wise histogram change detection — the motion-likelihood map of
+//! the paper's surveillance applications ([16], [28]).
+//!
+//! Divide the frame into a grid of blocks; for each block compare its
+//! histogram (one Eq. 2 lookup) against the same block in the previous
+//! frame.  Blocks whose distribution shifted beyond a threshold are
+//! flagged as motion.  Cost per frame: `grid² × bins` — independent of
+//! block size, which is exactly the integral histogram's selling point.
+
+use crate::histogram::region::{region_histogram, Rect};
+use crate::histogram::types::IntegralHistogram;
+
+/// L1 distance between two histograms normalized to unit mass.
+pub fn l1_distance(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let sa: f32 = a.iter().sum::<f32>().max(1e-9);
+    let sb: f32 = b.iter().sum::<f32>().max(1e-9);
+    a.iter().zip(b).map(|(&x, &y)| (x / sa - y / sb).abs()).sum()
+}
+
+/// Motion detector over a `grid × grid` block decomposition.
+#[derive(Debug)]
+pub struct MotionDetector {
+    grid: usize,
+    threshold: f32,
+    prev: Option<Vec<Vec<f32>>>,
+}
+
+/// Per-frame motion result.
+#[derive(Debug, Clone)]
+pub struct MotionMap {
+    pub grid: usize,
+    /// Row-major per-block change scores (L1 distances in [0, 2]).
+    pub scores: Vec<f32>,
+    pub threshold: f32,
+}
+
+impl MotionMap {
+    /// Indices of blocks flagged as moving.
+    pub fn active_blocks(&self) -> Vec<usize> {
+        self.scores
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s > self.threshold)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Fraction of blocks in motion.
+    pub fn activity(&self) -> f32 {
+        if self.scores.is_empty() {
+            return 0.0;
+        }
+        self.active_blocks().len() as f32 / self.scores.len() as f32
+    }
+}
+
+impl MotionDetector {
+    pub fn new(grid: usize, threshold: f32) -> MotionDetector {
+        assert!(grid >= 1);
+        MotionDetector { grid, threshold, prev: None }
+    }
+
+    /// Block rectangle (i, j) of the grid over an h×w frame.
+    fn block_rect(&self, i: usize, j: usize, h: usize, w: usize) -> Rect {
+        let r0 = i * h / self.grid;
+        let r1 = ((i + 1) * h / self.grid).max(r0 + 1) - 1;
+        let c0 = j * w / self.grid;
+        let c1 = ((j + 1) * w / self.grid).max(c0 + 1) - 1;
+        Rect::new(r0, c0, r1.min(h - 1), c1.min(w - 1))
+    }
+
+    /// Feed the next frame's tensor; first frame yields all-zero scores.
+    pub fn step(&mut self, ih: &IntegralHistogram) -> MotionMap {
+        let mut hists = Vec::with_capacity(self.grid * self.grid);
+        for i in 0..self.grid {
+            for j in 0..self.grid {
+                hists.push(region_histogram(ih, self.block_rect(i, j, ih.h, ih.w)));
+            }
+        }
+        let scores = match &self.prev {
+            None => vec![0.0; hists.len()],
+            Some(prev) => prev.iter().zip(&hists).map(|(a, b)| l1_distance(a, b)).collect(),
+        };
+        self.prev = Some(hists);
+        MotionMap { grid: self.grid, scores, threshold: self.threshold }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::histogram::types::BinnedImage;
+
+    fn ih_with_patch(val: i32, at: Option<(usize, usize)>) -> IntegralHistogram {
+        let mut data = vec![0i32; 64 * 64];
+        if let Some((r, c)) = at {
+            for dr in 0..8 {
+                for dc in 0..8 {
+                    data[(r + dr) * 64 + c + dc] = val;
+                }
+            }
+        }
+        integral_histogram_seq(&BinnedImage::new(64, 64, 4, data))
+    }
+
+    #[test]
+    fn first_frame_is_quiet() {
+        let mut det = MotionDetector::new(4, 0.1);
+        let m = det.step(&ih_with_patch(3, None));
+        assert_eq!(m.active_blocks(), Vec::<usize>::new());
+        assert_eq!(m.activity(), 0.0);
+    }
+
+    #[test]
+    fn static_scene_stays_quiet() {
+        let mut det = MotionDetector::new(4, 0.1);
+        let ih = ih_with_patch(3, Some((8, 8)));
+        det.step(&ih);
+        let m = det.step(&ih);
+        assert!(m.active_blocks().is_empty());
+    }
+
+    #[test]
+    fn appearing_patch_fires_its_block() {
+        let mut det = MotionDetector::new(4, 0.1);
+        det.step(&ih_with_patch(3, None));
+        // patch appears inside block (0,0): rows/cols 0..16
+        let m = det.step(&ih_with_patch(3, Some((4, 4))));
+        assert_eq!(m.active_blocks(), vec![0]);
+        assert!(m.activity() > 0.0);
+    }
+
+    #[test]
+    fn moving_patch_fires_source_and_destination() {
+        let mut det = MotionDetector::new(4, 0.1);
+        det.step(&ih_with_patch(3, Some((4, 4)))); // block 0
+        let m = det.step(&ih_with_patch(3, Some((40, 40)))); // block 10
+        let active = m.active_blocks();
+        assert!(active.contains(&0), "source block should fire: {active:?}");
+        assert!(active.contains(&10), "destination block should fire: {active:?}");
+    }
+
+    #[test]
+    fn l1_distance_bounds() {
+        assert_eq!(l1_distance(&[1.0, 0.0], &[1.0, 0.0]), 0.0);
+        let d = l1_distance(&[1.0, 0.0], &[0.0, 1.0]);
+        assert!((d - 2.0).abs() < 1e-6, "disjoint unit histograms are distance 2");
+    }
+
+    #[test]
+    fn block_grid_covers_frame() {
+        let det = MotionDetector::new(3, 0.1);
+        // union of blocks covers every pixel exactly once
+        let mut covered = vec![false; 50 * 70];
+        for i in 0..3 {
+            for j in 0..3 {
+                let r = det.block_rect(i, j, 50, 70);
+                for rr in r.r0..=r.r1 {
+                    for cc in r.c0..=r.c1 {
+                        assert!(!covered[rr * 70 + cc], "overlap at ({rr},{cc})");
+                        covered[rr * 70 + cc] = true;
+                    }
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+}

@@ -1,0 +1,235 @@
+//! Multi-scale exhaustive histogram search — the workload the integral
+//! histogram was invented for (§1: "an optimum and complete solution
+//! for the multi-scale histogram-based search problem").
+//!
+//! Given a template histogram, scan every window position at every
+//! scale and return the best matches.  Cost per candidate is O(bins)
+//! regardless of window size (Eq. 2) — without the integral histogram
+//! each candidate would cost O(window area).  This module quantifies
+//! exactly that trade (see [`naive_cost`] / [`integral_cost`]) and is
+//! used by the detection-style examples and the ablation bench.
+
+use crate::histogram::region::{intersection_similarity, region_histogram, Rect};
+use crate::histogram::types::IntegralHistogram;
+
+/// One search hit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Match {
+    pub rect: Rect,
+    pub score: f32,
+}
+
+/// Search configuration.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Window scales as (height, width) pairs.
+    pub scales: Vec<(usize, usize)>,
+    /// Spatial stride between candidate windows.
+    pub stride: usize,
+    /// Keep matches scoring at least this (intersection ∈ [0,1]).
+    pub min_score: f32,
+    /// Maximum matches returned (best-first).
+    pub top_k: usize,
+}
+
+impl SearchConfig {
+    /// Scale pyramid around a base window: ±`levels` steps of `ratio`.
+    pub fn pyramid(base_h: usize, base_w: usize, levels: usize, ratio: f64) -> SearchConfig {
+        let mut scales = Vec::new();
+        for l in 0..=(2 * levels) {
+            let f = ratio.powi(l as i32 - levels as i32);
+            let h = ((base_h as f64 * f).round() as usize).max(1);
+            let w = ((base_w as f64 * f).round() as usize).max(1);
+            if !scales.contains(&(h, w)) {
+                scales.push((h, w));
+            }
+        }
+        SearchConfig { scales, stride: 4, min_score: 0.5, top_k: 8 }
+    }
+}
+
+/// Exhaustive multi-scale search of `template` over `ih`.
+/// Returns matches sorted best-first, greedily non-overlapping.
+pub fn search(ih: &IntegralHistogram, template: &[f32], config: &SearchConfig) -> Vec<Match> {
+    assert_eq!(template.len(), ih.bins, "template bins mismatch");
+    assert!(config.stride >= 1);
+    let mut hits: Vec<Match> = Vec::new();
+    for &(wh, ww) in &config.scales {
+        if wh > ih.h || ww > ih.w {
+            continue;
+        }
+        let mut r = 0;
+        while r + wh <= ih.h {
+            let mut c = 0;
+            while c + ww <= ih.w {
+                let rect = Rect::with_size(r, c, wh, ww);
+                let hist = region_histogram(ih, rect);
+                let score = intersection_similarity(template, &hist);
+                if score >= config.min_score {
+                    hits.push(Match { rect, score });
+                }
+                c += config.stride;
+            }
+            r += config.stride;
+        }
+    }
+    hits.sort_by(|a, b| b.score.total_cmp(&a.score));
+    // greedy non-maximum suppression by center containment
+    let mut kept: Vec<Match> = Vec::new();
+    for m in hits {
+        if kept.len() >= config.top_k {
+            break;
+        }
+        let cr = (m.rect.r0 + m.rect.r1) / 2;
+        let cc = (m.rect.c0 + m.rect.c1) / 2;
+        let overlaps = kept.iter().any(|k| {
+            cr >= k.rect.r0 && cr <= k.rect.r1 && cc >= k.rect.c0 && cc <= k.rect.c1
+        });
+        if !overlaps {
+            kept.push(m);
+        }
+    }
+    kept
+}
+
+/// Candidate-window count of a search (the workload model).
+pub fn candidate_count(h: usize, w: usize, config: &SearchConfig) -> usize {
+    let mut n = 0;
+    for &(wh, ww) in &config.scales {
+        if wh > h || ww > w {
+            continue;
+        }
+        let rows = (h - wh) / config.stride + 1;
+        let cols = (w - ww) / config.stride + 1;
+        n += rows * cols;
+    }
+    n
+}
+
+/// Element operations for the naive per-window histogram approach:
+/// Σ windows × window-area (what §2.1 calls the exhaustive problem).
+pub fn naive_cost(h: usize, w: usize, config: &SearchConfig) -> u64 {
+    let mut ops = 0u64;
+    for &(wh, ww) in &config.scales {
+        if wh > h || ww > w {
+            continue;
+        }
+        let rows = ((h - wh) / config.stride + 1) as u64;
+        let cols = ((w - ww) / config.stride + 1) as u64;
+        ops += rows * cols * (wh as u64) * (ww as u64);
+    }
+    ops
+}
+
+/// Element operations with the integral histogram: build (2 passes of
+/// b·h·w) + 4·bins reads per candidate — constant per window (Eq. 2).
+pub fn integral_cost(h: usize, w: usize, bins: usize, config: &SearchConfig) -> u64 {
+    let build = 2 * (bins * h * w) as u64;
+    build + candidate_count(h, w, config) as u64 * 4 * bins as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::histogram::types::BinnedImage;
+
+    /// Image with one 8×8 patch of bin 3 at (r, c) on a bin-0 background.
+    fn scene(r: usize, c: usize) -> IntegralHistogram {
+        let mut data = vec![0i32; 64 * 64];
+        for dr in 0..8 {
+            for dc in 0..8 {
+                data[(r + dr) * 64 + c + dc] = 3;
+            }
+        }
+        integral_histogram_seq(&BinnedImage::new(64, 64, 4, data))
+    }
+
+    fn template() -> Vec<f32> {
+        let mut t = vec![0.0f32; 4];
+        t[3] = 64.0; // pure bin-3 patch of 8×8
+        t
+    }
+
+    #[test]
+    fn finds_the_patch_at_exact_scale() {
+        let ih = scene(24, 40);
+        let cfg = SearchConfig { scales: vec![(8, 8)], stride: 1, min_score: 0.9, top_k: 3 };
+        let hits = search(&ih, &template(), &cfg);
+        assert!(!hits.is_empty());
+        assert_eq!((hits[0].rect.r0, hits[0].rect.c0), (24, 40));
+        assert!((hits[0].score - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn pyramid_search_finds_scaled_patch() {
+        let ih = scene(10, 10);
+        let cfg = SearchConfig { stride: 2, min_score: 0.8, top_k: 2, ..SearchConfig::pyramid(16, 16, 1, 2.0) };
+        // pyramid around 16×16 with ratio 2 includes the true 8×8 scale
+        assert!(cfg.scales.contains(&(8, 8)));
+        let hits = search(&ih, &template(), &cfg);
+        assert!(!hits.is_empty());
+        let best = hits[0].rect;
+        assert_eq!(best.height(), 8, "should lock onto the true scale");
+        assert_eq!((best.r0, best.c0), (10, 10));
+    }
+
+    #[test]
+    fn nms_suppresses_overlaps() {
+        let ih = scene(20, 20);
+        let cfg = SearchConfig { scales: vec![(8, 8)], stride: 1, min_score: 0.5, top_k: 10 };
+        let hits = search(&ih, &template(), &cfg);
+        // many raw candidates overlap the patch; NMS keeps non-overlapping reps
+        for (i, a) in hits.iter().enumerate() {
+            for b in &hits[i + 1..] {
+                let cr = (b.rect.r0 + b.rect.r1) / 2;
+                let cc = (b.rect.c0 + b.rect.c1) / 2;
+                assert!(
+                    !(cr >= a.rect.r0 && cr <= a.rect.r1 && cc >= a.rect.c0 && cc <= a.rect.c1),
+                    "center of {b:?} inside {a:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_when_nothing_matches() {
+        let ih = scene(0, 0);
+        let mut t = vec![0.0f32; 4];
+        t[1] = 1.0; // bin 1 never appears
+        let cfg = SearchConfig { scales: vec![(8, 8)], stride: 4, min_score: 0.5, top_k: 4 };
+        assert!(search(&ih, &t, &cfg).is_empty());
+    }
+
+    #[test]
+    fn cost_model_favours_integral() {
+        let cfg = SearchConfig { scales: vec![(32, 32), (64, 64)], stride: 2, min_score: 0.5, top_k: 4 };
+        let naive = naive_cost(512, 512, &cfg);
+        let fast = integral_cost(512, 512, 32, &cfg);
+        assert!(
+            naive > 5 * fast,
+            "integral histogram must dominate exhaustive search (naive {naive} vs {fast})"
+        );
+        // the one-off build cost amortizes: per-query advantage is larger
+        let per_query_naive = naive / candidate_count(512, 512, &cfg) as u64;
+        assert!(per_query_naive > 4 * 32 * 4, "per-candidate Eq. 2 is 4·bins reads");
+    }
+
+    #[test]
+    fn candidate_count_matches_loop() {
+        let cfg = SearchConfig { scales: vec![(8, 8), (16, 16)], stride: 4, min_score: 0.0, top_k: 1 };
+        let mut n = 0;
+        for &(wh, ww) in &cfg.scales {
+            let mut r = 0;
+            while r + wh <= 64 {
+                let mut c = 0;
+                while c + ww <= 64 {
+                    n += 1;
+                    c += cfg.stride;
+                }
+                r += cfg.stride;
+            }
+        }
+        assert_eq!(candidate_count(64, 64, &cfg), n);
+    }
+}

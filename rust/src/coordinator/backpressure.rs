@@ -1,0 +1,142 @@
+//! Bounded hand-off queues with occupancy accounting.
+//!
+//! The pipeline's stages are connected by bounded channels whose
+//! capacity IS the dual-buffering depth: capacity 1 ⇒ strictly serial
+//! hand-off, capacity 2 ⇒ the paper's two CUDA streams, capacity N ⇒
+//! N-deep software pipelining.  Senders block when the consumer falls
+//! behind — that is the backpressure that keeps a slow kernel stage
+//! from buffering unbounded frames (and unbounded page-locked memory,
+//! the §4.4 failure mode).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvError, SendError, SyncSender};
+use std::sync::Arc;
+
+/// Occupancy statistics shared by both endpoints of a queue.
+#[derive(Debug, Default)]
+pub struct QueueStats {
+    sent: AtomicUsize,
+    received: AtomicUsize,
+    high_water: AtomicUsize,
+}
+
+impl QueueStats {
+    /// Messages currently in flight.
+    pub fn depth(&self) -> usize {
+        self.sent.load(Ordering::Relaxed).saturating_sub(self.received.load(Ordering::Relaxed))
+    }
+
+    /// Highest in-flight depth observed.
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    pub fn sent(&self) -> usize {
+        self.sent.load(Ordering::Relaxed)
+    }
+}
+
+/// Sending half of a bounded queue.
+pub struct BoundedSender<T> {
+    tx: SyncSender<T>,
+    stats: Arc<QueueStats>,
+}
+
+/// Receiving half of a bounded queue.
+pub struct BoundedReceiver<T> {
+    rx: Receiver<T>,
+    stats: Arc<QueueStats>,
+}
+
+/// Create a bounded queue of `capacity` (≥ 1) with shared stats.
+pub fn bounded<T>(capacity: usize) -> (BoundedSender<T>, BoundedReceiver<T>, Arc<QueueStats>) {
+    assert!(capacity >= 1, "bounded queue needs capacity >= 1");
+    let (tx, rx) = std::sync::mpsc::sync_channel(capacity);
+    let stats = Arc::new(QueueStats::default());
+    (
+        BoundedSender { tx, stats: Arc::clone(&stats) },
+        BoundedReceiver { rx, stats: Arc::clone(&stats) },
+        stats,
+    )
+}
+
+impl<T> BoundedSender<T> {
+    /// Blocking send (applies backpressure when the queue is full).
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        self.tx.send(value)?;
+        let sent = self.stats.sent.fetch_add(1, Ordering::Relaxed) + 1;
+        let depth = sent.saturating_sub(self.stats.received.load(Ordering::Relaxed));
+        self.stats.high_water.fetch_max(depth, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+impl<T> BoundedReceiver<T> {
+    /// Blocking receive; `Err` once all senders are dropped and drained.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let v = self.rx.recv()?;
+        self.stats.received.fetch_add(1, Ordering::Relaxed);
+        Ok(v)
+    }
+
+    /// Drain into an iterator until the channel closes.
+    pub fn iter(&self) -> impl Iterator<Item = T> + '_ {
+        std::iter::from_fn(move || self.recv().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx, _) = bounded(4);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        assert_eq!(rx.iter().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn stats_track_depth() {
+        let (tx, rx, stats) = bounded(8);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(stats.depth(), 2);
+        assert_eq!(stats.high_water(), 2);
+        rx.recv().unwrap();
+        assert_eq!(stats.depth(), 1);
+        assert_eq!(stats.high_water(), 2);
+        assert_eq!(stats.sent(), 2);
+    }
+
+    #[test]
+    fn capacity_blocks_sender() {
+        let (tx, rx, _) = bounded(1);
+        tx.send(0u32).unwrap();
+        let t = std::thread::spawn(move || {
+            // this send must block until the main thread receives
+            tx.send(1).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(rx.recv().unwrap(), 0);
+        assert_eq!(rx.recv().unwrap(), 1);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn recv_fails_after_close() {
+        let (tx, rx, _) = bounded::<u8>(1);
+        drop(tx);
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        bounded::<u8>(0);
+    }
+}

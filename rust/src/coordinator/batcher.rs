@@ -1,0 +1,130 @@
+//! Region-query batcher — the O(1) lookup service, batched.
+//!
+//! Downstream analytics (trackers, detectors, filters) issue many small
+//! rectangle queries per frame; answering them one-by-one wastes the
+//! constant-time property the integral histogram buys.  The batcher
+//! accumulates queries, deduplicates identical rectangles, and answers a
+//! whole batch against one cached tensor — either with the AOT
+//! `region_query` graph (fixed batch width, padded) or the CPU fallback
+//! (Eq. 2 directly), which are bit-identical.
+
+use crate::histogram::region::{region_histogram, Rect};
+use crate::histogram::types::IntegralHistogram;
+use std::collections::HashMap;
+
+/// A pending query with a caller-supplied id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueryRequest {
+    pub id: u64,
+    pub rect: Rect,
+}
+
+/// One answered query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryResponse {
+    pub id: u64,
+    pub rect: Rect,
+    pub histogram: Vec<f32>,
+}
+
+/// Batching accumulator for region queries against one frame's tensor.
+#[derive(Debug, Default)]
+pub struct QueryBatcher {
+    pending: Vec<QueryRequest>,
+    /// Total queries answered (metrics).
+    answered: usize,
+    /// Unique rectangles actually computed (dedup efficiency).
+    computed: usize,
+}
+
+impl QueryBatcher {
+    pub fn new() -> QueryBatcher {
+        QueryBatcher::default()
+    }
+
+    /// Enqueue one query.
+    pub fn submit(&mut self, id: u64, rect: Rect) {
+        self.pending.push(QueryRequest { id, rect });
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Answer every pending query against `ih`, deduplicating repeated
+    /// rectangles (common when many trackers probe the same candidate).
+    /// Responses preserve submission order.
+    pub fn flush(&mut self, ih: &IntegralHistogram) -> Vec<QueryResponse> {
+        let mut cache: HashMap<Rect, Vec<f32>> = HashMap::new();
+        let mut out = Vec::with_capacity(self.pending.len());
+        for req in self.pending.drain(..) {
+            let hist = cache
+                .entry(req.rect)
+                .or_insert_with(|| region_histogram(ih, req.rect))
+                .clone();
+            out.push(QueryResponse { id: req.id, rect: req.rect, histogram: hist });
+        }
+        self.answered += out.len();
+        self.computed += cache.len();
+        out
+    }
+
+    /// (answered, unique-computed) counters.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.answered, self.computed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::histogram::types::BinnedImage;
+    use crate::util::prng::Xoshiro256;
+
+    fn ih() -> IntegralHistogram {
+        let mut rng = Xoshiro256::new(1);
+        let mut data = vec![0i32; 16 * 16];
+        rng.fill_bins(&mut data, 4);
+        integral_histogram_seq(&BinnedImage::new(16, 16, 4, data))
+    }
+
+    #[test]
+    fn flush_answers_in_order() {
+        let ih = ih();
+        let mut b = QueryBatcher::new();
+        b.submit(7, Rect::new(0, 0, 15, 15));
+        b.submit(3, Rect::new(1, 1, 4, 4));
+        let rs = b.flush(&ih);
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].id, 7);
+        assert_eq!(rs[1].id, 3);
+        assert_eq!(rs[0].histogram, region_histogram(&ih, Rect::new(0, 0, 15, 15)));
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn dedup_counts() {
+        let ih = ih();
+        let mut b = QueryBatcher::new();
+        let r = Rect::new(2, 2, 9, 9);
+        for id in 0..5 {
+            b.submit(id, r);
+        }
+        b.submit(99, Rect::new(0, 0, 1, 1));
+        let rs = b.flush(&ih);
+        assert_eq!(rs.len(), 6);
+        let (answered, computed) = b.stats();
+        assert_eq!(answered, 6);
+        assert_eq!(computed, 2, "5 identical rects computed once");
+        assert!(rs[..5].iter().all(|x| x.histogram == rs[0].histogram));
+    }
+
+    #[test]
+    fn flush_empty_is_noop() {
+        let ih = ih();
+        let mut b = QueryBatcher::new();
+        assert!(b.flush(&ih).is_empty());
+        assert_eq!(b.stats(), (0, 0));
+    }
+}

@@ -1,0 +1,119 @@
+//! Per-frame stage timings and throughput accounting.
+
+use std::time::Duration;
+
+/// Timing of one frame through the pipeline stages (Algorithm 6).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FrameStat {
+    pub seq: usize,
+    /// Disk/source read time.
+    pub read: Duration,
+    /// Host→device transfer (simulated, DESIGN.md §4).
+    pub h2d: Duration,
+    /// Pure kernel execution time on the PJRT device.
+    pub kernel: Duration,
+    /// Device→host transfer of the tensor (simulated).
+    pub d2h: Duration,
+    /// End-to-end latency (enqueue → result available).
+    pub latency: Duration,
+}
+
+impl FrameStat {
+    /// Serial single-lane cost of this frame (no overlap).
+    pub fn serial_cost(&self) -> Duration {
+        self.read + self.h2d + self.kernel + self.d2h
+    }
+}
+
+/// Aggregated pipeline run report.
+#[derive(Debug, Clone)]
+pub struct Throughput {
+    pub frames: usize,
+    pub wall: Duration,
+    pub stats: Vec<FrameStat>,
+}
+
+impl Throughput {
+    /// Achieved frames/second over the whole run.
+    pub fn fps(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.frames as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Mean end-to-end latency.
+    pub fn mean_latency(&self) -> Duration {
+        if self.stats.is_empty() {
+            return Duration::ZERO;
+        }
+        self.stats.iter().map(|s| s.latency).sum::<Duration>() / self.stats.len() as u32
+    }
+
+    /// Sum of one stage across frames (stage pressure analysis).
+    pub fn stage_total(&self, f: impl Fn(&FrameStat) -> Duration) -> Duration {
+        self.stats.iter().map(f).sum()
+    }
+
+    /// What a perfectly serial (lane = 1, no overlap) run would take:
+    /// the Fig. 14(a) "no dual-buffering" reference.
+    pub fn serial_estimate(&self) -> Duration {
+        self.stats.iter().map(|s| s.serial_cost()).sum()
+    }
+
+    /// Overlap speedup actually achieved vs the serial estimate.
+    pub fn overlap_speedup(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 1.0;
+        }
+        self.serial_estimate().as_secs_f64() / self.wall.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(ms: u64) -> FrameStat {
+        FrameStat {
+            seq: 0,
+            read: Duration::from_millis(ms),
+            h2d: Duration::from_millis(ms),
+            kernel: Duration::from_millis(2 * ms),
+            d2h: Duration::from_millis(ms),
+            latency: Duration::from_millis(5 * ms),
+        }
+    }
+
+    #[test]
+    fn fps_and_latency() {
+        let t = Throughput {
+            frames: 10,
+            wall: Duration::from_secs(2),
+            stats: vec![stat(10); 10],
+        };
+        assert!((t.fps() - 5.0).abs() < 1e-9);
+        assert_eq!(t.mean_latency(), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn serial_estimate_sums_stages() {
+        let t = Throughput { frames: 2, wall: Duration::from_millis(60), stats: vec![stat(10); 2] };
+        assert_eq!(t.serial_estimate(), Duration::from_millis(100));
+        assert!((t.overlap_speedup() - 100.0 / 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_run() {
+        let t = Throughput { frames: 0, wall: Duration::ZERO, stats: vec![] };
+        assert_eq!(t.fps(), 0.0);
+        assert_eq!(t.mean_latency(), Duration::ZERO);
+        assert_eq!(t.overlap_speedup(), 1.0);
+    }
+
+    #[test]
+    fn stage_total() {
+        let t = Throughput { frames: 3, wall: Duration::from_secs(1), stats: vec![stat(5); 3] };
+        assert_eq!(t.stage_total(|s| s.kernel), Duration::from_millis(30));
+    }
+}

@@ -1,0 +1,24 @@
+//! The L3 coordination layer — the paper's system contribution, serving
+//! shaped: frames stream in, integral histograms (and region-query
+//! results) stream out, with the paper's two scaling mechanisms as
+//! first-class features:
+//!
+//! * [`pipeline`] — the dual-buffered frame pipeline (Algorithm 6,
+//!   Figs. 12/14): read → H2D → kernel → D2H stages overlapped across
+//!   in-flight frames ("CUDA streams" = pipeline lanes).
+//! * [`task_queue`] — the multi-device bin task queue (§4.6, Fig. 18)
+//!   for images whose tensor exceeds one device's memory.
+//! * [`router`] — [`router::Engine`]: the front door.  Picks strategy
+//!   and artifact for a request, owns executor caches, routes small
+//!   frames to the direct path and large frames to the task queue.
+//! * [`batcher`] — groups region-query requests against cached tensors
+//!   (the O(1) lookup service downstream analytics call).
+//! * [`backpressure`] — bounded hand-off queues with occupancy stats.
+//! * [`metrics`] — per-frame stage timings and throughput accounting.
+
+pub mod backpressure;
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod router;
+pub mod task_queue;

@@ -1,0 +1,304 @@
+//! The dual-buffered frame pipeline — Algorithm 6 / Figs. 12 & 14.
+//!
+//! Four stages per frame, mirroring the paper's CUDA-streams design:
+//!
+//! ```text
+//! read (disk/source) → H2D copy → kernel (PJRT) → D2H copy → consumer
+//! ```
+//!
+//! Each stage runs on its own thread; stages are connected by bounded
+//! queues whose capacity is the number of in-flight frames ("lanes").
+//! `lanes = 1` reproduces the no-dual-buffering baseline (strictly
+//! serial), `lanes = 2` is the paper's two CUDA streams with page-locked
+//! double buffers, larger values deepen the software pipeline.
+//!
+//! Transfers are simulated (DESIGN.md §4): the H2D/D2H stages sleep for
+//! the duration the PCIe model assigns to the buffer size, optionally
+//! scaled to preserve the paper's kernel:transfer ratio on this
+//! substrate.  The *kernel* stage is always real PJRT execution of the
+//! AOT artifact.
+
+use crate::coordinator::backpressure::bounded;
+use crate::coordinator::metrics::{FrameStat, Throughput};
+use crate::histogram::types::IntegralHistogram;
+use crate::runtime::artifact::ArtifactManifest;
+use crate::runtime::client::HistogramExecutor;
+use crate::simulator::pcie::PcieModel;
+use crate::video::source::FrameSource;
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How the pipeline models CPU↔device transfers.
+#[derive(Debug, Clone, Copy)]
+pub enum TransferModel {
+    /// No transfer cost (kernel-only runs; §4.3's "part of a larger GPU
+    /// pipeline" scenario where the tensor never leaves the device).
+    None,
+    /// Sleep for `scale ×` the PCIe model's time for each buffer.
+    /// `scale` calibrates the kernel:transfer ratio to the paper's GPU
+    /// (see EXPERIMENTS.md per-figure notes).
+    Simulated { model: PcieModel, scale: f64 },
+}
+
+impl TransferModel {
+    fn h2d(&self, bytes: usize) -> Duration {
+        match self {
+            TransferModel::None => Duration::ZERO,
+            TransferModel::Simulated { model, scale } => {
+                model.transfer_time(bytes).mul_f64(*scale)
+            }
+        }
+    }
+
+    fn d2h(&self, bytes: usize) -> Duration {
+        self.h2d(bytes)
+    }
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// In-flight frames (1 = serial, 2 = dual-buffering).
+    pub lanes: usize,
+    /// Bins for quantization (must match the artifact).
+    pub bins: usize,
+    /// Artifact name to execute per frame.
+    pub artifact: String,
+    pub transfer: TransferModel,
+}
+
+impl PipelineConfig {
+    pub fn new(artifact: impl Into<String>, bins: usize) -> PipelineConfig {
+        PipelineConfig {
+            lanes: 2,
+            bins,
+            artifact: artifact.into(),
+            transfer: TransferModel::None,
+        }
+    }
+
+    pub fn lanes(mut self, lanes: usize) -> Self {
+        assert!(lanes >= 1);
+        self.lanes = lanes;
+        self
+    }
+
+    pub fn transfer(mut self, t: TransferModel) -> Self {
+        self.transfer = t;
+        self
+    }
+}
+
+/// Result of a pipeline run.
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub throughput: Throughput,
+    pub lanes: usize,
+    /// High-water marks of the three inter-stage queues.
+    pub queue_high_water: [usize; 3],
+}
+
+impl PipelineReport {
+    pub fn fps(&self) -> f64 {
+        self.throughput.fps()
+    }
+}
+
+/// The dual-buffered pipeline runner.
+pub struct Pipeline {
+    manifest: Arc<ArtifactManifest>,
+    config: PipelineConfig,
+}
+
+struct InFlight {
+    stat: FrameStat,
+    t_enqueue: Instant,
+    image: crate::histogram::types::BinnedImage,
+}
+
+struct Computed {
+    stat: FrameStat,
+    t_enqueue: Instant,
+    ih: IntegralHistogram,
+}
+
+impl Pipeline {
+    pub fn new(manifest: Arc<ArtifactManifest>, config: PipelineConfig) -> Pipeline {
+        Pipeline { manifest, config }
+    }
+
+    /// Run `source` to exhaustion, dropping results (figure timing runs).
+    pub fn run(&self, source: Box<dyn FrameSource>) -> Result<PipelineReport> {
+        self.run_with(source, |_, _| {})
+    }
+
+    /// Run `source` to exhaustion, handing each (seq, tensor) to `sink`
+    /// on the output stage.
+    pub fn run_with(
+        &self,
+        mut source: Box<dyn FrameSource>,
+        mut sink: impl FnMut(usize, IntegralHistogram) + Send,
+    ) -> Result<PipelineReport> {
+        let cfg = &self.config;
+        if cfg.lanes == 1 {
+            return self.run_serial(&mut *source, &mut sink);
+        }
+        let meta = self
+            .manifest
+            .find_named(&cfg.artifact)
+            .ok_or_else(|| anyhow!("artifact '{}' not in manifest", cfg.artifact))?
+            .clone();
+        let tensor_bytes = meta.tensor_bytes();
+        let transfer = cfg.transfer;
+        let bins = cfg.bins;
+
+        let (q1_tx, q1_rx, s1) = bounded::<InFlight>(cfg.lanes);
+        let (q2_tx, q2_rx, s2) = bounded::<InFlight>(cfg.lanes);
+        let (q3_tx, q3_rx, s3) = bounded::<Computed>(cfg.lanes);
+        // readiness signal: compute stage compiles its executor first
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+
+        let manifest = Arc::clone(&self.manifest);
+        let meta_c = meta.clone();
+
+        let report = std::thread::scope(|scope| -> Result<PipelineReport> {
+            // Stage 2: H2D transfer (simulated DMA engine).
+            scope.spawn(move || {
+                while let Ok(mut item) = q1_rx.recv() {
+                    let d = transfer.h2d(item.image.data.len() * 4);
+                    if !d.is_zero() {
+                        std::thread::sleep(d);
+                    }
+                    item.stat.h2d = d;
+                    if q2_tx.send(item).is_err() {
+                        break;
+                    }
+                }
+            });
+
+            // Stage 3: kernel execution (owns the PJRT executor).
+            scope.spawn(move || {
+                let exe = match HistogramExecutor::compile(&manifest, &meta_c) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(mut item) = q2_rx.recv() {
+                    match exe.compute_timed(&item.image) {
+                        Ok((ih, kernel)) => {
+                            item.stat.kernel = kernel;
+                            let c = Computed { stat: item.stat, t_enqueue: item.t_enqueue, ih };
+                            if q3_tx.send(c).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+            });
+
+            // Wait for the executor before starting the clock: compile
+            // time is a one-off, not part of steady-state throughput.
+            ready_rx.recv().context("compute stage died")??;
+
+            let t_start = Instant::now();
+
+            // Stage 4: D2H + consumer. Borrows `sink` (scoped thread), so
+            // results stream out without accumulating tensors in memory.
+            let sink_ref = &mut sink;
+            let d2h_handle = scope.spawn(move || -> Vec<FrameStat> {
+                let mut stats = Vec::new();
+                while let Ok(mut item) = q3_rx.recv() {
+                    let d = transfer.d2h(tensor_bytes);
+                    if !d.is_zero() {
+                        std::thread::sleep(d);
+                    }
+                    item.stat.d2h = d;
+                    item.stat.latency = item.t_enqueue.elapsed();
+                    stats.push(item.stat);
+                    sink_ref(item.stat.seq, item.ih);
+                }
+                stats
+            });
+
+            // Stage 1: read + quantize ("CopyImageFromDisk").
+            let mut frames = 0usize;
+            while let Some(frame) = source.next_frame() {
+                let t_enqueue = Instant::now();
+                let t0 = Instant::now();
+                let image = frame.binned(bins);
+                let stat = FrameStat { seq: frame.seq, read: t0.elapsed(), ..Default::default() };
+                frames += 1;
+                if q1_tx.send(InFlight { stat, t_enqueue, image }).is_err() {
+                    break;
+                }
+            }
+            drop(q1_tx); // close the pipeline; stages drain and exit
+
+            let mut stats = d2h_handle.join().expect("d2h stage panicked");
+            let wall = t_start.elapsed();
+            stats.sort_by_key(|s| s.seq);
+            Ok(PipelineReport {
+                throughput: Throughput { frames, wall, stats },
+                lanes: cfg.lanes,
+                queue_high_water: [s1.high_water(), s2.high_water(), s3.high_water()],
+            })
+        })?;
+        Ok(report)
+    }
+
+    /// Strictly serial baseline (`lanes = 1`, Fig. 14 without overlap):
+    /// every stage completes before the next frame is read.
+    fn run_serial(
+        &self,
+        source: &mut dyn FrameSource,
+        sink: &mut (impl FnMut(usize, IntegralHistogram) + Send),
+    ) -> Result<PipelineReport> {
+        let cfg = &self.config;
+        let meta = self
+            .manifest
+            .find_named(&cfg.artifact)
+            .ok_or_else(|| anyhow!("artifact '{}' not in manifest", cfg.artifact))?;
+        let exe = HistogramExecutor::compile(&self.manifest, meta)?;
+        let tensor_bytes = meta.tensor_bytes();
+        let t_start = Instant::now();
+        let mut stats = Vec::new();
+        let mut frames = 0usize;
+        while let Some(frame) = source.next_frame() {
+            let t_enqueue = Instant::now();
+            let t0 = Instant::now();
+            let image = frame.binned(cfg.bins);
+            let read = t0.elapsed();
+            let h2d = cfg.transfer.h2d(image.data.len() * 4);
+            if !h2d.is_zero() {
+                std::thread::sleep(h2d);
+            }
+            let (ih, kernel) = exe.compute_timed(&image)?;
+            let d2h = cfg.transfer.d2h(tensor_bytes);
+            if !d2h.is_zero() {
+                std::thread::sleep(d2h);
+            }
+            stats.push(FrameStat {
+                seq: frame.seq,
+                read,
+                h2d,
+                kernel,
+                d2h,
+                latency: t_enqueue.elapsed(),
+            });
+            sink(frame.seq, ih);
+            frames += 1;
+        }
+        Ok(PipelineReport {
+            throughput: Throughput { frames, wall: t_start.elapsed(), stats },
+            lanes: 1,
+            queue_high_water: [0; 3],
+        })
+    }
+}

@@ -1,0 +1,287 @@
+//! The engine / request router — the coordinator's front door.
+//!
+//! Owns the artifact manifest and a cache of compiled executors, picks
+//! the right artifact for each request (strategy, geometry, bins), and
+//! routes:
+//!
+//! * small frames → the direct PJRT path (optionally the fused serve
+//!   graph that also answers region queries);
+//! * frames whose tensor exceeds the device-memory budget → the
+//!   multi-device bin task queue (§4.6), mirroring how the paper falls
+//!   back to bin tiling when "limited GPU global memory becomes the
+//!   bottleneck".
+
+use crate::coordinator::task_queue::{BinTaskQueue, TaskQueueConfig, TaskQueueReport};
+use crate::histogram::region::Rect;
+use crate::histogram::types::{BinnedImage, IntegralHistogram, Strategy};
+use crate::runtime::artifact::{ArtifactKind, ArtifactManifest};
+use crate::runtime::client::HistogramExecutor;
+use crate::video::source::VideoFrame;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Histogram bins for quantization and artifact selection.
+    pub bins: usize,
+    /// Preferred strategy for direct requests (WF-TiS: the tuned winner).
+    pub strategy: Strategy,
+    /// Tensors larger than this (bytes) go to the bin task queue —
+    /// the "GPU global memory" budget.  12 GB ≈ the Titan X.
+    pub device_memory_budget: usize,
+    /// Workers for the large-image pool.
+    pub pool_workers: usize,
+    /// Bin group size for large-image tasks.
+    pub bin_group: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            bins: 32,
+            strategy: Strategy::WfTis,
+            device_memory_budget: 12 << 30,
+            pool_workers: 4,
+            bin_group: 8,
+        }
+    }
+}
+
+/// How a request was (or would be) routed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Single-device direct execution.
+    Direct,
+    /// Bin-grouped multi-device task queue.
+    TaskQueue,
+}
+
+/// The serving engine.
+pub struct Engine {
+    manifest: Arc<ArtifactManifest>,
+    config: EngineConfig,
+    executors: HashMap<String, HistogramExecutor>,
+    task_queue: Option<BinTaskQueue>,
+}
+
+impl Engine {
+    /// Load the manifest from `dir` with default config.
+    pub fn from_artifact_dir(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        Ok(Engine::new(Arc::new(ArtifactManifest::load(dir)?), EngineConfig::default()))
+    }
+
+    pub fn new(manifest: Arc<ArtifactManifest>, config: EngineConfig) -> Engine {
+        Engine { manifest, config, executors: HashMap::new(), task_queue: None }
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// Routing decision for an `h×w` frame at the configured bin count:
+    /// tensor fits the device budget → direct, else task queue.
+    pub fn route_for(&self, h: usize, w: usize) -> Route {
+        let tensor = self.config.bins * h * w * 4;
+        if tensor > self.config.device_memory_budget {
+            Route::TaskQueue
+        } else {
+            Route::Direct
+        }
+    }
+
+    /// Compute the integral histogram of a frame with the configured
+    /// strategy, returning the tensor and the kernel time.
+    pub fn compute_frame_timed(
+        &mut self,
+        frame: &VideoFrame,
+    ) -> Result<(IntegralHistogram, Duration)> {
+        let img = frame.binned(self.config.bins);
+        self.compute_timed(self.config.strategy, &img)
+    }
+
+    /// Compute with an explicit strategy on an already-binned image.
+    pub fn compute_timed(
+        &mut self,
+        strategy: Strategy,
+        img: &BinnedImage,
+    ) -> Result<(IntegralHistogram, Duration)> {
+        match self.route_for(img.h, img.w) {
+            Route::Direct => {
+                let exe = self.executor_for(strategy, img.h, img.w, img.bins)?;
+                exe.compute_timed(img)
+            }
+            Route::TaskQueue => {
+                let (ih, report) = self.compute_large(img)?;
+                Ok((ih, report.wall))
+            }
+        }
+    }
+
+    /// Convenience wrapper dropping the timing.
+    pub fn compute(&mut self, strategy: Strategy, img: &BinnedImage) -> Result<IntegralHistogram> {
+        Ok(self.compute_timed(strategy, img)?.0)
+    }
+
+    /// Large-image path: bin-grouped fan-out over the device pool.
+    pub fn compute_large(
+        &mut self,
+        img: &BinnedImage,
+    ) -> Result<(IntegralHistogram, TaskQueueReport)> {
+        let group = self.config.bin_group;
+        if self.task_queue.is_none() {
+            // find the group-bin artifact matching this geometry
+            let meta = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| {
+                    a.kind == ArtifactKind::Strategy
+                        && a.bins == group
+                        && a.height == img.h
+                        && a.width == img.w
+                })
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no {}-bin group artifact for {}x{} (re-run `make artifacts`)",
+                        group,
+                        img.h,
+                        img.w
+                    )
+                })?;
+            self.task_queue = Some(BinTaskQueue::new(
+                Arc::clone(&self.manifest),
+                TaskQueueConfig {
+                    workers: self.config.pool_workers,
+                    group,
+                    artifact: meta.name.clone(),
+                },
+            )?);
+        }
+        let image = Arc::new(img.clone());
+        self.task_queue.as_ref().unwrap().compute(&image, img.bins)
+    }
+
+    /// Fused serve request: tensor + batched region histograms.  Uses
+    /// the AOT serve graph when one matches, otherwise computes the
+    /// tensor and answers the queries on the CPU (identical results).
+    pub fn serve(
+        &mut self,
+        frame: &VideoFrame,
+        rects: &[Rect],
+    ) -> Result<(IntegralHistogram, Vec<Vec<f32>>)> {
+        let bins = self.config.bins;
+        let img = frame.binned(bins);
+        let serve_meta = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| {
+                a.kind == ArtifactKind::Serve
+                    && a.height == img.h
+                    && a.width == img.w
+                    && a.bins == bins
+                    && a.n_rects >= rects.len()
+            })
+            .cloned();
+        if let Some(meta) = serve_meta {
+            if !self.executors.contains_key(&meta.name) {
+                let exe = HistogramExecutor::compile(&self.manifest, &meta)?;
+                self.executors.insert(meta.name.clone(), exe);
+            }
+            let exe = &self.executors[&meta.name];
+            let (ih, hists, _) = exe.compute_with_queries(&img, rects)?;
+            Ok((ih, hists))
+        } else {
+            let (ih, _) = self.compute_timed(self.config.strategy, &img)?;
+            let hists = crate::histogram::region::region_histogram_batch(&ih, rects);
+            Ok((ih, hists))
+        }
+    }
+
+    /// Get-or-compile the executor for (strategy, h, w, bins).
+    pub fn executor_for(
+        &mut self,
+        strategy: Strategy,
+        h: usize,
+        w: usize,
+        bins: usize,
+    ) -> Result<&HistogramExecutor> {
+        let meta = self
+            .manifest
+            .find_strategy(strategy, h, w, bins)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for {strategy} {h}x{w} bins={bins}; available: {}",
+                    self.manifest
+                        .strategies()
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?
+            .clone();
+        if !self.executors.contains_key(&meta.name) {
+            let exe = HistogramExecutor::compile(&self.manifest, &meta)?;
+            self.executors.insert(meta.name.clone(), exe);
+        }
+        Ok(&self.executors[&meta.name])
+    }
+
+    /// Number of compiled executors held by the cache.
+    pub fn cached_executors(&self) -> usize {
+        self.executors.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Arc<ArtifactManifest> {
+        // empty manifest is enough for routing tests
+        Arc::new(ArtifactManifest {
+            dir: PathBuf::from("/nonexistent"),
+            profile: "test".into(),
+            artifacts: vec![],
+        })
+    }
+
+    #[test]
+    fn routing_threshold() {
+        let mut cfg = EngineConfig::default();
+        cfg.bins = 128;
+        cfg.device_memory_budget = 1 << 30; // 1 GiB budget
+        let eng = Engine::new(manifest(), cfg);
+        // 512×512×128×4 = 128 MiB → direct
+        assert_eq!(eng.route_for(512, 512), Route::Direct);
+        // 8k×8k×128×4 = 32 GiB → task queue
+        assert_eq!(eng.route_for(8192, 8192), Route::TaskQueue);
+    }
+
+    #[test]
+    fn missing_artifact_is_helpful_error() {
+        let mut eng = Engine::new(manifest(), EngineConfig::default());
+        let err = eng
+            .executor_for(Strategy::WfTis, 64, 64, 32)
+            .err()
+            .expect("should fail")
+            .to_string();
+        assert!(err.contains("no artifact"), "{err}");
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = EngineConfig::default();
+        assert_eq!(c.strategy, Strategy::WfTis);
+        assert!(c.device_memory_budget >= 1 << 30);
+    }
+}

@@ -1,0 +1,139 @@
+//! Kernel-side figures: Fig. 7 (cumulative kernel time), Fig. 8
+//! (breakdown), Fig. 9/10 (tuning), Eq. 4 (scan efficiency).
+
+use super::{fmt_ms, FigContext};
+use crate::histogram::scan::scan_efficiency;
+use crate::histogram::types::Strategy;
+use crate::simulator::gpu_model::{self, BlockDemand, SmResources};
+use anyhow::Result;
+
+/// Fig. 7 — cumulative kernel execution time of the four GPU
+/// implementations across image sizes, 32 bins (log-scale plot in the
+/// paper; we print the values).  The CW-B row additionally reports the
+/// launch-overhead-adjusted time (§3.3): on real hardware its thousands
+/// of launches dominate, which a single fused HLO module cannot exhibit.
+pub fn fig7(ctx: &mut FigContext) -> Result<()> {
+    println!("\n=== Fig. 7: cumulative kernel time, 32-bin integral histogram (ms) ===");
+    let sizes = [128usize, 256, 512, 1024];
+    println!(
+        "{:<10} {:>10} {:>10} {:>10} {:>10} {:>14}",
+        "size", "CW-B", "CW-STS", "CW-TiS", "WF-TiS", "CW-B +launch"
+    );
+    for &s in &sizes {
+        let cwb = ctx.strategy_kernel_ms(Strategy::CwB, s, s, 32)?;
+        let sts = ctx.strategy_kernel_ms(Strategy::CwSts, s, s, 32)?;
+        let tis = ctx.strategy_kernel_ms(Strategy::CwTis, s, s, 32)?;
+        let wf = ctx.strategy_kernel_ms(Strategy::WfTis, s, s, 32)?;
+        let cwb_launch = cwb.map(|ms| {
+            ms + gpu_model::launch_overhead(Strategy::CwB, s, s, 32, 32).as_secs_f64() * 1e3
+        });
+        println!(
+            "{:<10} {} {} {} {} {:>14}",
+            format!("{s}x{s}"),
+            fmt_ms(cwb),
+            fmt_ms(sts),
+            fmt_ms(tis),
+            fmt_ms(wf),
+            cwb_launch.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+        );
+    }
+    // the paper's headline ratios
+    if let (Some(tis), Some(wf)) = (
+        ctx.strategy_kernel_ms(Strategy::CwTis, 512, 512, 32)?,
+        ctx.strategy_kernel_ms(Strategy::WfTis, 512, 512, 32)?,
+    ) {
+        println!("WF-TiS speedup over CW-TiS @512: {:.2}x (paper: up to ~1.5x)", tis / wf);
+    }
+    if let (Some(sts), Some(tis)) = (
+        ctx.strategy_kernel_ms(Strategy::CwSts, 512, 512, 32)?,
+        ctx.strategy_kernel_ms(Strategy::CwTis, 512, 512, 32)?,
+    ) {
+        println!("CW-TiS speedup over CW-STS @512: {:.2}x (paper: 2x-3x)", sts / tis);
+    }
+    Ok(())
+}
+
+/// Fig. 8 — kernel-time breakdown at 512²×32 and 1024²×32.  The paper
+/// splits init / SDK-prescan / transpose / custom scans; we measure the
+/// init artifact directly and derive the scan and transpose+overhead
+/// components from strategy differences (documented in EXPERIMENTS.md).
+pub fn fig8(ctx: &mut FigContext) -> Result<()> {
+    println!("\n=== Fig. 8: kernel time breakdown (ms) ===");
+    for &s in &[512usize, 1024] {
+        let init = if s == 512 { Some(ctx.kernel_ms("init_only_512x512_b32_t64")?) } else { None };
+        let sts = ctx.strategy_kernel_ms(Strategy::CwSts, s, s, 32)?;
+        let tis = ctx.strategy_kernel_ms(Strategy::CwTis, s, s, 32)?;
+        let wf = ctx.strategy_kernel_ms(Strategy::WfTis, s, s, 32)?;
+        println!("--- {s}x{s}x32 ---");
+        if let Some(i) = init {
+            println!("  init (binning) kernel          : {i:>9.2}");
+        }
+        if let (Some(t), Some(w)) = (tis, wf) {
+            println!("  CW-TiS custom h+v scans        : {t:>9.2}");
+            println!("  WF-TiS fused wavefront scan    : {w:>9.2}");
+            println!("  saved by fusing the two passes : {:>9.2}", t - w);
+        }
+        if let (Some(s_), Some(t)) = (sts, tis) {
+            println!("  CW-STS (SDK prescan+transpose) : {s_:>9.2}");
+            println!("  SDK-scan + transpose overhead  : {:>9.2}", s_ - t);
+        }
+    }
+    println!("(paper: transpose ≈ 20% of total and ≈ 50% of one prescan at 512²)");
+    Ok(())
+}
+
+/// Fig. 9 — execution time and occupancy vs thread-block configuration.
+/// Thread blocks do not exist on this substrate; we report (a) the
+/// occupancy-calculator model for the paper's block configs — which
+/// reproduces the "100% occupancy for both best and worst config"
+/// observation — and (b) the measured analogue of block tuning here:
+/// the Pallas tile-size sweep.
+pub fn fig9(ctx: &mut FigContext) -> Result<()> {
+    println!("\n=== Fig. 9: occupancy model (Kepler SMX, WF-TiS demand) ===");
+    println!("{:<10} {:>10} {:>10}", "threads", "blocks/SM", "occupancy");
+    for threads in [64usize, 128, 256, 512, 1024] {
+        let (blocks, occ) =
+            gpu_model::occupancy(SmResources::kepler_smx(), BlockDemand::wf_tis(threads, 64));
+        println!("{threads:<10} {blocks:>10} {:>9.0}%", occ * 100.0);
+    }
+    println!("\nmeasured tile sweep (the block-config analogue), WF-TiS 512²x32:");
+    println!("{:<10} {:>12}", "tile", "kernel ms");
+    for tile in [16usize, 32, 64] {
+        let name = format!("wf_tis_512x512_b32_t{tile}");
+        match ctx.kernel_ms(&name) {
+            Ok(ms) => println!("{tile:<10} {ms:>12.2}"),
+            Err(_) => println!("{tile:<10} {:>12}", "-"),
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 10 — WF-TiS tile-size comparison (32 vs 64; the paper finds
+/// 64×64 wins through better shared-memory use, and 16×16 loses by
+/// starving warps).
+pub fn fig10(ctx: &mut FigContext) -> Result<()> {
+    println!("\n=== Fig. 10: WF-TiS tile configuration, 512²x32 ===");
+    let t16 = ctx.kernel_ms("wf_tis_512x512_b32_t16").ok();
+    let t32 = ctx.kernel_ms("wf_tis_512x512_b32_t32").ok();
+    let t64 = ctx.kernel_ms("wf_tis_512x512_b32_t64").ok();
+    println!("{:<10} {:>12}", "tile", "kernel ms");
+    println!("{:<10} {}", "16x16", fmt_ms(t16));
+    println!("{:<10} {}", "32x32", fmt_ms(t32));
+    println!("{:<10} {}", "64x64", fmt_ms(t64));
+    if let (Some(a), Some(b)) = (t32, t64) {
+        println!("64x64 vs 32x32: {:.2}x (paper: 64x64 wins)", a / b);
+    }
+    Ok(())
+}
+
+/// Eq. 4 — efficiency of the SIMT Blelloch scan vs array length.
+pub fn eq4() -> Result<()> {
+    println!("\n=== Eq. 4: Blelloch scan efficiency 3(n-1)/(n·log2 n) ===");
+    println!("{:<10} {:>12}", "n", "efficiency");
+    for log_n in [6u32, 8, 10, 12, 14] {
+        let n = 1usize << log_n;
+        println!("{n:<10} {:>11.1}%", scan_efficiency(n) * 100.0);
+    }
+    println!("(paper quotes 30% at n = 1024 — the motivation for custom scan kernels)");
+    Ok(())
+}

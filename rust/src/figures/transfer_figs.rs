@@ -1,0 +1,186 @@
+//! Transfer-bound figures: Fig. 11 (kernel vs transfer), Fig. 13
+//! (dual-buffering), Fig. 15 (frame rates), Fig. 20 (cross-platform).
+//!
+//! Transfers come from the calibrated PCIe model (DESIGN.md §4).  Where
+//! a figure's *mechanism* depends on the kernel:transfer ratio (Figs.
+//! 13), the model is scaled so the ratio matches the paper's GPU — the
+//! CPU substrate runs kernels ~50-100× slower than a Titan X while the
+//! modeled PCIe times are absolute, which would otherwise make
+//! everything kernel-bound.  The scale used is printed with the figure.
+
+use super::{fmt_ms, FigContext};
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig, TransferModel};
+use crate::histogram::types::Strategy;
+use crate::simulator::pcie::{Card, FrameRateModel, PcieModel};
+use crate::video::synth::SyntheticVideo;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Fig. 11 — kernel execution vs data-transfer time, 512² and 1024²,
+/// 32 bins, on the K40c and Titan X models.  Reproduces the structural
+/// finding: CW-B is compute-bound, everything else transfer-bound.
+pub fn fig11(ctx: &mut FigContext) -> Result<()> {
+    println!("\n=== Fig. 11: kernel vs transfer time, 32 bins (ms) ===");
+    for card in [Card::K40c, Card::TitanX] {
+        let model = PcieModel::for_card(card);
+        for &s in &[512usize, 1024] {
+            let transfer_ms = (model.image_upload(s, s) + model.tensor_download(32, s, s))
+                .as_secs_f64()
+                * 1e3;
+            println!("--- {} {s}x{s} (transfer model: {transfer_ms:.2} ms) ---", card.name());
+            println!("{:<10} {:>10} {:>14} {:>16}", "impl", "kernel", "kernel+launch", "bound (paper)");
+            for strat in Strategy::ALL {
+                let kernel = ctx.strategy_kernel_ms(strat, s, s, 32)?;
+                let with_launch = kernel.map(|ms| {
+                    ms + crate::simulator::gpu_model::launch_overhead(strat, s, s, 32, 64)
+                        .as_secs_f64()
+                        * 1e3
+                });
+                // The paper's classification on GPU hardware:
+                let paper_bound = if strat == Strategy::CwB { "compute" } else { "transfer" };
+                println!(
+                    "{:<10} {} {} {:>16}",
+                    strat.artifact_prefix(),
+                    fmt_ms(kernel),
+                    fmt_ms(with_launch),
+                    paper_bound
+                );
+            }
+        }
+    }
+    println!("(on this CPU substrate kernels are slower than modeled PCIe, so the");
+    println!(" bound column reports the paper's GPU-hardware classification)");
+    Ok(())
+}
+
+/// Fig. 13 — effect of dual-buffering on a 100-frame HD sequence across
+/// bin counts, WF-TiS kernel.  Lanes=1 (serial) vs lanes=2 (the paper's
+/// two CUDA streams).  The PCIe model is scaled to preserve the paper's
+/// kernel:transfer ratio (≈1:1 at 16 bins on the GTX 480).
+pub fn fig13(ctx: &mut FigContext) -> Result<()> {
+    println!("\n=== Fig. 13: dual-buffering on HD (1280x720) frames, WF-TiS ===");
+    let frames = 20; // 100 in the paper; scaled for CPU-substrate runtime
+    println!("{:<6} {:>12} {:>12} {:>9} {:>8}", "bins", "serial fps", "dual fps", "speedup", "scale");
+    for bins in [8usize, 16, 32] {
+        let name = format!("wf_tis_720x1280_b{bins}_t64");
+        let Ok(kernel_ms) = ctx.kernel_ms(&name) else {
+            println!("{bins:<6} {:>12} {:>12}", "-", "-");
+            continue;
+        };
+        // Calibrate: paper's GTX 480 at 16 bins has transfer ≈ kernel.
+        // Our modeled HD 16-bin transfer vs our measured kernel sets the
+        // scale; the same scale is reused for every bin count so the
+        // *trend* across bins is the model's, not per-point tuning.
+        let model = PcieModel::for_card(Card::Gtx480);
+        let t16 = (model.image_upload(720, 1280) + model.tensor_download(16, 720, 1280))
+            .as_secs_f64()
+            * 1e3;
+        let k16 = ctx.kernel_ms("wf_tis_720x1280_b16_t64").unwrap_or(kernel_ms);
+        let scale = k16 / t16;
+        let manifest = Arc::clone(&ctx.manifest);
+        let mut fps = [0.0f64; 2];
+        for (i, lanes) in [1usize, 2].iter().enumerate() {
+            let cfg = PipelineConfig::new(name.clone(), bins).lanes(*lanes).transfer(
+                TransferModel::Simulated { model, scale },
+            );
+            let src = Box::new(SyntheticVideo::new(720, 1280, 4, 7).take_frames(frames));
+            let report = Pipeline::new(Arc::clone(&manifest), cfg).run(src)?;
+            fps[i] = report.fps();
+        }
+        println!(
+            "{bins:<6} {:>12.2} {:>12.2} {:>8.2}x {:>8.1}",
+            fps[0],
+            fps[1],
+            fps[1] / fps[0],
+            scale
+        );
+    }
+    println!("(paper: ~2x at 16 bins, shrinking as bins grow)");
+    Ok(())
+}
+
+/// Fig. 15 — frame rates with dual-buffering: (a/b) across image sizes
+/// at 32 bins, (c/d) across bin counts at 512².  Frame rate =
+/// 1/max(kernel, transfer) per Fig. 14; both the kernel-bound (this
+/// substrate) and the transfer-bound (paper GPU model) rates print.
+pub fn fig15(ctx: &mut FigContext) -> Result<()> {
+    println!("\n=== Fig. 15a/b: frame rate vs image size, 32 bins ===");
+    let model = PcieModel::for_card(Card::TitanX);
+    println!(
+        "{:<10} {:>10} {:>12} {:>14} {:>16}",
+        "size", "impl", "kernel fps", "transfer fps", "fps=1/max (GPU)"
+    );
+    for &s in &[128usize, 256, 512, 1024] {
+        for strat in [Strategy::CwSts, Strategy::CwTis, Strategy::WfTis] {
+            if let Some(kms) = ctx.strategy_kernel_ms(strat, s, s, 32)? {
+                let frm = FrameRateModel::for_frame(
+                    &model,
+                    Duration::from_secs_f64(kms / 1e3),
+                    32,
+                    s,
+                    s,
+                );
+                let tms = frm.transfer.as_secs_f64() * 1e3;
+                println!(
+                    "{:<10} {:>10} {:>12.2} {:>12.2} {:>16.2}",
+                    format!("{s}x{s}"),
+                    strat.artifact_prefix(),
+                    1e3 / kms,
+                    1e3 / tms,
+                    frm.fps_dual_buffered()
+                );
+            }
+        }
+    }
+    println!("\n=== Fig. 15c/d: frame rate vs bins, 512², WF-TiS ===");
+    println!("{:<6} {:>12} {:>14} {:>16}", "bins", "kernel fps", "transfer fps", "fps=1/max");
+    for bins in [16usize, 32, 64, 128] {
+        if let Some(kms) = ctx.strategy_kernel_ms(Strategy::WfTis, 512, 512, bins)? {
+            let frm =
+                FrameRateModel::for_frame(&model, Duration::from_secs_f64(kms / 1e3), bins, 512, 512);
+            println!(
+                "{bins:<6} {:>12.2} {:>14.2} {:>16.2}",
+                1e3 / kms,
+                1e3 / (frm.transfer.as_secs_f64() * 1e3),
+                frm.fps_dual_buffered()
+            );
+        }
+    }
+    println!("(paper: best impls are transfer-bound; rate degrades ~linearly with bins)");
+    Ok(())
+}
+
+/// Fig. 20 — WF-TiS frame rate on the standard 640×480×32 workload:
+/// our measured kernel + per-card transfer models, the CPU baselines,
+/// and the published Cell/B.E. results from [48] as reference constants.
+pub fn fig20(ctx: &mut FigContext) -> Result<()> {
+    println!("\n=== Fig. 20: 640x480, 32 bins — frame rate comparison ===");
+    let kms = ctx.kernel_ms("wf_tis_480x640_b32_t32")?;
+    println!("{:<26} {:>10}", "platform", "fr/sec");
+    println!("{:<26} {:>10.2}", "this substrate (kernel)", 1e3 / kms);
+    for card in Card::ALL {
+        let model = PcieModel::for_card(card);
+        let frm = FrameRateModel::for_frame(&model, Duration::from_secs_f64(kms / 1e3), 32, 480, 640);
+        // On real GPUs the kernel is far faster than this substrate; the
+        // transfer side is the binding constraint the paper reports.
+        let transfer_fps = 1.0 / frm.transfer.as_secs_f64();
+        println!("{:<26} {:>10.2}", format!("{} (transfer bound)", card.name()), transfer_fps);
+    }
+    // CPU baselines (measured here):
+    let video = SyntheticVideo::new(480, 640, 4, 7);
+    let img = video.frame(0).binned(32);
+    for threads in [1usize, 8, 16] {
+        let samples = crate::util::stats::time_ms(1, ctx.reps, || {
+            crate::histogram::parallel::integral_histogram_parallel(&img, threads);
+        });
+        let ms = crate::util::stats::Summary::of(&samples).median;
+        println!("{:<26} {:>10.2}", format!("CPU {threads} thread(s)"), 1e3 / ms);
+    }
+    // Published Cell/B.E. numbers (Bellens et al. [48], 8 SPEs), as the
+    // paper itself cites them — reference constants, not measured here.
+    println!("{:<26} {:>10.2}", "Cell/B.E. WF (8 SPEs) [48]", 49.0);
+    println!("{:<26} {:>10.2}", "Cell/B.E. CW (8 SPEs) [48]", 28.0);
+    println!("(paper: Titan X ≈ 300.4 fr/sec on this workload, transfer-bound)");
+    Ok(())
+}

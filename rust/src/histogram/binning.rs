@@ -1,0 +1,96 @@
+//! Intensity → bin quantization (the input side of the Q function).
+//!
+//! The paper's histograms bin 8-bit intensity (or any scalar feature
+//! map) into `b` equal-width bins.  This module converts raw u8 frames
+//! into [`BinnedImage`]s and provides the same quantization rule the
+//! Python oracle uses (`kernels/ref.py::quantize`), so both sides of
+//! the stack bin identically.
+
+use crate::histogram::types::BinnedImage;
+
+/// Number of raw intensity levels in 8-bit imagery.
+pub const LEVELS: usize = 256;
+
+/// Quantize one intensity value into `[0, bins)` with equal-width bins:
+/// `bin = v * bins / 256` — identical to the Python-side rule.
+#[inline]
+pub fn quantize_u8(v: u8, bins: usize) -> i32 {
+    debug_assert!(bins >= 1 && bins <= LEVELS);
+    ((v as usize * bins) / LEVELS) as i32
+}
+
+/// Quantize a raw u8 frame into a [`BinnedImage`].
+pub fn quantize_frame(pixels: &[u8], h: usize, w: usize, bins: usize) -> BinnedImage {
+    assert_eq!(pixels.len(), h * w, "pixel buffer length mismatch");
+    assert!((1..=LEVELS).contains(&bins), "bins must be in 1..=256");
+    let data = pixels.iter().map(|&p| quantize_u8(p, bins)).collect();
+    BinnedImage::new(h, w, bins, data)
+}
+
+/// Inverse lookup: the inclusive intensity range covered by `bin`.
+pub fn bin_range(bin: usize, bins: usize) -> (u8, u8) {
+    assert!(bin < bins && bins <= LEVELS);
+    // smallest v with v*bins/256 == bin is ceil(bin*256/bins)
+    let lo = (bin * LEVELS).div_ceil(bins);
+    let hi = ((bin + 1) * LEVELS).div_ceil(bins) - 1;
+    (lo as u8, hi.min(LEVELS - 1) as u8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_bounds() {
+        for bins in [1, 2, 16, 32, 128, 256] {
+            assert_eq!(quantize_u8(0, bins), 0);
+            assert_eq!(quantize_u8(255, bins), bins as i32 - 1);
+        }
+    }
+
+    #[test]
+    fn quantize_equal_width() {
+        // 32 bins → 8 levels per bin
+        assert_eq!(quantize_u8(7, 32), 0);
+        assert_eq!(quantize_u8(8, 32), 1);
+        assert_eq!(quantize_u8(127, 32), 15);
+        assert_eq!(quantize_u8(128, 32), 16);
+    }
+
+    #[test]
+    fn bin_range_roundtrip() {
+        for bins in [2usize, 16, 32, 100] {
+            for bin in 0..bins {
+                let (lo, hi) = bin_range(bin, bins);
+                assert_eq!(quantize_u8(lo, bins), bin as i32, "lo of bin {bin}/{bins}");
+                assert_eq!(quantize_u8(hi, bins), bin as i32, "hi of bin {bin}/{bins}");
+                if lo > 0 {
+                    assert_ne!(quantize_u8(lo - 1, bins), bin as i32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frame_quantization() {
+        let px = vec![0u8, 8, 127, 128, 255, 64];
+        let img = quantize_frame(&px, 2, 3, 32);
+        assert_eq!(img.data, vec![0, 1, 15, 16, 31, 8]);
+        assert_eq!((img.h, img.w, img.bins), (2, 3, 32));
+    }
+
+    #[test]
+    fn bins_256_is_identity() {
+        let px: Vec<u8> = (0..=255).collect();
+        let img = quantize_frame(&px, 16, 16, 256);
+        for (i, &b) in img.data.iter().enumerate() {
+            assert_eq!(b, i as i32);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_length() {
+        quantize_frame(&[0u8; 10], 2, 6, 16);
+    }
+}

@@ -1,0 +1,29 @@
+//! Integral-histogram substrate: core types, CPU baselines, region queries.
+//!
+//! This module is the paper's *comparator* and *consumer* side:
+//!
+//! * [`types`] — the `b×h×w` integral-histogram tensor (Fig. 2 layout:
+//!   3-D array mapped onto a 1-D row-major buffer) and strategy ids.
+//! * [`sequential`] — Algorithm 1, the single-threaded CPU baseline every
+//!   speedup figure is normalized against.
+//! * [`parallel`] — the multi-threaded CPU baseline (the paper's OpenMP
+//!   implementation on a hyper-threaded 8-core Xeon; here std scoped
+//!   threads, 1–16 workers, parallel over bins then rows).
+//! * [`tiled`] — cache-blocked single-pass CPU variant: the WF-TiS data
+//!   movement scheme applied to the CPU cache hierarchy (used by the
+//!   §Perf pass and as another baseline).
+//! * [`scan`] — prefix-sum helpers + the Eq. 4 scan-efficiency model.
+//! * [`region`] — Eq. 2 constant-time region queries and batched lookups.
+//! * [`binning`] — intensity→bin quantization (the Q function input).
+
+//! * [`temporal`] — the §2.1 higher-dimensional extension: 3-D
+//!   spatio-temporal integral histograms with 8-corner box queries.
+
+pub mod binning;
+pub mod parallel;
+pub mod region;
+pub mod scan;
+pub mod sequential;
+pub mod temporal;
+pub mod tiled;
+pub mod types;

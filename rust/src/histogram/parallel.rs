@@ -1,0 +1,216 @@
+//! Multi-threaded CPU baseline — the paper's OpenMP comparator.
+//!
+//! The paper's CPU comparison (Figs. 17, 19, 20) runs an OpenMP
+//! implementation on a hyper-threaded 8-core Xeon E5620 with 1–16
+//! threads.  This module reproduces it with std scoped threads and the
+//! same parallelization axes:
+//!
+//! * bins are embarrassingly parallel (each plane independent) — the
+//!   primary axis, matching the paper's bin-level distribution;
+//! * when there are more workers than bins, planes are additionally
+//!   split row-wise in a cross-weave fashion (horizontal scan of row
+//!   blocks, barrier, then column scan of column blocks).
+
+use crate::histogram::types::{BinnedImage, IntegralHistogram};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Multi-threaded integral histogram with `threads` workers (≥ 1).
+///
+/// Work distribution: a shared atomic counter hands out bin planes;
+/// each worker computes its plane with the tuned running-row-sum kernel.
+/// With `threads == 1` this degenerates to the sequential baseline.
+pub fn integral_histogram_parallel(img: &BinnedImage, threads: usize) -> IntegralHistogram {
+    assert!(threads >= 1, "need at least one thread");
+    let (h, w, bins) = (img.h, img.w, img.bins);
+    let mut ih = IntegralHistogram::zeros(bins, h, w);
+    let plane = h * w;
+
+    if threads == 1 || bins == 1 {
+        // avoid thread overhead in the degenerate case
+        for (k, chunk) in ih.data.chunks_mut(plane).enumerate() {
+            fill_plane_rowsum(img, k as i32, chunk);
+        }
+        return ih;
+    }
+
+    let next = AtomicUsize::new(0);
+    // Split the output buffer into per-bin chunks so each worker owns
+    // disjoint memory (no locks on the hot path).
+    let chunks: Vec<&mut [f32]> = ih.data.chunks_mut(plane).collect();
+    // Hand out chunks through a mutex-free work queue: each worker grabs
+    // plane indices from the atomic counter and writes into the matching
+    // chunk, transferred via raw pointer because chunks are disjoint.
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let ptrs: Vec<SendPtr> = chunks.into_iter().map(|c| SendPtr(c.as_mut_ptr())).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(bins) {
+            let next = &next;
+            let ptrs = &ptrs;
+            scope.spawn(move || loop {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= bins {
+                    break;
+                }
+                // SAFETY: each k is claimed exactly once; chunks are
+                // disjoint plane-sized slices of the output buffer.
+                let chunk = unsafe { std::slice::from_raw_parts_mut(ptrs[k].0, plane) };
+                fill_plane_rowsum(img, k as i32, chunk);
+            });
+        }
+    });
+    ih
+}
+
+/// Compute one bin plane into `out` (len h·w) with the running-row-sum
+/// recurrence.
+fn fill_plane_rowsum(img: &BinnedImage, bin: i32, out: &mut [f32]) {
+    let (h, w) = (img.h, img.w);
+    debug_assert_eq!(out.len(), h * w);
+    for x in 0..h {
+        let mut rowsum = 0.0f32;
+        for y in 0..w {
+            rowsum += (img.data[x * w + y] == bin) as u32 as f32;
+            let up = if x > 0 { out[(x - 1) * w + y] } else { 0.0 };
+            out[x * w + y] = rowsum + up;
+        }
+    }
+}
+
+/// Cross-weave row/column-parallel variant used when `threads > bins`
+/// would leave workers idle: horizontal scans of all (bin, row) pairs in
+/// parallel, a barrier, then vertical scans of all (bin, column) pairs.
+/// This is the CPU mirror of the paper's cross-weave scan mode (Fig. 1).
+pub fn integral_histogram_crossweave(img: &BinnedImage, threads: usize) -> IntegralHistogram {
+    assert!(threads >= 1);
+    let (h, w, bins) = (img.h, img.w, img.bins);
+    let mut ih = IntegralHistogram::zeros(bins, h, w);
+    let plane = h * w;
+
+    // Phase 1: horizontal prefix sums of Q values, parallel over (bin, row).
+    {
+        let next = AtomicUsize::new(0);
+        let total = bins * h;
+        struct SendPtr(*mut f32);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let base = SendPtr(ih.data.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let next = &next;
+                let base = &base;
+                scope.spawn(move || loop {
+                    let t = next.fetch_add(1, Ordering::Relaxed);
+                    if t >= total {
+                        break;
+                    }
+                    let (k, x) = (t / h, t % h);
+                    // SAFETY: task t owns row x of plane k exclusively.
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(base.0.add(k * plane + x * w), w)
+                    };
+                    let kk = k as i32;
+                    let mut run = 0.0f32;
+                    for y in 0..w {
+                        run += (img.data[x * w + y] == kk) as u32 as f32;
+                        row[y] = run;
+                    }
+                });
+            }
+        });
+    }
+
+    // Phase 2 (after the barrier implied by scope join): vertical prefix
+    // sums, parallel over (bin, column).
+    {
+        let next = AtomicUsize::new(0);
+        let total = bins * w;
+        struct SendPtr(*mut f32);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let base = SendPtr(ih.data.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let next = &next;
+                let base = &base;
+                scope.spawn(move || loop {
+                    let t = next.fetch_add(1, Ordering::Relaxed);
+                    if t >= total {
+                        break;
+                    }
+                    let (k, y) = (t / w, t % w);
+                    // SAFETY: task t owns column y of plane k exclusively;
+                    // column writes are strided but disjoint across tasks.
+                    let p = unsafe { std::slice::from_raw_parts_mut(base.0.add(k * plane), plane) };
+                    let mut run = 0.0f32;
+                    for x in 0..h {
+                        run += p[x * w + y];
+                        p[x * w + y] = run;
+                    }
+                });
+            }
+        });
+    }
+    ih
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_image(h: usize, w: usize, bins: usize, seed: u64) -> BinnedImage {
+        let mut rng = Xoshiro256::new(seed);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        BinnedImage::new(h, w, bins, data)
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let img = random_image(33, 47, 8, 1);
+        let expected = integral_histogram_seq(&img);
+        for threads in [1, 2, 4, 7, 16] {
+            let got = integral_histogram_parallel(&img, threads);
+            assert_eq!(expected.max_abs_diff(&got), 0.0, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn crossweave_matches_sequential() {
+        let img = random_image(21, 19, 4, 2);
+        let expected = integral_histogram_seq(&img);
+        for threads in [1, 3, 8] {
+            let got = integral_histogram_crossweave(&img, threads);
+            assert_eq!(expected.max_abs_diff(&got), 0.0, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn more_threads_than_bins() {
+        let img = random_image(16, 16, 2, 3);
+        let expected = integral_histogram_seq(&img);
+        let got = integral_histogram_parallel(&img, 12);
+        assert_eq!(expected.max_abs_diff(&got), 0.0);
+    }
+
+    #[test]
+    fn single_bin() {
+        let img = random_image(8, 8, 1, 4);
+        let got = integral_histogram_parallel(&img, 4);
+        assert_eq!(got.at(0, 7, 7), 64.0);
+    }
+
+    /// Determinism property: repeated parallel runs are bit-identical
+    /// (integer counts in f32; no accumulation-order ambiguity).
+    #[test]
+    fn parallel_is_deterministic() {
+        let img = random_image(32, 32, 8, 5);
+        let a = integral_histogram_parallel(&img, 8);
+        let b = integral_histogram_parallel(&img, 8);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,216 @@
+//! Eq. 2 — constant-time region histograms from the integral tensor.
+//!
+//! `h(R, b) = H(r+, c+, b) − H(r−, c+, b) − H(r+, c−, b) + H(r−, c−, b)`
+//! with the inclusive convention: the subtracted corners lie one row /
+//! column *outside* the rectangle and are dropped at the image border.
+//! This is the O(1)-per-bin lookup the integral histogram exists to
+//! provide (Fig. 1 right); the exhaustive-search analytics in
+//! [`crate::analytics`] are built entirely on it.
+
+use crate::histogram::types::IntegralHistogram;
+
+/// An inclusive rectangle `[r0..=r1] × [c0..=c1]` in image coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Rect {
+    pub r0: usize,
+    pub c0: usize,
+    pub r1: usize,
+    pub c1: usize,
+}
+
+impl Rect {
+    /// Construct; panics if corners are not ordered.
+    pub fn new(r0: usize, c0: usize, r1: usize, c1: usize) -> Rect {
+        assert!(r0 <= r1 && c0 <= c1, "rect corners out of order: ({r0},{c0})..({r1},{c1})");
+        Rect { r0, c0, r1, c1 }
+    }
+
+    /// Rectangle from top-left corner plus size (height, width ≥ 1).
+    pub fn with_size(r0: usize, c0: usize, height: usize, width: usize) -> Rect {
+        assert!(height >= 1 && width >= 1, "empty rect");
+        Rect::new(r0, c0, r0 + height - 1, c0 + width - 1)
+    }
+
+    pub fn height(&self) -> usize {
+        self.r1 - self.r0 + 1
+    }
+
+    pub fn width(&self) -> usize {
+        self.c1 - self.c0 + 1
+    }
+
+    pub fn area(&self) -> usize {
+        self.height() * self.width()
+    }
+
+    /// True if the rectangle lies inside an h×w image.
+    pub fn fits(&self, h: usize, w: usize) -> bool {
+        self.r1 < h && self.c1 < w
+    }
+
+    /// Clamp to the image extent (panics if fully outside).
+    pub fn clamped(&self, h: usize, w: usize) -> Rect {
+        assert!(self.r0 < h && self.c0 < w, "rect origin outside image");
+        Rect { r0: self.r0, c0: self.c0, r1: self.r1.min(h - 1), c1: self.c1.min(w - 1) }
+    }
+
+    /// Encode as the (r0, c0, r1, c1) i32 quad the `region_query` HLO
+    /// artifact consumes.
+    pub fn encode(&self) -> [i32; 4] {
+        [self.r0 as i32, self.c0 as i32, self.r1 as i32, self.c1 as i32]
+    }
+}
+
+/// Histogram of one rectangle: `bins` lookups, 4 reads each (Eq. 2).
+pub fn region_histogram(ih: &IntegralHistogram, rect: Rect) -> Vec<f32> {
+    assert!(rect.fits(ih.h, ih.w), "rect {rect:?} outside {}x{}", ih.h, ih.w);
+    let mut out = Vec::with_capacity(ih.bins);
+    let plane = ih.h * ih.w;
+    let w = ih.w;
+    let (r0, c0, r1, c1) = (rect.r0, rect.c0, rect.r1, rect.c1);
+    for b in 0..ih.bins {
+        let base = b * plane;
+        let d = &ih.data[base..base + plane];
+        let mut v = d[r1 * w + c1];
+        if r0 > 0 {
+            v -= d[(r0 - 1) * w + c1];
+        }
+        if c0 > 0 {
+            v -= d[r1 * w + c0 - 1];
+        }
+        if r0 > 0 && c0 > 0 {
+            v += d[(r0 - 1) * w + c0 - 1];
+        }
+        out.push(v);
+    }
+    out
+}
+
+/// Batched region histograms: (n rects) → n×bins row-major matrix.
+pub fn region_histogram_batch(ih: &IntegralHistogram, rects: &[Rect]) -> Vec<Vec<f32>> {
+    rects.iter().map(|&r| region_histogram(ih, r)).collect()
+}
+
+/// Total mass (pixel count) of a region from its histogram.
+pub fn histogram_mass(hist: &[f32]) -> f32 {
+    hist.iter().sum()
+}
+
+/// Histogram intersection similarity (Swain–Ballard), the matching score
+/// used by the fragments-based tracker the paper cites ([13]).
+/// Both inputs are normalized internally; returns a value in [0, 1].
+pub fn intersection_similarity(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "histogram length mismatch");
+    let sa: f32 = a.iter().sum();
+    let sb: f32 = b.iter().sum();
+    if sa <= 0.0 || sb <= 0.0 {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(&x, &y)| (x / sa).min(y / sb)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::histogram::types::BinnedImage;
+    use crate::util::prng::Xoshiro256;
+
+    fn brute_force(img: &BinnedImage, rect: Rect) -> Vec<f32> {
+        let mut h = vec![0.0f32; img.bins];
+        for r in rect.r0..=rect.r1 {
+            for c in rect.c0..=rect.c1 {
+                let v = img.at(r, c);
+                if v >= 0 {
+                    h[v as usize] += 1.0;
+                }
+            }
+        }
+        h
+    }
+
+    fn random_image(h: usize, w: usize, bins: usize, seed: u64) -> BinnedImage {
+        let mut rng = Xoshiro256::new(seed);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        BinnedImage::new(h, w, bins, data)
+    }
+
+    #[test]
+    fn rect_geometry() {
+        let r = Rect::with_size(2, 3, 4, 5);
+        assert_eq!((r.r1, r.c1), (5, 7));
+        assert_eq!(r.height(), 4);
+        assert_eq!(r.width(), 5);
+        assert_eq!(r.area(), 20);
+        assert!(r.fits(6, 8));
+        assert!(!r.fits(5, 8));
+        assert_eq!(r.encode(), [2, 3, 5, 7]);
+    }
+
+    #[test]
+    fn rect_clamp() {
+        let r = Rect::new(1, 1, 100, 100).clamped(10, 20);
+        assert_eq!((r.r1, r.c1), (9, 19));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rect_rejects_disorder() {
+        Rect::new(3, 0, 1, 5);
+    }
+
+    /// Property: Eq. 2 equals brute-force counting for random rects —
+    /// the core invariant of the whole system.
+    #[test]
+    fn region_matches_brute_force_property() {
+        let img = random_image(37, 53, 8, 99);
+        let ih = integral_histogram_seq(&img);
+        let mut rng = Xoshiro256::new(7);
+        for _ in 0..200 {
+            let r0 = rng.range(0, 37);
+            let c0 = rng.range(0, 53);
+            let r1 = rng.range(r0, 37);
+            let c1 = rng.range(c0, 53);
+            let rect = Rect::new(r0, c0, r1, c1);
+            let fast = region_histogram(&ih, rect);
+            let slow = brute_force(&img, rect);
+            assert_eq!(fast, slow, "mismatch at {rect:?}");
+        }
+    }
+
+    #[test]
+    fn full_image_region_is_global_histogram() {
+        let img = random_image(16, 16, 4, 3);
+        let ih = integral_histogram_seq(&img);
+        let hist = region_histogram(&ih, Rect::new(0, 0, 15, 15));
+        assert_eq!(histogram_mass(&hist), 256.0);
+    }
+
+    #[test]
+    fn intersection_similarity_properties() {
+        let a = vec![1.0, 2.0, 3.0];
+        // self-similarity is 1
+        assert!((intersection_similarity(&a, &a) - 1.0).abs() < 1e-6);
+        // disjoint histograms score 0
+        assert_eq!(intersection_similarity(&[1.0, 0.0], &[0.0, 1.0]), 0.0);
+        // symmetric
+        let b = vec![3.0, 1.0, 0.5];
+        let ab = intersection_similarity(&a, &b);
+        let ba = intersection_similarity(&b, &a);
+        assert!((ab - ba).abs() < 1e-6);
+        // empty histogram guard
+        assert_eq!(intersection_similarity(&[0.0, 0.0], &a[..2]), 0.0);
+    }
+
+    #[test]
+    fn batch_matches_singles() {
+        let img = random_image(20, 20, 4, 11);
+        let ih = integral_histogram_seq(&img);
+        let rects = vec![Rect::new(0, 0, 19, 19), Rect::new(3, 4, 10, 12)];
+        let batch = region_histogram_batch(&ih, &rects);
+        for (i, &r) in rects.iter().enumerate() {
+            assert_eq!(batch[i], region_histogram(&ih, r));
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Algorithm 1 — the sequential CPU integral histogram.
+//!
+//! The O(N) recursive row-dependent method every speedup number in the
+//! paper (Figs. 17, 19, 20) is normalized against:
+//!
+//! ```text
+//! H(k,x,y) = H(k,x−1,y) + H(k,x,y−1) − H(k,x−1,y−1) + Q(k, I(x,y))
+//! ```
+//!
+//! Two variants are provided: [`integral_histogram_seq`] is the literal
+//! Algorithm 1 (bin-major loops, wavefront recurrence), and
+//! [`integral_histogram_seq_rowsum`] is the classic running-row-sum
+//! formulation with identical output, used to cross-check and as the
+//! §Perf-pass optimized single-thread baseline.
+
+use crate::histogram::types::{BinnedImage, IntegralHistogram};
+
+/// Literal Algorithm 1: one plane per bin, four-term recurrence.
+pub fn integral_histogram_seq(img: &BinnedImage) -> IntegralHistogram {
+    let (h, w, bins) = (img.h, img.w, img.bins);
+    let mut ih = IntegralHistogram::zeros(bins, h, w);
+    for k in 0..bins {
+        let base = k * h * w;
+        for x in 0..h {
+            for y in 0..w {
+                let q = (img.data[x * w + y] == k as i32) as u32 as f32;
+                let up = if x > 0 { ih.data[base + (x - 1) * w + y] } else { 0.0 };
+                let left = if y > 0 { ih.data[base + x * w + y - 1] } else { 0.0 };
+                let diag = if x > 0 && y > 0 { ih.data[base + (x - 1) * w + y - 1] } else { 0.0 };
+                ih.data[base + x * w + y] = up + left - diag + q;
+            }
+        }
+    }
+    ih
+}
+
+/// Running-row-sum formulation: for each bin plane keep the cumulative
+/// sum of the current row and add the row above.  Same output, fewer
+/// dependent loads — the tuned single-threaded baseline.
+pub fn integral_histogram_seq_rowsum(img: &BinnedImage) -> IntegralHistogram {
+    let (h, w, bins) = (img.h, img.w, img.bins);
+    let mut ih = IntegralHistogram::zeros(bins, h, w);
+    for k in 0..bins {
+        let base = k * h * w;
+        let kk = k as i32;
+        for x in 0..h {
+            let mut rowsum = 0.0f32;
+            let row = base + x * w;
+            let above = row.wrapping_sub(w);
+            for y in 0..w {
+                rowsum += (img.data[x * w + y] == kk) as u32 as f32;
+                let up = if x > 0 { ih.data[above + y] } else { 0.0 };
+                ih.data[row + y] = rowsum + up;
+            }
+        }
+    }
+    ih
+}
+
+/// Single-pass variant that scans the image once and scatters into all
+/// bin planes (image-major instead of bin-major).  Matches how a CPU
+/// implementation would avoid re-reading the image `bins` times; used in
+/// the ablation bench for the memory-traffic argument of §3.5.
+pub fn integral_histogram_seq_imagemajor(img: &BinnedImage) -> IntegralHistogram {
+    let (h, w, bins) = (img.h, img.w, img.bins);
+    let plane = h * w;
+    let mut ih = IntegralHistogram::zeros(bins, h, w);
+    // rowsum per bin for the current row
+    let mut rowsum = vec![0.0f32; bins];
+    for x in 0..h {
+        rowsum.iter_mut().for_each(|v| *v = 0.0);
+        for y in 0..w {
+            let v = img.data[x * w + y];
+            if v >= 0 {
+                rowsum[v as usize] += 1.0;
+            }
+            for k in 0..bins {
+                let base = k * plane;
+                let up = if x > 0 { ih.data[base + (x - 1) * w + y] } else { 0.0 };
+                ih.data[base + x * w + y] = rowsum[k] + up;
+            }
+        }
+    }
+    ih
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::types::BinnedImage;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_image(h: usize, w: usize, bins: usize, seed: u64) -> BinnedImage {
+        let mut rng = Xoshiro256::new(seed);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        BinnedImage::new(h, w, bins, data)
+    }
+
+    fn brute(img: &BinnedImage, b: usize, x: usize, y: usize) -> f32 {
+        let mut s = 0.0;
+        for r in 0..=x {
+            for c in 0..=y {
+                if img.at(r, c) == b as i32 {
+                    s += 1.0;
+                }
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let img = random_image(9, 13, 4, 1);
+        let ih = integral_histogram_seq(&img);
+        for b in 0..4 {
+            for x in [0, 3, 8] {
+                for y in [0, 5, 12] {
+                    assert_eq!(ih.at(b, x, y), brute(&img, b, x, y));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corner_sums_to_pixel_count() {
+        let img = random_image(17, 11, 8, 2);
+        let ih = integral_histogram_seq(&img);
+        let total: f32 = (0..8).map(|b| ih.at(b, 16, 10)).sum();
+        assert_eq!(total, (17 * 11) as f32);
+    }
+
+    #[test]
+    fn variants_agree() {
+        let img = random_image(23, 31, 8, 3);
+        let a = integral_histogram_seq(&img);
+        let b = integral_histogram_seq_rowsum(&img);
+        let c = integral_histogram_seq_imagemajor(&img);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        assert_eq!(a.max_abs_diff(&c), 0.0);
+    }
+
+    #[test]
+    fn negative_bin_counts_nowhere() {
+        // padding pixels (bin −1) contribute to no plane
+        let img = BinnedImage::new(2, 2, 2, vec![-1, 0, 1, -1]);
+        let ih = integral_histogram_seq_rowsum(&img);
+        assert_eq!(ih.at(0, 1, 1), 1.0);
+        assert_eq!(ih.at(1, 1, 1), 1.0);
+        let im = integral_histogram_seq_imagemajor(&img);
+        assert_eq!(ih.max_abs_diff(&im), 0.0);
+    }
+
+    #[test]
+    fn single_pixel_image() {
+        let img = BinnedImage::new(1, 1, 3, vec![2]);
+        let ih = integral_histogram_seq(&img);
+        assert_eq!(ih.at(2, 0, 0), 1.0);
+        assert_eq!(ih.at(0, 0, 0), 0.0);
+    }
+
+    /// Monotonicity property: integral histograms are nondecreasing
+    /// along rows and columns for every bin.
+    #[test]
+    fn monotone_property() {
+        let img = random_image(16, 16, 4, 5);
+        let ih = integral_histogram_seq_rowsum(&img);
+        for b in 0..4 {
+            for x in 0..16 {
+                for y in 1..16 {
+                    assert!(ih.at(b, x, y) >= ih.at(b, x, y - 1));
+                }
+            }
+            for y in 0..16 {
+                for x in 1..16 {
+                    assert!(ih.at(b, x, y) >= ih.at(b, x - 1, y));
+                }
+            }
+        }
+    }
+}

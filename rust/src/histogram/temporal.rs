@@ -1,0 +1,198 @@
+//! Spatio-temporal (3-D) integral histogram — the §2.1 extension
+//! ("the integral histogram is extensible to higher dimensions").
+//!
+//! `H(b, t, x, y) = Σ_{τ≤t, r≤x, c≤y} Q(I_τ(r,c), b)` over a sliding
+//! window of frames, so the histogram of any *spatio-temporal box*
+//! (a rectangle over a frame range) is 8 lookups per bin — the
+//! primitive behind the paper's spatio-temporal median-filter motion
+//! detection ([28]) and temporal likelihood maps.
+
+use crate::histogram::region::Rect;
+use crate::histogram::types::BinnedImage;
+
+/// Integral histogram over a (bounded) temporal window of frames.
+#[derive(Debug, Clone)]
+pub struct TemporalIntegralHistogram {
+    pub bins: usize,
+    pub frames: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Layout: bin-major, then time: `[(b·frames + t)·h·w + x·w + y]`.
+    data: Vec<f32>,
+}
+
+impl TemporalIntegralHistogram {
+    /// Build from a sequence of binned frames (all same geometry).
+    pub fn build(frames: &[BinnedImage], bins: usize) -> TemporalIntegralHistogram {
+        assert!(!frames.is_empty(), "need at least one frame");
+        let (h, w) = (frames[0].h, frames[0].w);
+        assert!(frames.iter().all(|f| (f.h, f.w) == (h, w)), "inconsistent frame dims");
+        let nt = frames.len();
+        let plane = h * w;
+        let mut data = vec![0.0f32; bins * nt * plane];
+        for b in 0..bins {
+            let bb = b as i32;
+            for t in 0..nt {
+                let base = (b * nt + t) * plane;
+                let prev_t = base.wrapping_sub(plane);
+                // spatial integral of frame t's Q plane, plus temporal carry
+                for x in 0..h {
+                    let mut rowsum = 0.0f32;
+                    for y in 0..w {
+                        rowsum += (frames[t].data[x * w + y] == bb) as u32 as f32;
+                        let up = if x > 0 { data[base + (x - 1) * w + y] } else { 0.0 };
+                        let tprev = if t > 0 { data[prev_t + x * w + y] } else { 0.0 };
+                        // note: `up` already includes this frame's rows above
+                        // AND the temporal prefix of those rows, so subtract
+                        // the double-counted temporal part of `up`:
+                        let up_tprev = if t > 0 && x > 0 { data[prev_t + (x - 1) * w + y] } else { 0.0 };
+                        data[base + x * w + y] = rowsum + up + tprev - up_tprev;
+                    }
+                }
+            }
+        }
+        TemporalIntegralHistogram { bins, frames: nt, h, w, data }
+    }
+
+    #[inline]
+    fn at(&self, b: usize, t: usize, x: usize, y: usize) -> f32 {
+        self.data[((b * self.frames + t) * self.h + x) * self.w + y]
+    }
+
+    /// Histogram of the spatio-temporal box `rect × [t0..=t1]`:
+    /// inclusion–exclusion over the 8 corners (Eq. 2 lifted to 3-D).
+    pub fn box_histogram(&self, t0: usize, t1: usize, rect: Rect) -> Vec<f32> {
+        assert!(t0 <= t1 && t1 < self.frames, "bad frame range {t0}..={t1}");
+        assert!(rect.fits(self.h, self.w), "rect outside frame");
+        let mut out = Vec::with_capacity(self.bins);
+        for b in 0..self.bins {
+            let f = |t: isize, x: isize, y: isize| -> f32 {
+                if t < 0 || x < 0 || y < 0 {
+                    0.0
+                } else {
+                    self.at(b, t as usize, x as usize, y as usize)
+                }
+            };
+            let (ta, tb) = (t0 as isize - 1, t1 as isize);
+            let (xa, xb) = (rect.r0 as isize - 1, rect.r1 as isize);
+            let (ya, yb) = (rect.c0 as isize - 1, rect.c1 as isize);
+            let v = f(tb, xb, yb) - f(ta, xb, yb) - f(tb, xa, yb) - f(tb, xb, ya)
+                + f(ta, xa, yb)
+                + f(ta, xb, ya)
+                + f(tb, xa, ya)
+                - f(ta, xa, ya);
+            out.push(v);
+        }
+        out
+    }
+
+    /// Temporal-median-style background score: fraction of the window's
+    /// mass whose bin matches the modal bin of the *whole* time range —
+    /// the building block of the median-filter motion detector [28].
+    pub fn stability(&self, t0: usize, t1: usize, rect: Rect) -> f32 {
+        let hist = self.box_histogram(t0, t1, rect);
+        let total: f32 = hist.iter().sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        hist.iter().fold(0.0f32, |m, &v| m.max(v)) / total
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_frames(n: usize, h: usize, w: usize, bins: usize, seed: u64) -> Vec<BinnedImage> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut data = vec![0i32; h * w];
+                rng.fill_bins(&mut data, bins as u32);
+                BinnedImage::new(h, w, bins, data)
+            })
+            .collect()
+    }
+
+    fn brute(frames: &[BinnedImage], bins: usize, t0: usize, t1: usize, rect: Rect) -> Vec<f32> {
+        let mut h = vec![0.0f32; bins];
+        for f in &frames[t0..=t1] {
+            for r in rect.r0..=rect.r1 {
+                for c in rect.c0..=rect.c1 {
+                    let v = f.at(r, c);
+                    if v >= 0 {
+                        h[v as usize] += 1.0;
+                    }
+                }
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn box_matches_brute_force_property() {
+        let frames = random_frames(6, 17, 23, 5, 9);
+        let tih = TemporalIntegralHistogram::build(&frames, 5);
+        let mut rng = Xoshiro256::new(4);
+        for case in 0..60 {
+            let t0 = rng.range(0, 6);
+            let t1 = rng.range(t0, 6);
+            let r0 = rng.range(0, 17);
+            let r1 = rng.range(r0, 17);
+            let c0 = rng.range(0, 23);
+            let c1 = rng.range(c0, 23);
+            let rect = Rect::new(r0, c0, r1, c1);
+            let fast = tih.box_histogram(t0, t1, rect);
+            let slow = brute(&frames, 5, t0, t1, rect);
+            assert_eq!(fast, slow, "case {case}: t={t0}..={t1} {rect:?}");
+        }
+    }
+
+    #[test]
+    fn single_frame_reduces_to_2d() {
+        let frames = random_frames(1, 12, 12, 4, 2);
+        let tih = TemporalIntegralHistogram::build(&frames, 4);
+        let ih2d = crate::histogram::sequential::integral_histogram_seq(&frames[0]);
+        let rect = Rect::new(2, 3, 9, 11);
+        assert_eq!(
+            tih.box_histogram(0, 0, rect),
+            crate::histogram::region::region_histogram(&ih2d, rect)
+        );
+    }
+
+    #[test]
+    fn full_box_counts_all_pixels() {
+        let frames = random_frames(4, 8, 8, 4, 1);
+        let tih = TemporalIntegralHistogram::build(&frames, 4);
+        let hist = tih.box_histogram(0, 3, Rect::new(0, 0, 7, 7));
+        assert_eq!(hist.iter().sum::<f32>(), (4 * 64) as f32);
+    }
+
+    #[test]
+    fn stability_detects_static_vs_dynamic() {
+        let h = 8;
+        // static region: same bin value every frame → stability 1
+        let static_frames: Vec<BinnedImage> =
+            (0..5).map(|_| BinnedImage::new(h, h, 4, vec![2; h * h])).collect();
+        let tih = TemporalIntegralHistogram::build(&static_frames, 4);
+        assert_eq!(tih.stability(0, 4, Rect::new(0, 0, 7, 7)), 1.0);
+        // alternating region → stability ≈ spread across bins
+        let dyn_frames: Vec<BinnedImage> =
+            (0..4).map(|t| BinnedImage::new(h, h, 4, vec![t as i32; h * h])).collect();
+        let tih = TemporalIntegralHistogram::build(&dyn_frames, 4);
+        assert!((tih.stability(0, 3, Rect::new(0, 0, 7, 7)) - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_frame_range() {
+        let frames = random_frames(2, 4, 4, 2, 0);
+        let tih = TemporalIntegralHistogram::build(&frames, 2);
+        tih.box_histogram(1, 2, Rect::new(0, 0, 3, 3));
+    }
+}

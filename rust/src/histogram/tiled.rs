@@ -1,0 +1,200 @@
+//! Cache-blocked single-pass CPU integral histogram — WF-TiS on a CPU.
+//!
+//! The wave-front tiled scan's insight is substrate-independent: sweep
+//! tiles so each crosses the slow-memory boundary once, carrying the
+//! post-horizontal right edge and post-vertical bottom edge between
+//! neighbours.  Applied to the CPU cache hierarchy (tile ≈ L1-resident
+//! block) it yields the optimized single-thread baseline used by the
+//! §Perf pass, and doubles as an executable model of the Algorithm 5
+//! data flow that the property tests validate against Algorithm 1.
+
+use crate::histogram::types::{BinnedImage, IntegralHistogram};
+
+/// Default tile edge: 64×64 f32 = 16 KiB, comfortably L1-resident —
+/// the same 64×64 the paper lands on for the GPU (Fig. 10).
+pub const DEFAULT_TILE: usize = 64;
+
+/// Single-pass wavefront-tiled integral histogram.
+///
+/// Per bin plane, tiles are processed in row-major order (a linear
+/// extension of the wavefront partial order).  For each tile:
+/// horizontal scan with carried left edge, then vertical scan with
+/// carried top edge — the exact Algorithm 5 schedule.
+pub fn integral_histogram_tiled(img: &BinnedImage, tile: usize) -> IntegralHistogram {
+    assert!(tile >= 1, "tile must be positive");
+    let (h, w, bins) = (img.h, img.w, img.bins);
+    let mut ih = IntegralHistogram::zeros(bins, h, w);
+    let plane = h * w;
+
+    // Carries: colc = right edge of the tile to the left (post-H scan);
+    // rowc = bottom edge of the tile above (post-V scan), full width.
+    let mut colc = vec![0.0f32; tile];
+    let mut rowc = vec![0.0f32; w];
+    // In-tile scratch buffer, padded row stride to keep indexing simple.
+    let mut buf = vec![0.0f32; tile * tile];
+
+    for k in 0..bins {
+        let kk = k as i32;
+        let base = k * plane;
+        rowc.iter_mut().for_each(|v| *v = 0.0);
+        let mut ti = 0;
+        while ti < h {
+            let th = tile.min(h - ti);
+            colc.iter_mut().for_each(|v| *v = 0.0);
+            let mut tj = 0;
+            while tj < w {
+                let tw = tile.min(w - tj);
+                // 1. binning + horizontal scan with left carry into buf
+                for r in 0..th {
+                    let img_row = (ti + r) * w + tj;
+                    let mut run = colc[r];
+                    for c in 0..tw {
+                        run += (img.data[img_row + c] == kk) as u32 as f32;
+                        buf[r * tile + c] = run;
+                    }
+                    colc[r] = run; // preserve right edge BEFORE v-scan (§3.5)
+                }
+                // 2. vertical scan with top carry, write to output
+                for c in 0..tw {
+                    let mut run = rowc[tj + c];
+                    for r in 0..th {
+                        run += buf[r * tile + c];
+                        ih.data[base + (ti + r) * w + tj + c] = run;
+                    }
+                    rowc[tj + c] = run; // bottom edge for the tile below
+                }
+                tj += tile;
+            }
+            ti += tile;
+        }
+    }
+    ih
+}
+
+/// Two-pass cross-weave tiled variant (the CW-TiS schedule on CPU):
+/// a full horizontal pass over all tiles, then a full vertical pass.
+/// Exists to make the §3.5 traffic argument measurable on CPU — same
+/// arithmetic as [`integral_histogram_tiled`], twice the tensor traffic.
+pub fn integral_histogram_tiled_twopass(img: &BinnedImage, tile: usize) -> IntegralHistogram {
+    assert!(tile >= 1);
+    let (h, w, bins) = (img.h, img.w, img.bins);
+    let mut ih = IntegralHistogram::zeros(bins, h, w);
+    let plane = h * w;
+
+    for k in 0..bins {
+        let kk = k as i32;
+        let base = k * plane;
+        // Pass 1: horizontal, strip-wise with carried right edge.
+        for ti in (0..h).step_by(tile) {
+            let th = tile.min(h - ti);
+            let mut colc = vec![0.0f32; th];
+            for tj in (0..w).step_by(tile) {
+                let tw = tile.min(w - tj);
+                for r in 0..th {
+                    let row = (ti + r) * w + tj;
+                    let mut run = colc[r];
+                    for c in 0..tw {
+                        run += (img.data[row + c] == kk) as u32 as f32;
+                        ih.data[base + row + c] = run;
+                    }
+                    colc[r] = run;
+                }
+            }
+        }
+        // Pass 2: vertical, strip-wise with carried bottom edge.
+        for tj in (0..w).step_by(tile) {
+            let tw = tile.min(w - tj);
+            let mut rowc = vec![0.0f32; tw];
+            for ti in (0..h).step_by(tile) {
+                let th = tile.min(h - ti);
+                for c in 0..tw {
+                    let mut run = rowc[c];
+                    for r in 0..th {
+                        let idx = base + (ti + r) * w + tj + c;
+                        run += ih.data[idx];
+                        ih.data[idx] = run;
+                    }
+                    rowc[c] = run;
+                }
+            }
+        }
+    }
+    ih
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_image(h: usize, w: usize, bins: usize, seed: u64) -> BinnedImage {
+        let mut rng = Xoshiro256::new(seed);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        BinnedImage::new(h, w, bins, data)
+    }
+
+    #[test]
+    fn tiled_matches_sequential_aligned() {
+        let img = random_image(64, 128, 4, 1);
+        let expected = integral_histogram_seq(&img);
+        for tile in [16, 32, 64] {
+            let got = integral_histogram_tiled(&img, tile);
+            assert_eq!(expected.max_abs_diff(&got), 0.0, "tile={tile}");
+        }
+    }
+
+    /// Tiles that do NOT divide the image exercise the ragged-edge path.
+    #[test]
+    fn tiled_matches_sequential_ragged() {
+        let img = random_image(37, 53, 8, 2);
+        let expected = integral_histogram_seq(&img);
+        for tile in [5, 16, 40, 64, 100] {
+            let got = integral_histogram_tiled(&img, tile);
+            assert_eq!(expected.max_abs_diff(&got), 0.0, "tile={tile}");
+        }
+    }
+
+    #[test]
+    fn twopass_matches_singlepass() {
+        let img = random_image(45, 29, 4, 3);
+        let a = integral_histogram_tiled(&img, 16);
+        let b = integral_histogram_tiled_twopass(&img, 16);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn tile_of_one() {
+        let img = random_image(7, 9, 2, 4);
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&integral_histogram_tiled(&img, 1)), 0.0);
+    }
+
+    #[test]
+    fn tile_larger_than_image() {
+        let img = random_image(10, 12, 4, 5);
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&integral_histogram_tiled(&img, 256)), 0.0);
+    }
+
+    /// Randomized property sweep: shapes × tiles × bins.
+    #[test]
+    fn property_sweep() {
+        let mut rng = Xoshiro256::new(42);
+        for _ in 0..15 {
+            let h = rng.range(1, 50);
+            let w = rng.range(1, 50);
+            let bins = rng.range(1, 9);
+            let tile = rng.range(1, 33);
+            let img = random_image(h, w, bins, rng.next_u64());
+            let expected = integral_histogram_seq(&img);
+            let got = integral_histogram_tiled(&img, tile);
+            assert_eq!(
+                expected.max_abs_diff(&got),
+                0.0,
+                "h={h} w={w} bins={bins} tile={tile}"
+            );
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Core data structures: the integral-histogram tensor and strategy ids.
+//!
+//! The integral histogram of an `h×w` image with `b` bins is a `b×h×w`
+//! tensor stored bin-major in one contiguous 1-D row-major buffer —
+//! exactly the Fig. 2 layout the paper uses so the whole tensor moves
+//! over PCIe in a single transaction.
+
+use crate::histogram::region::Rect;
+use std::fmt;
+use std::str::FromStr;
+
+/// The four GPU kernel strategies evaluated by the paper (§3), plus the
+/// CPU baselines used in the speedup figures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Strategy {
+    /// Algorithm 2 — naive cross-weave baseline (SDK prescan + 2-D transpose).
+    CwB,
+    /// Algorithm 3 — single scan-transpose-scan (SDK kernels, one launch each).
+    CwSts,
+    /// Algorithm 4 — custom tiled horizontal/vertical strip scans.
+    CwTis,
+    /// Algorithm 5 — fused wave-front tiled scan (the paper's fastest).
+    WfTis,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 4] = [Strategy::CwB, Strategy::CwSts, Strategy::CwTis, Strategy::WfTis];
+
+    /// The artifact-name prefix used by `python/compile/aot.py`.
+    pub fn artifact_prefix(self) -> &'static str {
+        match self {
+            Strategy::CwB => "cw_b",
+            Strategy::CwSts => "cw_sts",
+            Strategy::CwTis => "cw_tis",
+            Strategy::WfTis => "wf_tis",
+        }
+    }
+
+    /// Number of distinct kernel launches the GPU implementation issues
+    /// for an `h×w` image with `b` bins (§3.3): the launch-overhead model
+    /// used by [`crate::simulator::gpu_model`].  CW-B launches one scan
+    /// per row per bin plus per-bin transposes; the others are O(1).
+    pub fn kernel_launches(self, h: usize, w: usize, bins: usize, tile: usize) -> usize {
+        match self {
+            Strategy::CwB => bins * h + bins + bins * w,
+            Strategy::CwSts => 3,
+            // one launch per strip per pass
+            Strategy::CwTis => w.div_ceil(tile) + h.div_ceil(tile),
+            // one launch per anti-diagonal (Eq. 6)
+            Strategy::WfTis => w.div_ceil(tile) + h.div_ceil(tile) - 1,
+        }
+    }
+
+    /// Number of times the b×h×w tensor crosses the global-memory
+    /// boundary (reads + writes), the §3.5 traffic argument:
+    /// CW-B/CW-STS: scan(2) + transpose(2) + scan(2) + transpose(2);
+    /// CW-TiS: two passes; WF-TiS: single fused pass.
+    pub fn tensor_passes(self) -> usize {
+        match self {
+            Strategy::CwB | Strategy::CwSts => 8,
+            Strategy::CwTis => 4,
+            Strategy::WfTis => 2,
+        }
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.artifact_prefix())
+    }
+}
+
+impl FromStr for Strategy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "cw_b" | "cw-b" => Ok(Strategy::CwB),
+            "cw_sts" | "cw-sts" => Ok(Strategy::CwSts),
+            "cw_tis" | "cw-tis" => Ok(Strategy::CwTis),
+            "wf_tis" | "wf-tis" => Ok(Strategy::WfTis),
+            other => Err(format!("unknown strategy '{other}' (expected cw_b|cw_sts|cw_tis|wf_tis)")),
+        }
+    }
+}
+
+/// An image already quantized to bin indices (the input to every kernel).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BinnedImage {
+    pub h: usize,
+    pub w: usize,
+    pub bins: usize,
+    /// Row-major h×w bin indices; −1 means "no bin" (padding).
+    pub data: Vec<i32>,
+}
+
+impl BinnedImage {
+    pub fn new(h: usize, w: usize, bins: usize, data: Vec<i32>) -> Self {
+        assert_eq!(data.len(), h * w, "data length must be h*w");
+        debug_assert!(
+            data.iter().all(|&v| v >= -1 && (v as i64) < bins as i64),
+            "bin index out of range"
+        );
+        BinnedImage { h, w, bins, data }
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.w + c]
+    }
+
+    /// Zero-pad (bin −1) to the next multiple of `tile` in each dim,
+    /// the §3.4 padding rule.  Returns self unchanged if already aligned.
+    pub fn pad_to_tile(&self, tile: usize) -> BinnedImage {
+        let ph = self.h.div_ceil(tile) * tile;
+        let pw = self.w.div_ceil(tile) * tile;
+        if ph == self.h && pw == self.w {
+            return self.clone();
+        }
+        let mut data = vec![-1i32; ph * pw];
+        for r in 0..self.h {
+            data[r * pw..r * pw + self.w].copy_from_slice(&self.data[r * self.w..(r + 1) * self.w]);
+        }
+        BinnedImage { h: ph, w: pw, bins: self.bins, data }
+    }
+}
+
+/// The `b×h×w` integral-histogram tensor (inclusive convention).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntegralHistogram {
+    pub bins: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Bin-major 1-D row-major buffer of length `bins*h*w` (Fig. 2).
+    pub data: Vec<f32>,
+}
+
+impl IntegralHistogram {
+    pub fn zeros(bins: usize, h: usize, w: usize) -> Self {
+        IntegralHistogram { bins, h, w, data: vec![0.0; bins * h * w] }
+    }
+
+    pub fn from_raw(bins: usize, h: usize, w: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), bins * h * w, "raw buffer length mismatch");
+        IntegralHistogram { bins, h, w, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, b: usize, r: usize, c: usize) -> usize {
+        (b * self.h + r) * self.w + c
+    }
+
+    #[inline]
+    pub fn at(&self, b: usize, r: usize, c: usize) -> f32 {
+        self.data[self.idx(b, r, c)]
+    }
+
+    /// One bin plane as a row-major h×w slice.
+    pub fn plane(&self, b: usize) -> &[f32] {
+        &self.data[b * self.h * self.w..(b + 1) * self.h * self.w]
+    }
+
+    /// Size in bytes of the tensor buffer (what moves over PCIe).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Eq. 2: histogram of an inclusive rectangle in O(bins) time.
+    pub fn region(&self, rect: Rect) -> Vec<f32> {
+        crate::histogram::region::region_histogram(self, rect)
+    }
+
+    /// Restrict to the top-left `h×w` corner (undo §3.4 padding).
+    pub fn crop(&self, h: usize, w: usize) -> IntegralHistogram {
+        assert!(h <= self.h && w <= self.w, "crop larger than tensor");
+        if h == self.h && w == self.w {
+            return self.clone();
+        }
+        let mut out = IntegralHistogram::zeros(self.bins, h, w);
+        for b in 0..self.bins {
+            for r in 0..h {
+                let src = self.idx(b, r, 0);
+                let dst = out.idx(b, r, 0);
+                out.data[dst..dst + w].copy_from_slice(&self.data[src..src + w]);
+            }
+        }
+        out
+    }
+
+    /// Max absolute difference against another tensor (test helper).
+    pub fn max_abs_diff(&self, other: &IntegralHistogram) -> f32 {
+        assert_eq!((self.bins, self.h, self.w), (other.bins, other.h, other.w));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(s.artifact_prefix().parse::<Strategy>().unwrap(), s);
+        }
+        assert!("bogus".parse::<Strategy>().is_err());
+    }
+
+    #[test]
+    fn launch_counts_match_paper() {
+        // CW-B: b*h + b + b*w launches (§3.3)
+        assert_eq!(Strategy::CwB.kernel_launches(512, 512, 32, 64), 32 * 512 + 32 + 32 * 512);
+        assert_eq!(Strategy::CwSts.kernel_launches(512, 512, 32, 64), 3);
+        // WF-TiS: Eq. 6 = ceil(w/t) + ceil(h/t) - 1
+        assert_eq!(Strategy::WfTis.kernel_launches(512, 512, 32, 64), 8 + 8 - 1);
+        assert_eq!(Strategy::WfTis.kernel_launches(480, 640, 32, 64), 10 + 8 - 1);
+    }
+
+    #[test]
+    fn tensor_pass_ordering() {
+        assert!(Strategy::WfTis.tensor_passes() < Strategy::CwTis.tensor_passes());
+        assert!(Strategy::CwTis.tensor_passes() < Strategy::CwSts.tensor_passes());
+    }
+
+    #[test]
+    fn binned_image_pad() {
+        let img = BinnedImage::new(3, 5, 4, vec![0; 15]);
+        let p = img.pad_to_tile(4);
+        assert_eq!((p.h, p.w), (4, 8));
+        assert_eq!(p.at(0, 0), 0);
+        assert_eq!(p.at(3, 0), -1);
+        assert_eq!(p.at(0, 5), -1);
+        // aligned image returns unchanged
+        let img2 = BinnedImage::new(4, 4, 4, vec![1; 16]);
+        assert_eq!(img2.pad_to_tile(4), img2);
+    }
+
+    #[test]
+    fn ih_indexing_bin_major() {
+        let mut ih = IntegralHistogram::zeros(2, 3, 4);
+        let k = ih.idx(1, 2, 3);
+        assert_eq!(k, (1 * 3 + 2) * 4 + 3);
+        ih.data[k] = 7.0;
+        assert_eq!(ih.at(1, 2, 3), 7.0);
+        assert_eq!(ih.plane(1)[2 * 4 + 3], 7.0);
+    }
+
+    #[test]
+    fn crop_keeps_corner() {
+        let mut ih = IntegralHistogram::zeros(1, 4, 4);
+        for r in 0..4 {
+            for c in 0..4 {
+                let k = ih.idx(0, r, c);
+                ih.data[k] = (r * 10 + c) as f32;
+            }
+        }
+        let c = ih.crop(2, 3);
+        assert_eq!((c.h, c.w), (2, 3));
+        assert_eq!(c.at(0, 1, 2), 12.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_raw_rejects_bad_len() {
+        IntegralHistogram::from_raw(2, 2, 2, vec![0.0; 7]);
+    }
+}

@@ -1,0 +1,56 @@
+//! # inthist — fast integral histograms for real-time video analytics
+//!
+//! A production-shaped reproduction of Poostchi et al., *"Fast Integral
+//! Histogram Computations on GPU for Real-Time Video Analytics"* (2017),
+//! built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time, Python)** — the paper's four kernel
+//!   strategies (CW-B, CW-STS, CW-TiS, WF-TiS) written as Pallas kernels
+//!   and composed into JAX graphs, AOT-lowered to HLO text in
+//!   `artifacts/`.
+//! * **Layer 3 (this crate)** — the serving runtime: a PJRT executor that
+//!   loads the artifacts ([`runtime`]), a dual-buffered frame pipeline and
+//!   a multi-device bin task queue ([`coordinator`]), the CPU baselines
+//!   and region-query engine ([`histogram`]), a PCIe transfer simulator
+//!   ([`simulator`]), synthetic video sources ([`video`]) and
+//!   histogram-based analytics built on top ([`analytics`]).
+//!
+//! Python never runs on the request path: once `make artifacts` has been
+//! run, the Rust binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use inthist::prelude::*;
+//!
+//! let mut engine = Engine::from_artifact_dir("artifacts")?;
+//! let frame = inthist::video::synth::SyntheticVideo::new(512, 512, 4, 7).frame(0);
+//! let ih = engine.compute(Strategy::WfTis, &frame.binned(32))?;
+//! let hist = ih.region(Rect::new(100, 100, 200, 200));
+//! # anyhow::Result::<()>::Ok(())
+//! ```
+//!
+//! See `examples/` for the end-to-end drivers and `DESIGN.md` for the
+//! paper-to-module map.
+
+pub mod analytics;
+pub mod coordinator;
+pub mod figures;
+pub mod histogram;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+pub mod video;
+
+/// Convenient re-exports for downstream users.
+pub mod prelude {
+    pub use crate::coordinator::pipeline::{Pipeline, PipelineConfig, PipelineReport};
+    pub use crate::coordinator::router::{Engine, EngineConfig};
+    pub use crate::coordinator::task_queue::{BinTaskQueue, TaskQueueConfig};
+    pub use crate::histogram::region::Rect;
+    pub use crate::histogram::types::{IntegralHistogram, Strategy};
+    pub use crate::runtime::artifact::{ArtifactManifest, ArtifactMeta};
+    pub use crate::runtime::client::HistogramExecutor;
+    pub use crate::simulator::pcie::PcieModel;
+    pub use crate::video::source::{FrameSource, VideoFrame};
+}

@@ -1,0 +1,278 @@
+//! `inthist` CLI — the Layer-3 coordinator entry point.
+//!
+//! Subcommands:
+//! * `info`      — platform + artifact inventory.
+//! * `compute`   — one frame through one strategy, print timings.
+//! * `pipeline`  — stream synthetic (or PGM-directory) video through the
+//!   dual-buffered pipeline and report the frame rate.
+//! * `large`     — large-image multi-device bin task queue run.
+//! * `figures`   — regenerate a paper figure (fig7…fig20, eq4, all).
+//!
+//! Argument parsing is hand-rolled (`--key value` pairs) — the offline
+//! build has no clap; see `inthist <cmd> --help`.
+
+use anyhow::{anyhow, bail, Context, Result};
+use inthist::coordinator::pipeline::{Pipeline, PipelineConfig, TransferModel};
+use inthist::coordinator::router::{Engine, EngineConfig};
+use inthist::coordinator::task_queue::{BinTaskQueue, TaskQueueConfig};
+use inthist::figures;
+use inthist::histogram::types::Strategy;
+use inthist::runtime::artifact::ArtifactManifest;
+use inthist::simulator::pcie::{Card, PcieModel};
+use inthist::video::pgm::PgmDirSource;
+use inthist::video::source::FrameSource;
+use inthist::video::synth::SyntheticVideo;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Parsed `--key value` flags plus positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if key == "help" {
+                    flags.insert("help".into(), "true".into());
+                    i += 1;
+                    continue;
+                }
+                let val = argv.get(i + 1).ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    fn wants_help(&self) -> bool {
+        self.get("help").is_some()
+    }
+}
+
+const USAGE: &str = "\
+inthist — integral histograms for real-time video analytics
+
+USAGE: inthist <command> [flags]
+
+COMMANDS:
+  info                          platform + artifact inventory
+  compute  [--strategy wf_tis] [--size 512] [--bins 32]
+                                one frame, print kernel/transfer times
+  pipeline [--frames 50] [--bins 32] [--size 512] [--lanes 2]
+           [--card titanx] [--scale S] [--pgm-dir DIR]
+                                dual-buffered streaming run
+  large    [--bins 128] [--workers 4] [--group 8] [--size 512]
+                                multi-device bin task queue
+  figures  <fig7|fig8|fig9|fig10|fig11|fig13|fig15|fig16|fig17|fig19|fig20|eq4|all>
+                                regenerate a paper figure
+GLOBAL FLAGS:
+  --artifacts DIR               artifact directory (default: artifacts)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..])?;
+    if args.wants_help() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let artifacts_dir = args.str_or("artifacts", "artifacts").to_string();
+    match cmd {
+        "info" => cmd_info(&artifacts_dir),
+        "compute" => cmd_compute(&artifacts_dir, &args),
+        "pipeline" => cmd_pipeline(&artifacts_dir, &args),
+        "large" => cmd_large(&artifacts_dir, &args),
+        "figures" => cmd_figures(&artifacts_dir, &args),
+        "help" | "-h" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_info(dir: &str) -> Result<()> {
+    let manifest = ArtifactManifest::load(dir)?;
+    let client = xla::PjRtClient::cpu()?;
+    println!(
+        "platform: {} ({} devices)",
+        client.platform_name(),
+        client.device_count()
+    );
+    println!("artifact profile: {}", manifest.profile);
+    println!("{:<36} {:>10} {:>6} {:>6} {:>12}", "artifact", "size", "bins", "tile", "tensor MB");
+    for a in &manifest.artifacts {
+        println!(
+            "{:<36} {:>10} {:>6} {:>6} {:>12.1}",
+            a.name,
+            format!("{}x{}", a.width, a.height),
+            a.bins,
+            a.tile,
+            a.tensor_bytes() as f64 / 1e6
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compute(dir: &str, args: &Args) -> Result<()> {
+    let size = args.usize("size", 512)?;
+    let bins = args.usize("bins", 32)?;
+    let strategy: Strategy = args
+        .str_or("strategy", "wf_tis")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let mut config = EngineConfig::default();
+    config.bins = bins;
+    config.strategy = strategy;
+    let mut engine = Engine::new(Arc::new(ArtifactManifest::load(dir)?), config);
+    let video = SyntheticVideo::new(size, size, 4, 7);
+    let frame = video.frame(0);
+    let (ih, kernel) = engine.compute_frame_timed(&frame)?;
+    let model = PcieModel::for_card(Card::TitanX);
+    let transfer = model.image_upload(size, size) + model.tensor_download(bins, size, size);
+    println!("strategy        : {strategy}");
+    println!("image           : {size}x{size}, {bins} bins");
+    println!("tensor          : {:.1} MB", ih.nbytes() as f64 / 1e6);
+    println!("kernel time     : {:.3} ms", kernel.as_secs_f64() * 1e3);
+    println!("transfer (model): {:.3} ms (Titan X PCIe)", transfer.as_secs_f64() * 1e3);
+    println!(
+        "bound by        : {}",
+        if transfer > kernel { "data transfer" } else { "kernel compute" }
+    );
+    let corner: f32 = (0..bins).map(|b| ih.at(b, size - 1, size - 1)).sum();
+    println!("checksum        : corner mass {corner} (expect {})", size * size);
+    Ok(())
+}
+
+fn parse_card(name: &str) -> Result<Card> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "titanx" | "titan-x" => Card::TitanX,
+        "k40c" | "k40" => Card::K40c,
+        "c2070" => Card::C2070,
+        "gtx480" | "480" => Card::Gtx480,
+        other => bail!("unknown card '{other}' (titanx|k40c|c2070|gtx480)"),
+    })
+}
+
+fn cmd_pipeline(dir: &str, args: &Args) -> Result<()> {
+    let frames = args.usize("frames", 50)?;
+    let bins = args.usize("bins", 32)?;
+    let size = args.usize("size", 512)?;
+    let lanes = args.usize("lanes", 2)?;
+    let manifest = Arc::new(ArtifactManifest::load(dir)?);
+    let source: Box<dyn FrameSource> = match args.get("pgm-dir") {
+        Some(d) => Box::new(PgmDirSource::open(std::path::Path::new(d))?),
+        None => Box::new(SyntheticVideo::new(size, size, 4, 7).take_frames(frames)),
+    };
+    let (h, w) = source.dims();
+    let meta = manifest
+        .find_strategy(Strategy::WfTis, h, w, bins)
+        .ok_or_else(|| anyhow!("no wf_tis artifact for {h}x{w} bins={bins}"))?;
+    let mut config = PipelineConfig::new(meta.name.clone(), bins).lanes(lanes);
+    if let Some(card) = args.get("card") {
+        let scale: f64 = args.str_or("scale", "1.0").parse().context("--scale expects float")?;
+        config = config.transfer(TransferModel::Simulated {
+            model: PcieModel::for_card(parse_card(card)?),
+            scale,
+        });
+    }
+    let report = Pipeline::new(manifest, config).run(source)?;
+    let t = &report.throughput;
+    println!("frames          : {}", t.frames);
+    println!("lanes           : {}", report.lanes);
+    println!("wall time       : {:.3} s", t.wall.as_secs_f64());
+    println!("frame rate      : {:.2} fr/sec", t.fps());
+    println!("mean latency    : {:.3} ms", t.mean_latency().as_secs_f64() * 1e3);
+    println!(
+        "stage totals    : read {:.1} ms | h2d {:.1} ms | kernel {:.1} ms | d2h {:.1} ms",
+        t.stage_total(|s| s.read).as_secs_f64() * 1e3,
+        t.stage_total(|s| s.h2d).as_secs_f64() * 1e3,
+        t.stage_total(|s| s.kernel).as_secs_f64() * 1e3,
+        t.stage_total(|s| s.d2h).as_secs_f64() * 1e3,
+    );
+    println!("overlap speedup : {:.2}x vs serial estimate", t.overlap_speedup());
+    println!("queue high-water: {:?}", report.queue_high_water);
+    Ok(())
+}
+
+fn cmd_large(dir: &str, args: &Args) -> Result<()> {
+    let bins = args.usize("bins", 128)?;
+    let workers = args.usize("workers", 4)?;
+    let group = args.usize("group", 8)?;
+    let size = args.usize("size", 512)?;
+    let manifest = Arc::new(ArtifactManifest::load(dir)?);
+    let meta = manifest
+        .artifacts
+        .iter()
+        .find(|a| a.bins == group && a.height == size && a.width == size)
+        .ok_or_else(|| anyhow!("no {group}-bin artifact for {size}x{size}"))?
+        .clone();
+    let queue = BinTaskQueue::new(
+        Arc::clone(&manifest),
+        TaskQueueConfig { workers, group, artifact: meta.name },
+    )?;
+    let video = SyntheticVideo::new(size, size, 4, 7);
+    let image = Arc::new(video.frame(0).binned(bins));
+    let (ih, report) = queue.compute(&image, bins)?;
+    println!("image           : {size}x{size}, {bins} bins in {} tasks of {group}", report.tasks);
+    println!("workers         : {workers}");
+    println!("tensor          : {:.1} MB", ih.nbytes() as f64 / 1e6);
+    println!("wall time       : {:.3} s ({:.2} fr/sec)", report.wall.as_secs_f64(), report.fps());
+    println!(
+        "serial estimate : {:.3} s → pool efficiency {:.0}%",
+        report.serial_kernel_time().as_secs_f64(),
+        report.efficiency(workers) * 100.0
+    );
+    println!("tasks per worker: {:?}", report.per_worker);
+    let corner: f32 = (0..bins).map(|b| ih.at(b, size - 1, size - 1)).sum();
+    println!("checksum        : corner mass {corner} (expect {})", size * size);
+    queue.shutdown();
+    Ok(())
+}
+
+fn cmd_figures(dir: &str, args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("figures needs an id (fig7…fig20, eq4, all)"))?;
+    figures::run(dir, which, args.usize("reps", 5)?)
+}

@@ -1,0 +1,322 @@
+//! Artifact manifest: what `python/compile/aot.py` lowered, and how to
+//! pick the right module for a request.
+//!
+//! The manifest is the only contract between the build-time Python layer
+//! and the Rust runtime.  Each entry records the strategy, the true and
+//! padded image geometry (§3.4 padding rule), bin count, tile size and
+//! the I/O signature of the lowered HLO module.
+
+use crate::histogram::types::Strategy;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Dtype of a tensor in an artifact signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    I32,
+    F32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "i32" => Ok(Dtype::I32),
+            "f32" => Ok(Dtype::F32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+/// One input/output tensor of a lowered module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// What kind of graph an artifact holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// image → integral histogram (one of the four strategies)
+    Strategy,
+    /// image → one-hot planes (the Fig. 8 "init" slice)
+    Init,
+    /// (ih, rects) → per-rect histograms (Eq. 2 batched)
+    Query,
+    /// (image, rects) → (ih, histograms) — the fused serving graph
+    Serve,
+}
+
+/// Metadata for one lowered HLO module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub strategy: String,
+    /// True (pre-padding) image dims.
+    pub height: usize,
+    pub width: usize,
+    /// Padded dims the module actually consumes (multiples of tile).
+    pub padded_h: usize,
+    pub padded_w: usize,
+    pub bins: usize,
+    pub tile: usize,
+    pub n_rects: usize,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactMeta {
+    /// Parsed [`Strategy`] if this is a strategy artifact.
+    pub fn strategy_id(&self) -> Option<Strategy> {
+        self.strategy.parse().ok()
+    }
+
+    /// Bytes of the output integral-histogram tensor (what moves D2H).
+    pub fn tensor_bytes(&self) -> usize {
+        self.bins * self.padded_h * self.padded_w * 4
+    }
+
+    fn from_json(v: &Json) -> Result<ArtifactMeta> {
+        let s = |k: &str| -> Result<String> {
+            Ok(v.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest entry missing string '{k}'"))?
+                .to_string())
+        };
+        let n = |k: &str| -> Result<usize> {
+            v.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("missing integer '{k}'"))
+        };
+        let kind = match s("kind")?.as_str() {
+            "strategy" => ArtifactKind::Strategy,
+            "init" => ArtifactKind::Init,
+            "query" => ArtifactKind::Query,
+            "serve" => ArtifactKind::Serve,
+            other => bail!("unknown artifact kind '{other}'"),
+        };
+        let tensors = |k: &str| -> Result<Vec<TensorSpec>> {
+            v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing array '{k}'"))?
+                .iter()
+                .map(|t| {
+                    Ok(TensorSpec {
+                        name: t
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("tensor missing name"))?
+                            .to_string(),
+                        dtype: Dtype::parse(
+                            t.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+                        )?,
+                        shape: t
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("tensor missing shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<_>>()?,
+                    })
+                })
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            name: s("name")?,
+            kind,
+            strategy: s("strategy")?,
+            height: n("height")?,
+            width: n("width")?,
+            padded_h: n("padded_h")?,
+            padded_w: n("padded_w")?,
+            bins: n("bins")?,
+            tile: n("tile")?,
+            n_rects: n("n_rects").unwrap_or(0),
+            file: s("file")?,
+            inputs: tensors("inputs")?,
+            outputs: tensors("outputs")?,
+        })
+    }
+}
+
+/// The full manifest: every artifact in an `artifacts/` directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub profile: String,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactManifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<ArtifactManifest> {
+        let root = json::parse(text).context("manifest.json is not valid JSON")?;
+        let profile = root
+            .get("profile")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let artifacts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactManifest { dir, profile, artifacts })
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Find the artifact for an exact (strategy, true-h, true-w, bins)
+    /// request, preferring the largest tile (the tuned configuration).
+    pub fn find_strategy(
+        &self,
+        strategy: Strategy,
+        h: usize,
+        w: usize,
+        bins: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Strategy
+                    && a.strategy == strategy.artifact_prefix()
+                    && a.height == h
+                    && a.width == w
+                    && a.bins == bins
+            })
+            .max_by_key(|a| a.tile)
+    }
+
+    /// Find a strategy artifact with an explicit tile size (tuning sweeps).
+    pub fn find_strategy_tile(
+        &self,
+        strategy: Strategy,
+        h: usize,
+        w: usize,
+        bins: usize,
+        tile: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.kind == ArtifactKind::Strategy
+                && a.strategy == strategy.artifact_prefix()
+                && a.height == h
+                && a.width == w
+                && a.bins == bins
+                && a.tile == tile
+        })
+    }
+
+    /// All strategy artifacts, sorted by (strategy, pixels, bins).
+    pub fn strategies(&self) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<_> =
+            self.artifacts.iter().filter(|a| a.kind == ArtifactKind::Strategy).collect();
+        v.sort_by_key(|a| (a.strategy.clone(), a.height * a.width, a.bins, a.tile));
+        v
+    }
+
+    pub fn find_named(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn find_kind(&self, kind: ArtifactKind) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "profile": "quick",
+      "artifacts": [
+        {"name": "wf_tis_64x64_b8_t32", "kind": "strategy", "strategy": "wf_tis",
+         "height": 64, "width": 64, "padded_h": 64, "padded_w": 64,
+         "bins": 8, "tile": 32, "n_rects": 0, "file": "wf_tis_64x64_b8_t32.hlo.txt",
+         "inputs": [{"name": "image", "dtype": "i32", "shape": [64, 64]}],
+         "outputs": [{"name": "ih", "dtype": "f32", "shape": [8, 64, 64]}]},
+        {"name": "wf_tis_64x64_b8_t16", "kind": "strategy", "strategy": "wf_tis",
+         "height": 64, "width": 64, "padded_h": 64, "padded_w": 64,
+         "bins": 8, "tile": 16, "n_rects": 0, "file": "wf_tis_64x64_b8_t16.hlo.txt",
+         "inputs": [{"name": "image", "dtype": "i32", "shape": [64, 64]}],
+         "outputs": [{"name": "ih", "dtype": "f32", "shape": [8, 64, 64]}]},
+        {"name": "serve_64", "kind": "serve", "strategy": "wf_tis_with_query",
+         "height": 64, "width": 64, "padded_h": 64, "padded_w": 64,
+         "bins": 8, "tile": 32, "n_rects": 16, "file": "serve_64.hlo.txt",
+         "inputs": [{"name": "image", "dtype": "i32", "shape": [64, 64]},
+                    {"name": "rects", "dtype": "i32", "shape": [16, 4]}],
+         "outputs": [{"name": "ih", "dtype": "f32", "shape": [8, 64, 64]},
+                     {"name": "hists", "dtype": "f32", "shape": [16, 8]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.profile, "quick");
+        assert_eq!(m.artifacts.len(), 3);
+        let a = &m.artifacts[0];
+        assert_eq!(a.kind, ArtifactKind::Strategy);
+        assert_eq!(a.strategy_id(), Some(Strategy::WfTis));
+        assert_eq!(a.inputs[0].dtype, Dtype::I32);
+        assert_eq!(a.outputs[0].elements(), 8 * 64 * 64);
+        assert_eq!(a.tensor_bytes(), 8 * 64 * 64 * 4);
+    }
+
+    #[test]
+    fn find_prefers_larger_tile() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let a = m.find_strategy(Strategy::WfTis, 64, 64, 8).unwrap();
+        assert_eq!(a.tile, 32);
+        let b = m.find_strategy_tile(Strategy::WfTis, 64, 64, 8, 16).unwrap();
+        assert_eq!(b.tile, 16);
+        assert!(m.find_strategy(Strategy::CwB, 64, 64, 8).is_none());
+    }
+
+    #[test]
+    fn find_kind_and_named() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.find_kind(ArtifactKind::Serve).len(), 1);
+        assert!(m.find_named("serve_64").is_some());
+        assert!(m.find_named("nope").is_none());
+        assert_eq!(m.path_of(&m.artifacts[2]), PathBuf::from("/tmp/a/serve_64.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        assert!(ArtifactManifest::parse("{}", PathBuf::new()).is_err());
+        assert!(ArtifactManifest::parse("not json", PathBuf::new()).is_err());
+        let missing = r#"{"artifacts": [{"name": "x"}]}"#;
+        assert!(ArtifactManifest::parse(missing, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn strategies_sorted() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let s = m.strategies();
+        assert_eq!(s.len(), 2);
+        assert!(s[0].tile <= s[1].tile);
+    }
+}

@@ -1,0 +1,193 @@
+//! `HistogramExecutor` — one compiled PJRT executable bound to one
+//! artifact, with typed entry points for the coordinator.
+//!
+//! Follows the `/opt/xla-example/load_hlo` pattern: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  The executor owns its `PjRtClient`;
+//! clients are cheap on CPU and per-thread ownership sidesteps the
+//! crate's non-`Sync` FFI handles (each pipeline lane / pool worker
+//! builds its own executors, mirroring one CUDA context per device).
+
+use crate::histogram::region::Rect;
+use crate::histogram::types::{BinnedImage, IntegralHistogram};
+use crate::runtime::artifact::{ArtifactKind, ArtifactManifest, ArtifactMeta};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// A compiled artifact ready to execute.
+pub struct HistogramExecutor {
+    meta: ArtifactMeta,
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl HistogramExecutor {
+    /// Compile `meta`'s HLO file on a fresh CPU PJRT client.
+    pub fn compile(manifest: &ArtifactManifest, meta: &ArtifactMeta) -> Result<HistogramExecutor> {
+        Self::compile_path(&manifest.path_of(meta), meta.clone())
+    }
+
+    /// Compile from an explicit path (tests, ad-hoc modules).
+    pub fn compile_path(path: &Path, meta: ArtifactMeta) -> Result<HistogramExecutor> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compile {}", meta.name))?;
+        Ok(HistogramExecutor { meta, client, exe })
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compute the integral histogram of `img` (strategy/init artifacts).
+    ///
+    /// The image is padded to the artifact's padded geometry (§3.4) and
+    /// the result cropped back to the true extent.  Returns the tensor
+    /// plus the pure on-device execution time (the "kernel time" every
+    /// figure reports, excluding modeled transfers).
+    pub fn compute_timed(&self, img: &BinnedImage) -> Result<(IntegralHistogram, Duration)> {
+        if !matches!(self.meta.kind, ArtifactKind::Strategy | ArtifactKind::Init) {
+            bail!("artifact {} is not a strategy/init module", self.meta.name);
+        }
+        let lit = self.image_literal(img)?;
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let kernel_time = t0.elapsed();
+        let out = result.to_tuple1().context("unwrap 1-tuple output")?;
+        let ih = self.literal_to_ih(&out)?;
+        Ok((ih, kernel_time))
+    }
+
+    /// [`Self::compute_timed`] without the timing.
+    pub fn compute(&self, img: &BinnedImage) -> Result<IntegralHistogram> {
+        Ok(self.compute_timed(img)?.0)
+    }
+
+    /// Fused serve graph: integral histogram + batched region queries.
+    /// `rects` is truncated/padded to the artifact's fixed batch size
+    /// (padding repeats the last rect; callers slice the result).
+    pub fn compute_with_queries(
+        &self,
+        img: &BinnedImage,
+        rects: &[Rect],
+    ) -> Result<(IntegralHistogram, Vec<Vec<f32>>, Duration)> {
+        if self.meta.kind != ArtifactKind::Serve {
+            bail!("artifact {} is not a serve module", self.meta.name);
+        }
+        if rects.is_empty() {
+            bail!("serve call needs at least one rect");
+        }
+        let n = self.meta.n_rects;
+        let img_lit = self.image_literal(img)?;
+        let mut quad = Vec::with_capacity(n * 4);
+        for i in 0..n {
+            let r = rects[i.min(rects.len() - 1)];
+            quad.extend_from_slice(&r.encode());
+        }
+        let rect_lit = xla::Literal::vec1(quad.as_slice()).reshape(&[n as i64, 4])?;
+        let t0 = Instant::now();
+        let result =
+            self.exe.execute::<xla::Literal>(&[img_lit, rect_lit])?[0][0].to_literal_sync()?;
+        let kernel_time = t0.elapsed();
+        let (ih_lit, hists_lit) = result.to_tuple2().context("unwrap 2-tuple output")?;
+        let ih = self.literal_to_ih(&ih_lit)?;
+        let flat = hists_lit.to_vec::<f32>()?;
+        let bins = self.meta.bins;
+        let hists = flat.chunks(bins).take(rects.len()).map(|c| c.to_vec()).collect();
+        Ok((ih, hists, kernel_time))
+    }
+
+    /// Batched Eq. 2 lookups against a precomputed tensor (query artifacts).
+    pub fn query(&self, ih: &IntegralHistogram, rects: &[Rect]) -> Result<Vec<Vec<f32>>> {
+        if self.meta.kind != ArtifactKind::Query {
+            bail!("artifact {} is not a query module", self.meta.name);
+        }
+        if rects.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = self.meta.n_rects;
+        let ih_lit = xla::Literal::vec1(ih.data.as_slice()).reshape(&[
+            self.meta.bins as i64,
+            self.meta.padded_h as i64,
+            self.meta.padded_w as i64,
+        ])?;
+        let mut quad = Vec::with_capacity(n * 4);
+        for i in 0..n {
+            let r = rects[i.min(rects.len() - 1)];
+            quad.extend_from_slice(&r.encode());
+        }
+        let rect_lit = xla::Literal::vec1(quad.as_slice()).reshape(&[n as i64, 4])?;
+        let result =
+            self.exe.execute::<xla::Literal>(&[ih_lit, rect_lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let flat = out.to_vec::<f32>()?;
+        Ok(flat.chunks(self.meta.bins).take(rects.len()).map(|c| c.to_vec()).collect())
+    }
+
+    /// Build the padded image literal for this artifact.
+    fn image_literal(&self, img: &BinnedImage) -> Result<xla::Literal> {
+        if img.h != self.meta.height || img.w != self.meta.width {
+            bail!(
+                "image {}x{} does not match artifact {} ({}x{})",
+                img.h,
+                img.w,
+                self.meta.name,
+                self.meta.height,
+                self.meta.width
+            );
+        }
+        let padded;
+        let data: &[i32] = if (img.h, img.w) == (self.meta.padded_h, self.meta.padded_w) {
+            &img.data
+        } else {
+            padded = pad_image(img, self.meta.padded_h, self.meta.padded_w);
+            &padded
+        };
+        Ok(xla::Literal::vec1(data)
+            .reshape(&[self.meta.padded_h as i64, self.meta.padded_w as i64])?)
+    }
+
+    /// Convert the output literal into a cropped [`IntegralHistogram`].
+    fn literal_to_ih(&self, lit: &xla::Literal) -> Result<IntegralHistogram> {
+        let flat = lit.to_vec::<f32>()?;
+        let full = IntegralHistogram::from_raw(
+            self.meta.bins,
+            self.meta.padded_h,
+            self.meta.padded_w,
+            flat,
+        );
+        Ok(if (self.meta.height, self.meta.width) == (self.meta.padded_h, self.meta.padded_w) {
+            full
+        } else {
+            full.crop(self.meta.height, self.meta.width)
+        })
+    }
+}
+
+/// Pad an image buffer to `ph×pw` with bin −1 (counts nowhere).
+fn pad_image(img: &BinnedImage, ph: usize, pw: usize) -> Vec<i32> {
+    let mut out = vec![-1i32; ph * pw];
+    for r in 0..img.h {
+        out[r * pw..r * pw + img.w].copy_from_slice(&img.data[r * img.w..(r + 1) * img.w]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_image_layout() {
+        let img = BinnedImage::new(2, 3, 4, vec![1, 2, 3, 0, 2, 1]);
+        let p = pad_image(&img, 3, 4);
+        assert_eq!(p, vec![1, 2, 3, -1, 0, 2, 1, -1, -1, -1, -1, -1]);
+    }
+}

@@ -1,0 +1,186 @@
+//! Device pool — the multi-GPU substitute (§4.6, Fig. 18).
+//!
+//! The paper's superserver runs 4 GTX 480s; the CPU picks bin-group
+//! tasks off a queue and dispatches each to whichever GPU is free.
+//! Here every worker thread owns its own PJRT CPU client and executor
+//! cache (one CUDA context per device, in CUDA terms) and pulls jobs
+//! from a shared queue — the same pull-based scheme, which also
+//! "handles the imbalanced computation capability of heterogeneous
+//! systems" exactly as the paper notes: faster workers simply pull more
+//! tasks.
+//!
+//! Bin grouping trick: all bin-group jobs reuse ONE lowered artifact
+//! with `group` bins.  A job for bins `[offset, offset+group)` shifts
+//! the image values by `-offset` before execution; values falling
+//! outside `[0, group)` count in no bin, so the artifact computes
+//! exactly the requested plane slice.  This is how the paper tiles the
+//! 3-D tensor along the bin direction without recompiling per group.
+
+use crate::histogram::types::{BinnedImage, IntegralHistogram};
+use crate::runtime::artifact::ArtifactManifest;
+use crate::runtime::client::HistogramExecutor;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One bin-group job against a shared frame.
+#[derive(Clone)]
+pub struct Job {
+    pub job_id: usize,
+    /// Artifact to run (must be a strategy artifact of `group` bins).
+    pub artifact: String,
+    /// First bin of this group.
+    pub bin_offset: usize,
+    /// Shared input frame (values are FULL-range bin indices).
+    pub image: Arc<BinnedImage>,
+}
+
+/// Result of one job.
+pub struct JobOutput {
+    pub job_id: usize,
+    pub bin_offset: usize,
+    pub worker: usize,
+    /// Partial tensor: planes for bins `[bin_offset, bin_offset+group)`.
+    pub partial: IntegralHistogram,
+    pub kernel_time: Duration,
+}
+
+/// A pool of `n` PJRT workers pulling from a shared job queue.
+pub struct DevicePool {
+    tx: Option<mpsc::Sender<Job>>,
+    rx: mpsc::Receiver<Result<JobOutput>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl DevicePool {
+    /// Spawn `workers` threads; each compiles artifacts lazily from
+    /// `manifest` on first use and caches the executable.
+    pub fn new(manifest: Arc<ArtifactManifest>, workers: usize) -> DevicePool {
+        assert!(workers >= 1, "need at least one worker");
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (out_tx, out_rx) = mpsc::channel();
+        let mut handles = Vec::with_capacity(workers);
+        for worker_id in 0..workers {
+            let job_rx = Arc::clone(&job_rx);
+            let out_tx = out_tx.clone();
+            let manifest = Arc::clone(&manifest);
+            handles.push(std::thread::spawn(move || {
+                let mut cache: HashMap<String, HistogramExecutor> = HashMap::new();
+                loop {
+                    // Pull the next task (the Fig. 18 task queue).
+                    let job = match job_rx.lock().expect("queue lock").recv() {
+                        Ok(j) => j,
+                        Err(_) => break, // queue closed: drain and exit
+                    };
+                    let out = run_job(&manifest, &mut cache, worker_id, job);
+                    if out_tx.send(out).is_err() {
+                        break; // pool dropped
+                    }
+                }
+            }));
+        }
+        DevicePool { tx: Some(job_tx), rx: out_rx, handles, workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Enqueue a job (non-blocking).
+    pub fn submit(&self, job: Job) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(job)
+            .map_err(|_| anyhow::anyhow!("all workers exited"))
+    }
+
+    /// Receive the next completed job (blocking).
+    pub fn recv(&self) -> Result<JobOutput> {
+        self.rx.recv().context("worker pool hung up")?
+    }
+
+    /// Compute a full integral histogram by splitting `total_bins` into
+    /// groups of `group` bins and fanning them across the pool.  Returns
+    /// the assembled tensor plus the per-job kernel times.
+    pub fn compute_grouped(
+        &self,
+        artifact: &str,
+        image: &Arc<BinnedImage>,
+        total_bins: usize,
+        group: usize,
+    ) -> Result<(IntegralHistogram, Vec<Duration>)> {
+        assert!(group >= 1 && total_bins % group == 0, "bins must split into equal groups");
+        let n_jobs = total_bins / group;
+        for j in 0..n_jobs {
+            self.submit(Job {
+                job_id: j,
+                artifact: artifact.to_string(),
+                bin_offset: j * group,
+                image: Arc::clone(image),
+            })?;
+        }
+        let mut full = IntegralHistogram::zeros(total_bins, image.h, image.w);
+        let plane = image.h * image.w;
+        let mut times = Vec::with_capacity(n_jobs);
+        for _ in 0..n_jobs {
+            let out = self.recv()?;
+            let dst = out.bin_offset * plane;
+            full.data[dst..dst + out.partial.data.len()].copy_from_slice(&out.partial.data);
+            times.push(out.kernel_time);
+        }
+        Ok((full, times))
+    }
+
+    /// Close the queue and join all workers.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close the channel
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for DevicePool {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_job(
+    manifest: &ArtifactManifest,
+    cache: &mut HashMap<String, HistogramExecutor>,
+    worker: usize,
+    job: Job,
+) -> Result<JobOutput> {
+    if !cache.contains_key(&job.artifact) {
+        let meta = manifest
+            .find_named(&job.artifact)
+            .with_context(|| format!("artifact '{}' not in manifest", job.artifact))?;
+        cache.insert(job.artifact.clone(), HistogramExecutor::compile(manifest, meta)?);
+    }
+    let exe = &cache[&job.artifact];
+    let group = exe.meta().bins;
+    // Shift values so this group's bins land in [0, group).
+    let shifted = if job.bin_offset == 0 {
+        (*job.image).clone()
+    } else {
+        let off = job.bin_offset as i32;
+        BinnedImage {
+            h: job.image.h,
+            w: job.image.w,
+            bins: group,
+            data: job.image.data.iter().map(|&v| if v >= off { v - off } else { -1 }).collect(),
+        }
+    };
+    let shifted = BinnedImage { bins: group, ..shifted };
+    let (partial, kernel_time) = exe.compute_timed(&shifted)?;
+    Ok(JobOutput { job_id: job.job_id, bin_offset: job.bin_offset, worker, partial, kernel_time })
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! The request path is pure Rust: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Python produced the `artifacts/*.hlo.txt` files once at build time
+//! (`make artifacts`); nothing here shells out or interprets anything.
+//!
+//! * [`artifact`] — the manifest (`artifacts/manifest.json`) describing
+//!   every lowered module's strategy, geometry and I/O signature.
+//! * [`client`] — [`client::HistogramExecutor`]: one compiled executable
+//!   bound to one artifact, with typed image→tensor entry points.
+//! * [`device_pool`] — N worker threads each owning a PJRT client
+//!   (the paper's multi-GPU substitute), consumed by the coordinator's
+//!   bin task queue.
+
+pub mod artifact;
+pub mod client;
+pub mod device_pool;

@@ -1,0 +1,162 @@
+//! Kernel-launch overhead and occupancy models.
+//!
+//! Two pieces of the paper's analysis depend on GPU execution mechanics
+//! that a CPU-PJRT substrate cannot observe directly:
+//!
+//! 1. **Launch overhead** (§3.3): CW-B issues `b·h + b + b·w` tiny kernel
+//!    launches; at ~5 µs each this alone explains its 30×+ deficit.  The
+//!    figure drivers add `launch_overhead(strategy)` to the measured
+//!    kernel time so the CW-B bar lands where the paper's does.
+//! 2. **Occupancy** (§4.2.1, Fig. 9): the CUDA-occupancy-calculator
+//!    arithmetic — how many thread blocks fit an SM given threads,
+//!    registers and shared memory per block — reproduced so the Fig. 9
+//!    occupancy-vs-block-size series can be regenerated.
+
+use crate::histogram::types::Strategy;
+use std::time::Duration;
+
+/// Per-launch overhead of a CUDA kernel (driver + queueing), a widely
+/// measured ~5 µs on the Kepler/Maxwell generation.
+pub const LAUNCH_OVERHEAD: Duration = Duration::from_micros(5);
+
+/// Total launch overhead for a strategy on an `h×w`, `bins`-bin frame.
+pub fn launch_overhead(strategy: Strategy, h: usize, w: usize, bins: usize, tile: usize) -> Duration {
+    LAUNCH_OVERHEAD * strategy.kernel_launches(h, w, bins, tile) as u32
+}
+
+/// Static resources of one streaming multiprocessor (Tesla K40c, the
+/// card used for the Fig. 9 tuning experiment).
+#[derive(Debug, Clone, Copy)]
+pub struct SmResources {
+    pub max_threads: usize,
+    pub max_blocks: usize,
+    pub shared_mem_bytes: usize,
+    pub registers: usize,
+    pub warp_size: usize,
+}
+
+impl SmResources {
+    /// Kepler GK110b SMX (K40c).
+    pub fn kepler_smx() -> SmResources {
+        SmResources {
+            max_threads: 2048,
+            max_blocks: 16,
+            shared_mem_bytes: 48 * 1024,
+            registers: 65536,
+            warp_size: 32,
+        }
+    }
+
+    /// Maxwell SMM (Titan X).
+    pub fn maxwell_smm() -> SmResources {
+        SmResources {
+            max_threads: 2048,
+            max_blocks: 32,
+            shared_mem_bytes: 96 * 1024,
+            registers: 65536,
+            warp_size: 32,
+        }
+    }
+}
+
+/// Resource demand of one thread block of a kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockDemand {
+    pub threads: usize,
+    pub shared_mem_bytes: usize,
+    pub registers_per_thread: usize,
+}
+
+impl BlockDemand {
+    /// The WF-TiS kernel with a given block size and tile edge: shared
+    /// memory holds the f32 tile plus a carry column.
+    pub fn wf_tis(threads: usize, tile: usize) -> BlockDemand {
+        BlockDemand {
+            threads,
+            shared_mem_bytes: (tile * tile + tile) * 4,
+            registers_per_thread: 24,
+        }
+    }
+}
+
+/// CUDA-occupancy-calculator arithmetic: blocks resident per SM and the
+/// resulting occupancy fraction (active warps / max warps).
+pub fn occupancy(sm: SmResources, block: BlockDemand) -> (usize, f64) {
+    if block.threads == 0 || block.threads > sm.max_threads {
+        return (0, 0.0);
+    }
+    let by_threads = sm.max_threads / block.threads;
+    let by_blocks = sm.max_blocks;
+    let by_shmem = if block.shared_mem_bytes == 0 {
+        usize::MAX
+    } else {
+        sm.shared_mem_bytes / block.shared_mem_bytes
+    };
+    let by_regs = if block.registers_per_thread == 0 {
+        usize::MAX
+    } else {
+        sm.registers / (block.registers_per_thread * block.threads)
+    };
+    let resident = by_threads.min(by_blocks).min(by_shmem).min(by_regs);
+    let warps = (resident * block.threads).div_ceil(sm.warp_size);
+    let max_warps = sm.max_threads / sm.warp_size;
+    (resident, (warps.min(max_warps)) as f64 / max_warps as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cwb_overhead_dominates() {
+        // 512×512×32: 33 824 launches × 5 µs ≈ 169 ms of pure overhead —
+        // the §3.3 "too many kernel invocations" effect.
+        let o = launch_overhead(Strategy::CwB, 512, 512, 32, 64);
+        assert!(o.as_millis() > 100, "got {o:?}");
+        let w = launch_overhead(Strategy::WfTis, 512, 512, 32, 64);
+        assert!(w.as_micros() < 200);
+    }
+
+    #[test]
+    fn occupancy_full_at_512_threads() {
+        // Fig. 9: both 512- and 1024-thread configs show 100% occupancy.
+        let sm = SmResources::kepler_smx();
+        let (_, occ512) = occupancy(sm, BlockDemand { threads: 512, shared_mem_bytes: 8 * 1024, registers_per_thread: 24 });
+        let (_, occ1024) = occupancy(sm, BlockDemand { threads: 1024, shared_mem_bytes: 8 * 1024, registers_per_thread: 24 });
+        assert_eq!(occ512, 1.0);
+        assert_eq!(occ1024, 1.0);
+    }
+
+    #[test]
+    fn occupancy_limited_by_shared_memory() {
+        let sm = SmResources::kepler_smx();
+        // a block demanding all 48 KB of shared memory → 1 resident block
+        let (resident, occ) = occupancy(sm, BlockDemand { threads: 128, shared_mem_bytes: 48 * 1024, registers_per_thread: 16 });
+        assert_eq!(resident, 1);
+        assert!(occ < 0.1);
+    }
+
+    #[test]
+    fn occupancy_zero_for_oversized_block() {
+        let sm = SmResources::kepler_smx();
+        let (r, o) = occupancy(sm, BlockDemand { threads: 4096, shared_mem_bytes: 0, registers_per_thread: 0 });
+        assert_eq!((r, o), (0, 0.0));
+    }
+
+    #[test]
+    fn wf_tis_block_demand_tile64() {
+        let d = BlockDemand::wf_tis(512, 64);
+        assert_eq!(d.shared_mem_bytes, (64 * 64 + 64) * 4);
+        // 64×64 tile fits the Kepler SMX at least twice
+        let (resident, _) = occupancy(SmResources::kepler_smx(), d);
+        assert!(resident >= 2);
+    }
+
+    #[test]
+    fn maxwell_has_more_shared_memory() {
+        let d = BlockDemand::wf_tis(256, 64);
+        let (rk, _) = occupancy(SmResources::kepler_smx(), d);
+        let (rm, _) = occupancy(SmResources::maxwell_smm(), d);
+        assert!(rm >= rk);
+    }
+}

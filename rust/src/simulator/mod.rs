@@ -1,0 +1,15 @@
+//! Hardware substitution models (see DESIGN.md §4).
+//!
+//! This environment has no NVIDIA GPU, so the two hardware-bound
+//! quantities in the paper's evaluation are modeled explicitly:
+//!
+//! * [`pcie`] — CPU↔GPU transfer times over PCI-Express, a calibrated
+//!   latency + bandwidth model per card generation.  Used for the
+//!   compute-bound vs transfer-bound analysis (Figs. 11, 13, 15) and the
+//!   dual-buffering overlap accounting (Fig. 14).
+//! * [`gpu_model`] — kernel-launch overhead and occupancy models: the
+//!   per-launch cost that buries CW-B (§3.3) and the occupancy
+//!   calculator driving the Fig. 9 tuning discussion.
+
+pub mod gpu_model;
+pub mod pcie;

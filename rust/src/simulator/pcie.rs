@@ -1,0 +1,188 @@
+//! PCI-Express transfer-time model.
+//!
+//! `t(bytes) = α + bytes / β` — fixed DMA setup latency plus sustained
+//! bandwidth.  The α/β constants per card are calibrated so the model
+//! reproduces the paper's measured transfer times (e.g. Fig. 11: a
+//! 512×512×32 tensor ≈ 32 MB moves in ~2.9 ms on the Titan X's PCIe-3
+//! x16 ≈ 11.5 GB/s effective).  The model also answers the paper's two
+//! structural questions:
+//!
+//! * is a configuration compute-bound or transfer-bound (§4.3)?
+//! * what frame rate does dual-buffering yield, where transfers of
+//!   frame i overlap the kernel of frame i+1 (Fig. 14)?
+
+use std::time::Duration;
+
+/// GPU cards used in the paper's evaluation (§4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Card {
+    /// GeForce GTX Titan X (Maxwell, PCIe 3.0 x16).
+    TitanX,
+    /// Tesla K40c (Kepler, PCIe 3.0 x16).
+    K40c,
+    /// Tesla C2070 (Fermi, PCIe 2.0 x16).
+    C2070,
+    /// GeForce GTX 480 (Fermi, PCIe 2.0 x16).
+    Gtx480,
+}
+
+impl Card {
+    pub const ALL: [Card; 4] = [Card::TitanX, Card::K40c, Card::C2070, Card::Gtx480];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Card::TitanX => "GTX Titan X",
+            Card::K40c => "Tesla K40c",
+            Card::C2070 => "Tesla C2070",
+            Card::Gtx480 => "GTX 480",
+        }
+    }
+}
+
+/// Linear transfer-time model for one direction of the PCIe link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PcieModel {
+    /// Fixed per-transfer latency (DMA setup, driver), seconds.
+    pub alpha_s: f64,
+    /// Sustained bandwidth, bytes/second.
+    pub beta_bps: f64,
+}
+
+impl PcieModel {
+    /// Calibrated model per card generation.  Effective (not theoretical)
+    /// bandwidths: PCIe-3 x16 ≈ 11.5 GB/s, PCIe-2 x16 ≈ 5.8 GB/s.
+    pub fn for_card(card: Card) -> PcieModel {
+        match card {
+            Card::TitanX => PcieModel { alpha_s: 8e-6, beta_bps: 11.5e9 },
+            Card::K40c => PcieModel { alpha_s: 10e-6, beta_bps: 10.5e9 },
+            Card::C2070 => PcieModel { alpha_s: 12e-6, beta_bps: 5.8e9 },
+            Card::Gtx480 => PcieModel { alpha_s: 12e-6, beta_bps: 5.6e9 },
+        }
+    }
+
+    /// Transfer time for `bytes` in one direction.
+    pub fn transfer_time(&self, bytes: usize) -> Duration {
+        Duration::from_secs_f64(self.alpha_s + bytes as f64 / self.beta_bps)
+    }
+
+    /// H2D time for the image upload of an `h×w` i32 image.
+    pub fn image_upload(&self, h: usize, w: usize) -> Duration {
+        self.transfer_time(h * w * 4)
+    }
+
+    /// D2H time for the `b×h×w` f32 integral histogram download — the
+    /// dominant transfer (the tensor is `bins×` larger than the image).
+    pub fn tensor_download(&self, bins: usize, h: usize, w: usize) -> Duration {
+        self.transfer_time(bins * h * w * 4)
+    }
+}
+
+/// Whether a configuration is bound by kernel compute or by transfers
+/// (§4.3), and the frame rate each regime implies with dual-buffering
+/// (Fig. 14: rate = 1 / max(kernel, transfer)).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameRateModel {
+    pub kernel: Duration,
+    pub transfer: Duration,
+}
+
+impl FrameRateModel {
+    pub fn new(kernel: Duration, transfer: Duration) -> Self {
+        FrameRateModel { kernel, transfer }
+    }
+
+    /// From a card model plus measured kernel time: transfer = image up
+    /// + tensor down for one frame.
+    pub fn for_frame(
+        model: &PcieModel,
+        kernel: Duration,
+        bins: usize,
+        h: usize,
+        w: usize,
+    ) -> Self {
+        let transfer = model.image_upload(h, w) + model.tensor_download(bins, h, w);
+        FrameRateModel { kernel, transfer }
+    }
+
+    pub fn is_transfer_bound(&self) -> bool {
+        self.transfer > self.kernel
+    }
+
+    /// Frames/second with dual-buffering (compute/copy fully overlapped).
+    pub fn fps_dual_buffered(&self) -> f64 {
+        1.0 / self.kernel.max(self.transfer).as_secs_f64()
+    }
+
+    /// Frames/second without overlap (serial copy → kernel → copy).
+    pub fn fps_serial(&self) -> f64 {
+        1.0 / (self.kernel + self.transfer).as_secs_f64()
+    }
+
+    /// The dual-buffering speedup factor (→ 2.0 when kernel ≈ transfer,
+    /// → 1.0 when one side dominates — exactly the Fig. 13 trend).
+    pub fn dual_buffer_speedup(&self) -> f64 {
+        self.fps_dual_buffered() / self.fps_serial()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_is_affine() {
+        let m = PcieModel { alpha_s: 1e-5, beta_bps: 1e9 };
+        let t0 = m.transfer_time(0).as_secs_f64();
+        let t1 = m.transfer_time(1_000_000).as_secs_f64();
+        assert!((t0 - 1e-5).abs() < 1e-12);
+        assert!((t1 - (1e-5 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn titanx_512_tensor_close_to_paper() {
+        // 512×512×32 f32 = 32 MiB; Titan X effective ~11.5 GB/s → ~2.9 ms.
+        let m = PcieModel::for_card(Card::TitanX);
+        let t = m.tensor_download(32, 512, 512).as_secs_f64() * 1e3;
+        assert!((2.0..4.0).contains(&t), "got {t} ms");
+    }
+
+    #[test]
+    fn fermi_slower_than_maxwell() {
+        let a = PcieModel::for_card(Card::TitanX).tensor_download(32, 512, 512);
+        let b = PcieModel::for_card(Card::Gtx480).tensor_download(32, 512, 512);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn transfer_bound_classification() {
+        let frm = FrameRateModel::new(Duration::from_millis(2), Duration::from_millis(3));
+        assert!(frm.is_transfer_bound());
+        let frm2 = FrameRateModel::new(Duration::from_millis(5), Duration::from_millis(3));
+        assert!(!frm2.is_transfer_bound());
+    }
+
+    #[test]
+    fn dual_buffer_speedup_peaks_at_balance() {
+        // kernel == transfer → 2× (the Fig. 13 16-bin case)
+        let bal = FrameRateModel::new(Duration::from_millis(4), Duration::from_millis(4));
+        assert!((bal.dual_buffer_speedup() - 2.0).abs() < 1e-9);
+        // transfer-dominated → little gain (the Fig. 13 128-bin case)
+        let skew = FrameRateModel::new(Duration::from_millis(1), Duration::from_millis(10));
+        assert!(skew.dual_buffer_speedup() < 1.2);
+    }
+
+    #[test]
+    fn fps_monotone_in_time() {
+        let fast = FrameRateModel::new(Duration::from_millis(2), Duration::from_millis(2));
+        let slow = FrameRateModel::new(Duration::from_millis(8), Duration::from_millis(2));
+        assert!(fast.fps_dual_buffered() > slow.fps_dual_buffered());
+    }
+
+    #[test]
+    fn card_table_complete() {
+        for c in Card::ALL {
+            let m = PcieModel::for_card(c);
+            assert!(m.alpha_s > 0.0 && m.beta_bps > 1e9, "{}", c.name());
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline with a small vendored crate
+//! set (no serde, no rand, no criterion), so the pieces a normal project
+//! would pull from crates.io are implemented here:
+//!
+//! * [`json`] — a strict recursive-descent JSON parser for the artifact
+//!   manifest emitted by `python/compile/aot.py`.
+//! * [`prng`] — a splitmix64/xoshiro256** PRNG for synthetic workloads
+//!   and the property-based tests.
+//! * [`stats`] — timing statistics (median/percentiles/MAD) used by the
+//!   benchmark harness and the figure drivers.
+
+pub mod json;
+pub mod prng;
+pub mod stats;

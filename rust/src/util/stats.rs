@@ -1,0 +1,164 @@
+//! Timing statistics for the benchmark harness and figure drivers.
+//!
+//! The figure drivers report medians (robust against CPU-scheduler noise)
+//! with p10/p90 spread, matching how the paper reports per-kernel times
+//! averaged over repeated runs.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a sample of durations (or any f64 series).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; panics on empty input.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "summary of empty sample");
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let n = sorted.len();
+        Summary {
+            n,
+            mean: sorted.iter().sum::<f64>() / n as f64,
+            median: percentile_sorted(&sorted, 0.5),
+            p10: percentile_sorted(&sorted, 0.10),
+            p90: percentile_sorted(&sorted, 0.90),
+            min: sorted[0],
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q), "percentile q={q} out of range");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Measure a closure: `warmup` discarded calls, then `reps` timed calls.
+/// Returns per-call timings in **milliseconds**.
+pub fn time_ms<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    out
+}
+
+/// One benchmark row: a label plus its timing summary (in ms).
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub label: String,
+    pub summary: Summary,
+}
+
+impl BenchRow {
+    pub fn measure<F: FnMut()>(label: impl Into<String>, warmup: usize, reps: usize, f: F) -> Self {
+        BenchRow { label: label.into(), summary: Summary::of(&time_ms(warmup, reps, f)) }
+    }
+
+    /// Frame rate implied by the median time of one frame, in Hz.
+    pub fn fps(&self) -> f64 {
+        1000.0 / self.summary.median
+    }
+}
+
+/// Render rows as an aligned text table (label, median, p10, p90, fps).
+pub fn render_table(title: &str, rows: &[BenchRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("## {title}\n"));
+    s.push_str(&format!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}\n",
+        "case", "median ms", "p10 ms", "p90 ms", "fps"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<44} {:>10.3} {:>10.3} {:>10.3} {:>10.1}\n",
+            r.label, r.summary.median, r.summary.p10, r.summary.p90, r.fps()
+        ));
+    }
+    s
+}
+
+/// Convenience: duration → milliseconds as f64.
+pub fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::of(&[5.0; 10]);
+        assert_eq!(s.median, 5.0);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.p10, 5.0);
+        assert_eq!(s.p90, 5.0);
+    }
+
+    #[test]
+    fn median_of_even_interpolates() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let samples: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = Summary::of(&samples);
+        assert!(s.min <= s.p10 && s.p10 <= s.median && s.median <= s.p90 && s.p90 <= s.max);
+        assert!((s.p10 - 9.9).abs() < 1e-9);
+        assert!((s.p90 - 89.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn time_ms_counts_reps() {
+        let mut calls = 0;
+        let t = time_ms(2, 5, || calls += 1);
+        assert_eq!(t.len(), 5);
+        assert_eq!(calls, 7);
+    }
+
+    #[test]
+    fn bench_row_fps() {
+        let row = BenchRow { label: "x".into(), summary: Summary::of(&[10.0]) };
+        assert!((row.fps() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_summary_panics() {
+        Summary::of(&[]);
+    }
+}

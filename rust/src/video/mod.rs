@@ -1,0 +1,15 @@
+//! Frame sources for the real-time pipeline.
+//!
+//! * [`synth`] — deterministic synthetic video: textured background plus
+//!   moving objects, the stand-in for the paper's image sequences
+//!   (DESIGN.md §4 substitutions).  Used by every figure driver and by
+//!   the end-to-end examples.
+//! * [`pgm`] — binary PGM (P5) image IO so real frames can be fed
+//!   through the same path.
+//! * [`source`] — the `FrameSource` abstraction the coordinator pulls
+//!   frames from (disk reader or generator), with standard video-format
+//!   presets (VGA/HD/FHD/…, §4.6).
+
+pub mod pgm;
+pub mod source;
+pub mod synth;

@@ -1,0 +1,214 @@
+//! Binary PGM (P5) image IO.
+//!
+//! The minimal real-image on-ramp: the paper's pipeline consumes
+//! grayscale frames from disk (Algorithm 6 step 1); PGM is the simplest
+//! container that real tooling (ImageMagick, ffmpeg) can produce, so a
+//! directory of PGM frames can be streamed through the same pipeline as
+//! the synthetic source.
+
+use crate::video::source::{FrameSource, VideoFrame};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Write a frame as binary PGM (maxval 255).
+pub fn write_pgm(path: &Path, frame: &VideoFrame) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    write!(w, "P5\n{} {}\n255\n", frame.w, frame.h)?;
+    w.write_all(&frame.pixels)?;
+    Ok(())
+}
+
+/// Read a binary PGM (P5, maxval ≤ 255). Comments (`#`) are supported.
+pub fn read_pgm(path: &Path) -> Result<VideoFrame> {
+    let data = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    parse_pgm(&data).with_context(|| format!("parse {}", path.display()))
+}
+
+/// Parse PGM bytes (exposed for tests).
+pub fn parse_pgm(data: &[u8]) -> Result<VideoFrame> {
+    let mut pos = 0usize;
+    let magic = next_token(data, &mut pos)?;
+    if magic != b"P5" {
+        bail!("not a binary PGM (magic {:?})", String::from_utf8_lossy(magic));
+    }
+    let w: usize = parse_int(next_token(data, &mut pos)?)?;
+    let h: usize = parse_int(next_token(data, &mut pos)?)?;
+    let maxval: usize = parse_int(next_token(data, &mut pos)?)?;
+    if maxval == 0 || maxval > 255 {
+        bail!("unsupported maxval {maxval} (only 8-bit PGM)");
+    }
+    // exactly one whitespace byte separates header from raster
+    pos += 1;
+    let need = w * h;
+    if data.len() < pos + need {
+        bail!("truncated raster: need {need} bytes, have {}", data.len().saturating_sub(pos));
+    }
+    Ok(VideoFrame::new(0, h, w, data[pos..pos + need].to_vec()))
+}
+
+fn next_token<'a>(data: &'a [u8], pos: &mut usize) -> Result<&'a [u8]> {
+    // skip whitespace and comment lines
+    loop {
+        while *pos < data.len() && data[*pos].is_ascii_whitespace() {
+            *pos += 1;
+        }
+        if *pos < data.len() && data[*pos] == b'#' {
+            while *pos < data.len() && data[*pos] != b'\n' {
+                *pos += 1;
+            }
+            continue;
+        }
+        break;
+    }
+    if *pos >= data.len() {
+        bail!("unexpected end of header");
+    }
+    let start = *pos;
+    while *pos < data.len() && !data[*pos].is_ascii_whitespace() {
+        *pos += 1;
+    }
+    Ok(&data[start..*pos])
+}
+
+fn parse_int(tok: &[u8]) -> Result<usize> {
+    std::str::from_utf8(tok)?
+        .parse::<usize>()
+        .with_context(|| format!("invalid integer {:?}", String::from_utf8_lossy(tok)))
+}
+
+/// Stream a sorted directory of `.pgm` files as a frame source.
+pub struct PgmDirSource {
+    files: Vec<PathBuf>,
+    next: usize,
+    dims: (usize, usize),
+}
+
+impl PgmDirSource {
+    pub fn open(dir: &Path) -> Result<PgmDirSource> {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("open {}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|e| e == "pgm"))
+            .collect();
+        files.sort();
+        if files.is_empty() {
+            bail!("no .pgm files in {}", dir.display());
+        }
+        let first = read_pgm(&files[0])?;
+        Ok(PgmDirSource { files, next: 0, dims: (first.h, first.w) })
+    }
+}
+
+impl FrameSource for PgmDirSource {
+    fn next_frame(&mut self) -> Option<VideoFrame> {
+        while self.next < self.files.len() {
+            let path = &self.files[self.next];
+            self.next += 1;
+            match read_pgm(path) {
+                Ok(mut f) if (f.h, f.w) == self.dims => {
+                    f.seq = self.next - 1;
+                    return Some(f);
+                }
+                _ => continue, // skip unreadable/mismatched frames
+            }
+        }
+        None
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        self.dims
+    }
+
+    fn remaining(&self) -> Option<usize> {
+        Some(self.files.len() - self.next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line_read_smoke(s: &str) -> Vec<String> {
+        use std::io::BufRead;
+        s.as_bytes().lines().map(|l| l.unwrap()).collect()
+    }
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let frame = VideoFrame::new(0, 3, 2, vec![1, 2, 3, 4, 5, 6]);
+        let mut buf = Vec::new();
+        write!(buf, "P5\n{} {}\n255\n", frame.w, frame.h).unwrap();
+        buf.extend_from_slice(&frame.pixels);
+        let parsed = parse_pgm(&buf).unwrap();
+        assert_eq!(parsed.pixels, frame.pixels);
+        assert_eq!((parsed.h, parsed.w), (3, 2));
+    }
+
+    #[test]
+    fn roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join(format!("inthist_pgm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let frame = VideoFrame::new(0, 4, 5, (0..20).collect());
+        let path = dir.join("f0.pgm");
+        write_pgm(&path, &frame).unwrap();
+        let back = read_pgm(&path).unwrap();
+        assert_eq!(back.pixels, frame.pixels);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn comments_are_skipped() {
+        let mut buf = b"P5\n# created by test\n2 2\n# another\n255\n".to_vec();
+        buf.extend_from_slice(&[9, 8, 7, 6]);
+        let f = parse_pgm(&buf).unwrap();
+        assert_eq!(f.pixels, vec![9, 8, 7, 6]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_pgm(b"P2\n2 2\n255\n....").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        assert!(parse_pgm(b"P5\n4 4\n255\nxx").is_err());
+    }
+
+    #[test]
+    fn rejects_16bit() {
+        assert!(parse_pgm(b"P5\n1 1\n65535\n\0\0").is_err());
+    }
+
+    #[test]
+    fn dir_source_streams_sorted() {
+        let dir = std::env::temp_dir().join(format!("inthist_pgmdir_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for i in 0..3 {
+            let f = VideoFrame::new(0, 2, 2, vec![i as u8; 4]);
+            write_pgm(&dir.join(format!("frame_{i:03}.pgm")), &f).unwrap();
+        }
+        let mut src = PgmDirSource::open(&dir).unwrap();
+        assert_eq!(src.remaining(), Some(3));
+        let mut vals = Vec::new();
+        while let Some(f) = src.next_frame() {
+            vals.push(f.pixels[0]);
+        }
+        assert_eq!(vals, vec![0, 1, 2]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_dir_errors() {
+        let dir = std::env::temp_dir().join(format!("inthist_empty_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(PgmDirSource::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bufread_helper() {
+        assert_eq!(line_read_smoke("a\nb"), vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,198 @@
+//! Frame sources and standard video formats.
+
+use crate::histogram::binning::quantize_frame;
+use crate::histogram::types::BinnedImage;
+use std::fmt;
+
+/// Standard image sizes used throughout the paper's evaluation (§4.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Format {
+    /// 256×256 (Fig. 19a smallest point)
+    Sq256,
+    /// 512×512 (the tuning/breakdown size)
+    Sq512,
+    /// 640×480 — "standard image size" of Fig. 20
+    Vga,
+    /// 1024×1024
+    Sq1024,
+    /// 1280×720
+    Hd,
+    /// 1920×1080
+    Fhd,
+    /// 2048×2048
+    Sq2048,
+    /// 4096×3072
+    Hxga,
+    /// 6400×4800
+    Whsxga,
+    /// 8192×8192 — the "64MB image" of §4.6
+    Sq8k,
+}
+
+impl Format {
+    pub const ALL: [Format; 10] = [
+        Format::Sq256,
+        Format::Sq512,
+        Format::Vga,
+        Format::Sq1024,
+        Format::Hd,
+        Format::Fhd,
+        Format::Sq2048,
+        Format::Hxga,
+        Format::Whsxga,
+        Format::Sq8k,
+    ];
+
+    /// (height, width) in pixels.
+    pub fn dims(self) -> (usize, usize) {
+        match self {
+            Format::Sq256 => (256, 256),
+            Format::Sq512 => (512, 512),
+            Format::Vga => (480, 640),
+            Format::Sq1024 => (1024, 1024),
+            Format::Hd => (720, 1280),
+            Format::Fhd => (1080, 1920),
+            Format::Sq2048 => (2048, 2048),
+            Format::Hxga => (3072, 4096),
+            Format::Whsxga => (4800, 6400),
+            Format::Sq8k => (8192, 8192),
+        }
+    }
+
+    pub fn pixels(self) -> usize {
+        let (h, w) = self.dims();
+        h * w
+    }
+
+    /// Integral-histogram tensor size in bytes for `bins` (f32).
+    pub fn tensor_bytes(self, bins: usize) -> usize {
+        self.pixels() * bins * 4
+    }
+}
+
+impl fmt::Display for Format {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let (h, w) = self.dims();
+        write!(f, "{w}x{h}")
+    }
+}
+
+/// One raw video frame (8-bit grayscale).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VideoFrame {
+    pub seq: usize,
+    pub h: usize,
+    pub w: usize,
+    pub pixels: Vec<u8>,
+}
+
+impl VideoFrame {
+    pub fn new(seq: usize, h: usize, w: usize, pixels: Vec<u8>) -> Self {
+        assert_eq!(pixels.len(), h * w, "pixel buffer length mismatch");
+        VideoFrame { seq, h, w, pixels }
+    }
+
+    /// Quantize to `bins` equal-width intensity bins.
+    pub fn binned(&self, bins: usize) -> BinnedImage {
+        quantize_frame(&self.pixels, self.h, self.w, bins)
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.pixels.len()
+    }
+}
+
+/// Anything the coordinator can pull frames from.
+pub trait FrameSource: Send {
+    /// Next frame, or `None` at end of stream.
+    fn next_frame(&mut self) -> Option<VideoFrame>;
+    /// (height, width) of every frame this source yields.
+    fn dims(&self) -> (usize, usize);
+    /// Frames remaining, if known.
+    fn remaining(&self) -> Option<usize>;
+}
+
+/// Wrap a fixed list of frames as a source (tests, replays).
+pub struct VecSource {
+    frames: std::vec::IntoIter<VideoFrame>,
+    dims: (usize, usize),
+    left: usize,
+}
+
+impl VecSource {
+    pub fn new(frames: Vec<VideoFrame>) -> VecSource {
+        assert!(!frames.is_empty(), "empty frame list");
+        let dims = (frames[0].h, frames[0].w);
+        assert!(frames.iter().all(|f| (f.h, f.w) == dims), "inconsistent frame dims");
+        let left = frames.len();
+        VecSource { frames: frames.into_iter(), dims, left }
+    }
+}
+
+impl FrameSource for VecSource {
+    fn next_frame(&mut self) -> Option<VideoFrame> {
+        let f = self.frames.next();
+        if f.is_some() {
+            self.left -= 1;
+        }
+        f
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        self.dims
+    }
+
+    fn remaining(&self) -> Option<usize> {
+        Some(self.left)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_dims_match_paper() {
+        assert_eq!(Format::Vga.dims(), (480, 640));
+        assert_eq!(Format::Hd.dims(), (720, 1280));
+        assert_eq!(Format::Whsxga.dims(), (4800, 6400));
+        // the "64MB image": 8k×8k×1 byte = 64 MiB of pixels
+        assert_eq!(Format::Sq8k.pixels(), 64 * 1024 * 1024);
+    }
+
+    #[test]
+    fn tensor_bytes_32gb_case() {
+        // §4.6: 64MB image × 128 bins × 4B = 32 GiB integral histogram
+        assert_eq!(Format::Sq8k.tensor_bytes(128), 32 * (1usize << 30));
+    }
+
+    #[test]
+    fn frame_binning() {
+        let f = VideoFrame::new(0, 2, 2, vec![0, 255, 128, 7]);
+        let b = f.binned(32);
+        assert_eq!(b.data, vec![0, 31, 16, 0]);
+    }
+
+    #[test]
+    fn vec_source_drains() {
+        let frames = vec![
+            VideoFrame::new(0, 2, 2, vec![0; 4]),
+            VideoFrame::new(1, 2, 2, vec![1; 4]),
+        ];
+        let mut src = VecSource::new(frames);
+        assert_eq!(src.remaining(), Some(2));
+        assert_eq!(src.next_frame().unwrap().seq, 0);
+        assert_eq!(src.remaining(), Some(1));
+        assert_eq!(src.next_frame().unwrap().seq, 1);
+        assert!(src.next_frame().is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn vec_source_rejects_mixed_dims() {
+        VecSource::new(vec![
+            VideoFrame::new(0, 2, 2, vec![0; 4]),
+            VideoFrame::new(1, 2, 3, vec![0; 6]),
+        ]);
+    }
+}

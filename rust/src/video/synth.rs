@@ -1,0 +1,238 @@
+//! Deterministic synthetic video generator.
+//!
+//! Produces grayscale sequences with the statistics video analytics
+//! cares about: a spatially varying textured background (so histograms
+//! differ across regions) plus moving bright objects (so region
+//! histograms change over time and trackers have something to follow).
+//! The generator is seeded and pure — every figure run sees identical
+//! data, and frames are generated on the fly so even 8k×8k sequences
+//! need no disk.
+
+use crate::util::prng::Xoshiro256;
+use crate::video::source::{FrameSource, VideoFrame};
+
+/// A moving object: an axis-aligned bright rectangle with constant
+/// velocity, bouncing off the frame borders.
+#[derive(Debug, Clone, Copy)]
+struct Blob {
+    r: f64,
+    c: f64,
+    dr: f64,
+    dc: f64,
+    height: usize,
+    width: usize,
+    intensity: u8,
+}
+
+/// Deterministic synthetic video source.
+pub struct SyntheticVideo {
+    h: usize,
+    w: usize,
+    frames_left: Option<usize>,
+    next_seq: usize,
+    blobs: Vec<Blob>,
+    /// Static background texture, row-major.
+    background: Vec<u8>,
+}
+
+impl SyntheticVideo {
+    /// `n_blobs` moving objects over a textured background; unlimited
+    /// length (use [`Self::take_frames`] or the pipeline's frame budget).
+    pub fn new(h: usize, w: usize, n_blobs: usize, seed: u64) -> SyntheticVideo {
+        let mut rng = Xoshiro256::new(seed);
+        // Smooth-ish texture: sum of a coarse random grid and fine noise.
+        let cell = 16usize.min(h.max(1)).min(w.max(1));
+        let gh = h.div_ceil(cell) + 1;
+        let gw = w.div_ceil(cell) + 1;
+        let grid: Vec<u8> = (0..gh * gw).map(|_| rng.range(32, 160) as u8).collect();
+        let mut background = vec![0u8; h * w];
+        for r in 0..h {
+            for c in 0..w {
+                let base = grid[(r / cell) * gw + c / cell] as i32;
+                let noise = rng.range(0, 24) as i32 - 12;
+                background[r * w + c] = (base + noise).clamp(0, 255) as u8;
+            }
+        }
+        let blobs = (0..n_blobs)
+            .map(|_| {
+                let height = rng.range(h.max(8) / 8, h.max(9) / 4 + 1).max(2).min(h);
+                let width = rng.range(w.max(8) / 8, w.max(9) / 4 + 1).max(2).min(w);
+                Blob {
+                    r: rng.range(0, (h - height).max(1)) as f64,
+                    c: rng.range(0, (w - width).max(1)) as f64,
+                    dr: rng.f64() * 4.0 - 2.0,
+                    dc: rng.f64() * 4.0 - 2.0,
+                    height,
+                    width,
+                    intensity: rng.range(180, 256) as u8,
+                }
+            })
+            .collect();
+        SyntheticVideo { h, w, frames_left: None, next_seq: 0, blobs, background }
+    }
+
+    /// Limit the stream to `n` frames.
+    pub fn take_frames(mut self, n: usize) -> SyntheticVideo {
+        self.frames_left = Some(n);
+        self
+    }
+
+    /// Render frame `t` without consuming the stream (pure function of
+    /// the initial state — blob positions are closed-form in t).
+    pub fn frame(&self, t: usize) -> VideoFrame {
+        let mut pixels = self.background.clone();
+        for blob in &self.blobs {
+            let (r, c) = blob_position(blob, t, self.h, self.w);
+            for dr in 0..blob.height {
+                let rr = r + dr;
+                if rr >= self.h {
+                    break;
+                }
+                let row = rr * self.w;
+                for dc in 0..blob.width {
+                    let cc = c + dc;
+                    if cc >= self.w {
+                        break;
+                    }
+                    pixels[row + cc] = blob.intensity;
+                }
+            }
+        }
+        VideoFrame::new(t, self.h, self.w, pixels)
+    }
+
+    /// Ground-truth top-left corner of blob `i` at time `t` (for the
+    /// tracker example's accuracy check).
+    pub fn blob_rect(&self, i: usize, t: usize) -> crate::histogram::region::Rect {
+        let b = &self.blobs[i];
+        let (r, c) = blob_position(b, t, self.h, self.w);
+        crate::histogram::region::Rect::with_size(
+            r.min(self.h - 1),
+            c.min(self.w - 1),
+            b.height.min(self.h - r.min(self.h - 1)),
+            b.width.min(self.w - c.min(self.w - 1)),
+        )
+    }
+
+    pub fn n_blobs(&self) -> usize {
+        self.blobs.len()
+    }
+}
+
+/// Reflective (bouncing) position of a blob at time t.
+fn blob_position(b: &Blob, t: usize, h: usize, w: usize) -> (usize, usize) {
+    let max_r = (h - b.height.min(h)) as f64;
+    let max_c = (w - b.width.min(w)) as f64;
+    (reflect(b.r + b.dr * t as f64, max_r), reflect(b.c + b.dc * t as f64, max_c))
+}
+
+/// Reflect x into [0, m] (triangle wave); m == 0 → 0.
+fn reflect(x: f64, m: f64) -> usize {
+    if m <= 0.0 {
+        return 0;
+    }
+    let period = 2.0 * m;
+    let mut y = x.rem_euclid(period);
+    if y > m {
+        y = period - y;
+    }
+    y.round() as usize
+}
+
+impl FrameSource for SyntheticVideo {
+    fn next_frame(&mut self) -> Option<VideoFrame> {
+        if let Some(n) = self.frames_left {
+            if n == 0 {
+                return None;
+            }
+            self.frames_left = Some(n - 1);
+        }
+        let f = self.frame(self.next_seq);
+        self.next_seq += 1;
+        Some(f)
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.h, self.w)
+    }
+
+    fn remaining(&self) -> Option<usize> {
+        self.frames_left
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = SyntheticVideo::new(64, 64, 3, 5).frame(7);
+        let b = SyntheticVideo::new(64, 64, 3, 5).frame(7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = SyntheticVideo::new(64, 64, 3, 5).frame(0);
+        let b = SyntheticVideo::new(64, 64, 3, 6).frame(0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn frames_move() {
+        let v = SyntheticVideo::new(64, 64, 2, 1);
+        assert_ne!(v.frame(0), v.frame(10), "objects should move");
+    }
+
+    #[test]
+    fn stream_respects_budget() {
+        let mut v = SyntheticVideo::new(32, 32, 1, 0).take_frames(3);
+        let mut n = 0;
+        while let Some(f) = v.next_frame() {
+            assert_eq!(f.seq, n);
+            n += 1;
+        }
+        assert_eq!(n, 3);
+    }
+
+    #[test]
+    fn stream_matches_pure_frame() {
+        let mut v = SyntheticVideo::new(32, 32, 2, 9).take_frames(4);
+        let pure = SyntheticVideo::new(32, 32, 2, 9);
+        let mut t = 0;
+        while let Some(f) = v.next_frame() {
+            assert_eq!(f, pure.frame(t));
+            t += 1;
+        }
+    }
+
+    #[test]
+    fn blob_rect_in_bounds() {
+        let v = SyntheticVideo::new(48, 80, 4, 3);
+        for i in 0..v.n_blobs() {
+            for t in [0, 13, 100, 1000] {
+                let r = v.blob_rect(i, t);
+                assert!(r.fits(48, 80), "blob {i} at t={t}: {r:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn reflect_stays_bounded() {
+        for i in 0..500 {
+            let x = i as f64 * 0.73 - 100.0;
+            let y = reflect(x, 10.0);
+            assert!(y <= 10);
+        }
+        assert_eq!(reflect(123.4, 0.0), 0);
+    }
+
+    #[test]
+    fn blob_intensity_visible() {
+        // the brightest pixels of a frame should come from blobs (≥180)
+        let v = SyntheticVideo::new(64, 64, 3, 2);
+        let f = v.frame(0);
+        assert!(f.pixels.iter().copied().max().unwrap() >= 180);
+    }
+}

@@ -1,0 +1,193 @@
+//! Integration tests over the coordinator: dual-buffered pipeline,
+//! bin task queue, and the engine front door.
+
+use inthist::coordinator::pipeline::{Pipeline, PipelineConfig, TransferModel};
+use inthist::coordinator::router::{Engine, EngineConfig};
+use inthist::coordinator::task_queue::{BinTaskQueue, TaskQueueConfig};
+use inthist::histogram::sequential::integral_histogram_seq;
+use inthist::histogram::types::Strategy;
+use inthist::runtime::artifact::ArtifactManifest;
+use inthist::simulator::pcie::{Card, PcieModel};
+use inthist::video::synth::SyntheticVideo;
+use std::sync::{Arc, Mutex};
+
+fn manifest() -> Option<Arc<ArtifactManifest>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactManifest::load(&dir) {
+        Ok(m) => Some(Arc::new(m)),
+        Err(_) => {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+const ART_128: &str = "wf_tis_128x128_b32_t64";
+
+#[test]
+fn pipeline_processes_every_frame_in_order() {
+    let Some(m) = manifest() else { return };
+    if m.find_named(ART_128).is_none() {
+        return;
+    }
+    let frames = 8;
+    let cfg = PipelineConfig::new(ART_128, 32).lanes(2);
+    let src = Box::new(SyntheticVideo::new(128, 128, 2, 1).take_frames(frames));
+    let seen = Mutex::new(Vec::new());
+    let report = Pipeline::new(m, cfg)
+        .run_with(src, |seq, ih| {
+            assert_eq!((ih.bins, ih.h, ih.w), (32, 128, 128));
+            seen.lock().unwrap().push(seq);
+        })
+        .expect("pipeline run");
+    assert_eq!(report.throughput.frames, frames);
+    // dual-buffered stages preserve order (single channel per stage)
+    assert_eq!(*seen.lock().unwrap(), (0..frames).collect::<Vec<_>>());
+    let stats = &report.throughput.stats;
+    assert_eq!(stats.len(), frames);
+    assert!(stats.iter().all(|s| s.kernel.as_nanos() > 0), "kernel times recorded");
+}
+
+#[test]
+fn pipeline_results_match_algorithm1() {
+    let Some(m) = manifest() else { return };
+    if m.find_named(ART_128).is_none() {
+        return;
+    }
+    let video = SyntheticVideo::new(128, 128, 3, 5);
+    let cfg = PipelineConfig::new(ART_128, 32).lanes(2);
+    let src = Box::new(SyntheticVideo::new(128, 128, 3, 5).take_frames(3));
+    let ok = Mutex::new(0usize);
+    Pipeline::new(m, cfg)
+        .run_with(src, |seq, ih| {
+            let expected = integral_histogram_seq(&video.frame(seq).binned(32));
+            assert_eq!(expected.max_abs_diff(&ih), 0.0, "frame {seq}");
+            *ok.lock().unwrap() += 1;
+        })
+        .expect("pipeline run");
+    assert_eq!(*ok.lock().unwrap(), 3);
+}
+
+#[test]
+fn serial_and_dual_agree() {
+    let Some(m) = manifest() else { return };
+    if m.find_named(ART_128).is_none() {
+        return;
+    }
+    for lanes in [1usize, 3] {
+        let cfg = PipelineConfig::new(ART_128, 32).lanes(lanes);
+        let src = Box::new(SyntheticVideo::new(128, 128, 2, 9).take_frames(4));
+        let report = Pipeline::new(Arc::clone(&m), cfg).run(src).unwrap();
+        assert_eq!(report.throughput.frames, 4, "lanes={lanes}");
+        assert_eq!(report.lanes, lanes);
+    }
+}
+
+#[test]
+fn dual_buffering_overlaps_simulated_transfers() {
+    let Some(m) = manifest() else { return };
+    if m.find_named(ART_128).is_none() {
+        return;
+    }
+    // Scale transfers up so they rival the kernel: overlap must beat serial.
+    let model = PcieModel::for_card(Card::Gtx480);
+    let transfer = TransferModel::Simulated { model, scale: 20.0 };
+    let mut fps = Vec::new();
+    for lanes in [1usize, 2] {
+        let cfg = PipelineConfig::new(ART_128, 32).lanes(lanes).transfer(transfer);
+        let src = Box::new(SyntheticVideo::new(128, 128, 2, 1).take_frames(10));
+        let report = Pipeline::new(Arc::clone(&m), cfg).run(src).unwrap();
+        fps.push(report.fps());
+    }
+    assert!(
+        fps[1] > fps[0] * 1.2,
+        "dual-buffering should clearly beat serial when transfer ≈ kernel \
+         (serial {:.2} fps, dual {:.2} fps)",
+        fps[0],
+        fps[1]
+    );
+}
+
+#[test]
+fn task_queue_matches_direct_execution() {
+    let Some(m) = manifest() else { return };
+    let artifact = "wf_tis_512x512_b8_t64";
+    if m.find_named(artifact).is_none() {
+        return;
+    }
+    let video = SyntheticVideo::new(512, 512, 4, 7);
+    let image = Arc::new(video.frame(0).binned(32));
+    let queue = BinTaskQueue::new(
+        Arc::clone(&m),
+        TaskQueueConfig { workers: 2, group: 8, artifact: artifact.into() },
+    )
+    .expect("queue");
+    let (ih, report) = queue.compute(&image, 32).expect("grouped compute");
+    queue.shutdown();
+    assert_eq!(report.tasks, 4);
+    assert_eq!(report.per_worker.iter().sum::<usize>(), 4);
+    let expected = integral_histogram_seq(&image);
+    assert_eq!(expected.max_abs_diff(&ih), 0.0, "grouped result deviates");
+}
+
+#[test]
+fn task_queue_rejects_mismatched_group() {
+    let Some(m) = manifest() else { return };
+    let artifact = "wf_tis_512x512_b8_t64";
+    if m.find_named(artifact).is_none() {
+        return;
+    }
+    assert!(BinTaskQueue::new(
+        Arc::clone(&m),
+        TaskQueueConfig { workers: 1, group: 16, artifact: artifact.into() },
+    )
+    .is_err());
+    let queue = BinTaskQueue::new(
+        Arc::clone(&m),
+        TaskQueueConfig { workers: 1, group: 8, artifact: artifact.into() },
+    )
+    .unwrap();
+    let img = Arc::new(SyntheticVideo::new(512, 512, 1, 0).frame(0).binned(12));
+    assert!(queue.compute(&img, 12).is_err(), "12 bins not divisible by 8");
+    queue.shutdown();
+}
+
+#[test]
+fn engine_serves_frames_and_queries() {
+    let Some(m) = manifest() else { return };
+    if m.find_strategy(Strategy::WfTis, 512, 512, 32).is_none() {
+        return;
+    }
+    let mut engine = Engine::new(Arc::clone(&m), EngineConfig::default());
+    let video = SyntheticVideo::new(512, 512, 4, 7);
+    let frame = video.frame(0);
+    let rects = vec![
+        inthist::histogram::region::Rect::with_size(0, 0, 512, 512),
+        inthist::histogram::region::Rect::with_size(17, 33, 90, 120),
+    ];
+    let (ih, hists) = engine.serve(&frame, &rects).expect("serve");
+    assert_eq!(hists.len(), 2);
+    let expected = integral_histogram_seq(&frame.binned(32));
+    assert_eq!(expected.max_abs_diff(&ih), 0.0);
+    for (i, &r) in rects.iter().enumerate() {
+        let cpu = inthist::histogram::region::region_histogram(&expected, r);
+        assert_eq!(hists[i], cpu, "engine query {i}");
+    }
+    assert!(engine.cached_executors() >= 1);
+}
+
+#[test]
+fn engine_reuses_cached_executors() {
+    let Some(m) = manifest() else { return };
+    if m.find_strategy(Strategy::WfTis, 128, 128, 32).is_none() {
+        return;
+    }
+    let mut cfg = EngineConfig::default();
+    cfg.bins = 32;
+    let mut engine = Engine::new(Arc::clone(&m), cfg);
+    let img = SyntheticVideo::new(128, 128, 2, 2).frame(0).binned(32);
+    engine.compute(Strategy::WfTis, &img).unwrap();
+    let n = engine.cached_executors();
+    engine.compute(Strategy::WfTis, &img).unwrap();
+    assert_eq!(engine.cached_executors(), n, "second call must reuse the executor");
+}

@@ -1,0 +1,195 @@
+//! Property-based randomized tests over the coordinator-level
+//! invariants: every CPU implementation agrees with Algorithm 1 across
+//! random shapes/bins/tiles/threads, Eq. 2 equals brute-force counting,
+//! the binning partition is exact, and the task-queue bin-shift trick
+//! is a bijection.  (The offline build has no proptest; the sweep
+//! driver below plays the same role with an explicit seeded PRNG so
+//! failures print a reproducible case.)
+
+use inthist::histogram::binning::{bin_range, quantize_frame, quantize_u8};
+use inthist::histogram::parallel::{integral_histogram_crossweave, integral_histogram_parallel};
+use inthist::histogram::region::{region_histogram, Rect};
+use inthist::histogram::sequential::{
+    integral_histogram_seq, integral_histogram_seq_imagemajor, integral_histogram_seq_rowsum,
+};
+use inthist::histogram::tiled::{integral_histogram_tiled, integral_histogram_tiled_twopass};
+use inthist::histogram::types::BinnedImage;
+use inthist::util::prng::Xoshiro256;
+
+fn random_image(rng: &mut Xoshiro256, h: usize, w: usize, bins: usize) -> BinnedImage {
+    let mut data = vec![0i32; h * w];
+    rng.fill_bins(&mut data, bins as u32);
+    BinnedImage::new(h, w, bins, data)
+}
+
+/// Run `cases` random cases, printing the failing case before panicking.
+fn forall(seed: u64, cases: usize, f: impl Fn(&mut Xoshiro256, usize)) {
+    let mut rng = Xoshiro256::new(seed);
+    for case in 0..cases {
+        f(&mut rng, case);
+    }
+}
+
+#[test]
+fn all_cpu_impls_agree_property() {
+    forall(0xA11CE, 25, |rng, case| {
+        let h = rng.range(1, 70);
+        let w = rng.range(1, 70);
+        let bins = rng.range(1, 17);
+        let tile = rng.range(1, 40);
+        let threads = rng.range(1, 9);
+        let img = random_image(rng, h, w, bins);
+        let reference = integral_histogram_seq(&img);
+        let ctx = format!("case {case}: h={h} w={w} bins={bins} tile={tile} threads={threads}");
+        assert_eq!(reference.max_abs_diff(&integral_histogram_seq_rowsum(&img)), 0.0, "rowsum {ctx}");
+        assert_eq!(
+            reference.max_abs_diff(&integral_histogram_seq_imagemajor(&img)),
+            0.0,
+            "imagemajor {ctx}"
+        );
+        assert_eq!(
+            reference.max_abs_diff(&integral_histogram_tiled(&img, tile)),
+            0.0,
+            "tiled {ctx}"
+        );
+        assert_eq!(
+            reference.max_abs_diff(&integral_histogram_tiled_twopass(&img, tile)),
+            0.0,
+            "twopass {ctx}"
+        );
+        assert_eq!(
+            reference.max_abs_diff(&integral_histogram_parallel(&img, threads)),
+            0.0,
+            "parallel {ctx}"
+        );
+        assert_eq!(
+            reference.max_abs_diff(&integral_histogram_crossweave(&img, threads)),
+            0.0,
+            "crossweave {ctx}"
+        );
+    });
+}
+
+#[test]
+fn region_equals_brute_force_property() {
+    forall(0xB0B, 40, |rng, case| {
+        let h = rng.range(1, 60);
+        let w = rng.range(1, 60);
+        let bins = rng.range(1, 9);
+        let img = random_image(rng, h, w, bins);
+        let ih = integral_histogram_seq(&img);
+        let r0 = rng.range(0, h);
+        let c0 = rng.range(0, w);
+        let r1 = rng.range(r0, h);
+        let c1 = rng.range(c0, w);
+        let rect = Rect::new(r0, c0, r1, c1);
+        let fast = region_histogram(&ih, rect);
+        let mut slow = vec![0.0f32; bins];
+        for r in r0..=r1 {
+            for c in c0..=c1 {
+                slow[img.at(r, c) as usize] += 1.0;
+            }
+        }
+        assert_eq!(fast, slow, "case {case}: {rect:?} on {h}x{w}x{bins}");
+        // mass equals area
+        assert_eq!(fast.iter().sum::<f32>(), rect.area() as f32, "case {case} mass");
+    });
+}
+
+#[test]
+fn region_additivity_property() {
+    // h(R) of a rect split into left|right halves must equal the sum of
+    // the halves — the inclusion-exclusion consistency of Eq. 2.
+    forall(0xADD, 30, |rng, case| {
+        let h = rng.range(2, 50);
+        let w = rng.range(2, 50);
+        let img = random_image(rng, h, w, 8);
+        let ih = integral_histogram_seq(&img);
+        let r0 = rng.range(0, h - 1);
+        let r1 = rng.range(r0, h);
+        let c0 = rng.range(0, w - 1);
+        let c1 = rng.range(c0 + 1, w);
+        let split = rng.range(c0, c1);
+        let whole = region_histogram(&ih, Rect::new(r0, c0, r1, c1));
+        let left = region_histogram(&ih, Rect::new(r0, c0, r1, split));
+        let right = region_histogram(&ih, Rect::new(r0, split + 1, r1, c1));
+        for b in 0..8 {
+            assert_eq!(whole[b], left[b] + right[b], "case {case} bin {b}");
+        }
+    });
+}
+
+#[test]
+fn quantizer_is_monotone_partition_property() {
+    for bins in [1usize, 2, 3, 16, 32, 100, 256] {
+        let mut prev = 0i32;
+        let mut counts = vec![0usize; bins];
+        for v in 0u8..=255 {
+            let b = quantize_u8(v, bins);
+            assert!((0..bins as i32).contains(&b), "bins={bins} v={v} → {b}");
+            assert!(b >= prev, "quantizer must be monotone (bins={bins}, v={v})");
+            prev = b;
+            counts[b as usize] += 1;
+        }
+        // every bin non-empty and widths balanced within 1 level
+        let min = counts.iter().min().unwrap();
+        let max = counts.iter().max().unwrap();
+        assert!(*min >= 1, "bins={bins}: empty bin");
+        assert!(max - min <= 1, "bins={bins}: unbalanced widths {counts:?}");
+        // bin_range round-trips the partition boundaries
+        for b in 0..bins {
+            let (lo, hi) = bin_range(b, bins);
+            assert_eq!(counts[b], hi as usize - lo as usize + 1, "bins={bins} b={b}");
+        }
+    }
+}
+
+#[test]
+fn bin_shift_trick_is_exact_property() {
+    // The device pool computes bins [off, off+g) by shifting image
+    // values; verify the reassembled planes equal the direct planes.
+    forall(0x5417, 10, |rng, case| {
+        let h = rng.range(4, 40);
+        let w = rng.range(4, 40);
+        let total = 32usize;
+        let group = 8usize;
+        let img = random_image(rng, h, w, total);
+        let direct = integral_histogram_seq(&img);
+        for off in (0..total).step_by(group) {
+            let shifted = BinnedImage {
+                h,
+                w,
+                bins: group,
+                data: img
+                    .data
+                    .iter()
+                    .map(|&v| if v >= off as i32 { v - off as i32 } else { -1 })
+                    .collect(),
+            };
+            let partial = integral_histogram_seq(&shifted);
+            for b in 0..group {
+                for (i, &v) in partial.plane(b).iter().enumerate() {
+                    assert_eq!(
+                        v,
+                        direct.plane(off + b)[i],
+                        "case {case} off={off} bin={b} idx={i}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn quantize_frame_matches_scalar_property() {
+    forall(0xF00D, 10, |rng, _| {
+        let h = rng.range(1, 20);
+        let w = rng.range(1, 20);
+        let bins = rng.range(1, 64);
+        let pixels: Vec<u8> = (0..h * w).map(|_| rng.range(0, 256) as u8).collect();
+        let img = quantize_frame(&pixels, h, w, bins);
+        for (i, &p) in pixels.iter().enumerate() {
+            assert_eq!(img.data[i], quantize_u8(p, bins));
+        }
+    });
+}

@@ -1,0 +1,168 @@
+//! Integration tests over the PJRT runtime: every AOT strategy artifact
+//! must reproduce Algorithm 1 bit-exactly, padding must be transparent,
+//! and the fused serve graph must agree with CPU region queries.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); they skip with
+//! a notice when it is absent so plain `cargo test` stays green in a
+//! fresh checkout.
+
+use inthist::histogram::region::Rect;
+use inthist::histogram::sequential::integral_histogram_seq;
+use inthist::histogram::types::Strategy;
+use inthist::runtime::artifact::{ArtifactKind, ArtifactManifest};
+use inthist::runtime::client::HistogramExecutor;
+use inthist::video::synth::SyntheticVideo;
+
+fn manifest() -> Option<ArtifactManifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactManifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn all_strategies_match_algorithm1_at_128() {
+    let Some(m) = manifest() else { return };
+    let video = SyntheticVideo::new(128, 128, 3, 42);
+    let img = video.frame(5).binned(32);
+    let expected = integral_histogram_seq(&img);
+    for strat in Strategy::ALL {
+        let Some(meta) = m.find_strategy(strat, 128, 128, 32) else {
+            continue;
+        };
+        let exe = HistogramExecutor::compile(&m, meta).expect("compile");
+        let got = exe.compute(&img).expect("execute");
+        assert_eq!(
+            expected.max_abs_diff(&got),
+            0.0,
+            "strategy {strat} deviates from Algorithm 1"
+        );
+    }
+}
+
+#[test]
+fn wf_tis_tile_sweep_consistent() {
+    let Some(m) = manifest() else { return };
+    let video = SyntheticVideo::new(512, 512, 4, 7);
+    let img = video.frame(0).binned(32);
+    let expected = integral_histogram_seq(&img);
+    for tile in [16usize, 32, 64] {
+        let Some(meta) = m.find_strategy_tile(Strategy::WfTis, 512, 512, 32, tile) else {
+            continue;
+        };
+        let exe = HistogramExecutor::compile(&m, meta).expect("compile");
+        let got = exe.compute(&img).expect("execute");
+        assert_eq!(expected.max_abs_diff(&got), 0.0, "tile {tile} deviates");
+    }
+}
+
+#[test]
+fn padded_artifact_crops_correctly() {
+    let Some(m) = manifest() else { return };
+    // HD artifacts are padded 720→768 rows; the runtime must crop back.
+    let Some(meta) = m.find_strategy(Strategy::WfTis, 720, 1280, 8) else {
+        eprintln!("SKIP: no HD b8 artifact");
+        return;
+    };
+    assert!(meta.padded_h > meta.height, "test requires a padded artifact");
+    let video = SyntheticVideo::new(720, 1280, 3, 3);
+    let img = video.frame(0).binned(8);
+    let exe = HistogramExecutor::compile(&m, meta).expect("compile");
+    let got = exe.compute(&img).expect("execute");
+    assert_eq!((got.h, got.w, got.bins), (720, 1280, 8));
+    let expected = integral_histogram_seq(&img);
+    assert_eq!(expected.max_abs_diff(&got), 0.0, "padding must be invisible");
+}
+
+#[test]
+fn serve_graph_matches_cpu_queries() {
+    let Some(m) = manifest() else { return };
+    let serve = m.find_kind(ArtifactKind::Serve);
+    let Some(meta) = serve.first() else {
+        eprintln!("SKIP: no serve artifact");
+        return;
+    };
+    let video = SyntheticVideo::new(meta.height, meta.width, 4, 9);
+    let img = video.frame(2).binned(meta.bins);
+    let rects = vec![
+        Rect::new(0, 0, meta.height - 1, meta.width - 1),
+        Rect::with_size(10, 20, 50, 60),
+        Rect::with_size(100, 100, 1, 1),
+    ];
+    let exe = HistogramExecutor::compile(&m, meta).expect("compile");
+    let (ih, hists, _) = exe.compute_with_queries(&img, &rects).expect("serve");
+    let expected = integral_histogram_seq(&img);
+    assert_eq!(expected.max_abs_diff(&ih), 0.0);
+    for (i, &r) in rects.iter().enumerate() {
+        let cpu = inthist::histogram::region::region_histogram(&expected, r);
+        assert_eq!(hists[i], cpu, "serve query {i} deviates from Eq. 2");
+    }
+}
+
+#[test]
+fn query_artifact_matches_cpu() {
+    let Some(m) = manifest() else { return };
+    let queries = m.find_kind(ArtifactKind::Query);
+    let Some(meta) = queries.first() else {
+        eprintln!("SKIP: no query artifact");
+        return;
+    };
+    let video = SyntheticVideo::new(meta.height, meta.width, 4, 13);
+    let img = video.frame(0).binned(meta.bins);
+    let ih = integral_histogram_seq(&img);
+    let rects = vec![Rect::with_size(5, 5, 40, 40), Rect::with_size(0, 0, 1, 7)];
+    let exe = HistogramExecutor::compile(&m, meta).expect("compile");
+    let got = exe.query(&ih, &rects).expect("query");
+    for (i, &r) in rects.iter().enumerate() {
+        let cpu = inthist::histogram::region::region_histogram(&ih, r);
+        assert_eq!(got[i], cpu, "query artifact row {i}");
+    }
+}
+
+#[test]
+fn executor_rejects_wrong_geometry() {
+    let Some(m) = manifest() else { return };
+    let Some(meta) = m.find_strategy(Strategy::WfTis, 128, 128, 32) else {
+        return;
+    };
+    let exe = HistogramExecutor::compile(&m, meta).expect("compile");
+    let img = SyntheticVideo::new(64, 64, 1, 0).frame(0).binned(32);
+    assert!(exe.compute(&img).is_err(), "wrong image size must be rejected");
+}
+
+#[test]
+fn kernel_time_ordering_matches_paper() {
+    // The paper's central performance claim, §4.1: WF-TiS ≤ CW-TiS ≤
+    // CW-STS in kernel time.  Verified at 256² (fast enough for CI).
+    let Some(m) = manifest() else { return };
+    let video = SyntheticVideo::new(256, 256, 4, 7);
+    let img = video.frame(0).binned(32);
+    let mut times = std::collections::HashMap::new();
+    for strat in [Strategy::CwSts, Strategy::CwTis, Strategy::WfTis] {
+        let Some(meta) = m.find_strategy(strat, 256, 256, 32) else {
+            return;
+        };
+        let exe = HistogramExecutor::compile(&m, meta).expect("compile");
+        let _ = exe.compute_timed(&img).unwrap(); // warm-up
+        let mut best = f64::MAX;
+        for _ in 0..3 {
+            let (_, t) = exe.compute_timed(&img).unwrap();
+            best = best.min(t.as_secs_f64());
+        }
+        times.insert(strat, best);
+    }
+    assert!(
+        times[&Strategy::WfTis] < times[&Strategy::CwSts],
+        "WF-TiS must beat CW-STS (wf={:.4}s sts={:.4}s)",
+        times[&Strategy::WfTis],
+        times[&Strategy::CwSts]
+    );
+    assert!(
+        times[&Strategy::CwTis] < times[&Strategy::CwSts],
+        "CW-TiS must beat CW-STS"
+    );
+}
