@@ -3,9 +3,21 @@
 //! Covers the design choices DESIGN.md calls out: Algorithm-1 literal vs
 //! running-row-sum vs image-major vs tiled single-pass vs tiled two-pass
 //! (the §3.5 memory-traffic ablation on CPU), thread scaling of the
-//! parallel baseline, and region-query/batcher throughput.
+//! parallel baseline, the `ScanEngine` (fused multi-bin wavefront) vs
+//! every baseline at high and low bin counts, the `FramePool`
+//! steady-state allocation behaviour, and region-query/batcher
+//! throughput.
+//!
+//! Besides the human-readable tables, the run emits a machine-readable
+//! `BENCH_hotpath.json` at the repo root (per-variant median ns,
+//! implied fps, config, derived speedups, pool counters) so the perf
+//! trajectory is tracked across PRs.
 
 use inthist::coordinator::batcher::QueryBatcher;
+use inthist::coordinator::frame_pool::FramePool;
+use inthist::histogram::engine::{
+    integral_histogram_fused, integral_histogram_wavefront, Planner, ScanEngine, Schedule,
+};
 use inthist::histogram::parallel::{integral_histogram_crossweave, integral_histogram_parallel};
 use inthist::histogram::region::{region_histogram, Rect};
 use inthist::histogram::sequential::{
@@ -15,10 +27,51 @@ use inthist::histogram::tiled::{integral_histogram_tiled, integral_histogram_til
 use inthist::util::stats::{render_table, BenchRow};
 use inthist::video::synth::SyntheticVideo;
 
+/// Rows accumulated for the JSON report: (group, row).
+struct Report {
+    rows: Vec<(String, BenchRow)>,
+}
+
+impl Report {
+    fn push(&mut self, group: &str, row: &BenchRow) {
+        self.rows.push((group.to_string(), row.clone()));
+    }
+
+    fn push_all(&mut self, group: &str, rows: &[BenchRow]) {
+        for r in rows {
+            self.push(group, r);
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// A pinned-schedule engine measuring the steady-state (pooled-buffer)
+/// compute path.
+fn engine_row(
+    label: &str,
+    reps: usize,
+    img: &inthist::histogram::types::BinnedImage,
+    schedule: Schedule,
+    workers: usize,
+    tile: usize,
+) -> BenchRow {
+    let planner = Planner { tile_override: Some(tile), schedule_override: Some(schedule) };
+    let mut eng = ScanEngine::with_planner(workers, planner);
+    let mut out = eng.compute(img); // warm buffers + scratch outside timing
+    BenchRow::measure(label, 1, reps, || {
+        eng.compute_into(img, &mut out);
+        std::hint::black_box(&out);
+    })
+}
+
 fn main() {
     let reps = std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
     let video = SyntheticVideo::new(512, 512, 4, 7);
     let img = video.frame(0).binned(32);
+    let mut report = Report { rows: Vec::new() };
 
     // --- single-thread variants (ablation of the data-movement scheme) ---
     let mut rows = Vec::new();
@@ -37,16 +90,21 @@ fn main() {
     rows.push(BenchRow::measure("tiled two-pass (CW-TiS on CPU)", 1, reps, || {
         std::hint::black_box(integral_histogram_tiled_twopass(&img, 64));
     }));
+    rows.push(BenchRow::measure("engine fused serial (multi-bin tiles)", 1, reps, || {
+        std::hint::black_box(integral_histogram_fused(&img, 64));
+    }));
     print!("{}", render_table("CPU single-thread variants, 512x512x32", &rows));
+    report.push_all("single_thread", &rows);
 
-    // --- tile-size sweep of the cache-blocked variant ---
+    // --- tile-size sweep of the fused engine kernel ---
     let mut rows = Vec::new();
     for tile in [16usize, 32, 64, 128, 256] {
-        rows.push(BenchRow::measure(format!("tile {tile}x{tile}"), 1, reps, || {
-            std::hint::black_box(integral_histogram_tiled(&img, tile));
+        rows.push(BenchRow::measure(format!("fused tile {tile}x{tile}"), 1, reps, || {
+            std::hint::black_box(integral_histogram_fused(&img, tile));
         }));
     }
-    print!("{}", render_table("tile-size sweep (single-pass), 512x512x32", &rows));
+    print!("{}", render_table("engine tile-size sweep (fused serial), 512x512x32", &rows));
+    report.push_all("tile_sweep", &rows);
 
     // --- thread scaling (the OpenMP-baseline analogue, Fig. 19 input) ---
     let mut rows = Vec::new();
@@ -58,7 +116,72 @@ fn main() {
     rows.push(BenchRow::measure("cross-weave, 8 threads", 1, reps, || {
         std::hint::black_box(integral_histogram_crossweave(&img, 8));
     }));
+    for workers in [2usize, 4, 8] {
+        rows.push(BenchRow::measure(format!("wavefront, {workers} workers"), 1, reps, || {
+            std::hint::black_box(integral_histogram_wavefront(&img, 64, workers));
+        }));
+    }
     print!("{}", render_table("CPU thread scaling, 512x512x32", &rows));
+    report.push_all("thread_scaling", &rows);
+
+    // --- engine vs baseline: the acceptance-criterion comparison ---
+    // 32 bins: bin-parallelism has slack; the win must come from fusion
+    // + wavefront. 4 bins: bin-parallelism is starved (the low-bin case).
+    let par32 = BenchRow::measure("baseline bin-parallel, 4 threads, 32 bins", 1, reps, || {
+        std::hint::black_box(integral_histogram_parallel(&img, 4));
+    });
+    let wf32 = engine_row(
+        "engine wavefront, 4 workers, 32 bins (pooled)",
+        reps,
+        &img,
+        Schedule::Wavefront,
+        4,
+        64,
+    );
+    let img4 = video.frame(0).binned(4);
+    let par4 = BenchRow::measure("baseline bin-parallel, 4 threads, 4 bins", 1, reps, || {
+        std::hint::black_box(integral_histogram_parallel(&img4, 4));
+    });
+    let wf4 = engine_row(
+        "engine wavefront, 4 workers, 4 bins (pooled)",
+        reps,
+        &img4,
+        Schedule::Wavefront,
+        4,
+        64,
+    );
+    let auto32 = {
+        let mut eng = ScanEngine::new(4);
+        let mut out = eng.compute(&img);
+        BenchRow::measure("engine auto plan, 4 workers, 32 bins (pooled)", 1, reps, || {
+            eng.compute_into(&img, &mut out);
+            std::hint::black_box(&out);
+        })
+    };
+    let rows = vec![par32.clone(), wf32.clone(), auto32.clone(), par4.clone(), wf4.clone()];
+    print!("{}", render_table("engine vs baseline, 512x512, 4 threads", &rows));
+    let speedup32 = par32.summary.median / wf32.summary.median;
+    let speedup4 = par4.summary.median / wf4.summary.median;
+    println!("wavefront speedup vs bin-parallel @32 bins: {speedup32:.2}x (target >= 2.0x)");
+    println!("wavefront speedup vs bin-parallel @ 4 bins: {speedup4:.2}x (target >= 1.5x)");
+    report.push_all("engine_vs_baseline", &rows);
+
+    // --- FramePool steady state: zero per-frame allocations ---
+    let pool = FramePool::new();
+    let mut eng = ScanEngine::new(4);
+    let pool_row = BenchRow::measure("pooled frame cycle (acquire+scan+release)", 1, reps, || {
+        let mut out = pool.acquire(img.bins, img.h, img.w);
+        eng.compute_into(&img, &mut out);
+        std::hint::black_box(&out);
+        pool.release(out);
+    });
+    let stats = pool.stats();
+    print!("{}", render_table("FramePool steady state, 512x512x32", &[pool_row.clone()]));
+    println!(
+        "pool counters: allocated {} buffer(s), reused {} (steady state allocates nothing)\n",
+        stats.allocated, stats.reused
+    );
+    report.push("frame_pool", &pool_row);
 
     // --- region-query service throughput ---
     let ih = integral_histogram_seq(&img);
@@ -79,4 +202,44 @@ fn main() {
         std::hint::black_box(b.flush(&ih));
     }));
     print!("{}", render_table("region-query service, 32 bins", &rows));
+    report.push_all("region_query", &rows);
+
+    // --- machine-readable report at the repo root ---
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"hotpath\",\n");
+    json.push_str(&format!("  \"reps\": {reps},\n"));
+    json.push_str("  \"config\": {\"h\": 512, \"w\": 512, \"bins\": 32, \"low_bins\": 4, \"threads\": 4},\n");
+    json.push_str("  \"rows\": [\n");
+    for (i, (group, row)) in report.rows.iter().enumerate() {
+        let sep = if i + 1 < report.rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"group\": \"{}\", \"name\": \"{}\", \"median_ns\": {:.0}, \"median_ms\": {:.4}, \"p10_ms\": {:.4}, \"p90_ms\": {:.4}, \"fps\": {:.2}}}{sep}\n",
+            json_escape(group),
+            json_escape(&row.label),
+            row.summary.median * 1e6,
+            row.summary.median,
+            row.summary.p10,
+            row.summary.p90,
+            row.fps(),
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"derived\": {\n");
+    json.push_str(&format!(
+        "    \"wavefront_vs_binparallel_32bins_4threads\": {speedup32:.3},\n"
+    ));
+    json.push_str(&format!(
+        "    \"wavefront_vs_binparallel_4bins_4threads\": {speedup4:.3},\n"
+    ));
+    json.push_str(&format!(
+        "    \"frame_pool\": {{\"allocated\": {}, \"reused\": {}}}\n",
+        stats.allocated, stats.reused
+    ));
+    json.push_str("  }\n}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }

@@ -13,11 +13,15 @@
 //!   frames to the direct path and large frames to the task queue.
 //! * [`batcher`] — groups region-query requests against cached tensors
 //!   (the O(1) lookup service downstream analytics call).
+//! * [`frame_pool`] — the buffer arena recycling integral-histogram
+//!   storage across frames (the paper's persistent page-locked buffers,
+//!   §4.4): steady-state requests allocate nothing.
 //! * [`backpressure`] — bounded hand-off queues with occupancy stats.
 //! * [`metrics`] — per-frame stage timings and throughput accounting.
 
 pub mod backpressure;
 pub mod batcher;
+pub mod frame_pool;
 pub mod metrics;
 pub mod pipeline;
 pub mod router;

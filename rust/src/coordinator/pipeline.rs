@@ -17,10 +17,17 @@
 //! scaled to preserve the paper's kernel:transfer ratio on this
 //! substrate.  The *kernel* stage is always real PJRT execution of the
 //! AOT artifact.
+//!
+//! [`CpuPipeline`] is the artifact-free sibling: the same staging with
+//! the kernel stage on the [`ScanEngine`] and every
+//! per-frame buffer recycled (tensors via [`FramePool`], image index
+//! buffers via a return ring) so the steady state allocates nothing.
 
 use crate::coordinator::backpressure::bounded;
+use crate::coordinator::frame_pool::{FramePool, PooledTensor};
 use crate::coordinator::metrics::{FrameStat, Throughput};
-use crate::histogram::types::IntegralHistogram;
+use crate::histogram::engine::ScanEngine;
+use crate::histogram::types::{BinnedImage, IntegralHistogram};
 use crate::runtime::artifact::ArtifactManifest;
 use crate::runtime::client::HistogramExecutor;
 use crate::simulator::pcie::PcieModel;
@@ -114,7 +121,7 @@ pub struct Pipeline {
 struct InFlight {
     stat: FrameStat,
     t_enqueue: Instant,
-    image: crate::histogram::types::BinnedImage,
+    image: BinnedImage,
 }
 
 struct Computed {
@@ -291,6 +298,192 @@ impl Pipeline {
                 kernel,
                 d2h,
                 latency: t_enqueue.elapsed(),
+            });
+            sink(frame.seq, ih);
+            frames += 1;
+        }
+        Ok(PipelineReport {
+            throughput: Throughput { frames, wall: t_start.elapsed(), stats },
+            lanes: 1,
+            queue_high_water: [0; 3],
+        })
+    }
+}
+
+/// Configuration of the CPU-substrate pipeline.
+#[derive(Debug, Clone)]
+pub struct CpuPipelineConfig {
+    /// In-flight frames (1 = serial, 2 = dual-buffering).
+    pub lanes: usize,
+    /// Bins for quantization.
+    pub bins: usize,
+    /// `ScanEngine` worker budget (0 ⇒ all available cores).
+    pub workers: usize,
+}
+
+impl CpuPipelineConfig {
+    pub fn new(bins: usize) -> CpuPipelineConfig {
+        CpuPipelineConfig { lanes: 2, bins, workers: 0 }
+    }
+
+    pub fn lanes(mut self, lanes: usize) -> Self {
+        assert!(lanes >= 1);
+        self.lanes = lanes;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+}
+
+struct CpuComputed {
+    stat: FrameStat,
+    t_enqueue: Instant,
+    ih: PooledTensor,
+}
+
+/// The zero-allocation CPU pipeline: the same staged design as
+/// [`Pipeline`] but with the kernel stage on the
+/// [`ScanEngine`] and **every** per-frame buffer recycled —
+/// output tensors through a [`FramePool`] (handed to the sink as RAII
+/// [`PooledTensor`]s that return on drop) and quantized-image buffers
+/// through a stage-2→stage-1 return ring.  After the first few frames
+/// the steady-state path allocates no per-frame buffers; the pool's
+/// counters make that assertable (`tests/engine_property.rs`).  The
+/// engine's parallel schedules still spawn scoped worker threads per
+/// frame — see `histogram::engine` for the trade-off.
+///
+/// Transfer stages do not exist on this substrate (the tensor never
+/// leaves host memory), mirroring the paper's "part of a larger GPU
+/// pipeline" scenario of §4.3 where transfers amortize away.
+pub struct CpuPipeline {
+    config: CpuPipelineConfig,
+    pool: Arc<FramePool>,
+}
+
+impl CpuPipeline {
+    pub fn new(config: CpuPipelineConfig) -> CpuPipeline {
+        CpuPipeline { config, pool: Arc::new(FramePool::new()) }
+    }
+
+    /// The tensor arena (for steady-state allocation assertions).
+    pub fn pool(&self) -> &Arc<FramePool> {
+        &self.pool
+    }
+
+    /// Run `source` to exhaustion, dropping results (timing runs).
+    pub fn run(&self, source: Box<dyn FrameSource>) -> Result<PipelineReport> {
+        self.run_with(source, |_, _| {})
+    }
+
+    /// Run `source` to exhaustion, handing each (seq, pooled tensor) to
+    /// `sink`; dropping the handle returns its buffer to the pool.
+    pub fn run_with(
+        &self,
+        mut source: Box<dyn FrameSource>,
+        mut sink: impl FnMut(usize, PooledTensor) + Send,
+    ) -> Result<PipelineReport> {
+        let cfg = &self.config;
+        if cfg.lanes == 1 {
+            return self.run_serial(&mut *source, &mut sink);
+        }
+        let bins = cfg.bins;
+        let workers = cfg.workers;
+        let (q1_tx, q1_rx, s1) = bounded::<InFlight>(cfg.lanes);
+        let (q2_tx, q2_rx, s2) = bounded::<CpuComputed>(cfg.lanes);
+        // Recycling ring: stage 2 returns quantized-image buffers for
+        // stage 1 to refill.
+        let (ring_tx, ring_rx) = std::sync::mpsc::channel::<BinnedImage>();
+        let pool = Arc::clone(&self.pool);
+        let t_start = Instant::now();
+
+        let report = std::thread::scope(|scope| -> Result<PipelineReport> {
+            // Stage 2: ScanEngine compute into pooled tensors.
+            scope.spawn(move || {
+                let mut engine = ScanEngine::new(workers);
+                while let Ok(item) = q1_rx.recv() {
+                    let InFlight { mut stat, t_enqueue, image } = item;
+                    let t0 = Instant::now();
+                    let mut ih = PooledTensor::acquire(&pool, image.bins, image.h, image.w);
+                    engine.compute_into(&image, &mut ih);
+                    stat.kernel = t0.elapsed();
+                    let _ = ring_tx.send(image);
+                    if q2_tx.send(CpuComputed { stat, t_enqueue, ih }).is_err() {
+                        break;
+                    }
+                }
+            });
+
+            // Stage 3: consumer.
+            let sink_ref = &mut sink;
+            let out_handle = scope.spawn(move || -> Vec<FrameStat> {
+                let mut stats = Vec::new();
+                while let Ok(mut item) = q2_rx.recv() {
+                    item.stat.latency = item.t_enqueue.elapsed();
+                    stats.push(item.stat);
+                    sink_ref(item.stat.seq, item.ih);
+                }
+                stats
+            });
+
+            // Stage 1 (this thread): read + quantize into recycled buffers.
+            let mut frames = 0usize;
+            while let Some(frame) = source.next_frame() {
+                let t_enqueue = Instant::now();
+                let t0 = Instant::now();
+                let mut image = ring_rx
+                    .try_recv()
+                    .unwrap_or_else(|_| BinnedImage::new(0, 0, 1, Vec::new()));
+                frame.binned_into(bins, &mut image);
+                let stat = FrameStat { seq: frame.seq, read: t0.elapsed(), ..Default::default() };
+                frames += 1;
+                if q1_tx.send(InFlight { stat, t_enqueue, image }).is_err() {
+                    break;
+                }
+            }
+            drop(q1_tx); // close the pipeline; stages drain and exit
+
+            let mut stats = out_handle.join().expect("sink stage panicked");
+            let wall = t_start.elapsed();
+            stats.sort_by_key(|s| s.seq);
+            Ok(PipelineReport {
+                throughput: Throughput { frames, wall, stats },
+                lanes: cfg.lanes,
+                queue_high_water: [s1.high_water(), s2.high_water(), 0],
+            })
+        })?;
+        Ok(report)
+    }
+
+    /// Strictly serial CPU baseline (`lanes = 1`).
+    fn run_serial(
+        &self,
+        source: &mut dyn FrameSource,
+        sink: &mut (impl FnMut(usize, PooledTensor) + Send),
+    ) -> Result<PipelineReport> {
+        let bins = self.config.bins;
+        let mut engine = ScanEngine::new(self.config.workers);
+        let mut image = BinnedImage::new(0, 0, 1, Vec::new());
+        let t_start = Instant::now();
+        let mut stats = Vec::new();
+        let mut frames = 0usize;
+        while let Some(frame) = source.next_frame() {
+            let t_enqueue = Instant::now();
+            let t0 = Instant::now();
+            frame.binned_into(bins, &mut image);
+            let read = t0.elapsed();
+            let t1 = Instant::now();
+            let mut ih = PooledTensor::acquire(&self.pool, image.bins, image.h, image.w);
+            engine.compute_into(&image, &mut ih);
+            let kernel = t1.elapsed();
+            stats.push(FrameStat {
+                seq: frame.seq,
+                read,
+                kernel,
+                latency: t_enqueue.elapsed(),
+                ..Default::default()
             });
             sink(frame.seq, ih);
             frames += 1;

@@ -9,18 +9,24 @@
 //! * frames whose tensor exceeds the device-memory budget → the
 //!   multi-device bin task queue (§4.6), mirroring how the paper falls
 //!   back to bin tiling when "limited GPU global memory becomes the
-//!   bottleneck".
+//!   bottleneck";
+//! * requests with no usable artifact/backend → the CPU
+//!   [`ScanEngine`] (planned wavefront scan over
+//!   [`FramePool`]-recycled tensors), so the engine stays functional —
+//!   and allocation-free in steady state — in the offline build.
 
+use crate::coordinator::frame_pool::{FramePool, PoolStats};
 use crate::coordinator::task_queue::{BinTaskQueue, TaskQueueConfig, TaskQueueReport};
+use crate::histogram::engine::ScanEngine;
 use crate::histogram::region::Rect;
 use crate::histogram::types::{BinnedImage, IntegralHistogram, Strategy};
-use crate::runtime::artifact::{ArtifactKind, ArtifactManifest};
+use crate::runtime::artifact::{ArtifactKind, ArtifactManifest, ArtifactMeta};
 use crate::runtime::client::HistogramExecutor;
 use crate::video::source::VideoFrame;
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -36,6 +42,17 @@ pub struct EngineConfig {
     pub pool_workers: usize,
     /// Bin group size for large-image tasks.
     pub bin_group: usize,
+    /// Serve requests on the CPU [`ScanEngine`] when no PJRT artifact
+    /// (or backend) is available — keeps the engine functional in the
+    /// offline build (DESIGN.md §4).
+    pub cpu_fallback: bool,
+    /// CPU engine worker budget (0 ⇒ all available cores).
+    pub cpu_workers: usize,
+    /// Largest tensor (bytes) the CPU fallback will allocate host-side
+    /// for frames routed to the task queue; beyond it the original
+    /// "no group artifact" error surfaces instead of risking an
+    /// allocation abort.
+    pub cpu_fallback_budget: usize,
 }
 
 impl Default for EngineConfig {
@@ -46,6 +63,9 @@ impl Default for EngineConfig {
             device_memory_budget: 12 << 30,
             pool_workers: 4,
             bin_group: 8,
+            cpu_fallback: true,
+            cpu_workers: 0,
+            cpu_fallback_budget: 2 << 30,
         }
     }
 }
@@ -64,7 +84,13 @@ pub struct Engine {
     manifest: Arc<ArtifactManifest>,
     config: EngineConfig,
     executors: HashMap<String, HistogramExecutor>,
+    /// Artifacts whose compile failed — negatively cached so the
+    /// per-frame fallback path never re-reads the HLO file.
+    failed: HashSet<String>,
     task_queue: Option<BinTaskQueue>,
+    /// CPU fallback path: planned wavefront engine + tensor arena.
+    scan: ScanEngine,
+    pool: Arc<FramePool>,
 }
 
 impl Engine {
@@ -74,7 +100,16 @@ impl Engine {
     }
 
     pub fn new(manifest: Arc<ArtifactManifest>, config: EngineConfig) -> Engine {
-        Engine { manifest, config, executors: HashMap::new(), task_queue: None }
+        let scan = ScanEngine::new(config.cpu_workers);
+        Engine {
+            manifest,
+            config,
+            executors: HashMap::new(),
+            failed: HashSet::new(),
+            task_queue: None,
+            scan,
+            pool: Arc::new(FramePool::new()),
+        }
     }
 
     pub fn manifest(&self) -> &ArtifactManifest {
@@ -107,6 +142,12 @@ impl Engine {
     }
 
     /// Compute with an explicit strategy on an already-binned image.
+    ///
+    /// Direct requests prefer the PJRT artifact path; when the artifact
+    /// (or the XLA backend itself) is unavailable and `cpu_fallback` is
+    /// set, the request is served by the CPU [`ScanEngine`] instead —
+    /// bit-identical output, pooled storage (recycle tensors with
+    /// [`Self::recycle`] to keep the steady state allocation-free).
     pub fn compute_timed(
         &mut self,
         strategy: Strategy,
@@ -114,14 +155,56 @@ impl Engine {
     ) -> Result<(IntegralHistogram, Duration)> {
         match self.route_for(img.h, img.w) {
             Route::Direct => {
-                let exe = self.executor_for(strategy, img.h, img.w, img.bins)?;
-                exe.compute_timed(img)
+                let compiled = self.ensure_executor(strategy, img.h, img.w, img.bins);
+                match compiled {
+                    Ok(name) => self.executors[&name].compute_timed(img),
+                    Err(_) if self.cpu_fallback_allowed(img) => self.compute_cpu_timed(img),
+                    Err(e) => Err(e),
+                }
             }
-            Route::TaskQueue => {
-                let (ih, report) = self.compute_large(img)?;
-                Ok((ih, report.wall))
-            }
+            Route::TaskQueue => match self.compute_large(img) {
+                Ok((ih, report)) => Ok((ih, report.wall)),
+                // No group artifact / no backend: the CPU engine still
+                // serves the frame, but only within the host allocation
+                // budget — past it the actionable artifact error beats
+                // an allocation abort.
+                Err(_) if self.cpu_fallback_allowed(img) => self.compute_cpu_timed(img),
+                Err(e) => Err(e),
+            },
         }
+    }
+
+    /// Whether the CPU engine may serve this frame: fallback enabled
+    /// and the tensor within the host allocation budget.
+    fn cpu_fallback_allowed(&self, img: &BinnedImage) -> bool {
+        self.config.cpu_fallback
+            && img.bins * img.h * img.w * 4 <= self.config.cpu_fallback_budget
+    }
+
+    /// Serve a request on the CPU wavefront engine with pooled storage.
+    pub fn compute_cpu_timed(
+        &mut self,
+        img: &BinnedImage,
+    ) -> Result<(IntegralHistogram, Duration)> {
+        let t0 = Instant::now();
+        let mut out = self.pool.acquire(img.bins, img.h, img.w);
+        self.scan.compute_into(img, &mut out);
+        Ok((out, t0.elapsed()))
+    }
+
+    /// Return a tensor obtained from the CPU path to the arena.
+    pub fn recycle(&self, ih: IntegralHistogram) {
+        self.pool.release(ih);
+    }
+
+    /// Arena counters (steady-state allocation observability).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// The CPU fallback engine (plan observability).
+    pub fn cpu_engine(&self) -> &ScanEngine {
+        &self.scan
     }
 
     /// Convenience wrapper dropping the timing.
@@ -191,28 +274,31 @@ impl Engine {
             })
             .cloned();
         if let Some(meta) = serve_meta {
-            if !self.executors.contains_key(&meta.name) {
-                let exe = HistogramExecutor::compile(&self.manifest, &meta)?;
-                self.executors.insert(meta.name.clone(), exe);
+            match self.compile_cached(&meta) {
+                Ok(()) => {
+                    let exe = &self.executors[&meta.name];
+                    let (ih, hists, _) = exe.compute_with_queries(&img, rects)?;
+                    return Ok((ih, hists));
+                }
+                Err(e) if !self.config.cpu_fallback => return Err(e),
+                Err(_) => {} // backend unavailable: CPU answers identically
             }
-            let exe = &self.executors[&meta.name];
-            let (ih, hists, _) = exe.compute_with_queries(&img, rects)?;
-            Ok((ih, hists))
-        } else {
-            let (ih, _) = self.compute_timed(self.config.strategy, &img)?;
-            let hists = crate::histogram::region::region_histogram_batch(&ih, rects);
-            Ok((ih, hists))
         }
+        let (ih, _) = self.compute_timed(self.config.strategy, &img)?;
+        let hists = crate::histogram::region::region_histogram_batch(&ih, rects);
+        Ok((ih, hists))
     }
 
-    /// Get-or-compile the executor for (strategy, h, w, bins).
-    pub fn executor_for(
+    /// Get-or-compile the executor for (strategy, h, w, bins), returning
+    /// its cache key (an owned name, so callers can branch to fallbacks
+    /// without holding a borrow of the cache).
+    fn ensure_executor(
         &mut self,
         strategy: Strategy,
         h: usize,
         w: usize,
         bins: usize,
-    ) -> Result<&HistogramExecutor> {
+    ) -> Result<String> {
         let meta = self
             .manifest
             .find_strategy(strategy, h, w, bins)
@@ -228,11 +314,50 @@ impl Engine {
                 )
             })?
             .clone();
-        if !self.executors.contains_key(&meta.name) {
-            let exe = HistogramExecutor::compile(&self.manifest, &meta)?;
-            self.executors.insert(meta.name.clone(), exe);
+        self.compile_cached(&meta)?;
+        Ok(meta.name)
+    }
+
+    /// Get-or-compile `meta` into the executor cache.  Failures are
+    /// negatively cached so the per-frame fallback path never re-reads
+    /// a broken HLO file.
+    fn compile_cached(&mut self, meta: &ArtifactMeta) -> Result<()> {
+        if self.executors.contains_key(&meta.name) {
+            return Ok(());
         }
-        Ok(&self.executors[&meta.name])
+        if self.failed.contains(&meta.name) {
+            return Err(anyhow!("artifact '{}' previously failed to compile", meta.name));
+        }
+        match HistogramExecutor::compile(&self.manifest, meta) {
+            Ok(exe) => {
+                self.executors.insert(meta.name.clone(), exe);
+                Ok(())
+            }
+            Err(e) => {
+                self.failed.insert(meta.name.clone());
+                Err(e)
+            }
+        }
+    }
+
+    /// Drop every cached executor and negative compile result — call
+    /// after regenerating `artifacts/` so previously failed compiles
+    /// are retried.
+    pub fn clear_compile_cache(&mut self) {
+        self.executors.clear();
+        self.failed.clear();
+    }
+
+    /// Get-or-compile the executor for (strategy, h, w, bins).
+    pub fn executor_for(
+        &mut self,
+        strategy: Strategy,
+        h: usize,
+        w: usize,
+        bins: usize,
+    ) -> Result<&HistogramExecutor> {
+        let name = self.ensure_executor(strategy, h, w, bins)?;
+        Ok(&self.executors[&name])
     }
 
     /// Number of compiled executors held by the cache.
@@ -283,5 +408,71 @@ mod tests {
         let c = EngineConfig::default();
         assert_eq!(c.strategy, Strategy::WfTis);
         assert!(c.device_memory_budget >= 1 << 30);
+        assert!(c.cpu_fallback, "offline builds need the CPU path on by default");
+    }
+
+    #[test]
+    fn cpu_fallback_serves_without_artifacts() {
+        use crate::histogram::sequential::integral_histogram_seq;
+        let mut eng = Engine::new(manifest(), EngineConfig::default());
+        let video = crate::video::synth::SyntheticVideo::new(96, 80, 2, 3);
+        let img = video.frame(0).binned(8);
+        let (ih, _) = eng.compute_timed(Strategy::WfTis, &img).expect("cpu fallback");
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&ih), 0.0);
+        // Recycling keeps the steady state allocation-free.
+        eng.recycle(ih);
+        let (ih2, _) = eng.compute_timed(Strategy::WfTis, &img).unwrap();
+        let st = eng.pool_stats();
+        assert_eq!((st.allocated, st.reused), (1, 1));
+        assert_eq!(expected.max_abs_diff(&ih2), 0.0);
+    }
+
+    #[test]
+    fn oversized_frames_fall_back_to_cpu() {
+        use crate::histogram::sequential::integral_histogram_seq;
+        let mut cfg = EngineConfig::default();
+        cfg.bins = 8;
+        cfg.device_memory_budget = 1 << 10; // force the TaskQueue route
+        let mut eng = Engine::new(manifest(), cfg);
+        let img = crate::video::synth::SyntheticVideo::new(40, 40, 1, 2).frame(0).binned(8);
+        assert_eq!(eng.route_for(40, 40), Route::TaskQueue);
+        let (ih, _) = eng.compute_timed(Strategy::WfTis, &img).expect("cpu serves large frames");
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&ih), 0.0);
+        // ... but not past the host allocation budget: the actionable
+        // artifact error must surface instead of a giant allocation.
+        let mut cfg = EngineConfig::default();
+        cfg.bins = 8;
+        cfg.device_memory_budget = 1 << 10;
+        cfg.cpu_fallback_budget = 1 << 10;
+        let mut eng = Engine::new(manifest(), cfg);
+        let err = eng.compute_timed(Strategy::WfTis, &img).unwrap_err().to_string();
+        assert!(err.contains("artifact"), "{err}");
+    }
+
+    #[test]
+    fn fallback_disabled_propagates_error() {
+        let mut cfg = EngineConfig::default();
+        cfg.cpu_fallback = false;
+        let mut eng = Engine::new(manifest(), cfg);
+        let img = crate::video::synth::SyntheticVideo::new(32, 32, 1, 1).frame(0).binned(8);
+        assert!(eng.compute_timed(Strategy::WfTis, &img).is_err());
+    }
+
+    #[test]
+    fn serve_answers_queries_via_cpu() {
+        use crate::histogram::region::region_histogram;
+        use crate::histogram::sequential::integral_histogram_seq;
+        let mut eng = Engine::new(manifest(), EngineConfig::default());
+        let video = crate::video::synth::SyntheticVideo::new(64, 64, 2, 5);
+        let frame = video.frame(0);
+        let rects = vec![Rect::with_size(0, 0, 64, 64), Rect::with_size(5, 9, 20, 30)];
+        let (ih, hists) = eng.serve(&frame, &rects).expect("serve via cpu");
+        let expected = integral_histogram_seq(&frame.binned(32));
+        assert_eq!(expected.max_abs_diff(&ih), 0.0);
+        for (i, &r) in rects.iter().enumerate() {
+            assert_eq!(hists[i], region_histogram(&expected, r), "query {i}");
+        }
     }
 }

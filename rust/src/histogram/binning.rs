@@ -21,10 +21,22 @@ pub fn quantize_u8(v: u8, bins: usize) -> i32 {
 
 /// Quantize a raw u8 frame into a [`BinnedImage`].
 pub fn quantize_frame(pixels: &[u8], h: usize, w: usize, bins: usize) -> BinnedImage {
+    let mut out = BinnedImage::new(0, 0, 1, Vec::new());
+    quantize_frame_into(pixels, h, w, bins, &mut out);
+    out
+}
+
+/// Quantize into a **recycled** [`BinnedImage`], reusing its index
+/// buffer (no allocation once capacity suffices) — the input-side half
+/// of the zero-alloc pipeline path (see `coordinator::frame_pool`).
+pub fn quantize_frame_into(pixels: &[u8], h: usize, w: usize, bins: usize, out: &mut BinnedImage) {
     assert_eq!(pixels.len(), h * w, "pixel buffer length mismatch");
     assert!((1..=LEVELS).contains(&bins), "bins must be in 1..=256");
-    let data = pixels.iter().map(|&p| quantize_u8(p, bins)).collect();
-    BinnedImage::new(h, w, bins, data)
+    out.h = h;
+    out.w = w;
+    out.bins = bins;
+    out.data.clear();
+    out.data.extend(pixels.iter().map(|&p| quantize_u8(p, bins)));
 }
 
 /// Inverse lookup: the inclusive intensity range covered by `bin`.
@@ -92,5 +104,18 @@ mod tests {
     #[should_panic]
     fn rejects_wrong_length() {
         quantize_frame(&[0u8; 10], 2, 6, 16);
+    }
+
+    #[test]
+    fn into_variant_matches_and_reuses_capacity() {
+        let px = vec![0u8, 8, 127, 128, 255, 64];
+        let mut img = quantize_frame(&[0u8; 6], 2, 3, 4);
+        let cap = img.data.capacity();
+        quantize_frame_into(&px, 2, 3, 32, &mut img);
+        assert_eq!(img, quantize_frame(&px, 2, 3, 32));
+        assert_eq!(img.data.capacity(), cap, "same-size requantize must not realloc");
+        // geometry change is allowed and tracked
+        quantize_frame_into(&px[..4], 2, 2, 8, &mut img);
+        assert_eq!((img.h, img.w, img.bins), (2, 2, 8));
     }
 }

@@ -1,0 +1,386 @@
+//! The fused multi-bin tile kernel — one image read per tile, all bins.
+//!
+//! This is the §3.5 data-movement argument applied inside a tile: the
+//! per-bin strategies ([`crate::histogram::parallel`],
+//! [`crate::histogram::tiled`]) re-read the image once per bin plane and
+//! spend one compare per (bin, pixel) recovering the one-hot Q value.
+//! Here each tile row is read **once** and counting-sorted into per-bin
+//! column buckets; the scan then exploits that the Q function is one-hot:
+//! for a fixed bin the row prefix is a step function, so the recurrence
+//!
+//! ```text
+//! H(k, x, y) = H(k, x-1, y) + rowprefix(k, x, y)
+//! ```
+//!
+//! is evaluated segment-wise — between two bin-k pixels the row prefix
+//! `run` is constant and the inner loop degenerates to `cur[c] = prev[c]
+//! + run`, a branch-free slice add the compiler vectorizes.  Amortized
+//! work per output element drops from ~6 dependent scalar ops (load,
+//! compare, two adds, carried sum, store) to ~1 SIMD-friendly add+store,
+//! and image traffic drops `bins×`.
+//!
+//! Carries between tiles follow Algorithm 5: `colc[k·h + x]` holds the
+//! bin-k row prefix of global row `x` up to the tile's left edge (the
+//! WF-TiS right-edge carry), and the top-edge carry needs no extra
+//! buffer — the tile above's bottom output row *is* `H(k, x-1, ·)` and
+//! is read directly from the output tensor (its completion is ordered by
+//! the wavefront dependency).
+//!
+//! ## Aliasing discipline
+//!
+//! Concurrent wavefront workers share the output tensor and the carry
+//! plane through [`SharedTensor`], which hands out **row-segment**
+//! slices, never whole-buffer `&mut` views.  Two tiles may run
+//! concurrently only if they are dependency-incomparable, which for the
+//! left/top dependency DAG implies different tile rows *and* different
+//! tile columns — so their written row segments `(bin, row, [tj,
+//! tj+tw))` are disjoint, and a tile's read of the row above (its top
+//! carry) shares no element with any concurrently written segment.
+//! Every live reference therefore covers a disjoint element range.
+
+use crate::histogram::types::BinnedImage;
+
+/// A shared window over one `f32` buffer from which workers borrow
+/// disjoint row-segment slices.  The wavefront dependency order (plus
+/// the scheduler's mutex for the happens-before edge) guarantees the
+/// segments requested by concurrent tiles never overlap — see the
+/// module-level aliasing notes.
+pub struct SharedTensor {
+    ptr: *mut f32,
+    len: usize,
+}
+
+unsafe impl Send for SharedTensor {}
+unsafe impl Sync for SharedTensor {}
+
+impl SharedTensor {
+    pub fn new(buf: &mut [f32]) -> SharedTensor {
+        SharedTensor { ptr: buf.as_mut_ptr(), len: buf.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable segment `[start, start + n)`.
+    ///
+    /// # Safety
+    /// The caller must guarantee no other live reference overlaps the
+    /// range (the wavefront schedule provides this for tile segments).
+    #[inline]
+    unsafe fn seg_mut(&self, start: usize, n: usize) -> &mut [f32] {
+        debug_assert!(start + n <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), n)
+    }
+
+    /// Shared segment `[start, start + n)`.
+    ///
+    /// # Safety
+    /// The caller must guarantee no live *mutable* reference overlaps
+    /// the range and that its contents have been published (here: via
+    /// the scheduler mutex) before the read.
+    #[inline]
+    unsafe fn seg(&self, start: usize, n: usize) -> &[f32] {
+        debug_assert!(start + n <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(start), n)
+    }
+}
+
+/// Reusable per-worker scratch: the per-row counting-sort buckets.
+/// Sized for one `tile × tile` block at a given bin count; `ensure`
+/// reallocates only when the configuration changes, so steady-state
+/// frames perform no heap allocation.
+#[derive(Debug, Default)]
+pub struct TileScratch {
+    /// Per-row bucket boundaries: `start[r·(bins+1) + k]` is the first
+    /// index in `pos` of row r's bin-k columns (prefix-sum layout).
+    start: Vec<u32>,
+    /// Per-row pixel columns grouped by bin, ascending within a bin:
+    /// `pos[r·tile + j]`.
+    pos: Vec<u32>,
+    /// Write cursors for the counting sort (length `bins`).
+    cur: Vec<u32>,
+    tile: usize,
+    bins: usize,
+}
+
+impl TileScratch {
+    /// (Re)size for `tile` and `bins`; no-op when already sized.
+    pub fn ensure(&mut self, tile: usize, bins: usize) {
+        if self.tile != tile || self.bins != bins {
+            self.start = vec![0; tile * (bins + 1)];
+            self.pos = vec![0; tile * tile];
+            self.cur = vec![0; bins];
+            self.tile = tile;
+            self.bins = bins;
+        }
+    }
+
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+}
+
+/// `cur[i] = run` over a segment (constant row prefix, no bin-k pixel).
+#[inline]
+fn fill_run(cur: &mut [f32], run: f32) {
+    for v in cur {
+        *v = run;
+    }
+}
+
+/// `cur[i] = prev[i] + run` over a segment — the vectorizable hot loop.
+#[inline]
+fn add_run(cur: &mut [f32], prev: &[f32], run: f32) {
+    for (v, &p) in cur.iter_mut().zip(prev) {
+        *v = p + run;
+    }
+}
+
+/// Scan one `th × tw` tile at origin `(ti, tj)` for **all** bins,
+/// writing final integral-histogram values into `out` (the full
+/// `bins×h×w` tensor window) and updating the left-edge carries in
+/// `colc` (layout `bins×h`).  Requires the tile above and to the left
+/// (if any) to be complete — the wavefront partial order.
+///
+/// Bins are swept plane-major: the bucketed tile (phase 1) is reused
+/// from L1 across every bin — the multi-bin fusion that amortizes the
+/// image read `bins×` — while each bin's active window is just two
+/// `tw`-wide rows, so the tile itself already bounds the working set
+/// and no further bin-axis blocking is needed (the paper's "B-bin
+/// block" alternative applies to un-tiled full-row sweeps).
+///
+/// Pixels with values outside `[0, bins)` (e.g. the −1 padding of
+/// §3.4, or any stray out-of-range index) count in no bin, matching
+/// the per-bin baselines' `== k` semantics.
+pub fn scan_tile(
+    img: &BinnedImage,
+    ti: usize,
+    tj: usize,
+    th: usize,
+    tw: usize,
+    colc: &SharedTensor,
+    out: &SharedTensor,
+    scratch: &mut TileScratch,
+) {
+    let (h, w, bins) = (img.h, img.w, img.bins);
+    let plane = h * w;
+    let tile = scratch.tile;
+    debug_assert!(th <= tile && tw <= tile, "scratch sized for a smaller tile");
+    debug_assert_eq!(scratch.bins, bins, "scratch sized for a different bin count");
+    debug_assert_eq!(colc.len(), bins * h);
+    debug_assert_eq!(out.len(), bins * plane);
+    let bp1 = bins + 1;
+
+    // Phase 1: one pass over the tile's pixels — counting-sort each
+    // row's columns by bin.  This is the only read of the image.
+    for r in 0..th {
+        let rowbase = (ti + r) * w + tj;
+        let st = &mut scratch.start[r * bp1..(r + 1) * bp1];
+        st.fill(0);
+        for c in 0..tw {
+            let v = img.data[rowbase + c];
+            if v >= 0 && (v as usize) < bins {
+                st[v as usize + 1] += 1;
+            }
+        }
+        for k in 0..bins {
+            st[k + 1] += st[k];
+        }
+        scratch.cur.copy_from_slice(&st[..bins]);
+        let posr = &mut scratch.pos[r * tile..r * tile + tw];
+        for c in 0..tw {
+            let v = img.data[rowbase + c];
+            if v >= 0 && (v as usize) < bins {
+                let k = v as usize;
+                posr[scratch.cur[k] as usize] = c as u32;
+                scratch.cur[k] += 1;
+            }
+        }
+    }
+
+    // Phase 2: per bin, per row: segment-wise
+    //   out[x] = out[x-1] + run,   run stepping at bin-k pixel columns.
+    for k in 0..bins {
+        let pbase = k * plane;
+        // SAFETY: rows [ti, ti+th) of bin k's carry column are written
+        // only by tiles in this tile-row strip, which the
+        // left-dependency chain serializes.
+        let carry = unsafe { colc.seg_mut(k * h + ti, th) };
+        for r in 0..th {
+            let x = ti + r;
+            let mut run = carry[r];
+            let o = pbase + x * w + tj;
+            let row = r * bp1;
+            let s0 = scratch.start[row + k] as usize;
+            let s1 = scratch.start[row + k + 1] as usize;
+            let steps = &scratch.pos[r * tile + s0..r * tile + s1];
+            if x == 0 {
+                // Top image row: no row above, H(k,0,y) = run.
+                // SAFETY: this tile exclusively owns segment
+                // (k, x, [tj, tj+tw)) until its completion is
+                // published.
+                let cur = unsafe { out.seg_mut(o, tw) };
+                let mut c0 = 0usize;
+                for &pc in steps {
+                    let pc = pc as usize;
+                    fill_run(&mut cur[c0..pc], run);
+                    run += 1.0;
+                    cur[pc] = run;
+                    c0 = pc + 1;
+                }
+                fill_run(&mut cur[c0..], run);
+            } else {
+                // SAFETY: the write segment is exclusively owned as
+                // above.  The read segment is one row up in the same
+                // columns: for r > 0 it was written by this same tile;
+                // for r == 0 it belongs to the finished tile above
+                // (published via the scheduler mutex), and no
+                // concurrent tile's write segment overlaps it
+                // (different tile row AND column — see module aliasing
+                // notes).
+                let (cur, prev) = unsafe { (out.seg_mut(o, tw), out.seg(o - w, tw)) };
+                let mut c0 = 0usize;
+                for &pc in steps {
+                    let pc = pc as usize;
+                    add_run(&mut cur[c0..pc], &prev[c0..pc], run);
+                    run += 1.0;
+                    cur[pc] = prev[pc] + run;
+                    c0 = pc + 1;
+                }
+                add_run(&mut cur[c0..], &prev[c0..], run);
+            }
+            carry[r] = run;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::histogram::types::IntegralHistogram;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_image(h: usize, w: usize, bins: usize, seed: u64) -> BinnedImage {
+        let mut rng = Xoshiro256::new(seed);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        BinnedImage::new(h, w, bins, data)
+    }
+
+    fn run_single_tile(img: &BinnedImage) -> IntegralHistogram {
+        let (h, w, bins) = (img.h, img.w, img.bins);
+        let tile = h.max(w);
+        let mut scratch = TileScratch::default();
+        scratch.ensure(tile, bins);
+        let mut colc = vec![0.0f32; bins * h];
+        let mut out = vec![0.0f32; bins * h * w];
+        scan_tile(
+            img,
+            0,
+            0,
+            h,
+            w,
+            &SharedTensor::new(&mut colc),
+            &SharedTensor::new(&mut out),
+            &mut scratch,
+        );
+        IntegralHistogram::from_raw(bins, h, w, out)
+    }
+
+    /// One tile covering the whole image must reproduce Algorithm 1.
+    #[test]
+    fn single_tile_matches_algorithm1() {
+        for (h, w, bins) in [(1, 1, 1), (7, 9, 4), (16, 16, 8), (13, 5, 3)] {
+            let img = random_image(h, w, bins, (h * 100 + w) as u64);
+            let expected = integral_histogram_seq(&img);
+            let got = run_single_tile(&img);
+            assert_eq!(expected.max_abs_diff(&got), 0.0, "{h}x{w}x{bins}");
+        }
+    }
+
+    /// Row-major tile sweep (wavefront-legal order) over ragged tiles.
+    #[test]
+    fn tile_sweep_matches_algorithm1() {
+        let (h, w, bins, tile) = (23, 31, 5, 8);
+        let img = random_image(h, w, bins, 99);
+        let expected = integral_histogram_seq(&img);
+        let mut scratch = TileScratch::default();
+        scratch.ensure(tile, bins);
+        let mut colc = vec![0.0f32; bins * h];
+        let mut out = vec![0.0f32; bins * h * w];
+        {
+            let colc_win = SharedTensor::new(&mut colc);
+            let out_win = SharedTensor::new(&mut out);
+            let mut ti = 0;
+            while ti < h {
+                let th = tile.min(h - ti);
+                let mut tj = 0;
+                while tj < w {
+                    let tw = tile.min(w - tj);
+                    scan_tile(&img, ti, tj, th, tw, &colc_win, &out_win, &mut scratch);
+                    tj += tile;
+                }
+                ti += tile;
+            }
+        }
+        let got = IntegralHistogram::from_raw(bins, h, w, out);
+        assert_eq!(expected.max_abs_diff(&got), 0.0);
+    }
+
+    /// Padding pixels (bin −1) and stray out-of-range values count in
+    /// no plane — matching the `== k` baselines' tolerance.
+    #[test]
+    fn out_of_range_bins_are_ignored() {
+        let mut img = BinnedImage::new(2, 3, 2, vec![-1, 0, 1, 1, -1, 0]);
+        let expected = integral_histogram_seq(&img);
+        let got = run_single_tile(&img);
+        assert_eq!(expected.max_abs_diff(&got), 0.0);
+        // a stray value == bins must not panic and counts nowhere
+        img.data[1] = 2;
+        let expected = integral_histogram_seq(&img);
+        let got = run_single_tile(&img);
+        assert_eq!(expected.max_abs_diff(&got), 0.0);
+    }
+
+    /// A dirty output buffer must not leak into the result (every
+    /// element is written) — the FramePool reuse precondition.
+    #[test]
+    fn overwrites_dirty_buffer() {
+        let (h, w, bins) = (9, 11, 3);
+        let img = random_image(h, w, bins, 5);
+        let expected = integral_histogram_seq(&img);
+        let mut scratch = TileScratch::default();
+        scratch.ensure(16, bins);
+        let mut colc = vec![0.0f32; bins * h];
+        let mut out = vec![f32::NAN; bins * h * w];
+        scan_tile(
+            &img,
+            0,
+            0,
+            h,
+            w,
+            &SharedTensor::new(&mut colc),
+            &SharedTensor::new(&mut out),
+            &mut scratch,
+        );
+        let got = IntegralHistogram::from_raw(bins, h, w, out);
+        assert_eq!(expected.max_abs_diff(&got), 0.0);
+    }
+
+    #[test]
+    fn scratch_ensure_is_idempotent() {
+        let mut s = TileScratch::default();
+        s.ensure(8, 4);
+        let p0 = s.pos.as_ptr();
+        s.ensure(8, 4);
+        assert_eq!(p0, s.pos.as_ptr(), "no realloc when already sized");
+        s.ensure(16, 4);
+        assert_eq!(s.tile(), 16);
+    }
+}

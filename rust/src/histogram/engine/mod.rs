@@ -1,0 +1,235 @@
+//! The `ScanEngine` — planned, zero-allocation, fully parallel integral
+//! histograms on the CPU substrate.
+//!
+//! This subsystem replaces the ad-hoc strategy functions on the hot
+//! path with the three mechanisms the paper's WF-TiS kernel owes its
+//! 300 fps to (§3.5, Algorithm 5), mapped onto CPU hardware:
+//!
+//! 1. **Multi-bin fused sweeps** ([`kernel`]) — each image tile is read
+//!    once and counting-sorted into per-bin column buckets; every bin
+//!    plane is then produced from that L1-resident bucket structure with
+//!    segment-wise vectorizable adds.  Image traffic drops `bins×`
+//!    versus the per-plane baselines.
+//! 2. **Anti-diagonal wavefront scheduling** ([`wavefront`]) — tiles
+//!    become dependency-counted tasks executed by scoped workers, so
+//!    parallelism scales with `(h/t)·(w/t)` tiles rather than with the
+//!    bin count, reproducing Algorithm 5's schedule on threads.
+//! 3. **Planned execution** ([`planner`]) — a small decision table picks
+//!    serial / bin-parallel / wavefront plus the tile size per request
+//!    geometry.
+//!
+//! Buffers (output tensor via the coordinator's
+//! [`crate::coordinator::frame_pool::FramePool`], carries and scratch
+//! owned by the engine) are recycled across frames: after warm-up the
+//! steady-state [`ScanEngine::compute_into`] path allocates **no
+//! per-frame buffers**.  (Parallel schedules still spawn scoped worker
+//! threads per call — sub-1% of a frame's compute at 512²×32; a
+//! persistent worker pool is deliberate future work.)
+//!
+//! The legacy baselines ([`crate::histogram::sequential`],
+//! [`crate::histogram::parallel`], [`crate::histogram::tiled`]) remain
+//! as the comparators the engine is benchmarked and property-tested
+//! against (`benches/hotpath.rs`, `tests/engine_property.rs`).
+
+pub mod kernel;
+pub mod planner;
+pub mod wavefront;
+
+pub use kernel::TileScratch;
+pub use planner::{Plan, Planner, Schedule};
+pub use wavefront::{integral_histogram_fused, integral_histogram_wavefront};
+
+use crate::histogram::types::{BinnedImage, IntegralHistogram};
+
+/// The planned scan engine.  Owns every reusable buffer except the
+/// output tensor (which the caller provides, typically from a
+/// `FramePool`), so repeated [`Self::compute_into`] calls at a fixed
+/// configuration allocate nothing.
+#[derive(Debug, Default)]
+pub struct ScanEngine {
+    planner: Planner,
+    workers: usize,
+    /// Per-worker tile bucket scratch.
+    scratches: Vec<TileScratch>,
+    /// Left-edge row-prefix carries, `bins×h` (Algorithm 5's inter-tile
+    /// carry), zero-filled per frame without reallocation.
+    colc: Vec<f32>,
+    /// Scheduler storage (dependency counters, ready stack).
+    wave: wavefront::WavefrontScratch,
+    last_plan: Option<Plan>,
+}
+
+impl ScanEngine {
+    /// Engine with a default planner and a `workers` thread budget
+    /// (0 ⇒ all available cores).
+    pub fn new(workers: usize) -> ScanEngine {
+        Self::with_planner(workers, Planner::default())
+    }
+
+    pub fn with_planner(workers: usize, planner: Planner) -> ScanEngine {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        ScanEngine { planner, workers, ..Default::default() }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    pub fn planner_mut(&mut self) -> &mut Planner {
+        &mut self.planner
+    }
+
+    /// The plan the engine would execute for this image.
+    pub fn plan_for(&self, img: &BinnedImage) -> Plan {
+        self.planner.plan(img.h, img.w, img.bins, self.workers)
+    }
+
+    /// The plan executed by the most recent compute call.
+    pub fn last_plan(&self) -> Option<Plan> {
+        self.last_plan
+    }
+
+    /// Allocating entry point (tests, one-off calls).
+    pub fn compute(&mut self, img: &BinnedImage) -> IntegralHistogram {
+        let mut out = IntegralHistogram::zeros(img.bins, img.h, img.w);
+        self.compute_into(img, &mut out);
+        out
+    }
+
+    /// Zero-allocation entry point: computes the integral histogram of
+    /// `img` into `out`, resizing `out`'s storage only if its geometry
+    /// differs (recycled buffers are reused *without* zeroing — every
+    /// element is overwritten).
+    pub fn compute_into(&mut self, img: &BinnedImage, out: &mut IntegralHistogram) {
+        let n = img.bins * img.h * img.w;
+        out.bins = img.bins;
+        out.h = img.h;
+        out.w = img.w;
+        if out.data.len() != n {
+            out.data.resize(n, 0.0);
+        }
+        let plan = self.planner.plan(img.h, img.w, img.bins, self.workers);
+        self.last_plan = Some(plan);
+        match plan.schedule {
+            Schedule::BinParallel => {
+                crate::histogram::parallel::integral_histogram_parallel_into(
+                    img,
+                    plan.workers,
+                    &mut out.data,
+                );
+            }
+            Schedule::Serial => {
+                self.reset_carries(img);
+                if self.scratches.is_empty() {
+                    self.scratches.push(TileScratch::default());
+                }
+                wavefront::fused_scan_into(
+                    img,
+                    plan.tile,
+                    &mut self.colc,
+                    &mut self.scratches[0],
+                    &mut out.data,
+                );
+            }
+            Schedule::Wavefront => {
+                self.reset_carries(img);
+                wavefront::wavefront_scan_into(
+                    img,
+                    plan.tile,
+                    plan.workers,
+                    &mut self.colc,
+                    &mut self.scratches,
+                    &mut self.wave,
+                    &mut out.data,
+                );
+            }
+        }
+    }
+
+    /// Zero-fill the `bins×h` carry plane, reusing its capacity.
+    fn reset_carries(&mut self, img: &BinnedImage) {
+        self.colc.clear();
+        self.colc.resize(img.bins * img.h, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_image(h: usize, w: usize, bins: usize, seed: u64) -> BinnedImage {
+        let mut rng = Xoshiro256::new(seed);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        BinnedImage::new(h, w, bins, data)
+    }
+
+    #[test]
+    fn engine_matches_algorithm1_across_schedules() {
+        let img = random_image(70, 90, 6, 1);
+        let expected = integral_histogram_seq(&img);
+        for schedule in [Schedule::Serial, Schedule::BinParallel, Schedule::Wavefront] {
+            let planner = Planner {
+                tile_override: Some(16),
+                schedule_override: Some(schedule),
+            };
+            let mut eng = ScanEngine::with_planner(4, planner);
+            let got = eng.compute(&img);
+            assert_eq!(expected.max_abs_diff(&got), 0.0, "{schedule:?}");
+            assert_eq!(eng.last_plan().unwrap().schedule, schedule);
+        }
+    }
+
+    #[test]
+    fn compute_into_reuses_dirty_buffer() {
+        let img_a = random_image(33, 47, 8, 2);
+        let img_b = random_image(33, 47, 8, 3);
+        let mut eng = ScanEngine::new(2);
+        let mut buf = eng.compute(&img_a);
+        // Recompute a different frame into the dirty buffer ...
+        eng.compute_into(&img_b, &mut buf);
+        let fresh = integral_histogram_seq(&img_b);
+        assert_eq!(fresh.max_abs_diff(&buf), 0.0, "dirty reuse must be invisible");
+        // ... and back, bit-identically.
+        eng.compute_into(&img_a, &mut buf);
+        let fresh_a = integral_histogram_seq(&img_a);
+        assert_eq!(fresh_a.max_abs_diff(&buf), 0.0);
+    }
+
+    #[test]
+    fn compute_into_resizes_on_geometry_change() {
+        let mut eng = ScanEngine::new(2);
+        let mut buf = eng.compute(&random_image(16, 16, 4, 4));
+        let big = random_image(40, 24, 2, 5);
+        eng.compute_into(&big, &mut buf);
+        assert_eq!((buf.bins, buf.h, buf.w), (2, 40, 24));
+        assert_eq!(buf.data.len(), 2 * 40 * 24);
+        let expected = integral_histogram_seq(&big);
+        assert_eq!(expected.max_abs_diff(&buf), 0.0);
+    }
+
+    #[test]
+    fn zero_workers_means_available_parallelism() {
+        let eng = ScanEngine::new(0);
+        assert!(eng.workers() >= 1);
+    }
+
+    #[test]
+    fn plan_for_is_stable() {
+        let eng = ScanEngine::new(4);
+        let img = random_image(512, 512, 32, 6);
+        let p = eng.plan_for(&img);
+        assert_eq!(p.schedule, Schedule::Wavefront);
+        assert_eq!(p, eng.planner().plan(512, 512, 32, 4));
+    }
+}

@@ -1,0 +1,175 @@
+//! The execution planner: picks tile size and schedule from the
+//! request geometry and worker budget.
+//!
+//! The paper tunes one kernel configuration per artifact offline
+//! (§4.2's block/tile sweeps); serving arbitrary geometries needs the
+//! choice made per request instead.  The planner is deliberately a
+//! small, deterministic decision table (observable via
+//! [`crate::histogram::engine::ScanEngine::last_plan`]):
+//!
+//! * **Serial** — one worker, fused tile sweep.  Picked when the frame
+//!   is too small to amortize thread hand-off, or only one worker is
+//!   available.
+//! * **BinParallel** — the classic per-bin-plane distribution
+//!   ([`crate::histogram::parallel`]).  Picked only when the tile grid
+//!   degenerates (a single tile row/column) so the wavefront has no
+//!   diagonal to spread over, yet several bin planes exist.
+//! * **Wavefront** — the fused anti-diagonal tile schedule
+//!   ([`crate::histogram::engine::wavefront`]), the default whenever the
+//!   grid is at least 2×2: its parallelism `min(h/t, w/t)` is
+//!   bin-independent and its memory traffic is the WF-TiS single pass.
+
+/// Which execution schedule to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Single-thread fused tile sweep.
+    Serial,
+    /// One worker per bin plane (the paper's OpenMP-style axis).
+    BinParallel,
+    /// Dependency-scheduled anti-diagonal tile wavefront (Algorithm 5).
+    Wavefront,
+}
+
+/// A concrete execution plan for one request geometry.
+///
+/// The tile edge doubles as the cache-blocking knob: inside a tile the
+/// bins are swept plane-major over an L1-resident bucket structure, so
+/// no separate bin-axis blocking dimension exists (see
+/// [`crate::histogram::engine::kernel`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Plan {
+    pub schedule: Schedule,
+    /// Tile edge in pixels.
+    pub tile: usize,
+    /// Workers the schedule will actually use (≤ the engine budget).
+    pub workers: usize,
+}
+
+/// Work (in output elements) below which threading overhead dominates
+/// and the serial schedule wins outright.
+const SERIAL_WORK_LIMIT: usize = 1 << 17;
+
+/// The planner.  Overrides exist so tests and benches can pin a
+/// schedule or tile while keeping the engine's buffer management.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Planner {
+    pub tile_override: Option<usize>,
+    pub schedule_override: Option<Schedule>,
+}
+
+impl Planner {
+    /// Plan for an `h×w`, `bins`-bin request with up to `workers`
+    /// threads.
+    pub fn plan(&self, h: usize, w: usize, bins: usize, workers: usize) -> Plan {
+        assert!(h >= 1 && w >= 1 && bins >= 1, "empty request");
+        let workers = workers.max(1);
+        let tile = self.tile_override.unwrap_or_else(|| default_tile(h, w)).max(1);
+        let tr = h.div_ceil(tile);
+        let tc = w.div_ceil(tile);
+        let diag = tr.min(tc);
+        let schedule = self.schedule_override.unwrap_or({
+            if workers == 1 || bins * h * w < SERIAL_WORK_LIMIT {
+                Schedule::Serial
+            } else if diag == 1 {
+                // No anti-diagonal to spread over; fall back to the
+                // bin axis if it exists.
+                if bins > 1 {
+                    Schedule::BinParallel
+                } else {
+                    Schedule::Serial
+                }
+            } else {
+                Schedule::Wavefront
+            }
+        });
+        let workers = match schedule {
+            Schedule::Serial => 1,
+            Schedule::BinParallel => workers.min(bins),
+            Schedule::Wavefront => workers.min(diag.max(1)),
+        };
+        Plan { schedule, tile, workers }
+    }
+}
+
+/// Default tile edge: 64 (the paper's tuned WF-TiS tile, Fig. 10) for
+/// large frames, shrinking so small frames still get a ≥2-wide grid.
+pub fn default_tile(h: usize, w: usize) -> usize {
+    let m = h.min(w);
+    if m >= 256 {
+        64
+    } else if m >= 64 {
+        32
+    } else {
+        16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn big_frames_go_wavefront() {
+        let p = Planner::default().plan(512, 512, 32, 8);
+        assert_eq!(p.schedule, Schedule::Wavefront);
+        assert_eq!(p.tile, 64);
+        assert_eq!(p.workers, 8);
+    }
+
+    #[test]
+    fn small_frames_go_serial() {
+        let p = Planner::default().plan(64, 64, 8, 8);
+        assert_eq!(p.schedule, Schedule::Serial);
+        assert_eq!(p.workers, 1);
+    }
+
+    #[test]
+    fn single_worker_goes_serial() {
+        let p = Planner::default().plan(512, 512, 32, 1);
+        assert_eq!(p.schedule, Schedule::Serial);
+    }
+
+    #[test]
+    fn degenerate_grid_goes_bin_parallel() {
+        // 1×N image: one tile row — no wavefront diagonal.
+        let p = Planner::default().plan(8, 4096, 32, 4);
+        assert_eq!(p.schedule, Schedule::BinParallel);
+        assert_eq!(p.workers, 4);
+        // ... unless there is only one bin plane too.
+        let p1 = Planner::default().plan(8, 65536, 1, 4);
+        assert_eq!(p1.schedule, Schedule::Serial);
+    }
+
+    #[test]
+    fn wavefront_workers_capped_by_diagonal() {
+        // 128×512 @ tile 32 → 4×16 grid → at most 4 wavefront workers.
+        let p = Planner { tile_override: Some(32), ..Default::default() }.plan(128, 512, 32, 16);
+        assert_eq!(p.schedule, Schedule::Wavefront);
+        assert_eq!(p.workers, 4);
+    }
+
+    #[test]
+    fn overrides_pin_choices() {
+        let p = Planner {
+            tile_override: Some(16),
+            schedule_override: Some(Schedule::Wavefront),
+        }
+        .plan(40, 40, 2, 4);
+        assert_eq!(p.schedule, Schedule::Wavefront);
+        assert_eq!(p.tile, 16);
+    }
+
+    #[test]
+    fn bin_parallel_capped_by_bins() {
+        let p = Planner { schedule_override: Some(Schedule::BinParallel), ..Default::default() }
+            .plan(512, 512, 4, 16);
+        assert_eq!(p.workers, 4);
+    }
+
+    #[test]
+    fn tile_shrinks_with_frame() {
+        assert_eq!(default_tile(512, 512), 64);
+        assert_eq!(default_tile(128, 512), 32);
+        assert_eq!(default_tile(32, 512), 16);
+    }
+}

@@ -1,0 +1,317 @@
+//! Anti-diagonal wavefront execution of the fused tile kernel —
+//! Algorithm 5's schedule reproduced on CPU threads.
+//!
+//! The tile grid forms a DAG: tile `(i, j)` may run once `(i−1, j)` and
+//! `(i, j−1)` are complete (it reads the bottom output row of the tile
+//! above and the `colc` row-prefix carries written by the tile to the
+//! left).  Tiles on the same anti-diagonal are independent, so
+//! parallelism scales with `min(h/t, w/t)` **independent of the bin
+//! count** — the axis the bin-plane-parallel baseline cannot exploit
+//! at low bin counts (§4, Fig. 19b).
+//!
+//! Scheduling is a dependency-counted task pool: each tile carries an
+//! outstanding-dependency counter; finishing a tile decrements its right
+//! and down neighbours and enqueues any that reach zero.  All counter
+//! updates happen under one mutex (two lock acquisitions per tile —
+//! negligible against a tile's ~`bins·t²` element writes), and that same
+//! mutex release/acquire pair orders the plain tile writes between a
+//! task and its dependents, so no atomics are needed on the data path.
+//! Workers share the output tensor and carry plane through
+//! [`SharedTensor`] windows that hand out disjoint row-segment slices —
+//! see the aliasing notes in [`crate::histogram::engine::kernel`].
+
+use crate::histogram::engine::kernel::{scan_tile, SharedTensor, TileScratch};
+use crate::histogram::types::{BinnedImage, IntegralHistogram};
+use std::sync::{Condvar, Mutex};
+
+/// Reusable scheduler storage (dependency counters + ready stack) so a
+/// steady-state frame allocates nothing.
+#[derive(Debug, Default)]
+pub struct WavefrontScratch {
+    deps: Vec<u8>,
+    ready: Vec<u32>,
+}
+
+/// Scheduler state shared under one mutex.  Borrows the reusable
+/// vectors from [`WavefrontScratch`] to keep their capacity across
+/// frames.
+struct Sched<'a> {
+    ready: &'a mut Vec<u32>,
+    deps: &'a mut Vec<u8>,
+    remaining: usize,
+}
+
+/// Serial fused sweep: tiles in row-major order (a linear extension of
+/// the wavefront partial order), all bins per tile.  The single-thread
+/// schedule the planner picks for small frames, and the arbiter the
+/// parallel path is property-tested against.
+pub fn fused_scan_into(
+    img: &BinnedImage,
+    tile: usize,
+    colc: &mut [f32],
+    scratch: &mut TileScratch,
+    out: &mut [f32],
+) {
+    assert!(tile >= 1, "tile must be positive");
+    let (h, w) = (img.h, img.w);
+    scratch.ensure(tile, img.bins);
+    let colc_win = SharedTensor::new(colc);
+    let out_win = SharedTensor::new(out);
+    let mut ti = 0;
+    while ti < h {
+        let th = tile.min(h - ti);
+        let mut tj = 0;
+        while tj < w {
+            let tw = tile.min(w - tj);
+            scan_tile(img, ti, tj, th, tw, &colc_win, &out_win, scratch);
+            tj += tile;
+        }
+        ti += tile;
+    }
+}
+
+/// Wavefront-parallel fused sweep with `workers` threads.
+///
+/// Falls back to the serial sweep when the tile grid offers no
+/// parallelism (a single tile row/column) or `workers <= 1`.
+pub fn wavefront_scan_into(
+    img: &BinnedImage,
+    tile: usize,
+    workers: usize,
+    colc: &mut [f32],
+    scratches: &mut Vec<TileScratch>,
+    ws: &mut WavefrontScratch,
+    out: &mut [f32],
+) {
+    assert!(tile >= 1, "tile must be positive");
+    let (h, w) = (img.h, img.w);
+    let tr = h.div_ceil(tile);
+    let tc = w.div_ceil(tile);
+    let n_tasks = tr * tc;
+    let workers = workers.clamp(1, tr.min(tc));
+    if scratches.is_empty() {
+        scratches.push(TileScratch::default());
+    }
+    if workers <= 1 || n_tasks == 1 {
+        fused_scan_into(img, tile, colc, &mut scratches[0], out);
+        return;
+    }
+    if scratches.len() < workers {
+        scratches.resize_with(workers, TileScratch::default);
+    }
+    for s in scratches[..workers].iter_mut() {
+        s.ensure(tile, img.bins);
+    }
+    assert_eq!(colc.len(), img.bins * h);
+    assert_eq!(out.len(), img.bins * h * w);
+
+    // Seed the dependency counters: left and top neighbours.
+    ws.deps.clear();
+    ws.deps.resize(n_tasks, 0);
+    for i in 0..tr {
+        for j in 0..tc {
+            ws.deps[i * tc + j] = (i > 0) as u8 + (j > 0) as u8;
+        }
+    }
+    ws.ready.clear();
+    ws.ready.push(0);
+
+    let state = Mutex::new(Sched {
+        ready: &mut ws.ready,
+        deps: &mut ws.deps,
+        remaining: n_tasks,
+    });
+    let cv = Condvar::new();
+    let out_win = SharedTensor::new(out);
+    let colc_win = SharedTensor::new(colc);
+
+    let run_worker = |scratch: &mut TileScratch| {
+        loop {
+            // Claim the next ready tile (or exit once all are done).
+            let task = {
+                let mut st = state.lock().expect("scheduler lock");
+                loop {
+                    if let Some(t) = st.ready.pop() {
+                        break Some(t as usize);
+                    }
+                    if st.remaining == 0 {
+                        break None;
+                    }
+                    st = cv.wait(st).expect("scheduler wait");
+                }
+            };
+            let Some(t) = task else { break };
+            let (i, j) = (t / tc, t % tc);
+            let (ti, tj) = (i * tile, j * tile);
+            let th = tile.min(h - ti);
+            let tw = tile.min(w - tj);
+            // The dependency order gives this task exclusive claim to
+            // its tile's row segments of `out` (per bin) and rows
+            // [ti, ti+th) of `colc`; its only cross-task reads (the
+            // tile above's bottom row) were published under the
+            // scheduler mutex we just acquired.  `scan_tile` borrows
+            // exactly those disjoint segments through the windows.
+            scan_tile(img, ti, tj, th, tw, &colc_win, &out_win, scratch);
+            // Publish completion: unlock right/down neighbours.
+            let mut st = state.lock().expect("scheduler lock");
+            st.remaining -= 1;
+            let mut woke = 0usize;
+            if j + 1 < tc {
+                st.deps[t + 1] -= 1;
+                if st.deps[t + 1] == 0 {
+                    st.ready.push((t + 1) as u32);
+                    woke += 1;
+                }
+            }
+            if i + 1 < tr {
+                st.deps[t + tc] -= 1;
+                if st.deps[t + tc] == 0 {
+                    st.ready.push((t + tc) as u32);
+                    woke += 1;
+                }
+            }
+            let all_done = st.remaining == 0;
+            drop(st);
+            if all_done {
+                cv.notify_all();
+            } else {
+                for _ in 0..woke {
+                    cv.notify_one();
+                }
+            }
+        }
+    };
+
+    std::thread::scope(|scope| {
+        let (first, rest) = scratches.split_at_mut(1);
+        let rw = &run_worker;
+        for scratch in rest[..workers - 1].iter_mut() {
+            scope.spawn(move || rw(scratch));
+        }
+        // The calling thread is worker 0.
+        rw(&mut first[0]);
+    });
+}
+
+/// Allocating convenience wrapper over [`fused_scan_into`] — the
+/// single-thread fused baseline for benches and property tests.
+pub fn integral_histogram_fused(img: &BinnedImage, tile: usize) -> IntegralHistogram {
+    let mut out = IntegralHistogram::zeros(img.bins, img.h, img.w);
+    let mut colc = vec![0.0f32; img.bins * img.h];
+    let mut scratch = TileScratch::default();
+    fused_scan_into(img, tile, &mut colc, &mut scratch, &mut out.data);
+    out
+}
+
+/// Allocating convenience wrapper over [`wavefront_scan_into`].
+pub fn integral_histogram_wavefront(
+    img: &BinnedImage,
+    tile: usize,
+    workers: usize,
+) -> IntegralHistogram {
+    let mut out = IntegralHistogram::zeros(img.bins, img.h, img.w);
+    let mut colc = vec![0.0f32; img.bins * img.h];
+    let mut scratches = Vec::new();
+    let mut ws = WavefrontScratch::default();
+    wavefront_scan_into(img, tile, workers, &mut colc, &mut scratches, &mut ws, &mut out.data);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_image(h: usize, w: usize, bins: usize, seed: u64) -> BinnedImage {
+        let mut rng = Xoshiro256::new(seed);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        BinnedImage::new(h, w, bins, data)
+    }
+
+    #[test]
+    fn fused_matches_algorithm1() {
+        let img = random_image(37, 53, 8, 2);
+        let expected = integral_histogram_seq(&img);
+        for tile in [1usize, 5, 16, 40, 64, 100] {
+            let got = integral_histogram_fused(&img, tile);
+            assert_eq!(expected.max_abs_diff(&got), 0.0, "tile={tile}");
+        }
+    }
+
+    #[test]
+    fn wavefront_matches_algorithm1() {
+        let img = random_image(64, 96, 8, 3);
+        let expected = integral_histogram_seq(&img);
+        for tile in [8usize, 16, 32] {
+            for workers in [1usize, 2, 3, 4] {
+                let got = integral_histogram_wavefront(&img, tile, workers);
+                assert_eq!(
+                    expected.max_abs_diff(&got),
+                    0.0,
+                    "tile={tile} workers={workers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wavefront_ragged_edges() {
+        let img = random_image(45, 77, 4, 4);
+        let expected = integral_histogram_seq(&img);
+        let got = integral_histogram_wavefront(&img, 16, 4);
+        assert_eq!(expected.max_abs_diff(&got), 0.0);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        for (h, w) in [(1usize, 33usize), (29, 1), (1, 1), (2, 200)] {
+            let img = random_image(h, w, 3, (h + w) as u64);
+            let expected = integral_histogram_seq(&img);
+            let got = integral_histogram_wavefront(&img, 8, 4);
+            assert_eq!(expected.max_abs_diff(&got), 0.0, "{h}x{w}");
+        }
+    }
+
+    #[test]
+    fn single_bin_and_padding() {
+        let mut img = random_image(20, 20, 1, 9);
+        img.data[5] = -1;
+        img.data[399] = -1;
+        let expected = integral_histogram_seq(&img);
+        let got = integral_histogram_wavefront(&img, 8, 2);
+        assert_eq!(expected.max_abs_diff(&got), 0.0);
+    }
+
+    /// Integer counts in f32: the parallel schedule must be bit-identical
+    /// across runs (no accumulation-order ambiguity).
+    #[test]
+    fn wavefront_is_deterministic() {
+        let img = random_image(48, 48, 8, 11);
+        let a = integral_histogram_wavefront(&img, 16, 4);
+        let b = integral_histogram_wavefront(&img, 16, 4);
+        assert_eq!(a, b);
+    }
+
+    /// Property sweep across random shapes, tiles, workers, bin blocks.
+    #[test]
+    fn property_sweep() {
+        let mut rng = Xoshiro256::new(0xAB5E);
+        for _ in 0..12 {
+            let h = rng.range(1, 60);
+            let w = rng.range(1, 60);
+            let bins = rng.range(1, 10);
+            let tile = rng.range(1, 34);
+            let workers = rng.range(1, 5);
+            let img = random_image(h, w, bins, rng.next_u64());
+            let expected = integral_histogram_seq(&img);
+            let got = integral_histogram_wavefront(&img, tile, workers);
+            assert_eq!(
+                expected.max_abs_diff(&got),
+                0.0,
+                "h={h} w={w} bins={bins} tile={tile} workers={workers}"
+            );
+        }
+    }
+}

@@ -12,6 +12,9 @@
 //! * [`tiled`] — cache-blocked single-pass CPU variant: the WF-TiS data
 //!   movement scheme applied to the CPU cache hierarchy (used by the
 //!   §Perf pass and as another baseline).
+//! * [`engine`] — the hot path: the planned `ScanEngine` (multi-bin
+//!   fused tile sweeps, anti-diagonal wavefront scheduling, zero-alloc
+//!   buffer reuse) that the baselines above are comparators for.
 //! * [`scan`] — prefix-sum helpers + the Eq. 4 scan-efficiency model.
 //! * [`region`] — Eq. 2 constant-time region queries and batched lookups.
 //! * [`binning`] — intensity→bin quantization (the Q function input).
@@ -20,6 +23,7 @@
 //!   spatio-temporal integral histograms with 8-corner box queries.
 
 pub mod binning;
+pub mod engine;
 pub mod parallel;
 pub mod region;
 pub mod scan;

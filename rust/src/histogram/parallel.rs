@@ -20,23 +20,33 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// each worker computes its plane with the tuned running-row-sum kernel.
 /// With `threads == 1` this degenerates to the sequential baseline.
 pub fn integral_histogram_parallel(img: &BinnedImage, threads: usize) -> IntegralHistogram {
+    let mut ih = IntegralHistogram::zeros(img.bins, img.h, img.w);
+    integral_histogram_parallel_into(img, threads, &mut ih.data);
+    ih
+}
+
+/// In-place variant writing into a caller-provided `bins×h×w` buffer
+/// (every element is overwritten, so recycled storage needs no zeroing).
+/// This is the `BinParallel` schedule of the
+/// [`crate::histogram::engine::ScanEngine`].
+pub fn integral_histogram_parallel_into(img: &BinnedImage, threads: usize, out: &mut [f32]) {
     assert!(threads >= 1, "need at least one thread");
     let (h, w, bins) = (img.h, img.w, img.bins);
-    let mut ih = IntegralHistogram::zeros(bins, h, w);
     let plane = h * w;
+    assert_eq!(out.len(), bins * plane, "output buffer must be bins*h*w");
 
     if threads == 1 || bins == 1 {
         // avoid thread overhead in the degenerate case
-        for (k, chunk) in ih.data.chunks_mut(plane).enumerate() {
+        for (k, chunk) in out.chunks_mut(plane).enumerate() {
             fill_plane_rowsum(img, k as i32, chunk);
         }
-        return ih;
+        return;
     }
 
     let next = AtomicUsize::new(0);
     // Split the output buffer into per-bin chunks so each worker owns
     // disjoint memory (no locks on the hot path).
-    let chunks: Vec<&mut [f32]> = ih.data.chunks_mut(plane).collect();
+    let chunks: Vec<&mut [f32]> = out.chunks_mut(plane).collect();
     // Hand out chunks through a mutex-free work queue: each worker grabs
     // plane indices from the atomic counter and writes into the matching
     // chunk, transferred via raw pointer because chunks are disjoint.
@@ -61,7 +71,6 @@ pub fn integral_histogram_parallel(img: &BinnedImage, threads: usize) -> Integra
             });
         }
     });
-    ih
 }
 
 /// Compute one bin plane into `out` (len h·w) with the running-row-sum
@@ -212,5 +221,16 @@ mod tests {
         let a = integral_histogram_parallel(&img, 8);
         let b = integral_histogram_parallel(&img, 8);
         assert_eq!(a, b);
+    }
+
+    /// The in-place variant overwrites recycled (dirty) storage fully.
+    #[test]
+    fn into_variant_overwrites_dirty_buffer() {
+        let img = random_image(19, 23, 4, 6);
+        let expected = integral_histogram_seq(&img);
+        let mut buf = vec![f32::NAN; 4 * 19 * 23];
+        integral_histogram_parallel_into(&img, 3, &mut buf);
+        let got = IntegralHistogram::from_raw(4, 19, 23, buf);
+        assert_eq!(expected.max_abs_diff(&got), 0.0);
     }
 }

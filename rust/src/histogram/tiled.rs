@@ -7,6 +7,11 @@
 //! block) it yields the optimized single-thread baseline used by the
 //! §Perf pass, and doubles as an executable model of the Algorithm 5
 //! data flow that the property tests validate against Algorithm 1.
+//!
+//! Note these variants are still **bin-major** (the whole image is
+//! re-read once per bin plane); the serving hot path is the multi-bin
+//! fused [`crate::histogram::engine::ScanEngine`], which this module
+//! remains a benchmark baseline for (`benches/hotpath.rs`).
 
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
 

@@ -144,6 +144,23 @@ impl IntegralHistogram {
         IntegralHistogram { bins, h, w, data }
     }
 
+    /// Rebuild a tensor over **recycled** storage: the buffer is resized
+    /// to `bins·h·w` but retained elements are *not* zeroed — contents
+    /// are unspecified until a full-overwrite kernel (e.g.
+    /// [`crate::histogram::engine::ScanEngine::compute_into`]) fills
+    /// them.  This is the `FramePool` reuse primitive that removes the
+    /// per-frame `zeros()` allocation+memset from the hot path.
+    pub fn from_storage(bins: usize, h: usize, w: usize, mut storage: Vec<f32>) -> Self {
+        storage.resize(bins * h * w, 0.0);
+        IntegralHistogram { bins, h, w, data: storage }
+    }
+
+    /// Surrender the backing storage for recycling (the inverse of
+    /// [`Self::from_storage`]).
+    pub fn into_storage(self) -> Vec<f32> {
+        self.data
+    }
+
     #[inline]
     pub fn idx(&self, b: usize, r: usize, c: usize) -> usize {
         (b * self.h + r) * self.w + c
@@ -266,5 +283,24 @@ mod tests {
     #[should_panic]
     fn from_raw_rejects_bad_len() {
         IntegralHistogram::from_raw(2, 2, 2, vec![0.0; 7]);
+    }
+
+    #[test]
+    fn storage_roundtrip_keeps_capacity() {
+        let ih = IntegralHistogram::zeros(2, 4, 4);
+        let mut buf = ih.into_storage();
+        assert_eq!(buf.len(), 32);
+        buf[0] = 9.0; // dirty
+        let cap = buf.capacity();
+        // same-size rebuild: no realloc, dirty contents retained
+        let ih2 = IntegralHistogram::from_storage(2, 4, 4, buf);
+        assert_eq!(ih2.data.capacity(), cap);
+        assert_eq!(ih2.data[0], 9.0);
+        // smaller rebuild truncates, larger grows (new tail zeroed)
+        let ih3 = IntegralHistogram::from_storage(1, 2, 2, ih2.into_storage());
+        assert_eq!(ih3.data.len(), 4);
+        let ih4 = IntegralHistogram::from_storage(3, 4, 4, ih3.into_storage());
+        assert_eq!(ih4.data.len(), 48);
+        assert_eq!(ih4.data[47], 0.0);
     }
 }

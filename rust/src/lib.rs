@@ -10,8 +10,9 @@
 //!   `artifacts/`.
 //! * **Layer 3 (this crate)** — the serving runtime: a PJRT executor that
 //!   loads the artifacts ([`runtime`]), a dual-buffered frame pipeline and
-//!   a multi-device bin task queue ([`coordinator`]), the CPU baselines
-//!   and region-query engine ([`histogram`]), a PCIe transfer simulator
+//!   a multi-device bin task queue ([`coordinator`]), the planned
+//!   zero-allocation wavefront `ScanEngine` plus the CPU baselines and
+//!   region-query engine ([`histogram`]), a PCIe transfer simulator
 //!   ([`simulator`]), synthetic video sources ([`video`]) and
 //!   histogram-based analytics built on top ([`analytics`]).
 //!
@@ -44,9 +45,13 @@ pub mod video;
 
 /// Convenient re-exports for downstream users.
 pub mod prelude {
-    pub use crate::coordinator::pipeline::{Pipeline, PipelineConfig, PipelineReport};
+    pub use crate::coordinator::frame_pool::{FramePool, PooledTensor, PoolStats};
+    pub use crate::coordinator::pipeline::{
+        CpuPipeline, CpuPipelineConfig, Pipeline, PipelineConfig, PipelineReport,
+    };
     pub use crate::coordinator::router::{Engine, EngineConfig};
     pub use crate::coordinator::task_queue::{BinTaskQueue, TaskQueueConfig};
+    pub use crate::histogram::engine::{Plan, Planner, ScanEngine, Schedule};
     pub use crate::histogram::region::Rect;
     pub use crate::histogram::types::{IntegralHistogram, Strategy};
     pub use crate::runtime::artifact::{ArtifactManifest, ArtifactMeta};

@@ -97,6 +97,12 @@ impl VideoFrame {
         quantize_frame(&self.pixels, self.h, self.w, bins)
     }
 
+    /// Quantize into a recycled [`BinnedImage`] (no allocation once its
+    /// capacity suffices) — used by the zero-alloc pipeline path.
+    pub fn binned_into(&self, bins: usize, out: &mut BinnedImage) {
+        crate::histogram::binning::quantize_frame_into(&self.pixels, self.h, self.w, bins, out);
+    }
+
     pub fn nbytes(&self) -> usize {
         self.pixels.len()
     }

@@ -1,0 +1,207 @@
+//! Property tests for the `ScanEngine` subsystem: every planner
+//! schedule must reproduce the Algorithm-1 literal bit-exactly on
+//! adversarial shapes, recycled `FramePool` buffers must be invisible
+//! in the output, and the zero-alloc `CpuPipeline` path must keep its
+//! arena counters flat in steady state.
+
+use inthist::coordinator::frame_pool::FramePool;
+use inthist::coordinator::pipeline::{CpuPipeline, CpuPipelineConfig};
+use inthist::histogram::engine::{Planner, ScanEngine, Schedule};
+use inthist::histogram::sequential::integral_histogram_seq;
+use inthist::histogram::types::BinnedImage;
+use inthist::util::prng::Xoshiro256;
+use inthist::video::synth::SyntheticVideo;
+use std::sync::Mutex;
+
+fn random_image(rng: &mut Xoshiro256, h: usize, w: usize, bins: usize) -> BinnedImage {
+    let mut data = vec![0i32; h * w];
+    rng.fill_bins(&mut data, bins as u32);
+    BinnedImage::new(h, w, bins, data)
+}
+
+/// Adversarial geometries: single row/column, dims not multiples of the
+/// tile, single pixel, extreme aspect ratios.
+const ADVERSARIAL: [(usize, usize); 8] =
+    [(1, 1), (1, 97), (83, 1), (37, 53), (64, 64), (5, 301), (129, 96), (17, 250)];
+
+#[test]
+fn every_schedule_matches_algorithm1_on_adversarial_shapes() {
+    let mut rng = Xoshiro256::new(0xE27);
+    for &(h, w) in &ADVERSARIAL {
+        for bins in [1usize, 3, 32] {
+            // tiles: smaller than, equal to, not dividing, and larger
+            // than the image extent
+            for tile in [4usize, 16, 64, 300] {
+                let img = random_image(&mut rng, h, w, bins);
+                let expected = integral_histogram_seq(&img);
+                for schedule in [Schedule::Serial, Schedule::BinParallel, Schedule::Wavefront] {
+                    let planner = Planner {
+                        tile_override: Some(tile),
+                        schedule_override: Some(schedule),
+                    };
+                    let mut eng = ScanEngine::with_planner(4, planner);
+                    let got = eng.compute(&img);
+                    assert_eq!(
+                        expected.max_abs_diff(&got),
+                        0.0,
+                        "h={h} w={w} bins={bins} tile={tile} {schedule:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_planner_matches_algorithm1_randomized() {
+    let mut rng = Xoshiro256::new(0x91A);
+    for case in 0..20 {
+        let h = rng.range(1, 90);
+        let w = rng.range(1, 90);
+        let bins = rng.range(1, 33);
+        let workers = rng.range(1, 6);
+        let img = random_image(&mut rng, h, w, bins);
+        let expected = integral_histogram_seq(&img);
+        let mut eng = ScanEngine::new(workers);
+        let got = eng.compute(&img);
+        let plan = eng.last_plan().unwrap();
+        assert_eq!(
+            expected.max_abs_diff(&got),
+            0.0,
+            "case {case}: h={h} w={w} bins={bins} workers={workers} plan={plan:?}"
+        );
+    }
+}
+
+/// Padding pixels (bin −1, the §3.4 rule) count in no plane under every
+/// schedule.
+#[test]
+fn padding_pixels_count_nowhere() {
+    let mut rng = Xoshiro256::new(7);
+    let mut img = random_image(&mut rng, 41, 29, 8);
+    for i in (0..img.data.len()).step_by(7) {
+        img.data[i] = -1;
+    }
+    let expected = integral_histogram_seq(&img);
+    for schedule in [Schedule::Serial, Schedule::BinParallel, Schedule::Wavefront] {
+        let planner = Planner { tile_override: Some(16), schedule_override: Some(schedule) };
+        let mut eng = ScanEngine::with_planner(3, planner);
+        let got = eng.compute(&img);
+        assert_eq!(expected.max_abs_diff(&got), 0.0, "{schedule:?}");
+    }
+}
+
+/// The FramePool reuse contract: a recycled (dirty) buffer yields
+/// bit-identical output, and reuse is observable in the counters.
+#[test]
+fn frame_pool_reuse_is_bit_identical() {
+    let pool = FramePool::new();
+    let video = SyntheticVideo::new(96, 112, 3, 21);
+    let img_a = video.frame(0).binned(16);
+    let img_b = video.frame(7).binned(16);
+    let mut eng = ScanEngine::new(4);
+
+    let fresh_a = integral_histogram_seq(&img_a);
+    let fresh_b = integral_histogram_seq(&img_b);
+
+    let mut t = pool.acquire(16, 96, 112);
+    eng.compute_into(&img_a, &mut t);
+    assert_eq!(fresh_a.max_abs_diff(&t), 0.0);
+    pool.release(t);
+
+    // Recycle the dirty buffer for a different frame ...
+    let mut t = pool.acquire(16, 96, 112);
+    eng.compute_into(&img_b, &mut t);
+    assert_eq!(fresh_b.max_abs_diff(&t), 0.0, "dirty reuse must be invisible");
+    pool.release(t);
+
+    // ... and back again, bit-identically to the first pass.
+    let mut t = pool.acquire(16, 96, 112);
+    eng.compute_into(&img_a, &mut t);
+    assert_eq!(fresh_a.max_abs_diff(&t), 0.0);
+    pool.release(t);
+
+    let stats = pool.stats();
+    assert_eq!(stats.allocated, 1, "one buffer must serve every frame");
+    assert_eq!(stats.reused, 2);
+    assert_eq!(stats.idle, 1);
+}
+
+/// Steady-state CpuPipeline: every frame correct and in order, and the
+/// tensor arena stops allocating after warm-up (the zero-alloc claim).
+#[test]
+fn cpu_pipeline_is_zero_alloc_in_steady_state() {
+    let frames = 12usize;
+    let lanes = 2usize;
+    let (h, w, bins) = (128usize, 160usize, 8usize);
+    let video = SyntheticVideo::new(h, w, 3, 5);
+    let pipeline = CpuPipeline::new(CpuPipelineConfig::new(bins).lanes(lanes).workers(2));
+    let src = Box::new(SyntheticVideo::new(h, w, 3, 5).take_frames(frames));
+    let seen = Mutex::new(Vec::new());
+    let report = pipeline
+        .run_with(src, |seq, ih| {
+            assert_eq!((ih.bins, ih.h, ih.w), (bins, h, w));
+            let expected = integral_histogram_seq(&video.frame(seq).binned(bins));
+            assert_eq!(expected.max_abs_diff(&ih), 0.0, "frame {seq}");
+            seen.lock().unwrap().push(seq);
+            // dropping `ih` here returns its buffer to the arena
+        })
+        .expect("pipeline run");
+    assert_eq!(report.throughput.frames, frames);
+    assert_eq!(*seen.lock().unwrap(), (0..frames).collect::<Vec<_>>());
+    let stats = pipeline.pool().stats();
+    // Live tensors are bounded by the pipeline depth (compute stage +
+    // lanes queued + sink), never by the frame count: after warm-up
+    // every frame reuses a returned buffer.
+    assert!(
+        stats.allocated <= lanes + 2,
+        "steady state must not allocate per frame: {stats:?}"
+    );
+    assert_eq!(stats.allocated + stats.reused, frames);
+    assert!(stats.reused >= frames - (lanes + 2));
+}
+
+/// Serial (lanes = 1) CPU pipeline agrees and recycles through one
+/// buffer.
+#[test]
+fn cpu_pipeline_serial_lane() {
+    let video = SyntheticVideo::new(64, 64, 2, 9);
+    let pipeline = CpuPipeline::new(CpuPipelineConfig::new(4).lanes(1));
+    let src = Box::new(SyntheticVideo::new(64, 64, 2, 9).take_frames(5));
+    let mut checked = 0usize;
+    let report = pipeline
+        .run_with(src, |seq, ih| {
+            let expected = integral_histogram_seq(&video.frame(seq).binned(4));
+            assert_eq!(expected.max_abs_diff(&ih), 0.0);
+            checked += 1;
+        })
+        .expect("serial run");
+    assert_eq!(report.lanes, 1);
+    assert_eq!(checked, 5);
+    let stats = pipeline.pool().stats();
+    assert_eq!(stats.allocated, 1, "serial lane cycles one buffer: {stats:?}");
+    assert_eq!(stats.reused, 4);
+}
+
+/// A sink may detach a tensor from the arena with `take` — it must not
+/// return to the pool.
+#[test]
+fn pipeline_sink_can_keep_tensors() {
+    let pipeline = CpuPipeline::new(CpuPipelineConfig::new(4).lanes(2));
+    let src = Box::new(SyntheticVideo::new(32, 32, 1, 3).take_frames(3));
+    let kept = Mutex::new(Vec::new());
+    pipeline
+        .run_with(src, |seq, ih| {
+            if seq == 1 {
+                kept.lock().unwrap().push(ih.take());
+            }
+        })
+        .expect("run");
+    assert_eq!(kept.lock().unwrap().len(), 1);
+    let stats = pipeline.pool().stats();
+    assert_eq!(
+        stats.allocated,
+        stats.idle + 1,
+        "the detached tensor must not be on the free list: {stats:?}"
+    );
+}

@@ -1,0 +1,221 @@
+//! Offline drop-in subset of the `anyhow` API.
+//!
+//! The build environment has no crates.io access, so this path crate
+//! provides the slice of `anyhow` the workspace actually uses: the
+//! [`Error`] type (a flattened cause chain), the [`Result`] alias, the
+//! [`anyhow!`] / [`bail!`] macros, and the [`Context`] extension trait
+//! for both `Result` and `Option`.
+//!
+//! Semantics mirror upstream where it matters here:
+//! * any `E: std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?` (the cause chain is captured eagerly as strings);
+//! * `{}` displays the outermost message, `{:#}` the full chain
+//!   separated by `": "` (the format `main.rs` prints);
+//! * [`Error`] deliberately does **not** implement `std::error::Error`,
+//!   which is what keeps the blanket `From` impl coherent — same trick
+//!   as upstream.
+
+use std::fmt;
+
+/// Error type: an outermost message plus its flattened cause chain.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a higher-level context message to the chain.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for (i, cause) in rest.iter().enumerate() {
+                        write!(f, "\n    {i}: {cause}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Capture `e` and every `source()` below it as the cause chain.
+/// (`Error` itself does not implement `std::error::Error`, so this
+/// blanket impl does not overlap the reflexive `From<Error>`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait attaching context to fallible values.
+pub trait Context<T> {
+    /// Wrap the error with a fixed higher-level message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily evaluated message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable expression — the upstream `anyhow!` surface.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(e.to_string(), "gone");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+        assert_eq!(Some(3u8).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+        let s = String::from("owned message");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "owned message");
+        fn f() -> Result<()> {
+            bail!("stop {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop 1");
+    }
+
+    #[test]
+    fn debug_shows_chain() {
+        let e = Error::msg("root").context("mid").context("top");
+        let d = format!("{e:?}");
+        assert!(d.contains("top") && d.contains("Caused by") && d.contains("root"), "{d}");
+    }
+
+    #[test]
+    fn chain_iterates_outside_in() {
+        let e = Error::msg("root").context("top");
+        let v: Vec<&str> = e.chain().collect();
+        assert_eq!(v, vec!["top", "root"]);
+    }
+}
