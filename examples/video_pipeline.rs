@@ -65,6 +65,11 @@ fn main() -> Result<()> {
         println!("wall time         : {:.3} s", t.wall.as_secs_f64());
         println!("frame rate        : {:.2} fr/sec", t.fps());
         println!("mean latency      : {:.1} ms", t.mean_latency().as_secs_f64() * 1e3);
+        let lat = t.latency_summary();
+        println!(
+            "latency tail      : p50 {:.1} | p95 {:.1} | p99 {:.1} ms, jitter {:.2} ms",
+            lat.p50_ms, lat.p95_ms, lat.p99_ms, lat.jitter_ms
+        );
         println!(
             "stage totals (ms) : read {:.0} | h2d {:.0} | kernel {:.0} | d2h {:.0}",
             t.stage_total(|s| s.read).as_secs_f64() * 1e3,

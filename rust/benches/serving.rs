@@ -1,0 +1,226 @@
+//! Bench: multi-stream serving throughput and latency percentiles.
+//!
+//! Establishes the serving-layer perf trajectory the ISSUE-2 tentpole
+//! targets: one shared `Server`, N concurrent streams (sessions) of
+//! 640×480 frames at 32 bins, measuring aggregate fps, per-stream fps
+//! and the p50/p95/p99 + jitter latency distribution as the stream
+//! count grows (1/2/4/8).  Per-stream compute is pinned to one worker
+//! so the scaling axis is *streams*, exactly the "many concurrent
+//! histogram streams" regime of the adaptive-CUDA-streams follow-up
+//! work (PAPERS.md).
+//!
+//! A second section drives one 4-worker session to exercise the
+//! persistent `WorkerPool`: its reuse counters (threads spawned once,
+//! one pool job per frame, zero steady-state arena allocations) are
+//! reported alongside.
+//!
+//! Emits `BENCH_serving.json` at the repo root.
+
+use inthist::coordinator::server::{Server, ServerConfig};
+use inthist::runtime::artifact::ArtifactManifest;
+use inthist::video::source::VideoFrame;
+use inthist::video::synth::SyntheticVideo;
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+const H: usize = 480;
+const W: usize = 640;
+const BINS: usize = 32;
+const DISTINCT: usize = 8;
+
+fn offline_manifest() -> Arc<ArtifactManifest> {
+    // The serving bench measures the CPU substrate; with artifacts
+    // absent the server routes every frame to the ScanEngine path.
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Arc::new(ArtifactManifest::load(&dir).unwrap_or(ArtifactManifest {
+        dir,
+        profile: "offline".into(),
+        artifacts: vec![],
+    }))
+}
+
+fn stream_frames(seed: u64) -> Vec<VideoFrame> {
+    let video = SyntheticVideo::new(H, W, 3, seed);
+    (0..DISTINCT).map(|t| video.frame(t)).collect()
+}
+
+struct StreamsRow {
+    streams: usize,
+    frames: usize,
+    wall_s: f64,
+    aggregate_fps: f64,
+    per_stream_fps: f64,
+    latency: inthist::coordinator::metrics::LatencySummary,
+    engines_created: usize,
+    threads_spawned: usize,
+}
+
+fn run_streams(streams: usize, frames_per_stream: usize, workers_per_stream: usize) -> StreamsRow {
+    let mut cfg = ServerConfig::default();
+    cfg.engine.bins = BINS;
+    cfg.workers_per_stream = workers_per_stream;
+    cfg.max_sessions = streams.max(1) * 2;
+    let server = Server::new(offline_manifest(), cfg);
+
+    // Pre-generate every stream's frames outside the timed region.
+    let frames: Vec<Vec<VideoFrame>> = (0..streams).map(|s| stream_frames(7 + s as u64)).collect();
+    // Two-phase start: `ready` fences all warm-ups, then the main
+    // thread clears the latency reservoir (so percentiles describe
+    // steady state only) before `go` releases the timed loops.
+    let ready = Barrier::new(streams + 1);
+    let go = Barrier::new(streams + 1);
+
+    let server_ref = &server;
+    let ready_ref = &ready;
+    let go_ref = &go;
+    // The closure's return value is the start instant (taken when the
+    // `go` barrier releases every stream); `scope` returns after all
+    // stream threads drained, so `elapsed` is the aggregate wall time.
+    let t0 = std::thread::scope(|scope| {
+        for fs in frames.iter() {
+            scope.spawn(move || {
+                let mut session = server_ref.open_session().expect("admitted");
+                // Warm the lane: engine scratch + one arena tensor.
+                let _ = session.process(&fs[0]).expect("warm-up");
+                ready_ref.wait();
+                go_ref.wait();
+                for i in 0..frames_per_stream {
+                    let ih = session.process(&fs[i % DISTINCT]).expect("frame");
+                    std::hint::black_box(&ih);
+                }
+            });
+        }
+        ready_ref.wait();
+        server_ref.reset_latency_stats();
+        go_ref.wait();
+        Instant::now()
+    });
+    let wall = t0.elapsed();
+
+    let snap = server.snapshot();
+    let total = streams * frames_per_stream;
+    let wall_s = wall.as_secs_f64().max(1e-9);
+    StreamsRow {
+        streams,
+        frames: total,
+        wall_s,
+        aggregate_fps: total as f64 / wall_s,
+        per_stream_fps: total as f64 / wall_s / streams as f64,
+        latency: snap.latency,
+        engines_created: snap.engines_created,
+        threads_spawned: snap.threads_spawned,
+    }
+}
+
+fn main() {
+    let reps: usize = std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let frames_per_stream = 8 * reps;
+
+    // --- stream-count scaling sweep (1 worker per stream) ---
+    println!("## multi-stream serving, {W}x{H}x{BINS} bins, {frames_per_stream} frames/stream");
+    println!(
+        "{:<10} {:>10} {:>14} {:>14} {:>9} {:>9} {:>9} {:>10}",
+        "streams", "frames", "aggregate fps", "fps/stream", "p50 ms", "p95 ms", "p99 ms", "jitter ms"
+    );
+    let mut rows = Vec::new();
+    for streams in [1usize, 2, 4, 8] {
+        let row = run_streams(streams, frames_per_stream, 1);
+        println!(
+            "{:<10} {:>10} {:>14.1} {:>14.1} {:>9.2} {:>9.2} {:>9.2} {:>10.3}",
+            row.streams,
+            row.frames,
+            row.aggregate_fps,
+            row.per_stream_fps,
+            row.latency.p50_ms,
+            row.latency.p95_ms,
+            row.latency.p99_ms,
+            row.latency.jitter_ms
+        );
+        rows.push(row);
+    }
+    let fps1 = rows[0].aggregate_fps;
+    let scaling4 = rows.iter().find(|r| r.streams == 4).map(|r| r.aggregate_fps / fps1).unwrap_or(0.0);
+    let scaling8 = rows.iter().find(|r| r.streams == 8).map(|r| r.aggregate_fps / fps1).unwrap_or(0.0);
+    println!("aggregate scaling: 4 streams = {scaling4:.2}x of 1 stream (target >= 1.5x), 8 streams = {scaling8:.2}x\n");
+
+    // --- worker-pool reuse: one 4-worker stream in steady state ---
+    let pool_frames = 8 * reps;
+    let mut cfg = ServerConfig::default();
+    cfg.engine.bins = BINS;
+    cfg.workers_per_stream = 4;
+    let server = Server::new(offline_manifest(), cfg);
+    let frames = stream_frames(3);
+    let mut session = server.open_session().expect("admitted");
+    let _ = session.process(&frames[0]).expect("warm-up"); // spawn + allocate once
+    let warm = server.snapshot();
+    let t0 = Instant::now();
+    for i in 0..pool_frames {
+        let ih = session.process(&frames[i % DISTINCT]).expect("frame");
+        std::hint::black_box(&ih);
+    }
+    let pool_wall = t0.elapsed().as_secs_f64().max(1e-9);
+    drop(session);
+    let steady = server.snapshot();
+    let pool_fps = pool_frames as f64 / pool_wall;
+    println!("## worker-pool steady state, 1 stream x 4 workers, {pool_frames} frames");
+    println!(
+        "fps {:.1} | engines created {} | threads spawned {} (warm {}) | pool jobs {} | arena allocated {} reused {}",
+        pool_fps,
+        steady.engines_created,
+        steady.threads_spawned,
+        warm.threads_spawned,
+        steady.pool_jobs,
+        steady.frame_pool.allocated,
+        steady.frame_pool.reused
+    );
+    let zero_spawn_steady_state = steady.threads_spawned == warm.threads_spawned
+        && steady.engines_created == warm.engines_created
+        && steady.frame_pool.allocated == warm.frame_pool.allocated;
+    println!("zero-spawn, zero-alloc steady state: {zero_spawn_steady_state}\n");
+
+    // --- machine-readable report at the repo root ---
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"serving\",\n");
+    json.push_str(&format!("  \"reps\": {reps},\n"));
+    json.push_str(&format!(
+        "  \"config\": {{\"h\": {H}, \"w\": {W}, \"bins\": {BINS}, \"frames_per_stream\": {frames_per_stream}, \"workers_per_stream\": 1}},\n"
+    ));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"streams\": {}, \"frames\": {}, \"wall_s\": {:.4}, \"aggregate_fps\": {:.2}, \"per_stream_fps\": {:.2}, \"latency\": {}, \"engines_created\": {}, \"threads_spawned\": {}}}{sep}\n",
+            r.streams,
+            r.frames,
+            r.wall_s,
+            r.aggregate_fps,
+            r.per_stream_fps,
+            r.latency.to_json(),
+            r.engines_created,
+            r.threads_spawned,
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"derived\": {\n");
+    json.push_str(&format!("    \"aggregate_scaling_4_streams_vs_1\": {scaling4:.3},\n"));
+    json.push_str(&format!("    \"aggregate_scaling_8_streams_vs_1\": {scaling8:.3},\n"));
+    json.push_str(&format!(
+        "    \"worker_pool\": {{\"fps\": {:.2}, \"frames\": {}, \"engines_created\": {}, \"threads_spawned\": {}, \"pool_jobs\": {}, \"arena_allocated\": {}, \"arena_reused\": {}, \"zero_spawn_steady_state\": {}}}\n",
+        pool_fps,
+        pool_frames,
+        steady.engines_created,
+        steady.threads_spawned,
+        steady.pool_jobs,
+        steady.frame_pool.allocated,
+        steady.frame_pool.reused,
+        zero_spawn_steady_state,
+    ));
+    json.push_str("  }\n}\n");
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serving.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -69,6 +69,22 @@ impl<T> BoundedSender<T> {
         self.stats.high_water.fetch_max(depth, Ordering::Relaxed);
         Ok(())
     }
+
+    /// Non-blocking send: `Err(value)` back when the queue is full (or
+    /// closed) instead of waiting — the admission-control primitive the
+    /// server builds session slots on.
+    pub fn try_send(&self, value: T) -> Result<(), T> {
+        use std::sync::mpsc::TrySendError;
+        match self.tx.try_send(value) {
+            Ok(()) => {
+                let sent = self.stats.sent.fetch_add(1, Ordering::Relaxed) + 1;
+                let depth = sent.saturating_sub(self.stats.received.load(Ordering::Relaxed));
+                self.stats.high_water.fetch_max(depth, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Full(v)) | Err(TrySendError::Disconnected(v)) => Err(v),
+        }
+    }
 }
 
 impl<T> BoundedReceiver<T> {
@@ -77,6 +93,17 @@ impl<T> BoundedReceiver<T> {
         let v = self.rx.recv()?;
         self.stats.received.fetch_add(1, Ordering::Relaxed);
         Ok(v)
+    }
+
+    /// Non-blocking receive; `None` when the queue is currently empty.
+    pub fn try_recv(&self) -> Option<T> {
+        match self.rx.try_recv() {
+            Ok(v) => {
+                self.stats.received.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            Err(_) => None,
+        }
     }
 
     /// Drain into an iterator until the channel closes.
@@ -125,6 +152,26 @@ mod tests {
         assert_eq!(rx.recv().unwrap(), 0);
         assert_eq!(rx.recv().unwrap(), 1);
         t.join().unwrap();
+    }
+
+    #[test]
+    fn try_send_rejects_when_full_and_slot_frees_on_recv() {
+        // The admission-control pattern: capacity = max sessions.
+        let (tx, rx, stats) = bounded::<()>(2);
+        assert!(tx.try_send(()).is_ok());
+        assert!(tx.try_send(()).is_ok());
+        assert!(tx.try_send(()).is_err(), "third slot must be rejected");
+        assert_eq!(stats.depth(), 2);
+        assert_eq!(stats.high_water(), 2);
+        assert!(rx.try_recv().is_some(), "closing a session frees a slot");
+        assert!(tx.try_send(()).is_ok());
+        assert_eq!(stats.depth(), 2);
+    }
+
+    #[test]
+    fn try_recv_on_empty_is_none() {
+        let (_tx, rx, _) = bounded::<u8>(1);
+        assert!(rx.try_recv().is_none());
     }
 
     #[test]

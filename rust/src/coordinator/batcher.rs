@@ -127,4 +127,71 @@ mod tests {
         assert!(b.flush(&ih).is_empty());
         assert_eq!(b.stats(), (0, 0));
     }
+
+    /// Batched answers must be bit-identical to answering each query
+    /// one-by-one with Eq. 2 — dedup may share work, never change it.
+    #[test]
+    fn batched_answers_bit_identical_to_one_by_one() {
+        let ih = ih();
+        let mut rng = Xoshiro256::new(0xBA7C);
+        let mut b = QueryBatcher::new();
+        let mut rects = Vec::new();
+        for id in 0..40u64 {
+            let r0 = rng.range(0, 12);
+            let c0 = rng.range(0, 12);
+            let r1 = rng.range(r0 + 1, 16);
+            let c1 = rng.range(c0 + 1, 16);
+            let rect = if id % 4 == 3 { rects[0] } else { Rect::new(r0, c0, r1 - 1, c1 - 1) };
+            rects.push(rect);
+            b.submit(id, rect);
+        }
+        let batched = b.flush(&ih);
+        assert_eq!(batched.len(), 40);
+        for (i, resp) in batched.iter().enumerate() {
+            assert_eq!(resp.id, i as u64, "submission order preserved");
+            assert_eq!(resp.rect, rects[i]);
+            let direct = region_histogram(&ih, rects[i]);
+            assert_eq!(resp.histogram, direct, "query {i} must be bit-identical");
+        }
+        let (answered, computed) = b.stats();
+        assert_eq!(answered, 40);
+        assert!(computed < 40, "duplicates must be deduplicated, computed {computed}");
+    }
+
+    /// The id→response mapping must hold across multiple flushes (ids
+    /// may repeat between batches; counters accumulate).
+    #[test]
+    fn id_mapping_and_counters_across_flushes() {
+        let ih = ih();
+        let mut b = QueryBatcher::new();
+        let ra = Rect::new(0, 0, 7, 7);
+        let rb = Rect::new(4, 4, 11, 11);
+
+        b.submit(1, ra);
+        b.submit(2, rb);
+        let first = b.flush(&ih);
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(b.stats(), (2, 2));
+        assert_eq!(b.pending(), 0);
+
+        // Second batch reuses id 1 for a *different* rect and repeats
+        // ra under a new id: responses map by submission, and the
+        // dedup cache must not leak across flushes (fresh per batch).
+        b.submit(1, rb);
+        b.submit(7, ra);
+        b.submit(7, ra);
+        let second = b.flush(&ih);
+        assert_eq!(second.len(), 3);
+        assert_eq!(second[0].id, 1);
+        assert_eq!(second[0].rect, rb);
+        assert_eq!(second[0].histogram, region_histogram(&ih, rb));
+        assert_eq!(second[1].id, 7);
+        assert_eq!(second[1].histogram, region_histogram(&ih, ra));
+        assert_eq!(second[1].histogram, second[2].histogram);
+        // counters accumulate: 2+3 answered; 2 + 2 unique computed
+        assert_eq!(b.stats(), (5, 4));
+
+        // earlier responses are unaffected by later flushes
+        assert_eq!(first[0].histogram, region_histogram(&ih, ra));
+    }
 }

@@ -59,9 +59,19 @@ impl FramePool {
         }
     }
 
-    /// Return a tensor's storage to the free list.
+    /// Idle buffers retained per pool.  Past the cap released storage
+    /// is dropped instead of kept: producers that only *adopt* tensors
+    /// into the pool (artifact / task-queue routes) would otherwise
+    /// grow the free list by one tensor per frame, unbounded.
+    const MAX_IDLE: usize = 64;
+
+    /// Return a tensor's storage to the free list (dropped once
+    /// [`Self::MAX_IDLE`] buffers are already idle).
     pub fn release(&self, ih: IntegralHistogram) {
-        self.free.lock().expect("pool lock").push(ih.into_storage());
+        let mut free = self.free.lock().expect("pool lock");
+        if free.len() < Self::MAX_IDLE {
+            free.push(ih.into_storage());
+        }
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -91,6 +101,15 @@ impl PooledTensor {
     /// Detach the tensor from the pool (it will not be recycled).
     pub fn take(mut self) -> IntegralHistogram {
         self.ih.take().expect("tensor already taken")
+    }
+
+    /// Adopt an already-computed tensor into `pool`'s recycling
+    /// discipline: the handle behaves exactly like an acquired one and
+    /// returns the storage to the pool on drop.  Used by the server to
+    /// give artifact-path and task-queue results the same RAII shape as
+    /// the pooled CPU path.
+    pub fn adopt(pool: &Arc<FramePool>, ih: IntegralHistogram) -> PooledTensor {
+        PooledTensor { ih: Some(ih), pool: Arc::clone(pool) }
     }
 }
 
@@ -163,6 +182,32 @@ mod tests {
         let owned = h.take();
         assert_eq!(owned.data.len(), 9);
         assert_eq!(pool.stats().idle, 0, "take must detach");
+    }
+
+    #[test]
+    fn idle_list_is_bounded() {
+        let pool = FramePool::new();
+        for _ in 0..FramePool::MAX_IDLE + 9 {
+            pool.release(IntegralHistogram::zeros(1, 1, 1));
+        }
+        assert_eq!(
+            pool.stats().idle,
+            FramePool::MAX_IDLE,
+            "excess released buffers must be dropped, not retained"
+        );
+    }
+
+    #[test]
+    fn adopt_recycles_foreign_tensors() {
+        let pool = Arc::new(FramePool::new());
+        let ih = IntegralHistogram::zeros(2, 3, 3);
+        {
+            let h = PooledTensor::adopt(&pool, ih);
+            assert_eq!((h.bins, h.h, h.w), (2, 3, 3));
+        }
+        let st = pool.stats();
+        assert_eq!(st.idle, 1, "adopted storage must land on the free list");
+        assert_eq!(st.allocated, 0, "adoption is not a pool allocation");
     }
 
     #[test]

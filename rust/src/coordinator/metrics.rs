@@ -1,6 +1,58 @@
-//! Per-frame stage timings and throughput accounting.
+//! Per-frame stage timings and throughput accounting, plus latency
+//! distribution summaries (percentiles + jitter) for the serving layer.
 
+use crate::util::stats::percentile_sorted;
 use std::time::Duration;
+
+/// Latency distribution of a run or a serving window, in milliseconds.
+///
+/// Tail percentiles, not the mean, are what a serving SLO is written
+/// against; `jitter_ms` is the RFC 3550-style mean absolute difference
+/// between *consecutive* latencies (arrival order), the frame-pacing
+/// measure a video consumer feels.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub jitter_ms: f64,
+}
+
+impl LatencySummary {
+    /// Summarize latencies given in **arrival order** (jitter depends
+    /// on it; percentiles do not).  Empty input yields all zeros.
+    pub fn of_ms(samples_ms: &[f64]) -> LatencySummary {
+        let n = samples_ms.len();
+        if n == 0 {
+            return LatencySummary::default();
+        }
+        let mut sorted = samples_ms.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+        let jitter_ms = if n < 2 {
+            0.0
+        } else {
+            samples_ms.windows(2).map(|w| (w[1] - w[0]).abs()).sum::<f64>() / (n - 1) as f64
+        };
+        LatencySummary {
+            n,
+            mean_ms: samples_ms.iter().sum::<f64>() / n as f64,
+            p50_ms: percentile_sorted(&sorted, 0.50),
+            p95_ms: percentile_sorted(&sorted, 0.95),
+            p99_ms: percentile_sorted(&sorted, 0.99),
+            jitter_ms,
+        }
+    }
+
+    /// The JSON object fragment every bench emits for a latency block.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"n\": {}, \"mean_ms\": {:.4}, \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}, \"jitter_ms\": {:.4}}}",
+            self.n, self.mean_ms, self.p50_ms, self.p95_ms, self.p99_ms, self.jitter_ms
+        )
+    }
+}
 
 /// Timing of one frame through the pipeline stages (Algorithm 6).
 #[derive(Debug, Clone, Copy, Default)]
@@ -48,6 +100,13 @@ impl Throughput {
             return Duration::ZERO;
         }
         self.stats.iter().map(|s| s.latency).sum::<Duration>() / self.stats.len() as u32
+    }
+
+    /// Latency percentiles + jitter over the run's frames (in frame
+    /// order — `stats` is seq-sorted by the pipeline reports).
+    pub fn latency_summary(&self) -> LatencySummary {
+        let ms: Vec<f64> = self.stats.iter().map(|s| s.latency.as_secs_f64() * 1e3).collect();
+        LatencySummary::of_ms(&ms)
     }
 
     /// Sum of one stage across frames (stage pressure analysis).
@@ -115,5 +174,44 @@ mod tests {
     fn stage_total() {
         let t = Throughput { frames: 3, wall: Duration::from_secs(1), stats: vec![stat(5); 3] };
         assert_eq!(t.stage_total(|s| s.kernel), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn latency_summary_percentiles_and_jitter() {
+        let s = LatencySummary::of_ms(&[100.0, 10.0, 30.0, 20.0, 40.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean_ms - 40.0).abs() < 1e-9);
+        assert!((s.p50_ms - 30.0).abs() < 1e-9);
+        assert!((s.p95_ms - 88.0).abs() < 1e-9, "p95 {}", s.p95_ms);
+        assert!((s.p99_ms - 97.6).abs() < 1e-9, "p99 {}", s.p99_ms);
+        // (|10-100| + |30-10| + |20-30| + |40-20|) / 4
+        assert!((s.jitter_ms - 35.0).abs() < 1e-9, "jitter {}", s.jitter_ms);
+    }
+
+    #[test]
+    fn latency_summary_degenerate_inputs() {
+        assert_eq!(LatencySummary::of_ms(&[]), LatencySummary::default());
+        let one = LatencySummary::of_ms(&[7.0]);
+        assert_eq!((one.n, one.jitter_ms), (1, 0.0));
+        assert_eq!(one.p50_ms, 7.0);
+        assert_eq!(one.p99_ms, 7.0);
+        // steady pacing = zero jitter
+        let steady = LatencySummary::of_ms(&[5.0; 8]);
+        assert_eq!(steady.jitter_ms, 0.0);
+    }
+
+    #[test]
+    fn throughput_latency_summary() {
+        let t = Throughput {
+            frames: 4,
+            wall: Duration::from_secs(1),
+            stats: vec![stat(10); 4],
+        };
+        let s = t.latency_summary();
+        assert_eq!(s.n, 4);
+        assert!((s.p50_ms - 50.0).abs() < 1e-9);
+        assert_eq!(s.jitter_ms, 0.0);
+        let j = s.to_json();
+        assert!(j.contains("\"p95_ms\""), "{j}");
     }
 }

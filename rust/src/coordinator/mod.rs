@@ -8,16 +8,22 @@
 //!   in-flight frames ("CUDA streams" = pipeline lanes).
 //! * [`task_queue`] — the multi-device bin task queue (§4.6, Fig. 18)
 //!   for images whose tensor exceeds one device's memory.
-//! * [`router`] — [`router::Engine`]: the front door.  Picks strategy
-//!   and artifact for a request, owns executor caches, routes small
-//!   frames to the direct path and large frames to the task queue.
+//! * [`server`] — [`server::Server`]: the shared multi-stream front
+//!   door.  `&self` compute from any number of threads, per-stream
+//!   [`server::Session`]s (pipeline lane + query batcher + analytics
+//!   attachment), admission control, global + per-stream metrics.
+//! * [`router`] — [`router::Engine`]: the single-session router.
+//!   Picks strategy and artifact for a request, routes small frames to
+//!   the direct path and large frames to the task queue.
 //! * [`batcher`] — groups region-query requests against cached tensors
 //!   (the O(1) lookup service downstream analytics call).
 //! * [`frame_pool`] — the buffer arena recycling integral-histogram
 //!   storage across frames (the paper's persistent page-locked buffers,
 //!   §4.4): steady-state requests allocate nothing.
-//! * [`backpressure`] — bounded hand-off queues with occupancy stats.
-//! * [`metrics`] — per-frame stage timings and throughput accounting.
+//! * [`backpressure`] — bounded hand-off queues with occupancy stats
+//!   (also the server's admission-control primitive).
+//! * [`metrics`] — per-frame stage timings, throughput accounting and
+//!   latency percentiles/jitter.
 
 pub mod backpressure;
 pub mod batcher;
@@ -25,4 +31,5 @@ pub mod frame_pool;
 pub mod metrics;
 pub mod pipeline;
 pub mod router;
+pub mod server;
 pub mod task_queue;

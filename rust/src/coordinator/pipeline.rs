@@ -33,7 +33,7 @@ use crate::runtime::client::HistogramExecutor;
 use crate::simulator::pcie::PcieModel;
 use crate::video::source::FrameSource;
 use anyhow::{anyhow, Context, Result};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// How the pipeline models CPU↔device transfers.
@@ -352,8 +352,13 @@ struct CpuComputed {
 /// through a stage-2→stage-1 return ring.  After the first few frames
 /// the steady-state path allocates no per-frame buffers; the pool's
 /// counters make that assertable (`tests/engine_property.rs`).  The
-/// engine's parallel schedules still spawn scoped worker threads per
-/// frame — see `histogram::engine` for the trade-off.
+/// engine — and with it its persistent worker pool of parked threads —
+/// lives across runs, so repeated streams on one lane never respawn
+/// workers (see `histogram::engine::worker_pool`).
+///
+/// This is the per-stream lane the server's sessions own
+/// ([`crate::coordinator::server::Session`]); [`Self::with_pool`] lets
+/// many lanes recycle tensors through one server-wide arena.
 ///
 /// Transfer stages do not exist on this substrate (the tensor never
 /// leaves host memory), mirroring the paper's "part of a larger GPU
@@ -361,16 +366,33 @@ struct CpuComputed {
 pub struct CpuPipeline {
     config: CpuPipelineConfig,
     pool: Arc<FramePool>,
+    /// Persistent compute engine (owns the parked worker pool).  The
+    /// mutex only serializes runs on one lane — a lane processes one
+    /// stream at a time by construction.
+    engine: Mutex<ScanEngine>,
 }
 
 impl CpuPipeline {
     pub fn new(config: CpuPipelineConfig) -> CpuPipeline {
-        CpuPipeline { config, pool: Arc::new(FramePool::new()) }
+        Self::with_pool(config, Arc::new(FramePool::new()))
+    }
+
+    /// A lane recycling tensors through a shared (e.g. server-wide)
+    /// arena instead of a private one.
+    pub fn with_pool(config: CpuPipelineConfig, pool: Arc<FramePool>) -> CpuPipeline {
+        let engine = Mutex::new(ScanEngine::new(config.workers));
+        CpuPipeline { config, pool, engine }
     }
 
     /// The tensor arena (for steady-state allocation assertions).
     pub fn pool(&self) -> &Arc<FramePool> {
         &self.pool
+    }
+
+    /// Worker-pool counters of the lane's engine (zero thread-spawn
+    /// observability across runs).
+    pub fn engine_pool_stats(&self) -> crate::histogram::engine::WorkerPoolStats {
+        self.engine.lock().expect("engine lock").pool_stats()
     }
 
     /// Run `source` to exhaustion, dropping results (timing runs).
@@ -390,19 +412,21 @@ impl CpuPipeline {
             return self.run_serial(&mut *source, &mut sink);
         }
         let bins = cfg.bins;
-        let workers = cfg.workers;
         let (q1_tx, q1_rx, s1) = bounded::<InFlight>(cfg.lanes);
         let (q2_tx, q2_rx, s2) = bounded::<CpuComputed>(cfg.lanes);
         // Recycling ring: stage 2 returns quantized-image buffers for
         // stage 1 to refill.
         let (ring_tx, ring_rx) = std::sync::mpsc::channel::<BinnedImage>();
         let pool = Arc::clone(&self.pool);
+        let engine_mx = &self.engine;
         let t_start = Instant::now();
 
         let report = std::thread::scope(|scope| -> Result<PipelineReport> {
-            // Stage 2: ScanEngine compute into pooled tensors.
+            // Stage 2: the lane's persistent ScanEngine computes into
+            // pooled tensors (the engine's parked workers survive the
+            // run, so the next stream on this lane spawns nothing).
             scope.spawn(move || {
-                let mut engine = ScanEngine::new(workers);
+                let mut engine = engine_mx.lock().expect("engine lock");
                 while let Ok(item) = q1_rx.recv() {
                     let InFlight { mut stat, t_enqueue, image } = item;
                     let t0 = Instant::now();
@@ -464,7 +488,7 @@ impl CpuPipeline {
         sink: &mut (impl FnMut(usize, PooledTensor) + Send),
     ) -> Result<PipelineReport> {
         let bins = self.config.bins;
-        let mut engine = ScanEngine::new(self.config.workers);
+        let mut engine = self.engine.lock().expect("engine lock");
         let mut image = BinnedImage::new(0, 0, 1, Vec::new());
         let t_start = Instant::now();
         let mut stats = Vec::new();

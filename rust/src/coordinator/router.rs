@@ -20,11 +20,11 @@ use crate::coordinator::task_queue::{BinTaskQueue, TaskQueueConfig, TaskQueueRep
 use crate::histogram::engine::ScanEngine;
 use crate::histogram::region::Rect;
 use crate::histogram::types::{BinnedImage, IntegralHistogram, Strategy};
-use crate::runtime::artifact::{ArtifactKind, ArtifactManifest, ArtifactMeta};
+use crate::runtime::artifact::{ArtifactKind, ArtifactManifest};
 use crate::runtime::client::HistogramExecutor;
+use crate::runtime::compile_cache::CompileCache;
 use crate::video::source::VideoFrame;
 use anyhow::{anyhow, Result};
-use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -70,6 +70,53 @@ impl Default for EngineConfig {
     }
 }
 
+// Routing policy shared by the single-session [`Engine`] and the
+// multi-stream [`crate::coordinator::server::Server`] — one formula,
+// two front doors.
+impl EngineConfig {
+    /// Routing decision for an `h×w` frame at the configured bin
+    /// count: tensor fits the device budget → direct, else task queue.
+    pub fn route_for(&self, h: usize, w: usize) -> Route {
+        let tensor = self.bins * h * w * 4;
+        if tensor > self.device_memory_budget {
+            Route::TaskQueue
+        } else {
+            Route::Direct
+        }
+    }
+
+    /// Whether the CPU engine may serve this image: fallback enabled
+    /// and the tensor within the host allocation budget.
+    pub fn cpu_fallback_allowed(&self, img: &BinnedImage) -> bool {
+        self.cpu_fallback && img.bins * img.h * img.w * 4 <= self.cpu_fallback_budget
+    }
+
+    /// Build the §4.6 bin task queue for `h×w` frames: find the
+    /// matching group-bin artifact in `manifest` and spin up the
+    /// device pool.
+    pub fn build_bin_task_queue(
+        &self,
+        manifest: &Arc<ArtifactManifest>,
+        h: usize,
+        w: usize,
+    ) -> Result<BinTaskQueue> {
+        let group = self.bin_group;
+        let meta = manifest
+            .artifacts
+            .iter()
+            .find(|a| {
+                a.kind == ArtifactKind::Strategy && a.bins == group && a.height == h && a.width == w
+            })
+            .ok_or_else(|| {
+                anyhow!("no {group}-bin group artifact for {h}x{w} (re-run `make artifacts`)")
+            })?;
+        BinTaskQueue::new(
+            Arc::clone(manifest),
+            TaskQueueConfig { workers: self.pool_workers, group, artifact: meta.name.clone() },
+        )
+    }
+}
+
 /// How a request was (or would be) routed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Route {
@@ -79,15 +126,17 @@ pub enum Route {
     TaskQueue,
 }
 
-/// The serving engine.
+/// The serving engine (single-session; see
+/// [`crate::coordinator::server::Server`] for the shared multi-stream
+/// front door built from the same pieces).
 pub struct Engine {
-    manifest: Arc<ArtifactManifest>,
     config: EngineConfig,
-    executors: HashMap<String, HistogramExecutor>,
-    /// Artifacts whose compile failed — negatively cached so the
-    /// per-frame fallback path never re-reads the HLO file.
-    failed: HashSet<String>,
-    task_queue: Option<BinTaskQueue>,
+    /// Shared get-or-compile executor cache (negative caching included).
+    compile: CompileCache,
+    /// Large-image queue plus the `(h, w)` it was built for — queues
+    /// are geometry-bound (one group artifact each), so a different
+    /// large geometry rebuilds rather than misusing the old queue.
+    task_queue: Option<(usize, usize, BinTaskQueue)>,
     /// CPU fallback path: planned wavefront engine + tensor arena.
     scan: ScanEngine,
     pool: Arc<FramePool>,
@@ -102,10 +151,8 @@ impl Engine {
     pub fn new(manifest: Arc<ArtifactManifest>, config: EngineConfig) -> Engine {
         let scan = ScanEngine::new(config.cpu_workers);
         Engine {
-            manifest,
             config,
-            executors: HashMap::new(),
-            failed: HashSet::new(),
+            compile: CompileCache::new(manifest),
             task_queue: None,
             scan,
             pool: Arc::new(FramePool::new()),
@@ -113,7 +160,7 @@ impl Engine {
     }
 
     pub fn manifest(&self) -> &ArtifactManifest {
-        &self.manifest
+        self.compile.manifest()
     }
 
     pub fn config(&self) -> &EngineConfig {
@@ -123,12 +170,7 @@ impl Engine {
     /// Routing decision for an `h×w` frame at the configured bin count:
     /// tensor fits the device budget → direct, else task queue.
     pub fn route_for(&self, h: usize, w: usize) -> Route {
-        let tensor = self.config.bins * h * w * 4;
-        if tensor > self.config.device_memory_budget {
-            Route::TaskQueue
-        } else {
-            Route::Direct
-        }
+        self.config.route_for(h, w)
     }
 
     /// Compute the integral histogram of a frame with the configured
@@ -155,9 +197,10 @@ impl Engine {
     ) -> Result<(IntegralHistogram, Duration)> {
         match self.route_for(img.h, img.w) {
             Route::Direct => {
-                let compiled = self.ensure_executor(strategy, img.h, img.w, img.bins);
+                let compiled =
+                    self.compile.strategy_executor(strategy, img.h, img.w, img.bins);
                 match compiled {
-                    Ok(name) => self.executors[&name].compute_timed(img),
+                    Ok(exe) => exe.compute_timed(img),
                     Err(_) if self.cpu_fallback_allowed(img) => self.compute_cpu_timed(img),
                     Err(e) => Err(e),
                 }
@@ -177,8 +220,7 @@ impl Engine {
     /// Whether the CPU engine may serve this frame: fallback enabled
     /// and the tensor within the host allocation budget.
     fn cpu_fallback_allowed(&self, img: &BinnedImage) -> bool {
-        self.config.cpu_fallback
-            && img.bins * img.h * img.w * 4 <= self.config.cpu_fallback_budget
+        self.config.cpu_fallback_allowed(img)
     }
 
     /// Serve a request on the CPU wavefront engine with pooled storage.
@@ -217,38 +259,13 @@ impl Engine {
         &mut self,
         img: &BinnedImage,
     ) -> Result<(IntegralHistogram, TaskQueueReport)> {
-        let group = self.config.bin_group;
-        if self.task_queue.is_none() {
-            // find the group-bin artifact matching this geometry
-            let meta = self
-                .manifest
-                .artifacts
-                .iter()
-                .find(|a| {
-                    a.kind == ArtifactKind::Strategy
-                        && a.bins == group
-                        && a.height == img.h
-                        && a.width == img.w
-                })
-                .ok_or_else(|| {
-                    anyhow!(
-                        "no {}-bin group artifact for {}x{} (re-run `make artifacts`)",
-                        group,
-                        img.h,
-                        img.w
-                    )
-                })?;
-            self.task_queue = Some(BinTaskQueue::new(
-                Arc::clone(&self.manifest),
-                TaskQueueConfig {
-                    workers: self.config.pool_workers,
-                    group,
-                    artifact: meta.name.clone(),
-                },
-            )?);
+        let stale = !matches!(&self.task_queue, Some((h, w, _)) if (*h, *w) == (img.h, img.w));
+        if stale {
+            let queue = self.config.build_bin_task_queue(self.compile.manifest(), img.h, img.w)?;
+            self.task_queue = Some((img.h, img.w, queue));
         }
         let image = Arc::new(img.clone());
-        self.task_queue.as_ref().unwrap().compute(&image, img.bins)
+        self.task_queue.as_ref().unwrap().2.compute(&image, img.bins)
     }
 
     /// Fused serve request: tensor + batched region histograms.  Uses
@@ -262,7 +279,8 @@ impl Engine {
         let bins = self.config.bins;
         let img = frame.binned(bins);
         let serve_meta = self
-            .manifest
+            .compile
+            .manifest()
             .artifacts
             .iter()
             .find(|a| {
@@ -274,9 +292,8 @@ impl Engine {
             })
             .cloned();
         if let Some(meta) = serve_meta {
-            match self.compile_cached(&meta) {
-                Ok(()) => {
-                    let exe = &self.executors[&meta.name];
+            match self.compile.get_or_compile(&meta) {
+                Ok(exe) => {
                     let (ih, hists, _) = exe.compute_with_queries(&img, rects)?;
                     return Ok((ih, hists));
                 }
@@ -289,63 +306,11 @@ impl Engine {
         Ok((ih, hists))
     }
 
-    /// Get-or-compile the executor for (strategy, h, w, bins), returning
-    /// its cache key (an owned name, so callers can branch to fallbacks
-    /// without holding a borrow of the cache).
-    fn ensure_executor(
-        &mut self,
-        strategy: Strategy,
-        h: usize,
-        w: usize,
-        bins: usize,
-    ) -> Result<String> {
-        let meta = self
-            .manifest
-            .find_strategy(strategy, h, w, bins)
-            .ok_or_else(|| {
-                anyhow!(
-                    "no artifact for {strategy} {h}x{w} bins={bins}; available: {}",
-                    self.manifest
-                        .strategies()
-                        .iter()
-                        .map(|a| a.name.as_str())
-                        .collect::<Vec<_>>()
-                        .join(", ")
-                )
-            })?
-            .clone();
-        self.compile_cached(&meta)?;
-        Ok(meta.name)
-    }
-
-    /// Get-or-compile `meta` into the executor cache.  Failures are
-    /// negatively cached so the per-frame fallback path never re-reads
-    /// a broken HLO file.
-    fn compile_cached(&mut self, meta: &ArtifactMeta) -> Result<()> {
-        if self.executors.contains_key(&meta.name) {
-            return Ok(());
-        }
-        if self.failed.contains(&meta.name) {
-            return Err(anyhow!("artifact '{}' previously failed to compile", meta.name));
-        }
-        match HistogramExecutor::compile(&self.manifest, meta) {
-            Ok(exe) => {
-                self.executors.insert(meta.name.clone(), exe);
-                Ok(())
-            }
-            Err(e) => {
-                self.failed.insert(meta.name.clone());
-                Err(e)
-            }
-        }
-    }
-
     /// Drop every cached executor and negative compile result — call
     /// after regenerating `artifacts/` so previously failed compiles
     /// are retried.
     pub fn clear_compile_cache(&mut self) {
-        self.executors.clear();
-        self.failed.clear();
+        self.compile.clear();
     }
 
     /// Get-or-compile the executor for (strategy, h, w, bins).
@@ -355,14 +320,13 @@ impl Engine {
         h: usize,
         w: usize,
         bins: usize,
-    ) -> Result<&HistogramExecutor> {
-        let name = self.ensure_executor(strategy, h, w, bins)?;
-        Ok(&self.executors[&name])
+    ) -> Result<Arc<HistogramExecutor>> {
+        self.compile.strategy_executor(strategy, h, w, bins)
     }
 
     /// Number of compiled executors held by the cache.
     pub fn cached_executors(&self) -> usize {
-        self.executors.len()
+        self.compile.compiled_count()
     }
 }
 

@@ -1,0 +1,749 @@
+//! `Server` — the shared, persistent multi-stream serving layer.
+//!
+//! The paper's system sections describe a *service*: dual-buffered
+//! streams keep one kernel at 300 fps (§4.4) and a bin task queue
+//! spreads one oversized frame across devices (§4.6).  The
+//! single-session [`crate::coordinator::router::Engine`] can replay
+//! that for one stream; production traffic means *many* concurrent
+//! streams ("Fast Histograms using Adaptive CUDA Streams", PAPERS.md)
+//! issuing many small region queries each ("Multi-Scale Spatially
+//! Weighted Local Histograms in O(1)").  This module is the shared
+//! front door:
+//!
+//! * **`&self` compute.**  All cross-stream state is interior-mutable —
+//!   the [`CompileCache`], one server-wide [`FramePool`] arena, a
+//!   checkout stack of [`ScanEngine`] lanes (each owning its persistent
+//!   parked [`WorkerPool`](crate::histogram::engine::WorkerPool)), and
+//!   the lazily-built [`BinTaskQueue`] — so any number of threads call
+//!   [`Server::compute`] concurrently.  Steady state does zero heap
+//!   allocation and zero thread spawning per frame
+//!   (`tests/server_concurrency.rs` counter-asserts both).
+//! * **One front door for every size.**  [`Server::compute`] routes
+//!   small frames to the artifact path (CPU `ScanEngine` fallback in
+//!   the offline build) and frames whose tensor exceeds the device
+//!   budget through the shared bin task queue — sessions never care
+//!   which.
+//! * **Sessions.**  [`Server::open_session`] hands out a per-stream
+//!   [`Session`] owning a [`CpuPipeline`] lane (recycling through the
+//!   server arena), a [`QueryBatcher`], and an optional analytics
+//!   attachment (motion detector / tracker).  Admission control is a
+//!   bounded [`backpressure`](crate::coordinator::backpressure) queue:
+//!   capacity = `max_sessions`, occupancy = live sessions, high-water =
+//!   peak concurrency — over-capacity `open_session` calls are rejected,
+//!   not queued, so an overloaded server degrades predictably.
+//! * **Metrics.**  Global frame/query/session counters plus a latency
+//!   reservoir summarized as p50/p95/p99 + jitter
+//!   ([`LatencySummary`]), and per-session latency histories.
+
+use crate::analytics::motion::{MotionDetector, MotionMap};
+use crate::analytics::tracker::{Track, TrackerConfig};
+use crate::coordinator::backpressure::{bounded, BoundedReceiver, BoundedSender, QueueStats};
+use crate::coordinator::batcher::{QueryBatcher, QueryResponse};
+use crate::coordinator::frame_pool::{FramePool, PoolStats, PooledTensor};
+use crate::coordinator::metrics::LatencySummary;
+use crate::coordinator::pipeline::{CpuPipeline, CpuPipelineConfig, PipelineReport};
+use crate::coordinator::router::{EngineConfig, Route};
+use crate::coordinator::task_queue::BinTaskQueue;
+use crate::histogram::engine::ScanEngine;
+use crate::histogram::region::Rect;
+use crate::histogram::types::{BinnedImage, IntegralHistogram};
+use crate::runtime::artifact::ArtifactManifest;
+use crate::runtime::compile_cache::CompileCache;
+use crate::video::source::{FrameSource, VideoFrame};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Serving configuration: routing/fallback knobs come from the
+/// existing [`EngineConfig`]; the rest is multi-stream policy.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Routing, strategy, budgets and CPU-fallback policy.
+    pub engine: EngineConfig,
+    /// Hard cap on concurrently open sessions (admission control).
+    pub max_sessions: usize,
+    /// Pipeline depth of each session's lane (2 = dual buffering).
+    pub lanes: usize,
+    /// `ScanEngine` worker budget per stream lane / checkout engine.
+    /// Small on purpose: cross-stream parallelism comes from running
+    /// streams concurrently, not from one stream grabbing every core.
+    pub workers_per_stream: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            engine: EngineConfig::default(),
+            max_sessions: 64,
+            lanes: 2,
+            workers_per_stream: 2,
+        }
+    }
+}
+
+/// Capacity of the global latency reservoir (ring overwrite beyond).
+const LATENCY_RESERVOIR: usize = 1 << 16;
+/// Capacity of each session's latency history — bounded so long-lived
+/// streams (hours at video rate) don't grow memory per frame.
+const SESSION_LATENCY_RESERVOIR: usize = 1 << 12;
+
+/// Bounded latency sample ring: keeps the most recent `cap` samples,
+/// overwriting the oldest.  Percentiles over the ring describe the
+/// recent serving window; jitter is exact until the first wrap.
+struct LatencyRing {
+    buf: Vec<f64>,
+    count: usize,
+    cap: usize,
+}
+
+impl LatencyRing {
+    fn with_cap(cap: usize) -> LatencyRing {
+        LatencyRing { buf: Vec::new(), count: 0, cap }
+    }
+
+    fn push(&mut self, ms: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ms);
+        } else {
+            self.buf[self.count % self.cap] = ms;
+        }
+        self.count += 1;
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.count = 0;
+    }
+}
+
+struct Metrics {
+    frames: AtomicUsize,
+    queries: AtomicUsize,
+    sessions_opened: AtomicUsize,
+    sessions_rejected: AtomicUsize,
+    latencies_ms: Mutex<LatencyRing>,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            frames: AtomicUsize::new(0),
+            queries: AtomicUsize::new(0),
+            sessions_opened: AtomicUsize::new(0),
+            sessions_rejected: AtomicUsize::new(0),
+            latencies_ms: Mutex::new(LatencyRing::with_cap(LATENCY_RESERVOIR)),
+        }
+    }
+}
+
+impl Metrics {
+    fn push_latency(&self, ms: f64) {
+        self.latencies_ms.lock().expect("latency lock").push(ms);
+    }
+}
+
+/// Point-in-time view of the server's global counters.
+#[derive(Debug, Clone)]
+pub struct ServerSnapshot {
+    /// Frames computed through [`Server::compute`] (all routes).
+    pub frames: usize,
+    /// Region queries answered through sessions.
+    pub queries: usize,
+    pub sessions_opened: usize,
+    pub sessions_rejected: usize,
+    pub sessions_active: usize,
+    /// Peak concurrently-open sessions.
+    pub sessions_peak: usize,
+    /// CPU engines ever created for the checkout stack — flat in
+    /// steady state (each checkout reuses a parked engine).
+    pub engines_created: usize,
+    /// Engines currently parked on the checkout stack.
+    pub engines_idle: usize,
+    /// Worker threads ever spawned by the idle engines' pools — flat
+    /// in steady state (read at quiescence; checked-out engines are
+    /// not visible).
+    pub threads_spawned: usize,
+    /// Pool jobs dispatched by the idle engines (≈ parallel frames).
+    pub pool_jobs: usize,
+    /// The shared tensor arena's counters.
+    pub frame_pool: PoolStats,
+    /// p50/p95/p99 + jitter over the global latency reservoir.
+    pub latency: LatencySummary,
+}
+
+struct Inner {
+    config: ServerConfig,
+    compile: CompileCache,
+    pool: Arc<FramePool>,
+    /// Parked CPU engines, checked out per in-flight compute.  LIFO so
+    /// the hottest engine (warm scratch, spawned pool) is reused first.
+    engines: Mutex<Vec<ScanEngine>>,
+    engines_created: AtomicUsize,
+    /// Shared large-image path: the queue plus the `(h, w)` it was
+    /// built for (queues are geometry-bound — a different large
+    /// geometry rebuilds).  The mutex both lazily builds the queue and
+    /// serializes whole-frame jobs on it — the queue owns the device
+    /// pool, and interleaving two frames' bin groups would cross their
+    /// results.
+    large: Mutex<Option<(usize, usize, BinTaskQueue)>>,
+    metrics: Metrics,
+    admission_tx: Mutex<BoundedSender<()>>,
+    admission_rx: Mutex<BoundedReceiver<()>>,
+    admission_stats: Arc<QueueStats>,
+    session_seq: AtomicUsize,
+}
+
+impl Inner {
+    fn route_for(&self, h: usize, w: usize) -> Route {
+        self.config.engine.route_for(h, w)
+    }
+
+    fn cpu_allowed(&self, img: &BinnedImage) -> bool {
+        self.config.engine.cpu_fallback_allowed(img)
+    }
+
+    /// Serve a frame on a checked-out CPU engine with pooled storage.
+    fn compute_cpu(&self, img: &BinnedImage) -> Result<(PooledTensor, Duration)> {
+        let t0 = Instant::now();
+        let mut engine = match self.engines.lock().expect("engine stack lock").pop() {
+            Some(e) => e,
+            None => {
+                self.engines_created.fetch_add(1, Ordering::Relaxed);
+                ScanEngine::new(self.config.workers_per_stream)
+            }
+        };
+        let mut out = PooledTensor::acquire(&self.pool, img.bins, img.h, img.w);
+        engine.compute_into(img, &mut out);
+        self.engines.lock().expect("engine stack lock").push(engine);
+        Ok((out, t0.elapsed()))
+    }
+
+    /// Large-image route: the shared bin task queue (§4.6), built on
+    /// first use from the group-bin artifact matching this geometry.
+    fn compute_large(&self, img: &BinnedImage) -> Result<(IntegralHistogram, Duration)> {
+        let mut guard = self.large.lock().expect("task queue lock");
+        let stale = !matches!(&*guard, Some((h, w, _)) if (*h, *w) == (img.h, img.w));
+        if stale {
+            let queue = self.config.engine.build_bin_task_queue(
+                self.compile.manifest(),
+                img.h,
+                img.w,
+            )?;
+            *guard = Some((img.h, img.w, queue));
+        }
+        let queue = &guard.as_ref().expect("queue just built").2;
+        let image = Arc::new(img.clone());
+        let (ih, report) = queue.compute(&image, img.bins)?;
+        Ok((ih, report.wall))
+    }
+
+    /// The shared front door: route, compute, account.
+    fn compute(&self, img: &BinnedImage) -> Result<(PooledTensor, Duration)> {
+        let res = match self.route_for(img.h, img.w) {
+            Route::Direct => {
+                let strategy = self.config.engine.strategy;
+                // Memoized availability check: when no artifact matches
+                // (always true offline), the steady-state CPU path runs
+                // with no per-frame manifest scans or error strings.
+                if self.cpu_allowed(img)
+                    && !self.compile.has_strategy(strategy, img.h, img.w, img.bins)
+                {
+                    self.compute_cpu(img)
+                } else {
+                    match self.compile.strategy_executor(strategy, img.h, img.w, img.bins) {
+                        Ok(exe) => exe
+                            .compute_timed(img)
+                            .map(|(ih, d)| (PooledTensor::adopt(&self.pool, ih), d)),
+                        Err(_) if self.cpu_allowed(img) => self.compute_cpu(img),
+                        Err(e) => Err(e),
+                    }
+                }
+            }
+            Route::TaskQueue => match self.compute_large(img) {
+                Ok((ih, wall)) => Ok((PooledTensor::adopt(&self.pool, ih), wall)),
+                Err(_) if self.cpu_allowed(img) => self.compute_cpu(img),
+                Err(e) => Err(e),
+            },
+        };
+        if let Ok((_, d)) = &res {
+            self.metrics.frames.fetch_add(1, Ordering::Relaxed);
+            self.metrics.push_latency(d.as_secs_f64() * 1e3);
+        }
+        res
+    }
+}
+
+/// The shared serving front door.  Cheap to clone (an `Arc` handle);
+/// every method takes `&self` and is safe from any number of threads.
+#[derive(Clone)]
+pub struct Server {
+    inner: Arc<Inner>,
+}
+
+impl Server {
+    pub fn new(manifest: Arc<ArtifactManifest>, config: ServerConfig) -> Server {
+        let (admission_tx, admission_rx, admission_stats) =
+            bounded::<()>(config.max_sessions.max(1));
+        Server {
+            inner: Arc::new(Inner {
+                compile: CompileCache::new(manifest),
+                pool: Arc::new(FramePool::new()),
+                engines: Mutex::new(Vec::new()),
+                engines_created: AtomicUsize::new(0),
+                large: Mutex::new(None),
+                metrics: Metrics::default(),
+                admission_tx: Mutex::new(admission_tx),
+                admission_rx: Mutex::new(admission_rx),
+                admission_stats,
+                session_seq: AtomicUsize::new(0),
+                config,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.inner.config
+    }
+
+    /// Routing decision for an `h×w` frame at the configured bin count.
+    pub fn route_for(&self, h: usize, w: usize) -> Route {
+        self.inner.route_for(h, w)
+    }
+
+    /// Compute the integral histogram of an already-binned image —
+    /// callable concurrently from any thread; results are bit-identical
+    /// to serial execution.  Returns the pooled tensor (recycled into
+    /// the server arena on drop) and the compute duration.
+    pub fn compute(&self, img: &BinnedImage) -> Result<(PooledTensor, Duration)> {
+        self.inner.compute(img)
+    }
+
+    /// Admit a new stream.  Rejected (not queued) once `max_sessions`
+    /// sessions are live; the slot frees when the `Session` drops.
+    pub fn open_session(&self) -> Result<Session> {
+        let admitted = self
+            .inner
+            .admission_tx
+            .lock()
+            .expect("admission lock")
+            .try_send(())
+            .is_ok();
+        if !admitted {
+            self.inner.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow!(
+                "admission rejected: {} sessions live (max {})",
+                self.inner.admission_stats.depth(),
+                self.inner.config.max_sessions
+            ));
+        }
+        self.inner.metrics.sessions_opened.fetch_add(1, Ordering::Relaxed);
+        let id = self.inner.session_seq.fetch_add(1, Ordering::Relaxed) as u64;
+        let cfg = &self.inner.config;
+        let lane_cfg = CpuPipelineConfig::new(cfg.engine.bins)
+            .lanes(cfg.lanes)
+            .workers(cfg.workers_per_stream);
+        let pipeline = CpuPipeline::with_pool(lane_cfg, Arc::clone(&self.inner.pool));
+        Ok(Session {
+            inner: Arc::clone(&self.inner),
+            id,
+            bins: cfg.engine.bins,
+            img: BinnedImage::new(0, 0, 1, Vec::new()),
+            pipeline,
+            batcher: QueryBatcher::new(),
+            analytics: None,
+            latencies_ms: LatencyRing::with_cap(SESSION_LATENCY_RESERVOIR),
+            frames: 0,
+            queries: 0,
+        })
+    }
+
+    /// Currently live sessions.
+    pub fn sessions_active(&self) -> usize {
+        self.inner.admission_stats.depth()
+    }
+
+    /// Drop compiled executors and negative compile results (e.g.
+    /// after regenerating `artifacts/`).
+    pub fn clear_compile_cache(&self) {
+        self.inner.compile.clear();
+    }
+
+    /// Clear the global latency reservoir, starting a fresh
+    /// measurement window — call after warm-up so reported percentiles
+    /// describe steady-state serving, not cold-start frames.  Counters
+    /// (frames, sessions, arena, pools) are unaffected.
+    pub fn reset_latency_stats(&self) {
+        self.inner.metrics.latencies_ms.lock().expect("latency lock").clear();
+    }
+
+    /// Snapshot the global counters.  `threads_spawned`/`pool_jobs`
+    /// aggregate the *idle* checkout engines — read at quiescence for
+    /// the steady-state assertions.
+    pub fn snapshot(&self) -> ServerSnapshot {
+        let inner = &self.inner;
+        let (engines_idle, threads_spawned, pool_jobs) = {
+            let engines = inner.engines.lock().expect("engine stack lock");
+            let mut spawned = 0;
+            let mut jobs = 0;
+            for e in engines.iter() {
+                let s = e.pool_stats();
+                spawned += s.spawned;
+                jobs += s.jobs;
+            }
+            (engines.len(), spawned, jobs)
+        };
+        let latency = {
+            let ring = inner.metrics.latencies_ms.lock().expect("latency lock");
+            LatencySummary::of_ms(&ring.buf)
+        };
+        ServerSnapshot {
+            frames: inner.metrics.frames.load(Ordering::Relaxed),
+            queries: inner.metrics.queries.load(Ordering::Relaxed),
+            sessions_opened: inner.metrics.sessions_opened.load(Ordering::Relaxed),
+            sessions_rejected: inner.metrics.sessions_rejected.load(Ordering::Relaxed),
+            sessions_active: inner.admission_stats.depth(),
+            sessions_peak: inner.admission_stats.high_water(),
+            engines_created: inner.engines_created.load(Ordering::Relaxed),
+            engines_idle,
+            threads_spawned,
+            pool_jobs,
+            frame_pool: inner.pool.stats(),
+            latency,
+        }
+    }
+}
+
+/// Analytics attachment of a session — the downstream consumers the
+/// paper's introduction motivates, fed from the session's own tensors.
+pub enum SessionAnalytics {
+    Motion(MotionDetector),
+    Tracker(Track),
+}
+
+/// What an analytics step produced.
+#[derive(Debug, Clone)]
+pub enum AnalyticsEvent {
+    Motion(MotionMap),
+    Track(Rect),
+}
+
+/// Per-session (stream-local) counters.
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    pub id: u64,
+    pub frames: usize,
+    pub queries: usize,
+    /// (answered, unique-computed) batcher counters.
+    pub batcher: (usize, usize),
+    pub latency: LatencySummary,
+}
+
+/// One stream's handle on the server: a pipeline lane, a query
+/// batcher, an optional analytics attachment, and stream-local
+/// metrics.  Owns an admission slot; dropping the session frees it.
+///
+/// `Session` is `Send` — open it on one thread, drive it from another.
+pub struct Session {
+    inner: Arc<Inner>,
+    id: u64,
+    bins: usize,
+    /// Recycled quantization buffer (no per-frame image allocation).
+    img: BinnedImage,
+    pipeline: CpuPipeline,
+    batcher: QueryBatcher,
+    analytics: Option<SessionAnalytics>,
+    /// Bounded recent-latency history (ring; see
+    /// [`SESSION_LATENCY_RESERVOIR`]).
+    latencies_ms: LatencyRing,
+    frames: usize,
+    queries: usize,
+}
+
+impl Session {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn bins(&self) -> usize {
+        self.bins
+    }
+
+    /// Compute one frame through the server front door (any route).
+    /// The returned tensor recycles into the server arena on drop.
+    pub fn process(&mut self, frame: &VideoFrame) -> Result<PooledTensor> {
+        let t0 = Instant::now();
+        frame.binned_into(self.bins, &mut self.img);
+        let (ih, _kernel) = self.inner.compute(&self.img)?;
+        self.frames += 1;
+        self.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        Ok(ih)
+    }
+
+    /// Drive a whole stream through this session's pipeline lane
+    /// (read → compute → sink overlapped across `lanes` frames),
+    /// folding the run's per-frame latencies into the session and
+    /// server metrics.
+    pub fn run_stream(
+        &mut self,
+        source: Box<dyn FrameSource>,
+        sink: impl FnMut(usize, PooledTensor) + Send,
+    ) -> Result<PipelineReport> {
+        let report = self.pipeline.run_with(source, sink)?;
+        self.frames += report.throughput.frames;
+        self.inner.metrics.frames.fetch_add(report.throughput.frames, Ordering::Relaxed);
+        for s in &report.throughput.stats {
+            let ms = s.latency.as_secs_f64() * 1e3;
+            self.latencies_ms.push(ms);
+            self.inner.metrics.push_latency(ms);
+        }
+        Ok(report)
+    }
+
+    /// Enqueue a region query for the next [`Self::answer_queries`].
+    pub fn submit_query(&mut self, id: u64, rect: Rect) {
+        self.batcher.submit(id, rect);
+    }
+
+    /// Pending (unanswered) queries.
+    pub fn pending_queries(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    /// Answer every pending query against `ih` (deduplicated,
+    /// submission order preserved — see [`QueryBatcher`]).
+    pub fn answer_queries(&mut self, ih: &IntegralHistogram) -> Vec<QueryResponse> {
+        let responses = self.batcher.flush(ih);
+        self.queries += responses.len();
+        self.inner.metrics.queries.fetch_add(responses.len(), Ordering::Relaxed);
+        responses
+    }
+
+    /// Attach a block-motion detector (replaces any attachment).
+    pub fn attach_motion(&mut self, grid: usize, threshold: f32) {
+        self.analytics = Some(SessionAnalytics::Motion(MotionDetector::new(grid, threshold)));
+    }
+
+    /// Attach a histogram-matching tracker initialized from `rect` in
+    /// `ih` (replaces any attachment).
+    pub fn attach_tracker(&mut self, ih: &IntegralHistogram, rect: Rect, config: TrackerConfig) {
+        self.analytics = Some(SessionAnalytics::Tracker(Track::init(ih, rect, config)));
+    }
+
+    pub fn detach_analytics(&mut self) -> Option<SessionAnalytics> {
+        self.analytics.take()
+    }
+
+    /// Advance the attachment on this frame's tensor, if any.
+    pub fn step_analytics(&mut self, ih: &IntegralHistogram) -> Option<AnalyticsEvent> {
+        match self.analytics.as_mut()? {
+            SessionAnalytics::Motion(m) => Some(AnalyticsEvent::Motion(m.step(ih))),
+            SessionAnalytics::Tracker(t) => Some(AnalyticsEvent::Track(t.step(ih))),
+        }
+    }
+
+    /// The lane engine's worker-pool counters (zero-spawn assertions).
+    pub fn lane_pool_stats(&self) -> crate::histogram::engine::WorkerPoolStats {
+        self.pipeline.engine_pool_stats()
+    }
+
+    /// Stream-local counters and latency distribution (over the most
+    /// recent [`SESSION_LATENCY_RESERVOIR`] frames).
+    pub fn stats(&self) -> SessionSnapshot {
+        SessionSnapshot {
+            id: self.id,
+            frames: self.frames,
+            queries: self.queries,
+            batcher: self.batcher.stats(),
+            latency: LatencySummary::of_ms(&self.latencies_ms.buf),
+        }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // Return the admission slot.
+        if let Ok(rx) = self.inner.admission_rx.lock() {
+            let _ = rx.try_recv();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::region::region_histogram;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::video::synth::SyntheticVideo;
+    use std::path::PathBuf;
+
+    fn manifest() -> Arc<ArtifactManifest> {
+        Arc::new(ArtifactManifest {
+            dir: PathBuf::from("/nonexistent"),
+            profile: "test".into(),
+            artifacts: vec![],
+        })
+    }
+
+    fn server() -> Server {
+        Server::new(manifest(), ServerConfig::default())
+    }
+
+    #[test]
+    fn compute_is_bit_identical_to_serial() {
+        let srv = server();
+        let video = SyntheticVideo::new(96, 80, 2, 3);
+        for t in 0..3 {
+            let img = video.frame(t).binned(8);
+            let (ih, _) = srv.compute(&img).expect("cpu route");
+            let expected = integral_histogram_seq(&img);
+            assert_eq!(expected.max_abs_diff(&ih), 0.0, "frame {t}");
+        }
+        let snap = srv.snapshot();
+        assert_eq!(snap.frames, 3);
+        assert_eq!(snap.engines_created, 1, "one checkout engine serves serial traffic");
+        assert_eq!(snap.latency.n, 3);
+        // all three tensors recycled through one arena buffer
+        let fp = snap.frame_pool;
+        assert_eq!(fp.allocated, 1, "{fp:?}");
+        assert_eq!(fp.reused, 2);
+    }
+
+    #[test]
+    fn latency_window_resets_without_touching_counters() {
+        let srv = server();
+        let img = SyntheticVideo::new(48, 48, 1, 1).frame(0).binned(8);
+        for _ in 0..4 {
+            let _ = srv.compute(&img).expect("compute");
+        }
+        assert_eq!(srv.snapshot().latency.n, 4);
+        srv.reset_latency_stats();
+        let snap = srv.snapshot();
+        assert_eq!(snap.latency.n, 0, "reservoir cleared");
+        assert_eq!(snap.frames, 4, "counters survive the window reset");
+        let _ = srv.compute(&img).expect("compute");
+        assert_eq!(srv.snapshot().latency.n, 1);
+    }
+
+    #[test]
+    fn admission_control_caps_sessions() {
+        let mut cfg = ServerConfig::default();
+        cfg.max_sessions = 2;
+        let srv = Server::new(manifest(), cfg);
+        let s1 = srv.open_session().expect("slot 1");
+        let _s2 = srv.open_session().expect("slot 2");
+        assert_eq!(srv.sessions_active(), 2);
+        let err = srv.open_session().err().expect("must reject").to_string();
+        assert!(err.contains("admission"), "{err}");
+        drop(s1);
+        assert_eq!(srv.sessions_active(), 1);
+        let _s3 = srv.open_session().expect("slot freed by drop");
+        let snap = srv.snapshot();
+        assert_eq!(snap.sessions_opened, 3);
+        assert_eq!(snap.sessions_rejected, 1);
+        assert_eq!(snap.sessions_peak, 2);
+    }
+
+    #[test]
+    fn session_processes_and_answers_queries() {
+        let srv = server();
+        let mut session = srv.open_session().expect("session");
+        let video = SyntheticVideo::new(64, 64, 2, 5);
+        let frame = video.frame(0);
+        let ih = session.process(&frame).expect("process");
+        let expected = integral_histogram_seq(&frame.binned(32));
+        assert_eq!(expected.max_abs_diff(&ih), 0.0);
+
+        let r1 = Rect::with_size(0, 0, 64, 64);
+        let r2 = Rect::with_size(5, 9, 20, 30);
+        session.submit_query(10, r1);
+        session.submit_query(11, r2);
+        session.submit_query(12, r1); // duplicate — deduped
+        let rs = session.answer_queries(&ih);
+        assert_eq!(rs.len(), 3);
+        assert_eq!(rs[0].id, 10);
+        assert_eq!(rs[2].id, 12);
+        assert_eq!(rs[0].histogram, region_histogram(&expected, r1));
+        assert_eq!(rs[1].histogram, region_histogram(&expected, r2));
+        assert_eq!(rs[0].histogram, rs[2].histogram);
+
+        let st = session.stats();
+        assert_eq!(st.frames, 1);
+        assert_eq!(st.queries, 3);
+        assert_eq!(st.batcher, (3, 2), "duplicate rect computed once");
+        assert_eq!(st.latency.n, 1);
+        assert_eq!(srv.snapshot().queries, 3);
+    }
+
+    #[test]
+    fn session_runs_stream_on_its_lane() {
+        let srv = server();
+        let mut session = srv.open_session().expect("session");
+        let frames = 6usize;
+        let video = SyntheticVideo::new(64, 48, 2, 9);
+        let src = Box::new(SyntheticVideo::new(64, 48, 2, 9).take_frames(frames));
+        let mut checked = 0usize;
+        let report = session
+            .run_stream(src, |seq, ih| {
+                let expected = integral_histogram_seq(&video.frame(seq).binned(32));
+                assert_eq!(expected.max_abs_diff(&ih), 0.0, "frame {seq}");
+                checked += 1;
+            })
+            .expect("stream");
+        assert_eq!(report.throughput.frames, frames);
+        assert_eq!(checked, frames);
+        let st = session.stats();
+        assert_eq!(st.frames, frames);
+        assert_eq!(st.latency.n, frames);
+        let snap = srv.snapshot();
+        assert_eq!(snap.frames, frames, "lane frames count globally");
+        assert!(snap.frame_pool.allocated <= 4, "lane recycles via the shared arena");
+    }
+
+    #[test]
+    fn session_analytics_attachment_steps() {
+        let srv = server();
+        let mut session = srv.open_session().expect("session");
+        let video = SyntheticVideo::new(64, 64, 3, 4);
+        let ih0 = session.process(&video.frame(0)).expect("frame 0");
+        session.attach_motion(4, 0.05);
+        match session.step_analytics(&ih0) {
+            Some(AnalyticsEvent::Motion(map)) => assert_eq!(map.scores.len(), 16),
+            other => panic!("expected motion event, got {:?}", other.is_some()),
+        }
+        // swap to a tracker seeded from the same tensor
+        session.attach_tracker(&ih0, Rect::with_size(10, 10, 16, 16), TrackerConfig::default());
+        let ih1 = session.process(&video.frame(1)).expect("frame 1");
+        match session.step_analytics(&ih1) {
+            Some(AnalyticsEvent::Track(rect)) => {
+                assert_eq!((rect.height(), rect.width()), (16, 16));
+            }
+            other => panic!("expected track event, got {:?}", other.is_some()),
+        }
+        assert!(session.detach_analytics().is_some());
+        assert!(session.step_analytics(&ih1).is_none());
+    }
+
+    #[test]
+    fn oversized_frames_route_through_the_same_front_door() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine.bins = 8;
+        cfg.engine.device_memory_budget = 1 << 10; // force TaskQueue route
+        let srv = Server::new(manifest(), cfg);
+        assert_eq!(srv.route_for(40, 40), Route::TaskQueue);
+        let img = SyntheticVideo::new(40, 40, 1, 2).frame(0).binned(8);
+        // no group artifact in the offline build → CPU serves it
+        let (ih, _) = srv.compute(&img).expect("cpu fallback for large frames");
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&ih), 0.0);
+    }
+
+    #[test]
+    fn fallback_disabled_propagates_error() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine.cpu_fallback = false;
+        let srv = Server::new(manifest(), cfg);
+        let img = SyntheticVideo::new(32, 32, 1, 1).frame(0).binned(8);
+        assert!(srv.compute(&img).is_err());
+    }
+}

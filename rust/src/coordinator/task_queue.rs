@@ -111,12 +111,29 @@ impl BinTaskQueue {
         let plane = image.h * image.w;
         let mut times = Vec::with_capacity(n_tasks);
         let mut per_worker = vec![0usize; self.config.workers];
+        // Drain ALL n_tasks results even after a failure: an early
+        // return would leave this frame's remaining outputs queued in
+        // the pool channel, to be mistaken for the *next* frame's
+        // groups (silent cross-frame corruption).  A hung-up channel
+        // errors without blocking, so the full drain is always cheap.
+        let mut first_err = None;
         for _ in 0..n_tasks {
-            let out = self.pool.recv()?;
-            let dst = out.bin_offset * plane;
-            full.data[dst..dst + out.partial.data.len()].copy_from_slice(&out.partial.data);
-            times.push(out.kernel_time);
-            per_worker[out.worker] += 1;
+            match self.pool.recv() {
+                Ok(out) if first_err.is_none() => {
+                    let dst = out.bin_offset * plane;
+                    full.data[dst..dst + out.partial.data.len()]
+                        .copy_from_slice(&out.partial.data);
+                    times.push(out.kernel_time);
+                    per_worker[out.worker] += 1;
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         let report = TaskQueueReport {
             tasks: n_tasks,
@@ -153,10 +170,23 @@ impl BinTaskQueue {
         }
         let mut times = Vec::with_capacity(n_tasks);
         let mut per_worker = vec![0usize; self.config.workers];
+        // Full drain, as in `compute`: never leave this frame's
+        // results queued for a later frame to pop.
+        let mut first_err = None;
         for _ in 0..n_tasks {
-            let out = self.pool.recv()?;
-            times.push(out.kernel_time);
-            per_worker[out.worker] += 1;
+            match self.pool.recv() {
+                Ok(out) if first_err.is_none() => {
+                    times.push(out.kernel_time);
+                    per_worker[out.worker] += 1;
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         Ok(TaskQueueReport { tasks: n_tasks, wall: t0.elapsed(), task_kernel_times: times, per_worker })
     }

@@ -70,9 +70,11 @@ impl SharedTensor {
     ///
     /// # Safety
     /// The caller must guarantee no other live reference overlaps the
-    /// range (the wavefront schedule provides this for tile segments).
+    /// range (the wavefront schedule provides this for tile segments;
+    /// the engine's pooled bin-parallel path provides it by handing
+    /// each claimed bin plane to exactly one worker).
     #[inline]
-    unsafe fn seg_mut(&self, start: usize, n: usize) -> &mut [f32] {
+    pub(crate) unsafe fn seg_mut(&self, start: usize, n: usize) -> &mut [f32] {
         debug_assert!(start + n <= self.len);
         std::slice::from_raw_parts_mut(self.ptr.add(start), n)
     }

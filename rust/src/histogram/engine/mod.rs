@@ -11,20 +11,21 @@
 //!    segment-wise vectorizable adds.  Image traffic drops `bins×`
 //!    versus the per-plane baselines.
 //! 2. **Anti-diagonal wavefront scheduling** ([`wavefront`]) — tiles
-//!    become dependency-counted tasks executed by scoped workers, so
-//!    parallelism scales with `(h/t)·(w/t)` tiles rather than with the
-//!    bin count, reproducing Algorithm 5's schedule on threads.
+//!    become dependency-counted tasks executed by parked pool workers,
+//!    so parallelism scales with `(h/t)·(w/t)` tiles rather than with
+//!    the bin count, reproducing Algorithm 5's schedule on threads.
 //! 3. **Planned execution** ([`planner`]) — a small decision table picks
 //!    serial / bin-parallel / wavefront plus the tile size per request
 //!    geometry.
 //!
 //! Buffers (output tensor via the coordinator's
 //! [`crate::coordinator::frame_pool::FramePool`], carries and scratch
-//! owned by the engine) are recycled across frames: after warm-up the
-//! steady-state [`ScanEngine::compute_into`] path allocates **no
-//! per-frame buffers**.  (Parallel schedules still spawn scoped worker
-//! threads per call — sub-1% of a frame's compute at 512²×32; a
-//! persistent worker pool is deliberate future work.)
+//! owned by the engine) are recycled across frames, and the parallel
+//! schedules execute on a persistent [`WorkerPool`] of parked threads
+//! ([`worker_pool`]): after warm-up the steady-state
+//! [`ScanEngine::compute_into`] path allocates **no per-frame buffers
+//! and spawns no threads** — both counter-asserted
+//! (`tests/engine_property.rs`, `tests/server_concurrency.rs`).
 //!
 //! The legacy baselines ([`crate::histogram::sequential`],
 //! [`crate::histogram::parallel`], [`crate::histogram::tiled`]) remain
@@ -34,28 +35,37 @@
 pub mod kernel;
 pub mod planner;
 pub mod wavefront;
+pub mod worker_pool;
 
 pub use kernel::TileScratch;
 pub use planner::{Plan, Planner, Schedule};
 pub use wavefront::{integral_histogram_fused, integral_histogram_wavefront};
+pub use worker_pool::{WorkerPool, WorkerPoolStats};
 
+use crate::histogram::engine::kernel::SharedTensor;
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// The planned scan engine.  Owns every reusable buffer except the
 /// output tensor (which the caller provides, typically from a
-/// `FramePool`), so repeated [`Self::compute_into`] calls at a fixed
-/// configuration allocate nothing.
+/// `FramePool`), plus a lazily-spawned persistent [`WorkerPool`], so
+/// repeated [`Self::compute_into`] calls at a fixed configuration
+/// allocate nothing and spawn nothing.
 #[derive(Debug, Default)]
 pub struct ScanEngine {
     planner: Planner,
     workers: usize,
-    /// Per-worker tile bucket scratch.
-    scratches: Vec<TileScratch>,
+    /// The calling thread's tile bucket scratch (worker slot 0; pool
+    /// helpers own their slabs on their own threads).
+    scratch: TileScratch,
     /// Left-edge row-prefix carries, `bins×h` (Algorithm 5's inter-tile
     /// carry), zero-filled per frame without reallocation.
     colc: Vec<f32>,
     /// Scheduler storage (dependency counters, ready stack).
     wave: wavefront::WavefrontScratch,
+    /// Persistent helper threads, spawned once on the first parallel
+    /// plan and parked between frames.
+    pool: Option<WorkerPool>,
     last_plan: Option<Plan>,
 }
 
@@ -97,6 +107,12 @@ impl ScanEngine {
         self.last_plan
     }
 
+    /// Worker-pool counters (zeros until the first parallel plan spawns
+    /// the pool) — the steady-state "zero thread spawns" observability.
+    pub fn pool_stats(&self) -> WorkerPoolStats {
+        self.pool.as_ref().map(|p| p.stats()).unwrap_or_default()
+    }
+
     /// Allocating entry point (tests, one-off calls).
     pub fn compute(&mut self, img: &BinnedImage) -> IntegralHistogram {
         let mut out = IntegralHistogram::zeros(img.bins, img.h, img.w);
@@ -120,36 +136,75 @@ impl ScanEngine {
         self.last_plan = Some(plan);
         match plan.schedule {
             Schedule::BinParallel => {
-                crate::histogram::parallel::integral_histogram_parallel_into(
-                    img,
-                    plan.workers,
-                    &mut out.data,
-                );
+                if plan.workers <= 1 {
+                    crate::histogram::parallel::integral_histogram_parallel_into(
+                        img,
+                        1,
+                        &mut out.data,
+                    );
+                } else {
+                    if self.pool.is_none() {
+                        self.pool = Some(WorkerPool::new(self.workers.saturating_sub(1)));
+                    }
+                    let pool = self.pool.as_mut().expect("pool just ensured");
+                    let plane = img.h * img.w;
+                    let bins = img.bins;
+                    let next = AtomicUsize::new(0);
+                    let out_win = SharedTensor::new(&mut out.data);
+                    // Pull-based plane distribution (the paper's bin
+                    // axis) on the parked pool: each participant claims
+                    // plane indices from the shared counter.
+                    let fill = |_slot: usize, _scratch: &mut TileScratch| loop {
+                        let k = next.fetch_add(1, Ordering::Relaxed);
+                        if k >= bins {
+                            break;
+                        }
+                        // SAFETY: each plane index is claimed exactly
+                        // once, and planes are disjoint slices of the
+                        // output buffer.
+                        let chunk = unsafe { out_win.seg_mut(k * plane, plane) };
+                        crate::histogram::parallel::fill_plane_rowsum(img, k as i32, chunk);
+                    };
+                    pool.run(plan.workers - 1, &mut self.scratch, fill);
+                }
             }
             Schedule::Serial => {
                 self.reset_carries(img);
-                if self.scratches.is_empty() {
-                    self.scratches.push(TileScratch::default());
-                }
                 wavefront::fused_scan_into(
                     img,
                     plan.tile,
                     &mut self.colc,
-                    &mut self.scratches[0],
+                    &mut self.scratch,
                     &mut out.data,
                 );
             }
             Schedule::Wavefront => {
                 self.reset_carries(img);
-                wavefront::wavefront_scan_into(
-                    img,
-                    plan.tile,
-                    plan.workers,
-                    &mut self.colc,
-                    &mut self.scratches,
-                    &mut self.wave,
-                    &mut out.data,
-                );
+                if plan.workers <= 1 {
+                    // Degenerate grid: no diagonal to spread over, so
+                    // no reason to spawn (or wake) the pool.
+                    wavefront::fused_scan_into(
+                        img,
+                        plan.tile,
+                        &mut self.colc,
+                        &mut self.scratch,
+                        &mut out.data,
+                    );
+                } else {
+                    if self.pool.is_none() {
+                        self.pool = Some(WorkerPool::new(self.workers.saturating_sub(1)));
+                    }
+                    wavefront::wavefront_scan_into(
+                        img,
+                        plan.tile,
+                        plan.workers,
+                        &mut self.colc,
+                        &mut self.scratch,
+                        self.pool.as_mut().expect("pool just ensured"),
+                        &mut self.wave,
+                        &mut out.data,
+                    );
+                }
             }
         }
     }
@@ -222,6 +277,57 @@ mod tests {
     fn zero_workers_means_available_parallelism() {
         let eng = ScanEngine::new(0);
         assert!(eng.workers() >= 1);
+    }
+
+    /// The tentpole claim: after the first parallel frame the engine
+    /// never spawns another thread — the pool is parked, not respawned.
+    #[test]
+    fn steady_state_spawns_no_threads() {
+        let img = random_image(200, 200, 8, 7);
+        let planner = Planner {
+            tile_override: Some(32),
+            schedule_override: Some(Schedule::Wavefront),
+        };
+        let mut eng = ScanEngine::with_planner(4, planner);
+        assert_eq!(eng.pool_stats(), WorkerPoolStats::default(), "pool is lazy");
+        let mut out = eng.compute(&img);
+        let s0 = eng.pool_stats();
+        assert_eq!(s0.spawned, 3, "one pool of workers-1 helpers");
+        for _ in 0..10 {
+            eng.compute_into(&img, &mut out);
+        }
+        let s1 = eng.pool_stats();
+        assert_eq!(s1.spawned, 3, "steady state must not spawn threads");
+        assert_eq!(s1.threads, 3);
+        assert_eq!(s1.jobs, s0.jobs + 10, "every frame is one pool job");
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&out), 0.0);
+    }
+
+    /// The pooled BinParallel schedule shares the same parked pool and
+    /// stays bit-identical to Algorithm 1.
+    #[test]
+    fn bin_parallel_draws_from_the_pool() {
+        let img = random_image(60, 44, 16, 8);
+        let planner = Planner {
+            tile_override: None,
+            schedule_override: Some(Schedule::BinParallel),
+        };
+        let mut eng = ScanEngine::with_planner(4, planner);
+        let out = eng.compute(&img);
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&out), 0.0);
+        let s = eng.pool_stats();
+        assert_eq!(s.spawned, 3);
+        assert_eq!(s.jobs, 1);
+        // Switching schedules reuses the same pool.
+        let planner = eng.planner_mut();
+        planner.schedule_override = Some(Schedule::Wavefront);
+        planner.tile_override = Some(16);
+        let out2 = eng.compute(&img);
+        assert_eq!(expected.max_abs_diff(&out2), 0.0);
+        assert_eq!(eng.pool_stats().spawned, 3, "schedule switch must not respawn");
+        assert_eq!(eng.pool_stats().jobs, 2);
     }
 
     #[test]

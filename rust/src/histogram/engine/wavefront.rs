@@ -19,8 +19,15 @@
 //! Workers share the output tensor and carry plane through
 //! [`SharedTensor`] windows that hand out disjoint row-segment slices —
 //! see the aliasing notes in [`crate::histogram::engine::kernel`].
+//!
+//! Execution draws on a persistent [`WorkerPool`]: the calling thread
+//! participates as worker 0 with its own scratch, helpers are parked
+//! pool threads each owning a reusable scratch slab, so a steady-state
+//! frame spawns no threads and allocates nothing (see
+//! [`crate::histogram::engine::worker_pool`]).
 
 use crate::histogram::engine::kernel::{scan_tile, SharedTensor, TileScratch};
+use crate::histogram::engine::worker_pool::WorkerPool;
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
 use std::sync::{Condvar, Mutex};
 
@@ -70,16 +77,21 @@ pub fn fused_scan_into(
     }
 }
 
-/// Wavefront-parallel fused sweep with `workers` threads.
+/// Wavefront-parallel fused sweep with `workers` threads: the calling
+/// thread (worker 0, using `scratch`) plus up to `workers − 1` helpers
+/// drawn from `pool` (each using its own persistent scratch slab).
 ///
 /// Falls back to the serial sweep when the tile grid offers no
-/// parallelism (a single tile row/column) or `workers <= 1`.
+/// parallelism (a single tile row/column) or `workers <= 1`.  Fewer
+/// pool threads than requested helpers is fine — the dependency-counted
+/// scheduler completes with any worker count.
 pub fn wavefront_scan_into(
     img: &BinnedImage,
     tile: usize,
     workers: usize,
     colc: &mut [f32],
-    scratches: &mut Vec<TileScratch>,
+    scratch: &mut TileScratch,
+    pool: &mut WorkerPool,
     ws: &mut WavefrontScratch,
     out: &mut [f32],
 ) {
@@ -89,18 +101,9 @@ pub fn wavefront_scan_into(
     let tc = w.div_ceil(tile);
     let n_tasks = tr * tc;
     let workers = workers.clamp(1, tr.min(tc));
-    if scratches.is_empty() {
-        scratches.push(TileScratch::default());
-    }
     if workers <= 1 || n_tasks == 1 {
-        fused_scan_into(img, tile, colc, &mut scratches[0], out);
+        fused_scan_into(img, tile, colc, scratch, out);
         return;
-    }
-    if scratches.len() < workers {
-        scratches.resize_with(workers, TileScratch::default);
-    }
-    for s in scratches[..workers].iter_mut() {
-        s.ensure(tile, img.bins);
     }
     assert_eq!(colc.len(), img.bins * h);
     assert_eq!(out.len(), img.bins * h * w);
@@ -125,7 +128,11 @@ pub fn wavefront_scan_into(
     let out_win = SharedTensor::new(out);
     let colc_win = SharedTensor::new(colc);
 
-    let run_worker = |scratch: &mut TileScratch| {
+    let run_worker = |_slot: usize, scratch: &mut TileScratch| {
+        // Persistent per-worker slab: reallocates only when (tile, bins)
+        // changes, so steady-state frames at one geometry allocate
+        // nothing.
+        scratch.ensure(tile, img.bins);
         loop {
             // Claim the next ready tile (or exit once all are done).
             let task = {
@@ -182,15 +189,8 @@ pub fn wavefront_scan_into(
         }
     };
 
-    std::thread::scope(|scope| {
-        let (first, rest) = scratches.split_at_mut(1);
-        let rw = &run_worker;
-        for scratch in rest[..workers - 1].iter_mut() {
-            scope.spawn(move || rw(scratch));
-        }
-        // The calling thread is worker 0.
-        rw(&mut first[0]);
-    });
+    // The calling thread is worker 0; helpers are parked pool threads.
+    pool.run(workers - 1, scratch, run_worker);
 }
 
 /// Allocating convenience wrapper over [`fused_scan_into`] — the
@@ -203,7 +203,9 @@ pub fn integral_histogram_fused(img: &BinnedImage, tile: usize) -> IntegralHisto
     out
 }
 
-/// Allocating convenience wrapper over [`wavefront_scan_into`].
+/// Allocating convenience wrapper over [`wavefront_scan_into`] with a
+/// transient pool (benches/tests; the serving path holds a long-lived
+/// pool inside [`crate::histogram::engine::ScanEngine`] instead).
 pub fn integral_histogram_wavefront(
     img: &BinnedImage,
     tile: usize,
@@ -211,9 +213,19 @@ pub fn integral_histogram_wavefront(
 ) -> IntegralHistogram {
     let mut out = IntegralHistogram::zeros(img.bins, img.h, img.w);
     let mut colc = vec![0.0f32; img.bins * img.h];
-    let mut scratches = Vec::new();
+    let mut scratch = TileScratch::default();
+    let mut pool = WorkerPool::new(workers.saturating_sub(1));
     let mut ws = WavefrontScratch::default();
-    wavefront_scan_into(img, tile, workers, &mut colc, &mut scratches, &mut ws, &mut out.data);
+    wavefront_scan_into(
+        img,
+        tile,
+        workers,
+        &mut colc,
+        &mut scratch,
+        &mut pool,
+        &mut ws,
+        &mut out.data,
+    );
     out
 }
 

@@ -1,0 +1,398 @@
+//! `WorkerPool` — long-lived parked worker threads with epoch-based
+//! task handoff, replacing the per-frame `thread::scope` spawning the
+//! parallel schedules used through PR 1 (the "persistent worker pool"
+//! DESIGN.md §2.4 deferred).
+//!
+//! The paper's serving layer owes its steady-state throughput to never
+//! paying setup costs per frame: buffers are page-locked once (§4.4),
+//! executors compiled once, devices owned for the whole run (§4.6).
+//! Thread creation was the one remaining per-frame setup cost on the
+//! CPU substrate.  This pool closes it:
+//!
+//! * **Parked workers.** `new(n)` spawns `n` threads once; between jobs
+//!   they block on a condvar.  A steady-state frame performs zero
+//!   `thread::spawn` calls — the [`WorkerPoolStats::spawned`] counter
+//!   makes that assertable (`tests/engine_property.rs`,
+//!   `tests/server_concurrency.rs`).
+//! * **Per-worker scratch slabs.** Each worker thread owns a
+//!   [`TileScratch`] that persists across jobs; `TileScratch::ensure`
+//!   reallocates only when the (tile, bins) configuration changes, so
+//!   repeated frames at one geometry touch no allocator.
+//! * **Epoch handoff.** A job is published as a type-erased call
+//!   (`fn`-pointer + context pointer) under one mutex together with a
+//!   bumped epoch; workers whose slot index is below the job's
+//!   participant count run it, everyone else just records the epoch and
+//!   parks again.  The submitting thread participates as slot 0 (with
+//!   its own scratch) and then blocks until every participant has
+//!   finished — the structured-concurrency invariant that makes the
+//!   lifetime erasure sound: the borrowed closure outlives every use.
+//!
+//! One pool serves one submitter at a time ([`WorkerPool::run`] takes
+//! `&mut self`), which is exactly the [`super::ScanEngine`] ownership
+//! model: each engine (one per stream lane / server checkout) owns its
+//! pool, so concurrent streams never contend on a scheduler.
+
+use crate::histogram::engine::kernel::TileScratch;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// A published job: lifetime-erased `Fn(slot, &mut TileScratch)`.
+#[derive(Clone, Copy)]
+struct Task {
+    run: unsafe fn(*const (), usize, &mut TileScratch),
+    ctx: *const (),
+}
+
+// SAFETY: `ctx` points at a closure that is `Sync` (enforced by the
+// bound on `run`) and is kept alive by the submitting thread until
+// every participant reports completion.
+unsafe impl Send for Task {}
+
+unsafe fn call_thunk<F: Fn(usize, &mut TileScratch) + Sync>(
+    ctx: *const (),
+    slot: usize,
+    scratch: &mut TileScratch,
+) {
+    (*(ctx as *const F))(slot, scratch)
+}
+
+/// Scheduler state shared between the submitter and the workers.
+struct State {
+    /// Bumped once per job; workers compare against their last-seen value.
+    epoch: u64,
+    task: Option<Task>,
+    /// Workers with slot index `< participants` run the current job.
+    participants: usize,
+    /// Participants still running the current job.
+    active: usize,
+    /// A participant panicked while running the current job.
+    poisoned: bool,
+    /// Workers lost to task panics (their threads unwound away).  Once
+    /// nonzero the pool degrades to caller-only execution — results
+    /// stay correct, parallelism is gone — instead of dispatching to
+    /// slots that can never answer.
+    dead: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here waiting for a new epoch.
+    work: Condvar,
+    /// The submitter parks here waiting for `active == 0`.
+    done: Condvar,
+}
+
+impl Shared {
+    /// Lock the state, recovering from mutex poisoning (our critical
+    /// sections contain no panicking operations; a poisoned lock only
+    /// means some worker's task panicked outside it).
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Pool observability counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WorkerPoolStats {
+    /// Worker threads currently owned by the pool.
+    pub threads: usize,
+    /// Threads ever spawned — constant after construction; the
+    /// steady-state "zero thread spawns" assertion reads this.
+    pub spawned: usize,
+    /// Jobs dispatched through [`WorkerPool::run`] (parallel or not).
+    pub jobs: usize,
+}
+
+/// A fixed-size pool of parked worker threads.  See the module docs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    spawned: usize,
+    jobs: AtomicUsize,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.handles.len())
+            .field("jobs", &self.jobs.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+/// Decrements `active` when a worker finishes (or unwinds out of) a
+/// task, so the submitter can never deadlock on a panicked participant.
+struct ActiveGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.shared.lock();
+        if std::thread::panicking() {
+            st.poisoned = true;
+            st.dead += 1;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            self.shared.done.notify_all();
+        }
+    }
+}
+
+/// Blocks until the in-flight job completes; runs even if the
+/// submitter's own slot-0 call unwinds, so borrowed context is never
+/// freed while a helper still uses it.
+struct JobGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for JobGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.shared.lock();
+        while st.active > 0 {
+            st = match self.shared.done.wait(st) {
+                Ok(g) => g,
+                Err(e) => e.into_inner(),
+            };
+        }
+        st.task = None;
+    }
+}
+
+fn worker_loop(shared: &Shared, slot: usize) {
+    let mut scratch = TileScratch::default();
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = shared.lock();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if slot < st.participants {
+                        break st.task.expect("task published with the epoch");
+                    }
+                }
+                st = match shared.work.wait(st) {
+                    Ok(g) => g,
+                    Err(e) => e.into_inner(),
+                };
+            }
+        };
+        // Run outside the lock; the guard keeps `active` correct even
+        // if the task panics (the panic then ends this worker thread,
+        // and the submitter re-raises via the poison flag).
+        let _g = ActiveGuard { shared };
+        // SAFETY: the submitter keeps the closure alive until `active`
+        // reaches 0, which this thread only signals after returning.
+        unsafe { (task.run)(task.ctx, slot + 1, &mut scratch) };
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `threads` parked workers (0 is valid: every job then runs
+    /// on the caller alone).
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                task: None,
+                participants: 0,
+                active: 0,
+                poisoned: false,
+                dead: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads);
+        for slot in 0..threads {
+            let shared = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("inthist-worker-{slot}"))
+                .spawn(move || worker_loop(&shared, slot))
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+        WorkerPool { shared, spawned: threads, handles, jobs: AtomicUsize::new(0) }
+    }
+
+    /// Worker threads owned by the pool.
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn stats(&self) -> WorkerPoolStats {
+        WorkerPoolStats {
+            threads: self.handles.len(),
+            spawned: self.spawned,
+            jobs: self.jobs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `f` on `helpers` pool workers (slots `1..=helpers`, clamped
+    /// to the pool size) plus the calling thread (slot 0, using
+    /// `caller_scratch`), returning once every participant finished.
+    ///
+    /// `&mut self` enforces one job in flight per pool; the blocking
+    /// return is what lets `f` borrow from the caller's stack.
+    pub fn run<F>(&mut self, helpers: usize, caller_scratch: &mut TileScratch, f: F)
+    where
+        F: Fn(usize, &mut TileScratch) + Sync,
+    {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        // A pool that lost a worker to a panic degrades to caller-only:
+        // slot assignment is fixed per thread, so a dead slot below the
+        // participant count could never drain `active` (deadlock).
+        let helpers = if self.shared.lock().dead > 0 {
+            0
+        } else {
+            helpers.min(self.handles.len())
+        };
+        if helpers == 0 {
+            f(0, caller_scratch);
+            return;
+        }
+        let task = Task { run: call_thunk::<F>, ctx: &f as *const F as *const () };
+        {
+            let mut st = self.shared.lock();
+            st.epoch += 1;
+            st.task = Some(task);
+            st.participants = helpers;
+            st.active = helpers;
+            st.poisoned = false;
+            self.shared.work.notify_all();
+        }
+        {
+            // Wait for the helpers even if f(0) unwinds.
+            let _job = JobGuard { shared: &self.shared };
+            f(0, caller_scratch);
+        }
+        if self.shared.lock().poisoned {
+            panic!("worker pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn all_participants_run_exactly_once() {
+        let mut pool = WorkerPool::new(3);
+        for job in 0..50 {
+            let seen = Mutex::new(Vec::new());
+            let helpers = job % 4; // 0..=3
+            pool.run(helpers, &mut TileScratch::default(), |slot, _s| {
+                seen.lock().unwrap().push(slot);
+            });
+            let mut got = seen.into_inner().unwrap();
+            got.sort_unstable();
+            let want: Vec<usize> = (0..=helpers).collect();
+            assert_eq!(got, want, "job {job}");
+        }
+        assert_eq!(pool.stats().jobs, 50);
+        assert_eq!(pool.stats().spawned, 3);
+    }
+
+    #[test]
+    fn helpers_clamped_to_pool_size() {
+        let mut pool = WorkerPool::new(2);
+        let count = AtomicU32::new(0);
+        pool.run(16, &mut TileScratch::default(), |_slot, _s| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 3, "caller + 2 pool workers");
+    }
+
+    #[test]
+    fn zero_thread_pool_runs_caller_only() {
+        let mut pool = WorkerPool::new(0);
+        let count = AtomicU32::new(0);
+        pool.run(4, &mut TileScratch::default(), |slot, _s| {
+            assert_eq!(slot, 0);
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.stats().spawned, 0);
+    }
+
+    #[test]
+    fn pool_does_real_parallel_work() {
+        let mut pool = WorkerPool::new(3);
+        let total = AtomicU32::new(0);
+        let next = AtomicU32::new(0);
+        pool.run(3, &mut TileScratch::default(), |_slot, _s| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= 1000 {
+                break;
+            }
+            total.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn spawn_counter_is_flat_across_jobs() {
+        let mut pool = WorkerPool::new(2);
+        for _ in 0..100 {
+            pool.run(2, &mut TileScratch::default(), |_s, _t| {});
+        }
+        let st = pool.stats();
+        assert_eq!(st.spawned, 2, "steady state must never spawn");
+        assert_eq!(st.jobs, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker pool task panicked")]
+    fn helper_panic_propagates_to_submitter() {
+        let mut pool = WorkerPool::new(1);
+        pool.run(1, &mut TileScratch::default(), |slot, _s| {
+            if slot == 1 {
+                panic!("boom");
+            }
+        });
+    }
+
+    /// After a caught helper panic the pool must stay usable (degraded
+    /// to caller-only execution), never deadlock on the dead slot.
+    #[test]
+    fn pool_degrades_to_caller_after_panic() {
+        let mut pool = WorkerPool::new(1);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(1, &mut TileScratch::default(), |slot, _s| {
+                if slot == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(outcome.is_err(), "panic must propagate");
+        let count = AtomicU32::new(0);
+        pool.run(1, &mut TileScratch::default(), |slot, _s| {
+            assert_eq!(slot, 0, "degraded pool runs the caller only");
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+}

@@ -74,8 +74,10 @@ pub fn integral_histogram_parallel_into(img: &BinnedImage, threads: usize, out: 
 }
 
 /// Compute one bin plane into `out` (len h·w) with the running-row-sum
-/// recurrence.
-fn fill_plane_rowsum(img: &BinnedImage, bin: i32, out: &mut [f32]) {
+/// recurrence.  Also the per-plane task body of the
+/// [`crate::histogram::engine::ScanEngine`]'s pooled `BinParallel`
+/// schedule.
+pub(crate) fn fill_plane_rowsum(img: &BinnedImage, bin: i32, out: &mut [f32]) {
     let (h, w) = (img.h, img.w);
     debug_assert_eq!(out.len(), h * w);
     for x in 0..h {

@@ -49,9 +49,15 @@ pub mod prelude {
     pub use crate::coordinator::pipeline::{
         CpuPipeline, CpuPipelineConfig, Pipeline, PipelineConfig, PipelineReport,
     };
+    pub use crate::coordinator::metrics::LatencySummary;
     pub use crate::coordinator::router::{Engine, EngineConfig};
+    pub use crate::coordinator::server::{
+        AnalyticsEvent, Server, ServerConfig, ServerSnapshot, Session, SessionSnapshot,
+    };
     pub use crate::coordinator::task_queue::{BinTaskQueue, TaskQueueConfig};
-    pub use crate::histogram::engine::{Plan, Planner, ScanEngine, Schedule};
+    pub use crate::histogram::engine::{
+        Plan, Planner, ScanEngine, Schedule, WorkerPool, WorkerPoolStats,
+    };
     pub use crate::histogram::region::Rect;
     pub use crate::histogram::types::{IntegralHistogram, Strategy};
     pub use crate::runtime::artifact::{ArtifactManifest, ArtifactMeta};

@@ -1,0 +1,190 @@
+//! `CompileCache` — interior-mutable get-or-compile executor cache
+//! shared by the single-session [`crate::coordinator::router::Engine`]
+//! and the multi-stream [`crate::coordinator::server::Server`].
+//!
+//! Compilation is a one-off cost the paper keeps off the frame path
+//! (kernels are built before the stream starts); here that discipline
+//! is a `&self` cache: the first request for an artifact compiles it
+//! under the lock, every later request clones an `Arc` handle.
+//! Failures are negatively cached so a missing/broken HLO file is read
+//! once, not once per frame, on the fallback path.
+//!
+//! Concurrency note: the offline build's `xla` stub types are plain
+//! data, so sharing executors behind `Arc` is sound.  A real PJRT
+//! backend with non-`Sync` FFI handles must keep per-thread executors
+//! instead (the [`crate::runtime::device_pool`] model); this cache is
+//! the single place that decision lives.
+
+use crate::runtime::artifact::{ArtifactManifest, ArtifactMeta};
+use crate::runtime::client::HistogramExecutor;
+use crate::histogram::types::Strategy;
+use anyhow::{anyhow, Result};
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+#[derive(Default)]
+struct CacheState {
+    compiled: HashMap<String, Arc<HistogramExecutor>>,
+    /// Artifacts whose compile failed — negatively cached so the
+    /// per-frame fallback path never re-reads the HLO file.
+    failed: HashSet<String>,
+    /// Memoized (strategy, h, w, bins) → manifest-match results, so
+    /// hot fallback paths can test availability without re-scanning
+    /// the manifest or building error strings per frame.
+    strategy_known: HashMap<(Strategy, usize, usize, usize), bool>,
+}
+
+/// Thread-safe executor cache over one artifact manifest.
+pub struct CompileCache {
+    manifest: Arc<ArtifactManifest>,
+    state: Mutex<CacheState>,
+}
+
+impl CompileCache {
+    pub fn new(manifest: Arc<ArtifactManifest>) -> CompileCache {
+        CompileCache { manifest, state: Mutex::new(CacheState::default()) }
+    }
+
+    pub fn manifest(&self) -> &Arc<ArtifactManifest> {
+        &self.manifest
+    }
+
+    fn lock(&self) -> MutexGuard<'_, CacheState> {
+        self.state.lock().expect("compile cache lock")
+    }
+
+    /// Get-or-compile `meta`, returning a shared executor handle.
+    pub fn get_or_compile(&self, meta: &ArtifactMeta) -> Result<Arc<HistogramExecutor>> {
+        let mut st = self.lock();
+        if let Some(exe) = st.compiled.get(&meta.name) {
+            return Ok(Arc::clone(exe));
+        }
+        if st.failed.contains(&meta.name) {
+            return Err(anyhow!("artifact '{}' previously failed to compile", meta.name));
+        }
+        // Compile under the lock: concurrent first requests for one
+        // artifact would otherwise compile it twice (compiles are rare
+        // one-offs; serving threads are on the CPU path meanwhile).
+        match HistogramExecutor::compile(&self.manifest, meta) {
+            Ok(exe) => {
+                let exe = Arc::new(exe);
+                st.compiled.insert(meta.name.clone(), Arc::clone(&exe));
+                Ok(exe)
+            }
+            Err(e) => {
+                st.failed.insert(meta.name.clone());
+                Err(e)
+            }
+        }
+    }
+
+    /// Find the artifact for (strategy, geometry, bins) and compile it,
+    /// with the actionable "no artifact" error when none matches.
+    pub fn strategy_executor(
+        &self,
+        strategy: Strategy,
+        h: usize,
+        w: usize,
+        bins: usize,
+    ) -> Result<Arc<HistogramExecutor>> {
+        let meta = self
+            .manifest
+            .find_strategy(strategy, h, w, bins)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for {strategy} {h}x{w} bins={bins}; available: {}",
+                    self.manifest
+                        .strategies()
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?
+            .clone();
+        self.get_or_compile(&meta)
+    }
+
+    /// Whether a strategy artifact matching (strategy, h, w, bins)
+    /// exists in the manifest — memoized, allocation-free after the
+    /// first lookup per geometry, so per-frame fallback routing stays
+    /// off the allocator.
+    pub fn has_strategy(&self, strategy: Strategy, h: usize, w: usize, bins: usize) -> bool {
+        let mut st = self.lock();
+        if let Some(&known) = st.strategy_known.get(&(strategy, h, w, bins)) {
+            return known;
+        }
+        let known = self.manifest.find_strategy(strategy, h, w, bins).is_some();
+        st.strategy_known.insert((strategy, h, w, bins), known);
+        known
+    }
+
+    /// Number of successfully compiled executors held.
+    pub fn compiled_count(&self) -> usize {
+        self.lock().compiled.len()
+    }
+
+    /// Drop every cached executor and negative compile result — call
+    /// after regenerating `artifacts/` so failed compiles are retried.
+    pub fn clear(&self) {
+        let mut st = self.lock();
+        st.compiled.clear();
+        st.failed.clear();
+        st.strategy_known.clear();
+    }
+}
+
+impl std::fmt::Debug for CompileCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.lock();
+        f.debug_struct("CompileCache")
+            .field("compiled", &st.compiled.len())
+            .field("failed", &st.failed.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn empty_manifest() -> Arc<ArtifactManifest> {
+        Arc::new(ArtifactManifest {
+            dir: PathBuf::from("/nonexistent"),
+            profile: "test".into(),
+            artifacts: vec![],
+        })
+    }
+
+    #[test]
+    fn missing_strategy_is_helpful_error() {
+        let cache = CompileCache::new(empty_manifest());
+        let err = cache
+            .strategy_executor(Strategy::WfTis, 64, 64, 32)
+            .err()
+            .expect("must fail")
+            .to_string();
+        assert!(err.contains("no artifact"), "{err}");
+        assert_eq!(cache.compiled_count(), 0);
+    }
+
+    #[test]
+    fn clear_resets_state() {
+        let cache = CompileCache::new(empty_manifest());
+        let _ = cache.strategy_executor(Strategy::WfTis, 8, 8, 4);
+        cache.clear();
+        assert_eq!(cache.compiled_count(), 0);
+    }
+
+    #[test]
+    fn has_strategy_memoizes_misses() {
+        let cache = CompileCache::new(empty_manifest());
+        assert!(!cache.has_strategy(Strategy::WfTis, 64, 64, 32));
+        // Second call answers from the memo (observably: still false,
+        // no state change).
+        assert!(!cache.has_strategy(Strategy::WfTis, 64, 64, 32));
+        cache.clear();
+        assert!(!cache.has_strategy(Strategy::WfTis, 64, 64, 32));
+    }
+}

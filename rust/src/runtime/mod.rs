@@ -9,10 +9,14 @@
 //!   every lowered module's strategy, geometry and I/O signature.
 //! * [`client`] — [`client::HistogramExecutor`]: one compiled executable
 //!   bound to one artifact, with typed image→tensor entry points.
+//! * [`compile_cache`] — interior-mutable get-or-compile cache shared
+//!   by the router and the multi-stream server (compile once, serve
+//!   from `Arc` handles, negatively cache failures).
 //! * [`device_pool`] — N worker threads each owning a PJRT client
 //!   (the paper's multi-GPU substitute), consumed by the coordinator's
 //!   bin task queue.
 
 pub mod artifact;
 pub mod client;
+pub mod compile_cache;
 pub mod device_pool;

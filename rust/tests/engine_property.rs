@@ -161,6 +161,36 @@ fn cpu_pipeline_is_zero_alloc_in_steady_state() {
     assert!(stats.reused >= frames - (lanes + 2));
 }
 
+/// A lane's engine — and its parked worker pool — must persist across
+/// runs: the second stream on the same pipeline spawns zero threads
+/// and reuses the arena.
+#[test]
+fn cpu_pipeline_engine_persists_across_runs() {
+    let (h, w, bins, frames) = (128usize, 160usize, 8usize, 6usize);
+    let video = SyntheticVideo::new(h, w, 3, 13);
+    let pipeline = CpuPipeline::new(CpuPipelineConfig::new(bins).lanes(2).workers(2));
+    for run in 0..3 {
+        let src = Box::new(SyntheticVideo::new(h, w, 3, 13).take_frames(frames));
+        let report = pipeline
+            .run_with(src, |seq, ih| {
+                let expected = integral_histogram_seq(&video.frame(seq).binned(bins));
+                assert_eq!(expected.max_abs_diff(&ih), 0.0, "run {run} frame {seq}");
+            })
+            .expect("pipeline run");
+        assert_eq!(report.throughput.frames, frames);
+    }
+    let pool_stats = pipeline.engine_pool_stats();
+    assert_eq!(pool_stats.spawned, 1, "one helper spawned once, ever: {pool_stats:?}");
+    assert_eq!(pool_stats.jobs, 3 * frames, "every frame of every run is one pool job");
+    let arena = pipeline.pool().stats();
+    assert_eq!(
+        arena.allocated + arena.reused,
+        3 * frames,
+        "later runs recycle the first run's tensors: {arena:?}"
+    );
+    assert!(arena.allocated <= 4, "{arena:?}");
+}
+
 /// Serial (lanes = 1) CPU pipeline agrees and recycles through one
 /// buffer.
 #[test]

@@ -1,0 +1,202 @@
+//! Concurrency properties of the shared serving layer: N threads
+//! hammering one `Server` must produce tensors bit-identical to serial
+//! execution, and once warm the serving path must neither allocate
+//! per-frame buffers nor spawn threads — both read off the server's
+//! counters (the PR's acceptance criteria).
+
+use inthist::coordinator::router::Route;
+use inthist::coordinator::server::{Server, ServerConfig};
+use inthist::histogram::sequential::integral_histogram_seq;
+use inthist::histogram::types::IntegralHistogram;
+use inthist::runtime::artifact::ArtifactManifest;
+use inthist::video::synth::SyntheticVideo;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn empty_manifest() -> Arc<ArtifactManifest> {
+    Arc::new(ArtifactManifest {
+        dir: PathBuf::from("/nonexistent"),
+        profile: "test".into(),
+        artifacts: vec![],
+    })
+}
+
+const H: usize = 120;
+const W: usize = 160;
+const BINS: usize = 8;
+const DISTINCT: usize = 6;
+
+fn test_server() -> Server {
+    let mut cfg = ServerConfig::default();
+    cfg.engine.bins = BINS;
+    cfg.workers_per_stream = 2; // parallel plans => the worker pools are exercised
+    Server::new(empty_manifest(), cfg)
+}
+
+fn expected_tensors(video: &SyntheticVideo) -> Vec<IntegralHistogram> {
+    (0..DISTINCT).map(|t| integral_histogram_seq(&video.frame(t).binned(BINS))).collect()
+}
+
+#[test]
+fn hammered_server_is_bit_identical_to_serial() {
+    let server = test_server();
+    let video = SyntheticVideo::new(H, W, 3, 11);
+    let expected = expected_tensors(&video);
+    let threads = 4usize;
+    let frames_per_thread = 12usize;
+
+    std::thread::scope(|scope| {
+        for tid in 0..threads {
+            let server = &server;
+            let video = &video;
+            let expected = &expected;
+            scope.spawn(move || {
+                let mut session = server.open_session().expect("admitted");
+                for i in 0..frames_per_thread {
+                    let t = (tid * 7 + i) % DISTINCT;
+                    let ih = session.process(&video.frame(t)).expect("compute");
+                    assert_eq!(
+                        expected[t].max_abs_diff(&ih),
+                        0.0,
+                        "thread {tid} frame {i} (video frame {t}) diverged from serial"
+                    );
+                }
+                assert_eq!(session.stats().frames, frames_per_thread);
+            });
+        }
+    });
+
+    let snap = server.snapshot();
+    assert_eq!(snap.frames, threads * frames_per_thread);
+    assert_eq!(snap.sessions_opened, threads);
+    assert_eq!(snap.sessions_active, 0, "all sessions dropped");
+    assert!(snap.sessions_peak <= threads);
+    // Engines are bounded by peak concurrency, never by frame count.
+    assert!(
+        snap.engines_created <= threads,
+        "checkout engines must be reused: {snap:?}"
+    );
+    assert!(snap.frame_pool.allocated <= threads, "tensor arena bounded: {snap:?}");
+    assert_eq!(
+        snap.frame_pool.allocated + snap.frame_pool.reused,
+        threads * frames_per_thread
+    );
+    assert_eq!(snap.latency.n, threads * frames_per_thread);
+    assert!(snap.latency.p50_ms > 0.0);
+    assert!(snap.latency.p99_ms >= snap.latency.p50_ms);
+}
+
+#[test]
+fn steady_state_counters_stay_flat() {
+    let server = test_server();
+    let video = SyntheticVideo::new(H, W, 3, 11);
+    let expected = expected_tensors(&video);
+
+    // Warm-up: some concurrency, then quiesce.
+    std::thread::scope(|scope| {
+        for tid in 0..3 {
+            let server = &server;
+            let video = &video;
+            scope.spawn(move || {
+                for i in 0..4 {
+                    let img = video.frame((tid + i) % DISTINCT).binned(BINS);
+                    let (_ih, _d) = server.compute(&img).expect("warm-up compute");
+                }
+            });
+        }
+    });
+
+    let warm = server.snapshot();
+    assert!(warm.threads_spawned >= 1, "parallel plans must have spawned pools: {warm:?}");
+
+    // Steady state: sequential traffic must reuse everything.
+    let extra = 20usize;
+    let mut session = server.open_session().expect("admitted");
+    for i in 0..extra {
+        let t = i % DISTINCT;
+        let ih = session.process(&video.frame(t)).expect("steady compute");
+        assert_eq!(expected[t].max_abs_diff(&ih), 0.0, "steady frame {i}");
+    }
+    drop(session);
+
+    let steady = server.snapshot();
+    assert_eq!(
+        steady.engines_created, warm.engines_created,
+        "steady state must not create engines"
+    );
+    assert_eq!(
+        steady.threads_spawned, warm.threads_spawned,
+        "steady state must spawn zero threads"
+    );
+    assert_eq!(
+        steady.frame_pool.allocated, warm.frame_pool.allocated,
+        "steady state must allocate zero per-frame buffers"
+    );
+    assert_eq!(steady.frame_pool.reused, warm.frame_pool.reused + extra);
+    assert_eq!(
+        steady.pool_jobs,
+        warm.pool_jobs + extra,
+        "every steady frame is one parked-pool job"
+    );
+    assert_eq!(steady.frames, warm.frames + extra);
+}
+
+#[test]
+fn admission_is_thread_safe_and_bounded() {
+    let mut cfg = ServerConfig::default();
+    cfg.engine.bins = BINS;
+    cfg.max_sessions = 3;
+    let server = Server::new(empty_manifest(), cfg);
+
+    // 8 threads race for 3 slots; the winners hold their sessions
+    // until every thread has finished, so exactly 3 can win.
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let server = &server;
+            handles.push(scope.spawn(move || server.open_session().ok()));
+        }
+        let sessions: Vec<_> = handles
+            .into_iter()
+            .map(|h| h.join().expect("no panic"))
+            .collect();
+        let admitted = sessions.iter().filter(|s| s.is_some()).count();
+        assert_eq!(admitted, 3, "exactly max_sessions admitted");
+        drop(sessions);
+    });
+    // scope end dropped every admitted session: slots all free again
+    assert_eq!(server.sessions_active(), 0);
+    let s = server.open_session().expect("slots released");
+    drop(s);
+    let snap = server.snapshot();
+    assert_eq!(snap.sessions_rejected, 5);
+    assert_eq!(snap.sessions_peak, 3);
+}
+
+#[test]
+fn large_route_shares_the_front_door_under_concurrency() {
+    let mut cfg = ServerConfig::default();
+    cfg.engine.bins = BINS;
+    cfg.engine.device_memory_budget = 1 << 10; // everything routes "large"
+    let server = Server::new(empty_manifest(), cfg);
+    assert_eq!(server.route_for(H, W), Route::TaskQueue);
+    let video = SyntheticVideo::new(H, W, 2, 5);
+    let expected = expected_tensors(&video);
+    std::thread::scope(|scope| {
+        for tid in 0..3 {
+            let server = &server;
+            let video = &video;
+            let expected = &expected;
+            scope.spawn(move || {
+                for i in 0..4 {
+                    let t = (tid + 2 * i) % DISTINCT;
+                    let img = video.frame(t).binned(BINS);
+                    // no group artifact offline => CPU serves, same door
+                    let (ih, _) = server.compute(&img).expect("large-route compute");
+                    assert_eq!(expected[t].max_abs_diff(&ih), 0.0);
+                }
+            });
+        }
+    });
+    assert_eq!(server.snapshot().frames, 12);
+}
