@@ -1,19 +1,24 @@
-//! Large-scale integral histograms on multiple devices (§4.6, Fig. 18).
+//! Large-scale integral histograms across a worker pool (§4.6,
+//! Fig. 18), on the sharded execution subsystem.
 //!
-//! A 128-bin HD frame's tensor (≈450 MB at f32) stresses single-device
-//! memory in the paper's setting; the coordinator splits the bins into
-//! 8-bin group tasks on a queue and a pool of PJRT workers pulls them —
-//! the same code path the paper uses to push 32 GB tensors through four
-//! GTX 480s.  This example sweeps the worker count and verifies the
-//! assembled tensor against the single-device result.
+//! A 128-bin 512×512 frame's tensor (≈134 MB at f32) is partitioned by
+//! the `ShardPlanner` into bin-range shards, streamed through a
+//! `ShardExecutor` worker set (the multi-GPU substitute), and
+//! reassembled from `(frame_id, shard_id)`-tagged results — the same
+//! structure the paper uses to push 32 GB tensors through four
+//! GTX 480s.  The example sweeps the worker count, verifies the
+//! assembled tensor against the CPU baseline, and prints the
+//! planner's *predicted* per-shard cost (PCIe + memory-bandwidth
+//! models for the paper's GTX 480) next to the *measured* CPU-substrate
+//! kernel time, so the Fig. 18 schedule arithmetic is visible.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example multi_gpu_large_image
+//! cargo run --release --example multi_gpu_large_image
 //! ```
 
-use anyhow::{anyhow, Result};
-use inthist::coordinator::task_queue::{BinTaskQueue, TaskQueueConfig};
+use anyhow::Result;
 use inthist::prelude::*;
+use inthist::simulator::pcie::Card;
 use inthist::video::synth::SyntheticVideo;
 use std::sync::Arc;
 
@@ -22,31 +27,33 @@ const BINS: usize = 128;
 const GROUP: usize = 8;
 
 fn main() -> Result<()> {
-    let manifest = Arc::new(ArtifactManifest::load("artifacts")?);
-    let artifact = format!("wf_tis_{SIZE}x{SIZE}_b{GROUP}_t64");
-    manifest
-        .find_named(&artifact)
-        .ok_or_else(|| anyhow!("missing {artifact} — run `make artifacts`"))?;
-
     let video = SyntheticVideo::new(SIZE, SIZE, 4, 7);
     let image = Arc::new(video.frame(0).binned(BINS));
+    let policy = ShardPolicy {
+        memory_budget: 1 << 30,
+        workers: 4,
+        max_group: GROUP,
+        ..ShardPolicy::default()
+    };
+    let plan = ShardPlanner::new(policy).plan(BINS, SIZE, SIZE);
     println!(
-        "== {SIZE}x{SIZE} frame, {BINS} bins in {} tasks of {GROUP} ({} MB tensor) ==\n",
-        BINS / GROUP,
-        BINS * SIZE * SIZE * 4 / 1_000_000
+        "== {SIZE}x{SIZE} frame, {BINS} bins in {} shards (group {}, strip rows {}) — {} MB tensor ==\n",
+        plan.shards.len(),
+        plan.group,
+        plan.strip_rows,
+        plan.tensor_nbytes() / 1_000_000
     );
 
-    println!("{:<8} {:>10} {:>12} {:>12} {:>20}", "workers", "wall s", "fr/sec", "efficiency", "tasks per worker");
+    println!("{:<8} {:>10} {:>12} {:>12} {:>20}", "workers", "wall s", "fr/sec", "efficiency", "shards per worker");
     let mut reference: Option<IntegralHistogram> = None;
     let mut fps_by_workers = Vec::new();
+    let mut last_report: Option<ShardReport> = None;
     for workers in [1usize, 2, 4] {
-        let queue = BinTaskQueue::new(
-            Arc::clone(&manifest),
-            TaskQueueConfig { workers, group: GROUP, artifact: artifact.clone() },
-        )?;
-        // warm-up compiles each worker's executor outside the timing
-        let _ = queue.compute_discard(&image, BINS)?;
-        let (ih, report) = queue.compute(&image, BINS)?;
+        let exec = ShardExecutor::new(ShardExecutorConfig { workers, ..Default::default() });
+        // warm-up spawns the checkout engines outside the timing
+        let mut out = IntegralHistogram::zeros(0, 0, 0);
+        let _ = exec.submit(&image, &plan)?.reassemble_into(&mut out)?;
+        let report = exec.submit(&image, &plan)?.reassemble_into(&mut out)?;
         println!(
             "{workers:<8} {:>10.3} {:>12.3} {:>11.0}% {:>20}",
             report.wall.as_secs_f64(),
@@ -56,20 +63,56 @@ fn main() -> Result<()> {
         );
         fps_by_workers.push(report.fps());
         match &reference {
-            None => reference = Some(ih),
+            None => reference = Some(out.clone()),
             Some(r) => assert_eq!(
-                r.max_abs_diff(&ih),
+                r.max_abs_diff(&out),
                 0.0,
                 "worker counts must not change the result"
             ),
         }
-        queue.shutdown();
+        last_report = Some(report);
     }
 
     // Correctness: the assembled 128-bin tensor equals Algorithm 1.
     let cpu = inthist::histogram::parallel::integral_histogram_parallel(&image, 8);
-    assert_eq!(reference.unwrap().max_abs_diff(&cpu), 0.0, "pool result must match Algorithm 1");
+    assert_eq!(reference.unwrap().max_abs_diff(&cpu), 0.0, "sharded result must match Algorithm 1");
     println!("\nassembled tensor verified against CPU Algorithm 1");
+
+    // Predicted (paper's GTX 480 models) vs measured (CPU substrate)
+    // per-shard cost — the Fig. 18 schedule arithmetic side by side.
+    let card = Card::Gtx480;
+    let predicted = plan.predict(card);
+    let report = last_report.expect("at least one run");
+    println!("\npredicted per-shard cost ({}) vs measured CPU kernel time:", card.name());
+    println!(
+        "{:<8} {:>6} {:>6} {:>16} {:>16} {:>16}",
+        "shard", "bins", "rows", "pred kernel ms", "pred transfer ms", "measured ms"
+    );
+    for spec in plan.shards.iter().take(4) {
+        let p = predicted[spec.shard_id];
+        println!(
+            "{:<8} {:>6} {:>6} {:>16.3} {:>16.3} {:>16.3}",
+            spec.shard_id,
+            spec.nbins,
+            spec.nrows,
+            p.kernel.as_secs_f64() * 1e3,
+            p.transfer.as_secs_f64() * 1e3,
+            report.kernel_by_shard[spec.shard_id].as_secs_f64() * 1e3
+        );
+    }
+    if plan.shards.len() > 4 {
+        println!("…        ({} more shards)", plan.shards.len() - 4);
+    }
+    let total = plan.predict_total(card, 4);
+    println!(
+        "\nplan totals on 4x {}: predicted wall {:.3} s (kernel {:.3} s, transfer {:.3} s) — \
+         the paper's Fig. 18 regime; measured CPU-substrate wall above demonstrates the \
+         same queueing/distribution mechanism.",
+        card.name(),
+        total.wall.as_secs_f64(),
+        total.serial_kernel.as_secs_f64(),
+        total.serial_transfer.as_secs_f64()
+    );
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!(
         "scaling 1→4 workers: {:.2}x on {cores} host core(s) \

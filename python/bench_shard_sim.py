@@ -1,0 +1,249 @@
+"""Pre-validation measurement for benches/shard.rs — the dev container
+ships no Rust toolchain, so this script measures the *same two
+schedules* the Rust bench compares, as real multiprocessing work on
+this host, and writes a clearly-labeled BENCH_shard.json at the repo
+root.  CI regenerates the file with `cargo bench --bench shard`
+(harness: "cargo-bench" replaces "python-prevalidation").
+
+Schedules measured (mirroring rust/benches/shard.rs §2), on a thread
+pool with GIL-releasing NumPy kernels so results move by reference as
+they do in Rust:
+  * serial whole-frame queue — a frame's bin-group tasks are dispatched
+    to the worker pool and the next frame starts only after the frame
+    fully assembles into a freshly zeroed tensor, each task cloning and
+    shifting the image (the BinTaskQueue / old Server large route's
+    per-job costs);
+  * interleaved shard window — up to K frames' shards share the pool;
+    frame N's assembly overlaps frame N+1's compute, the output buffer
+    is recycled, and shards slice rather than clone (the ShardExecutor
+    / FramePool schedule).
+
+The out-of-core section streams a 128-bin tensor's strips to a real
+temp file in arrival order with carry correction, tracking peak bytes
+held in the parent — the TensorStore + Reassembler mirror.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import time
+from collections import deque
+from multiprocessing.pool import ThreadPool
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests"))
+from test_shard_prevalidation import ceil_div, plan  # noqa: E402
+
+H, W, BINS, GROUP, WORKERS, FRAMES, DISTINCT = 192, 160, 32, 4, 4, 12, 4
+
+
+def make_images(bins):
+    rng = np.random.default_rng(11)
+    return [rng.integers(0, bins, size=(H, W)) for _ in range(DISTINCT)]
+
+
+def group_task(img, b0, nb, r0, nr):
+    """One shard task, ShardExecutor cost model: slice rows (no frame
+    clone), shift, double cumsum (f32)."""
+    sub = img[r0 : r0 + nr, :].astype(np.int64) - b0
+    sub[(sub < 0) | (sub >= nb)] = -1
+    onehot = (sub[None, :, :] == np.arange(nb)[:, None, None]).astype(np.float32)
+    return np.cumsum(np.cumsum(onehot, axis=1, dtype=np.float32), axis=2, dtype=np.float32)
+
+
+def queue_task(img, b0, nb):
+    """One BinTaskQueue job, device_pool cost model: clone + shift the
+    WHOLE frame, then compute the group into a fresh zeroed partial."""
+    shifted = img.copy().astype(np.int64) - b0
+    shifted[(shifted < 0) | (shifted >= nb)] = -1
+    partial = np.zeros((nb,) + img.shape, dtype=np.float32)
+    onehot = (shifted[None, :, :] == np.arange(nb)[:, None, None]).astype(np.float32)
+    partial[:] = np.cumsum(np.cumsum(onehot, axis=1, dtype=np.float32), axis=2, dtype=np.float32)
+    return partial
+
+
+def serial_queue_schedule(pool, imgs, frames, shards):
+    """Whole-frame serialization: dispatch, barrier, assemble into a
+    freshly zeroed tensor, repeat (BinTaskQueue::compute)."""
+    t0 = time.perf_counter()
+    for f in range(frames):
+        img = imgs[f % len(imgs)]
+        rs = [pool.apply_async(queue_task, (img, b0, nb)) for (_, b0, nb, _r0, _nr) in shards]
+        parts = [r.get() for r in rs]  # barrier
+        out = np.zeros((BINS, H, W), dtype=np.float32)  # per-frame zeros, like the queue
+        for (_, b0, nb, _r0, _nr), p in zip(shards, parts):
+            out[b0 : b0 + nb, :, :] = p
+    return frames / max(time.perf_counter() - t0, 1e-9)
+
+
+def interleaved_schedule(pool, imgs, frames, shards, window):
+    """Sliding window of frames in flight; drain in submission order;
+    recycled output buffers (FramePool)."""
+    t0 = time.perf_counter()
+    inflight = deque()
+    submitted = done = 0
+    outs = [np.zeros((BINS, H, W), dtype=np.float32) for _ in range(window)]
+    while done < frames:
+        while len(inflight) < window and submitted < frames:
+            img = imgs[submitted % len(imgs)]
+            inflight.append(
+                [pool.apply_async(group_task, (img, b0, nb, r0, nr)) for (_, b0, nb, r0, nr) in shards]
+            )
+            submitted += 1
+        rs = inflight.popleft()
+        out = outs[done % window]
+        for (_, b0, nb, r0, nr), r in zip(shards, rs):
+            out[b0 : b0 + nb, r0 : r0 + nr, :] = r.get()
+        done += 1
+    return frames / max(time.perf_counter() - t0, 1e-9)
+
+
+def out_of_core_spill(pool, img, bins, budget):
+    """Stream strips to disk in arrival order with carry correction,
+    tracking peak bytes held in the parent (partials + carries)."""
+    shards, per = plan(bins, H, W, budget, WORKERS)
+    path = tempfile.mktemp(prefix="inthist-py-spill-")
+    held = peak = 0
+    next_row, carry, parked = {}, {}, {}
+    t0 = time.perf_counter()
+    with open(path, "wb") as fh:
+        fh.truncate(bins * H * W * 4)
+
+        def commit(sid, part):
+            nonlocal held
+            _, b0, nb, r0, nr = shards[sid]
+            c = carry.get(b0)
+            corrected = part if c is None else part + c[:, None, :]
+            for k in range(nb):
+                fh.seek((((b0 + k) * H + r0) * W) * 4)
+                fh.write(corrected[k].astype("<f4").tobytes())
+            if r0 + nr < H:
+                if c is None:
+                    held += nb * W * 4
+                carry[b0] = corrected[:, -1, :].copy()
+            elif c is not None:
+                held -= nb * W * 4
+                del carry[b0]
+            next_row[b0] = r0 + nr
+            held -= part.nbytes
+
+        # Bounded in-flight window, like the executor's sync channel.
+        inflight = deque()
+        submitted = 0
+        while submitted < len(shards) or inflight:
+            while len(inflight) < 2 * WORKERS and submitted < len(shards):
+                _, b0, nb, r0, nr = shards[submitted]
+                inflight.append((submitted, pool.apply_async(group_task, (img, b0, nb, r0, nr))))
+                submitted += 1
+            sid, r = inflight.popleft()
+            part = r.get()
+            held += part.nbytes
+            peak = max(peak, held)
+            _, b0, nb, r0, nr = shards[sid]
+            if r0 != next_row.get(b0, 0):
+                parked[(b0, r0)] = (sid, part)
+                continue
+            commit(sid, part)
+            peak = max(peak, held)
+            while (b0, next_row[b0]) in parked:
+                psid, ppart = parked.pop((b0, next_row[b0]))
+                commit(psid, ppart)
+    wall = time.perf_counter() - t0
+    # Spot-check Eq. 2 corner reads against a dense recompute.
+    dense = np.cumsum(
+        np.cumsum((img[None] == np.arange(bins)[:, None, None]).astype(np.float32), 1, dtype=np.float32),
+        2,
+        dtype=np.float32,
+    )
+    tq0 = time.perf_counter()
+    nq = 64
+    with open(path, "rb") as fh:
+        def corner(b, r, c):
+            fh.seek(((b * H + r) * W + c) * 4)
+            return np.frombuffer(fh.read(4), dtype="<f4")[0]
+
+        for i in range(nq):
+            r0, c0 = (i * 3) % (H // 2), (i * 5) % (W // 2)
+            r1, c1 = r0 + H // 2 - 1, c0 + W // 2 - 1
+            for b in range(0, bins, 16):
+                v = corner(b, r1, c1) - corner(b, r0 - 1, c1) - corner(b, r1, c0 - 1) + corner(b, r0 - 1, c0 - 1) \
+                    if r0 > 0 and c0 > 0 else None
+                if v is not None:
+                    ref = dense[b, r1, c1] - dense[b, r0 - 1, c1] - dense[b, r1, c0 - 1] + dense[b, r0 - 1, c0 - 1]
+                    assert v == np.float32(ref), "spilled corner query deviates"
+    query_rate = nq / max(time.perf_counter() - tq0, 1e-9)
+    os.unlink(path)
+    return len(shards), wall, peak, query_rate
+
+
+def main():
+    imgs = make_images(BINS)
+    # Interleave comparison uses the same 4-bin full-row decomposition
+    # on both sides, like the Rust bench.
+    shards, _ = plan(BINS, H, W, 64 << 20, WORKERS, max_group=GROUP)
+    assert len(shards) == BINS // GROUP, shards
+
+    with ThreadPool(WORKERS) as pool:
+        serial_queue_schedule(pool, imgs, 2, shards)  # warm-up
+        serial_fps = serial_queue_schedule(pool, imgs, FRAMES, shards)
+        by_window = {}
+        for window in (1, 2, 4):
+            by_window[window] = interleaved_schedule(pool, imgs, FRAMES, shards, window)
+
+        sweep = []
+        for budget in (1 << 30, 4 << 20, 1 << 20, 256 << 10):
+            pshards, _ = plan(BINS, H, W, budget, WORKERS)
+            fps = interleaved_schedule(pool, imgs, FRAMES // 2, pshards, 2)
+            g = pshards[0][2]
+            strip = pshards[0][4]
+            sweep.append({"budget": budget, "shards": len(pshards), "group": g,
+                          "strip_rows": strip, "fps": round(fps, 2)})
+
+        oc_bins, oc_budget = 128, 1 << 20
+        oc_img = make_images(oc_bins)[0]
+        oc_shards, oc_wall, oc_peak, oc_qps = out_of_core_spill(pool, oc_img, oc_bins, oc_budget)
+
+    speed2 = by_window[2] / serial_fps
+    report = {
+        "bench": "shard",
+        "harness": "python-prevalidation",
+        "note": "Measured by python/bench_shard_sim.py (no Rust toolchain in the dev "
+                "container): same schedules, real multiprocessing work on this host. "
+                "CI regenerates this file with `cargo bench --bench shard`.",
+        "reps": FRAMES // 4,
+        "config": {"h": H, "w": W, "bins": BINS, "workers": WORKERS,
+                   "frames": FRAMES, "group": GROUP},
+        "plan_sweep": sweep,
+        "interleave": {
+            "serial_queue_fps": round(serial_fps, 2),
+            "shard_fps_by_inflight": {str(k): round(v, 2) for k, v in by_window.items()},
+        },
+        "out_of_core": {
+            "bins": oc_bins,
+            "tensor_bytes": oc_bins * H * W * 4,
+            "budget_bytes": oc_budget,
+            "shards": oc_shards,
+            "wall_s": round(oc_wall, 4),
+            "peak_resident_bytes": oc_peak,
+            "within_budget": oc_peak <= oc_budget,
+            "spilled_queries_per_s": round(oc_qps),
+        },
+        "derived": {
+            "interleaved_2_inflight_vs_serial_queue": round(speed2, 3),
+            "interleaved_beats_serial_queue": by_window[2] > serial_fps,
+        },
+    }
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_shard.json")
+    with open(out, "w") as fh:
+        json.dump(report, fh, indent=2)
+        fh.write("\n")
+    print(json.dumps(report["interleave"], indent=2))
+    print(json.dumps(report["derived"], indent=2))
+    print(json.dumps(report["out_of_core"], indent=2))
+    print(f"wrote {os.path.abspath(out)}")
+
+
+if __name__ == "__main__":
+    main()

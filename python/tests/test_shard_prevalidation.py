@@ -1,0 +1,191 @@
+"""Pre-validation of the rust/src/shard/ subsystem's two novel
+algorithms, mirrored in NumPy (the dev container ships no Rust
+toolchain; the Rust property tests in rust/tests/shard_property.rs
+assert the same invariants in-tree).
+
+1. Planner (mirror of ShardPlanner::plan): every (bin, row) of the
+   tensor is covered by exactly one shard, shard bytes respect the
+   per-shard budget slice, ids are dense in issue order.
+2. Reassembly (mirror of Reassembler): a row strip's local integral
+   plus the per-column carry of the strip above equals the full
+   integral — bit-identically for count-valued float32 tensors — in
+   any arrival order.
+
+Run: python3 python/tests/test_shard_prevalidation.py  (or pytest)
+"""
+
+import numpy as np
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+def plan(bins, h, w, budget, workers, max_group=16, min_shards=0):
+    """Mirror of ShardPlanner::plan (keep in sync)."""
+    workers = max(workers, 1)
+    slack = 4 * workers + 4
+    per = max(budget // slack, w * 4)
+    plane = h * w * 4
+    by_budget = min(max(per // plane, 1), bins)
+    group = min(max(max_group, 1), by_budget)
+    strip_rows = h
+    if plane > per:
+        group = 1
+        strip_rows = min(max(per // (w * 4), 1), h)
+    ms = workers if min_shards == 0 else min_shards
+    n_groups = ceil_div(bins, group)
+    if n_groups * ceil_div(h, strip_rows) < ms:
+        want = min(ceil_div(ms, n_groups), h)
+        strip_rows = max(min(strip_rows, ceil_div(h, want)), 1)
+    shards = []
+    b0 = 0
+    while b0 < bins:
+        nb = min(group, bins - b0)
+        r0 = 0
+        while r0 < h:
+            nr = min(strip_rows, h - r0)
+            shards.append((len(shards), b0, nb, r0, nr))
+            r0 += nr
+        b0 += nb
+    return shards, per
+
+
+def integral(img, bins):
+    """Algorithm 1 in float32: bins x h x w double cumsum of Q."""
+    onehot = (img[None, :, :] == np.arange(bins)[:, None, None]).astype(np.float32)
+    return np.cumsum(np.cumsum(onehot, axis=1, dtype=np.float32), axis=2, dtype=np.float32)
+
+
+def local_partial(img, b0, nb, r0, nr):
+    """The executor's shard job: slice rows, shift bins, local integral."""
+    sub = img[r0 : r0 + nr, :].astype(np.int64) - b0
+    sub[(sub < 0) | (sub >= nb)] = -1
+    return integral(sub, nb)
+
+
+def reassemble(shards, partials, bins, h, w, order):
+    """Mirror of Reassembler: commit strips in row order per bin group,
+    adding the carry row; park early arrivals."""
+    out = np.zeros((bins, h, w), dtype=np.float32)
+    next_row = {}
+    carry = {}
+    parked = {}
+
+    def commit(sid):
+        _, b0, nb, r0, nr = shards[sid]
+        local = partials[sid]
+        c = carry.get(b0, np.zeros((nb, w), dtype=np.float32))
+        corrected = local + c[:, None, :]
+        out[b0 : b0 + nb, r0 : r0 + nr, :] = corrected
+        carry[b0] = corrected[:, -1, :].copy()
+        next_row[b0] = r0 + nr
+
+    for sid in order:
+        _, b0, nb, r0, nr = shards[sid]
+        if r0 != next_row.get(b0, 0):
+            parked[(b0, r0)] = sid
+            continue
+        commit(sid)
+        while (b0, next_row[b0]) in parked:
+            commit(parked.pop((b0, next_row[b0])))
+    assert not parked, "every shard must commit"
+    return out
+
+
+def check_cover(shards, bins, h, w, per):
+    cover = np.zeros((bins, h), dtype=np.int32)
+    for i, (sid, b0, nb, r0, nr) in enumerate(shards):
+        assert sid == i, "dense issue-order ids"
+        assert nb >= 1 and nr >= 1 and b0 + nb <= bins and r0 + nr <= h
+        assert nb * nr * w * 4 <= per, "shard must respect the budget slice"
+        cover[b0 : b0 + nb, r0 : r0 + nr] += 1
+    assert (cover == 1).all(), "every (bin, row) exactly once"
+
+
+def test_planner_cover_property():
+    rng = np.random.default_rng(1)
+    cases = [
+        (1, 1, 1, 1 << 20, 1),
+        (5, 1, 97, 1 << 10, 3),
+        (5, 97, 1, 1 << 10, 3),
+        (9, 7, 3, 256, 3),
+        (8, 33, 47, 8 << 10, 3),
+        (128, 96, 80, 256 << 10, 4),
+        (128, 8192, 8192, 256 << 20, 4),
+        (32, 192, 160, 64 << 20, 4),
+    ]
+    for _ in range(40):
+        cases.append(
+            (int(rng.integers(1, 40)), int(rng.integers(1, 120)), int(rng.integers(1, 120)),
+             int(rng.integers(64, 1 << 22)), int(rng.integers(1, 6)))
+        )
+    for bins, h, w, budget, workers in cases:
+        shards, per = plan(bins, h, w, budget, workers)
+        check_cover(shards, bins, h, w, per)
+    print(f"planner cover property: {len(cases)} cases OK")
+
+
+def test_strip_carry_reassembly_bit_identity():
+    rng = np.random.default_rng(7)
+    cases = [
+        (1, 1, 1, 1 << 20, 1),
+        (5, 1, 97, 1 << 10, 3),
+        (5, 97, 1, 1 << 10, 3),
+        (9, 7, 3, 256, 3),
+        (8, 33, 47, 8 << 10, 3),
+        (128, 96, 80, 256 << 10, 4),
+        (6, 44, 36, 12 << 10, 2),
+    ]
+    for bins, h, w, budget, workers in cases:
+        img = rng.integers(0, bins, size=(h, w))
+        expected = integral(img, bins)
+        shards, _ = plan(bins, h, w, budget, workers)
+        partials = {s[0]: local_partial(img, s[1], s[2], s[3], s[4]) for s in shards}
+        for order in (
+            list(range(len(shards))),              # in order
+            list(range(len(shards)))[::-1],        # fully reversed
+            list(rng.permutation(len(shards))),    # shuffled
+        ):
+            got = reassemble(shards, partials, bins, h, w, order)
+            assert np.array_equal(got, expected), (
+                f"strip-carry composition deviates at {bins}x{h}x{w}, "
+                f"{len(shards)} shards"
+            )
+    print(f"strip-carry reassembly bit-identity: {len(cases)} cases x 3 orders OK")
+
+
+def test_eq2_corner_query_against_spilled_layout():
+    """Eq. 2 on the Fig. 2 flat file layout: four corner reads per bin
+    equal the dense region histogram (mirror of TensorStore::query)."""
+    rng = np.random.default_rng(3)
+    bins, h, w = 12, 17, 29
+    img = rng.integers(0, bins, size=(h, w))
+    ih = integral(img, bins)
+    flat = ih.astype("<f4").tobytes()  # the store's on-disk layout
+
+    def corner(b, r, c):
+        off = ((b * h + r) * w + c) * 4
+        return np.frombuffer(flat[off : off + 4], dtype="<f4")[0]
+
+    for _ in range(200):
+        r0, r1 = sorted(rng.integers(0, h, 2))
+        c0, c1 = sorted(rng.integers(0, w, 2))
+        for b in range(bins):
+            v = corner(b, r1, c1)
+            if r0 > 0:
+                v -= corner(b, r0 - 1, c1)
+            if c0 > 0:
+                v -= corner(b, r1, c0 - 1)
+            if r0 > 0 and c0 > 0:
+                v += corner(b, r0 - 1, c0 - 1)
+            dense = (img[r0 : r1 + 1, c0 : c1 + 1] == b).sum()
+            assert v == np.float32(dense), (b, r0, c0, r1, c1)
+    print("Eq. 2 corner queries on the flat layout: 200 rects OK")
+
+
+if __name__ == "__main__":
+    test_planner_cover_property()
+    test_strip_carry_reassembly_bit_identity()
+    test_eq2_corner_query_against_spilled_layout()
+    print("shard subsystem pre-validation: ALL OK")

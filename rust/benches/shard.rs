@@ -1,0 +1,266 @@
+//! Bench: the sharded out-of-core execution subsystem.
+//!
+//! Three sections, one `BENCH_shard.json` at the repo root:
+//!
+//! 1. **Plan sweep** — aggregate throughput and peak resident bytes vs
+//!    the memory budget (which drives shard count/granularity) at a
+//!    fixed worker count: the cost of finer sharding made visible.
+//! 2. **Interleaved vs serial** — the ISSUE-3 acceptance comparison:
+//!    N frames through (a) the serial whole-frame `BinTaskQueue`
+//!    baseline (one frame owns the pool until assembled — the old
+//!    `Server` large route) and (b) the `ShardExecutor` with 1, 2 and
+//!    4 frames in flight.  Interleaving fills the per-frame drain tail
+//!    and replaces per-task image clones + zeroed partials with
+//!    persistent scratch + pooled buffers, so aggregate throughput
+//!    must beat the serial queue at ≥ 2 frames in flight.
+//! 3. **Out-of-core** — a 128-bin frame whose tensor exceeds the
+//!    budget streamed into a spill-backed `TensorStore`: wall time,
+//!    peak resident bytes vs tensor size, and spilled query rate.
+//!
+//! Run: `cargo bench --bench shard` (BENCH_REPS=1 for the CI smoke).
+
+use inthist::coordinator::task_queue::{BinTaskQueue, TaskQueueConfig};
+use inthist::histogram::region::Rect;
+use inthist::histogram::types::{BinnedImage, IntegralHistogram};
+use inthist::runtime::artifact::ArtifactManifest;
+use inthist::shard::{FrameTicket, ShardExecutor, ShardExecutorConfig, ShardPlan, ShardPlanner, ShardPolicy};
+use inthist::video::synth::SyntheticVideo;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+const H: usize = 192;
+const W: usize = 160;
+const BINS: usize = 32;
+const GROUP: usize = 4;
+const WORKERS: usize = 4;
+const DISTINCT: usize = 4;
+
+fn offline_manifest() -> Arc<ArtifactManifest> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Arc::new(ArtifactManifest::load(&dir).unwrap_or(ArtifactManifest {
+        dir,
+        profile: "offline".into(),
+        artifacts: vec![],
+    }))
+}
+
+fn images(h: usize, w: usize, bins: usize) -> Vec<Arc<BinnedImage>> {
+    let video = SyntheticVideo::new(h, w, 3, 11);
+    (0..DISTINCT).map(|t| Arc::new(video.frame(t).binned(bins))).collect()
+}
+
+/// Drive `frames` frames through the executor keeping up to `window`
+/// tickets in flight, draining in submission order.  Returns
+/// (aggregate fps, max peak-resident bytes over the run).
+fn run_interleaved(
+    exec: &ShardExecutor,
+    plan: &ShardPlan,
+    imgs: &[Arc<BinnedImage>],
+    frames: usize,
+    window: usize,
+) -> (f64, usize) {
+    let mut outs: Vec<IntegralHistogram> =
+        (0..window).map(|_| IntegralHistogram::zeros(0, 0, 0)).collect();
+    let mut inflight: VecDeque<FrameTicket> = VecDeque::new();
+    let mut peak = 0usize;
+    let mut submitted = 0usize;
+    let mut done = 0usize;
+    let t0 = Instant::now();
+    while done < frames {
+        while inflight.len() < window && submitted < frames {
+            let img = &imgs[submitted % imgs.len()];
+            inflight.push_back(exec.submit(img, plan).expect("submit"));
+            submitted += 1;
+        }
+        let ticket = inflight.pop_front().expect("ticket in flight");
+        let out = &mut outs[done % window];
+        let report = ticket.reassemble_into(out).expect("reassemble");
+        peak = peak.max(report.peak_resident_bytes);
+        std::hint::black_box(&out.data);
+        done += 1;
+    }
+    (frames as f64 / t0.elapsed().as_secs_f64().max(1e-9), peak)
+}
+
+struct SweepRow {
+    budget: usize,
+    shards: usize,
+    group: usize,
+    strip_rows: usize,
+    fps: f64,
+    peak_resident: usize,
+}
+
+fn main() {
+    let reps: usize = std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let frames = 4 * reps;
+    let imgs = images(H, W, BINS);
+
+    // --- 1. plan sweep: budget → shard granularity → throughput ---
+    println!("## plan sweep, {W}x{H}x{BINS} bins, {WORKERS} workers, {frames} frames");
+    println!(
+        "{:<14} {:>8} {:>7} {:>11} {:>10} {:>16}",
+        "budget", "shards", "group", "strip rows", "fps", "peak resident"
+    );
+    let mut sweep = Vec::new();
+    for budget in [1usize << 30, 4 << 20, 1 << 20, 256 << 10] {
+        let policy = ShardPolicy { memory_budget: budget, workers: WORKERS, ..ShardPolicy::default() };
+        let plan = ShardPlanner::new(policy).plan(BINS, H, W);
+        let exec = ShardExecutor::new(ShardExecutorConfig { workers: WORKERS, ..Default::default() });
+        let _ = run_interleaved(&exec, &plan, &imgs, 2, 1); // warm-up
+        let (fps, peak) = run_interleaved(&exec, &plan, &imgs, frames, 2);
+        println!(
+            "{:<14} {:>8} {:>7} {:>11} {:>10.2} {:>16}",
+            budget,
+            plan.shards.len(),
+            plan.group,
+            plan.strip_rows,
+            fps,
+            peak
+        );
+        sweep.push(SweepRow {
+            budget,
+            shards: plan.shards.len(),
+            group: plan.group,
+            strip_rows: plan.strip_rows,
+            fps,
+            peak_resident: peak,
+        });
+    }
+
+    // --- 2. interleaved shard schedule vs serial whole-frame queue ---
+    // Both sides split the 32 bins into 4-bin groups and run 4 workers
+    // of one CPU engine each; the queue serializes whole frames, the
+    // executor interleaves.
+    println!("\n## interleaved vs serial, {} tasks/frame of {GROUP} bins, {frames} frames", BINS / GROUP);
+    let queue = BinTaskQueue::new(
+        offline_manifest(),
+        TaskQueueConfig {
+            workers: WORKERS,
+            group: GROUP,
+            artifact: format!("wf_tis_{H}x{W}_b{GROUP}_t64"),
+            cpu_fallback: true,
+        },
+    )
+    .expect("baseline queue");
+    let _ = queue.compute(&imgs[0], BINS).expect("queue warm-up");
+    let t0 = Instant::now();
+    for f in 0..frames {
+        let (ih, _) = queue.compute(&imgs[f % imgs.len()], BINS).expect("queue frame");
+        std::hint::black_box(&ih.data);
+    }
+    let serial_queue_fps = frames as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    queue.shutdown();
+    println!("serial BinTaskQueue (1 frame in flight): {serial_queue_fps:>8.2} fps");
+
+    // Budget sized so the shard plan is the same 4-bin × full-rows
+    // decomposition as the queue's task list.
+    let policy = ShardPolicy {
+        memory_budget: 64 << 20,
+        workers: WORKERS,
+        max_group: GROUP,
+        ..ShardPolicy::default()
+    };
+    let plan = ShardPlanner::new(policy).plan(BINS, H, W);
+    let exec = ShardExecutor::new(ShardExecutorConfig { workers: WORKERS, ..Default::default() });
+    let _ = run_interleaved(&exec, &plan, &imgs, 2, 1); // warm-up
+    let mut shard_fps = Vec::new();
+    for window in [1usize, 2, 4] {
+        let (fps, _) = run_interleaved(&exec, &plan, &imgs, frames, window);
+        println!(
+            "shard executor, {window} frame(s) in flight:   {fps:>8.2} fps ({:.2}x serial queue)",
+            fps / serial_queue_fps
+        );
+        shard_fps.push((window, fps));
+    }
+    let fps2 = shard_fps.iter().find(|(w, _)| *w == 2).map(|(_, f)| *f).unwrap_or(0.0);
+    let beats = fps2 > serial_queue_fps;
+    println!(
+        "interleaved (2 in flight) vs serial whole-frame queue: {:.2}x — {}",
+        fps2 / serial_queue_fps,
+        if beats { "PASS" } else { "FAIL" }
+    );
+
+    // --- 3. out-of-core: spill a tensor bigger than the budget ---
+    let oc_bins = 128;
+    let oc_budget = 1usize << 20; // 1 MiB
+    let oc_imgs = images(H, W, oc_bins);
+    let tensor_bytes = oc_bins * H * W * 4;
+    let policy = ShardPolicy { memory_budget: oc_budget, workers: WORKERS, ..ShardPolicy::default() };
+    let oc_plan = ShardPlanner::new(policy).plan(oc_bins, H, W);
+    let oc_exec = ShardExecutor::new(ShardExecutorConfig { workers: WORKERS, ..Default::default() });
+    let t0 = Instant::now();
+    let (store, report) = oc_exec
+        .submit(&oc_imgs[0], &oc_plan)
+        .expect("submit")
+        .reassemble_spilled()
+        .expect("spill");
+    let oc_wall = t0.elapsed().as_secs_f64();
+    let mut rng_rects = Vec::new();
+    for i in 0..64 {
+        let r0 = (i * 3) % (H / 2);
+        let c0 = (i * 5) % (W / 2);
+        rng_rects.push(Rect::with_size(r0, c0, H / 2, W / 2));
+    }
+    let tq = Instant::now();
+    for &rect in &rng_rects {
+        std::hint::black_box(store.query(rect).expect("spilled query"));
+    }
+    let query_rate = rng_rects.len() as f64 / tq.elapsed().as_secs_f64().max(1e-9);
+    println!("\n## out-of-core, {W}x{H}x{oc_bins} bins ({:.1} MB tensor, {:.1} MB budget)", tensor_bytes as f64 / 1e6, oc_budget as f64 / 1e6);
+    println!(
+        "wall {:.3} s | {} shards | peak resident {} B ({:.1}% of tensor) | within budget: {} | spilled queries {:.0}/s",
+        oc_wall,
+        report.shards,
+        report.peak_resident_bytes,
+        100.0 * report.peak_resident_bytes as f64 / tensor_bytes as f64,
+        report.peak_resident_bytes <= oc_budget,
+        query_rate
+    );
+
+    // --- machine-readable report at the repo root ---
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"shard\",\n");
+    json.push_str("  \"harness\": \"cargo-bench\",\n");
+    json.push_str(&format!("  \"reps\": {reps},\n"));
+    json.push_str(&format!(
+        "  \"config\": {{\"h\": {H}, \"w\": {W}, \"bins\": {BINS}, \"workers\": {WORKERS}, \"frames\": {frames}, \"group\": {GROUP}}},\n"
+    ));
+    json.push_str("  \"plan_sweep\": [\n");
+    for (i, r) in sweep.iter().enumerate() {
+        let sep = if i + 1 < sweep.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"budget\": {}, \"shards\": {}, \"group\": {}, \"strip_rows\": {}, \"fps\": {:.2}, \"peak_resident_bytes\": {}}}{sep}\n",
+            r.budget, r.shards, r.group, r.strip_rows, r.fps, r.peak_resident
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"interleave\": {\n");
+    json.push_str(&format!("    \"serial_queue_fps\": {serial_queue_fps:.2},\n"));
+    json.push_str("    \"shard_fps_by_inflight\": {");
+    for (i, (wnd, fps)) in shard_fps.iter().enumerate() {
+        let sep = if i + 1 < shard_fps.len() { ", " } else { "" };
+        json.push_str(&format!("\"{wnd}\": {fps:.2}{sep}"));
+    }
+    json.push_str("}\n  },\n");
+    json.push_str(&format!(
+        "  \"out_of_core\": {{\"bins\": {oc_bins}, \"tensor_bytes\": {tensor_bytes}, \"budget_bytes\": {oc_budget}, \"shards\": {}, \"wall_s\": {:.4}, \"peak_resident_bytes\": {}, \"within_budget\": {}, \"spilled_queries_per_s\": {:.0}}},\n",
+        report.shards, oc_wall, report.peak_resident_bytes,
+        report.peak_resident_bytes <= oc_budget, query_rate
+    ));
+    json.push_str("  \"derived\": {\n");
+    json.push_str(&format!(
+        "    \"interleaved_2_inflight_vs_serial_queue\": {:.3},\n",
+        fps2 / serial_queue_fps
+    ));
+    json.push_str(&format!("    \"interleaved_beats_serial_queue\": {beats}\n"));
+    json.push_str("  }\n}\n");
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_shard.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -23,6 +23,8 @@ use crate::histogram::types::{BinnedImage, IntegralHistogram, Strategy};
 use crate::runtime::artifact::{ArtifactKind, ArtifactManifest};
 use crate::runtime::client::HistogramExecutor;
 use crate::runtime::compile_cache::CompileCache;
+use crate::shard::planner::ShardPolicy;
+use crate::simulator::pcie::Card;
 use crate::video::source::VideoFrame;
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -93,7 +95,10 @@ impl EngineConfig {
 
     /// Build the §4.6 bin task queue for `h×w` frames: find the
     /// matching group-bin artifact in `manifest` and spin up the
-    /// device pool.
+    /// device pool.  (The artifact must exist even when `cpu_fallback`
+    /// is set — the single-session engine's guarded whole-frame CPU
+    /// path handles the fully-offline case, keeping the
+    /// `cpu_fallback_budget` allocation bound in force.)
     pub fn build_bin_task_queue(
         &self,
         manifest: &Arc<ArtifactManifest>,
@@ -112,8 +117,27 @@ impl EngineConfig {
             })?;
         BinTaskQueue::new(
             Arc::clone(manifest),
-            TaskQueueConfig { workers: self.pool_workers, group, artifact: meta.name.clone() },
+            TaskQueueConfig {
+                workers: self.pool_workers,
+                group,
+                artifact: meta.name.clone(),
+                cpu_fallback: self.cpu_fallback,
+            },
         )
+    }
+
+    /// Derive the [`ShardPolicy`] the multi-stream server's sharded
+    /// large-request route runs under: the engine's bin-group size
+    /// bounds shard granularity, the caller supplies the host resident
+    /// budget and the shard worker count.
+    pub fn shard_policy(&self, memory_budget: usize, workers: usize) -> ShardPolicy {
+        ShardPolicy {
+            memory_budget,
+            workers: workers.max(1),
+            max_group: self.bin_group.max(1),
+            min_shards: 0,
+            card: Card::Gtx480,
+        }
     }
 }
 

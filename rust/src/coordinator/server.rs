@@ -14,15 +14,22 @@
 //!   the [`CompileCache`], one server-wide [`FramePool`] arena, a
 //!   checkout stack of [`ScanEngine`] lanes (each owning its persistent
 //!   parked [`WorkerPool`](crate::histogram::engine::WorkerPool)), and
-//!   the lazily-built [`BinTaskQueue`] — so any number of threads call
+//!   the lazily-built [`ShardExecutor`] — so any number of threads call
 //!   [`Server::compute`] concurrently.  Steady state does zero heap
 //!   allocation and zero thread spawning per frame
 //!   (`tests/server_concurrency.rs` counter-asserts both).
 //! * **One front door for every size.**  [`Server::compute`] routes
 //!   small frames to the artifact path (CPU `ScanEngine` fallback in
 //!   the offline build) and frames whose tensor exceeds the device
-//!   budget through the shared bin task queue — sessions never care
-//!   which.
+//!   budget through the sharded out-of-core subsystem
+//!   ([`crate::shard`]): a lazily-built [`ShardExecutor`] runs
+//!   bin-range/row-strip shards from *all* sessions' large frames
+//!   interleaved on one worker set — the old whole-frame-serialized
+//!   `BinTaskQueue` route (head-of-line blocking across streams) is
+//!   gone.  Frames whose tensor also exceeds the host budget go
+//!   through [`Server::compute_spilled`] into a disk-backed
+//!   [`TensorStore`] that answers region queries without ever
+//!   materializing the tensor.  Sessions never care which.
 //! * **Sessions.**  [`Server::open_session`] hands out a per-stream
 //!   [`Session`] owning a [`CpuPipeline`] lane (recycling through the
 //!   server arena), a [`QueryBatcher`], and an optional analytics
@@ -43,12 +50,14 @@ use crate::coordinator::frame_pool::{FramePool, PoolStats, PooledTensor};
 use crate::coordinator::metrics::LatencySummary;
 use crate::coordinator::pipeline::{CpuPipeline, CpuPipelineConfig, PipelineReport};
 use crate::coordinator::router::{EngineConfig, Route};
-use crate::coordinator::task_queue::BinTaskQueue;
 use crate::histogram::engine::ScanEngine;
 use crate::histogram::region::Rect;
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
 use crate::runtime::artifact::ArtifactManifest;
 use crate::runtime::compile_cache::CompileCache;
+use crate::shard::{
+    ShardExecutor, ShardExecutorConfig, ShardExecutorStats, ShardPlanner, ShardReport, TensorStore,
+};
 use crate::video::source::{FrameSource, VideoFrame};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -69,6 +78,19 @@ pub struct ServerConfig {
     /// Small on purpose: cross-stream parallelism comes from running
     /// streams concurrently, not from one stream grabbing every core.
     pub workers_per_stream: usize,
+    /// Workers of the shared [`ShardExecutor`] serving the
+    /// large-request route (the paper's Fig. 18 device count).
+    pub shard_workers: usize,
+    /// Peak resident bytes one large frame may hold on the host.
+    /// In-RAM sharded assembly is refused past it
+    /// ([`Server::compute_spilled`] serves those frames from disk),
+    /// and the shard planner sizes shards so reassembly stays inside
+    /// it.  Precedence note: a frame past this budget but inside the
+    /// engine's `cpu_fallback_budget` still takes the legacy
+    /// whole-frame CPU path (which materializes the full tensor) —
+    /// set `cpu_fallback_budget ≤ host_memory_budget` to enforce
+    /// strict residency.
+    pub host_memory_budget: usize,
 }
 
 impl Default for ServerConfig {
@@ -78,6 +100,8 @@ impl Default for ServerConfig {
             max_sessions: 64,
             lanes: 2,
             workers_per_stream: 2,
+            shard_workers: 4,
+            host_memory_budget: 1 << 30,
         }
     }
 }
@@ -170,6 +194,9 @@ pub struct ServerSnapshot {
     pub frame_pool: PoolStats,
     /// p50/p95/p99 + jitter over the global latency reservoir.
     pub latency: LatencySummary,
+    /// Shard executor counters (None until the first large request
+    /// builds it).
+    pub shard: Option<ShardExecutorStats>,
 }
 
 struct Inner {
@@ -180,13 +207,13 @@ struct Inner {
     /// the hottest engine (warm scratch, spawned pool) is reused first.
     engines: Mutex<Vec<ScanEngine>>,
     engines_created: AtomicUsize,
-    /// Shared large-image path: the queue plus the `(h, w)` it was
-    /// built for (queues are geometry-bound — a different large
-    /// geometry rebuilds).  The mutex both lazily builds the queue and
-    /// serializes whole-frame jobs on it — the queue owns the device
-    /// pool, and interleaving two frames' bin groups would cross their
-    /// results.
-    large: Mutex<Option<(usize, usize, BinTaskQueue)>>,
+    /// Shared large-image path: one lazily-built [`ShardExecutor`] for
+    /// the whole server.  The mutex guards construction only — submits
+    /// happen on a cloned handle outside it, so any number of large
+    /// frames are in flight interleaved (tagged reassembly keeps them
+    /// apart), unlike the old whole-frame-serialized `BinTaskQueue`
+    /// route.  Geometry-agnostic: plans are per-request.
+    shard: Mutex<Option<Arc<ShardExecutor>>>,
     metrics: Metrics,
     admission_tx: Mutex<BoundedSender<()>>,
     admission_rx: Mutex<BoundedReceiver<()>>,
@@ -219,23 +246,62 @@ impl Inner {
         Ok((out, t0.elapsed()))
     }
 
-    /// Large-image route: the shared bin task queue (§4.6), built on
-    /// first use from the group-bin artifact matching this geometry.
-    fn compute_large(&self, img: &BinnedImage) -> Result<(IntegralHistogram, Duration)> {
-        let mut guard = self.large.lock().expect("task queue lock");
-        let stale = !matches!(&*guard, Some((h, w, _)) if (*h, *w) == (img.h, img.w));
-        if stale {
-            let queue = self.config.engine.build_bin_task_queue(
-                self.compile.manifest(),
-                img.h,
-                img.w,
-            )?;
-            *guard = Some((img.h, img.w, queue));
+    /// The server's shared shard executor, built on first large
+    /// request (the lock guards construction, never execution).
+    fn shard_executor(&self) -> Arc<ShardExecutor> {
+        let mut guard = self.shard.lock().expect("shard executor lock");
+        if guard.is_none() {
+            *guard = Some(Arc::new(ShardExecutor::new(ShardExecutorConfig {
+                workers: self.config.shard_workers.max(1),
+                engine_workers: 1,
+                channel_depth: 0,
+            })));
         }
-        let queue = &guard.as_ref().expect("queue just built").2;
+        Arc::clone(guard.as_ref().expect("executor just built"))
+    }
+
+    /// Plan a request under the server's shard policy.
+    fn shard_plan(&self, bins: usize, h: usize, w: usize) -> crate::shard::ShardPlan {
+        let exec_workers = self.config.shard_workers.max(1);
+        let policy = self
+            .config
+            .engine
+            .shard_policy(self.config.host_memory_budget, exec_workers);
+        ShardPlanner::new(policy).plan(bins, h, w)
+    }
+
+    /// Large-image route: interleaved sharded execution reassembled
+    /// into a pooled host tensor.  Refused when the tensor exceeds the
+    /// host budget — that is [`Self::compute_spilled`]'s job.
+    fn compute_sharded(&self, img: &BinnedImage) -> Result<(PooledTensor, Duration)> {
+        let tensor_bytes = img.bins * img.h * img.w * 4;
+        if tensor_bytes > self.config.host_memory_budget {
+            return Err(anyhow!(
+                "tensor of {tensor_bytes} B exceeds the host budget of {} B; \
+                 use Server::compute_spilled / Session::process_spilled",
+                self.config.host_memory_budget
+            ));
+        }
+        let exec = self.shard_executor();
+        let plan = self.shard_plan(img.bins, img.h, img.w);
         let image = Arc::new(img.clone());
-        let (ih, report) = queue.compute(&image, img.bins)?;
-        Ok((ih, report.wall))
+        let ticket = exec.submit(&image, &plan)?;
+        let mut out = PooledTensor::acquire(&self.pool, img.bins, img.h, img.w);
+        let report = ticket.reassemble_into(&mut out)?;
+        Ok((out, report.wall))
+    }
+
+    /// Out-of-core route: sharded execution spilled to a disk-backed
+    /// [`TensorStore`] — peak host residency stays within the shard
+    /// budget, never the full tensor.
+    fn compute_spilled(&self, image: &Arc<BinnedImage>) -> Result<(TensorStore, ShardReport)> {
+        let exec = self.shard_executor();
+        let plan = self.shard_plan(image.bins, image.h, image.w);
+        let ticket = exec.submit(image, &plan)?;
+        let (store, report) = ticket.reassemble_spilled()?;
+        self.metrics.frames.fetch_add(1, Ordering::Relaxed);
+        self.metrics.push_latency(report.wall.as_secs_f64() * 1e3);
+        Ok((store, report))
     }
 
     /// The shared front door: route, compute, account.
@@ -260,11 +326,21 @@ impl Inner {
                     }
                 }
             }
-            Route::TaskQueue => match self.compute_large(img) {
-                Ok((ih, wall)) => Ok((PooledTensor::adopt(&self.pool, ih), wall)),
-                Err(_) if self.cpu_allowed(img) => self.compute_cpu(img),
-                Err(e) => Err(e),
-            },
+            // In-budget large frames always run sharded (a shard
+            // failure propagates — it is never silently recomputed).
+            // Past the host budget, the pre-shard whole-frame CPU
+            // escape hatch applies if `cpu_fallback_budget` still
+            // allows the allocation (set it ≤ `host_memory_budget` to
+            // enforce strict residency); past both, compute_sharded
+            // surfaces the actionable "use compute_spilled" error.
+            Route::TaskQueue => {
+                let tensor_bytes = img.bins * img.h * img.w * 4;
+                if tensor_bytes > self.config.host_memory_budget && self.cpu_allowed(img) {
+                    self.compute_cpu(img)
+                } else {
+                    self.compute_sharded(img)
+                }
+            }
         };
         if let Ok((_, d)) = &res {
             self.metrics.frames.fetch_add(1, Ordering::Relaxed);
@@ -291,7 +367,7 @@ impl Server {
                 pool: Arc::new(FramePool::new()),
                 engines: Mutex::new(Vec::new()),
                 engines_created: AtomicUsize::new(0),
-                large: Mutex::new(None),
+                shard: Mutex::new(None),
                 metrics: Metrics::default(),
                 admission_tx: Mutex::new(admission_tx),
                 admission_rx: Mutex::new(admission_rx),
@@ -317,6 +393,19 @@ impl Server {
     /// the server arena on drop) and the compute duration.
     pub fn compute(&self, img: &BinnedImage) -> Result<(PooledTensor, Duration)> {
         self.inner.compute(img)
+    }
+
+    /// Compute out-of-core: sharded execution spilled to a disk-backed
+    /// [`TensorStore`] whose [`TensorStore::query`] answers Eq. 2
+    /// region lookups without materializing the tensor.  This is the
+    /// §4.6 / Fig. 18 path — frames whose tensor exceeds even the host
+    /// budget complete here with peak residency bounded by the shard
+    /// plan (see `ShardReport::peak_resident_bytes`).
+    pub fn compute_spilled(
+        &self,
+        image: &Arc<BinnedImage>,
+    ) -> Result<(TensorStore, ShardReport)> {
+        self.inner.compute_spilled(image)
     }
 
     /// Admit a new stream.  Rejected (not queued) once `max_sessions`
@@ -397,6 +486,12 @@ impl Server {
             let ring = inner.metrics.latencies_ms.lock().expect("latency lock");
             LatencySummary::of_ms(&ring.buf)
         };
+        let shard = inner
+            .shard
+            .lock()
+            .expect("shard executor lock")
+            .as_ref()
+            .map(|e| e.stats());
         ServerSnapshot {
             frames: inner.metrics.frames.load(Ordering::Relaxed),
             queries: inner.metrics.queries.load(Ordering::Relaxed),
@@ -410,6 +505,7 @@ impl Server {
             pool_jobs,
             frame_pool: inner.pool.stats(),
             latency,
+            shard,
         }
     }
 }
@@ -478,6 +574,23 @@ impl Session {
         self.frames += 1;
         self.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
         Ok(ih)
+    }
+
+    /// Compute one frame out-of-core: the tensor lands in a
+    /// disk-backed [`TensorStore`] (never fully resident) whose
+    /// `query` answers this session's region lookups bit-identically
+    /// to the in-RAM path.  The route for frames whose `b×h×w` tensor
+    /// exceeds the server's host memory budget.
+    pub fn process_spilled(&mut self, frame: &VideoFrame) -> Result<(TensorStore, ShardReport)> {
+        let t0 = Instant::now();
+        // Bin straight into a fresh shared image (one allocation, no
+        // second copy): on this route frames are huge by definition,
+        // and the shard workers need to share the buffer.
+        let image = Arc::new(frame.binned(self.bins));
+        let res = self.inner.compute_spilled(&image)?;
+        self.frames += 1;
+        self.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        Ok(res)
     }
 
     /// Drive a whole stream through this session's pipeline lane
@@ -728,14 +841,54 @@ mod tests {
     fn oversized_frames_route_through_the_same_front_door() {
         let mut cfg = ServerConfig::default();
         cfg.engine.bins = 8;
-        cfg.engine.device_memory_budget = 1 << 10; // force TaskQueue route
+        cfg.engine.device_memory_budget = 1 << 10; // force the sharded route
+        cfg.shard_workers = 2;
         let srv = Server::new(manifest(), cfg);
         assert_eq!(srv.route_for(40, 40), Route::TaskQueue);
         let img = SyntheticVideo::new(40, 40, 1, 2).frame(0).binned(8);
-        // no group artifact in the offline build → CPU serves it
-        let (ih, _) = srv.compute(&img).expect("cpu fallback for large frames");
+        // the interleaved shard executor serves it, bit-identically
+        let (ih, _) = srv.compute(&img).expect("sharded route for large frames");
         let expected = integral_histogram_seq(&img);
         assert_eq!(expected.max_abs_diff(&ih), 0.0);
+        let snap = srv.snapshot();
+        let shard = snap.shard.expect("executor built on first large frame");
+        assert!(shard.jobs >= 1, "large frame ran as shard jobs");
+        assert_eq!(shard.frames_inflight, 0);
+    }
+
+    #[test]
+    fn over_host_budget_frames_spill_to_the_tensor_store() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine.bins = 8;
+        cfg.engine.device_memory_budget = 1 << 10; // large route
+        cfg.engine.cpu_fallback_budget = 16 << 10; // CPU may not serve it either
+        cfg.host_memory_budget = 8 << 10; // 8 KiB host budget
+        cfg.shard_workers = 2;
+        let srv = Server::new(manifest(), cfg);
+        let video = SyntheticVideo::new(48, 40, 1, 6);
+        let img = video.frame(0).binned(8);
+        // 8×48×40×4 = 60 KiB tensor > 8 KiB budget → in-RAM route refuses…
+        let err = srv.compute(&img).err().expect("must refuse").to_string();
+        assert!(err.contains("compute_spilled"), "{err}");
+        // …and the spilled route completes inside the budget.
+        let mut session = srv.open_session().expect("session");
+        let (store, report) = session.process_spilled(&video.frame(0)).expect("spill");
+        assert!(
+            report.peak_resident_bytes <= srv.config().host_memory_budget,
+            "peak resident {} must stay within the {} B budget",
+            report.peak_resident_bytes,
+            srv.config().host_memory_budget
+        );
+        let expected = integral_histogram_seq(&img);
+        let back = store.to_histogram().expect("materialize for verification");
+        assert_eq!(expected.max_abs_diff(&back), 0.0);
+        // Region queries served straight from the spilled planes.
+        let rect = Rect::with_size(3, 5, 20, 17);
+        assert_eq!(
+            store.query(rect).expect("store query"),
+            crate::histogram::region::region_histogram(&expected, rect)
+        );
+        assert_eq!(session.stats().frames, 1);
     }
 
     #[test]

@@ -8,6 +8,17 @@
 //! other devices keep computing (compute/copy overlap via the pool's
 //! output channel).  The queue layer also tracks per-worker utilization
 //! so heterogeneous pools are observable.
+//!
+//! Scope note: this is the *single-frame* §4.6 measurement path — one
+//! `compute` call owns the whole pool until its frame assembles, which
+//! is exactly the whole-frame serialization the serving layer used to
+//! inherit.  The `Server`'s large-request route now runs on the
+//! interleaved [`crate::shard::ShardExecutor`] instead (multiple
+//! frames in flight, tagged reassembly, spill-backed output);
+//! `BinTaskQueue` remains as the artifact-path Fig. 18 driver and as
+//! the serial-frame baseline `benches/shard.rs` measures against, and
+//! runs offline via the device pool's CPU fallback
+//! ([`TaskQueueConfig::cpu_fallback`]).
 
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
 use crate::runtime::artifact::ArtifactManifest;
@@ -25,6 +36,10 @@ pub struct TaskQueueConfig {
     pub group: usize,
     /// The `group`-bin strategy artifact every task executes.
     pub artifact: String,
+    /// Serve tasks on per-worker CPU engines when the artifact (or the
+    /// backend) is unavailable — keeps the queue runnable in the
+    /// offline build; results are bit-identical.
+    pub cpu_fallback: bool,
 }
 
 /// Report of one large-image computation.
@@ -63,20 +78,29 @@ pub struct BinTaskQueue {
 }
 
 impl BinTaskQueue {
-    /// Validate the artifact and spin up the pool.
+    /// Validate the artifact and spin up the pool.  A missing artifact
+    /// is an error unless `cpu_fallback` is set (the offline build),
+    /// in which case the workers serve every task on CPU engines; an
+    /// artifact that *exists* with the wrong bin count is always an
+    /// error.
     pub fn new(manifest: Arc<ArtifactManifest>, config: TaskQueueConfig) -> Result<BinTaskQueue> {
-        let meta = manifest
-            .find_named(&config.artifact)
-            .ok_or_else(|| anyhow!("artifact '{}' not in manifest", config.artifact))?;
-        if meta.bins != config.group {
-            return Err(anyhow!(
-                "artifact '{}' computes {} bins but group size is {}",
-                config.artifact,
-                meta.bins,
-                config.group
-            ));
+        match manifest.find_named(&config.artifact) {
+            Some(meta) => {
+                if meta.bins != config.group {
+                    return Err(anyhow!(
+                        "artifact '{}' computes {} bins but group size is {}",
+                        config.artifact,
+                        meta.bins,
+                        config.group
+                    ));
+                }
+            }
+            None if !config.cpu_fallback => {
+                return Err(anyhow!("artifact '{}' not in manifest", config.artifact));
+            }
+            None => {} // offline: CPU fallback serves the tasks
         }
-        let pool = DevicePool::new(manifest, config.workers);
+        let pool = DevicePool::with_cpu_fallback(manifest, config.workers, config.cpu_fallback);
         Ok(BinTaskQueue { pool, group_bins: config.group, config })
     }
 
@@ -104,6 +128,7 @@ impl BinTaskQueue {
                 job_id: j,
                 artifact: self.config.artifact.clone(),
                 bin_offset: j * self.group_bins,
+                group: self.group_bins,
                 image: Arc::clone(image),
             })?;
         }
@@ -165,6 +190,7 @@ impl BinTaskQueue {
                 job_id: j,
                 artifact: self.config.artifact.clone(),
                 bin_offset: j * self.group_bins,
+                group: self.group_bins,
                 image: Arc::clone(image),
             })?;
         }

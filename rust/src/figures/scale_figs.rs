@@ -30,7 +30,9 @@ fn run_queue(
 ) -> Result<(f64, Vec<usize>)> {
     let queue = BinTaskQueue::new(
         Arc::clone(&ctx.manifest),
-        TaskQueueConfig { workers, group, artifact: artifact.to_string() },
+        // Strict artifact execution: figure timings must never silently
+        // come from the CPU fallback.
+        TaskQueueConfig { workers, group, artifact: artifact.to_string(), cpu_fallback: false },
     )?;
     let video = SyntheticVideo::new(h, w, 4, 7);
     let image = Arc::new(video.frame(0).binned(total_bins));

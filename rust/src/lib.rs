@@ -12,9 +12,12 @@
 //!   loads the artifacts ([`runtime`]), a dual-buffered frame pipeline and
 //!   a multi-device bin task queue ([`coordinator`]), the planned
 //!   zero-allocation wavefront `ScanEngine` plus the CPU baselines and
-//!   region-query engine ([`histogram`]), a PCIe transfer simulator
-//!   ([`simulator`]), synthetic video sources ([`video`]) and
-//!   histogram-based analytics built on top ([`analytics`]).
+//!   region-query engine ([`histogram`]), the sharded out-of-core
+//!   execution subsystem — shard planner, interleaved executor,
+//!   tagged reassembly, spill-backed tensor store ([`shard`]) — a PCIe
+//!   transfer simulator ([`simulator`]), synthetic video sources
+//!   ([`video`]) and histogram-based analytics built on top
+//!   ([`analytics`]).
 //!
 //! Python never runs on the request path: once `make artifacts` has been
 //! run, the Rust binary is self-contained.
@@ -39,6 +42,7 @@ pub mod coordinator;
 pub mod figures;
 pub mod histogram;
 pub mod runtime;
+pub mod shard;
 pub mod simulator;
 pub mod util;
 pub mod video;
@@ -62,6 +66,10 @@ pub mod prelude {
     pub use crate::histogram::types::{IntegralHistogram, Strategy};
     pub use crate::runtime::artifact::{ArtifactManifest, ArtifactMeta};
     pub use crate::runtime::client::HistogramExecutor;
+    pub use crate::shard::{
+        FrameTicket, ShardExecutor, ShardExecutorConfig, ShardPlan, ShardPlanner, ShardPolicy,
+        ShardReport, TensorStore,
+    };
     pub use crate::simulator::pcie::PcieModel;
     pub use crate::video::source::{FrameSource, VideoFrame};
 }

@@ -247,7 +247,7 @@ fn cmd_large(dir: &str, args: &Args) -> Result<()> {
         .clone();
     let queue = BinTaskQueue::new(
         Arc::clone(&manifest),
-        TaskQueueConfig { workers, group, artifact: meta.name },
+        TaskQueueConfig { workers, group, artifact: meta.name, cpu_fallback: true },
     )?;
     let video = SyntheticVideo::new(size, size, 4, 7);
     let image = Arc::new(video.frame(0).binned(bins));

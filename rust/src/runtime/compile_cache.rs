@@ -13,66 +13,127 @@
 //! data, so sharing executors behind `Arc` is sound.  A real PJRT
 //! backend with non-`Sync` FFI handles must keep per-thread executors
 //! instead (the [`crate::runtime::device_pool`] model); this cache is
-//! the single place that decision lives.
+//! the single place that decision lives — [`ExecutorScope::PerThread`]
+//! keys every entry (positive *and* negative) by the calling thread,
+//! so an executor `Arc` handed out on one thread is never the instance
+//! another thread compiled, while the `Arc<HistogramExecutor>` API the
+//! routers consume stays unchanged (DESIGN.md §5).
 
+use crate::histogram::types::Strategy;
 use crate::runtime::artifact::{ArtifactManifest, ArtifactMeta};
 use crate::runtime::client::HistogramExecutor;
-use crate::histogram::types::Strategy;
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::ThreadId;
+
+/// How compiled executors may be shared across threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecutorScope {
+    /// One executor per artifact, shared via `Arc` (sound for the
+    /// offline stub and any `Sync` backend).
+    #[default]
+    Shared,
+    /// One executor per (thread, artifact): required when the backend's
+    /// FFI handles are not `Sync` — each serving thread compiles and
+    /// owns its own executable, like one CUDA context per device.
+    PerThread,
+}
+
+/// Outer cache key: `None` in [`ExecutorScope::Shared`] mode, the
+/// calling thread in [`ExecutorScope::PerThread`] mode.  Inner maps
+/// key by artifact name, so steady-state hits look up with a borrowed
+/// `&str` — no per-request allocation.
+type ScopeKey = Option<ThreadId>;
 
 #[derive(Default)]
 struct CacheState {
-    compiled: HashMap<String, Arc<HistogramExecutor>>,
+    compiled: HashMap<ScopeKey, HashMap<String, Arc<HistogramExecutor>>>,
     /// Artifacts whose compile failed — negatively cached so the
     /// per-frame fallback path never re-reads the HLO file.
-    failed: HashSet<String>,
+    failed: HashMap<ScopeKey, HashSet<String>>,
     /// Memoized (strategy, h, w, bins) → manifest-match results, so
     /// hot fallback paths can test availability without re-scanning
-    /// the manifest or building error strings per frame.
+    /// the manifest or building error strings per frame.  Manifest
+    /// lookups are thread-independent, so this map never keys by
+    /// thread.
     strategy_known: HashMap<(Strategy, usize, usize, usize), bool>,
 }
 
 /// Thread-safe executor cache over one artifact manifest.
 pub struct CompileCache {
     manifest: Arc<ArtifactManifest>,
+    scope: ExecutorScope,
     state: Mutex<CacheState>,
+    /// Actual `HistogramExecutor::compile` invocations — the
+    /// observable difference between the scopes (PerThread compiles
+    /// once per thread, Shared once per process).
+    compile_attempts: AtomicUsize,
 }
 
 impl CompileCache {
     pub fn new(manifest: Arc<ArtifactManifest>) -> CompileCache {
-        CompileCache { manifest, state: Mutex::new(CacheState::default()) }
+        Self::with_scope(manifest, ExecutorScope::Shared)
+    }
+
+    pub fn with_scope(manifest: Arc<ArtifactManifest>, scope: ExecutorScope) -> CompileCache {
+        CompileCache {
+            manifest,
+            scope,
+            state: Mutex::new(CacheState::default()),
+            compile_attempts: AtomicUsize::new(0),
+        }
     }
 
     pub fn manifest(&self) -> &Arc<ArtifactManifest> {
         &self.manifest
     }
 
+    pub fn scope(&self) -> ExecutorScope {
+        self.scope
+    }
+
+    /// `HistogramExecutor::compile` calls performed so far.
+    pub fn compile_attempts(&self) -> usize {
+        self.compile_attempts.load(Ordering::Relaxed)
+    }
+
     fn lock(&self) -> MutexGuard<'_, CacheState> {
         self.state.lock().expect("compile cache lock")
     }
 
-    /// Get-or-compile `meta`, returning a shared executor handle.
+    fn scope_key(&self) -> ScopeKey {
+        match self.scope {
+            ExecutorScope::Shared => None,
+            ExecutorScope::PerThread => Some(std::thread::current().id()),
+        }
+    }
+
+    /// Get-or-compile `meta`, returning a shared executor handle (in
+    /// `PerThread` scope: shared only with this thread's later calls).
+    /// Steady-state hits allocate nothing (borrowed-name lookups).
     pub fn get_or_compile(&self, meta: &ArtifactMeta) -> Result<Arc<HistogramExecutor>> {
+        let scope = self.scope_key();
         let mut st = self.lock();
-        if let Some(exe) = st.compiled.get(&meta.name) {
+        if let Some(exe) = st.compiled.get(&scope).and_then(|m| m.get(meta.name.as_str())) {
             return Ok(Arc::clone(exe));
         }
-        if st.failed.contains(&meta.name) {
+        if st.failed.get(&scope).is_some_and(|s| s.contains(meta.name.as_str())) {
             return Err(anyhow!("artifact '{}' previously failed to compile", meta.name));
         }
         // Compile under the lock: concurrent first requests for one
         // artifact would otherwise compile it twice (compiles are rare
         // one-offs; serving threads are on the CPU path meanwhile).
+        self.compile_attempts.fetch_add(1, Ordering::Relaxed);
         match HistogramExecutor::compile(&self.manifest, meta) {
             Ok(exe) => {
                 let exe = Arc::new(exe);
-                st.compiled.insert(meta.name.clone(), Arc::clone(&exe));
+                st.compiled.entry(scope).or_default().insert(meta.name.clone(), Arc::clone(&exe));
                 Ok(exe)
             }
             Err(e) => {
-                st.failed.insert(meta.name.clone());
+                st.failed.entry(scope).or_default().insert(meta.name.clone());
                 Err(e)
             }
         }
@@ -119,9 +180,25 @@ impl CompileCache {
         known
     }
 
-    /// Number of successfully compiled executors held.
+    /// Number of successfully compiled executors held (in `PerThread`
+    /// scope this counts per-thread instances).
     pub fn compiled_count(&self) -> usize {
-        self.lock().compiled.len()
+        self.lock().compiled.values().map(|m| m.len()).sum()
+    }
+
+    /// Drop the calling thread's cache entries (positive and
+    /// negative).  `ThreadId`s are never reused, so a `PerThread`-scope
+    /// cache in a thread-per-request system must call this before a
+    /// worker thread exits or dead threads' executors accumulate
+    /// forever.  No-op in `Shared` scope.
+    pub fn evict_current_thread(&self) {
+        if self.scope != ExecutorScope::PerThread {
+            return;
+        }
+        let tid = Some(std::thread::current().id());
+        let mut st = self.lock();
+        st.compiled.remove(&tid);
+        st.failed.remove(&tid);
     }
 
     /// Drop every cached executor and negative compile result — call
@@ -138,8 +215,9 @@ impl std::fmt::Debug for CompileCache {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let st = self.lock();
         f.debug_struct("CompileCache")
-            .field("compiled", &st.compiled.len())
-            .field("failed", &st.failed.len())
+            .field("scope", &self.scope)
+            .field("compiled", &st.compiled.values().map(|m| m.len()).sum::<usize>())
+            .field("failed", &st.failed.values().map(|s| s.len()).sum::<usize>())
             .finish()
     }
 }
@@ -155,6 +233,24 @@ mod tests {
             profile: "test".into(),
             artifacts: vec![],
         })
+    }
+
+    fn fake_meta(name: &str) -> ArtifactMeta {
+        ArtifactMeta {
+            name: name.into(),
+            kind: crate::runtime::artifact::ArtifactKind::Strategy,
+            strategy: "wf_tis".into(),
+            height: 8,
+            width: 8,
+            padded_h: 8,
+            padded_w: 8,
+            bins: 4,
+            tile: 8,
+            n_rects: 0,
+            file: format!("{name}.hlo"),
+            inputs: vec![],
+            outputs: vec![],
+        }
     }
 
     #[test]
@@ -186,5 +282,61 @@ mod tests {
         assert!(!cache.has_strategy(Strategy::WfTis, 64, 64, 32));
         cache.clear();
         assert!(!cache.has_strategy(Strategy::WfTis, 64, 64, 32));
+    }
+
+    /// Shared scope: one compile attempt serves every thread (the
+    /// second request hits the negative cache — in a real-backend
+    /// build it would clone the compiled `Arc`).
+    #[test]
+    fn shared_scope_compiles_once_across_threads() {
+        let cache = CompileCache::new(empty_manifest());
+        let meta = fake_meta("wf_tis_8x8_b4_t8");
+        assert!(cache.get_or_compile(&meta).is_err(), "offline compile fails");
+        assert_eq!(cache.compile_attempts(), 1);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let cache = &cache;
+                let meta = meta.clone();
+                s.spawn(move || {
+                    assert!(cache.get_or_compile(&meta).is_err());
+                });
+            }
+        });
+        assert_eq!(cache.compile_attempts(), 1, "shared negative cache answers all threads");
+    }
+
+    /// PerThread scope: every thread runs its own compile and owns its
+    /// own (here: negative) cache entry — the isolation a non-`Sync`
+    /// PJRT build requires.
+    #[test]
+    fn per_thread_scope_compiles_once_per_thread() {
+        let cache = CompileCache::with_scope(empty_manifest(), ExecutorScope::PerThread);
+        assert_eq!(cache.scope(), ExecutorScope::PerThread);
+        let meta = fake_meta("wf_tis_8x8_b4_t8");
+        std::thread::scope(|s| {
+            for i in 0..3 {
+                let cache = &cache;
+                let meta = meta.clone();
+                s.spawn(move || {
+                    // Two calls on one thread: one attempt, then the
+                    // thread's own negative cache.
+                    assert!(cache.get_or_compile(&meta).is_err());
+                    assert!(cache.get_or_compile(&meta).is_err());
+                    if i == 0 {
+                        // A departing worker clears its own entries.
+                        cache.evict_current_thread();
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            cache.compile_attempts(),
+            3,
+            "each thread must perform exactly one compile of its own"
+        );
+        // The calling thread has no entry yet: its request is a fresh
+        // attempt, not a hit on another thread's entry.
+        assert!(cache.get_or_compile(&meta).is_err());
+        assert_eq!(cache.compile_attempts(), 4);
     }
 }

@@ -16,6 +16,7 @@
 //! exactly the requested plane slice.  This is how the paper tiles the
 //! 3-D tensor along the bin direction without recompiling per group.
 
+use crate::histogram::engine::ScanEngine;
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
 use crate::runtime::artifact::ArtifactManifest;
 use crate::runtime::client::HistogramExecutor;
@@ -23,7 +24,7 @@ use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// One bin-group job against a shared frame.
 #[derive(Clone)]
@@ -33,6 +34,9 @@ pub struct Job {
     pub artifact: String,
     /// First bin of this group.
     pub bin_offset: usize,
+    /// Bins in this group (what the CPU fallback computes when the
+    /// artifact cannot; must equal the artifact's bin count).
+    pub group: usize,
     /// Shared input frame (values are FULL-range bin indices).
     pub image: Arc<BinnedImage>,
 }
@@ -59,6 +63,20 @@ impl DevicePool {
     /// Spawn `workers` threads; each compiles artifacts lazily from
     /// `manifest` on first use and caches the executable.
     pub fn new(manifest: Arc<ArtifactManifest>, workers: usize) -> DevicePool {
+        Self::with_cpu_fallback(manifest, workers, false)
+    }
+
+    /// Like [`Self::new`], but workers that cannot compile a job's
+    /// artifact (no backend / no artifact in the offline build) serve
+    /// the job on a per-worker CPU [`ScanEngine`] instead — same bin
+    /// grouping, bit-identical output.  This keeps the §4.6 queue
+    /// runnable offline as the serial-frame baseline `benches/shard.rs`
+    /// compares the interleaved shard path against.
+    pub fn with_cpu_fallback(
+        manifest: Arc<ArtifactManifest>,
+        workers: usize,
+        cpu_fallback: bool,
+    ) -> DevicePool {
         assert!(workers >= 1, "need at least one worker");
         let (job_tx, job_rx) = mpsc::channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
@@ -70,13 +88,20 @@ impl DevicePool {
             let manifest = Arc::clone(&manifest);
             handles.push(std::thread::spawn(move || {
                 let mut cache: HashMap<String, HistogramExecutor> = HashMap::new();
+                // Lazy per-worker fallback engine (one "device context"
+                // per worker, like the executor cache above).
+                let mut engine: Option<ScanEngine> = None;
                 loop {
                     // Pull the next task (the Fig. 18 task queue).
                     let job = match job_rx.lock().expect("queue lock").recv() {
                         Ok(j) => j,
                         Err(_) => break, // queue closed: drain and exit
                     };
-                    let out = run_job(&manifest, &mut cache, worker_id, job);
+                    let mut out = run_job(&manifest, &mut cache, worker_id, &job);
+                    if out.is_err() && cpu_fallback {
+                        let eng = engine.get_or_insert_with(|| ScanEngine::new(1));
+                        out = run_job_cpu(eng, worker_id, &job);
+                    }
                     if out_tx.send(out).is_err() {
                         break; // pool dropped
                     }
@@ -121,6 +146,7 @@ impl DevicePool {
                 job_id: j,
                 artifact: artifact.to_string(),
                 bin_offset: j * group,
+                group,
                 image: Arc::clone(image),
             })?;
         }
@@ -154,11 +180,28 @@ impl Drop for DevicePool {
     }
 }
 
+/// Shift values so a group's bins land in `[0, group)`; out-of-group
+/// values count nowhere (bin −1).
+fn shifted_group_image(image: &BinnedImage, bin_offset: usize, group: usize) -> BinnedImage {
+    let shifted = if bin_offset == 0 {
+        image.clone()
+    } else {
+        let off = bin_offset as i32;
+        BinnedImage {
+            h: image.h,
+            w: image.w,
+            bins: group,
+            data: image.data.iter().map(|&v| if v >= off { v - off } else { -1 }).collect(),
+        }
+    };
+    BinnedImage { bins: group, ..shifted }
+}
+
 fn run_job(
     manifest: &ArtifactManifest,
     cache: &mut HashMap<String, HistogramExecutor>,
     worker: usize,
-    job: Job,
+    job: &Job,
 ) -> Result<JobOutput> {
     if !cache.contains_key(&job.artifact) {
         let meta = manifest
@@ -168,19 +211,18 @@ fn run_job(
     }
     let exe = &cache[&job.artifact];
     let group = exe.meta().bins;
-    // Shift values so this group's bins land in [0, group).
-    let shifted = if job.bin_offset == 0 {
-        (*job.image).clone()
-    } else {
-        let off = job.bin_offset as i32;
-        BinnedImage {
-            h: job.image.h,
-            w: job.image.w,
-            bins: group,
-            data: job.image.data.iter().map(|&v| if v >= off { v - off } else { -1 }).collect(),
-        }
-    };
-    let shifted = BinnedImage { bins: group, ..shifted };
+    let shifted = shifted_group_image(&job.image, job.bin_offset, group);
     let (partial, kernel_time) = exe.compute_timed(&shifted)?;
+    Ok(JobOutput { job_id: job.job_id, bin_offset: job.bin_offset, worker, partial, kernel_time })
+}
+
+/// CPU-substrate job execution: the same bin grouping on a per-worker
+/// [`ScanEngine`] — the whole-frame serial baseline path when no
+/// backend/artifact exists (DESIGN.md §4).
+fn run_job_cpu(engine: &mut ScanEngine, worker: usize, job: &Job) -> Result<JobOutput> {
+    let shifted = shifted_group_image(&job.image, job.bin_offset, job.group);
+    let t0 = Instant::now();
+    let partial = engine.compute(&shifted);
+    let kernel_time = t0.elapsed();
     Ok(JobOutput { job_id: job.job_id, bin_offset: job.bin_offset, worker, partial, kernel_time })
 }

@@ -1,0 +1,554 @@
+//! `ShardExecutor` — the shared multi-job scheduler that runs shards
+//! from any number of in-flight frames interleaved over one worker
+//! set.
+//!
+//! This retires the two limits the ROADMAP called out in the PR-2
+//! serving layer: the `BinTaskQueue` ran **one job per pool** and the
+//! `Server` **serialized whole frames** on it (head-of-line blocking —
+//! a queued 4k frame stalled every other large request).  Here:
+//!
+//! * one fixed set of worker threads pulls `(frame_id, shard_id)`
+//!   tagged jobs from a single FIFO — shards of different frames
+//!   interleave freely, so frame N+1's shards fill the drain tail of
+//!   frame N (the idle slots a lone frame leaves when its last shards
+//!   occupy fewer workers than exist);
+//! * each worker computes on a [`ScanEngine`] checked out of a shared
+//!   LIFO stack (warm scratch and parked
+//!   [`WorkerPool`](crate::histogram::engine::WorkerPool) reused
+//!   across jobs and frames), with a persistent per-thread sub-image
+//!   buffer — the steady state allocates no per-shard buffers beyond
+//!   the pooled partial tensors;
+//! * results stream back through a **bounded** per-frame channel
+//!   (capacity ≈ workers), so a slow consumer exerts backpressure on
+//!   the workers instead of buffering unboundedly — the discipline
+//!   that keeps the out-of-core path inside its memory budget;
+//! * the caller holds a [`FrameTicket`] per submitted frame and drives
+//!   reassembly (into RAM or a spilled
+//!   [`TensorStore`](crate::shard::TensorStore)) on its own thread,
+//!   overlapping frame N's reassembly with frame N+1's compute.
+//!
+//! Ordering note: when one thread holds several tickets it must
+//! reassemble them in submission order (jobs leave the FIFO in that
+//! order, and the bounded channels are what bound memory); tickets
+//! held by different threads — the server's session model — drain
+//! independently in any order.
+
+use crate::coordinator::frame_pool::{FramePool, PoolStats};
+use crate::histogram::engine::ScanEngine;
+use crate::histogram::types::{BinnedImage, IntegralHistogram};
+use crate::shard::planner::{ShardPlan, ShardSpec};
+use crate::shard::reassemble::{RamSink, Reassembler, ShardSink};
+use crate::shard::store::TensorStore;
+use crate::shard::{ResidentGauge, TaggedShard};
+use anyhow::{anyhow, Context, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Executor configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardExecutorConfig {
+    /// Worker threads (the paper's device count; Fig. 18 uses 4).
+    pub workers: usize,
+    /// `ScanEngine` thread budget per shard.  1 by default: shard-level
+    /// parallelism comes from the worker set, not from one shard
+    /// grabbing every core.
+    pub engine_workers: usize,
+    /// Completed-shard backpressure depth per frame (0 ⇒ `workers`).
+    pub channel_depth: usize,
+}
+
+impl Default for ShardExecutorConfig {
+    fn default() -> ShardExecutorConfig {
+        ShardExecutorConfig { workers: 4, engine_workers: 1, channel_depth: 0 }
+    }
+}
+
+/// One tagged unit of work against a shared frame.
+struct ShardJob {
+    frame_id: u64,
+    spec: ShardSpec,
+    image: Arc<BinnedImage>,
+    out: mpsc::SyncSender<TaggedShard>,
+    gauge: Arc<ResidentGauge>,
+}
+
+/// Executor observability counters.
+#[derive(Debug, Clone)]
+pub struct ShardExecutorStats {
+    /// Shards executed since construction.
+    pub jobs: usize,
+    /// Shards executed per worker (pull-based balance, Fig. 18).
+    pub per_worker: Vec<usize>,
+    /// Engines ever created for the checkout stack (≤ workers).
+    pub engines_created: usize,
+    /// Frames currently in flight (submitted, ticket not finished).
+    pub frames_inflight: usize,
+    /// Peak concurrently in-flight frames — > 1 is the interleaving
+    /// the serial `BinTaskQueue` route could never reach.
+    pub frames_inflight_peak: usize,
+    /// Partial-tensor arena counters.
+    pub partial_pool: PoolStats,
+}
+
+struct Shared {
+    engines: Mutex<Vec<ScanEngine>>,
+    engines_created: AtomicUsize,
+    pool: Arc<FramePool>,
+    jobs: AtomicUsize,
+    per_worker: Vec<AtomicUsize>,
+    inflight: AtomicUsize,
+    inflight_peak: AtomicUsize,
+}
+
+/// The shared shard scheduler.  All methods take `&self`; submit from
+/// any number of threads.
+pub struct ShardExecutor {
+    config: ShardExecutorConfig,
+    tx: Mutex<Option<mpsc::Sender<ShardJob>>>,
+    handles: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    frame_seq: AtomicU64,
+}
+
+impl std::fmt::Debug for ShardExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardExecutor")
+            .field("workers", &self.handles.len())
+            .field("jobs", &self.shared.jobs.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl ShardExecutor {
+    pub fn new(config: ShardExecutorConfig) -> ShardExecutor {
+        let workers = config.workers.max(1);
+        let shared = Arc::new(Shared {
+            engines: Mutex::new(Vec::new()),
+            engines_created: AtomicUsize::new(0),
+            pool: Arc::new(FramePool::new()),
+            jobs: AtomicUsize::new(0),
+            per_worker: (0..workers).map(|_| AtomicUsize::new(0)).collect(),
+            inflight: AtomicUsize::new(0),
+            inflight_peak: AtomicUsize::new(0),
+        });
+        let (tx, rx) = mpsc::channel::<ShardJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for worker_id in 0..workers {
+            let rx = Arc::clone(&rx);
+            let shared = Arc::clone(&shared);
+            let engine_workers = config.engine_workers.max(1);
+            let h = std::thread::Builder::new()
+                .name(format!("inthist-shard-{worker_id}"))
+                .spawn(move || worker_loop(&rx, &shared, worker_id, engine_workers))
+                .expect("spawn shard worker");
+            handles.push(h);
+        }
+        ShardExecutor {
+            config,
+            tx: Mutex::new(Some(tx)),
+            handles,
+            shared,
+            frame_seq: AtomicU64::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn config(&self) -> &ShardExecutorConfig {
+        &self.config
+    }
+
+    pub fn stats(&self) -> ShardExecutorStats {
+        let s = &self.shared;
+        ShardExecutorStats {
+            jobs: s.jobs.load(Ordering::Relaxed),
+            per_worker: s.per_worker.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            engines_created: s.engines_created.load(Ordering::Relaxed),
+            frames_inflight: s.inflight.load(Ordering::Relaxed),
+            frames_inflight_peak: s.inflight_peak.load(Ordering::Relaxed),
+            partial_pool: s.pool.stats(),
+        }
+    }
+
+    /// Submit every shard of `plan` against `image`, returning the
+    /// frame's ticket.  Non-blocking: shards queue behind whatever
+    /// other frames already have in flight.
+    pub fn submit(&self, image: &Arc<BinnedImage>, plan: &ShardPlan) -> Result<FrameTicket> {
+        if (image.h, image.w, image.bins) != (plan.h, plan.w, plan.bins) {
+            return Err(anyhow!(
+                "plan {}x{}x{} does not match image {}x{}x{}",
+                plan.bins,
+                plan.h,
+                plan.w,
+                image.bins,
+                image.h,
+                image.w
+            ));
+        }
+        let tx = {
+            let guard = self.tx.lock().expect("submit lock");
+            guard.as_ref().expect("executor already shut down").clone()
+        };
+        let frame_id = self.frame_seq.fetch_add(1, Ordering::Relaxed);
+        let depth = if self.config.channel_depth == 0 {
+            self.handles.len()
+        } else {
+            self.config.channel_depth
+        };
+        let (out_tx, out_rx) = mpsc::sync_channel::<TaggedShard>(depth.max(1));
+        let gauge = Arc::new(ResidentGauge::default());
+        for spec in &plan.shards {
+            tx.send(ShardJob {
+                frame_id,
+                spec: *spec,
+                image: Arc::clone(image),
+                out: out_tx.clone(),
+                gauge: Arc::clone(&gauge),
+            })
+            .map_err(|_| anyhow!("all shard workers exited"))?;
+        }
+        // Count the frame only once its shards are all queued: a
+        // failed submit returns without a ticket, so nothing would
+        // ever settle the counter.
+        let now = self.shared.inflight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.shared.inflight_peak.fetch_max(now, Ordering::Relaxed);
+        Ok(FrameTicket {
+            frame_id,
+            plan: plan.clone(),
+            rx: out_rx,
+            gauge,
+            shared: Arc::clone(&self.shared),
+            settled: false,
+            t_submit: Instant::now(),
+        })
+    }
+
+    /// Close the queue and join the workers (also done on drop).
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.tx.lock().expect("submit lock").take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardExecutor {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn worker_loop(
+    rx: &Mutex<mpsc::Receiver<ShardJob>>,
+    shared: &Shared,
+    worker_id: usize,
+    engine_workers: usize,
+) {
+    // Persistent sub-image buffer: reused across jobs, reallocating
+    // only when a larger strip arrives.
+    let mut sub = BinnedImage { h: 0, w: 0, bins: 1, data: Vec::new() };
+    loop {
+        let job = match rx.lock().expect("shard queue lock").recv() {
+            Ok(j) => j,
+            Err(_) => break, // queue closed: drain done, exit
+        };
+        let spec = job.spec;
+        let w = job.image.w;
+        // Slice rows [row0, row0+nrows) and shift values so this
+        // shard's bins land in [0, nbins) — the device pool's bin
+        // grouping trick, applied per row strip.
+        sub.h = spec.nrows;
+        sub.w = w;
+        sub.bins = spec.nbins;
+        sub.data.clear();
+        sub.data.reserve(spec.nrows * w);
+        let lo = spec.bin0 as i32;
+        let hi = (spec.bin0 + spec.nbins) as i32;
+        let src = &job.image.data[spec.row0 * w..(spec.row0 + spec.nrows) * w];
+        sub.data.extend(src.iter().map(|&v| if v >= lo && v < hi { v - lo } else { -1 }));
+
+        let mut engine = match shared.engines.lock().expect("engine stack lock").pop() {
+            Some(e) => e,
+            None => {
+                shared.engines_created.fetch_add(1, Ordering::Relaxed);
+                ScanEngine::new(engine_workers)
+            }
+        };
+        let mut partial = shared.pool.acquire(spec.nbins, spec.nrows, w);
+        job.gauge.add(spec.nbins * spec.nrows * w * 4);
+        let t0 = Instant::now();
+        engine.compute_into(&sub, &mut partial);
+        let kernel_time = t0.elapsed();
+        shared.engines.lock().expect("engine stack lock").push(engine);
+        shared.jobs.fetch_add(1, Ordering::Relaxed);
+        shared.per_worker[worker_id].fetch_add(1, Ordering::Relaxed);
+
+        let nbytes = partial.nbytes();
+        let tagged = TaggedShard { frame_id: job.frame_id, spec, partial, worker: worker_id, kernel_time };
+        if let Err(e) = job.out.send(tagged) {
+            // Ticket dropped before reassembly: recycle and settle.
+            shared.pool.release(e.0.partial);
+            job.gauge.sub(nbytes);
+        }
+    }
+}
+
+/// Report of one reassembled frame (mirrors
+/// [`TaskQueueReport`](crate::coordinator::task_queue::TaskQueueReport)
+/// so Fig. 18 comparisons line up).
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub frame_id: u64,
+    pub shards: usize,
+    /// Submit → reassembly-complete wall time.
+    pub wall: Duration,
+    /// Per-shard kernel times indexed by `shard_id` (for the
+    /// predicted-vs-measured comparison).
+    pub kernel_by_shard: Vec<Duration>,
+    /// Shards completed per worker.
+    pub per_worker: Vec<usize>,
+    /// Peak resident bytes of this frame (partials in flight + reorder
+    /// buffer + carries + scratch) — the counter the memory budget is
+    /// asserted against.
+    pub peak_resident_bytes: usize,
+}
+
+impl ShardReport {
+    pub fn fps(&self) -> f64 {
+        1.0 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Sum of per-shard kernel times — the one-worker serial estimate.
+    pub fn serial_kernel_time(&self) -> Duration {
+        self.kernel_by_shard.iter().sum()
+    }
+
+    pub fn efficiency(&self, workers: usize) -> f64 {
+        self.serial_kernel_time().as_secs_f64()
+            / (workers.max(1) as f64 * self.wall.as_secs_f64().max(1e-12))
+    }
+}
+
+/// Handle on one submitted frame.  Drive it with one of the
+/// `reassemble_*` methods; dropping it without reassembling cancels
+/// cleanly (in-flight shards are recycled as they complete).
+pub struct FrameTicket {
+    frame_id: u64,
+    plan: ShardPlan,
+    rx: mpsc::Receiver<TaggedShard>,
+    gauge: Arc<ResidentGauge>,
+    shared: Arc<Shared>,
+    settled: bool,
+    t_submit: Instant,
+}
+
+impl FrameTicket {
+    pub fn frame_id(&self) -> u64 {
+        self.frame_id
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// This frame's resident-bytes gauge (live view; peak is also in
+    /// the final [`ShardReport`]).
+    pub fn gauge(&self) -> &ResidentGauge {
+        &self.gauge
+    }
+
+    /// Drain every shard into `sink`.
+    pub fn reassemble(mut self, sink: &mut dyn ShardSink) -> Result<ShardReport> {
+        let n = self.plan.shards.len();
+        let mut kernel_by_shard = vec![Duration::ZERO; n];
+        let mut per_worker = vec![0usize; self.shared.per_worker.len()];
+        let mut reasm =
+            Reassembler::new(&self.plan, Some(Arc::clone(&self.shared.pool)), Arc::clone(&self.gauge));
+        for _ in 0..n {
+            let shard = self
+                .rx
+                .recv()
+                .context("shard workers hung up mid-frame")?;
+            let id = shard.spec.shard_id;
+            if id < n {
+                kernel_by_shard[id] = shard.kernel_time;
+            }
+            if shard.worker < per_worker.len() {
+                per_worker[shard.worker] += 1;
+            }
+            reasm.accept(shard, sink)?;
+        }
+        if !reasm.finished() {
+            return Err(anyhow!("frame {} reassembly incomplete", self.frame_id));
+        }
+        drop(reasm); // settle carry/scratch charges before reading peak
+        self.settle();
+        Ok(ShardReport {
+            frame_id: self.frame_id,
+            shards: n,
+            wall: self.t_submit.elapsed(),
+            kernel_by_shard,
+            per_worker,
+            peak_resident_bytes: self.gauge.peak(),
+        })
+    }
+
+    /// Drain into a caller tensor in host RAM.
+    pub fn reassemble_into(self, out: &mut IntegralHistogram) -> Result<ShardReport> {
+        let (bins, h, w) = (self.plan.bins, self.plan.h, self.plan.w);
+        let mut sink = RamSink::new(out, bins, h, w);
+        self.reassemble(&mut sink)
+    }
+
+    /// Drain into a fresh spill-backed [`TensorStore`] — the
+    /// out-of-core path: peak host residency stays near the plan's
+    /// per-shard budget × slack, never the full tensor.
+    pub fn reassemble_spilled(self) -> Result<(TensorStore, ShardReport)> {
+        let mut store = TensorStore::spill(self.plan.bins, self.plan.h, self.plan.w)?;
+        let report = self.reassemble(&mut store)?;
+        Ok((store, report))
+    }
+
+    fn settle(&mut self) {
+        if !self.settled {
+            self.settled = true;
+            self.shared.inflight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for FrameTicket {
+    fn drop(&mut self) {
+        self.settle();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::shard::planner::{ShardPlanner, ShardPolicy};
+    use crate::util::prng::Xoshiro256;
+
+    fn random_image(h: usize, w: usize, bins: usize, seed: u64) -> Arc<BinnedImage> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        Arc::new(BinnedImage::new(h, w, bins, data))
+    }
+
+    fn planner(budget: usize, workers: usize) -> ShardPlanner {
+        ShardPlanner::new(ShardPolicy {
+            memory_budget: budget,
+            workers,
+            ..ShardPolicy::default()
+        })
+    }
+
+    #[test]
+    fn one_frame_matches_algorithm_1() {
+        let exec = ShardExecutor::new(ShardExecutorConfig { workers: 3, ..Default::default() });
+        let img = random_image(50, 38, 9, 1);
+        let plan = planner(32 << 10, 3).plan(9, 50, 38);
+        assert!(plan.shards.len() > 3, "want real fan-out");
+        let ticket = exec.submit(&img, &plan).expect("submit");
+        let mut out = IntegralHistogram::zeros(0, 0, 0);
+        let report = ticket.reassemble_into(&mut out).expect("reassemble");
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&out), 0.0);
+        assert_eq!(report.shards, plan.shards.len());
+        assert_eq!(report.per_worker.iter().sum::<usize>(), plan.shards.len());
+        assert!(report.serial_kernel_time() > Duration::ZERO);
+        assert!(report.efficiency(3) > 0.0);
+    }
+
+    #[test]
+    fn interleaved_frames_reassemble_independently() {
+        let exec = ShardExecutor::new(ShardExecutorConfig { workers: 2, ..Default::default() });
+        let plan = planner(16 << 10, 2).plan(6, 40, 30);
+        let imgs: Vec<_> = (0..3).map(|s| random_image(40, 30, 6, 10 + s)).collect();
+        // Submit all three frames before draining any: shards of all
+        // frames share the queue.
+        let tickets: Vec<_> =
+            imgs.iter().map(|img| exec.submit(img, &plan).expect("submit")).collect();
+        assert!(exec.stats().frames_inflight_peak >= 3);
+        for (img, ticket) in imgs.iter().zip(tickets) {
+            let mut out = IntegralHistogram::zeros(0, 0, 0);
+            ticket.reassemble_into(&mut out).expect("reassemble");
+            let expected = integral_histogram_seq(img);
+            assert_eq!(expected.max_abs_diff(&out), 0.0);
+        }
+        let stats = exec.stats();
+        assert_eq!(stats.jobs, 3 * plan.shards.len());
+        assert_eq!(stats.frames_inflight, 0, "tickets settle on completion");
+        assert!(stats.engines_created <= 2, "engines recycle through the checkout stack");
+    }
+
+    #[test]
+    fn concurrent_submitters_stay_bit_identical() {
+        let exec = ShardExecutor::new(ShardExecutorConfig { workers: 3, ..Default::default() });
+        let plan = planner(24 << 10, 3).plan(5, 36, 28);
+        std::thread::scope(|scope| {
+            for seed in 0..4u64 {
+                let exec = &exec;
+                let plan = &plan;
+                scope.spawn(move || {
+                    let img = random_image(36, 28, 5, 40 + seed);
+                    for _ in 0..3 {
+                        let ticket = exec.submit(&img, plan).expect("submit");
+                        let mut out = IntegralHistogram::zeros(0, 0, 0);
+                        ticket.reassemble_into(&mut out).expect("reassemble");
+                        let expected = integral_histogram_seq(&img);
+                        assert_eq!(expected.max_abs_diff(&out), 0.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(exec.stats().jobs, 4 * 3 * plan.shards.len());
+    }
+
+    #[test]
+    fn dropped_ticket_cancels_cleanly() {
+        let exec = ShardExecutor::new(ShardExecutorConfig { workers: 2, ..Default::default() });
+        let img = random_image(32, 32, 4, 5);
+        let plan = planner(8 << 10, 2).plan(4, 32, 32);
+        let ticket = exec.submit(&img, &plan).expect("submit");
+        drop(ticket);
+        // The executor must still serve later frames correctly.
+        let ticket = exec.submit(&img, &plan).expect("submit again");
+        let mut out = IntegralHistogram::zeros(0, 0, 0);
+        ticket.reassemble_into(&mut out).expect("reassemble");
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&out), 0.0);
+        assert_eq!(exec.stats().frames_inflight, 0);
+    }
+
+    #[test]
+    fn mismatched_plan_is_rejected() {
+        let exec = ShardExecutor::new(ShardExecutorConfig::default());
+        let img = random_image(16, 16, 4, 2);
+        let plan = planner(1 << 20, 2).plan(4, 32, 16);
+        assert!(exec.submit(&img, &plan).is_err());
+    }
+
+    #[test]
+    fn spilled_reassembly_matches_ram() {
+        let exec = ShardExecutor::new(ShardExecutorConfig { workers: 2, ..Default::default() });
+        let img = random_image(45, 21, 7, 8);
+        let plan = planner(10 << 10, 2).plan(7, 45, 21);
+        let (store, report) = exec.submit(&img, &plan).expect("submit").reassemble_spilled().expect("spill");
+        let expected = integral_histogram_seq(&img);
+        let back = store.to_histogram().expect("materialize");
+        assert_eq!(expected.max_abs_diff(&back), 0.0);
+        assert!(report.peak_resident_bytes < expected.nbytes(), "never held the full tensor");
+    }
+}

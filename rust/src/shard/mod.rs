@@ -1,0 +1,106 @@
+//! Sharded out-of-core execution — the §4.6 scale path as a subsystem.
+//!
+//! The paper's headline scale result (Fig. 18) pushes a 32 GB integral
+//! histogram tensor — 64 MB image × 128 bins — through four GPUs that
+//! individually hold a fraction of it, at 0.73 Hz and 153× over the
+//! CPU baseline.  The mechanism is structural, not kernel-level: the
+//! tensor is partitioned along the bin axis, partitions stream through
+//! whatever device frees up first, and the host reassembles (or
+//! discards) partitions as they land.  This module is that mechanism
+//! as a composable subsystem over the serving stack:
+//!
+//! * [`planner::ShardPlanner`] — partitions a request into bin-range ×
+//!   row-strip shards under an explicit host memory budget, costed
+//!   with the paper's transfer/launch models before anything runs;
+//! * [`executor::ShardExecutor`] — one worker set running shards from
+//!   *multiple in-flight frames interleaved*, every result tagged
+//!   `(frame_id, shard_id)` — retiring the one-job-per-pool and
+//!   whole-frame-serialization limits of the PR-2 large-image route;
+//! * [`reassemble::Reassembler`] — streams tagged shards, in any
+//!   completion order, into a sink: row strips compose through a
+//!   per-column carry, bit-identically for count-valued tensors;
+//! * [`store::TensorStore`] — the spill-backed sink: completed rows
+//!   land on disk in Fig. 2 layout and Eq. 2 box-histogram queries run
+//!   against the file in O(bins) corner reads, so the 32 GB
+//!   configuration serves region queries from a bounded-memory host.
+//!
+//! [`crate::coordinator::server::Server`] routes oversized frames here
+//! (see `ServerConfig::shard_*`); `examples/out_of_core.rs` and
+//! `benches/shard.rs` drive the subsystem directly.
+
+pub mod executor;
+pub mod planner;
+pub mod reassemble;
+pub mod store;
+
+pub use executor::{FrameTicket, ShardExecutor, ShardExecutorConfig, ShardExecutorStats, ShardReport};
+pub use planner::{PlanCost, ShardCost, ShardPlan, ShardPlanner, ShardPolicy, ShardSpec};
+pub use reassemble::{RamSink, Reassembler, ShardSink};
+pub use store::TensorStore;
+
+use crate::histogram::types::IntegralHistogram;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// One shard's output, tagged with its origin — the unit that flows
+/// from executor workers to reassembly.
+pub struct TaggedShard {
+    /// Which in-flight frame this shard belongs to.
+    pub frame_id: u64,
+    /// Which piece of that frame's plan it is.
+    pub spec: ShardSpec,
+    /// The shard's *local* integral (`nbins×nrows×w`, carry-free).
+    pub partial: IntegralHistogram,
+    /// Worker that computed it (utilization accounting).
+    pub worker: usize,
+    /// Pure compute time of the shard.
+    pub kernel_time: Duration,
+}
+
+/// A current/peak byte gauge: every buffer a frame holds resident —
+/// partial tensors in flight, reorder buffers, carries, scratch — is
+/// charged here, so "peak resident ≤ budget" is a counter assertion.
+#[derive(Debug, Default)]
+pub struct ResidentGauge {
+    cur: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl ResidentGauge {
+    pub fn add(&self, bytes: usize) {
+        let now = self.cur.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, bytes: usize) {
+        self.cur.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Bytes currently resident.
+    pub fn current(&self) -> usize {
+        self.cur.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_tracks_current_and_peak() {
+        let g = ResidentGauge::default();
+        g.add(100);
+        g.add(50);
+        assert_eq!(g.current(), 150);
+        g.sub(120);
+        assert_eq!(g.current(), 30);
+        assert_eq!(g.peak(), 150, "peak survives the drain");
+        g.add(10);
+        assert_eq!(g.peak(), 150);
+    }
+}

@@ -1,0 +1,349 @@
+//! `ShardPlanner` — partition one integral-histogram request into
+//! bin-range (and, when the memory budget demands it, spatial-strip)
+//! shards.
+//!
+//! The paper's §4.6 scale result is a *planning* result: a 64 MB image
+//! at 128 bins produces a 32 GB tensor, so the tensor is tiled along
+//! the bin axis into group tasks sized to what one device can hold,
+//! and Fig. 18 costs the schedule as (per-task kernel time, per-task
+//! transfer time) pairs.  This module turns that arithmetic into an
+//! explicit plan object:
+//!
+//! * the **bin axis** is split into equal groups (the paper's 8/16-bin
+//!   tasks) sized so one shard's partial tensor fits the per-shard
+//!   slice of the caller's memory budget;
+//! * when even a single bin plane exceeds that slice (the 64 MB-image
+//!   case), shards are additionally split into **row strips** — a
+//!   strip's local integral is exact up to a per-column carry that the
+//!   [`crate::shard::Reassembler`] adds back, so strips compose
+//!   bit-identically for integer-valued counts;
+//! * when the frame is small but the executor has idle workers, rows
+//!   are split anyway (bounded oversubscription) so shard-level
+//!   parallelism does not collapse at low bin counts — the adaptive
+//!   splitting argument of "Fast Histograms using Adaptive CUDA
+//!   Streams" (PAPERS.md);
+//! * every plan can be **costed before it runs** with the same models
+//!   the figure drivers use ([`crate::simulator::pcie`] transfer times,
+//!   [`crate::simulator::gpu_model`] launch overhead + memory
+//!   bandwidth), which is how `examples/multi_gpu_large_image.rs`
+//!   prints predicted-vs-measured per-shard columns.
+//!
+//! The planner is pure (no I/O, no allocation beyond the plan) and
+//! deterministic: one request maps to one plan.
+
+use crate::histogram::types::Strategy;
+use crate::simulator::gpu_model::{device_mem_bandwidth, launch_overhead};
+use crate::simulator::pcie::{Card, PcieModel};
+use std::time::Duration;
+
+/// Policy knobs for the shard planner.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPolicy {
+    /// Peak resident bytes allowed per in-flight frame on the host —
+    /// partial tensors in flight, reorder buffers and carry rows all
+    /// count against it.  This is the knob that makes the 32 GB-tensor
+    /// configuration runnable on a bounded-memory host.
+    pub memory_budget: usize,
+    /// Shard executor worker count the plan will run on (sizes the
+    /// in-flight share of the budget and the oversubscription target).
+    pub workers: usize,
+    /// Largest bin group per shard (the paper uses 8/16-bin tasks).
+    pub max_group: usize,
+    /// Minimum shards per frame; when the bin axis alone yields fewer,
+    /// rows are split to reach it (0 ⇒ `workers`).
+    pub min_shards: usize,
+    /// Card whose PCIe/memory models cost the plan (Fig. 18 uses the
+    /// GTX 480 quartet).
+    pub card: Card,
+}
+
+impl Default for ShardPolicy {
+    fn default() -> ShardPolicy {
+        ShardPolicy {
+            memory_budget: 1 << 30,
+            workers: 4,
+            max_group: 16,
+            min_shards: 0,
+            card: Card::Gtx480,
+        }
+    }
+}
+
+/// One shard: a bin range × row strip of the output tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Index in plan (= issue) order; results are tagged with it.
+    pub shard_id: usize,
+    /// First bin of this shard's range.
+    pub bin0: usize,
+    /// Bins in this shard's range.
+    pub nbins: usize,
+    /// First image row of this shard's strip.
+    pub row0: usize,
+    /// Rows in this shard's strip.
+    pub nrows: usize,
+}
+
+impl ShardSpec {
+    /// Bytes of this shard's partial tensor (`nbins×nrows×w` f32).
+    pub fn nbytes(&self, w: usize) -> usize {
+        self.nbins * self.nrows * w * 4
+    }
+}
+
+/// Predicted cost of one shard under the paper's models.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardCost {
+    /// Modeled device kernel time: `tensor_passes` crossings of the
+    /// partial tensor at device memory bandwidth, plus §3.3 launch
+    /// overhead for the shard's geometry.
+    pub kernel: Duration,
+    /// Modeled PCIe time: sub-image upload + partial tensor download.
+    pub transfer: Duration,
+}
+
+/// Aggregate prediction for a whole plan on `workers` devices.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanCost {
+    /// Sum of per-shard kernel times (single-device serial estimate).
+    pub serial_kernel: Duration,
+    /// Sum of per-shard transfer times (one shared PCIe link).
+    pub serial_transfer: Duration,
+    /// Makespan estimate with compute spread over `workers` and
+    /// transfers overlapped behind it (Fig. 14 overlap argument lifted
+    /// to the pool): `max(kernel/workers, transfer)`.
+    pub wall: Duration,
+}
+
+/// The partition of one `bins×h×w` request into tagged shards.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub bins: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Shards in issue order: bin-major, then row strips top-to-bottom
+    /// (the Fig. 2 layout order, so spilled planes stream to disk
+    /// near-sequentially).
+    pub shards: Vec<ShardSpec>,
+    /// Bins per (full) bin group.
+    pub group: usize,
+    /// Rows per (full) strip — `h` when the row axis is unsplit.
+    pub strip_rows: usize,
+    /// Whether the full tensor exceeds the memory budget, i.e. the
+    /// caller must reassemble into a spill-backed
+    /// [`crate::shard::TensorStore`] rather than host RAM.
+    pub spill: bool,
+    /// The per-shard byte bound the planner solved for.
+    pub per_shard_budget: usize,
+}
+
+impl ShardPlan {
+    /// Bytes of the full `bins×h×w` tensor.
+    pub fn tensor_nbytes(&self) -> usize {
+        self.bins * self.h * self.w * 4
+    }
+
+    /// Largest single shard in bytes.
+    pub fn max_shard_nbytes(&self) -> usize {
+        self.shards.iter().map(|s| s.nbytes(self.w)).max().unwrap_or(0)
+    }
+
+    /// Row strips per bin group.
+    pub fn strips_per_group(&self) -> usize {
+        self.h.div_ceil(self.strip_rows)
+    }
+
+    /// Predict per-shard costs with the §4.6 models for `card`.
+    pub fn predict(&self, card: Card) -> Vec<ShardCost> {
+        let pcie = PcieModel::for_card(card);
+        let bw = device_mem_bandwidth(card);
+        let passes = Strategy::WfTis.tensor_passes() as f64;
+        self.shards
+            .iter()
+            .map(|s| {
+                let bytes = s.nbytes(self.w) as f64;
+                let kernel = Duration::from_secs_f64(passes * bytes / bw)
+                    + launch_overhead(Strategy::WfTis, s.nrows, self.w, s.nbins, 64);
+                let transfer =
+                    pcie.image_upload(s.nrows, self.w) + pcie.tensor_download(s.nbins, s.nrows, self.w);
+                ShardCost { kernel, transfer }
+            })
+            .collect()
+    }
+
+    /// Aggregate the per-shard prediction into a makespan estimate.
+    pub fn predict_total(&self, card: Card, workers: usize) -> PlanCost {
+        let per = self.predict(card);
+        let serial_kernel: Duration = per.iter().map(|c| c.kernel).sum();
+        let serial_transfer: Duration = per.iter().map(|c| c.transfer).sum();
+        let spread = Duration::from_secs_f64(serial_kernel.as_secs_f64() / workers.max(1) as f64);
+        PlanCost { serial_kernel, serial_transfer, wall: spread.max(serial_transfer) }
+    }
+}
+
+/// The planner: policy in, deterministic plan out.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardPlanner {
+    pub policy: ShardPolicy,
+}
+
+impl ShardPlanner {
+    pub fn new(policy: ShardPolicy) -> ShardPlanner {
+        ShardPlanner { policy }
+    }
+
+    /// Partition a `bins×h×w` request.
+    ///
+    /// Budget discipline: a frame's resident bytes are `workers` shards
+    /// computing, up to `workers` more parked in the executor's bounded
+    /// completion channel, a near-FIFO reorder window (≈ `workers`) in
+    /// the reassembler, plus carry rows and one strip of commit
+    /// scratch.  Sizing each shard to `memory_budget / (4·workers + 4)`
+    /// leaves that whole envelope inside `memory_budget`; the
+    /// reassembler's peak-resident counter asserts it
+    /// (`tests/shard_property.rs`).
+    pub fn plan(&self, bins: usize, h: usize, w: usize) -> ShardPlan {
+        assert!(bins >= 1 && h >= 1 && w >= 1, "degenerate request");
+        let p = self.policy;
+        let workers = p.workers.max(1);
+        let tensor = bins * h * w * 4;
+        let spill = tensor > p.memory_budget;
+        let slack = 4 * workers + 4;
+        // Never plan below one row of one bin — the indivisible unit.
+        let per_shard_budget = (p.memory_budget / slack).max(w * 4);
+        let plane = h * w * 4;
+
+        // Bin axis first: the largest group whose partial fits the
+        // per-shard budget, capped by policy and by the bin count.
+        let by_budget = (per_shard_budget / plane).max(1).min(bins);
+        let mut group = p.max_group.max(1).min(by_budget);
+        // Row axis: forced when one plane alone busts the budget …
+        let mut strip_rows = h;
+        if plane > per_shard_budget {
+            group = 1;
+            strip_rows = (per_shard_budget / (w * 4)).clamp(1, h);
+        }
+        // … or adaptive, when the bin axis alone leaves workers idle.
+        let min_shards = if p.min_shards == 0 { workers } else { p.min_shards };
+        let n_groups = bins.div_ceil(group);
+        if n_groups * h.div_ceil(strip_rows) < min_shards {
+            let want_strips = min_shards.div_ceil(n_groups).min(h);
+            strip_rows = strip_rows.min(h.div_ceil(want_strips)).max(1);
+        }
+
+        // Issue order: bin-major, strips top-to-bottom within a group
+        // (reassembly carries flow downward; spilled planes stream out
+        // in Fig. 2 order).
+        let mut shards = Vec::with_capacity(bins.div_ceil(group) * h.div_ceil(strip_rows));
+        let mut shard_id = 0;
+        let mut bin0 = 0;
+        while bin0 < bins {
+            let nbins = group.min(bins - bin0);
+            let mut row0 = 0;
+            while row0 < h {
+                let nrows = strip_rows.min(h - row0);
+                shards.push(ShardSpec { shard_id, bin0, nbins, row0, nrows });
+                shard_id += 1;
+                row0 += nrows;
+            }
+            bin0 += nbins;
+        }
+        ShardPlan { bins, h, w, shards, group, strip_rows, spill, per_shard_budget }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planner(budget: usize, workers: usize) -> ShardPlanner {
+        ShardPlanner::new(ShardPolicy {
+            memory_budget: budget,
+            workers,
+            ..ShardPolicy::default()
+        })
+    }
+
+    /// Plans must tile the tensor exactly: every (bin, row) covered
+    /// once, ids dense in issue order.
+    fn assert_exact_cover(plan: &ShardPlan) {
+        let mut cover = vec![0u32; plan.bins * plan.h];
+        for (i, s) in plan.shards.iter().enumerate() {
+            assert_eq!(s.shard_id, i, "ids must be dense in issue order");
+            assert!(s.nbins >= 1 && s.nrows >= 1);
+            assert!(s.bin0 + s.nbins <= plan.bins && s.row0 + s.nrows <= plan.h);
+            for b in s.bin0..s.bin0 + s.nbins {
+                for r in s.row0..s.row0 + s.nrows {
+                    cover[b * plan.h + r] += 1;
+                }
+            }
+        }
+        assert!(cover.iter().all(|&c| c == 1), "every (bin, row) exactly once");
+    }
+
+    #[test]
+    fn small_request_covers_and_oversubscribes() {
+        let plan = planner(1 << 30, 4).plan(8, 64, 64);
+        assert_exact_cover(&plan);
+        assert!(!plan.spill);
+        assert!(plan.shards.len() >= 4, "at least one shard per worker");
+    }
+
+    #[test]
+    fn bin_groups_respect_budget() {
+        // 32 bins × 128×128 plane = 64 KiB/plane; budget 1 MiB over 4
+        // workers → per-shard ≤ 1 MiB/20 ≈ 52 KiB → 1-bin row strips.
+        let plan = planner(1 << 20, 4).plan(32, 128, 128);
+        assert_exact_cover(&plan);
+        assert!(plan.max_shard_nbytes() <= plan.per_shard_budget);
+    }
+
+    #[test]
+    fn oversized_plane_forces_row_strips() {
+        // One 256×256 plane = 256 KiB > per-shard slice of a 1 MiB
+        // budget → strips.
+        let plan = planner(1 << 20, 4).plan(128, 256, 256);
+        assert_exact_cover(&plan);
+        assert!(plan.spill, "tensor exceeds budget");
+        assert_eq!(plan.group, 1);
+        assert!(plan.strip_rows < 256);
+        assert!(plan.max_shard_nbytes() <= plan.per_shard_budget);
+    }
+
+    #[test]
+    fn degenerate_budget_still_plans_whole_rows() {
+        let plan = planner(16, 2).plan(4, 8, 8);
+        assert_exact_cover(&plan);
+        assert_eq!(plan.strip_rows, 1, "floor is one row per shard");
+    }
+
+    #[test]
+    fn uneven_bins_and_rows_tile_exactly() {
+        let mut p = planner(1 << 14, 3);
+        p.policy.max_group = 4;
+        let plan = p.plan(7, 33, 29);
+        assert_exact_cover(&plan);
+    }
+
+    #[test]
+    fn prediction_is_positive_and_scales() {
+        let plan = planner(1 << 26, 4).plan(128, 1024, 1024);
+        let costs = plan.predict(Card::Gtx480);
+        assert_eq!(costs.len(), plan.shards.len());
+        assert!(costs.iter().all(|c| c.kernel > Duration::ZERO && c.transfer > Duration::ZERO));
+        let total4 = plan.predict_total(Card::Gtx480, 4);
+        let total1 = plan.predict_total(Card::Gtx480, 1);
+        assert!(total4.wall <= total1.wall, "more workers can't predict slower");
+        assert_eq!(total4.serial_kernel, total1.serial_kernel);
+    }
+
+    #[test]
+    fn paper_scale_configuration_plans_under_bounded_budget() {
+        // §4.6 / Fig. 18: 64 MB image (8k×8k) × 128 bins = 32 GB tensor
+        // through a 256 MiB host budget.
+        let plan = planner(256 << 20, 4).plan(128, 8192, 8192);
+        assert!(plan.spill);
+        assert!(plan.max_shard_nbytes() <= plan.per_shard_budget);
+        assert_exact_cover(&plan);
+    }
+}

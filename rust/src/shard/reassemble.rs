@@ -1,0 +1,389 @@
+//! `Reassembler` — streaming, order-tolerant reassembly of tagged
+//! shard outputs.
+//!
+//! Shards arrive tagged `(frame_id, shard_id)` in *completion* order
+//! (the executor interleaves frames and workers finish when they
+//! finish).  Two facts make streaming reassembly possible without ever
+//! holding the full tensor:
+//!
+//! 1. **Bin ranges are independent** — a bin-group shard lands in its
+//!    own planes, so groups commit in any relative order.
+//! 2. **Row strips compose by a per-column carry** — a strip's local
+//!    integral starts from zero at its top row, and the exact full
+//!    value is `local(b, r, c) + H(b, row0−1, c)` (Algorithm 1's
+//!    recurrence only couples rows through the previous row).  The
+//!    carry row is the last committed row of the strip above, so
+//!    strips of one group commit top-to-bottom; an early-arriving
+//!    lower strip is parked in a reorder buffer until its predecessor
+//!    lands.
+//!
+//! Committed rows stream into a [`ShardSink`]: host RAM
+//! ([`RamSink`]) when the tensor fits, or the spill-backed
+//! [`TensorStore`](crate::shard::TensorStore) when it does not.  Every
+//! buffered byte (parked shards, carry rows, the commit scratch) is
+//! charged to the frame's [`ResidentGauge`](crate::shard::ResidentGauge),
+//! so "peak resident tensor bytes ≤ budget" is a counter assertion,
+//! not a hope (`tests/shard_property.rs`).
+
+use crate::coordinator::frame_pool::FramePool;
+use crate::histogram::types::IntegralHistogram;
+use crate::shard::planner::ShardPlan;
+use crate::shard::{ResidentGauge, TaggedShard};
+use crate::shard::store::TensorStore;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Where carry-corrected rows land.  `bin`/`row0` are absolute tensor
+/// coordinates; `rows` is a whole number of `w`-length rows.
+pub trait ShardSink {
+    fn commit_rows(&mut self, bin: usize, row0: usize, rows: &[f32]) -> Result<()>;
+}
+
+/// Sink writing into a caller tensor in RAM.
+pub struct RamSink<'a> {
+    out: &'a mut IntegralHistogram,
+}
+
+impl<'a> RamSink<'a> {
+    /// Wrap `out`, resizing its (possibly recycled) storage to
+    /// `bins×h×w` without zeroing — every element is committed exactly
+    /// once, same discipline as
+    /// [`ScanEngine::compute_into`](crate::histogram::engine::ScanEngine::compute_into).
+    pub fn new(out: &'a mut IntegralHistogram, bins: usize, h: usize, w: usize) -> RamSink<'a> {
+        out.bins = bins;
+        out.h = h;
+        out.w = w;
+        let n = bins * h * w;
+        if out.data.len() != n {
+            out.data.resize(n, 0.0);
+        }
+        RamSink { out }
+    }
+}
+
+impl ShardSink for RamSink<'_> {
+    fn commit_rows(&mut self, bin: usize, row0: usize, rows: &[f32]) -> Result<()> {
+        let w = self.out.w;
+        if bin >= self.out.bins || rows.len() % w != 0 || row0 * w + rows.len() > self.out.h * w {
+            return Err(anyhow!("commit outside tensor: bin {bin} row0 {row0} len {}", rows.len()));
+        }
+        let dst = (bin * self.out.h + row0) * w;
+        self.out.data[dst..dst + rows.len()].copy_from_slice(rows);
+        Ok(())
+    }
+}
+
+impl ShardSink for TensorStore {
+    fn commit_rows(&mut self, bin: usize, row0: usize, rows: &[f32]) -> Result<()> {
+        TensorStore::write_rows(self, bin, row0, rows)
+    }
+}
+
+/// Per-bin-group progress: the next committable row and the carry row
+/// (absolute integral at `next_row − 1`, one `w` vector per bin).
+struct GroupState {
+    bin0: usize,
+    nbins: usize,
+    next_row: usize,
+    /// `nbins×w` once a non-final strip committed; dropped at group end.
+    carry: Vec<f32>,
+}
+
+/// Streaming reassembler for one frame's plan.
+pub struct Reassembler {
+    h: usize,
+    w: usize,
+    groups: Vec<GroupState>,
+    /// Reorder buffer: `(group, row0) → early shard`.
+    parked: HashMap<(usize, usize), TaggedShard>,
+    /// Commit scratch (one strip of one bin, carry-corrected).
+    scratch: Vec<f32>,
+    /// Shards accepted so far.
+    accepted: usize,
+    expected: usize,
+    /// Partial-tensor storage recycles here after commit.
+    pool: Option<Arc<FramePool>>,
+    gauge: Arc<ResidentGauge>,
+    /// Bytes currently charged for carries + scratch (so drop can
+    /// settle the gauge exactly).
+    charged_state: usize,
+}
+
+impl Reassembler {
+    pub fn new(plan: &ShardPlan, pool: Option<Arc<FramePool>>, gauge: Arc<ResidentGauge>) -> Reassembler {
+        let mut groups = Vec::new();
+        let mut bin0 = 0;
+        while bin0 < plan.bins {
+            let nbins = plan.group.min(plan.bins - bin0);
+            groups.push(GroupState { bin0, nbins, next_row: 0, carry: Vec::new() });
+            bin0 += nbins;
+        }
+        Reassembler {
+            h: plan.h,
+            w: plan.w,
+            groups,
+            parked: HashMap::new(),
+            scratch: Vec::new(),
+            accepted: 0,
+            expected: plan.shards.len(),
+            pool,
+            gauge,
+            charged_state: 0,
+        }
+    }
+
+    /// All shards accepted and committed.
+    pub fn finished(&self) -> bool {
+        self.accepted == self.expected
+            && self.parked.is_empty()
+            && self.groups.iter().all(|g| g.next_row == self.h)
+    }
+
+    /// Shards parked in the reorder buffer right now.
+    pub fn parked(&self) -> usize {
+        self.parked.len()
+    }
+
+    fn group_index(&self, bin0: usize) -> Result<usize> {
+        self.groups
+            .iter()
+            .position(|g| g.bin0 == bin0)
+            .ok_or_else(|| anyhow!("shard bin0 {bin0} matches no planned group"))
+    }
+
+    /// Accept one tagged shard, committing it (and any unparked
+    /// successors) to `sink` when its predecessors have landed.
+    pub fn accept(&mut self, shard: TaggedShard, sink: &mut dyn ShardSink) -> Result<()> {
+        let g = self.group_index(shard.spec.bin0)?;
+        if shard.spec.nbins != self.groups[g].nbins
+            || shard.partial.data.len() < shard.spec.nbins * shard.spec.nrows * self.w
+        {
+            return Err(anyhow!("shard {:?} does not match its planned group", shard.spec));
+        }
+        self.accepted += 1;
+        if shard.spec.row0 != self.groups[g].next_row {
+            if shard.spec.row0 < self.groups[g].next_row
+                || self.parked.contains_key(&(g, shard.spec.row0))
+            {
+                return Err(anyhow!("duplicate commit for rows at {}", shard.spec.row0));
+            }
+            self.parked.insert((g, shard.spec.row0), shard);
+            return Ok(());
+        }
+        self.commit(g, shard, sink)?;
+        // Unpark successors now unblocked.
+        while let Some(next) = self.parked.remove(&(g, self.groups[g].next_row)) {
+            self.commit(g, next, sink)?;
+        }
+        Ok(())
+    }
+
+    /// Commit one in-order strip: add the group carry column-wise,
+    /// stream rows to the sink, refresh the carry from the last row.
+    fn commit(&mut self, g: usize, shard: TaggedShard, sink: &mut dyn ShardSink) -> Result<()> {
+        let (w, h) = (self.w, self.h);
+        let spec = shard.spec;
+        let (nrows, nbins) = (spec.nrows, spec.nbins);
+        let strip = nrows * w;
+        let last_strip = spec.row0 + nrows == h;
+        let group = &mut self.groups[g];
+        let has_carry = !group.carry.is_empty();
+        if !has_carry && !last_strip {
+            // First of several strips: allocate (and charge) the carry.
+            group.carry.resize(nbins * w, 0.0);
+            let bytes = nbins * w * 4;
+            self.gauge.add(bytes);
+            self.charged_state += bytes;
+        }
+        if has_carry && self.scratch.len() < strip {
+            let grow = (strip - self.scratch.len()) * 4;
+            self.scratch.resize(strip, 0.0);
+            self.gauge.add(grow);
+            self.charged_state += grow;
+        }
+        let group = &mut self.groups[g];
+        for b in 0..nbins {
+            let local = &shard.partial.data[b * strip..(b + 1) * strip];
+            let rows: &[f32] = if has_carry {
+                let carry = &group.carry[b * w..(b + 1) * w];
+                for r in 0..nrows {
+                    for c in 0..w {
+                        self.scratch[r * w + c] = local[r * w + c] + carry[c];
+                    }
+                }
+                &self.scratch[..strip]
+            } else {
+                local
+            };
+            sink.commit_rows(spec.bin0 + b, spec.row0, rows)?;
+            if !last_strip {
+                if group.carry.is_empty() {
+                    // has_carry was false but more strips follow; the
+                    // allocation above guarantees this is unreachable —
+                    // keep the invariant explicit.
+                    return Err(anyhow!("carry missing for non-final strip"));
+                }
+                group.carry[b * w..(b + 1) * w].copy_from_slice(&rows[(nrows - 1) * w..]);
+            }
+        }
+        group.next_row = spec.row0 + nrows;
+        if last_strip && !group.carry.is_empty() {
+            let bytes = group.carry.len() * 4;
+            group.carry = Vec::new();
+            self.gauge.sub(bytes);
+            self.charged_state -= bytes;
+        }
+        // Recycle the partial and settle its resident charge (the
+        // executor charged it at acquisition).
+        let bytes = shard.partial.nbytes();
+        if let Some(pool) = &self.pool {
+            pool.release(shard.partial);
+        }
+        self.gauge.sub(bytes);
+        Ok(())
+    }
+}
+
+impl Drop for Reassembler {
+    fn drop(&mut self) {
+        // Settle parked partials (abandoned reassembly) and state.
+        let mut parked_bytes = 0;
+        for (_, s) in self.parked.drain() {
+            parked_bytes += s.partial.nbytes();
+            if let Some(pool) = &self.pool {
+                pool.release(s.partial);
+            }
+        }
+        self.gauge.sub(parked_bytes + self.charged_state);
+        self.charged_state = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::histogram::types::BinnedImage;
+    use crate::shard::planner::{ShardPlanner, ShardPolicy, ShardSpec};
+    use crate::util::prng::Xoshiro256;
+    use std::time::Duration;
+
+    fn random_image(h: usize, w: usize, bins: usize, seed: u64) -> BinnedImage {
+        let mut rng = Xoshiro256::new(seed);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        BinnedImage::new(h, w, bins, data)
+    }
+
+    /// Compute one shard's local partial the way the executor does:
+    /// slice rows, shift bins, run the sequential arbiter.
+    fn local_partial(img: &BinnedImage, spec: ShardSpec) -> IntegralHistogram {
+        let w = img.w;
+        let mut data = Vec::with_capacity(spec.nrows * w);
+        for r in spec.row0..spec.row0 + spec.nrows {
+            for c in 0..w {
+                let v = img.at(r, c);
+                let v = v - spec.bin0 as i32;
+                data.push(if v >= 0 && (v as usize) < spec.nbins { v } else { -1 });
+            }
+        }
+        let sub = BinnedImage::new(spec.nrows, w, spec.nbins, data);
+        integral_histogram_seq(&sub)
+    }
+
+    fn tagged(img: &BinnedImage, spec: ShardSpec) -> TaggedShard {
+        TaggedShard {
+            frame_id: 0,
+            spec,
+            partial: local_partial(img, spec),
+            worker: 0,
+            kernel_time: Duration::ZERO,
+        }
+    }
+
+    fn reassemble_in_order(img: &BinnedImage, policy: ShardPolicy, order: &[usize]) -> IntegralHistogram {
+        let plan = ShardPlanner::new(policy).plan(img.bins, img.h, img.w);
+        let gauge = Arc::new(ResidentGauge::default());
+        let mut out = IntegralHistogram::zeros(0, 0, 0);
+        {
+            let mut reasm = Reassembler::new(&plan, None, Arc::clone(&gauge));
+            let mut sink = RamSink::new(&mut out, plan.bins, plan.h, plan.w);
+            let ids: Vec<usize> = if order.is_empty() {
+                (0..plan.shards.len()).collect()
+            } else {
+                order.to_vec()
+            };
+            assert_eq!(ids.len(), plan.shards.len(), "order must be a permutation");
+            for &i in &ids {
+                let shard = tagged(img, plan.shards[i]);
+                gauge.add(shard.partial.nbytes());
+                reasm.accept(shard, &mut sink).expect("accept");
+            }
+            assert!(reasm.finished(), "all shards must commit");
+        }
+        assert_eq!(gauge.current(), 0, "all charges settled once the reassembler drops");
+        out
+    }
+
+    #[test]
+    fn strips_compose_bit_identically_in_order() {
+        let img = random_image(37, 23, 6, 1);
+        let policy = ShardPolicy { memory_budget: 8 << 10, workers: 3, ..ShardPolicy::default() };
+        let got = reassemble_in_order(&img, policy, &[]);
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&got), 0.0);
+    }
+
+    #[test]
+    fn out_of_order_arrival_parks_and_composes() {
+        let img = random_image(29, 17, 4, 9);
+        let policy = ShardPolicy { memory_budget: 4 << 10, workers: 2, ..ShardPolicy::default() };
+        let plan = ShardPlanner::new(policy).plan(4, 29, 17);
+        assert!(plan.shards.len() >= 4, "want a multi-strip plan");
+        // Fully reversed completion order: maximal parking.
+        let order: Vec<usize> = (0..plan.shards.len()).rev().collect();
+        let got = reassemble_in_order(&img, policy, &order);
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&got), 0.0);
+    }
+
+    #[test]
+    fn shuffled_arrival_composes() {
+        let img = random_image(41, 19, 5, 4);
+        let policy = ShardPolicy { memory_budget: 6 << 10, workers: 4, ..ShardPolicy::default() };
+        let plan = ShardPlanner::new(policy).plan(5, 41, 19);
+        let mut order: Vec<usize> = (0..plan.shards.len()).collect();
+        let mut rng = Xoshiro256::new(77);
+        for i in (1..order.len()).rev() {
+            let j = rng.range(0, i + 1);
+            order.swap(i, j);
+        }
+        let got = reassemble_in_order(&img, policy, &order);
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&got), 0.0);
+    }
+
+    #[test]
+    fn duplicate_and_alien_shards_are_rejected() {
+        let img = random_image(8, 8, 2, 2);
+        let policy = ShardPolicy { memory_budget: 1 << 20, workers: 1, min_shards: 1, ..ShardPolicy::default() };
+        let plan = ShardPlanner::new(policy).plan(2, 8, 8);
+        let gauge = Arc::new(ResidentGauge::default());
+        let mut reasm = Reassembler::new(&plan, None, gauge);
+        let mut out = IntegralHistogram::zeros(0, 0, 0);
+        let mut sink = RamSink::new(&mut out, 2, 8, 8);
+        let first = plan.shards[0];
+        reasm.accept(tagged(&img, first), &mut sink).expect("first commit");
+        let dup = tagged(&img, first);
+        assert!(reasm.accept(dup, &mut sink).is_err(), "duplicate must be rejected");
+        let alien = TaggedShard {
+            frame_id: 0,
+            spec: ShardSpec { shard_id: 99, bin0: 1, nbins: 7, row0: 0, nrows: 8 },
+            partial: IntegralHistogram::zeros(7, 8, 8),
+            worker: 0,
+            kernel_time: Duration::ZERO,
+        };
+        assert!(reasm.accept(alien, &mut sink).is_err(), "alien group must be rejected");
+    }
+}

@@ -1,0 +1,397 @@
+//! `TensorStore` — a spill-backed integral-histogram tensor.
+//!
+//! The §4.6 configuration exists precisely because the output tensor —
+//! not the kernel — is the scaling bottleneck (the memory-footprint
+//! argument of "Memory-Efficient Design Strategy for a Parallel
+//! Embedded Integral Image Computation Engine", PAPERS.md): a 64 MB
+//! image at 128 bins is a 32 GB tensor no single device *or host* is
+//! guaranteed to hold.  The store keeps that tensor on disk in the
+//! exact Fig. 2 layout (`b×h×w` bin-major, row-major planes, one flat
+//! f32 buffer) and answers the two access patterns the serving layer
+//! needs without ever materializing it in RAM:
+//!
+//! * **streaming writes** — the [`crate::shard::Reassembler`] commits
+//!   carry-corrected row strips; rows of one bin plane are contiguous
+//!   in the Fig. 2 layout, so each commit is a single sequential write;
+//! * **O(1) box-histogram reads** — [`TensorStore::query`] runs Eq. 2
+//!   with four 4-byte corner reads per bin, byte-for-byte the same
+//!   values and the same arithmetic order as
+//!   [`crate::histogram::region::region_histogram`], so results are
+//!   bit-identical to the in-RAM path (property-tested in
+//!   `tests/temporal_property.rs`).
+//!
+//! Resident cost is a file handle plus transient per-call scratch; the
+//! `bytes_written` / `corner_reads` counters make the out-of-core
+//! claim observable.  Stores created with [`TensorStore::spill`] are
+//! temp files deleted on drop; [`TensorStore::keep`] detaches them.
+
+use crate::histogram::region::Rect;
+use crate::histogram::types::IntegralHistogram;
+use anyhow::{anyhow, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic suffix so concurrent spills in one process never collide.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A `bins×h×w` f32 tensor stored in a file in Fig. 2 layout.
+pub struct TensorStore {
+    bins: usize,
+    h: usize,
+    w: usize,
+    file: File,
+    /// Serializes seek-based I/O on platforms without positioned
+    /// reads/writes; on unix every access is a `pread`/`pwrite`, so
+    /// readers never contend.
+    #[cfg(not(unix))]
+    io_lock: Mutex<()>,
+    /// Reusable f32→LE byte scratch for commits: persistent, at most
+    /// one strip large, so commits allocate nothing in steady state
+    /// (it is the one store-side resident buffer; the planner's slack
+    /// envelope covers it).
+    write_scratch: Mutex<Vec<u8>>,
+    path: PathBuf,
+    delete_on_drop: bool,
+    bytes_written: AtomicUsize,
+    corner_reads: AtomicUsize,
+}
+
+impl std::fmt::Debug for TensorStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TensorStore")
+            .field("bins", &self.bins)
+            .field("h", &self.h)
+            .field("w", &self.w)
+            .field("path", &self.path)
+            .finish()
+    }
+}
+
+impl TensorStore {
+    /// Create (truncating) a store at `path` sized for `bins×h×w`.
+    pub fn create(path: impl AsRef<Path>, bins: usize, h: usize, w: usize) -> Result<TensorStore> {
+        assert!(bins >= 1 && h >= 1 && w >= 1, "degenerate tensor");
+        let path = path.as_ref().to_path_buf();
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("create tensor store {}", path.display()))?;
+        file.set_len((bins * h * w * 4) as u64).context("size tensor store")?;
+        Ok(TensorStore {
+            bins,
+            h,
+            w,
+            file,
+            #[cfg(not(unix))]
+            io_lock: Mutex::new(()),
+            write_scratch: Mutex::new(Vec::new()),
+            path,
+            delete_on_drop: false,
+            bytes_written: AtomicUsize::new(0),
+            corner_reads: AtomicUsize::new(0),
+        })
+    }
+
+    /// Create a store on a fresh temp file, deleted when the store
+    /// drops (the out-of-core serving default).
+    pub fn spill(bins: usize, h: usize, w: usize) -> Result<TensorStore> {
+        let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("inthist-spill-{}-{seq}.bin", std::process::id()));
+        let mut store = TensorStore::create(path, bins, h, w)?;
+        store.delete_on_drop = true;
+        Ok(store)
+    }
+
+    pub fn bins(&self) -> usize {
+        self.bins
+    }
+
+    pub fn h(&self) -> usize {
+        self.h
+    }
+
+    pub fn w(&self) -> usize {
+        self.w
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// On-disk size of the tensor (what RAM is *not* holding).
+    pub fn nbytes(&self) -> usize {
+        self.bins * self.h * self.w * 4
+    }
+
+    /// Total bytes committed through [`Self::write_rows`].
+    pub fn bytes_written(&self) -> usize {
+        self.bytes_written.load(Ordering::Relaxed)
+    }
+
+    /// Corner values fetched by queries (4 per bin per rect).
+    pub fn corner_reads(&self) -> usize {
+        self.corner_reads.load(Ordering::Relaxed)
+    }
+
+    /// Detach the file from drop-deletion and return its path.
+    pub fn keep(mut self) -> PathBuf {
+        self.delete_on_drop = false;
+        self.path.clone()
+    }
+
+    #[inline]
+    fn offset(&self, b: usize, r: usize, c: usize) -> u64 {
+        (((b * self.h + r) * self.w + c) * 4) as u64
+    }
+
+    /// Positioned read: `pread` on unix (no lock, no cursor), a
+    /// lock-guarded seek+read elsewhere.
+    fn read_at_off(&self, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(buf, off)
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let _g = self.io_lock.lock().expect("store io lock");
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(off))?;
+            f.read_exact(buf)
+        }
+    }
+
+    /// Positioned write: `pwrite` on unix, lock-guarded seek+write
+    /// elsewhere.
+    fn write_at_off(&self, buf: &[u8], off: u64) -> std::io::Result<()> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.write_all_at(buf, off)
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Seek, SeekFrom, Write};
+            let _g = self.io_lock.lock().expect("store io lock");
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(off))?;
+            f.write_all(buf)
+        }
+    }
+
+    /// Commit `rows` (a whole number of carry-corrected rows, absolute
+    /// coordinates) of bin `bin` starting at image row `row0`.  Rows of
+    /// one plane are contiguous in the Fig. 2 layout, so this is one
+    /// sequential write.
+    pub fn write_rows(&self, bin: usize, row0: usize, rows: &[f32]) -> Result<()> {
+        if bin >= self.bins || rows.is_empty() || rows.len() % self.w != 0 {
+            return Err(anyhow!(
+                "bad commit: bin {bin}/{} rows len {} (w={})",
+                self.bins,
+                rows.len(),
+                self.w
+            ));
+        }
+        let nrows = rows.len() / self.w;
+        if row0 + nrows > self.h {
+            return Err(anyhow!("commit rows {row0}+{nrows} past h={}", self.h));
+        }
+        let mut bytes = self.write_scratch.lock().expect("scratch lock");
+        bytes.clear();
+        bytes.reserve(rows.len() * 4);
+        for &v in rows.iter() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write_at_off(&bytes, self.offset(bin, row0, 0))?;
+        self.bytes_written.fetch_add(bytes.len(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Read `nrows` rows of bin `bin` starting at `row0` into `out`
+    /// (length `nrows×w`).
+    pub fn read_rows(&self, bin: usize, row0: usize, nrows: usize, out: &mut [f32]) -> Result<()> {
+        assert_eq!(out.len(), nrows * self.w, "output length mismatch");
+        if bin >= self.bins || row0 + nrows > self.h {
+            return Err(anyhow!("read outside tensor"));
+        }
+        let mut bytes = vec![0u8; out.len() * 4];
+        self.read_at_off(&mut bytes, self.offset(bin, row0, 0))?;
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(())
+    }
+
+    /// One corner value — a single positioned read; on unix concurrent
+    /// queries never contend on a lock.
+    fn corner(&self, b: usize, r: usize, c: usize) -> Result<f32> {
+        let mut buf = [0u8; 4];
+        self.read_at_off(&mut buf, self.offset(b, r, c))?;
+        self.corner_reads.fetch_add(1, Ordering::Relaxed);
+        Ok(f32::from_le_bytes(buf))
+    }
+
+    /// Eq. 2 against the spilled tensor: 4 corner reads per bin, the
+    /// same values in the same arithmetic order as
+    /// [`crate::histogram::region::region_histogram`] — bit-identical
+    /// results without materializing any plane.
+    pub fn query(&self, rect: Rect) -> Result<Vec<f32>> {
+        if !rect.fits(self.h, self.w) {
+            return Err(anyhow!("rect {rect:?} outside {}x{}", self.h, self.w));
+        }
+        let (r0, c0, r1, c1) = (rect.r0, rect.c0, rect.r1, rect.c1);
+        let mut out = Vec::with_capacity(self.bins);
+        for b in 0..self.bins {
+            let mut v = self.corner(b, r1, c1)?;
+            if r0 > 0 {
+                v -= self.corner(b, r0 - 1, c1)?;
+            }
+            if c0 > 0 {
+                v -= self.corner(b, r1, c0 - 1)?;
+            }
+            if r0 > 0 && c0 > 0 {
+                v += self.corner(b, r0 - 1, c0 - 1)?;
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Batched [`Self::query`].
+    pub fn query_batch(&self, rects: &[Rect]) -> Result<Vec<Vec<f32>>> {
+        rects.iter().map(|&r| self.query(r)).collect()
+    }
+
+    /// Materialize the whole tensor in RAM (tests / small tensors —
+    /// defeats the point otherwise).
+    pub fn to_histogram(&self) -> Result<IntegralHistogram> {
+        let mut ih = IntegralHistogram::zeros(self.bins, self.h, self.w);
+        let plane = self.h * self.w;
+        for b in 0..self.bins {
+            let dst = &mut ih.data[b * plane..(b + 1) * plane];
+            self.read_rows(b, 0, self.h, dst)?;
+        }
+        Ok(ih)
+    }
+
+    /// Force written planes to stable storage (`fdatasync`) — call
+    /// before handing a [`Self::keep`]-detached file to another
+    /// process.
+    pub fn flush(&self) -> Result<()> {
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+impl Drop for TensorStore {
+    fn drop(&mut self) {
+        if self.delete_on_drop {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::region::region_histogram;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::histogram::types::BinnedImage;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_image(h: usize, w: usize, bins: usize, seed: u64) -> BinnedImage {
+        let mut rng = Xoshiro256::new(seed);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        BinnedImage::new(h, w, bins, data)
+    }
+
+    /// Spill a computed tensor plane-by-plane (the reassembler's job in
+    /// production; done by hand here to isolate the store).
+    fn spill_of(ih: &IntegralHistogram) -> TensorStore {
+        let store = TensorStore::spill(ih.bins, ih.h, ih.w).expect("spill");
+        for b in 0..ih.bins {
+            store.write_rows(b, 0, ih.plane(b)).expect("write plane");
+        }
+        store
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let img = random_image(19, 27, 6, 3);
+        let ih = integral_histogram_seq(&img);
+        let store = spill_of(&ih);
+        assert_eq!(store.bytes_written(), ih.nbytes());
+        let back = store.to_histogram().expect("read back");
+        assert_eq!(ih.max_abs_diff(&back), 0.0);
+    }
+
+    #[test]
+    fn queries_match_in_ram_region_lookups() {
+        let img = random_image(23, 31, 5, 11);
+        let ih = integral_histogram_seq(&img);
+        let store = spill_of(&ih);
+        let mut rng = Xoshiro256::new(5);
+        for _ in 0..40 {
+            let r0 = rng.range(0, 23);
+            let c0 = rng.range(0, 31);
+            let r1 = rng.range(r0, 23);
+            let c1 = rng.range(c0, 31);
+            let rect = Rect::new(r0, c0, r1, c1);
+            assert_eq!(store.query(rect).expect("query"), region_histogram(&ih, rect), "{rect:?}");
+        }
+        assert!(store.corner_reads() > 0);
+    }
+
+    #[test]
+    fn partial_row_commits_compose() {
+        let img = random_image(16, 8, 3, 7);
+        let ih = integral_histogram_seq(&img);
+        let store = TensorStore::spill(3, 16, 8).expect("spill");
+        // Commit each plane as two strips in reverse order — offsets,
+        // not call order, determine layout.
+        for b in 0..3 {
+            let plane = ih.plane(b);
+            store.write_rows(b, 10, &plane[10 * 8..]).expect("bottom strip");
+            store.write_rows(b, 0, &plane[..10 * 8]).expect("top strip");
+        }
+        let back = store.to_histogram().expect("read back");
+        assert_eq!(ih.max_abs_diff(&back), 0.0);
+    }
+
+    #[test]
+    fn bad_commits_are_rejected() {
+        let store = TensorStore::spill(2, 4, 4).expect("spill");
+        assert!(store.write_rows(2, 0, &[0.0; 4]).is_err(), "bin out of range");
+        assert!(store.write_rows(0, 0, &[0.0; 3]).is_err(), "ragged rows");
+        assert!(store.write_rows(0, 3, &[0.0; 8]).is_err(), "past bottom");
+        assert!(store.query(Rect::new(0, 0, 4, 4)).is_err(), "rect outside");
+    }
+
+    #[test]
+    fn spill_file_is_deleted_on_drop() {
+        let store = TensorStore::spill(1, 2, 2).expect("spill");
+        let path = store.path().to_path_buf();
+        assert!(path.exists());
+        drop(store);
+        assert!(!path.exists(), "temp spill must be cleaned up");
+    }
+
+    #[test]
+    fn keep_detaches_the_file() {
+        let store = TensorStore::spill(1, 2, 2).expect("spill");
+        store.write_rows(0, 0, &[1.0, 2.0, 3.0, 4.0]).expect("write");
+        let path = store.keep();
+        assert!(path.exists(), "kept file must survive the drop");
+        let reopened = TensorStore::create(&path, 1, 2, 2).expect("recreate truncates");
+        drop(reopened);
+        let _ = std::fs::remove_file(&path);
+    }
+}

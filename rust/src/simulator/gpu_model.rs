@@ -13,11 +13,25 @@
 //!    occupancy-vs-block-size series can be regenerated.
 
 use crate::histogram::types::Strategy;
+use crate::simulator::pcie::Card;
 use std::time::Duration;
 
 /// Per-launch overhead of a CUDA kernel (driver + queueing), a widely
 /// measured ~5 µs on the Kepler/Maxwell generation.
 pub const LAUNCH_OVERHEAD: Duration = Duration::from_micros(5);
+
+/// Sustained global-memory bandwidth per card (bytes/second, effective
+/// ≈ 80% of the datasheet number).  With [`Strategy::tensor_passes`]
+/// this yields the §3.5 kernel-time lower bound the shard planner uses
+/// to cost a plan before running it: `kernel ≈ passes × bytes / bw`.
+pub fn device_mem_bandwidth(card: Card) -> f64 {
+    match card {
+        Card::TitanX => 270e9, // 336 GB/s datasheet
+        Card::K40c => 230e9,   // 288 GB/s
+        Card::C2070 => 115e9,  // 144 GB/s
+        Card::Gtx480 => 142e9, // 177 GB/s
+    }
+}
 
 /// Total launch overhead for a strategy on an `h×w`, `bins`-bin frame.
 pub fn launch_overhead(strategy: Strategy, h: usize, w: usize, bins: usize, tile: usize) -> Duration {
@@ -150,6 +164,16 @@ mod tests {
         // 64×64 tile fits the Kepler SMX at least twice
         let (resident, _) = occupancy(SmResources::kepler_smx(), d);
         assert!(resident >= 2);
+    }
+
+    #[test]
+    fn bandwidth_table_ordering() {
+        // Maxwell > Kepler > Fermi, all positive.
+        assert!(device_mem_bandwidth(Card::TitanX) > device_mem_bandwidth(Card::K40c));
+        assert!(device_mem_bandwidth(Card::K40c) > device_mem_bandwidth(Card::Gtx480));
+        for c in Card::ALL {
+            assert!(device_mem_bandwidth(c) > 1e10, "{}", c.name());
+        }
     }
 
     #[test]

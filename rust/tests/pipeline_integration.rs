@@ -119,7 +119,7 @@ fn task_queue_matches_direct_execution() {
     let image = Arc::new(video.frame(0).binned(32));
     let queue = BinTaskQueue::new(
         Arc::clone(&m),
-        TaskQueueConfig { workers: 2, group: 8, artifact: artifact.into() },
+        TaskQueueConfig { workers: 2, group: 8, artifact: artifact.into(), cpu_fallback: false },
     )
     .expect("queue");
     let (ih, report) = queue.compute(&image, 32).expect("grouped compute");
@@ -139,12 +139,12 @@ fn task_queue_rejects_mismatched_group() {
     }
     assert!(BinTaskQueue::new(
         Arc::clone(&m),
-        TaskQueueConfig { workers: 1, group: 16, artifact: artifact.into() },
+        TaskQueueConfig { workers: 1, group: 16, artifact: artifact.into(), cpu_fallback: false },
     )
     .is_err());
     let queue = BinTaskQueue::new(
         Arc::clone(&m),
-        TaskQueueConfig { workers: 1, group: 8, artifact: artifact.into() },
+        TaskQueueConfig { workers: 1, group: 8, artifact: artifact.into(), cpu_fallback: false },
     )
     .unwrap();
     let img = Arc::new(SyntheticVideo::new(512, 512, 1, 0).frame(0).binned(12));

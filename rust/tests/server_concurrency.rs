@@ -191,7 +191,7 @@ fn large_route_shares_the_front_door_under_concurrency() {
                 for i in 0..4 {
                     let t = (tid + 2 * i) % DISTINCT;
                     let img = video.frame(t).binned(BINS);
-                    // no group artifact offline => CPU serves, same door
+                    // the shared shard executor serves it, same door
                     let (ih, _) = server.compute(&img).expect("large-route compute");
                     assert_eq!(expected[t].max_abs_diff(&ih), 0.0);
                 }

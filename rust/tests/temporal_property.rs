@@ -1,0 +1,173 @@
+//! Dedicated coverage for the spatio-temporal integral histogram
+//! (`histogram/temporal.rs`: `box_histogram`, `stability`, `nbytes`)
+//! plus the cross-subsystem property the ISSUE names: `TensorStore`-
+//! served region queries are bit-identical to the in-RAM
+//! `region::query` path on adversarial shapes.
+
+use inthist::histogram::region::{region_histogram, Rect};
+use inthist::histogram::sequential::integral_histogram_seq;
+use inthist::histogram::temporal::TemporalIntegralHistogram;
+use inthist::histogram::types::BinnedImage;
+use inthist::shard::TensorStore;
+use inthist::util::prng::Xoshiro256;
+
+fn random_frames(n: usize, h: usize, w: usize, bins: usize, seed: u64) -> Vec<BinnedImage> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut data = vec![0i32; h * w];
+            rng.fill_bins(&mut data, bins as u32);
+            BinnedImage::new(h, w, bins, data)
+        })
+        .collect()
+}
+
+fn brute_box(frames: &[BinnedImage], bins: usize, t0: usize, t1: usize, rect: Rect) -> Vec<f32> {
+    let mut h = vec![0.0f32; bins];
+    for f in &frames[t0..=t1] {
+        for r in rect.r0..=rect.r1 {
+            for c in rect.c0..=rect.c1 {
+                let v = f.at(r, c);
+                if v >= 0 {
+                    h[v as usize] += 1.0;
+                }
+            }
+        }
+    }
+    h
+}
+
+/// `box_histogram` equals brute-force counting on degenerate and
+/// skewed geometries — single-frame windows, single-row/column images,
+/// one bin, window = whole sequence.
+#[test]
+fn box_histogram_matches_brute_force_on_adversarial_shapes() {
+    let cases: &[(usize, usize, usize, usize)] = &[
+        // (frames, h, w, bins)
+        (1, 1, 1, 1),
+        (2, 1, 31, 4),
+        (3, 31, 1, 4),
+        (5, 9, 13, 1),
+        (4, 12, 7, 16),
+        (8, 6, 6, 3),
+    ];
+    for (ci, &(nt, h, w, bins)) in cases.iter().enumerate() {
+        let frames = random_frames(nt, h, w, bins, 50 + ci as u64);
+        let tih = TemporalIntegralHistogram::build(&frames, bins);
+        let mut rng = Xoshiro256::new(9 + ci as u64);
+        for _ in 0..25 {
+            let t0 = rng.range(0, nt);
+            let t1 = rng.range(t0, nt);
+            let r0 = rng.range(0, h);
+            let r1 = rng.range(r0, h);
+            let c0 = rng.range(0, w);
+            let c1 = rng.range(c0, w);
+            let rect = Rect::new(r0, c0, r1, c1);
+            assert_eq!(
+                tih.box_histogram(t0, t1, rect),
+                brute_box(&frames, bins, t0, t1, rect),
+                "case {ci}: t {t0}..={t1} {rect:?}"
+            );
+        }
+    }
+}
+
+/// A sliding window over a constant-then-changing sequence: stability
+/// is 1 while the window sits in the constant prefix, and exactly the
+/// modal fraction once the window spans the change.
+#[test]
+fn stability_tracks_the_modal_fraction_of_a_window() {
+    let h = 6;
+    let mut frames: Vec<BinnedImage> = (0..4).map(|_| BinnedImage::new(h, h, 4, vec![1; h * h])).collect();
+    frames.extend((0..2).map(|_| BinnedImage::new(h, h, 4, vec![3; h * h])));
+    let tih = TemporalIntegralHistogram::build(&frames, 4);
+    let whole = Rect::new(0, 0, h - 1, h - 1);
+    assert_eq!(tih.stability(0, 3, whole), 1.0, "constant prefix is perfectly stable");
+    // Window of 3 frames: two of bin 1, one of bin 3 → modal 2/3.
+    let s = tih.stability(2, 4, whole);
+    assert!((s - 2.0 / 3.0).abs() < 1e-6, "got {s}");
+    // Fully inside the suffix: stable again.
+    assert_eq!(tih.stability(4, 5, whole), 1.0);
+}
+
+/// Degenerate regions: a single pixel over a single frame is one
+/// count; stability of any non-empty box is at least 1/bins.
+#[test]
+fn single_pixel_boxes_count_one() {
+    let frames = random_frames(3, 5, 7, 4, 77);
+    let tih = TemporalIntegralHistogram::build(&frames, 4);
+    for t in 0..3 {
+        for r in 0..5 {
+            for c in 0..7 {
+                let hist = tih.box_histogram(t, t, Rect::new(r, c, r, c));
+                assert_eq!(hist.iter().sum::<f32>(), 1.0);
+                let v = frames[t].at(r, c) as usize;
+                assert_eq!(hist[v], 1.0);
+                assert_eq!(tih.stability(t, t, Rect::new(r, c, r, c)), 1.0);
+            }
+        }
+    }
+}
+
+/// `nbytes` is exactly `bins × frames × h × w × 4` — the §2.1
+/// footprint argument (a temporal window multiplies the already
+/// bin-amplified tensor again, which is why the out-of-core store
+/// exists).
+#[test]
+fn nbytes_reports_the_full_tensor_footprint() {
+    let frames = random_frames(5, 8, 12, 6, 3);
+    let tih = TemporalIntegralHistogram::build(&frames, 6);
+    assert_eq!(tih.nbytes(), 6 * 5 * 8 * 12 * 4);
+    let one = TemporalIntegralHistogram::build(&frames[..1], 6);
+    assert_eq!(one.nbytes(), 6 * 8 * 12 * 4);
+}
+
+/// The ISSUE property: `TensorStore`-served region queries are
+/// bit-identical to in-RAM `region::query` on adversarial shapes —
+/// single-row and single-column tensors, one bin, border-hugging and
+/// single-pixel rects.
+#[test]
+fn tensor_store_queries_match_in_ram_region_queries_on_adversarial_shapes() {
+    let cases: &[(usize, usize, usize)] = &[
+        // (h, w, bins)
+        (1, 1, 1),
+        (1, 53, 7),
+        (53, 1, 7),
+        (9, 9, 1),
+        (17, 29, 12),
+        (40, 8, 3),
+    ];
+    for (ci, &(h, w, bins)) in cases.iter().enumerate() {
+        let mut rng = Xoshiro256::new(300 + ci as u64);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        let img = BinnedImage::new(h, w, bins, data);
+        let ih = integral_histogram_seq(&img);
+
+        let store = TensorStore::spill(bins, h, w).expect("spill store");
+        for b in 0..bins {
+            store.write_rows(b, 0, ih.plane(b)).expect("spill plane");
+        }
+
+        let mut rects = vec![
+            Rect::new(0, 0, h - 1, w - 1),
+            Rect::new(0, 0, 0, 0),
+            Rect::new(h - 1, 0, h - 1, w - 1),
+            Rect::new(0, w - 1, h - 1, w - 1),
+        ];
+        for _ in 0..30 {
+            let r0 = rng.range(0, h);
+            let c0 = rng.range(0, w);
+            let r1 = rng.range(r0, h);
+            let c1 = rng.range(c0, w);
+            rects.push(Rect::new(r0, c0, r1, c1));
+        }
+        for rect in rects {
+            assert_eq!(
+                store.query(rect).expect("store query"),
+                region_histogram(&ih, rect),
+                "case {ci} ({h}x{w}x{bins}) at {rect:?}"
+            );
+        }
+    }
+}
