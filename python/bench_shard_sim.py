@@ -27,6 +27,7 @@ import json
 import os
 import sys
 import tempfile
+import threading
 import time
 from collections import deque
 from multiprocessing.pool import ThreadPool
@@ -64,6 +65,24 @@ def queue_task(img, b0, nb):
     return partial
 
 
+def supervised_group_task(img, b0, nb, r0, nr, counters, mx):
+    """group_task wrapped in the ShardExecutor supervision shape: probe
+    consult (occurrence counter on an inert schedule), catch-all around
+    the compute, attempt accounting.  The delta vs the bare task is the
+    per-attempt supervision tax benches/shard.rs §4 bounds at <2%."""
+    with mx:
+        counters["occ"] += 1  # FaultInjector::decide on a never-firing schedule
+    try:
+        out = group_task(img, b0, nb, r0, nr)
+    except Exception:  # catch_unwind: count and re-raise
+        with mx:
+            counters["failed"] += 1
+        raise
+    with mx:
+        counters["ok"] += 1
+    return out
+
+
 def serial_queue_schedule(pool, imgs, frames, shards):
     """Whole-frame serialization: dispatch, barrier, assemble into a
     freshly zeroed tensor, repeat (BinTaskQueue::compute)."""
@@ -78,7 +97,7 @@ def serial_queue_schedule(pool, imgs, frames, shards):
     return frames / max(time.perf_counter() - t0, 1e-9)
 
 
-def interleaved_schedule(pool, imgs, frames, shards, window):
+def interleaved_schedule(pool, imgs, frames, shards, window, task=group_task, extra=()):
     """Sliding window of frames in flight; drain in submission order;
     recycled output buffers (FramePool)."""
     t0 = time.perf_counter()
@@ -89,7 +108,7 @@ def interleaved_schedule(pool, imgs, frames, shards, window):
         while len(inflight) < window and submitted < frames:
             img = imgs[submitted % len(imgs)]
             inflight.append(
-                [pool.apply_async(group_task, (img, b0, nb, r0, nr)) for (_, b0, nb, r0, nr) in shards]
+                [pool.apply_async(task, (img, b0, nb, r0, nr) + tuple(extra)) for (_, b0, nb, r0, nr) in shards]
             )
             submitted += 1
         rs = inflight.popleft()
@@ -205,6 +224,26 @@ def main():
         oc_img = make_images(oc_bins)[0]
         oc_shards, oc_wall, oc_peak, oc_qps = out_of_core_spill(pool, oc_img, oc_bins, oc_budget)
 
+        # Supervision overhead (benches/shard.rs §4): same interleaved
+        # schedule with every task wrapped in the supervisor shape
+        # (probe consult + catch + attempt accounting) on a schedule
+        # that never fires.  Best-of-two on each side to damp noise.
+        mx = threading.Lock()
+        counters = {"occ": 0, "ok": 0, "failed": 0}
+        rounds = 4
+        plain_fps = sup_fps = 0.0
+        for _ in range(rounds):  # alternate sides: best-of-N damps pool-scheduling noise
+            plain_fps = max(plain_fps, interleaved_schedule(pool, imgs, FRAMES, shards, 2))
+            sup_fps = max(
+                sup_fps,
+                interleaved_schedule(
+                    pool, imgs, FRAMES, shards, 2, task=supervised_group_task, extra=(counters, mx)
+                ),
+            )
+        assert counters["occ"] == counters["ok"] == rounds * FRAMES * len(shards), counters
+        assert counters["failed"] == 0
+        overhead_pct = 100.0 * (plain_fps - sup_fps) / max(plain_fps, 1e-9)
+
     speed2 = by_window[2] / serial_fps
     report = {
         "bench": "shard",
@@ -230,6 +269,13 @@ def main():
             "within_budget": oc_peak <= oc_budget,
             "spilled_queries_per_s": round(oc_qps),
         },
+        "supervision": {
+            "fault_feature_compiled": False,
+            "fps": round(plain_fps, 2),
+            "probed_fps": round(sup_fps, 2),
+            "overhead_pct": round(overhead_pct, 3),
+            "within_2pct": overhead_pct < 2.0,
+        },
         "derived": {
             "interleaved_2_inflight_vs_serial_queue": round(speed2, 3),
             "interleaved_beats_serial_queue": by_window[2] > serial_fps,
@@ -242,6 +288,7 @@ def main():
     print(json.dumps(report["interleave"], indent=2))
     print(json.dumps(report["derived"], indent=2))
     print(json.dumps(report["out_of_core"], indent=2))
+    print(json.dumps(report["supervision"], indent=2))
     print(f"wrote {os.path.abspath(out)}")
 
 

@@ -220,6 +220,42 @@ fn main() {
         query_rate
     );
 
+    // --- 4. supervision overhead on the hot path ---
+    // The supervised executor (catch_unwind per attempt, typed ticket
+    // protocol, attempt accounting) IS the hot path now; this row keeps
+    // its cost honest.  `fps` re-measures the plain executor on the
+    // section-2 schedule.  When the crate is built with
+    // `--features fault-injection` we also attach an ARMED injector
+    // whose schedule never fires (all probabilities zero), so the probe
+    // branch + occurrence counter are exercised on every shard attempt:
+    // the delta between the two is the full supervision+probe tax and
+    // must stay under 2%.  Without the feature the probe is compiled
+    // out and `probed_fps` is null.
+    let (sup_fps, _) = run_interleaved(&exec, &plan, &imgs, frames, 2);
+    #[cfg(feature = "fault-injection")]
+    let probed_fps: Option<f64> = {
+        use inthist::fault::{FaultInjector, FaultSpec};
+        let fx = ShardExecutor::with_faults(
+            ShardExecutorConfig { workers: WORKERS, ..Default::default() },
+            Arc::new(FaultInjector::new(1, FaultSpec::default())),
+        );
+        let _ = run_interleaved(&fx, &plan, &imgs, 2, 1); // warm-up
+        let (f, _) = run_interleaved(&fx, &plan, &imgs, frames, 2);
+        Some(f)
+    };
+    #[cfg(not(feature = "fault-injection"))]
+    let probed_fps: Option<f64> = None;
+    let overhead_pct = probed_fps.map(|p| 100.0 * (sup_fps - p) / sup_fps.max(1e-9));
+    println!("\n## supervision overhead (fault probe compiled: {})", cfg!(feature = "fault-injection"));
+    println!("supervised executor:            {sup_fps:>8.2} fps");
+    match (probed_fps, overhead_pct) {
+        (Some(p), Some(o)) => println!(
+            "with armed zero-prob injector:  {p:>8.2} fps ({o:+.2}% overhead — {})",
+            if o < 2.0 { "PASS (<2%)" } else { "FAIL (>=2%)" }
+        ),
+        _ => println!("with armed zero-prob injector:  n/a (build with --features fault-injection)"),
+    }
+
     // --- machine-readable report at the repo root ---
     let mut json = String::new();
     json.push_str("{\n");
@@ -250,6 +286,14 @@ fn main() {
         "  \"out_of_core\": {{\"bins\": {oc_bins}, \"tensor_bytes\": {tensor_bytes}, \"budget_bytes\": {oc_budget}, \"shards\": {}, \"wall_s\": {:.4}, \"peak_resident_bytes\": {}, \"within_budget\": {}, \"spilled_queries_per_s\": {:.0}}},\n",
         report.shards, oc_wall, report.peak_resident_bytes,
         report.peak_resident_bytes <= oc_budget, query_rate
+    ));
+    json.push_str(&format!(
+        "  \"supervision\": {{\"fault_feature_compiled\": {}, \"fps\": {:.2}, \"probed_fps\": {}, \"overhead_pct\": {}, \"within_2pct\": {}}},\n",
+        cfg!(feature = "fault-injection"),
+        sup_fps,
+        probed_fps.map_or("null".into(), |p| format!("{p:.2}")),
+        overhead_pct.map_or("null".into(), |o| format!("{o:.3}")),
+        overhead_pct.map_or("null".into(), |o| format!("{}", o < 2.0)),
     ));
     json.push_str("  \"derived\": {\n");
     json.push_str(&format!(

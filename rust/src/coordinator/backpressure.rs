@@ -1,4 +1,5 @@
-//! Bounded hand-off queues with occupancy accounting.
+//! Bounded hand-off queues with occupancy accounting, plus the RAII
+//! session-admission primitive.
 //!
 //! The pipeline's stages are connected by bounded channels whose
 //! capacity IS the dual-buffering depth: capacity 1 ⇒ strictly serial
@@ -7,6 +8,14 @@
 //! behind — that is the backpressure that keeps a slow kernel stage
 //! from buffering unbounded frames (and unbounded page-locked memory,
 //! the §4.4 failure mode).
+//!
+//! [`AdmissionControl`] replaces the earlier token-channel session
+//! limiter: a slot there was a `()` sent back on a channel in a `Drop`
+//! impl, so a session that panicked between token receipt and
+//! registration leaked its slot forever.  Here the slot IS an
+//! [`AdmissionGuard`] — a value whose `Drop` decrements the live
+//! count — so every exit path (return, `?`, panic unwind) frees the
+//! slot by construction (DESIGN.md §8).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvError, SendError, SyncSender};
@@ -112,6 +121,95 @@ impl<T> BoundedReceiver<T> {
     }
 }
 
+/// Lock-free counting admission limiter with RAII slot release.
+///
+/// `try_admit` CAS-increments the live count and hands back an
+/// [`AdmissionGuard`]; dropping the guard — on any path, including a
+/// panic unwind — frees the slot.  No locks, so no poisoning, and no
+/// token to lose.
+#[derive(Debug)]
+pub struct AdmissionControl {
+    capacity: usize,
+    active: AtomicUsize,
+    high_water: AtomicUsize,
+    admitted: AtomicUsize,
+    rejected: AtomicUsize,
+}
+
+impl AdmissionControl {
+    pub fn new(capacity: usize) -> Arc<AdmissionControl> {
+        assert!(capacity >= 1, "admission control needs capacity >= 1");
+        Arc::new(AdmissionControl {
+            capacity,
+            active: AtomicUsize::new(0),
+            high_water: AtomicUsize::new(0),
+            admitted: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+        })
+    }
+
+    /// Claim a slot: `None` when all `capacity` slots are live.
+    pub fn try_admit(self: &Arc<Self>) -> Option<AdmissionGuard> {
+        let mut cur = self.active.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.capacity {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            match self.active.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.admitted.fetch_add(1, Ordering::Relaxed);
+                    self.high_water.fetch_max(cur + 1, Ordering::Relaxed);
+                    return Some(AdmissionGuard { ctl: Arc::clone(self) });
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Slots currently held by live guards.
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total successful admissions so far.
+    pub fn admitted(&self) -> usize {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    /// Total rejected admission attempts so far.
+    pub fn rejected(&self) -> usize {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Highest concurrent slot count observed.
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
+    }
+}
+
+/// A held admission slot.  Dropping it — on return or unwind — frees
+/// the slot; there is no other way to release one.
+#[derive(Debug)]
+pub struct AdmissionGuard {
+    ctl: Arc<AdmissionControl>,
+}
+
+impl Drop for AdmissionGuard {
+    fn drop(&mut self) {
+        self.ctl.active.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,5 +283,39 @@ mod tests {
     #[should_panic]
     fn zero_capacity_rejected() {
         bounded::<u8>(0);
+    }
+
+    #[test]
+    fn admission_caps_and_guard_frees_on_drop() {
+        let ctl = AdmissionControl::new(2);
+        let a = ctl.try_admit().expect("slot 1");
+        let b = ctl.try_admit().expect("slot 2");
+        assert!(ctl.try_admit().is_none(), "third slot must be rejected");
+        assert_eq!(ctl.active(), 2);
+        assert_eq!(ctl.high_water(), 2);
+        assert_eq!(ctl.rejected(), 1);
+        drop(a);
+        assert_eq!(ctl.active(), 1);
+        let c = ctl.try_admit().expect("freed slot is reusable");
+        drop(b);
+        drop(c);
+        assert_eq!(ctl.active(), 0);
+        assert_eq!(ctl.admitted(), 3);
+    }
+
+    /// The token-leak regression this type exists to fix: a holder that
+    /// PANICS must still release its slot (unwind runs the guard's
+    /// `Drop`), where the old channel-token scheme leaked it.
+    #[test]
+    fn panicking_holder_releases_slot() {
+        let ctl = AdmissionControl::new(1);
+        let ctl2 = Arc::clone(&ctl);
+        let t = std::thread::spawn(move || {
+            let _guard = ctl2.try_admit().expect("slot");
+            panic!("session died mid-flight");
+        });
+        assert!(t.join().is_err());
+        assert_eq!(ctl.active(), 0, "unwind must free the slot");
+        assert!(ctl.try_admit().is_some(), "slot reusable after the panic");
     }
 }

@@ -16,6 +16,7 @@
 //! reported by `benches/hotpath.rs`.
 
 use crate::histogram::types::IntegralHistogram;
+use crate::util::sync::lock_recover;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -46,7 +47,11 @@ impl FramePool {
     /// Take a `bins×h×w` tensor: recycled storage when available
     /// (resized, **not** zeroed), a fresh zeroed allocation otherwise.
     pub fn acquire(&self, bins: usize, h: usize, w: usize) -> IntegralHistogram {
-        let recycled = self.free.lock().expect("pool lock").pop();
+        // Free-list entries are whole buffers (valid at every
+        // instruction boundary), so a poisoned lock — some other
+        // holder panicked — is recovered, not propagated: buffer reuse
+        // must survive unrelated thread deaths (DESIGN.md §8).
+        let recycled = lock_recover(&self.free).pop();
         match recycled {
             Some(buf) => {
                 self.reused.fetch_add(1, Ordering::Relaxed);
@@ -68,7 +73,7 @@ impl FramePool {
     /// Return a tensor's storage to the free list (dropped once
     /// [`Self::MAX_IDLE`] buffers are already idle).
     pub fn release(&self, ih: IntegralHistogram) {
-        let mut free = self.free.lock().expect("pool lock");
+        let mut free = lock_recover(&self.free);
         if free.len() < Self::MAX_IDLE {
             free.push(ih.into_storage());
         }
@@ -78,7 +83,7 @@ impl FramePool {
         PoolStats {
             allocated: self.allocated.load(Ordering::Relaxed),
             reused: self.reused.load(Ordering::Relaxed),
-            idle: self.free.lock().expect("pool lock").len(),
+            idle: lock_recover(&self.free).len(),
         }
     }
 }

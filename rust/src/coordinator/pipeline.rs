@@ -372,6 +372,23 @@ pub struct CpuPipeline {
     engine: Mutex<ScanEngine>,
 }
 
+/// Lock the lane engine, recovering a poisoned lock by REPLACING the
+/// engine with a fresh one.  Unlike the pool free-lists (valid at every
+/// instruction boundary, recovered as-is), an engine abandoned
+/// mid-compute holds suspect scheduler/scratch state — so poisoning
+/// here means explicit invalidation: drop the old engine (its parked
+/// workers join) and park a new one (DESIGN.md §8).
+fn lock_engine(mx: &std::sync::Mutex<ScanEngine>, workers: usize) -> std::sync::MutexGuard<'_, ScanEngine> {
+    match mx.lock() {
+        Ok(g) => g,
+        Err(poison) => {
+            let mut g = poison.into_inner();
+            *g = ScanEngine::new(workers);
+            g
+        }
+    }
+}
+
 impl CpuPipeline {
     pub fn new(config: CpuPipelineConfig) -> CpuPipeline {
         Self::with_pool(config, Arc::new(FramePool::new()))
@@ -392,7 +409,7 @@ impl CpuPipeline {
     /// Worker-pool counters of the lane's engine (zero thread-spawn
     /// observability across runs).
     pub fn engine_pool_stats(&self) -> crate::histogram::engine::WorkerPoolStats {
-        self.engine.lock().expect("engine lock").pool_stats()
+        lock_engine(&self.engine, self.config.workers).pool_stats()
     }
 
     /// Run `source` to exhaustion, dropping results (timing runs).
@@ -419,6 +436,7 @@ impl CpuPipeline {
         let (ring_tx, ring_rx) = std::sync::mpsc::channel::<BinnedImage>();
         let pool = Arc::clone(&self.pool);
         let engine_mx = &self.engine;
+        let cfg_workers = cfg.workers;
         let t_start = Instant::now();
 
         let report = std::thread::scope(|scope| -> Result<PipelineReport> {
@@ -426,7 +444,7 @@ impl CpuPipeline {
             // pooled tensors (the engine's parked workers survive the
             // run, so the next stream on this lane spawns nothing).
             scope.spawn(move || {
-                let mut engine = engine_mx.lock().expect("engine lock");
+                let mut engine = lock_engine(engine_mx, cfg_workers);
                 while let Ok(item) = q1_rx.recv() {
                     let InFlight { mut stat, t_enqueue, image } = item;
                     let t0 = Instant::now();
@@ -488,7 +506,7 @@ impl CpuPipeline {
         sink: &mut (impl FnMut(usize, PooledTensor) + Send),
     ) -> Result<PipelineReport> {
         let bins = self.config.bins;
-        let mut engine = self.engine.lock().expect("engine lock");
+        let mut engine = lock_engine(&self.engine, self.config.workers);
         let mut image = BinnedImage::new(0, 0, 1, Vec::new());
         let t_start = Instant::now();
         let mut stats = Vec::new();

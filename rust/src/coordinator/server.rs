@@ -33,34 +33,49 @@
 //! * **Sessions.**  [`Server::open_session`] hands out a per-stream
 //!   [`Session`] owning a [`CpuPipeline`] lane (recycling through the
 //!   server arena), a [`QueryBatcher`], and an optional analytics
-//!   attachment (motion detector / tracker).  Admission control is a
-//!   bounded [`backpressure`](crate::coordinator::backpressure) queue:
-//!   capacity = `max_sessions`, occupancy = live sessions, high-water =
-//!   peak concurrency — over-capacity `open_session` calls are rejected,
-//!   not queued, so an overloaded server degrades predictably.
+//!   attachment (motion detector / tracker).  Admission control is an
+//!   [`AdmissionControl`] slot counter: capacity = `max_sessions`,
+//!   occupancy = live sessions — over-capacity `open_session` calls are
+//!   rejected, not queued, so an overloaded server degrades
+//!   predictably.  The slot is an RAII [`AdmissionGuard`] held *inside*
+//!   the session, so every exit path — drop, `?`, panic unwind — frees
+//!   it (the old token-channel scheme leaked the slot if a session
+//!   panicked).
 //! * **Metrics.**  Global frame/query/session counters plus a latency
 //!   reservoir summarized as p50/p95/p99 + jitter
 //!   ([`LatencySummary`]), and per-session latency histories.
+//! * **Fault posture (DESIGN.md §8).**  The server is a supervisor:
+//!   shard-route frames ride the retrying [`ShardExecutor`] (typed
+//!   [`crate::shard::ShardError`]s, optional per-frame deadline), the
+//!   compile cache retries with backoff per its
+//!   [`RetryPolicy`], and the server itself runs a small lifecycle
+//!   state machine — `Running → Draining → Stopped` — with an in-flight
+//!   op gauge.  Under overload (`overload_inflight_limit`) it sheds
+//!   load in degradation order: large-route (shard) work is refused
+//!   first, small-frame work only at twice the limit, and every shed is
+//!   counted.  [`Server::health`] snapshots all of it.
 
 use crate::analytics::motion::{MotionDetector, MotionMap};
 use crate::analytics::tracker::{Track, TrackerConfig};
-use crate::coordinator::backpressure::{bounded, BoundedReceiver, BoundedSender, QueueStats};
+use crate::coordinator::backpressure::{AdmissionControl, AdmissionGuard};
 use crate::coordinator::batcher::{QueryBatcher, QueryResponse};
 use crate::coordinator::frame_pool::{FramePool, PoolStats, PooledTensor};
 use crate::coordinator::metrics::LatencySummary;
 use crate::coordinator::pipeline::{CpuPipeline, CpuPipelineConfig, PipelineReport};
 use crate::coordinator::router::{EngineConfig, Route};
+use crate::fault::FaultInjector;
 use crate::histogram::engine::ScanEngine;
 use crate::histogram::region::Rect;
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
 use crate::runtime::artifact::ArtifactManifest;
-use crate::runtime::compile_cache::CompileCache;
+use crate::runtime::compile_cache::{CompileCache, ExecutorScope, RetryPolicy};
 use crate::shard::{
     ShardExecutor, ShardExecutorConfig, ShardExecutorStats, ShardPlanner, ShardReport, TensorStore,
 };
+use crate::util::sync::lock_recover;
 use crate::video::source::{FrameSource, VideoFrame};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -91,6 +106,23 @@ pub struct ServerConfig {
     /// set `cpu_fallback_budget ≤ host_memory_budget` to enforce
     /// strict residency.
     pub host_memory_budget: usize,
+    /// Compile retry/backoff/negative-TTL policy for the shared
+    /// [`CompileCache`].
+    pub compile_retry: RetryPolicy,
+    /// Shard compute attempts per shard before the frame fails typed
+    /// (passed to [`ShardExecutorConfig::max_attempts`]).
+    pub shard_max_attempts: usize,
+    /// Per-frame reassembly deadline for the shard routes; `None` =
+    /// wait unbounded (the pre-supervision behaviour).
+    pub frame_deadline: Option<Duration>,
+    /// Overload shedding threshold on concurrently in-flight compute
+    /// ops: at `limit` the large (shard) route is shed, at `2×limit`
+    /// small-frame work is shed too.  `0` disables shedding.
+    pub overload_inflight_limit: usize,
+    /// Chaos-test fault injector, threaded through to the compile
+    /// cache, shard executor and spill store.  Inert unless the crate
+    /// is built with `--features fault-injection`.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 impl Default for ServerConfig {
@@ -102,8 +134,52 @@ impl Default for ServerConfig {
             workers_per_stream: 2,
             shard_workers: 4,
             host_memory_budget: 1 << 30,
+            compile_retry: RetryPolicy::default(),
+            shard_max_attempts: 3,
+            frame_deadline: None,
+            overload_inflight_limit: 0,
+            faults: None,
         }
     }
+}
+
+/// Lifecycle of the serving front door (DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServerState {
+    /// Accepting sessions and work.
+    Running,
+    /// Refusing new work; in-flight ops completing.
+    Draining,
+    /// Drained and shut down; the shard executor is joined.
+    Stopped,
+}
+
+const STATE_RUNNING: u8 = 0;
+const STATE_DRAINING: u8 = 1;
+const STATE_STOPPED: u8 = 2;
+
+/// Point-in-time fault/degradation view — what an operator pages on.
+#[derive(Debug, Clone)]
+pub struct ServerHealth {
+    pub state: ServerState,
+    /// Compute ops currently in flight (all routes).
+    pub inflight: usize,
+    pub sessions_active: usize,
+    /// True when overload shedding is active for the large route.
+    pub degraded: bool,
+    /// Large-route ops refused under overload.
+    pub shed_large: usize,
+    /// Small-frame ops refused under overload (≥ 2× the limit).
+    pub shed_small: usize,
+    /// Live shard workers / configured shard workers (equal when
+    /// healthy; the executor replaces no threads — it survives worker
+    /// death by retrying on the remaining ones).
+    pub shard_workers_alive: usize,
+    pub shard_workers_total: usize,
+    /// Frames that resolved to a typed error.
+    pub shard_frames_failed: usize,
+    /// Frames whose ticket was dropped before reassembly.
+    pub shard_frames_abandoned: usize,
 }
 
 /// Capacity of the global latency reservoir (ring overwrite beyond).
@@ -146,6 +222,8 @@ struct Metrics {
     queries: AtomicUsize,
     sessions_opened: AtomicUsize,
     sessions_rejected: AtomicUsize,
+    shed_large: AtomicUsize,
+    shed_small: AtomicUsize,
     latencies_ms: Mutex<LatencyRing>,
 }
 
@@ -156,6 +234,8 @@ impl Default for Metrics {
             queries: AtomicUsize::new(0),
             sessions_opened: AtomicUsize::new(0),
             sessions_rejected: AtomicUsize::new(0),
+            shed_large: AtomicUsize::new(0),
+            shed_small: AtomicUsize::new(0),
             latencies_ms: Mutex::new(LatencyRing::with_cap(LATENCY_RESERVOIR)),
         }
     }
@@ -163,7 +243,9 @@ impl Default for Metrics {
 
 impl Metrics {
     fn push_latency(&self, ms: f64) {
-        self.latencies_ms.lock().expect("latency lock").push(ms);
+        // The ring is valid at every instruction boundary; recover a
+        // poisoned lock rather than abort the serving thread.
+        lock_recover(&self.latencies_ms).push(ms);
     }
 }
 
@@ -215,13 +297,59 @@ struct Inner {
     /// route.  Geometry-agnostic: plans are per-request.
     shard: Mutex<Option<Arc<ShardExecutor>>>,
     metrics: Metrics,
-    admission_tx: Mutex<BoundedSender<()>>,
-    admission_rx: Mutex<BoundedReceiver<()>>,
-    admission_stats: Arc<QueueStats>,
+    admission: Arc<AdmissionControl>,
     session_seq: AtomicUsize,
+    /// Lifecycle: `STATE_RUNNING` / `STATE_DRAINING` / `STATE_STOPPED`.
+    state: AtomicU8,
+    /// Compute ops currently in flight (RAII-counted by [`OpGuard`]).
+    inflight: AtomicUsize,
+}
+
+/// RAII in-flight marker: [`Inner::begin_op`] increments the gauge,
+/// dropping the guard — on success, error, or unwind — decrements it,
+/// so `drain` can never wait on an op that already died.
+struct OpGuard<'a> {
+    inner: &'a Inner,
+}
+
+impl Drop for OpGuard<'_> {
+    fn drop(&mut self) {
+        self.inner.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
 }
 
 impl Inner {
+    /// Gate every compute op on lifecycle state and overload, in
+    /// degradation order: draining/stopped refuse everything; under
+    /// overload the large (shard) route is shed at the limit, small
+    /// frames only at twice it — an overloaded server keeps serving
+    /// cheap frames after it stops accepting expensive ones.
+    fn begin_op(&self, large: bool) -> Result<OpGuard<'_>> {
+        match self.state.load(Ordering::Acquire) {
+            STATE_RUNNING => {}
+            STATE_DRAINING => return Err(anyhow!("server draining: new work refused")),
+            _ => return Err(anyhow!("server stopped")),
+        }
+        let limit = self.config.overload_inflight_limit;
+        if limit > 0 {
+            let inflight = self.inflight.load(Ordering::Acquire);
+            if large && inflight >= limit {
+                self.metrics.shed_large.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow!(
+                    "overload: large-route work shed ({inflight} ops in flight, limit {limit})"
+                ));
+            }
+            if !large && inflight >= 2 * limit {
+                self.metrics.shed_small.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow!(
+                    "overload: work shed ({inflight} ops in flight, limit {})",
+                    2 * limit
+                ));
+            }
+        }
+        self.inflight.fetch_add(1, Ordering::AcqRel);
+        Ok(OpGuard { inner: self })
+    }
     fn route_for(&self, h: usize, w: usize) -> Route {
         self.config.engine.route_for(h, w)
     }
@@ -231,9 +359,15 @@ impl Inner {
     }
 
     /// Serve a frame on a checked-out CPU engine with pooled storage.
+    ///
+    /// Poisoning policy: the checkout stack only ever holds engines
+    /// between frames (complete at every instruction boundary), so a
+    /// poisoned stack lock is recovered.  An engine that PANICKED
+    /// mid-compute never returns here — the unwind drops it before the
+    /// push — so recovery cannot resurrect a suspect engine.
     fn compute_cpu(&self, img: &BinnedImage) -> Result<(PooledTensor, Duration)> {
         let t0 = Instant::now();
-        let mut engine = match self.engines.lock().expect("engine stack lock").pop() {
+        let mut engine = match lock_recover(&self.engines).pop() {
             Some(e) => e,
             None => {
                 self.engines_created.fetch_add(1, Ordering::Relaxed);
@@ -242,20 +376,26 @@ impl Inner {
         };
         let mut out = PooledTensor::acquire(&self.pool, img.bins, img.h, img.w);
         engine.compute_into(img, &mut out);
-        self.engines.lock().expect("engine stack lock").push(engine);
+        lock_recover(&self.engines).push(engine);
         Ok((out, t0.elapsed()))
     }
 
     /// The server's shared shard executor, built on first large
     /// request (the lock guards construction, never execution).
     fn shard_executor(&self) -> Arc<ShardExecutor> {
-        let mut guard = self.shard.lock().expect("shard executor lock");
+        let mut guard = lock_recover(&self.shard);
         if guard.is_none() {
-            *guard = Some(Arc::new(ShardExecutor::new(ShardExecutorConfig {
+            let cfg = ShardExecutorConfig {
                 workers: self.config.shard_workers.max(1),
                 engine_workers: 1,
                 channel_depth: 0,
-            })));
+                max_attempts: self.config.shard_max_attempts.max(1),
+            };
+            let exec = match &self.config.faults {
+                Some(f) => ShardExecutor::with_faults(cfg, Arc::clone(f)),
+                None => ShardExecutor::new(cfg),
+            };
+            *guard = Some(Arc::new(exec));
         }
         Arc::clone(guard.as_ref().expect("executor just built"))
     }
@@ -287,7 +427,10 @@ impl Inner {
         let image = Arc::new(img.clone());
         let ticket = exec.submit(&image, &plan)?;
         let mut out = PooledTensor::acquire(&self.pool, img.bins, img.h, img.w);
-        let report = ticket.reassemble_into(&mut out)?;
+        let report = match self.config.frame_deadline {
+            Some(d) => ticket.reassemble_into_deadline(&mut out, d)?,
+            None => ticket.reassemble_into(&mut out)?,
+        };
         Ok((out, report.wall))
     }
 
@@ -295,18 +438,25 @@ impl Inner {
     /// [`TensorStore`] — peak host residency stays within the shard
     /// budget, never the full tensor.
     fn compute_spilled(&self, image: &Arc<BinnedImage>) -> Result<(TensorStore, ShardReport)> {
+        let _op = self.begin_op(true)?;
         let exec = self.shard_executor();
         let plan = self.shard_plan(image.bins, image.h, image.w);
         let ticket = exec.submit(image, &plan)?;
-        let (store, report) = ticket.reassemble_spilled()?;
+        let (store, report) = match self.config.frame_deadline {
+            Some(d) => ticket.reassemble_spilled_deadline(d)?,
+            None => ticket.reassemble_spilled()?,
+        };
         self.metrics.frames.fetch_add(1, Ordering::Relaxed);
         self.metrics.push_latency(report.wall.as_secs_f64() * 1e3);
         Ok((store, report))
     }
 
-    /// The shared front door: route, compute, account.
+    /// The shared front door: gate (lifecycle + overload), route,
+    /// compute, account.
     fn compute(&self, img: &BinnedImage) -> Result<(PooledTensor, Duration)> {
-        let res = match self.route_for(img.h, img.w) {
+        let route = self.route_for(img.h, img.w);
+        let _op = self.begin_op(route == Route::TaskQueue)?;
+        let res = match route {
             Route::Direct => {
                 let strategy = self.config.engine.strategy;
                 // Memoized availability check: when no artifact matches
@@ -359,20 +509,24 @@ pub struct Server {
 
 impl Server {
     pub fn new(manifest: Arc<ArtifactManifest>, config: ServerConfig) -> Server {
-        let (admission_tx, admission_rx, admission_stats) =
-            bounded::<()>(config.max_sessions.max(1));
+        let admission = AdmissionControl::new(config.max_sessions.max(1));
+        let mut compile =
+            CompileCache::with_policy(manifest, ExecutorScope::Shared, config.compile_retry);
+        if let Some(f) = &config.faults {
+            compile.set_faults(Arc::clone(f));
+        }
         Server {
             inner: Arc::new(Inner {
-                compile: CompileCache::new(manifest),
+                compile,
                 pool: Arc::new(FramePool::new()),
                 engines: Mutex::new(Vec::new()),
                 engines_created: AtomicUsize::new(0),
                 shard: Mutex::new(None),
                 metrics: Metrics::default(),
-                admission_tx: Mutex::new(admission_tx),
-                admission_rx: Mutex::new(admission_rx),
-                admission_stats,
+                admission,
                 session_seq: AtomicUsize::new(0),
+                state: AtomicU8::new(STATE_RUNNING),
+                inflight: AtomicUsize::new(0),
                 config,
             }),
         }
@@ -409,23 +563,22 @@ impl Server {
     }
 
     /// Admit a new stream.  Rejected (not queued) once `max_sessions`
-    /// sessions are live; the slot frees when the `Session` drops.
+    /// sessions are live; the slot is an RAII guard inside the session,
+    /// freed on any exit path (drop, error, panic unwind).  Refused
+    /// while draining or stopped.
     pub fn open_session(&self) -> Result<Session> {
-        let admitted = self
-            .inner
-            .admission_tx
-            .lock()
-            .expect("admission lock")
-            .try_send(())
-            .is_ok();
-        if !admitted {
+        if self.inner.state.load(Ordering::Acquire) != STATE_RUNNING {
+            self.inner.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow!("server not running: session refused"));
+        }
+        let Some(admission) = self.inner.admission.try_admit() else {
             self.inner.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
             return Err(anyhow!(
                 "admission rejected: {} sessions live (max {})",
-                self.inner.admission_stats.depth(),
+                self.inner.admission.active(),
                 self.inner.config.max_sessions
             ));
-        }
+        };
         self.inner.metrics.sessions_opened.fetch_add(1, Ordering::Relaxed);
         let id = self.inner.session_seq.fetch_add(1, Ordering::Relaxed) as u64;
         let cfg = &self.inner.config;
@@ -435,6 +588,7 @@ impl Server {
         let pipeline = CpuPipeline::with_pool(lane_cfg, Arc::clone(&self.inner.pool));
         Ok(Session {
             inner: Arc::clone(&self.inner),
+            _admission: admission,
             id,
             bins: cfg.engine.bins,
             img: BinnedImage::new(0, 0, 1, Vec::new()),
@@ -449,7 +603,83 @@ impl Server {
 
     /// Currently live sessions.
     pub fn sessions_active(&self) -> usize {
-        self.inner.admission_stats.depth()
+        self.inner.admission.active()
+    }
+
+    /// Operator-facing health view: lifecycle state, in-flight gauge,
+    /// shedding counters, and the shard executor's failure counters.
+    pub fn health(&self) -> ServerHealth {
+        let inner = &self.inner;
+        let state = match inner.state.load(Ordering::Acquire) {
+            STATE_RUNNING => ServerState::Running,
+            STATE_DRAINING => ServerState::Draining,
+            _ => ServerState::Stopped,
+        };
+        let inflight = inner.inflight.load(Ordering::Acquire);
+        let limit = inner.config.overload_inflight_limit;
+        let shard = lock_recover(&inner.shard).as_ref().map(|e| e.stats());
+        let (alive, total, failed, abandoned) = match &shard {
+            Some(s) => (
+                s.workers_alive,
+                inner.config.shard_workers.max(1),
+                s.frames_failed,
+                s.frames_abandoned,
+            ),
+            None => (0, 0, 0, 0),
+        };
+        ServerHealth {
+            state,
+            inflight,
+            sessions_active: inner.admission.active(),
+            degraded: limit > 0 && inflight >= limit,
+            shed_large: inner.metrics.shed_large.load(Ordering::Relaxed),
+            shed_small: inner.metrics.shed_small.load(Ordering::Relaxed),
+            shard_workers_alive: alive,
+            shard_workers_total: total,
+            shard_frames_failed: failed,
+            shard_frames_abandoned: abandoned,
+        }
+    }
+
+    /// Stop accepting new work (sessions and compute ops) and wait up
+    /// to `timeout` for in-flight ops to finish.  Returns `true` when
+    /// the server drained fully.  Existing sessions stay open — their
+    /// compute calls fail typed until [`Self::resume`].
+    pub fn drain(&self, timeout: Duration) -> bool {
+        self.inner.state.store(STATE_DRAINING, Ordering::Release);
+        let t0 = Instant::now();
+        while self.inner.inflight.load(Ordering::Acquire) > 0 {
+            if t0.elapsed() >= timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        true
+    }
+
+    /// [`Self::drain`], then stop for good: the shard executor is
+    /// dropped (its worker threads join — no in-flight tickets exist
+    /// after a clean drain).  Returns the drain result.
+    pub fn shutdown(&self, timeout: Duration) -> bool {
+        let drained = self.drain(timeout);
+        self.inner.state.store(STATE_STOPPED, Ordering::Release);
+        // Joining the workers happens in the executor's Drop; a timed-
+        // out drain leaves stragglers to finish against the channel.
+        *lock_recover(&self.inner.shard) = None;
+        drained
+    }
+
+    /// Return to `Running` from `Draining` (or `Stopped`; a later
+    /// large frame lazily rebuilds the shard executor).
+    pub fn resume(&self) {
+        self.inner.state.store(STATE_RUNNING, Ordering::Release);
+    }
+
+    /// Test hook: pretend `n` ops are in flight so overload shedding
+    /// can be asserted deterministically.
+    #[cfg(test)]
+    fn force_inflight(&self, n: usize) {
+        self.inner.inflight.store(n, Ordering::Release);
     }
 
     /// Drop compiled executors and negative compile results (e.g.
@@ -463,7 +693,7 @@ impl Server {
     /// describe steady-state serving, not cold-start frames.  Counters
     /// (frames, sessions, arena, pools) are unaffected.
     pub fn reset_latency_stats(&self) {
-        self.inner.metrics.latencies_ms.lock().expect("latency lock").clear();
+        lock_recover(&self.inner.metrics.latencies_ms).clear();
     }
 
     /// Snapshot the global counters.  `threads_spawned`/`pool_jobs`
@@ -472,7 +702,7 @@ impl Server {
     pub fn snapshot(&self) -> ServerSnapshot {
         let inner = &self.inner;
         let (engines_idle, threads_spawned, pool_jobs) = {
-            let engines = inner.engines.lock().expect("engine stack lock");
+            let engines = lock_recover(&inner.engines);
             let mut spawned = 0;
             let mut jobs = 0;
             for e in engines.iter() {
@@ -483,22 +713,17 @@ impl Server {
             (engines.len(), spawned, jobs)
         };
         let latency = {
-            let ring = inner.metrics.latencies_ms.lock().expect("latency lock");
+            let ring = lock_recover(&inner.metrics.latencies_ms);
             LatencySummary::of_ms(&ring.buf)
         };
-        let shard = inner
-            .shard
-            .lock()
-            .expect("shard executor lock")
-            .as_ref()
-            .map(|e| e.stats());
+        let shard = lock_recover(&inner.shard).as_ref().map(|e| e.stats());
         ServerSnapshot {
             frames: inner.metrics.frames.load(Ordering::Relaxed),
             queries: inner.metrics.queries.load(Ordering::Relaxed),
             sessions_opened: inner.metrics.sessions_opened.load(Ordering::Relaxed),
             sessions_rejected: inner.metrics.sessions_rejected.load(Ordering::Relaxed),
-            sessions_active: inner.admission_stats.depth(),
-            sessions_peak: inner.admission_stats.high_water(),
+            sessions_active: inner.admission.active(),
+            sessions_peak: inner.admission.high_water(),
             engines_created: inner.engines_created.load(Ordering::Relaxed),
             engines_idle,
             threads_spawned,
@@ -542,6 +767,9 @@ pub struct SessionSnapshot {
 /// `Session` is `Send` — open it on one thread, drive it from another.
 pub struct Session {
     inner: Arc<Inner>,
+    /// The admission slot itself: dropping the session — or unwinding
+    /// out of it — releases the slot.  Nothing else does.
+    _admission: AdmissionGuard,
     id: u64,
     bins: usize,
     /// Recycled quantization buffer (no per-frame image allocation).
@@ -669,15 +897,6 @@ impl Session {
             queries: self.queries,
             batcher: self.batcher.stats(),
             latency: LatencySummary::of_ms(&self.latencies_ms.buf),
-        }
-    }
-}
-
-impl Drop for Session {
-    fn drop(&mut self) {
-        // Return the admission slot.
-        if let Ok(rx) = self.inner.admission_rx.lock() {
-            let _ = rx.try_recv();
         }
     }
 }
@@ -898,5 +1117,127 @@ mod tests {
         let srv = Server::new(manifest(), cfg);
         let img = SyntheticVideo::new(32, 32, 1, 1).frame(0).binned(8);
         assert!(srv.compute(&img).is_err());
+    }
+
+    /// The AdmissionGuard regression test at the server level: a
+    /// session that panics on its owning thread must free its slot via
+    /// unwind, where the old token-channel admission leaked it.
+    #[test]
+    fn panicked_session_frees_its_admission_slot() {
+        let mut cfg = ServerConfig::default();
+        cfg.max_sessions = 1;
+        let srv = Server::new(manifest(), cfg);
+        let srv2 = srv.clone();
+        let t = std::thread::spawn(move || {
+            let _session = srv2.open_session().expect("slot");
+            panic!("stream thread died");
+        });
+        assert!(t.join().is_err());
+        assert_eq!(srv.sessions_active(), 0, "unwind must free the slot");
+        let _s = srv.open_session().expect("slot reusable after the panic");
+    }
+
+    #[test]
+    fn drain_refuses_work_then_resume_restores() {
+        let srv = server();
+        let img = SyntheticVideo::new(48, 48, 1, 1).frame(0).binned(8);
+        let _ = srv.compute(&img).expect("running server serves");
+        assert!(srv.drain(Duration::from_secs(1)), "no in-flight ops: drains immediately");
+        assert_eq!(srv.health().state, ServerState::Draining);
+        let err = srv.compute(&img).err().expect("draining refuses work").to_string();
+        assert!(err.contains("draining"), "{err}");
+        assert!(srv.open_session().is_err(), "draining refuses sessions");
+        srv.resume();
+        assert_eq!(srv.health().state, ServerState::Running);
+        let _ = srv.compute(&img).expect("resumed server serves again");
+        assert_eq!(srv.snapshot().frames, 2);
+    }
+
+    #[test]
+    fn shutdown_joins_the_shard_executor() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine.bins = 8;
+        cfg.engine.device_memory_budget = 1 << 10; // force the sharded route
+        cfg.shard_workers = 2;
+        let srv = Server::new(manifest(), cfg);
+        let img = SyntheticVideo::new(40, 40, 1, 2).frame(0).binned(8);
+        let _ = srv.compute(&img).expect("sharded route");
+        assert!(srv.snapshot().shard.is_some(), "executor built");
+        assert!(srv.shutdown(Duration::from_secs(1)));
+        assert_eq!(srv.health().state, ServerState::Stopped);
+        assert!(srv.snapshot().shard.is_none(), "executor dropped and joined");
+        assert!(srv.compute(&img).is_err(), "stopped server refuses work");
+    }
+
+    /// Degradation order under overload: the large (shard) route sheds
+    /// at the limit while small frames still serve; small frames shed
+    /// only at twice the limit; everything recovers when load falls.
+    #[test]
+    fn overload_sheds_large_before_small() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine.bins = 8;
+        cfg.engine.device_memory_budget = 1 << 10; // 40×40 routes large
+        cfg.shard_workers = 2;
+        cfg.overload_inflight_limit = 2;
+        let srv = Server::new(manifest(), cfg);
+        let small = SyntheticVideo::new(16, 16, 1, 1).frame(0).binned(8);
+        let large = SyntheticVideo::new(40, 40, 1, 2).frame(0).binned(8);
+        assert_eq!(srv.route_for(40, 40), Route::TaskQueue);
+        assert_eq!(srv.route_for(16, 16), Route::Direct);
+
+        srv.force_inflight(2); // at the limit
+        let err = srv.compute(&large).err().expect("large is shed").to_string();
+        assert!(err.contains("overload"), "{err}");
+        let _ = srv.compute(&small).expect("small frames still serve at 1× limit");
+        assert!(srv.health().degraded);
+
+        srv.force_inflight(4); // at 2× the limit
+        let err = srv.compute(&small).err().expect("small is shed too").to_string();
+        assert!(err.contains("overload"), "{err}");
+
+        srv.force_inflight(0); // load falls off
+        let _ = srv.compute(&large).expect("large serves again");
+        let _ = srv.compute(&small).expect("small serves again");
+        let health = srv.health();
+        assert!(!health.degraded);
+        assert_eq!(health.shed_large, 1);
+        assert_eq!(health.shed_small, 1);
+        assert_eq!(health.inflight, 0, "op guards settled the gauge");
+    }
+
+    #[test]
+    fn health_reports_shard_worker_liveness() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine.bins = 8;
+        cfg.engine.device_memory_budget = 1 << 10;
+        cfg.shard_workers = 2;
+        let srv = Server::new(manifest(), cfg);
+        let h0 = srv.health();
+        assert_eq!(h0.state, ServerState::Running);
+        assert_eq!((h0.shard_workers_alive, h0.shard_workers_total), (0, 0), "no executor yet");
+        let img = SyntheticVideo::new(40, 40, 1, 2).frame(0).binned(8);
+        let _ = srv.compute(&img).expect("sharded route");
+        let h1 = srv.health();
+        assert_eq!(h1.shard_workers_total, 2);
+        assert_eq!(h1.shard_workers_alive, 2, "healthy workers all alive");
+        assert_eq!(h1.shard_frames_failed, 0);
+        assert_eq!(h1.shard_frames_abandoned, 0);
+        assert_eq!(h1.inflight, 0);
+    }
+
+    /// A configured frame deadline rides through the server to the
+    /// shard route; a generous one never fires on healthy traffic.
+    #[test]
+    fn frame_deadline_passes_through_healthy() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine.bins = 8;
+        cfg.engine.device_memory_budget = 1 << 10;
+        cfg.shard_workers = 2;
+        cfg.frame_deadline = Some(Duration::from_secs(30));
+        let srv = Server::new(manifest(), cfg);
+        let img = SyntheticVideo::new(40, 40, 1, 2).frame(0).binned(8);
+        let (ih, _) = srv.compute(&img).expect("deadline must not fire");
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&ih), 0.0);
     }
 }

@@ -1,0 +1,394 @@
+//! Deterministic, seeded fault injection for chaos testing.
+//!
+//! The supervision machinery in this crate (shard retry, worker
+//! replacement, spill checksums, compile/device retry, server shedding)
+//! only earns trust if it can be exercised on demand.  This module
+//! provides a [`FaultInjector`] that components consult at **named
+//! sites** ([`FaultSite`]); the injector answers with an action to
+//! simulate — panic, spurious error, slow worker, or corrupted spill
+//! bytes — or `None`.
+//!
+//! Two properties make the resulting chaos runs reproducible:
+//!
+//! 1. **Interleaving independence.** The decision for the *n*-th
+//!    occurrence at a site is a pure splitmix64 hash of
+//!    `(seed, site, n)`; the only shared state is a per-site atomic
+//!    occurrence counter.  Whichever thread reaches the site n-th gets
+//!    the n-th decision, so the *multiset* of injected faults per site
+//!    is identical across runs regardless of scheduling.
+//! 2. **Bounded schedules.** `max_per_site` caps injections per site so
+//!    a chaos test reaches a fault-free steady state and can assert
+//!    bit-identical recovery on trailing traffic.
+//!
+//! The whole module compiles to inert stubs unless the crate is built
+//! with `--features fault-injection`: [`FaultInjector::decide`] becomes
+//! an inlined `None`, so release hot paths carry no branches, counters
+//! or RNG state.  Components therefore hold an
+//! `Option<Arc<FaultInjector>>` unconditionally and the compiler folds
+//! the probe away in production builds.
+
+use std::time::Duration;
+
+/// Named injection sites.  Each maps to exactly one probe in the code:
+/// adding a site here without wiring a probe is a dead schedule entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// `shard::executor` worker, once per compute attempt.
+    ShardCompute,
+    /// `shard::store::TensorStore::write_rows`, after checksumming.
+    SpillWrite,
+    /// `shard::store::TensorStore::read_rows`, after the read.
+    SpillRead,
+    /// `runtime::compile_cache` compile attempt.
+    Compile,
+}
+
+/// Number of distinct [`FaultSite`] values (array-indexed counters).
+pub const FAULT_SITES: usize = 4;
+
+impl FaultSite {
+    /// Stable dense index for counter arrays and hashing.
+    pub fn index(self) -> usize {
+        match self {
+            FaultSite::ShardCompute => 0,
+            FaultSite::SpillWrite => 1,
+            FaultSite::SpillRead => 2,
+            FaultSite::Compile => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::ShardCompute => "shard_compute",
+            FaultSite::SpillWrite => "spill_write",
+            FaultSite::SpillRead => "spill_read",
+            FaultSite::Compile => "compile",
+        }
+    }
+}
+
+/// What a probe should simulate when the injector fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic inside the supervised region (`ShardCompute` only).
+    Panic,
+    /// Fail the attempt with a spurious error (`ShardCompute`, `Compile`).
+    Error,
+    /// Sleep this long, then proceed normally — a slow worker.
+    Delay(Duration),
+    /// Flip bytes in the buffer at hand (`SpillWrite`, `SpillRead`).
+    Corrupt,
+}
+
+/// Per-site probabilities of a seeded fault schedule.
+///
+/// Probabilities are evaluated per occurrence; for `ShardCompute` the
+/// panic/error/delay probabilities partition one uniform draw, so their
+/// sum must be ≤ 1.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    /// P(panic) per shard compute attempt.
+    pub shard_panic: f64,
+    /// P(spurious error) per shard compute attempt.
+    pub shard_error: f64,
+    /// P(slow worker) per shard compute attempt.
+    pub shard_delay: f64,
+    /// Sleep applied when a delay fires.
+    pub delay: Duration,
+    /// P(corrupt bytes reaching disk) per `write_rows` call.
+    pub spill_corrupt_write: f64,
+    /// P(corrupt bytes after a read) per `read_rows` call.
+    pub spill_corrupt_read: f64,
+    /// P(spurious failure) per compile attempt.
+    pub compile_error: f64,
+    /// Cap on injections per site; 0 means unbounded.
+    pub max_per_site: usize,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            shard_panic: 0.0,
+            shard_error: 0.0,
+            shard_delay: 0.0,
+            delay: Duration::from_millis(1),
+            spill_corrupt_write: 0.0,
+            spill_corrupt_read: 0.0,
+            compile_error: 0.0,
+            max_per_site: 0,
+        }
+    }
+}
+
+/// Counter snapshot of everything an injector has done so far.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Probe evaluations per site (fired or not).
+    pub occurrences: [usize; FAULT_SITES],
+    /// Faults actually injected per site.
+    pub injected: [usize; FAULT_SITES],
+    pub panics: usize,
+    pub errors: usize,
+    pub delays: usize,
+    pub corrupt_writes: usize,
+    pub corrupt_reads: usize,
+    pub compile_errors: usize,
+}
+
+impl FaultStats {
+    /// Total faults injected across all sites.
+    pub fn total_injected(&self) -> usize {
+        self.injected.iter().sum()
+    }
+}
+
+/// splitmix64 finalizer — the same mix `util::prng` seeds with, reused
+/// here as a stateless hash so decisions need no per-thread RNG.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform f64 in [0, 1) for occurrence `n` at `site` under `seed`.
+/// Pure: the chaos harness (and its Python prevalidation twin) replay
+/// the exact schedule from the same inputs.
+pub fn fault_roll(seed: u64, site: FaultSite, n: u64) -> f64 {
+    let h = splitmix64(seed ^ splitmix64(site.index() as u64 ^ n.wrapping_mul(0xA076_1D64_78BD_642F)));
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Deterministically flip one byte of `buf` (position and XOR mask both
+/// derived from `salt`).  No-op on an empty buffer.
+pub fn corrupt_bytes(buf: &mut [u8], salt: u64) {
+    if buf.is_empty() {
+        return;
+    }
+    let h = splitmix64(salt);
+    let pos = (h as usize) % buf.len();
+    // Guarantee an actual change: XOR with a non-zero mask.
+    let mask = ((h >> 32) as u8) | 1;
+    buf[pos] ^= mask;
+}
+
+#[cfg(feature = "fault-injection")]
+mod imp {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Seeded fault source consulted by supervised components.
+    #[derive(Debug)]
+    pub struct FaultInjector {
+        seed: u64,
+        spec: FaultSpec,
+        occ: [AtomicUsize; FAULT_SITES],
+        injected: [AtomicUsize; FAULT_SITES],
+        panics: AtomicUsize,
+        errors: AtomicUsize,
+        delays: AtomicUsize,
+        corrupt_writes: AtomicUsize,
+        corrupt_reads: AtomicUsize,
+        compile_errors: AtomicUsize,
+    }
+
+    impl FaultInjector {
+        pub fn new(seed: u64, spec: FaultSpec) -> Self {
+            let sum = spec.shard_panic + spec.shard_error + spec.shard_delay;
+            assert!(sum <= 1.0, "shard fault probabilities sum to {sum} > 1");
+            FaultInjector {
+                seed,
+                spec,
+                occ: Default::default(),
+                injected: Default::default(),
+                panics: AtomicUsize::new(0),
+                errors: AtomicUsize::new(0),
+                delays: AtomicUsize::new(0),
+                corrupt_writes: AtomicUsize::new(0),
+                corrupt_reads: AtomicUsize::new(0),
+                compile_errors: AtomicUsize::new(0),
+            }
+        }
+
+        /// Whether the chaos build is active (true here).
+        pub fn armed(&self) -> bool {
+            true
+        }
+
+        /// Consult the schedule at `site`.  Returns the action to
+        /// simulate, or `None` to proceed normally.
+        pub fn decide(&self, site: FaultSite) -> Option<FaultAction> {
+            let i = site.index();
+            let n = self.occ[i].fetch_add(1, Ordering::Relaxed) as u64;
+            let cap = self.spec.max_per_site;
+            if cap > 0 && self.injected[i].load(Ordering::Relaxed) >= cap {
+                return None;
+            }
+            let u = fault_roll(self.seed, site, n);
+            let action = match site {
+                FaultSite::ShardCompute => {
+                    if u < self.spec.shard_panic {
+                        Some(FaultAction::Panic)
+                    } else if u < self.spec.shard_panic + self.spec.shard_error {
+                        Some(FaultAction::Error)
+                    } else if u < self.spec.shard_panic + self.spec.shard_error + self.spec.shard_delay {
+                        Some(FaultAction::Delay(self.spec.delay))
+                    } else {
+                        None
+                    }
+                }
+                FaultSite::SpillWrite => (u < self.spec.spill_corrupt_write).then_some(FaultAction::Corrupt),
+                FaultSite::SpillRead => (u < self.spec.spill_corrupt_read).then_some(FaultAction::Corrupt),
+                FaultSite::Compile => (u < self.spec.compile_error).then_some(FaultAction::Error),
+            };
+            if let Some(a) = action {
+                self.injected[i].fetch_add(1, Ordering::Relaxed);
+                match a {
+                    FaultAction::Panic => self.panics.fetch_add(1, Ordering::Relaxed),
+                    FaultAction::Delay(_) => self.delays.fetch_add(1, Ordering::Relaxed),
+                    FaultAction::Error => match site {
+                        FaultSite::Compile => self.compile_errors.fetch_add(1, Ordering::Relaxed),
+                        _ => self.errors.fetch_add(1, Ordering::Relaxed),
+                    },
+                    FaultAction::Corrupt => match site {
+                        FaultSite::SpillWrite => self.corrupt_writes.fetch_add(1, Ordering::Relaxed),
+                        _ => self.corrupt_reads.fetch_add(1, Ordering::Relaxed),
+                    },
+                };
+            }
+            action
+        }
+
+        /// Snapshot of everything injected so far.
+        pub fn stats(&self) -> FaultStats {
+            let load = |a: &[AtomicUsize; FAULT_SITES]| {
+                let mut out = [0usize; FAULT_SITES];
+                for (o, v) in out.iter_mut().zip(a.iter()) {
+                    *o = v.load(Ordering::Relaxed);
+                }
+                out
+            };
+            FaultStats {
+                occurrences: load(&self.occ),
+                injected: load(&self.injected),
+                panics: self.panics.load(Ordering::Relaxed),
+                errors: self.errors.load(Ordering::Relaxed),
+                delays: self.delays.load(Ordering::Relaxed),
+                corrupt_writes: self.corrupt_writes.load(Ordering::Relaxed),
+                corrupt_reads: self.corrupt_reads.load(Ordering::Relaxed),
+                compile_errors: self.compile_errors.load(Ordering::Relaxed),
+            }
+        }
+    }
+}
+
+#[cfg(not(feature = "fault-injection"))]
+mod imp {
+    use super::*;
+
+    /// Inert stub: without the `fault-injection` feature every probe is
+    /// an inlined `None` and the optimizer removes the branch entirely.
+    #[derive(Debug)]
+    pub struct FaultInjector;
+
+    impl FaultInjector {
+        pub fn new(_seed: u64, _spec: FaultSpec) -> Self {
+            FaultInjector
+        }
+
+        /// Whether the chaos build is active (false here).
+        #[inline(always)]
+        pub fn armed(&self) -> bool {
+            false
+        }
+
+        #[inline(always)]
+        pub fn decide(&self, _site: FaultSite) -> Option<FaultAction> {
+            None
+        }
+
+        pub fn stats(&self) -> FaultStats {
+            FaultStats::default()
+        }
+    }
+}
+
+pub use imp::FaultInjector;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roll_is_deterministic_and_uniform() {
+        let a: Vec<f64> = (0..64).map(|n| fault_roll(42, FaultSite::ShardCompute, n)).collect();
+        let b: Vec<f64> = (0..64).map(|n| fault_roll(42, FaultSite::ShardCompute, n)).collect();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&u| (0.0..1.0).contains(&u)));
+        // Different sites / seeds decorrelate.
+        let c: Vec<f64> = (0..64).map(|n| fault_roll(42, FaultSite::SpillRead, n)).collect();
+        assert_ne!(a, c);
+        let d: Vec<f64> = (0..64).map(|n| fault_roll(43, FaultSite::ShardCompute, n)).collect();
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn corrupt_changes_exactly_one_byte() {
+        let orig: Vec<u8> = (0..=255u8).collect();
+        let mut buf = orig.clone();
+        corrupt_bytes(&mut buf, 7);
+        let diffs = orig.iter().zip(&buf).filter(|(a, b)| a != b).count();
+        assert_eq!(diffs, 1);
+        // Deterministic for the same salt.
+        let mut buf2 = orig.clone();
+        corrupt_bytes(&mut buf2, 7);
+        assert_eq!(buf, buf2);
+        corrupt_bytes(&mut [], 3); // no-op, must not panic
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn armed_injector_honors_probabilities_and_cap() {
+        let spec = FaultSpec { shard_panic: 1.0, max_per_site: 3, ..FaultSpec::default() };
+        let fi = FaultInjector::new(1, spec);
+        assert!(fi.armed());
+        for _ in 0..3 {
+            assert_eq!(fi.decide(FaultSite::ShardCompute), Some(FaultAction::Panic));
+        }
+        // Cap reached: further probes are clean.
+        for _ in 0..10 {
+            assert_eq!(fi.decide(FaultSite::ShardCompute), None);
+        }
+        let st = fi.stats();
+        assert_eq!(st.panics, 3);
+        assert_eq!(st.injected[FaultSite::ShardCompute.index()], 3);
+        assert_eq!(st.occurrences[FaultSite::ShardCompute.index()], 13);
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn same_seed_same_schedule() {
+        let spec = FaultSpec {
+            shard_panic: 0.2,
+            shard_error: 0.2,
+            shard_delay: 0.1,
+            ..FaultSpec::default()
+        };
+        let a = FaultInjector::new(99, spec);
+        let b = FaultInjector::new(99, spec);
+        let sa: Vec<_> = (0..256).map(|_| a.decide(FaultSite::ShardCompute)).collect();
+        let sb: Vec<_> = (0..256).map(|_| b.decide(FaultSite::ShardCompute)).collect();
+        assert_eq!(sa, sb);
+        assert!(sa.iter().any(|d| d.is_some()) && sa.iter().any(|d| d.is_none()));
+    }
+
+    #[cfg(not(feature = "fault-injection"))]
+    #[test]
+    fn stub_injector_is_inert() {
+        let spec = FaultSpec { shard_panic: 1.0, ..FaultSpec::default() };
+        let fi = FaultInjector::new(1, spec);
+        assert!(!fi.armed());
+        assert_eq!(fi.decide(FaultSite::ShardCompute), None);
+        assert_eq!(fi.stats(), FaultStats::default());
+    }
+}

@@ -68,11 +68,11 @@ struct State {
     active: usize,
     /// A participant panicked while running the current job.
     poisoned: bool,
-    /// Workers lost to task panics (their threads unwound away).  Once
-    /// nonzero the pool degrades to caller-only execution — results
-    /// stay correct, parallelism is gone — instead of dispatching to
-    /// slots that can never answer.
-    dead: usize,
+    /// Slots whose worker threads unwound away on a task panic.  The
+    /// submitter replaces them (join + respawn) at the top of the next
+    /// [`WorkerPool::run`], so a panic costs one job's parallelism,
+    /// not the pool's.
+    dead_slots: Vec<usize>,
     shutdown: bool,
 }
 
@@ -96,20 +96,27 @@ impl Shared {
 /// Pool observability counters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct WorkerPoolStats {
-    /// Worker threads currently owned by the pool.
+    /// Worker threads currently alive in the pool.
     pub threads: usize,
-    /// Threads ever spawned — constant after construction; the
-    /// steady-state "zero thread spawns" assertion reads this.
+    /// Threads ever spawned — constant in a panic-free run; the
+    /// steady-state "zero thread spawns" assertion reads this, and it
+    /// grows by exactly one per replaced worker.
     pub spawned: usize,
     /// Jobs dispatched through [`WorkerPool::run`] (parallel or not).
     pub jobs: usize,
+    /// Dead workers detected and replaced (counter-asserted in
+    /// `pool_replaces_dead_worker_after_panic`).
+    pub replaced: usize,
 }
 
 /// A fixed-size pool of parked worker threads.  See the module docs.
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    handles: Vec<JoinHandle<()>>,
+    /// Slot-indexed; `None` only if a respawn failed (the pool then
+    /// degrades to caller-only rather than deadlock on the empty slot).
+    handles: Vec<Option<JoinHandle<()>>>,
     spawned: usize,
+    replaced: usize,
     jobs: AtomicUsize,
 }
 
@@ -126,6 +133,7 @@ impl std::fmt::Debug for WorkerPool {
 /// task, so the submitter can never deadlock on a panicked participant.
 struct ActiveGuard<'a> {
     shared: &'a Shared,
+    slot: usize,
 }
 
 impl Drop for ActiveGuard<'_> {
@@ -133,7 +141,7 @@ impl Drop for ActiveGuard<'_> {
         let mut st = self.shared.lock();
         if std::thread::panicking() {
             st.poisoned = true;
-            st.dead += 1;
+            st.dead_slots.push(self.slot);
         }
         st.active -= 1;
         if st.active == 0 {
@@ -162,9 +170,14 @@ impl Drop for JobGuard<'_> {
     }
 }
 
-fn worker_loop(shared: &Shared, slot: usize) {
+/// `init_epoch` is the scheduler epoch at spawn time — a replacement
+/// worker must start from the *current* epoch, not 0: starting behind
+/// would make it "see" an epoch bump for a job that already drained
+/// (stale `task` is `None` → panic), and starting ahead would make it
+/// skip the next real job (its `active` slot never drains → deadlock).
+fn worker_loop(shared: &Shared, slot: usize, init_epoch: u64) {
     let mut scratch = TileScratch::default();
-    let mut seen = 0u64;
+    let mut seen = init_epoch;
     loop {
         let task = {
             let mut st = shared.lock();
@@ -186,8 +199,9 @@ fn worker_loop(shared: &Shared, slot: usize) {
         };
         // Run outside the lock; the guard keeps `active` correct even
         // if the task panics (the panic then ends this worker thread,
-        // and the submitter re-raises via the poison flag).
-        let _g = ActiveGuard { shared };
+        // registers its slot for replacement, and the submitter
+        // re-raises via the poison flag).
+        let _g = ActiveGuard { shared, slot };
         // SAFETY: the submitter keeps the closure alive until `active`
         // reaches 0, which this thread only signals after returning.
         unsafe { (task.run)(task.ctx, slot + 1, &mut scratch) };
@@ -205,7 +219,7 @@ impl WorkerPool {
                 participants: 0,
                 active: 0,
                 poisoned: false,
-                dead: 0,
+                dead_slots: Vec::new(),
                 shutdown: false,
             }),
             work: Condvar::new(),
@@ -216,23 +230,58 @@ impl WorkerPool {
             let shared = Arc::clone(&shared);
             let h = std::thread::Builder::new()
                 .name(format!("inthist-worker-{slot}"))
-                .spawn(move || worker_loop(&shared, slot))
+                .spawn(move || worker_loop(&shared, slot, 0))
                 .expect("spawn pool worker");
-            handles.push(h);
+            handles.push(Some(h));
         }
-        WorkerPool { shared, spawned: threads, handles, jobs: AtomicUsize::new(0) }
+        WorkerPool { shared, spawned: threads, replaced: 0, handles, jobs: AtomicUsize::new(0) }
     }
 
-    /// Worker threads owned by the pool.
+    /// Worker threads currently alive in the pool.
     pub fn threads(&self) -> usize {
-        self.handles.len()
+        self.handles.iter().filter(|h| h.is_some()).count()
     }
 
     pub fn stats(&self) -> WorkerPoolStats {
         WorkerPoolStats {
-            threads: self.handles.len(),
+            threads: self.threads(),
             spawned: self.spawned,
             jobs: self.jobs.load(Ordering::Relaxed),
+            replaced: self.replaced,
+        }
+    }
+
+    /// Join and respawn any workers lost to task panics since the last
+    /// job.  Runs at the top of [`Self::run`]: `&mut self` guarantees
+    /// no job is in flight, so the epoch read here is the one the
+    /// replacement worker must resume from.
+    fn replace_dead(&mut self) {
+        let (dead, epoch) = {
+            let mut st = self.shared.lock();
+            if st.dead_slots.is_empty() {
+                return;
+            }
+            (std::mem::take(&mut st.dead_slots), st.epoch)
+        };
+        for slot in dead {
+            if let Some(h) = self.handles[slot].take() {
+                let _ = h.join(); // the unwinding thread; completes promptly
+            }
+            let shared = Arc::clone(&self.shared);
+            match std::thread::Builder::new()
+                .name(format!("inthist-worker-{slot}"))
+                .spawn(move || worker_loop(&shared, slot, epoch))
+            {
+                Ok(h) => {
+                    self.handles[slot] = Some(h);
+                    self.spawned += 1;
+                    self.replaced += 1;
+                }
+                Err(_) => {
+                    // Respawn refused (fd/thread exhaustion): leave the
+                    // slot empty; run() degrades to caller-only.
+                }
+            }
         }
     }
 
@@ -247,10 +296,12 @@ impl WorkerPool {
         F: Fn(usize, &mut TileScratch) + Sync,
     {
         self.jobs.fetch_add(1, Ordering::Relaxed);
-        // A pool that lost a worker to a panic degrades to caller-only:
-        // slot assignment is fixed per thread, so a dead slot below the
-        // participant count could never drain `active` (deadlock).
-        let helpers = if self.shared.lock().dead > 0 {
+        self.replace_dead();
+        // Slot assignment is fixed per thread, so an empty slot below
+        // the participant count could never drain `active` (deadlock).
+        // After replacement the only empty slots are failed respawns —
+        // then run caller-only rather than risk dispatching into one.
+        let helpers = if self.handles.iter().any(|h| h.is_none()) {
             0
         } else {
             helpers.min(self.handles.len())
@@ -287,7 +338,7 @@ impl Drop for WorkerPool {
             st.shutdown = true;
             self.shared.work.notify_all();
         }
-        for h in self.handles.drain(..) {
+        for h in self.handles.drain(..).flatten() {
             let _ = h.join();
         }
     }
@@ -375,10 +426,11 @@ mod tests {
         });
     }
 
-    /// After a caught helper panic the pool must stay usable (degraded
-    /// to caller-only execution), never deadlock on the dead slot.
+    /// After a caught helper panic the pool must detect the dead slot,
+    /// replace the worker, and restore full parallelism — never
+    /// deadlock, never permanently degrade.
     #[test]
-    fn pool_degrades_to_caller_after_panic() {
+    fn pool_replaces_dead_worker_after_panic() {
         let mut pool = WorkerPool::new(1);
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             pool.run(1, &mut TileScratch::default(), |slot, _s| {
@@ -388,11 +440,42 @@ mod tests {
             });
         }));
         assert!(outcome.is_err(), "panic must propagate");
-        let count = AtomicU32::new(0);
+        let seen = Mutex::new(Vec::new());
         pool.run(1, &mut TileScratch::default(), |slot, _s| {
-            assert_eq!(slot, 0, "degraded pool runs the caller only");
-            count.fetch_add(1, Ordering::Relaxed);
+            seen.lock().unwrap().push(slot);
         });
-        assert_eq!(count.load(Ordering::Relaxed), 1);
+        let mut got = seen.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1], "replacement restores full parallelism");
+        let st = pool.stats();
+        assert_eq!(st.replaced, 1, "exactly one worker was replaced");
+        assert_eq!(st.spawned, 2, "original + replacement");
+        assert_eq!(st.threads, 1);
+    }
+
+    /// Replacement must work repeatedly — every panic cycle costs one
+    /// respawn and nothing else.
+    #[test]
+    fn repeated_panics_keep_replacing() {
+        let mut pool = WorkerPool::new(2);
+        for cycle in 0..3u32 {
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.run(2, &mut TileScratch::default(), |slot, _s| {
+                    if slot == 2 {
+                        panic!("cycle {cycle}");
+                    }
+                });
+            }));
+            assert!(outcome.is_err());
+            let count = AtomicU32::new(0);
+            pool.run(2, &mut TileScratch::default(), |_slot, _s| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), 3, "cycle {cycle}: caller + 2 workers");
+        }
+        let st = pool.stats();
+        assert_eq!(st.replaced, 3);
+        assert_eq!(st.spawned, 5, "2 original + 3 replacements");
+        assert_eq!(st.threads, 2);
     }
 }

@@ -39,6 +39,7 @@
 
 pub mod analytics;
 pub mod coordinator;
+pub mod fault;
 pub mod figures;
 pub mod histogram;
 pub mod runtime;
@@ -64,11 +65,12 @@ pub mod prelude {
     };
     pub use crate::histogram::region::Rect;
     pub use crate::histogram::types::{IntegralHistogram, Strategy};
+    pub use crate::fault::{FaultAction, FaultInjector, FaultSite, FaultSpec, FaultStats};
     pub use crate::runtime::artifact::{ArtifactManifest, ArtifactMeta};
     pub use crate::runtime::client::HistogramExecutor;
     pub use crate::shard::{
-        FrameTicket, ShardExecutor, ShardExecutorConfig, ShardPlan, ShardPlanner, ShardPolicy,
-        ShardReport, TensorStore,
+        FrameTicket, ShardError, ShardExecutor, ShardExecutorConfig, ShardPlan, ShardPlanner,
+        ShardPolicy, ShardReport, TensorStore,
     };
     pub use crate::simulator::pcie::PcieModel;
     pub use crate::video::source::{FrameSource, VideoFrame};

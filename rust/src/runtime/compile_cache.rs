@@ -9,6 +9,14 @@
 //! Failures are negatively cached so a missing/broken HLO file is read
 //! once, not once per frame, on the fallback path.
 //!
+//! Transient-failure handling (DESIGN.md §8): a [`RetryPolicy`] can
+//! re-run a failed compile with exponential backoff before the
+//! negative cache takes over, and negative entries can carry a TTL
+//! after which one fresh attempt is allowed ("redemption") — so a
+//! driver hiccup at startup does not permanently demote an artifact
+//! to the CPU path.  Defaults (`attempts == 1`, no TTL) reproduce the
+//! original compile-once-then-negative-cache behaviour exactly.
+//!
 //! Concurrency note: the offline build's `xla` stub types are plain
 //! data, so sharing executors behind `Arc` is sound.  A real PJRT
 //! backend with non-`Sync` FFI handles must keep per-thread executors
@@ -19,14 +27,17 @@
 //! another thread compiled, while the `Arc<HistogramExecutor>` API the
 //! routers consume stays unchanged (DESIGN.md §5).
 
+use crate::fault::{FaultAction, FaultInjector, FaultSite};
 use crate::histogram::types::Strategy;
 use crate::runtime::artifact::{ArtifactManifest, ArtifactMeta};
 use crate::runtime::client::HistogramExecutor;
+use crate::util::sync::lock_recover;
 use anyhow::{anyhow, Result};
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::ThreadId;
+use std::time::{Duration, Instant};
 
 /// How compiled executors may be shared across threads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -41,6 +52,31 @@ pub enum ExecutorScope {
     PerThread,
 }
 
+/// Transient-failure policy for compiles (and, via
+/// [`crate::runtime::device_pool::DevicePolicy`], executions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total compile attempts per request before the failure is
+    /// negatively cached.  `1` = no retry (the original behaviour).
+    pub attempts: usize,
+    /// Sleep before attempt `k+1` is `backoff << k` — exponential,
+    /// starting at this base.  Compiles are pre-stream one-offs, so
+    /// the sleep happens under the cache lock by design (same as the
+    /// compile itself); keep the base small.
+    pub backoff: Duration,
+    /// If set, a negatively cached artifact older than this TTL is
+    /// granted one fresh attempt ("redemption") instead of the cached
+    /// error.  `None` = negative entries are permanent until
+    /// [`CompileCache::clear`].
+    pub negative_ttl: Option<Duration>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { attempts: 1, backoff: Duration::from_millis(10), negative_ttl: None }
+    }
+}
+
 /// Outer cache key: `None` in [`ExecutorScope::Shared`] mode, the
 /// calling thread in [`ExecutorScope::PerThread`] mode.  Inner maps
 /// key by artifact name, so steady-state hits look up with a borrowed
@@ -50,9 +86,11 @@ type ScopeKey = Option<ThreadId>;
 #[derive(Default)]
 struct CacheState {
     compiled: HashMap<ScopeKey, HashMap<String, Arc<HistogramExecutor>>>,
-    /// Artifacts whose compile failed — negatively cached so the
-    /// per-frame fallback path never re-reads the HLO file.
-    failed: HashMap<ScopeKey, HashSet<String>>,
+    /// Artifacts whose compile failed, with the failure time — the
+    /// negative cache keeps the per-frame fallback path from re-reading
+    /// the HLO file, and the timestamp drives [`RetryPolicy`]'s
+    /// negative-TTL redemption.
+    failed: HashMap<ScopeKey, HashMap<String, Instant>>,
     /// Memoized (strategy, h, w, bins) → manifest-match results, so
     /// hot fallback paths can test availability without re-scanning
     /// the manifest or building error strings per frame.  Manifest
@@ -65,11 +103,18 @@ struct CacheState {
 pub struct CompileCache {
     manifest: Arc<ArtifactManifest>,
     scope: ExecutorScope,
+    retry: RetryPolicy,
+    faults: Option<Arc<FaultInjector>>,
     state: Mutex<CacheState>,
     /// Actual `HistogramExecutor::compile` invocations — the
     /// observable difference between the scopes (PerThread compiles
     /// once per thread, Shared once per process).
     compile_attempts: AtomicUsize,
+    /// Attempts beyond the first within a single request (retries).
+    compile_retries: AtomicUsize,
+    /// Negative-cache entries expired by `negative_ttl` and granted a
+    /// fresh attempt.
+    negative_redemptions: AtomicUsize,
 }
 
 impl CompileCache {
@@ -78,12 +123,31 @@ impl CompileCache {
     }
 
     pub fn with_scope(manifest: Arc<ArtifactManifest>, scope: ExecutorScope) -> CompileCache {
+        Self::with_policy(manifest, scope, RetryPolicy::default())
+    }
+
+    pub fn with_policy(
+        manifest: Arc<ArtifactManifest>,
+        scope: ExecutorScope,
+        retry: RetryPolicy,
+    ) -> CompileCache {
         CompileCache {
             manifest,
             scope,
+            retry,
+            faults: None,
             state: Mutex::new(CacheState::default()),
             compile_attempts: AtomicUsize::new(0),
+            compile_retries: AtomicUsize::new(0),
+            negative_redemptions: AtomicUsize::new(0),
         }
+    }
+
+    /// Wire a fault injector: each compile attempt consults
+    /// [`FaultSite::Compile`] and treats an injected `Error` as a
+    /// failed attempt (retried / negatively cached like a real one).
+    pub fn set_faults(&mut self, faults: Arc<FaultInjector>) {
+        self.faults = Some(faults);
     }
 
     pub fn manifest(&self) -> &Arc<ArtifactManifest> {
@@ -94,13 +158,31 @@ impl CompileCache {
         self.scope
     }
 
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry
+    }
+
     /// `HistogramExecutor::compile` calls performed so far.
     pub fn compile_attempts(&self) -> usize {
         self.compile_attempts.load(Ordering::Relaxed)
     }
 
+    /// Retry attempts (attempts beyond the first per request).
+    pub fn compile_retries(&self) -> usize {
+        self.compile_retries.load(Ordering::Relaxed)
+    }
+
+    /// Negative-cache entries redeemed after their TTL.
+    pub fn negative_redemptions(&self) -> usize {
+        self.negative_redemptions.load(Ordering::Relaxed)
+    }
+
     fn lock(&self) -> MutexGuard<'_, CacheState> {
-        self.state.lock().expect("compile cache lock")
+        // Cache maps are valid at every instruction boundary (inserts
+        // of complete entries), so a poisoned lock is recovered, not
+        // propagated — a panicking compile thread must not wedge every
+        // serving thread behind it (DESIGN.md §8).
+        lock_recover(&self.state)
     }
 
     fn scope_key(&self) -> ScopeKey {
@@ -119,24 +201,53 @@ impl CompileCache {
         if let Some(exe) = st.compiled.get(&scope).and_then(|m| m.get(meta.name.as_str())) {
             return Ok(Arc::clone(exe));
         }
-        if st.failed.get(&scope).is_some_and(|s| s.contains(meta.name.as_str())) {
-            return Err(anyhow!("artifact '{}' previously failed to compile", meta.name));
+        if let Some(&when) = st.failed.get(&scope).and_then(|m| m.get(meta.name.as_str())) {
+            let redeemed = self.retry.negative_ttl.is_some_and(|ttl| when.elapsed() >= ttl);
+            if !redeemed {
+                return Err(anyhow!("artifact '{}' previously failed to compile", meta.name));
+            }
+            // TTL expired: drop the entry and fall through to one
+            // fresh round of attempts.
+            if let Some(m) = st.failed.get_mut(&scope) {
+                m.remove(meta.name.as_str());
+            }
+            self.negative_redemptions.fetch_add(1, Ordering::Relaxed);
         }
         // Compile under the lock: concurrent first requests for one
         // artifact would otherwise compile it twice (compiles are rare
         // one-offs; serving threads are on the CPU path meanwhile).
-        self.compile_attempts.fetch_add(1, Ordering::Relaxed);
-        match HistogramExecutor::compile(&self.manifest, meta) {
-            Ok(exe) => {
-                let exe = Arc::new(exe);
-                st.compiled.entry(scope).or_default().insert(meta.name.clone(), Arc::clone(&exe));
-                Ok(exe)
+        let attempts = self.retry.attempts.max(1);
+        let mut last_err = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                self.compile_retries.fetch_add(1, Ordering::Relaxed);
+                let factor = 1u32 << (attempt - 1).min(16);
+                let pause = self.retry.backoff.saturating_mul(factor);
+                if !pause.is_zero() {
+                    std::thread::sleep(pause);
+                }
             }
-            Err(e) => {
-                st.failed.entry(scope).or_default().insert(meta.name.clone());
-                Err(e)
+            self.compile_attempts.fetch_add(1, Ordering::Relaxed);
+            if let Some(fi) = &self.faults {
+                if matches!(fi.decide(FaultSite::Compile), Some(FaultAction::Error)) {
+                    last_err = Some(anyhow!("injected compile failure for '{}'", meta.name));
+                    continue;
+                }
+            }
+            match HistogramExecutor::compile(&self.manifest, meta) {
+                Ok(exe) => {
+                    let exe = Arc::new(exe);
+                    st.compiled
+                        .entry(scope)
+                        .or_default()
+                        .insert(meta.name.clone(), Arc::clone(&exe));
+                    return Ok(exe);
+                }
+                Err(e) => last_err = Some(e),
             }
         }
+        st.failed.entry(scope).or_default().insert(meta.name.clone(), Instant::now());
+        Err(last_err.unwrap_or_else(|| anyhow!("compile of '{}' failed", meta.name)))
     }
 
     /// Find the artifact for (strategy, geometry, bins) and compile it,
@@ -217,7 +328,7 @@ impl std::fmt::Debug for CompileCache {
         f.debug_struct("CompileCache")
             .field("scope", &self.scope)
             .field("compiled", &st.compiled.values().map(|m| m.len()).sum::<usize>())
-            .field("failed", &st.failed.values().map(|s| s.len()).sum::<usize>())
+            .field("failed", &st.failed.values().map(|m| m.len()).sum::<usize>())
             .finish()
     }
 }
@@ -338,5 +449,39 @@ mod tests {
         // attempt, not a hit on another thread's entry.
         assert!(cache.get_or_compile(&meta).is_err());
         assert_eq!(cache.compile_attempts(), 4);
+    }
+
+    /// A retrying policy burns all attempts before negatively caching,
+    /// and the negative cache then answers without further attempts.
+    #[test]
+    fn retry_policy_exhausts_attempts_then_caches() {
+        let retry = RetryPolicy { attempts: 3, backoff: Duration::ZERO, negative_ttl: None };
+        let cache = CompileCache::with_policy(empty_manifest(), ExecutorScope::Shared, retry);
+        let meta = fake_meta("wf_tis_8x8_b4_t8");
+        assert!(cache.get_or_compile(&meta).is_err());
+        assert_eq!(cache.compile_attempts(), 3, "all attempts consumed");
+        assert_eq!(cache.compile_retries(), 2);
+        assert!(cache.get_or_compile(&meta).is_err());
+        assert_eq!(cache.compile_attempts(), 3, "second request is a pure negative hit");
+        assert_eq!(cache.negative_redemptions(), 0);
+    }
+
+    /// An expired negative entry earns exactly one fresh round of
+    /// attempts (redemption), then is re-cached.
+    #[test]
+    fn negative_ttl_redeems_expired_entries() {
+        let retry = RetryPolicy {
+            attempts: 1,
+            backoff: Duration::ZERO,
+            negative_ttl: Some(Duration::ZERO),
+        };
+        let cache = CompileCache::with_policy(empty_manifest(), ExecutorScope::Shared, retry);
+        let meta = fake_meta("wf_tis_8x8_b4_t8");
+        assert!(cache.get_or_compile(&meta).is_err());
+        assert_eq!(cache.compile_attempts(), 1);
+        // TTL of zero: the entry is immediately redeemable.
+        assert!(cache.get_or_compile(&meta).is_err());
+        assert_eq!(cache.compile_attempts(), 2, "redeemed entry retried the compile");
+        assert_eq!(cache.negative_redemptions(), 1);
     }
 }

@@ -15,13 +15,26 @@
 //! outside `[0, group)` count in no bin, so the artifact computes
 //! exactly the requested plane slice.  This is how the paper tiles the
 //! 3-D tensor along the bin direction without recompiling per group.
+//!
+//! Fault handling (DESIGN.md §8): a [`DevicePolicy`] gives each device
+//! attempt bounded retries with exponential backoff, and a worker whose
+//! device path fails `demote_after` consecutive jobs is *demoted* — it
+//! stops attempting the device and serves every job on its CPU
+//! [`ScanEngine`] (a flapping device should not pay a failed dispatch
+//! per job).  With `redemption_ttl` set, a demoted worker retries the
+//! device once the TTL elapses; without it, demotion is permanent for
+//! the pool's lifetime.  All transitions are counted in
+//! [`DevicePoolStats`].
 
+use crate::fault::{FaultAction, FaultInjector, FaultSite};
 use crate::histogram::engine::ScanEngine;
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
 use crate::runtime::artifact::ArtifactManifest;
 use crate::runtime::client::HistogramExecutor;
-use anyhow::{Context, Result};
+use crate::util::sync::lock_recover;
+use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -51,12 +64,73 @@ pub struct JobOutput {
     pub kernel_time: Duration,
 }
 
+/// Per-pool execution policy: device retry, CPU fallback, and the
+/// consecutive-failure demotion ladder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DevicePolicy {
+    /// Serve device-path failures on a per-worker CPU [`ScanEngine`]
+    /// (bit-identical output).  Demotion requires this — a demoted
+    /// worker with no fallback would only manufacture errors.
+    pub cpu_fallback: bool,
+    /// Device attempts per job before falling back / erroring.
+    /// `1` = no retry (the original behaviour).
+    pub exec_attempts: usize,
+    /// Backoff before device attempt `k+1` is `backoff << k`.
+    pub backoff: Duration,
+    /// Consecutive device-path job failures after which a worker stops
+    /// attempting the device at all.
+    pub demote_after: usize,
+    /// If set, a demoted worker re-tries the device after this long
+    /// ("redemption"); `None` = demotion is permanent.
+    pub redemption_ttl: Option<Duration>,
+}
+
+impl Default for DevicePolicy {
+    fn default() -> DevicePolicy {
+        DevicePolicy {
+            cpu_fallback: false,
+            exec_attempts: 1,
+            backoff: Duration::from_millis(5),
+            demote_after: 3,
+            redemption_ttl: None,
+        }
+    }
+}
+
+/// Snapshot of pool-wide fault/fallback counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DevicePoolStats {
+    /// Jobs served by the device path.
+    pub device_jobs: usize,
+    /// Jobs served by the CPU fallback engine.
+    pub cpu_jobs: usize,
+    /// Failed device attempts (each retry that fails counts).
+    pub exec_failures: usize,
+    /// Device attempts beyond the first within a single job.
+    pub exec_retries: usize,
+    /// Workers demoted to CPU-only service.
+    pub demotions: usize,
+    /// Demoted workers that re-tried the device after `redemption_ttl`.
+    pub redemptions: usize,
+}
+
+#[derive(Default)]
+struct PoolShared {
+    device_jobs: AtomicUsize,
+    cpu_jobs: AtomicUsize,
+    exec_failures: AtomicUsize,
+    exec_retries: AtomicUsize,
+    demotions: AtomicUsize,
+    redemptions: AtomicUsize,
+}
+
 /// A pool of `n` PJRT workers pulling from a shared job queue.
 pub struct DevicePool {
     tx: Option<mpsc::Sender<Job>>,
     rx: mpsc::Receiver<Result<JobOutput>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     workers: usize,
+    shared: Arc<PoolShared>,
 }
 
 impl DevicePool {
@@ -77,30 +151,113 @@ impl DevicePool {
         workers: usize,
         cpu_fallback: bool,
     ) -> DevicePool {
+        Self::with_policy(manifest, workers, DevicePolicy { cpu_fallback, ..Default::default() })
+    }
+
+    /// Full-control constructor: retry/demotion policy per
+    /// [`DevicePolicy`], plus an optional [`FaultInjector`] whose
+    /// [`FaultSite::Compile`] decisions are consulted on every device
+    /// attempt (an injected `Error` fails the attempt like a real one).
+    pub fn with_policy(
+        manifest: Arc<ArtifactManifest>,
+        workers: usize,
+        policy: DevicePolicy,
+    ) -> DevicePool {
+        Self::build(manifest, workers, policy, None)
+    }
+
+    pub fn with_faults(
+        manifest: Arc<ArtifactManifest>,
+        workers: usize,
+        policy: DevicePolicy,
+        faults: Arc<FaultInjector>,
+    ) -> DevicePool {
+        Self::build(manifest, workers, policy, Some(faults))
+    }
+
+    fn build(
+        manifest: Arc<ArtifactManifest>,
+        workers: usize,
+        policy: DevicePolicy,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> DevicePool {
         assert!(workers >= 1, "need at least one worker");
         let (job_tx, job_rx) = mpsc::channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let (out_tx, out_rx) = mpsc::channel();
+        let shared = Arc::new(PoolShared::default());
         let mut handles = Vec::with_capacity(workers);
         for worker_id in 0..workers {
             let job_rx = Arc::clone(&job_rx);
             let out_tx = out_tx.clone();
             let manifest = Arc::clone(&manifest);
+            let shared = Arc::clone(&shared);
+            let faults = faults.clone();
             handles.push(std::thread::spawn(move || {
                 let mut cache: HashMap<String, HistogramExecutor> = HashMap::new();
                 // Lazy per-worker fallback engine (one "device context"
                 // per worker, like the executor cache above).
                 let mut engine: Option<ScanEngine> = None;
+                // Demotion state: `None` = on the device path;
+                // `Some(None)` = demoted permanently; `Some(Some(t))` =
+                // demoted until `t` (redemption).
+                let mut demoted_until: Option<Option<Instant>> = None;
+                let mut consecutive_failures = 0usize;
                 loop {
-                    // Pull the next task (the Fig. 18 task queue).
-                    let job = match job_rx.lock().expect("queue lock").recv() {
+                    // Pull the next task (the Fig. 18 task queue).  A
+                    // poisoned queue lock is recovered: the receiver is
+                    // valid at every instruction boundary, and one
+                    // panicking worker must not idle the whole pool.
+                    let job = match lock_recover(&job_rx).recv() {
                         Ok(j) => j,
                         Err(_) => break, // queue closed: drain and exit
                     };
-                    let mut out = run_job(&manifest, &mut cache, worker_id, &job);
-                    if out.is_err() && cpu_fallback {
+                    if let Some(Some(t)) = demoted_until {
+                        if Instant::now() >= t {
+                            // TTL elapsed: give the device one fresh run.
+                            demoted_until = None;
+                            consecutive_failures = 0;
+                            shared.redemptions.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    let mut out = if demoted_until.is_none() {
+                        let r = run_job_with_retry(
+                            &manifest,
+                            &mut cache,
+                            worker_id,
+                            &job,
+                            &policy,
+                            faults.as_deref(),
+                            &shared,
+                        );
+                        match r {
+                            Ok(o) => {
+                                consecutive_failures = 0;
+                                shared.device_jobs.fetch_add(1, Ordering::Relaxed);
+                                Ok(o)
+                            }
+                            Err(e) => {
+                                consecutive_failures += 1;
+                                if policy.cpu_fallback
+                                    && consecutive_failures >= policy.demote_after.max(1)
+                                {
+                                    shared.demotions.fetch_add(1, Ordering::Relaxed);
+                                    demoted_until = Some(
+                                        policy.redemption_ttl.map(|ttl| Instant::now() + ttl),
+                                    );
+                                }
+                                Err(e)
+                            }
+                        }
+                    } else {
+                        Err(anyhow!("worker {worker_id} demoted to CPU"))
+                    };
+                    if out.is_err() && policy.cpu_fallback {
                         let eng = engine.get_or_insert_with(|| ScanEngine::new(1));
                         out = run_job_cpu(eng, worker_id, &job);
+                        if out.is_ok() {
+                            shared.cpu_jobs.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                     if out_tx.send(out).is_err() {
                         break; // pool dropped
@@ -108,11 +265,23 @@ impl DevicePool {
                 }
             }));
         }
-        DevicePool { tx: Some(job_tx), rx: out_rx, handles, workers }
+        DevicePool { tx: Some(job_tx), rx: out_rx, handles, workers, shared }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Pool-wide fault/fallback counters.
+    pub fn stats(&self) -> DevicePoolStats {
+        DevicePoolStats {
+            device_jobs: self.shared.device_jobs.load(Ordering::Relaxed),
+            cpu_jobs: self.shared.cpu_jobs.load(Ordering::Relaxed),
+            exec_failures: self.shared.exec_failures.load(Ordering::Relaxed),
+            exec_retries: self.shared.exec_retries.load(Ordering::Relaxed),
+            demotions: self.shared.demotions.load(Ordering::Relaxed),
+            redemptions: self.shared.redemptions.load(Ordering::Relaxed),
+        }
     }
 
     /// Enqueue a job (non-blocking).
@@ -197,6 +366,46 @@ fn shifted_group_image(image: &BinnedImage, bin_offset: usize, group: usize) -> 
     BinnedImage { bins: group, ..shifted }
 }
 
+/// Device path with [`DevicePolicy`] retry: up to `exec_attempts`
+/// tries, exponential backoff between them, every failed attempt
+/// counted in the pool stats.
+fn run_job_with_retry(
+    manifest: &ArtifactManifest,
+    cache: &mut HashMap<String, HistogramExecutor>,
+    worker: usize,
+    job: &Job,
+    policy: &DevicePolicy,
+    faults: Option<&FaultInjector>,
+    shared: &PoolShared,
+) -> Result<JobOutput> {
+    let attempts = policy.exec_attempts.max(1);
+    let mut last_err = None;
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            shared.exec_retries.fetch_add(1, Ordering::Relaxed);
+            let pause = policy.backoff.saturating_mul(1u32 << (attempt - 1).min(16));
+            if !pause.is_zero() {
+                std::thread::sleep(pause);
+            }
+        }
+        let injected = faults
+            .is_some_and(|fi| matches!(fi.decide(FaultSite::Compile), Some(FaultAction::Error)));
+        let r = if injected {
+            Err(anyhow!("injected executor failure on worker {worker}"))
+        } else {
+            run_job(manifest, cache, worker, job)
+        };
+        match r {
+            Ok(o) => return Ok(o),
+            Err(e) => {
+                shared.exec_failures.fetch_add(1, Ordering::Relaxed);
+                last_err = Some(e);
+            }
+        }
+    }
+    Err(last_err.unwrap_or_else(|| anyhow!("job {} failed", job.job_id)))
+}
+
 fn run_job(
     manifest: &ArtifactManifest,
     cache: &mut HashMap<String, HistogramExecutor>,
@@ -225,4 +434,111 @@ fn run_job_cpu(engine: &mut ScanEngine, worker: usize, job: &Job) -> Result<JobO
     let partial = engine.compute(&shifted);
     let kernel_time = t0.elapsed();
     Ok(JobOutput { job_id: job.job_id, bin_offset: job.bin_offset, worker, partial, kernel_time })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn empty_manifest() -> Arc<ArtifactManifest> {
+        Arc::new(ArtifactManifest {
+            dir: PathBuf::from("/nonexistent"),
+            profile: "test".into(),
+            artifacts: vec![],
+        })
+    }
+
+    fn tiny_image() -> Arc<BinnedImage> {
+        Arc::new(BinnedImage { h: 2, w: 2, bins: 4, data: vec![0, 1, 2, 3] })
+    }
+
+    fn job(id: usize, image: &Arc<BinnedImage>) -> Job {
+        Job {
+            job_id: id,
+            artifact: "missing_artifact".into(),
+            bin_offset: 0,
+            group: 4,
+            image: Arc::clone(image),
+        }
+    }
+
+    /// Offline, the device path fails every job (artifact is not in the
+    /// manifest); after `demote_after` consecutive failures the worker
+    /// must stop attempting the device — observable because
+    /// `exec_failures` freezes while `cpu_jobs` keeps growing.
+    #[test]
+    fn worker_demotes_after_consecutive_device_failures() {
+        let policy = DevicePolicy {
+            cpu_fallback: true,
+            exec_attempts: 1,
+            backoff: Duration::ZERO,
+            demote_after: 2,
+            redemption_ttl: None,
+        };
+        let pool = DevicePool::with_policy(empty_manifest(), 1, policy);
+        let image = tiny_image();
+        for i in 0..5 {
+            pool.submit(job(i, &image)).unwrap();
+        }
+        for _ in 0..5 {
+            pool.recv().expect("cpu fallback must serve every job");
+        }
+        let st = pool.stats();
+        assert_eq!(st.cpu_jobs, 5, "all jobs served on CPU");
+        assert_eq!(st.device_jobs, 0);
+        assert_eq!(st.exec_failures, 2, "device attempts stop at demotion");
+        assert_eq!(st.demotions, 1);
+        assert_eq!(st.redemptions, 0, "no TTL, demotion is permanent");
+        pool.shutdown();
+    }
+
+    /// With a zero redemption TTL every job re-tries the device once
+    /// more, fails again, and re-demotes: failures track jobs 1:1.
+    #[test]
+    fn redemption_ttl_retries_the_device() {
+        let policy = DevicePolicy {
+            cpu_fallback: true,
+            exec_attempts: 1,
+            backoff: Duration::ZERO,
+            demote_after: 1,
+            redemption_ttl: Some(Duration::ZERO),
+        };
+        let pool = DevicePool::with_policy(empty_manifest(), 1, policy);
+        let image = tiny_image();
+        for i in 0..3 {
+            pool.submit(job(i, &image)).unwrap();
+        }
+        for _ in 0..3 {
+            pool.recv().expect("cpu fallback must serve every job");
+        }
+        let st = pool.stats();
+        assert_eq!(st.cpu_jobs, 3);
+        assert_eq!(st.exec_failures, 3, "every job re-tried the device after redemption");
+        assert_eq!(st.demotions, 3);
+        assert_eq!(st.redemptions, 2, "jobs 2 and 3 redeemed the demotion first");
+        pool.shutdown();
+    }
+
+    /// Retry policy: each job burns `exec_attempts` device tries before
+    /// falling back.
+    #[test]
+    fn exec_attempts_are_consumed_per_job() {
+        let policy = DevicePolicy {
+            cpu_fallback: true,
+            exec_attempts: 3,
+            backoff: Duration::ZERO,
+            demote_after: usize::MAX,
+            redemption_ttl: None,
+        };
+        let pool = DevicePool::with_policy(empty_manifest(), 1, policy);
+        let image = tiny_image();
+        pool.submit(job(0, &image)).unwrap();
+        pool.recv().expect("cpu fallback serves the job");
+        let st = pool.stats();
+        assert_eq!(st.exec_failures, 3);
+        assert_eq!(st.exec_retries, 2);
+        assert_eq!(st.cpu_jobs, 1);
+        pool.shutdown();
+    }
 }

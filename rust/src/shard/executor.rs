@@ -27,6 +27,19 @@
 //!   [`TensorStore`](crate::shard::TensorStore)) on its own thread,
 //!   overlapping frame N's reassembly with frame N+1's compute.
 //!
+//! **Supervision.** Shard compute runs under `catch_unwind` with a
+//! bounded retry budget ([`ShardExecutorConfig::max_attempts`]).  A
+//! panicking attempt discards the involved `ScanEngine` (its internal
+//! scheduler state is suspect; a fresh one is built on next checkout)
+//! and recycles the partial tensor; a shard that exhausts its budget
+//! delivers a typed [`ShardError`] through the frame's channel instead
+//! of hanging the ticket.  Reassembly has deadline variants
+//! (`reassemble_*_deadline`), so the full contract is: every submitted
+//! frame either reassembles **bit-identical** to a fault-free run or
+//! resolves to a typed error within its deadline.  Chaos coverage for
+//! this contract lives in `tests/fault_property.rs` (build with
+//! `--features fault-injection`).
+//!
 //! Ordering note: when one thread holds several tickets it must
 //! reassemble them in submission order (jobs leave the FIFO in that
 //! order, and the bounded channels are what bound memory); tickets
@@ -34,13 +47,16 @@
 //! independently in any order.
 
 use crate::coordinator::frame_pool::{FramePool, PoolStats};
+use crate::fault::{FaultAction, FaultInjector, FaultSite};
 use crate::histogram::engine::ScanEngine;
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
 use crate::shard::planner::{ShardPlan, ShardSpec};
 use crate::shard::reassemble::{RamSink, Reassembler, ShardSink};
 use crate::shard::store::TensorStore;
-use crate::shard::{ResidentGauge, TaggedShard};
-use anyhow::{anyhow, Context, Result};
+use crate::shard::{ResidentGauge, ShardError, TaggedShard};
+use crate::util::sync::lock_recover;
+use anyhow::{anyhow, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -57,37 +73,61 @@ pub struct ShardExecutorConfig {
     pub engine_workers: usize,
     /// Completed-shard backpressure depth per frame (0 ⇒ `workers`).
     pub channel_depth: usize,
+    /// Compute attempts per shard before a typed [`ShardError`] is
+    /// delivered (≥ 1; panicking attempts are caught and retried).
+    pub max_attempts: usize,
 }
 
 impl Default for ShardExecutorConfig {
     fn default() -> ShardExecutorConfig {
-        ShardExecutorConfig { workers: 4, engine_workers: 1, channel_depth: 0 }
+        ShardExecutorConfig { workers: 4, engine_workers: 1, channel_depth: 0, max_attempts: 3 }
     }
 }
+
+/// What flows through a frame's result channel: a completed shard or
+/// the typed failure that retired it.
+type ShardMsg = std::result::Result<TaggedShard, ShardError>;
 
 /// One tagged unit of work against a shared frame.
 struct ShardJob {
     frame_id: u64,
     spec: ShardSpec,
     image: Arc<BinnedImage>,
-    out: mpsc::SyncSender<TaggedShard>,
+    out: mpsc::SyncSender<ShardMsg>,
     gauge: Arc<ResidentGauge>,
 }
 
 /// Executor observability counters.
 #[derive(Debug, Clone)]
 pub struct ShardExecutorStats {
-    /// Shards executed since construction.
+    /// Shards retired (success or typed failure) since construction.
     pub jobs: usize,
-    /// Shards executed per worker (pull-based balance, Fig. 18).
+    /// Shards retired per worker (pull-based balance, Fig. 18).
     pub per_worker: Vec<usize>,
-    /// Engines ever created for the checkout stack (≤ workers).
+    /// Engines ever created for the checkout stack (≤ workers in a
+    /// fault-free run; grows by one per discarded engine).
     pub engines_created: usize,
+    /// Engines discarded after a caught compute panic.
+    pub engines_discarded: usize,
     /// Frames currently in flight (submitted, ticket not finished).
     pub frames_inflight: usize,
     /// Peak concurrently in-flight frames — > 1 is the interleaving
     /// the serial `BinTaskQueue` route could never reach.
     pub frames_inflight_peak: usize,
+    /// Compute attempts that failed (caught panic or spurious error).
+    pub attempt_failures: usize,
+    /// The subset of `attempt_failures` that were caught panics.
+    pub attempt_panics: usize,
+    /// Shards that succeeded after ≥ 1 failed attempt.
+    pub shards_recovered: usize,
+    /// Shards that exhausted their retry budget (typed error sent).
+    pub shards_failed: usize,
+    /// Frames that resolved to a typed [`ShardError`].
+    pub frames_failed: usize,
+    /// Tickets dropped before completing and without a typed error.
+    pub frames_abandoned: usize,
+    /// Worker threads still alive (counter-asserted liveness).
+    pub workers_alive: usize,
     /// Partial-tensor arena counters.
     pub partial_pool: PoolStats,
 }
@@ -95,11 +135,20 @@ pub struct ShardExecutorStats {
 struct Shared {
     engines: Mutex<Vec<ScanEngine>>,
     engines_created: AtomicUsize,
+    engines_discarded: AtomicUsize,
     pool: Arc<FramePool>,
     jobs: AtomicUsize,
     per_worker: Vec<AtomicUsize>,
     inflight: AtomicUsize,
     inflight_peak: AtomicUsize,
+    max_attempts: usize,
+    faults: Option<Arc<FaultInjector>>,
+    attempt_failures: AtomicUsize,
+    attempt_panics: AtomicUsize,
+    shards_recovered: AtomicUsize,
+    shards_failed: AtomicUsize,
+    frames_failed: AtomicUsize,
+    frames_abandoned: AtomicUsize,
 }
 
 /// The shared shard scheduler.  All methods take `&self`; submit from
@@ -123,15 +172,36 @@ impl std::fmt::Debug for ShardExecutor {
 
 impl ShardExecutor {
     pub fn new(config: ShardExecutorConfig) -> ShardExecutor {
+        ShardExecutor::build(config, None)
+    }
+
+    /// Build an executor whose workers consult `faults` at the
+    /// `ShardCompute` site (and whose spilled reassembly consults it at
+    /// the spill sites).  Inert unless the crate was compiled with
+    /// `--features fault-injection`.
+    pub fn with_faults(config: ShardExecutorConfig, faults: Arc<FaultInjector>) -> ShardExecutor {
+        ShardExecutor::build(config, Some(faults))
+    }
+
+    fn build(config: ShardExecutorConfig, faults: Option<Arc<FaultInjector>>) -> ShardExecutor {
         let workers = config.workers.max(1);
         let shared = Arc::new(Shared {
             engines: Mutex::new(Vec::new()),
             engines_created: AtomicUsize::new(0),
+            engines_discarded: AtomicUsize::new(0),
             pool: Arc::new(FramePool::new()),
             jobs: AtomicUsize::new(0),
             per_worker: (0..workers).map(|_| AtomicUsize::new(0)).collect(),
             inflight: AtomicUsize::new(0),
             inflight_peak: AtomicUsize::new(0),
+            max_attempts: config.max_attempts.max(1),
+            faults,
+            attempt_failures: AtomicUsize::new(0),
+            attempt_panics: AtomicUsize::new(0),
+            shards_recovered: AtomicUsize::new(0),
+            shards_failed: AtomicUsize::new(0),
+            frames_failed: AtomicUsize::new(0),
+            frames_abandoned: AtomicUsize::new(0),
         });
         let (tx, rx) = mpsc::channel::<ShardJob>();
         let rx = Arc::new(Mutex::new(rx));
@@ -159,8 +229,20 @@ impl ShardExecutor {
         self.handles.len()
     }
 
+    /// Worker threads that have not exited (each worker's loop only
+    /// ends at shutdown or on a defect the supervisor cannot catch, so
+    /// alive < workers is a health-check red flag).
+    pub fn workers_alive(&self) -> usize {
+        self.handles.iter().filter(|h| !h.is_finished()).count()
+    }
+
     pub fn config(&self) -> &ShardExecutorConfig {
         &self.config
+    }
+
+    /// The injector wired at construction, if any.
+    pub fn faults(&self) -> Option<&Arc<FaultInjector>> {
+        self.shared.faults.as_ref()
     }
 
     pub fn stats(&self) -> ShardExecutorStats {
@@ -169,8 +251,16 @@ impl ShardExecutor {
             jobs: s.jobs.load(Ordering::Relaxed),
             per_worker: s.per_worker.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
             engines_created: s.engines_created.load(Ordering::Relaxed),
+            engines_discarded: s.engines_discarded.load(Ordering::Relaxed),
             frames_inflight: s.inflight.load(Ordering::Relaxed),
             frames_inflight_peak: s.inflight_peak.load(Ordering::Relaxed),
+            attempt_failures: s.attempt_failures.load(Ordering::Relaxed),
+            attempt_panics: s.attempt_panics.load(Ordering::Relaxed),
+            shards_recovered: s.shards_recovered.load(Ordering::Relaxed),
+            shards_failed: s.shards_failed.load(Ordering::Relaxed),
+            frames_failed: s.frames_failed.load(Ordering::Relaxed),
+            frames_abandoned: s.frames_abandoned.load(Ordering::Relaxed),
+            workers_alive: self.workers_alive(),
             partial_pool: s.pool.stats(),
         }
     }
@@ -191,7 +281,7 @@ impl ShardExecutor {
             ));
         }
         let tx = {
-            let guard = self.tx.lock().expect("submit lock");
+            let guard = lock_recover(&self.tx);
             guard.as_ref().expect("executor already shut down").clone()
         };
         let frame_id = self.frame_seq.fetch_add(1, Ordering::Relaxed);
@@ -200,7 +290,7 @@ impl ShardExecutor {
         } else {
             self.config.channel_depth
         };
-        let (out_tx, out_rx) = mpsc::sync_channel::<TaggedShard>(depth.max(1));
+        let (out_tx, out_rx) = mpsc::sync_channel::<ShardMsg>(depth.max(1));
         let gauge = Arc::new(ResidentGauge::default());
         for spec in &plan.shards {
             tx.send(ShardJob {
@@ -224,6 +314,8 @@ impl ShardExecutor {
             gauge,
             shared: Arc::clone(&self.shared),
             settled: false,
+            finished: false,
+            failed: false,
             t_submit: Instant::now(),
         })
     }
@@ -234,7 +326,7 @@ impl ShardExecutor {
     }
 
     fn shutdown_inner(&mut self) {
-        self.tx.lock().expect("submit lock").take();
+        lock_recover(&self.tx).take();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -257,7 +349,7 @@ fn worker_loop(
     // only when a larger strip arrives.
     let mut sub = BinnedImage { h: 0, w: 0, bins: 1, data: Vec::new() };
     loop {
-        let job = match rx.lock().expect("shard queue lock").recv() {
+        let job = match lock_recover(rx).recv() {
             Ok(j) => j,
             Err(_) => break, // queue closed: drain done, exit
         };
@@ -276,28 +368,98 @@ fn worker_loop(
         let src = &job.image.data[spec.row0 * w..(spec.row0 + spec.nrows) * w];
         sub.data.extend(src.iter().map(|&v| if v >= lo && v < hi { v - lo } else { -1 }));
 
-        let mut engine = match shared.engines.lock().expect("engine stack lock").pop() {
-            Some(e) => e,
-            None => {
-                shared.engines_created.fetch_add(1, Ordering::Relaxed);
-                ScanEngine::new(engine_workers)
+        // Supervised compute: up to max_attempts tries; each attempt
+        // consults the fault schedule, catches panics, and leaves the
+        // shared state (engine stack, pool, gauge) settled either way.
+        let charged = spec.nbins * spec.nrows * w * 4;
+        let mut outcome: Option<(IntegralHistogram, Duration)> = None;
+        let mut failures = 0usize;
+        let mut panicked_last = false;
+        while outcome.is_none() && failures < shared.max_attempts {
+            let mut injected = shared.faults.as_ref().and_then(|f| f.decide(FaultSite::ShardCompute));
+            if let Some(FaultAction::Delay(d)) = injected {
+                std::thread::sleep(d); // slow worker: stall, then proceed
+                injected = None;
             }
-        };
-        let mut partial = shared.pool.acquire(spec.nbins, spec.nrows, w);
-        job.gauge.add(spec.nbins * spec.nrows * w * 4);
-        let t0 = Instant::now();
-        engine.compute_into(&sub, &mut partial);
-        let kernel_time = t0.elapsed();
-        shared.engines.lock().expect("engine stack lock").push(engine);
+            if matches!(injected, Some(FaultAction::Error)) {
+                failures += 1;
+                panicked_last = false;
+                shared.attempt_failures.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            let mut engine = match lock_recover(&shared.engines).pop() {
+                Some(e) => e,
+                None => {
+                    shared.engines_created.fetch_add(1, Ordering::Relaxed);
+                    ScanEngine::new(engine_workers)
+                }
+            };
+            let mut partial = shared.pool.acquire(spec.nbins, spec.nrows, w);
+            job.gauge.add(charged);
+            let t0 = Instant::now();
+            let inject_panic = matches!(injected, Some(FaultAction::Panic));
+            let run = catch_unwind(AssertUnwindSafe(|| {
+                if inject_panic {
+                    panic!("injected shard compute panic (worker {worker_id})");
+                }
+                engine.compute_into(&sub, &mut partial);
+            }));
+            match run {
+                Ok(()) => {
+                    lock_recover(&shared.engines).push(engine);
+                    outcome = Some((partial, t0.elapsed()));
+                }
+                Err(_) => {
+                    // The engine's internal scheduler may be mid-job:
+                    // discard it rather than return it to the stack (a
+                    // fresh engine is built on the next checkout).
+                    shared.engines_discarded.fetch_add(1, Ordering::Relaxed);
+                    drop(engine);
+                    shared.pool.release(partial);
+                    job.gauge.sub(charged);
+                    failures += 1;
+                    panicked_last = true;
+                    shared.attempt_failures.fetch_add(1, Ordering::Relaxed);
+                    shared.attempt_panics.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
         shared.jobs.fetch_add(1, Ordering::Relaxed);
         shared.per_worker[worker_id].fetch_add(1, Ordering::Relaxed);
-
-        let nbytes = partial.nbytes();
-        let tagged = TaggedShard { frame_id: job.frame_id, spec, partial, worker: worker_id, kernel_time };
-        if let Err(e) = job.out.send(tagged) {
-            // Ticket dropped before reassembly: recycle and settle.
-            shared.pool.release(e.0.partial);
-            job.gauge.sub(nbytes);
+        match outcome {
+            Some((partial, kernel_time)) => {
+                if failures > 0 {
+                    shared.shards_recovered.fetch_add(1, Ordering::Relaxed);
+                }
+                let tagged =
+                    TaggedShard { frame_id: job.frame_id, spec, partial, worker: worker_id, kernel_time };
+                if let Err(e) = job.out.send(Ok(tagged)) {
+                    // Ticket dropped before reassembly: recycle and settle.
+                    if let Ok(t) = e.0 {
+                        shared.pool.release(t.partial);
+                        job.gauge.sub(charged);
+                    }
+                }
+            }
+            None => {
+                shared.shards_failed.fetch_add(1, Ordering::Relaxed);
+                let err = if panicked_last {
+                    ShardError::ComputePanicked {
+                        frame_id: job.frame_id,
+                        shard_id: spec.shard_id,
+                        attempts: failures,
+                    }
+                } else {
+                    ShardError::ComputeFailed {
+                        frame_id: job.frame_id,
+                        shard_id: spec.shard_id,
+                        attempts: failures,
+                        reason: "spurious compute error".into(),
+                    }
+                };
+                // Ticket may already be gone; nothing else to settle.
+                let _ = job.out.send(Err(err));
+            }
         }
     }
 }
@@ -339,15 +501,20 @@ impl ShardReport {
 }
 
 /// Handle on one submitted frame.  Drive it with one of the
-/// `reassemble_*` methods; dropping it without reassembling cancels
-/// cleanly (in-flight shards are recycled as they complete).
+/// `reassemble_*` methods — the "wait" of this subsystem; each has a
+/// `_deadline` variant that bounds the wait and resolves to
+/// [`ShardError::DeadlineExceeded`] instead of blocking.  Dropping the
+/// ticket without reassembling cancels cleanly (in-flight shards are
+/// recycled as they complete, and the frame is counted abandoned).
 pub struct FrameTicket {
     frame_id: u64,
     plan: ShardPlan,
-    rx: mpsc::Receiver<TaggedShard>,
+    rx: mpsc::Receiver<ShardMsg>,
     gauge: Arc<ResidentGauge>,
     shared: Arc<Shared>,
     settled: bool,
+    finished: bool,
+    failed: bool,
     t_submit: Instant,
 }
 
@@ -366,34 +533,151 @@ impl FrameTicket {
         &self.gauge
     }
 
-    /// Drain every shard into `sink`.
-    pub fn reassemble(mut self, sink: &mut dyn ShardSink) -> Result<ShardReport> {
+    /// Drain every shard into `sink` (unbounded wait).
+    pub fn reassemble(self, sink: &mut dyn ShardSink) -> std::result::Result<ShardReport, ShardError> {
+        self.reassemble_with(sink, None)
+    }
+
+    /// Drain every shard into `sink`, or fail typed once `deadline`
+    /// (measured from this call) elapses.
+    pub fn reassemble_deadline(
+        self,
+        sink: &mut dyn ShardSink,
+        deadline: Duration,
+    ) -> std::result::Result<ShardReport, ShardError> {
+        self.reassemble_with(sink, Some(deadline))
+    }
+
+    /// Drain into a caller tensor in host RAM.
+    pub fn reassemble_into(
+        self,
+        out: &mut IntegralHistogram,
+    ) -> std::result::Result<ShardReport, ShardError> {
+        let (bins, h, w) = (self.plan.bins, self.plan.h, self.plan.w);
+        let mut sink = RamSink::new(out, bins, h, w);
+        self.reassemble_with(&mut sink, None)
+    }
+
+    /// [`Self::reassemble_into`] with a deadline.
+    pub fn reassemble_into_deadline(
+        self,
+        out: &mut IntegralHistogram,
+        deadline: Duration,
+    ) -> std::result::Result<ShardReport, ShardError> {
+        let (bins, h, w) = (self.plan.bins, self.plan.h, self.plan.w);
+        let mut sink = RamSink::new(out, bins, h, w);
+        self.reassemble_with(&mut sink, Some(deadline))
+    }
+
+    /// Drain into a fresh spill-backed [`TensorStore`] — the
+    /// out-of-core path: peak host residency stays near the plan's
+    /// per-shard budget × slack, never the full tensor.
+    pub fn reassemble_spilled(self) -> std::result::Result<(TensorStore, ShardReport), ShardError> {
+        self.reassemble_spilled_with(None)
+    }
+
+    /// [`Self::reassemble_spilled`] with a deadline.
+    pub fn reassemble_spilled_deadline(
+        self,
+        deadline: Duration,
+    ) -> std::result::Result<(TensorStore, ShardReport), ShardError> {
+        self.reassemble_spilled_with(Some(deadline))
+    }
+
+    fn reassemble_spilled_with(
+        mut self,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<(TensorStore, ShardReport), ShardError> {
+        let mut store = match TensorStore::spill(self.plan.bins, self.plan.h, self.plan.w) {
+            Ok(s) => s,
+            Err(e) => {
+                let frame_id = self.frame_id;
+                self.fail();
+                return Err(ShardError::Reassembly {
+                    frame_id,
+                    reason: format!("spill store: {e:#}"),
+                });
+            }
+        };
+        if let Some(f) = &self.shared.faults {
+            store.set_faults(Arc::clone(f));
+        }
+        let report = self.reassemble_with(&mut store, deadline)?;
+        Ok((store, report))
+    }
+
+    /// Core drain loop.  `deadline`, when given, is measured from this
+    /// call; on expiry the frame resolves to
+    /// [`ShardError::DeadlineExceeded`] carrying its progress.  The
+    /// ticket is consumed either way — workers recycle any shards that
+    /// land after the ticket is gone.
+    fn reassemble_with(
+        mut self,
+        sink: &mut dyn ShardSink,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<ShardReport, ShardError> {
+        let frame_id = self.frame_id;
         let n = self.plan.shards.len();
+        let t_start = Instant::now();
         let mut kernel_by_shard = vec![Duration::ZERO; n];
         let mut per_worker = vec![0usize; self.shared.per_worker.len()];
         let mut reasm =
             Reassembler::new(&self.plan, Some(Arc::clone(&self.shared.pool)), Arc::clone(&self.gauge));
-        for _ in 0..n {
-            let shard = self
-                .rx
-                .recv()
-                .context("shard workers hung up mid-frame")?;
-            let id = shard.spec.shard_id;
-            if id < n {
-                kernel_by_shard[id] = shard.kernel_time;
+        for done in 0..n {
+            let msg = match deadline {
+                None => match self.rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        self.fail();
+                        return Err(ShardError::WorkersGone { frame_id });
+                    }
+                },
+                Some(d) => {
+                    let remaining = d.saturating_sub(t_start.elapsed());
+                    let timed_out = if remaining.is_zero() {
+                        true
+                    } else {
+                        match self.rx.recv_timeout(remaining) {
+                            Ok(m) => {
+                                match self.consume(m, &mut reasm, sink, &mut kernel_by_shard, &mut per_worker, n)
+                                {
+                                    Ok(()) => continue,
+                                    Err(e) => return Err(e),
+                                }
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => true,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                self.fail();
+                                return Err(ShardError::WorkersGone { frame_id });
+                            }
+                        }
+                    };
+                    debug_assert!(timed_out);
+                    self.fail();
+                    return Err(ShardError::DeadlineExceeded {
+                        frame_id,
+                        deadline: d,
+                        completed: done,
+                        expected: n,
+                    });
+                }
+            };
+            if let Err(e) = self.consume(msg, &mut reasm, sink, &mut kernel_by_shard, &mut per_worker, n) {
+                return Err(e);
             }
-            if shard.worker < per_worker.len() {
-                per_worker[shard.worker] += 1;
-            }
-            reasm.accept(shard, sink)?;
         }
         if !reasm.finished() {
-            return Err(anyhow!("frame {} reassembly incomplete", self.frame_id));
+            self.fail();
+            return Err(ShardError::Reassembly {
+                frame_id,
+                reason: format!("incomplete: {}/{} shards committed", reasm.accepted(), n),
+            });
         }
         drop(reasm); // settle carry/scratch charges before reading peak
+        self.finished = true;
         self.settle();
         Ok(ShardReport {
-            frame_id: self.frame_id,
+            frame_id,
             shards: n,
             wall: self.t_submit.elapsed(),
             kernel_by_shard,
@@ -402,20 +686,45 @@ impl FrameTicket {
         })
     }
 
-    /// Drain into a caller tensor in host RAM.
-    pub fn reassemble_into(self, out: &mut IntegralHistogram) -> Result<ShardReport> {
-        let (bins, h, w) = (self.plan.bins, self.plan.h, self.plan.w);
-        let mut sink = RamSink::new(out, bins, h, w);
-        self.reassemble(&mut sink)
+    /// Fold one channel message into the reassembly state; `self.fail()`
+    /// has already been applied when this returns `Err`.
+    fn consume(
+        &mut self,
+        msg: ShardMsg,
+        reasm: &mut Reassembler,
+        sink: &mut dyn ShardSink,
+        kernel_by_shard: &mut [Duration],
+        per_worker: &mut [usize],
+        n: usize,
+    ) -> std::result::Result<(), ShardError> {
+        let frame_id = self.frame_id;
+        let shard = match msg {
+            Ok(s) => s,
+            Err(e) => {
+                self.fail();
+                return Err(e);
+            }
+        };
+        let id = shard.spec.shard_id;
+        if id < n {
+            kernel_by_shard[id] = shard.kernel_time;
+        }
+        if shard.worker < per_worker.len() {
+            per_worker[shard.worker] += 1;
+        }
+        if let Err(e) = reasm.accept(shard, sink) {
+            self.fail();
+            return Err(ShardError::Reassembly { frame_id, reason: format!("{e:#}") });
+        }
+        Ok(())
     }
 
-    /// Drain into a fresh spill-backed [`TensorStore`] — the
-    /// out-of-core path: peak host residency stays near the plan's
-    /// per-shard budget × slack, never the full tensor.
-    pub fn reassemble_spilled(self) -> Result<(TensorStore, ShardReport)> {
-        let mut store = TensorStore::spill(self.plan.bins, self.plan.h, self.plan.w)?;
-        let report = self.reassemble(&mut store)?;
-        Ok((store, report))
+    fn fail(&mut self) {
+        if !self.failed && !self.finished {
+            self.failed = true;
+            self.shared.frames_failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.settle();
     }
 
     fn settle(&mut self) {
@@ -428,6 +737,9 @@ impl FrameTicket {
 
 impl Drop for FrameTicket {
     fn drop(&mut self) {
+        if !self.finished && !self.failed {
+            self.shared.frames_abandoned.fetch_add(1, Ordering::Relaxed);
+        }
         self.settle();
     }
 }
@@ -491,6 +803,8 @@ mod tests {
         assert_eq!(stats.jobs, 3 * plan.shards.len());
         assert_eq!(stats.frames_inflight, 0, "tickets settle on completion");
         assert!(stats.engines_created <= 2, "engines recycle through the checkout stack");
+        assert_eq!(stats.attempt_failures, 0, "fault-free run has no failed attempts");
+        assert_eq!(stats.workers_alive, 2);
     }
 
     #[test]
@@ -517,7 +831,7 @@ mod tests {
     }
 
     #[test]
-    fn dropped_ticket_cancels_cleanly() {
+    fn dropped_ticket_cancels_cleanly_and_counts_abandoned() {
         let exec = ShardExecutor::new(ShardExecutorConfig { workers: 2, ..Default::default() });
         let img = random_image(32, 32, 4, 5);
         let plan = planner(8 << 10, 2).plan(4, 32, 32);
@@ -529,7 +843,10 @@ mod tests {
         ticket.reassemble_into(&mut out).expect("reassemble");
         let expected = integral_histogram_seq(&img);
         assert_eq!(expected.max_abs_diff(&out), 0.0);
-        assert_eq!(exec.stats().frames_inflight, 0);
+        let stats = exec.stats();
+        assert_eq!(stats.frames_inflight, 0);
+        assert_eq!(stats.frames_abandoned, 1, "the dropped ticket is reported");
+        assert_eq!(stats.frames_failed, 0);
     }
 
     #[test]
@@ -550,5 +867,59 @@ mod tests {
         let back = store.to_histogram().expect("materialize");
         assert_eq!(expected.max_abs_diff(&back), 0.0);
         assert!(report.peak_resident_bytes < expected.nbytes(), "never held the full tensor");
+    }
+
+    #[test]
+    fn generous_deadline_completes_bit_identical() {
+        let exec = ShardExecutor::new(ShardExecutorConfig { workers: 2, ..Default::default() });
+        let img = random_image(40, 24, 5, 13);
+        let plan = planner(12 << 10, 2).plan(5, 40, 24);
+        let ticket = exec.submit(&img, &plan).expect("submit");
+        let mut out = IntegralHistogram::zeros(0, 0, 0);
+        ticket
+            .reassemble_into_deadline(&mut out, Duration::from_secs(60))
+            .expect("well within deadline");
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&out), 0.0);
+        assert_eq!(exec.stats().frames_failed, 0);
+    }
+
+    #[test]
+    fn zero_deadline_fails_typed_and_executor_survives() {
+        let exec = ShardExecutor::new(ShardExecutorConfig { workers: 2, ..Default::default() });
+        let img = random_image(40, 24, 5, 14);
+        let plan = planner(12 << 10, 2).plan(5, 40, 24);
+        let ticket = exec.submit(&img, &plan).expect("submit");
+        let mut out = IntegralHistogram::zeros(0, 0, 0);
+        let err = ticket
+            .reassemble_into_deadline(&mut out, Duration::ZERO)
+            .expect_err("zero deadline cannot be met");
+        match err {
+            ShardError::DeadlineExceeded { deadline, expected, .. } => {
+                assert_eq!(deadline, Duration::ZERO);
+                assert_eq!(expected, plan.shards.len());
+            }
+            other => panic!("wrong error variant: {other}"),
+        }
+        // A deadline miss is a frame failure, not an abandonment, and
+        // must not wedge the executor.
+        let stats = exec.stats();
+        assert_eq!(stats.frames_failed, 1);
+        assert_eq!(stats.frames_abandoned, 0);
+        let ticket = exec.submit(&img, &plan).expect("submit after miss");
+        let report = ticket.reassemble_into(&mut out).expect("reassemble");
+        let expected_ih = integral_histogram_seq(&img);
+        assert_eq!(expected_ih.max_abs_diff(&out), 0.0);
+        assert_eq!(report.shards, plan.shards.len());
+    }
+
+    #[test]
+    fn shard_error_converts_to_anyhow() {
+        fn f() -> Result<()> {
+            Err(ShardError::WorkersGone { frame_id: 7 })?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(e.to_string().contains("frame 7"), "{e}");
     }
 }

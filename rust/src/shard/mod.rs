@@ -39,8 +39,67 @@ pub use reassemble::{RamSink, Reassembler, ShardSink};
 pub use store::TensorStore;
 
 use crate::histogram::types::IntegralHistogram;
+use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
+
+/// Typed failure of one submitted frame, delivered through its
+/// [`FrameTicket`] — the executor's contract is *no hangs*: every
+/// submitted frame either reassembles bit-identical to a fault-free
+/// run or resolves to exactly one of these within its deadline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardError {
+    /// A shard exhausted its compute retries on spurious errors.
+    ComputeFailed { frame_id: u64, shard_id: usize, attempts: usize, reason: String },
+    /// A shard exhausted its compute retries on worker panics (each
+    /// caught by the supervisor; the engine involved is discarded).
+    ComputePanicked { frame_id: u64, shard_id: usize, attempts: usize },
+    /// The caller-supplied reassembly deadline elapsed first.
+    DeadlineExceeded { frame_id: u64, deadline: Duration, completed: usize, expected: usize },
+    /// Every worker exited while the frame was still incomplete.
+    WorkersGone { frame_id: u64 },
+    /// Shard composition itself failed (malformed shard, sink error).
+    Reassembly { frame_id: u64, reason: String },
+}
+
+impl ShardError {
+    pub fn frame_id(&self) -> u64 {
+        match self {
+            ShardError::ComputeFailed { frame_id, .. }
+            | ShardError::ComputePanicked { frame_id, .. }
+            | ShardError::DeadlineExceeded { frame_id, .. }
+            | ShardError::WorkersGone { frame_id }
+            | ShardError::Reassembly { frame_id, .. } => *frame_id,
+        }
+    }
+}
+
+impl fmt::Display for ShardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardError::ComputeFailed { frame_id, shard_id, attempts, reason } => write!(
+                f,
+                "frame {frame_id} shard {shard_id}: compute failed after {attempts} attempts: {reason}"
+            ),
+            ShardError::ComputePanicked { frame_id, shard_id, attempts } => write!(
+                f,
+                "frame {frame_id} shard {shard_id}: compute panicked on all {attempts} attempts"
+            ),
+            ShardError::DeadlineExceeded { frame_id, deadline, completed, expected } => write!(
+                f,
+                "frame {frame_id}: deadline {deadline:?} exceeded with {completed}/{expected} shards reassembled"
+            ),
+            ShardError::WorkersGone { frame_id } => {
+                write!(f, "frame {frame_id}: all shard workers exited mid-frame")
+            }
+            ShardError::Reassembly { frame_id, reason } => {
+                write!(f, "frame {frame_id}: reassembly failed: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
 
 /// One shard's output, tagged with its origin — the unit that flows
 /// from executor workers to reassembly.

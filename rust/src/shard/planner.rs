@@ -179,6 +179,17 @@ impl ShardPlan {
         let spread = Duration::from_secs_f64(serial_kernel.as_secs_f64() / workers.max(1) as f64);
         PlanCost { serial_kernel, serial_transfer, wall: spread.max(serial_transfer) }
     }
+
+    /// A reassembly deadline for this plan: the predicted makespan
+    /// times `slack` (≥ 1; 4–8 is reasonable — retries and interleaved
+    /// neighbors inflate the fault-free estimate), floored at 100 ms so
+    /// tiny plans are not starved by scheduler jitter.  Feed it to the
+    /// `FrameTicket::reassemble_*_deadline` variants.
+    pub fn suggested_deadline(&self, card: Card, workers: usize, slack: f64) -> Duration {
+        let wall = self.predict_total(card, workers).wall;
+        let scaled = Duration::from_secs_f64(wall.as_secs_f64() * slack.max(1.0));
+        scaled.max(Duration::from_millis(100))
+    }
 }
 
 /// The planner: policy in, deterministic plan out.
@@ -335,6 +346,18 @@ mod tests {
         let total1 = plan.predict_total(Card::Gtx480, 1);
         assert!(total4.wall <= total1.wall, "more workers can't predict slower");
         assert_eq!(total4.serial_kernel, total1.serial_kernel);
+    }
+
+    #[test]
+    fn suggested_deadline_scales_with_slack_and_floors() {
+        let plan = planner(1 << 26, 4).plan(128, 1024, 1024);
+        let d1 = plan.suggested_deadline(Card::Gtx480, 4, 1.0);
+        let d4 = plan.suggested_deadline(Card::Gtx480, 4, 4.0);
+        assert!(d4 >= d1, "more slack can't shorten the deadline");
+        assert!(d1 >= plan.predict_total(Card::Gtx480, 4).wall);
+        // A tiny plan hits the floor instead of a microsecond deadline.
+        let tiny = planner(1 << 20, 2).plan(2, 8, 8);
+        assert!(tiny.suggested_deadline(Card::Gtx480, 2, 1.0) >= Duration::from_millis(100));
     }
 
     #[test]

@@ -140,6 +140,17 @@ impl Reassembler {
             && self.groups.iter().all(|g| g.next_row == self.h)
     }
 
+    /// Shards accepted so far — the progress figure a deadline error
+    /// reports for an abandoned frame.
+    pub fn accepted(&self) -> usize {
+        self.accepted
+    }
+
+    /// Shards the plan expects in total.
+    pub fn expected(&self) -> usize {
+        self.expected
+    }
+
     /// Shards parked in the reorder buffer right now.
     pub fn parked(&self) -> usize {
         self.parked.len()
@@ -247,7 +258,11 @@ impl Reassembler {
 
 impl Drop for Reassembler {
     fn drop(&mut self) {
-        // Settle parked partials (abandoned reassembly) and state.
+        // Abandoned-frame tolerance: a reassembler dropped mid-frame
+        // (deadline miss, typed failure, caller gave up) must leave no
+        // dangling charges — parked partials recycle to the pool and
+        // every gauge byte settles, so the executor's resident
+        // accounting stays exact across failures.
         let mut parked_bytes = 0;
         for (_, s) in self.parked.drain() {
             parked_bytes += s.partial.nbytes();

@@ -24,14 +24,47 @@
 //! `bytes_written` / `corner_reads` counters make the out-of-core
 //! claim observable.  Stores created with [`TensorStore::spill`] are
 //! temp files deleted on drop; [`TensorStore::keep`] detaches them.
+//!
+//! **Integrity.** Spill I/O is the one layer where silent corruption
+//! (short write, bad sector, torn page) survives until a query returns
+//! a wrong histogram.  Every committed row therefore carries an FNV-1a
+//! checksum (4 bytes of RAM per row — `bins×h×4` total, negligible
+//! against the tensor it guards), verified on [`TensorStore::read_rows`]
+//! with **one reread** before a typed error: transient corruption (a
+//! flipped bit on the way in) heals on the reread, persistent
+//! corruption (bad bytes on disk) is reported instead of served.
+//! Corner reads stay unverified — verification there would turn the
+//! O(bins) Eq. 2 query into O(bins·w) row reads; `to_histogram` and
+//! strip reads, the paths that feed downstream computation, are the
+//! verified ones.
 
+use crate::fault::{corrupt_bytes, FaultAction, FaultInjector, FaultSite};
 use crate::histogram::region::Rect;
 use crate::histogram::types::IntegralHistogram;
+use crate::util::sync::lock_recover;
 use anyhow::{anyhow, Context, Result};
 use std::fs::{File, OpenOptions};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+/// FNV-1a over a byte slice — cheap, endian-stable, and sensitive to
+/// single-bit flips (all this layer needs to detect).
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Per-row integrity state: checksum + written flag (unwritten rows
+/// are the file's zero fill and are served unverified).
+struct RowCheck {
+    sums: Vec<u32>,
+    written: Vec<bool>,
+}
 
 /// Monotonic suffix so concurrent spills in one process never collide.
 static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
@@ -52,10 +85,15 @@ pub struct TensorStore {
     /// (it is the one store-side resident buffer; the planner's slack
     /// envelope covers it).
     write_scratch: Mutex<Vec<u8>>,
+    /// Per-row checksums, indexed `bin*h + row`.
+    check: Mutex<RowCheck>,
     path: PathBuf,
     delete_on_drop: bool,
     bytes_written: AtomicUsize,
     corner_reads: AtomicUsize,
+    verify_rereads: AtomicUsize,
+    verify_failures: AtomicUsize,
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl std::fmt::Debug for TensorStore {
@@ -90,10 +128,17 @@ impl TensorStore {
             #[cfg(not(unix))]
             io_lock: Mutex::new(()),
             write_scratch: Mutex::new(Vec::new()),
+            check: Mutex::new(RowCheck {
+                sums: vec![0u32; bins * h],
+                written: vec![false; bins * h],
+            }),
             path,
             delete_on_drop: false,
             bytes_written: AtomicUsize::new(0),
             corner_reads: AtomicUsize::new(0),
+            verify_rereads: AtomicUsize::new(0),
+            verify_failures: AtomicUsize::new(0),
+            faults: None,
         })
     }
 
@@ -139,6 +184,25 @@ impl TensorStore {
         self.corner_reads.load(Ordering::Relaxed)
     }
 
+    /// Rows reread after a checksum mismatch (transient corruption
+    /// healed, or the first half of a persistent failure).
+    pub fn verify_rereads(&self) -> usize {
+        self.verify_rereads.load(Ordering::Relaxed)
+    }
+
+    /// Rows whose checksum still mismatched after the reread — each
+    /// one surfaced as a typed error instead of wrong data.
+    pub fn verify_failures(&self) -> usize {
+        self.verify_failures.load(Ordering::Relaxed)
+    }
+
+    /// Wire a fault injector into the spill I/O sites (`SpillWrite`,
+    /// `SpillRead`).  Inert unless built with `--features
+    /// fault-injection`.
+    pub fn set_faults(&mut self, faults: Arc<FaultInjector>) {
+        self.faults = Some(faults);
+    }
+
     /// Detach the file from drop-deletion and return its path.
     pub fn keep(mut self) -> PathBuf {
         self.delete_on_drop = false;
@@ -161,7 +225,7 @@ impl TensorStore {
         #[cfg(not(unix))]
         {
             use std::io::{Read, Seek, SeekFrom};
-            let _g = self.io_lock.lock().expect("store io lock");
+            let _g = lock_recover(&self.io_lock);
             let mut f = &self.file;
             f.seek(SeekFrom::Start(off))?;
             f.read_exact(buf)
@@ -179,7 +243,7 @@ impl TensorStore {
         #[cfg(not(unix))]
         {
             use std::io::{Seek, SeekFrom, Write};
-            let _g = self.io_lock.lock().expect("store io lock");
+            let _g = lock_recover(&self.io_lock);
             let mut f = &self.file;
             f.seek(SeekFrom::Start(off))?;
             f.write_all(buf)
@@ -203,11 +267,30 @@ impl TensorStore {
         if row0 + nrows > self.h {
             return Err(anyhow!("commit rows {row0}+{nrows} past h={}", self.h));
         }
-        let mut bytes = self.write_scratch.lock().expect("scratch lock");
+        let mut bytes = lock_recover(&self.write_scratch);
         bytes.clear();
         bytes.reserve(rows.len() * 4);
         for &v in rows.iter() {
             bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        // Checksum what the caller committed, *then* let the injector
+        // corrupt the outgoing buffer: an injected write fault is
+        // persistent on disk, so read-side verification must reread,
+        // still mismatch, and fail typed.
+        {
+            let row_bytes = self.w * 4;
+            let mut ck = lock_recover(&self.check);
+            for r in 0..nrows {
+                let idx = bin * self.h + row0 + r;
+                ck.sums[idx] = fnv1a32(&bytes[r * row_bytes..(r + 1) * row_bytes]);
+                ck.written[idx] = true;
+            }
+        }
+        if let Some(f) = &self.faults {
+            if f.decide(FaultSite::SpillWrite) == Some(FaultAction::Corrupt) {
+                let salt = self.offset(bin, row0, 0) ^ 0xD15C_0000;
+                corrupt_bytes(&mut bytes[..], salt);
+            }
         }
         self.write_at_off(&bytes, self.offset(bin, row0, 0))?;
         self.bytes_written.fetch_add(bytes.len(), Ordering::Relaxed);
@@ -215,7 +298,9 @@ impl TensorStore {
     }
 
     /// Read `nrows` rows of bin `bin` starting at `row0` into `out`
-    /// (length `nrows×w`).
+    /// (length `nrows×w`), verifying each written row's checksum.  A
+    /// mismatching row is reread once (transient corruption heals); a
+    /// second mismatch returns a typed error rather than wrong data.
     pub fn read_rows(&self, bin: usize, row0: usize, nrows: usize, out: &mut [f32]) -> Result<()> {
         assert_eq!(out.len(), nrows * self.w, "output length mismatch");
         if bin >= self.bins || row0 + nrows > self.h {
@@ -223,6 +308,38 @@ impl TensorStore {
         }
         let mut bytes = vec![0u8; out.len() * 4];
         self.read_at_off(&mut bytes, self.offset(bin, row0, 0))?;
+        if let Some(f) = &self.faults {
+            if f.decide(FaultSite::SpillRead) == Some(FaultAction::Corrupt) {
+                // Transient: the file is intact, only this buffer is
+                // bad — verification must catch it and the reread heal.
+                let salt = self.offset(bin, row0, 0) ^ 0x5EED_0000;
+                corrupt_bytes(&mut bytes, salt);
+            }
+        }
+        let row_bytes = self.w * 4;
+        {
+            let ck = lock_recover(&self.check);
+            for r in 0..nrows {
+                let idx = bin * self.h + row0 + r;
+                if !ck.written[idx] {
+                    continue;
+                }
+                let span = r * row_bytes..(r + 1) * row_bytes;
+                if fnv1a32(&bytes[span.clone()]) == ck.sums[idx] {
+                    continue;
+                }
+                self.verify_rereads.fetch_add(1, Ordering::Relaxed);
+                self.read_at_off(&mut bytes[span.clone()], self.offset(bin, row0 + r, 0))?;
+                if fnv1a32(&bytes[span]) != ck.sums[idx] {
+                    self.verify_failures.fetch_add(1, Ordering::Relaxed);
+                    return Err(anyhow!(
+                        "checksum mismatch: bin {bin} row {} corrupt after reread ({})",
+                        row0 + r,
+                        self.path.display()
+                    ));
+                }
+            }
+        }
         for (i, chunk) in bytes.chunks_exact(4).enumerate() {
             out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
         }
@@ -373,6 +490,44 @@ mod tests {
         assert!(store.write_rows(0, 0, &[0.0; 3]).is_err(), "ragged rows");
         assert!(store.write_rows(0, 3, &[0.0; 8]).is_err(), "past bottom");
         assert!(store.query(Rect::new(0, 0, 4, 4)).is_err(), "rect outside");
+    }
+
+    #[test]
+    fn clean_roundtrip_never_rereads() {
+        let img = random_image(12, 9, 4, 21);
+        let ih = integral_histogram_seq(&img);
+        let store = spill_of(&ih);
+        let _ = store.to_histogram().expect("read back");
+        assert_eq!(store.verify_rereads(), 0);
+        assert_eq!(store.verify_failures(), 0);
+    }
+
+    #[test]
+    fn on_disk_corruption_is_detected_not_served() {
+        use std::io::{Seek, SeekFrom, Write};
+        let img = random_image(10, 7, 3, 17);
+        let ih = integral_histogram_seq(&img);
+        let store = spill_of(&ih);
+        // Corrupt one byte on disk behind the store's back — a bad
+        // sector.  The reread sees the same bad bytes, so this is the
+        // persistent path: typed error, no wrong data.
+        let mut f = OpenOptions::new().write(true).open(store.path()).expect("reopen");
+        f.seek(SeekFrom::Start(42)).expect("seek");
+        let victim = {
+            let mut probe = [0u8; 1];
+            store.read_at_off(&mut probe, 42).expect("probe");
+            probe[0]
+        };
+        f.write_all(&[victim ^ 0x40]).expect("flip");
+        drop(f);
+        let err = store.to_histogram().expect_err("corruption must not be served");
+        assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+        assert_eq!(store.verify_rereads(), 1, "exactly one reread before failing");
+        assert_eq!(store.verify_failures(), 1);
+        // Untouched planes still verify: reads are per-row, so the
+        // store remains usable for intact regions.
+        let mut row = vec![0.0f32; 7];
+        store.read_rows(2, 9, 1, &mut row).expect("intact row still reads");
     }
 
     #[test]

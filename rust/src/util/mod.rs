@@ -10,7 +10,10 @@
 //!   and the property-based tests.
 //! * [`stats`] — timing statistics (median/percentiles/MAD) used by the
 //!   benchmark harness and the figure drivers.
+//! * [`sync`] — poison-tolerant locking (`lock_recover`) so one crashed
+//!   request cannot brick shared state behind a poisoned `Mutex`.
 
 pub mod json;
 pub mod prng;
 pub mod stats;
+pub mod sync;

@@ -1,0 +1,51 @@
+//! Poison-tolerant locking.
+//!
+//! `std::sync::Mutex` poisons itself when a holder panics, and every
+//! subsequent `lock().expect(..)` aborts the *next* caller — one crashed
+//! request bricks the whole process.  Most locks in this codebase guard
+//! state that is valid at every instruction boundary (free-list vectors,
+//! LIFO checkout stacks, counter maps): a panic while holding them cannot
+//! leave the protected value half-updated, so the poison flag carries no
+//! information and the correct policy is to clear it and continue.
+//!
+//! [`lock_recover`] encodes that policy in one place.  Locks whose
+//! invariants *can* break mid-update (e.g. a `ScanEngine` whose wavefront
+//! scheduler was interrupted) must not use it — they either keep the
+//! fail-fast `expect` or pair recovery with explicit invalidation of the
+//! protected value (see `coordinator/pipeline.rs`).
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering from poisoning by taking the guard anyway.
+///
+/// Only use on locks whose protected state is valid at every instruction
+/// boundary, or at call sites that re-validate / replace the state.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Mutex;
+
+    #[test]
+    fn recovers_after_holder_panics() {
+        let m = Mutex::new(vec![1u32, 2, 3]);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("holder dies");
+        }));
+        assert!(r.is_err());
+        assert!(m.is_poisoned(), "panic while held must poison");
+        let g = lock_recover(&m);
+        assert_eq!(*g, vec![1, 2, 3], "state untouched by the panic");
+    }
+
+    #[test]
+    fn plain_lock_on_clean_mutex() {
+        let m = Mutex::new(7u8);
+        assert_eq!(*lock_recover(&m), 7);
+    }
+}

@@ -1,0 +1,336 @@
+//! Chaos property tests (build with `--features fault-injection`).
+//!
+//! Under a seeded fault schedule — worker panics, spurious compute
+//! errors, slow workers, corrupted spill bytes — the system must keep
+//! its contract: every submitted frame resolves to a BIT-IDENTICAL
+//! tensor or a TYPED [`ShardError`] before its deadline; nothing hangs
+//! (a watchdog aborts the process otherwise); no lock poisoning takes
+//! the process down; and the injected-vs-recovered counters reconcile
+//! exactly.  Each test also reaches the schedule's `max_per_site` cap
+//! and proves trailing fault-free traffic is bit-identical — chaos
+//! must not leave residue.
+#![cfg(feature = "fault-injection")]
+
+use inthist::fault::{FaultInjector, FaultSite, FaultSpec};
+use inthist::histogram::sequential::integral_histogram_seq;
+use inthist::histogram::types::{BinnedImage, IntegralHistogram};
+use inthist::shard::{ShardError, ShardExecutor, ShardExecutorConfig, ShardPlanner, ShardPolicy};
+use inthist::util::prng::Xoshiro256;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn random_image(h: usize, w: usize, bins: usize, seed: u64) -> Arc<BinnedImage> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut data = vec![0i32; h * w];
+    rng.fill_bins(&mut data, bins as u32);
+    Arc::new(BinnedImage::new(h, w, bins, data))
+}
+
+fn policy(budget: usize, workers: usize) -> ShardPolicy {
+    ShardPolicy { memory_budget: budget, workers, ..ShardPolicy::default() }
+}
+
+/// Hang detector: aborts the whole process if the owning test has not
+/// disarmed it (by dropping it) before `timeout`.  "No hangs" is part
+/// of the fault contract, so a hang must fail CI loudly instead of
+/// waiting for the harness timeout.
+struct Watchdog {
+    done: Arc<AtomicBool>,
+}
+
+impl Watchdog {
+    fn arm(label: &'static str, timeout: Duration) -> Watchdog {
+        let done = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            while t0.elapsed() < timeout {
+                if flag.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            eprintln!("watchdog: '{label}' exceeded {timeout:?} — aborting");
+            std::process::abort();
+        });
+        Watchdog { done }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.done.store(true, Ordering::Release);
+    }
+}
+
+/// The core chaos property, over several seeds: with panics, spurious
+/// errors and delays injected into shard compute, every frame is
+/// bit-identical or fails typed before its deadline; the executor's
+/// recovery counters reconcile exactly with what was injected; all
+/// workers survive; and once the schedule caps out, trailing frames
+/// are clean and bit-identical.
+#[test]
+fn chaos_frames_are_bit_identical_or_typed_errors() {
+    let _wd = Watchdog::arm("chaos_frames", Duration::from_secs(120));
+    let mut report = Vec::new();
+    for seed in [1u64, 7, 42] {
+        let spec = FaultSpec {
+            shard_panic: 0.05,
+            shard_error: 0.10,
+            shard_delay: 0.02,
+            delay: Duration::from_millis(1),
+            max_per_site: 24,
+            ..FaultSpec::default()
+        };
+        let fi = Arc::new(FaultInjector::new(seed, spec));
+        let exec = ShardExecutor::with_faults(
+            ShardExecutorConfig { workers: 3, max_attempts: 4, ..Default::default() },
+            Arc::clone(&fi),
+        );
+        let plan = ShardPlanner::new(policy(10 << 10, 3)).plan(6, 40, 30);
+        assert!(plan.shards.len() >= 4, "want real fan-out");
+
+        let mut ok_frames = 0usize;
+        let mut failed_frames = 0usize;
+        let mut frame = 0u64;
+        // Drive frames until the schedule caps out, then a few more.
+        while fi.stats().injected[FaultSite::ShardCompute.index()] < spec.max_per_site {
+            let img = random_image(40, 30, 6, 1000 + frame);
+            let expected = integral_histogram_seq(&img);
+            let ticket = exec.submit(&img, &plan).expect("submit");
+            let mut out = IntegralHistogram::zeros(0, 0, 0);
+            match ticket.reassemble_into_deadline(&mut out, Duration::from_secs(30)) {
+                Ok(rep) => {
+                    assert_eq!(
+                        expected.max_abs_diff(&out),
+                        0.0,
+                        "seed {seed} frame {frame}: recovered frame must be bit-identical"
+                    );
+                    assert_eq!(rep.shards, plan.shards.len());
+                    ok_frames += 1;
+                }
+                Err(e) => {
+                    // Typed by construction; the variant must carry the
+                    // right frame and be a compute-path failure (no
+                    // deadline fired with 30 s of slack, workers live).
+                    match &e {
+                        ShardError::ComputeFailed { .. } | ShardError::ComputePanicked { .. } => {}
+                        other => panic!("seed {seed} frame {frame}: unexpected error {other}"),
+                    }
+                    failed_frames += 1;
+                }
+            }
+            frame += 1;
+            assert!(frame < 500, "schedule should cap out long before 500 frames");
+        }
+
+        // Trailing clean traffic: the capped schedule injects nothing
+        // more, and recovery left no residue.  (Fully reassembling
+        // these frames also quiesces any attempt still in flight from
+        // a failed frame's early ticket return, so the counter
+        // reconciliation below compares settled values.)
+        for t in 0..3u64 {
+            let img = random_image(40, 30, 6, 9000 + t);
+            let expected = integral_histogram_seq(&img);
+            let ticket = exec.submit(&img, &plan).expect("submit");
+            let mut out = IntegralHistogram::zeros(0, 0, 0);
+            ticket
+                .reassemble_into_deadline(&mut out, Duration::from_secs(30))
+                .expect("clean trailing frame");
+            assert_eq!(expected.max_abs_diff(&out), 0.0, "trailing frame {t}");
+        }
+
+        // Reconciliation: every injected panic/error was observed by
+        // the supervisor as exactly one failed attempt, and nothing
+        // else was.
+        let st = fi.stats();
+        let xs = exec.stats();
+        assert_eq!(xs.attempt_failures, st.panics + st.errors, "seed {seed}");
+        assert_eq!(xs.attempt_panics, st.panics, "seed {seed}");
+        assert_eq!(xs.engines_discarded, st.panics, "every panicked engine discarded");
+        assert_eq!(xs.workers_alive, 3, "workers survive injected panics");
+        assert_eq!(xs.frames_failed, failed_frames, "seed {seed}");
+        assert_eq!(xs.frames_abandoned, 0);
+        assert!(ok_frames > 0, "seed {seed}: some frames must survive chaos");
+
+        report.push(format!(
+            "{{\"seed\":{seed},\"frames\":{},\"ok\":{ok_frames},\"failed\":{failed_frames},\
+             \"injected_panics\":{},\"injected_errors\":{},\"injected_delays\":{},\
+             \"shards_recovered\":{},\"workers_alive\":{}}}",
+            frame + 3,
+            st.panics,
+            st.errors,
+            st.delays,
+            xs.shards_recovered,
+            xs.workers_alive
+        ));
+    }
+    // Machine-readable chaos report for the CI artifact upload.
+    let json = format!("{{\"suite\":\"chaos_frames\",\"runs\":[{}]}}\n", report.join(","));
+    let _ = std::fs::create_dir_all("target");
+    let _ = std::fs::write("target/chaos_report.json", json);
+}
+
+/// Transient read-side spill corruption is healed by the
+/// checksum-verify-reread path: the frame stays bit-identical and the
+/// store counts the rereads, with zero verify failures.
+#[test]
+fn spill_read_corruption_recovers_bit_identical() {
+    let _wd = Watchdog::arm("spill_read_corruption", Duration::from_secs(60));
+    let spec = FaultSpec { spill_corrupt_read: 1.0, max_per_site: 3, ..FaultSpec::default() };
+    let fi = Arc::new(FaultInjector::new(11, spec));
+    let exec = ShardExecutor::with_faults(
+        ShardExecutorConfig { workers: 2, ..Default::default() },
+        Arc::clone(&fi),
+    );
+    let img = random_image(45, 21, 7, 8);
+    let plan = ShardPlanner::new(policy(10 << 10, 2)).plan(7, 45, 21);
+    let (store, _report) =
+        exec.submit(&img, &plan).expect("submit").reassemble_spilled().expect("spill");
+    let expected = integral_histogram_seq(&img);
+    let back = store.to_histogram().expect("transient corruption must be healed by reread");
+    assert_eq!(expected.max_abs_diff(&back), 0.0);
+    assert!(store.verify_rereads() >= 1, "at least one reread must have fired");
+    assert_eq!(store.verify_failures(), 0, "no persistent corruption");
+    assert!(fi.stats().corrupt_reads >= 1);
+}
+
+/// Persistent write-side spill corruption (bad bytes reached disk) is
+/// DETECTED, never served: reads of the damaged row fail typed with a
+/// checksum mismatch after one reread.
+#[test]
+fn spill_write_corruption_fails_typed_not_silent() {
+    let _wd = Watchdog::arm("spill_write_corruption", Duration::from_secs(60));
+    let spec = FaultSpec { spill_corrupt_write: 1.0, max_per_site: 1, ..FaultSpec::default() };
+    let fi = Arc::new(FaultInjector::new(13, spec));
+    let exec = ShardExecutor::with_faults(
+        ShardExecutorConfig { workers: 2, ..Default::default() },
+        Arc::clone(&fi),
+    );
+    let img = random_image(45, 21, 7, 8);
+    let plan = ShardPlanner::new(policy(10 << 10, 2)).plan(7, 45, 21);
+    let (store, _report) =
+        exec.submit(&img, &plan).expect("submit").reassemble_spilled().expect("spill completes");
+    assert_eq!(fi.stats().corrupt_writes, 1, "exactly one write corrupted");
+    let err = store
+        .to_histogram()
+        .err()
+        .expect("persistently corrupt plane must not materialize")
+        .to_string();
+    assert!(err.contains("checksum mismatch"), "{err}");
+    assert_eq!(store.verify_failures(), 1);
+}
+
+/// Interleaving independence: the multiset of injected faults depends
+/// only on (seed, site, occurrence index), not on which threads hit
+/// the probes — four racing threads and one serial run inject the
+/// same counts.
+#[test]
+fn schedule_is_interleaving_independent() {
+    let spec = FaultSpec {
+        shard_panic: 0.1,
+        shard_error: 0.2,
+        shard_delay: 0.05,
+        delay: Duration::ZERO,
+        ..FaultSpec::default()
+    };
+    let serial = FaultInjector::new(77, spec);
+    for _ in 0..400 {
+        let _ = serial.decide(FaultSite::ShardCompute);
+    }
+    let racy = Arc::new(FaultInjector::new(77, spec));
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let fi = Arc::clone(&racy);
+            s.spawn(move || {
+                for _ in 0..100 {
+                    let _ = fi.decide(FaultSite::ShardCompute);
+                }
+            });
+        }
+    });
+    let a = serial.stats();
+    let b = racy.stats();
+    assert_eq!(a.occurrences, b.occurrences);
+    assert_eq!(a.injected, b.injected);
+    assert_eq!((a.panics, a.errors, a.delays), (b.panics, b.errors, b.delays));
+}
+
+/// The server stays a well-behaved supervisor under chaos: concurrent
+/// sessions over faulty shard workers each get bit-identical tensors
+/// or typed errors, the admission slots all come back, and the server
+/// drains and shuts down within its timeout.
+#[test]
+fn server_survives_chaos_and_drains() {
+    use inthist::coordinator::server::{Server, ServerConfig, ServerState};
+    use inthist::runtime::artifact::ArtifactManifest;
+    use inthist::video::synth::SyntheticVideo;
+    use std::path::PathBuf;
+
+    let _wd = Watchdog::arm("server_chaos", Duration::from_secs(120));
+    let spec = FaultSpec {
+        shard_panic: 0.04,
+        shard_error: 0.08,
+        shard_delay: 0.02,
+        delay: Duration::from_millis(1),
+        max_per_site: 16,
+        ..FaultSpec::default()
+    };
+    let fi = Arc::new(FaultInjector::new(21, spec));
+    let mut cfg = ServerConfig::default();
+    cfg.engine.bins = 8;
+    cfg.engine.device_memory_budget = 1 << 10; // 40×40 frames route sharded
+    cfg.shard_workers = 3;
+    cfg.shard_max_attempts = 4;
+    cfg.frame_deadline = Some(Duration::from_secs(30));
+    cfg.faults = Some(Arc::clone(&fi));
+    let manifest = Arc::new(ArtifactManifest {
+        dir: PathBuf::from("/nonexistent"),
+        profile: "chaos".into(),
+        artifacts: vec![],
+    });
+    let srv = Server::new(manifest, cfg);
+
+    std::thread::scope(|s| {
+        for t in 0..3u64 {
+            let srv = srv.clone();
+            s.spawn(move || {
+                let mut session = srv.open_session().expect("admission");
+                let video = SyntheticVideo::new(40, 40, 2, 3 + t);
+                for f in 0..8usize {
+                    let frame = video.frame(f);
+                    let expected = integral_histogram_seq(&frame.binned(8));
+                    match session.process(&frame) {
+                        Ok(ih) => {
+                            assert_eq!(
+                                expected.max_abs_diff(&ih),
+                                0.0,
+                                "thread {t} frame {f}: must be bit-identical"
+                            );
+                        }
+                        Err(e) => {
+                            // Typed shard failure surfaced through anyhow.
+                            let msg = format!("{e:#}");
+                            assert!(
+                                msg.contains("shard") || msg.contains("frame"),
+                                "thread {t} frame {f}: untyped error: {msg}"
+                            );
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    // Every admission slot returned; the executor kept its workers.
+    assert_eq!(srv.sessions_active(), 0);
+    let health = srv.health();
+    assert_eq!(health.shard_workers_alive, health.shard_workers_total);
+    assert_eq!(health.shard_frames_abandoned, 0);
+
+    // Graceful end-of-life under chaos: drain, then shutdown, joined.
+    assert!(srv.drain(Duration::from_secs(30)), "must drain inside the timeout");
+    assert!(srv.shutdown(Duration::from_secs(30)));
+    assert_eq!(srv.health().state, ServerState::Stopped);
+}
