@@ -121,6 +121,46 @@ fn main() -> Result<()> {
          scaling — see EXPERIMENTS.md Fig. 16/17 notes)",
         fps_by_workers[2] / fps_by_workers[0]
     );
+    // --- closing the predicted-vs-measured loop (DESIGN.md §9) ---
+    // The paper-prior prediction above describes a GTX 480, not this
+    // host, so its per-shard numbers are off by construction.  A
+    // calibrated run — startup microbench, then live shard timings fed
+    // back through the executor's instruments — must shrink the gap.
+    let cal = Arc::new(Calibrator::default());
+    cal.calibrate();
+    let cal_exec = ShardExecutor::with_instruments(
+        ShardExecutorConfig { workers: 4, ..Default::default() },
+        None,
+        Some(Arc::clone(&cal)),
+    );
+    let mut out = IntegralHistogram::zeros(0, 0, 0);
+    // Warm-up feeds the first round of live measurements into the EWMA.
+    let _ = cal_exec.submit(&image, &plan)?.reassemble_into(&mut out)?;
+    let cal_report = cal_exec.submit(&image, &plan)?.reassemble_into(&mut out)?;
+    assert_eq!(cpu.max_abs_diff(&out), 0.0, "calibrated run must stay bit-identical");
+    let gap = |pred: &[ShardCost]| -> f64 {
+        let mut sum = 0.0;
+        for s in &plan.shards {
+            let p = pred[s.shard_id].kernel.as_secs_f64();
+            let m = cal_report.kernel_by_shard[s.shard_id].as_secs_f64().max(1e-9);
+            sum += (p - m).abs() / m;
+        }
+        sum / plan.shards.len() as f64
+    };
+    let gap_prior = gap(&plan.predict(card));
+    let gap_cal = gap(&plan.predict_with(&cal.snapshot()));
+    println!(
+        "\npredicted-vs-measured per-shard kernel gap (mean |pred-meas|/meas): \
+         paper prior {:.1}% -> calibrated {:.1}% ({} live samples)",
+        100.0 * gap_prior,
+        100.0 * gap_cal,
+        cal.snapshot().samples
+    );
+    assert!(
+        gap_cal <= gap_prior,
+        "calibration must not widen the predicted-vs-measured gap \
+         (prior {gap_prior:.3}, calibrated {gap_cal:.3})"
+    );
     println!("multi-device large-image OK");
     Ok(())
 }

@@ -16,7 +16,8 @@
 use inthist::coordinator::batcher::QueryBatcher;
 use inthist::coordinator::frame_pool::FramePool;
 use inthist::histogram::engine::{
-    integral_histogram_fused, integral_histogram_wavefront, Planner, ScanEngine, Schedule,
+    integral_histogram_fused, integral_histogram_fused_v, integral_histogram_wavefront,
+    KernelVariant, Planner, ScanEngine, Schedule,
 };
 use inthist::histogram::parallel::{integral_histogram_crossweave, integral_histogram_parallel};
 use inthist::histogram::region::{region_histogram, Rect};
@@ -24,8 +25,10 @@ use inthist::histogram::sequential::{
     integral_histogram_seq, integral_histogram_seq_imagemajor, integral_histogram_seq_rowsum,
 };
 use inthist::histogram::tiled::{integral_histogram_tiled, integral_histogram_tiled_twopass};
+use inthist::tune::{Calibrator, TunedPlanner};
 use inthist::util::stats::{render_table, BenchRow};
 use inthist::video::synth::SyntheticVideo;
+use std::sync::Arc;
 
 /// Rows accumulated for the JSON report: (group, row).
 struct Report {
@@ -204,10 +207,62 @@ fn main() {
     print!("{}", render_table("region-query service, 32 bins", &rows));
     report.push_all("region_query", &rows);
 
+    // --- calibrated planner vs static planner (DESIGN.md §9 loop) ---
+    // One calibrator microbenches at startup; all calibrated engines
+    // share one TunedPlanner (one search per geometry) and feed their
+    // live timings back.  The static engine is the pre-calibration
+    // baseline.  Each geometry reports both medians plus the ratio.
+    let cal = Arc::new(Calibrator::default());
+    cal.calibrate();
+    let tuner = Arc::new(TunedPlanner::new(Arc::clone(&cal)));
+    let mut rows = Vec::new();
+    let mut cal_ratios: Vec<(String, f64)> = Vec::new();
+    for (h, w, bins) in [(512usize, 512usize, 32usize), (512, 512, 4), (128, 2048, 16)] {
+        let frame = SyntheticVideo::new(h, w, 4, 7).frame(0);
+        let gimg = frame.binned(bins);
+        let mut stat_eng = ScanEngine::new(4);
+        let mut out = stat_eng.compute(&gimg);
+        let srow =
+            BenchRow::measure(format!("static plan {h}x{w}x{bins}"), 1, reps, || {
+                stat_eng.compute_into(&gimg, &mut out);
+                std::hint::black_box(&out);
+            });
+        let mut cal_eng = ScanEngine::with_tuner(4, Arc::clone(&tuner));
+        // Warm pass: runs the one-time plan search and seeds the EWMA.
+        cal_eng.compute_into(&gimg, &mut out);
+        let crow =
+            BenchRow::measure(format!("calibrated plan {h}x{w}x{bins}"), 1, reps, || {
+                cal_eng.compute_into(&gimg, &mut out);
+                std::hint::black_box(&out);
+            });
+        cal_ratios.push((format!("{h}x{w}x{bins}"), srow.summary.median / crow.summary.median));
+        rows.push(srow);
+        rows.push(crow);
+    }
+    // The kernel-variant lever in isolation at the default tile.
+    let kref = BenchRow::measure("kernel reference, tile 64", 1, reps, || {
+        std::hint::black_box(integral_histogram_fused_v(&img, 64, KernelVariant::Reference));
+    });
+    let ktun = BenchRow::measure("kernel tuned (blocked+unrolled), tile 64", 1, reps, || {
+        std::hint::black_box(integral_histogram_fused_v(&img, 64, KernelVariant::Tuned));
+    });
+    let kernel_ratio = kref.summary.median / ktun.summary.median;
+    rows.push(kref);
+    rows.push(ktun);
+    print!("{}", render_table("calibrated vs static planner, 4 workers", &rows));
+    for (shape, r) in &cal_ratios {
+        println!("calibrated vs static @ {shape}: {r:.2}x (>= 1.0x expected)");
+    }
+    println!("tuned kernel vs reference @ tile 64: {kernel_ratio:.2}x");
+    let tune_stats = tuner.stats();
+    let cal_samples = cal.snapshot().samples;
+    report.push_all("calibrated_vs_static", &rows);
+
     // --- machine-readable report at the repo root ---
     let mut json = String::new();
     json.push_str("{\n");
     json.push_str("  \"bench\": \"hotpath\",\n");
+    json.push_str("  \"harness\": \"cargo-bench\",\n");
     json.push_str(&format!("  \"reps\": {reps},\n"));
     json.push_str("  \"config\": {\"h\": 512, \"w\": 512, \"bins\": 32, \"low_bins\": 4, \"threads\": 4},\n");
     json.push_str("  \"rows\": [\n");
@@ -233,8 +288,21 @@ fn main() {
         "    \"wavefront_vs_binparallel_4bins_4threads\": {speedup4:.3},\n"
     ));
     json.push_str(&format!(
-        "    \"frame_pool\": {{\"allocated\": {}, \"reused\": {}}}\n",
+        "    \"frame_pool\": {{\"allocated\": {}, \"reused\": {}}},\n",
         stats.allocated, stats.reused
+    ));
+    json.push_str("    \"calibrated_vs_static\": {");
+    for (i, (shape, r)) in cal_ratios.iter().enumerate() {
+        let sep = if i + 1 < cal_ratios.len() { ", " } else { "" };
+        json.push_str(&format!("\"{}\": {r:.3}{sep}", json_escape(shape)));
+    }
+    json.push_str("},\n");
+    json.push_str(&format!(
+        "    \"tuned_kernel_vs_reference_tile64\": {kernel_ratio:.3},\n"
+    ));
+    json.push_str(&format!(
+        "    \"tune\": {{\"hits\": {}, \"misses\": {}, \"cached\": {}, \"calibration_samples\": {cal_samples}}}\n",
+        tune_stats.hits, tune_stats.misses, tune_stats.cached
     ));
     json.push_str("  }\n}\n");
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");

@@ -24,6 +24,7 @@ use inthist::histogram::region::Rect;
 use inthist::histogram::types::{BinnedImage, IntegralHistogram};
 use inthist::runtime::artifact::ArtifactManifest;
 use inthist::shard::{FrameTicket, ShardExecutor, ShardExecutorConfig, ShardPlan, ShardPlanner, ShardPolicy};
+use inthist::tune::Calibrator;
 use inthist::video::synth::SyntheticVideo;
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -91,6 +92,13 @@ struct SweepRow {
     strip_rows: usize,
     fps: f64,
     peak_resident: usize,
+    /// The calibrated planner's choice on the same (budget, geometry).
+    shards_calibrated: usize,
+    fps_calibrated: f64,
+    /// Predicted makespans under the calibrated snapshot — calibrated
+    /// ≤ static by construction (the static plan is a candidate).
+    model_wall_static_s: f64,
+    model_wall_calibrated_s: f64,
 }
 
 fn main() {
@@ -99,26 +107,45 @@ fn main() {
     let imgs = images(H, W, BINS);
 
     // --- 1. plan sweep: budget → shard granularity → throughput ---
+    // Each budget row plans twice: the static paper-prior planner and
+    // the calibrated planner costing candidates with a measured
+    // snapshot (DESIGN.md §9).  Both run on a calibrator-instrumented
+    // executor, so live shard timings keep feeding the loop as the
+    // sweep progresses.
+    let cal = Arc::new(Calibrator::default());
+    cal.calibrate();
     println!("## plan sweep, {W}x{H}x{BINS} bins, {WORKERS} workers, {frames} frames");
     println!(
-        "{:<14} {:>8} {:>7} {:>11} {:>10} {:>16}",
-        "budget", "shards", "group", "strip rows", "fps", "peak resident"
+        "{:<14} {:>8} {:>7} {:>11} {:>10} {:>16} {:>10} {:>10}",
+        "budget", "shards", "group", "strip rows", "fps", "peak resident", "cal shards", "cal fps"
     );
     let mut sweep = Vec::new();
     for budget in [1usize << 30, 4 << 20, 1 << 20, 256 << 10] {
         let policy = ShardPolicy { memory_budget: budget, workers: WORKERS, ..ShardPolicy::default() };
-        let plan = ShardPlanner::new(policy).plan(BINS, H, W);
-        let exec = ShardExecutor::new(ShardExecutorConfig { workers: WORKERS, ..Default::default() });
+        let planner = ShardPlanner::new(policy);
+        let plan = planner.plan(BINS, H, W);
+        let snap = cal.snapshot();
+        let cal_plan = planner.plan_calibrated(BINS, H, W, &snap);
+        let exec = ShardExecutor::with_instruments(
+            ShardExecutorConfig { workers: WORKERS, ..Default::default() },
+            None,
+            Some(Arc::clone(&cal)),
+        );
         let _ = run_interleaved(&exec, &plan, &imgs, 2, 1); // warm-up
         let (fps, peak) = run_interleaved(&exec, &plan, &imgs, frames, 2);
+        let (cal_fps, _) = run_interleaved(&exec, &cal_plan, &imgs, frames, 2);
+        let model_static = plan.predict_total_with(&snap, WORKERS).wall.as_secs_f64();
+        let model_cal = cal_plan.predict_total_with(&snap, WORKERS).wall.as_secs_f64();
         println!(
-            "{:<14} {:>8} {:>7} {:>11} {:>10.2} {:>16}",
+            "{:<14} {:>8} {:>7} {:>11} {:>10.2} {:>16} {:>10} {:>10.2}",
             budget,
             plan.shards.len(),
             plan.group,
             plan.strip_rows,
             fps,
-            peak
+            peak,
+            cal_plan.shards.len(),
+            cal_fps
         );
         sweep.push(SweepRow {
             budget,
@@ -127,8 +154,17 @@ fn main() {
             strip_rows: plan.strip_rows,
             fps,
             peak_resident: peak,
+            shards_calibrated: cal_plan.shards.len(),
+            fps_calibrated: cal_fps,
+            model_wall_static_s: model_static,
+            model_wall_calibrated_s: model_cal,
         });
     }
+    let cal_dominates = sweep.iter().all(|r| r.model_wall_calibrated_s <= r.model_wall_static_s);
+    println!(
+        "calibrated plan matches or beats static (model wall) on every row: {}",
+        if cal_dominates { "PASS" } else { "FAIL" }
+    );
 
     // --- 2. interleaved shard schedule vs serial whole-frame queue ---
     // Both sides split the 32 bins into 4-bin groups and run 4 workers
@@ -269,8 +305,9 @@ fn main() {
     for (i, r) in sweep.iter().enumerate() {
         let sep = if i + 1 < sweep.len() { "," } else { "" };
         json.push_str(&format!(
-            "    {{\"budget\": {}, \"shards\": {}, \"group\": {}, \"strip_rows\": {}, \"fps\": {:.2}, \"peak_resident_bytes\": {}}}{sep}\n",
-            r.budget, r.shards, r.group, r.strip_rows, r.fps, r.peak_resident
+            "    {{\"budget\": {}, \"shards\": {}, \"group\": {}, \"strip_rows\": {}, \"fps\": {:.2}, \"peak_resident_bytes\": {}, \"shards_calibrated\": {}, \"fps_calibrated\": {:.2}, \"model_wall_static_s\": {:.6}, \"model_wall_calibrated_s\": {:.6}}}{sep}\n",
+            r.budget, r.shards, r.group, r.strip_rows, r.fps, r.peak_resident,
+            r.shards_calibrated, r.fps_calibrated, r.model_wall_static_s, r.model_wall_calibrated_s
         ));
     }
     json.push_str("  ],\n");
@@ -300,7 +337,14 @@ fn main() {
         "    \"interleaved_2_inflight_vs_serial_queue\": {:.3},\n",
         fps2 / serial_queue_fps
     ));
-    json.push_str(&format!("    \"interleaved_beats_serial_queue\": {beats}\n"));
+    json.push_str(&format!("    \"interleaved_beats_serial_queue\": {beats},\n"));
+    json.push_str(&format!(
+        "    \"calibrated_matches_or_beats_static_all_rows\": {cal_dominates},\n"
+    ));
+    json.push_str(&format!(
+        "    \"calibration_samples\": {}\n",
+        cal.snapshot().samples
+    ));
     json.push_str("  }\n}\n");
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_shard.json");
     match std::fs::write(&path, &json) {

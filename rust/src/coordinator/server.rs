@@ -72,6 +72,7 @@ use crate::runtime::compile_cache::{CompileCache, ExecutorScope, RetryPolicy};
 use crate::shard::{
     ShardExecutor, ShardExecutorConfig, ShardExecutorStats, ShardPlanner, ShardReport, TensorStore,
 };
+use crate::tune::{Calibrator, CostSnapshot, TunedPlanner};
 use crate::util::sync::lock_recover;
 use crate::video::source::{FrameSource, VideoFrame};
 use anyhow::{anyhow, Result};
@@ -123,6 +124,13 @@ pub struct ServerConfig {
     /// cache, shard executor and spill store.  Inert unless the crate
     /// is built with `--features fault-injection`.
     pub faults: Option<Arc<FaultInjector>>,
+    /// Self-calibrating cost model (DESIGN.md §9).  When set, the
+    /// server runs the one-shot startup microbenches, checks out CPU
+    /// engines through a shared [`TunedPlanner`] (auto-tuned tile /
+    /// schedule / kernel variant, EWMA feedback from every frame), and
+    /// sizes shard plans with measured numbers instead of the paper's
+    /// static priors.  `None` keeps the pre-calibration static paths.
+    pub calibrator: Option<Arc<Calibrator>>,
 }
 
 impl Default for ServerConfig {
@@ -139,6 +147,7 @@ impl Default for ServerConfig {
             frame_deadline: None,
             overload_inflight_limit: 0,
             faults: None,
+            calibrator: None,
         }
     }
 }
@@ -279,6 +288,9 @@ pub struct ServerSnapshot {
     /// Shard executor counters (None until the first large request
     /// builds it).
     pub shard: Option<ShardExecutorStats>,
+    /// Live calibration snapshot (None when the server runs static;
+    /// `samples > 0` once live frames have fed the EWMA loop).
+    pub calibration: Option<CostSnapshot>,
 }
 
 struct Inner {
@@ -296,6 +308,10 @@ struct Inner {
     /// apart), unlike the old whole-frame-serialized `BinTaskQueue`
     /// route.  Geometry-agnostic: plans are per-request.
     shard: Mutex<Option<Arc<ShardExecutor>>>,
+    /// One shared auto-tuning planner for every checkout engine (one
+    /// plan search per geometry per server), present iff the config
+    /// carries a calibrator.
+    tuner: Option<Arc<TunedPlanner>>,
     metrics: Metrics,
     admission: Arc<AdmissionControl>,
     session_seq: AtomicUsize,
@@ -371,7 +387,12 @@ impl Inner {
             Some(e) => e,
             None => {
                 self.engines_created.fetch_add(1, Ordering::Relaxed);
-                ScanEngine::new(self.config.workers_per_stream)
+                match &self.tuner {
+                    Some(t) => {
+                        ScanEngine::with_tuner(self.config.workers_per_stream, Arc::clone(t))
+                    }
+                    None => ScanEngine::new(self.config.workers_per_stream),
+                }
             }
         };
         let mut out = PooledTensor::acquire(&self.pool, img.bins, img.h, img.w);
@@ -391,23 +412,31 @@ impl Inner {
                 channel_depth: 0,
                 max_attempts: self.config.shard_max_attempts.max(1),
             };
-            let exec = match &self.config.faults {
-                Some(f) => ShardExecutor::with_faults(cfg, Arc::clone(f)),
-                None => ShardExecutor::new(cfg),
-            };
+            let exec = ShardExecutor::with_instruments(
+                cfg,
+                self.config.faults.clone(),
+                self.config.calibrator.clone(),
+            );
             *guard = Some(Arc::new(exec));
         }
         Arc::clone(guard.as_ref().expect("executor just built"))
     }
 
-    /// Plan a request under the server's shard policy.
+    /// Plan a request under the server's shard policy.  With a
+    /// calibrator, shards are sized against the measured cost snapshot
+    /// (closing the predicted-vs-measured loop); without one, the
+    /// paper's static priors apply.
     fn shard_plan(&self, bins: usize, h: usize, w: usize) -> crate::shard::ShardPlan {
         let exec_workers = self.config.shard_workers.max(1);
         let policy = self
             .config
             .engine
             .shard_policy(self.config.host_memory_budget, exec_workers);
-        ShardPlanner::new(policy).plan(bins, h, w)
+        let planner = ShardPlanner::new(policy);
+        match &self.config.calibrator {
+            Some(cal) => planner.plan_calibrated(bins, h, w, &cal.snapshot()),
+            None => planner.plan(bins, h, w),
+        }
     }
 
     /// Large-image route: interleaved sharded execution reassembled
@@ -515,6 +544,14 @@ impl Server {
         if let Some(f) = &config.faults {
             compile.set_faults(Arc::clone(f));
         }
+        // Startup hook of the calibration loop (DESIGN.md §9): run the
+        // one-shot microbenches once, before any frame, so the first
+        // plan search already works from measured numbers; live frames
+        // keep the EWMA fresh from here on.
+        let tuner = config.calibrator.as_ref().map(|cal| {
+            cal.calibrate();
+            Arc::new(TunedPlanner::new(Arc::clone(cal)))
+        });
         Server {
             inner: Arc::new(Inner {
                 compile,
@@ -522,6 +559,7 @@ impl Server {
                 engines: Mutex::new(Vec::new()),
                 engines_created: AtomicUsize::new(0),
                 shard: Mutex::new(None),
+                tuner,
                 metrics: Metrics::default(),
                 admission,
                 session_seq: AtomicUsize::new(0),
@@ -731,6 +769,7 @@ impl Server {
             frame_pool: inner.pool.stats(),
             latency,
             shard,
+            calibration: inner.config.calibrator.as_ref().map(|c| c.snapshot()),
         }
     }
 }
@@ -1223,6 +1262,38 @@ mod tests {
         assert_eq!(h1.shard_frames_failed, 0);
         assert_eq!(h1.shard_frames_abandoned, 0);
         assert_eq!(h1.inflight, 0);
+    }
+
+    /// The calibration loop end-to-end at the serving layer: a server
+    /// built with a calibrator microbenches at startup, serves both
+    /// routes bit-identically through the shared tuned planner, and
+    /// its snapshot exposes a live (sample-fed) cost snapshot.
+    #[test]
+    fn calibrated_server_serves_bit_identically_and_reports_snapshot() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine.bins = 8;
+        // 8×48×40×4 = 60 KiB fits; 8×64×64×4 = 128 KiB routes large.
+        cfg.engine.device_memory_budget = 64 << 10;
+        cfg.shard_workers = 2;
+        cfg.calibrator = Some(Arc::new(Calibrator::default()));
+        let srv = Server::new(manifest(), cfg);
+        let baseline = srv.snapshot().calibration.expect("calibrator configured");
+        assert!(baseline.samples > 0, "startup microbench must seed the snapshot");
+
+        let small = SyntheticVideo::new(48, 40, 2, 5).frame(0).binned(8);
+        let large = SyntheticVideo::new(64, 64, 2, 5).frame(1).binned(8);
+        assert_eq!(srv.route_for(48, 40), Route::Direct);
+        assert_eq!(srv.route_for(64, 64), Route::TaskQueue);
+        for img in [&small, &large] {
+            let (ih, _) = srv.compute(img).expect("calibrated route");
+            let expected = integral_histogram_seq(img);
+            assert_eq!(expected.max_abs_diff(&ih), 0.0);
+        }
+        let snap = srv.snapshot();
+        let live = snap.calibration.expect("snapshot carries calibration");
+        assert!(live.samples > baseline.samples, "live frames must feed the EWMA loop");
+        let shard = snap.shard.expect("large frame built the executor");
+        assert!(shard.tune.is_some(), "shard engines run through the tuned planner");
     }
 
     /// A configured frame deadline rides through the server to the

@@ -37,7 +37,8 @@ pub enum FaultSite {
     ShardCompute,
     /// `shard::store::TensorStore::write_rows`, after checksumming.
     SpillWrite,
-    /// `shard::store::TensorStore::read_rows`, after the read.
+    /// Disk reads back into the runtime: `TensorStore::read_rows`
+    /// (after the read) and the `runtime::artifact` manifest load.
     SpillRead,
     /// `runtime::compile_cache` compile attempt.
     Compile,
@@ -78,6 +79,9 @@ pub enum FaultAction {
     Delay(Duration),
     /// Flip bytes in the buffer at hand (`SpillWrite`, `SpillRead`).
     Corrupt,
+    /// Persist only a truncated prefix of the buffer (`SpillWrite`) —
+    /// the classic torn/short disk write a power cut leaves behind.
+    ShortWrite,
 }
 
 /// Per-site probabilities of a seeded fault schedule.
@@ -97,6 +101,10 @@ pub struct FaultSpec {
     pub delay: Duration,
     /// P(corrupt bytes reaching disk) per `write_rows` call.
     pub spill_corrupt_write: f64,
+    /// P(short/torn write — only a prefix reaches disk) per
+    /// `write_rows` call.  Partitions one uniform draw with
+    /// `spill_corrupt_write`, so their sum must be ≤ 1.
+    pub spill_short_write: f64,
     /// P(corrupt bytes after a read) per `read_rows` call.
     pub spill_corrupt_read: f64,
     /// P(spurious failure) per compile attempt.
@@ -113,6 +121,7 @@ impl Default for FaultSpec {
             shard_delay: 0.0,
             delay: Duration::from_millis(1),
             spill_corrupt_write: 0.0,
+            spill_short_write: 0.0,
             spill_corrupt_read: 0.0,
             compile_error: 0.0,
             max_per_site: 0,
@@ -131,6 +140,7 @@ pub struct FaultStats {
     pub errors: usize,
     pub delays: usize,
     pub corrupt_writes: usize,
+    pub short_writes: usize,
     pub corrupt_reads: usize,
     pub compile_errors: usize,
 }
@@ -188,6 +198,7 @@ mod imp {
         errors: AtomicUsize,
         delays: AtomicUsize,
         corrupt_writes: AtomicUsize,
+        short_writes: AtomicUsize,
         corrupt_reads: AtomicUsize,
         compile_errors: AtomicUsize,
     }
@@ -196,6 +207,8 @@ mod imp {
         pub fn new(seed: u64, spec: FaultSpec) -> Self {
             let sum = spec.shard_panic + spec.shard_error + spec.shard_delay;
             assert!(sum <= 1.0, "shard fault probabilities sum to {sum} > 1");
+            let wsum = spec.spill_corrupt_write + spec.spill_short_write;
+            assert!(wsum <= 1.0, "spill write fault probabilities sum to {wsum} > 1");
             FaultInjector {
                 seed,
                 spec,
@@ -205,6 +218,7 @@ mod imp {
                 errors: AtomicUsize::new(0),
                 delays: AtomicUsize::new(0),
                 corrupt_writes: AtomicUsize::new(0),
+                short_writes: AtomicUsize::new(0),
                 corrupt_reads: AtomicUsize::new(0),
                 compile_errors: AtomicUsize::new(0),
             }
@@ -237,7 +251,15 @@ mod imp {
                         None
                     }
                 }
-                FaultSite::SpillWrite => (u < self.spec.spill_corrupt_write).then_some(FaultAction::Corrupt),
+                FaultSite::SpillWrite => {
+                    if u < self.spec.spill_corrupt_write {
+                        Some(FaultAction::Corrupt)
+                    } else if u < self.spec.spill_corrupt_write + self.spec.spill_short_write {
+                        Some(FaultAction::ShortWrite)
+                    } else {
+                        None
+                    }
+                }
                 FaultSite::SpillRead => (u < self.spec.spill_corrupt_read).then_some(FaultAction::Corrupt),
                 FaultSite::Compile => (u < self.spec.compile_error).then_some(FaultAction::Error),
             };
@@ -254,6 +276,7 @@ mod imp {
                         FaultSite::SpillWrite => self.corrupt_writes.fetch_add(1, Ordering::Relaxed),
                         _ => self.corrupt_reads.fetch_add(1, Ordering::Relaxed),
                     },
+                    FaultAction::ShortWrite => self.short_writes.fetch_add(1, Ordering::Relaxed),
                 };
             }
             action
@@ -275,6 +298,7 @@ mod imp {
                 errors: self.errors.load(Ordering::Relaxed),
                 delays: self.delays.load(Ordering::Relaxed),
                 corrupt_writes: self.corrupt_writes.load(Ordering::Relaxed),
+                short_writes: self.short_writes.load(Ordering::Relaxed),
                 corrupt_reads: self.corrupt_reads.load(Ordering::Relaxed),
                 compile_errors: self.compile_errors.load(Ordering::Relaxed),
             }
@@ -363,6 +387,20 @@ mod tests {
         assert_eq!(st.panics, 3);
         assert_eq!(st.injected[FaultSite::ShardCompute.index()], 3);
         assert_eq!(st.occurrences[FaultSite::ShardCompute.index()], 13);
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn short_write_partitions_the_spill_write_draw() {
+        // P(short) = 1 with P(corrupt) = 0 → every decision is a short
+        // write, counted separately from corruption.
+        let spec = FaultSpec { spill_short_write: 1.0, max_per_site: 2, ..FaultSpec::default() };
+        let fi = FaultInjector::new(5, spec);
+        assert_eq!(fi.decide(FaultSite::SpillWrite), Some(FaultAction::ShortWrite));
+        assert_eq!(fi.decide(FaultSite::SpillWrite), Some(FaultAction::ShortWrite));
+        assert_eq!(fi.decide(FaultSite::SpillWrite), None, "cap honored");
+        let st = fi.stats();
+        assert_eq!((st.short_writes, st.corrupt_writes), (2, 0));
     }
 
     #[cfg(feature = "fault-injection")]

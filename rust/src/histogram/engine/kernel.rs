@@ -26,6 +26,26 @@
 //! is read directly from the output tensor (its completion is ordered by
 //! the wavefront dependency).
 //!
+//! ## Kernel variants
+//!
+//! Phase 2 ships in two shapes selected by the tuned plan
+//! ([`KernelVariant`], chosen by [`crate::tune::TunedPlanner`] from
+//! measured per-tile throughput):
+//!
+//! * [`KernelVariant::Reference`] — the original bin-major sweep above;
+//!   the arbiter every other path is property-tested against.
+//! * [`KernelVariant::Tuned`] — same per-cell arithmetic, two extra
+//!   levers: the segment fill/add inner loops are explicitly unrolled
+//!   4-wide (one f32 SIMD lane), and the row loop is cache-blocked
+//!   ([`ROW_BLOCK`] rows × all bins per block) so the two active output
+//!   rows of every bin stay L1/L2-resident across the bin sweep instead
+//!   of being evicted `bins` times per tile.  Bit-identical by
+//!   construction: each `(bin, row)` cell performs the identical
+//!   element-wise ops (no reassociation), and blocking only reorders
+//!   cells across *bins*, never past the row-above dependency within a
+//!   bin (block rows are swept top-to-bottom with all bins completing a
+//!   block before the next starts).
+//!
 //! ## Aliasing discipline
 //!
 //! Concurrent wavefront workers share the output tensor and the carry
@@ -127,6 +147,48 @@ impl TileScratch {
     }
 }
 
+/// Which phase-2 code shape to run — the auto-tuner's kernel lever (see
+/// the module-level "Kernel variants" notes).  Both variants produce
+/// bit-identical tensors; they differ only in loop structure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelVariant {
+    /// Bin-major sweep, compiler-vectorized segment loops — the
+    /// arbiter.
+    #[default]
+    Reference,
+    /// Row-blocked bin sweep + explicitly 4-wide-unrolled segment
+    /// loops.
+    Tuned,
+}
+
+impl KernelVariant {
+    pub const ALL: [KernelVariant; 2] = [KernelVariant::Reference, KernelVariant::Tuned];
+
+    /// Stable lowercase name for plan caches and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelVariant::Reference => "reference",
+            KernelVariant::Tuned => "tuned",
+        }
+    }
+
+    /// Inverse of [`KernelVariant::name`] (for tuning-cache loads).
+    pub fn from_name(s: &str) -> Option<KernelVariant> {
+        match s {
+            "reference" => Some(KernelVariant::Reference),
+            "tuned" => Some(KernelVariant::Tuned),
+            _ => None,
+        }
+    }
+}
+
+/// Rows per cache block in the tuned phase 2: all bins' segment scans
+/// for one block of rows run before the next block starts, keeping
+/// every bin's two active `tw`-wide rows hot.  8 rows × 128 cols × 2
+/// rows-live × 4 B ≈ 8 KiB per bin pair — comfortably L1 at any
+/// [`crate::tune::TILE_CANDIDATES`] edge.
+pub const ROW_BLOCK: usize = 8;
+
 /// `cur[i] = run` over a segment (constant row prefix, no bin-k pixel).
 #[inline]
 fn fill_run(cur: &mut [f32], run: f32) {
@@ -143,43 +205,63 @@ fn add_run(cur: &mut [f32], prev: &[f32], run: f32) {
     }
 }
 
-/// Scan one `th × tw` tile at origin `(ti, tj)` for **all** bins,
-/// writing final integral-histogram values into `out` (the full
-/// `bins×h×w` tensor window) and updating the left-edge carries in
-/// `colc` (layout `bins×h`).  Requires the tile above and to the left
-/// (if any) to be complete — the wavefront partial order.
-///
-/// Bins are swept plane-major: the bucketed tile (phase 1) is reused
-/// from L1 across every bin — the multi-bin fusion that amortizes the
-/// image read `bins×` — while each bin's active window is just two
-/// `tw`-wide rows, so the tile itself already bounds the working set
-/// and no further bin-axis blocking is needed (the paper's "B-bin
-/// block" alternative applies to un-tiled full-row sweeps).
+/// [`fill_run`], explicitly unrolled 4-wide (one f32 SSE lane).  A
+/// plain store loop either way — trivially value-identical; the
+/// remainder loop covers segments and tiles narrower than the lane.
+#[inline]
+fn fill_run_x4(cur: &mut [f32], run: f32) {
+    let mut it = cur.chunks_exact_mut(4);
+    for c in &mut it {
+        c[0] = run;
+        c[1] = run;
+        c[2] = run;
+        c[3] = run;
+    }
+    for v in it.into_remainder() {
+        *v = run;
+    }
+}
+
+/// [`add_run`], explicitly unrolled 4-wide.  Each element is computed
+/// as exactly `prev[i] + run` — element-wise, no reassociation — so the
+/// result is bit-identical to the reference loop.
+#[inline]
+fn add_run_x4(cur: &mut [f32], prev: &[f32], run: f32) {
+    let n = cur.len();
+    debug_assert_eq!(prev.len(), n);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        cur[i] = prev[i] + run;
+        cur[i + 1] = prev[i + 1] + run;
+        cur[i + 2] = prev[i + 2] + run;
+        cur[i + 3] = prev[i + 3] + run;
+        i += 4;
+    }
+    while i < n {
+        cur[i] = prev[i] + run;
+        i += 1;
+    }
+}
+
+/// Phase 1: one pass over the tile's pixels — counting-sort each row's
+/// columns by bin.  This is the only read of the image; both phase-2
+/// variants consume the same bucket structure.
 ///
 /// Pixels with values outside `[0, bins)` (e.g. the −1 padding of
 /// §3.4, or any stray out-of-range index) count in no bin, matching
 /// the per-bin baselines' `== k` semantics.
-pub fn scan_tile(
+#[inline]
+fn bucket_tile(
     img: &BinnedImage,
     ti: usize,
     tj: usize,
     th: usize,
     tw: usize,
-    colc: &SharedTensor,
-    out: &SharedTensor,
     scratch: &mut TileScratch,
 ) {
-    let (h, w, bins) = (img.h, img.w, img.bins);
-    let plane = h * w;
+    let (w, bins) = (img.w, img.bins);
     let tile = scratch.tile;
-    debug_assert!(th <= tile && tw <= tile, "scratch sized for a smaller tile");
-    debug_assert_eq!(scratch.bins, bins, "scratch sized for a different bin count");
-    debug_assert_eq!(colc.len(), bins * h);
-    debug_assert_eq!(out.len(), bins * plane);
     let bp1 = bins + 1;
-
-    // Phase 1: one pass over the tile's pixels — counting-sort each
-    // row's columns by bin.  This is the only read of the image.
     for r in 0..th {
         let rowbase = (ti + r) * w + tj;
         let st = &mut scratch.start[r * bp1..(r + 1) * bp1];
@@ -204,6 +286,104 @@ pub fn scan_tile(
             }
         }
     }
+}
+
+/// Phase 2 for one `(bin, row)` cell: segment-wise
+/// `out[x] = out[x-1] + run`, `run` stepping at bin-k pixel columns.
+/// Shared verbatim by both variants (`X4` only swaps the segment
+/// helpers), so their per-cell arithmetic is identical by construction.
+/// Returns the updated right-edge carry.
+///
+/// # Safety
+/// Caller must own segment `(o, tw)` of `out` exclusively, and (for
+/// `x > 0`) the row above `(o − w, tw)` must be complete and published
+/// with no overlapping mutable borrow — the tile dependency order
+/// provides both (see [`scan_tile`]'s SAFETY notes).
+#[inline(always)]
+unsafe fn scan_cell<const X4: bool>(
+    out: &SharedTensor,
+    o: usize,
+    w: usize,
+    x: usize,
+    tw: usize,
+    steps: &[u32],
+    mut run: f32,
+) -> f32 {
+    if x == 0 {
+        // Top image row: no row above, H(k,0,y) = run.
+        let cur = unsafe { out.seg_mut(o, tw) };
+        let mut c0 = 0usize;
+        for &pc in steps {
+            let pc = pc as usize;
+            if X4 {
+                fill_run_x4(&mut cur[c0..pc], run);
+            } else {
+                fill_run(&mut cur[c0..pc], run);
+            }
+            run += 1.0;
+            cur[pc] = run;
+            c0 = pc + 1;
+        }
+        if X4 {
+            fill_run_x4(&mut cur[c0..], run);
+        } else {
+            fill_run(&mut cur[c0..], run);
+        }
+    } else {
+        let (cur, prev) = unsafe { (out.seg_mut(o, tw), out.seg(o - w, tw)) };
+        let mut c0 = 0usize;
+        for &pc in steps {
+            let pc = pc as usize;
+            if X4 {
+                add_run_x4(&mut cur[c0..pc], &prev[c0..pc], run);
+            } else {
+                add_run(&mut cur[c0..pc], &prev[c0..pc], run);
+            }
+            run += 1.0;
+            cur[pc] = prev[pc] + run;
+            c0 = pc + 1;
+        }
+        if X4 {
+            add_run_x4(&mut cur[c0..], &prev[c0..], run);
+        } else {
+            add_run(&mut cur[c0..], &prev[c0..], run);
+        }
+    }
+    run
+}
+
+/// Scan one `th × tw` tile at origin `(ti, tj)` for **all** bins,
+/// writing final integral-histogram values into `out` (the full
+/// `bins×h×w` tensor window) and updating the left-edge carries in
+/// `colc` (layout `bins×h`).  Requires the tile above and to the left
+/// (if any) to be complete — the wavefront partial order.
+///
+/// Bins are swept plane-major: the bucketed tile (phase 1) is reused
+/// from L1 across every bin — the multi-bin fusion that amortizes the
+/// image read `bins×` — while each bin's active window is just two
+/// `tw`-wide rows, so the tile itself already bounds the working set
+/// and no further bin-axis blocking is needed (the paper's "B-bin
+/// block" alternative applies to un-tiled full-row sweeps).
+pub fn scan_tile(
+    img: &BinnedImage,
+    ti: usize,
+    tj: usize,
+    th: usize,
+    tw: usize,
+    colc: &SharedTensor,
+    out: &SharedTensor,
+    scratch: &mut TileScratch,
+) {
+    let (h, w, bins) = (img.h, img.w, img.bins);
+    let plane = h * w;
+    let tile = scratch.tile;
+    debug_assert!(th <= tile && tw <= tile, "scratch sized for a smaller tile");
+    debug_assert_eq!(scratch.bins, bins, "scratch sized for a different bin count");
+    debug_assert_eq!(colc.len(), bins * h);
+    debug_assert_eq!(out.len(), bins * plane);
+    let bp1 = bins + 1;
+
+    bucket_tile(img, ti, tj, th, tw, scratch);
 
     // Phase 2: per bin, per row: segment-wise
     //   out[x] = out[x-1] + run,   run stepping at bin-k pixel columns.
@@ -215,49 +395,100 @@ pub fn scan_tile(
         let carry = unsafe { colc.seg_mut(k * h + ti, th) };
         for r in 0..th {
             let x = ti + r;
-            let mut run = carry[r];
             let o = pbase + x * w + tj;
             let row = r * bp1;
             let s0 = scratch.start[row + k] as usize;
             let s1 = scratch.start[row + k + 1] as usize;
             let steps = &scratch.pos[r * tile + s0..r * tile + s1];
-            if x == 0 {
-                // Top image row: no row above, H(k,0,y) = run.
-                // SAFETY: this tile exclusively owns segment
-                // (k, x, [tj, tj+tw)) until its completion is
-                // published.
-                let cur = unsafe { out.seg_mut(o, tw) };
-                let mut c0 = 0usize;
-                for &pc in steps {
-                    let pc = pc as usize;
-                    fill_run(&mut cur[c0..pc], run);
-                    run += 1.0;
-                    cur[pc] = run;
-                    c0 = pc + 1;
-                }
-                fill_run(&mut cur[c0..], run);
-            } else {
-                // SAFETY: the write segment is exclusively owned as
-                // above.  The read segment is one row up in the same
-                // columns: for r > 0 it was written by this same tile;
-                // for r == 0 it belongs to the finished tile above
-                // (published via the scheduler mutex), and no
-                // concurrent tile's write segment overlaps it
-                // (different tile row AND column — see module aliasing
-                // notes).
-                let (cur, prev) = unsafe { (out.seg_mut(o, tw), out.seg(o - w, tw)) };
-                let mut c0 = 0usize;
-                for &pc in steps {
-                    let pc = pc as usize;
-                    add_run(&mut cur[c0..pc], &prev[c0..pc], run);
-                    run += 1.0;
-                    cur[pc] = prev[pc] + run;
-                    c0 = pc + 1;
-                }
-                add_run(&mut cur[c0..], &prev[c0..], run);
-            }
-            carry[r] = run;
+            // SAFETY: this tile exclusively owns segment (k, x, [tj,
+            // tj+tw)) until its completion is published.  The read
+            // segment is one row up in the same columns: for r > 0 it
+            // was written by this same tile; for r == 0 it belongs to
+            // the finished tile above (published via the scheduler
+            // mutex), and no concurrent tile's write segment overlaps
+            // it (different tile row AND column — see module aliasing
+            // notes).
+            carry[r] = unsafe { scan_cell::<false>(out, o, w, x, tw, steps, carry[r]) };
         }
+    }
+}
+
+/// The tuned-variant tile scan: identical phase 1, row-blocked phase 2
+/// with the 4-wide-unrolled segment loops.
+///
+/// Bit-identity: every `(bin, row)` cell runs the same [`scan_cell`]
+/// arithmetic on the same inputs.  Blocking reorders cells only across
+/// bins; within a bin, rows are still visited strictly top-to-bottom
+/// (ascending blocks, ascending rows inside a block), so cell `(k, r)`
+/// always runs after `(k, r−1)` — the only intra-tile dependency (via
+/// the output row above and nothing else; each cell touches exactly its
+/// own `carry[r]` slot).
+pub fn scan_tile_tuned(
+    img: &BinnedImage,
+    ti: usize,
+    tj: usize,
+    th: usize,
+    tw: usize,
+    colc: &SharedTensor,
+    out: &SharedTensor,
+    scratch: &mut TileScratch,
+) {
+    let (h, w, bins) = (img.h, img.w, img.bins);
+    let plane = h * w;
+    let tile = scratch.tile;
+    debug_assert!(th <= tile && tw <= tile, "scratch sized for a smaller tile");
+    debug_assert_eq!(scratch.bins, bins, "scratch sized for a different bin count");
+    debug_assert_eq!(colc.len(), bins * h);
+    debug_assert_eq!(out.len(), bins * plane);
+    let bp1 = bins + 1;
+
+    bucket_tile(img, ti, tj, th, tw, scratch);
+
+    // Phase 2, cache-blocked: ROW_BLOCK rows × all bins per block.
+    let mut r0 = 0usize;
+    while r0 < th {
+        let r1 = (r0 + ROW_BLOCK).min(th);
+        for k in 0..bins {
+            let pbase = k * plane;
+            // SAFETY: as in `scan_tile` — this tile owns rows
+            // [ti, ti+th) of bin k's carry column; re-borrowing the
+            // same segment per block is still exclusive (no borrow
+            // outlives the block).
+            let carry = unsafe { colc.seg_mut(k * h + ti, th) };
+            for r in r0..r1 {
+                let x = ti + r;
+                let o = pbase + x * w + tj;
+                let row = r * bp1;
+                let s0 = scratch.start[row + k] as usize;
+                let s1 = scratch.start[row + k + 1] as usize;
+                let steps = &scratch.pos[r * tile + s0..r * tile + s1];
+                // SAFETY: identical ownership argument to `scan_tile`;
+                // the row above (x − 1) is complete because blocks and
+                // rows-within-block both ascend.
+                carry[r] = unsafe { scan_cell::<true>(out, o, w, x, tw, steps, carry[r]) };
+            }
+        }
+        r0 = r1;
+    }
+}
+
+/// Variant dispatch — the single entry the schedules call with the
+/// tuned plan's [`KernelVariant`].
+#[inline]
+pub fn scan_tile_v(
+    img: &BinnedImage,
+    ti: usize,
+    tj: usize,
+    th: usize,
+    tw: usize,
+    colc: &SharedTensor,
+    out: &SharedTensor,
+    scratch: &mut TileScratch,
+    variant: KernelVariant,
+) {
+    match variant {
+        KernelVariant::Reference => scan_tile(img, ti, tj, th, tw, colc, out, scratch),
+        KernelVariant::Tuned => scan_tile_tuned(img, ti, tj, th, tw, colc, out, scratch),
     }
 }
 
@@ -276,13 +507,17 @@ mod tests {
     }
 
     fn run_single_tile(img: &BinnedImage) -> IntegralHistogram {
+        run_single_tile_v(img, KernelVariant::Reference)
+    }
+
+    fn run_single_tile_v(img: &BinnedImage, variant: KernelVariant) -> IntegralHistogram {
         let (h, w, bins) = (img.h, img.w, img.bins);
         let tile = h.max(w);
         let mut scratch = TileScratch::default();
         scratch.ensure(tile, bins);
         let mut colc = vec![0.0f32; bins * h];
         let mut out = vec![0.0f32; bins * h * w];
-        scan_tile(
+        scan_tile_v(
             img,
             0,
             0,
@@ -291,6 +526,7 @@ mod tests {
             &SharedTensor::new(&mut colc),
             &SharedTensor::new(&mut out),
             &mut scratch,
+            variant,
         );
         IntegralHistogram::from_raw(bins, h, w, out)
     }
@@ -304,6 +540,61 @@ mod tests {
             let got = run_single_tile(&img);
             assert_eq!(expected.max_abs_diff(&got), 0.0, "{h}x{w}x{bins}");
         }
+    }
+
+    /// The tuned variant is bit-identical to the reference on
+    /// adversarial shapes — including `w < 4` (below the unroll lane
+    /// width), rows taller than [`ROW_BLOCK`], and non-multiples of
+    /// both.
+    #[test]
+    fn tuned_variant_is_bit_identical() {
+        for (h, w, bins) in [
+            (1, 1, 1),
+            (3, 2, 5),   // w < lane width
+            (9, 3, 4),   // block remainder + w < lane
+            (8, 8, 2),   // exact ROW_BLOCK
+            (17, 23, 7), // ragged everything
+            (33, 5, 3),  // several blocks, narrow
+        ] {
+            let img = random_image(h, w, bins, (h * 1000 + w * 10 + bins) as u64);
+            let reference = run_single_tile_v(&img, KernelVariant::Reference);
+            let tuned = run_single_tile_v(&img, KernelVariant::Tuned);
+            assert_eq!(reference, tuned, "{h}x{w}x{bins} must be bit-identical");
+            let expected = integral_histogram_seq(&img);
+            assert_eq!(expected.max_abs_diff(&tuned), 0.0, "{h}x{w}x{bins} vs Algorithm 1");
+        }
+    }
+
+    /// Tuned multi-tile sweep (carries crossing tiles) is bit-identical
+    /// to the reference sweep over the same tiling.
+    #[test]
+    fn tuned_tile_sweep_is_bit_identical() {
+        let (h, w, bins, tile) = (23, 31, 5, 8);
+        let img = random_image(h, w, bins, 99);
+        let mut outs = Vec::new();
+        for variant in KernelVariant::ALL {
+            let mut scratch = TileScratch::default();
+            scratch.ensure(tile, bins);
+            let mut colc = vec![0.0f32; bins * h];
+            let mut out = vec![0.0f32; bins * h * w];
+            {
+                let colc_win = SharedTensor::new(&mut colc);
+                let out_win = SharedTensor::new(&mut out);
+                let mut ti = 0;
+                while ti < h {
+                    let th = tile.min(h - ti);
+                    let mut tj = 0;
+                    while tj < w {
+                        let tw = tile.min(w - tj);
+                        scan_tile_v(&img, ti, tj, th, tw, &colc_win, &out_win, &mut scratch, variant);
+                        tj += tile;
+                    }
+                    ti += tile;
+                }
+            }
+            outs.push(out);
+        }
+        assert_eq!(outs[0], outs[1], "sweep variants must be bit-identical");
     }
 
     /// Row-major tile sweep (wavefront-legal order) over ragged tiles.
@@ -346,8 +637,10 @@ mod tests {
         // a stray value == bins must not panic and counts nowhere
         img.data[1] = 2;
         let expected = integral_histogram_seq(&img);
-        let got = run_single_tile(&img);
-        assert_eq!(expected.max_abs_diff(&got), 0.0);
+        for variant in KernelVariant::ALL {
+            let got = run_single_tile_v(&img, variant);
+            assert_eq!(expected.max_abs_diff(&got), 0.0, "{}", variant.name());
+        }
     }
 
     /// A dirty output buffer must not leak into the result (every
@@ -357,22 +650,25 @@ mod tests {
         let (h, w, bins) = (9, 11, 3);
         let img = random_image(h, w, bins, 5);
         let expected = integral_histogram_seq(&img);
-        let mut scratch = TileScratch::default();
-        scratch.ensure(16, bins);
-        let mut colc = vec![0.0f32; bins * h];
-        let mut out = vec![f32::NAN; bins * h * w];
-        scan_tile(
-            &img,
-            0,
-            0,
-            h,
-            w,
-            &SharedTensor::new(&mut colc),
-            &SharedTensor::new(&mut out),
-            &mut scratch,
-        );
-        let got = IntegralHistogram::from_raw(bins, h, w, out);
-        assert_eq!(expected.max_abs_diff(&got), 0.0);
+        for variant in KernelVariant::ALL {
+            let mut scratch = TileScratch::default();
+            scratch.ensure(16, bins);
+            let mut colc = vec![0.0f32; bins * h];
+            let mut out = vec![f32::NAN; bins * h * w];
+            scan_tile_v(
+                &img,
+                0,
+                0,
+                h,
+                w,
+                &SharedTensor::new(&mut colc),
+                &SharedTensor::new(&mut out),
+                &mut scratch,
+                variant,
+            );
+            let got = IntegralHistogram::from_raw(bins, h, w, out);
+            assert_eq!(expected.max_abs_diff(&got), 0.0, "{}", variant.name());
+        }
     }
 
     #[test]
@@ -384,5 +680,13 @@ mod tests {
         assert_eq!(p0, s.pos.as_ptr(), "no realloc when already sized");
         s.ensure(16, 4);
         assert_eq!(s.tile(), 16);
+    }
+
+    #[test]
+    fn variant_names_roundtrip() {
+        for v in KernelVariant::ALL {
+            assert_eq!(KernelVariant::from_name(v.name()), Some(v));
+        }
+        assert_eq!(KernelVariant::from_name("bogus"), None);
     }
 }

@@ -37,14 +37,20 @@ pub mod planner;
 pub mod wavefront;
 pub mod worker_pool;
 
-pub use kernel::TileScratch;
+pub use kernel::{KernelVariant, TileScratch};
 pub use planner::{Plan, Planner, Schedule};
-pub use wavefront::{integral_histogram_fused, integral_histogram_wavefront};
+pub use wavefront::{
+    integral_histogram_fused, integral_histogram_fused_v, integral_histogram_wavefront,
+    integral_histogram_wavefront_v,
+};
 pub use worker_pool::{WorkerPool, WorkerPoolStats};
 
 use crate::histogram::engine::kernel::SharedTensor;
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
+use crate::tune::TunedPlanner;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 /// The planned scan engine.  Owns every reusable buffer except the
 /// output tensor (which the caller provides, typically from a
@@ -67,6 +73,11 @@ pub struct ScanEngine {
     /// plan and parked between frames.
     pool: Option<WorkerPool>,
     last_plan: Option<Plan>,
+    /// Optional auto-tuner (see [`crate::tune`]): when set, plans come
+    /// from its calibrated cached search instead of the static decision
+    /// table, and tile-sweep timings are fed back into its calibrator.
+    /// Engines sharing one `Arc` share one tuning cache.
+    tuner: Option<Arc<TunedPlanner>>,
 }
 
 impl ScanEngine {
@@ -85,6 +96,23 @@ impl ScanEngine {
         ScanEngine { planner, workers, ..Default::default() }
     }
 
+    /// Engine planned by a shared [`TunedPlanner`] (calibrated cached
+    /// auto-tune) instead of the static table.
+    pub fn with_tuner(workers: usize, tuner: Arc<TunedPlanner>) -> ScanEngine {
+        let mut eng = Self::new(workers);
+        eng.tuner = Some(tuner);
+        eng
+    }
+
+    /// Attach or detach the auto-tuner.
+    pub fn set_tuner(&mut self, tuner: Option<Arc<TunedPlanner>>) {
+        self.tuner = tuner;
+    }
+
+    pub fn tuner(&self) -> Option<&Arc<TunedPlanner>> {
+        self.tuner.as_ref()
+    }
+
     pub fn workers(&self) -> usize {
         self.workers
     }
@@ -99,7 +127,15 @@ impl ScanEngine {
 
     /// The plan the engine would execute for this image.
     pub fn plan_for(&self, img: &BinnedImage) -> Plan {
-        self.planner.plan(img.h, img.w, img.bins, self.workers)
+        self.make_plan(img.h, img.w, img.bins)
+    }
+
+    /// Tuned plan when a tuner is attached, static plan otherwise.
+    fn make_plan(&self, h: usize, w: usize, bins: usize) -> Plan {
+        match &self.tuner {
+            Some(t) => t.plan(h, w, bins, self.workers),
+            None => self.planner.plan(h, w, bins, self.workers),
+        }
     }
 
     /// The plan executed by the most recent compute call.
@@ -132,8 +168,12 @@ impl ScanEngine {
         if out.data.len() != n {
             out.data.resize(n, 0.0);
         }
-        let plan = self.planner.plan(img.h, img.w, img.bins, self.workers);
+        let plan = self.make_plan(img.h, img.w, img.bins);
         self.last_plan = Some(plan);
+        // Tile-sweep schedules feed their wall time back into the
+        // calibrator (EWMA), closing the predicted-vs-measured loop;
+        // without a tuner no clock is read.
+        let t0 = self.tuner.as_ref().map(|_| Instant::now());
         match plan.schedule {
             Schedule::BinParallel => {
                 if plan.workers <= 1 {
@@ -170,12 +210,13 @@ impl ScanEngine {
             }
             Schedule::Serial => {
                 self.reset_carries(img);
-                wavefront::fused_scan_into(
+                wavefront::fused_scan_into_v(
                     img,
                     plan.tile,
                     &mut self.colc,
                     &mut self.scratch,
                     &mut out.data,
+                    plan.kernel,
                 );
             }
             Schedule::Wavefront => {
@@ -183,18 +224,19 @@ impl ScanEngine {
                 if plan.workers <= 1 {
                     // Degenerate grid: no diagonal to spread over, so
                     // no reason to spawn (or wake) the pool.
-                    wavefront::fused_scan_into(
+                    wavefront::fused_scan_into_v(
                         img,
                         plan.tile,
                         &mut self.colc,
                         &mut self.scratch,
                         &mut out.data,
+                        plan.kernel,
                     );
                 } else {
                     if self.pool.is_none() {
                         self.pool = Some(WorkerPool::new(self.workers.saturating_sub(1)));
                     }
-                    wavefront::wavefront_scan_into(
+                    wavefront::wavefront_scan_into_v(
                         img,
                         plan.tile,
                         plan.workers,
@@ -203,8 +245,22 @@ impl ScanEngine {
                         self.pool.as_mut().expect("pool just ensured"),
                         &mut self.wave,
                         &mut out.data,
+                        plan.kernel,
                     );
                 }
+            }
+        }
+        if let (Some(t0), Some(tuner)) = (t0, self.tuner.as_ref()) {
+            if plan.schedule != Schedule::BinParallel {
+                // Per-worker tile throughput: divide the frame's
+                // element count by the workers that swept it, so the
+                // parallel wavefront reports a number comparable to the
+                // serial sweep (scheduling/ramp losses included — which
+                // is exactly what the wavefront cost model divides by).
+                let per_worker = n as f64 / plan.workers.max(1) as f64;
+                tuner
+                    .calibrator()
+                    .observe_tile(plan.tile, plan.kernel, per_worker, t0.elapsed());
             }
         }
     }
@@ -337,5 +393,28 @@ mod tests {
         let p = eng.plan_for(&img);
         assert_eq!(p.schedule, Schedule::Wavefront);
         assert_eq!(p, eng.planner().plan(512, 512, 32, 4));
+    }
+
+    /// Engines sharing one tuner share one cache, stay bit-identical to
+    /// Algorithm 1, and feed their tile timings back to the calibrator.
+    #[test]
+    fn tuned_engine_is_bit_identical_and_shares_one_cache() {
+        use crate::simulator::pcie::Card;
+        use crate::tune::Calibrator;
+        let tuner = Arc::new(TunedPlanner::new(Arc::new(Calibrator::new(Card::Gtx480))));
+        let img = random_image(90, 70, 6, 9);
+        let expected = integral_histogram_seq(&img);
+        let mut a = ScanEngine::with_tuner(4, Arc::clone(&tuner));
+        let mut b = ScanEngine::with_tuner(4, Arc::clone(&tuner));
+        let out_a = a.compute(&img);
+        let out_b = b.compute(&img);
+        assert_eq!(expected.max_abs_diff(&out_a), 0.0);
+        assert_eq!(expected.max_abs_diff(&out_b), 0.0);
+        assert_eq!(a.last_plan(), b.last_plan());
+        let s = tuner.stats();
+        assert_eq!(s.misses, 1, "second engine must hit the shared cache");
+        assert!(s.hits >= 1);
+        // The tile sweep reported its wall time into the calibrator.
+        assert!(tuner.calibrator().snapshot().samples >= 1);
     }
 }

@@ -19,6 +19,8 @@
 //!   grid is at least 2×2: its parallelism `min(h/t, w/t)` is
 //!   bin-independent and its memory traffic is the WF-TiS single pass.
 
+use crate::histogram::engine::kernel::KernelVariant;
+
 /// Which execution schedule to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Schedule {
@@ -43,6 +45,10 @@ pub struct Plan {
     pub tile: usize,
     /// Workers the schedule will actually use (≤ the engine budget).
     pub workers: usize,
+    /// Which tile-kernel code shape to run.  The static planner always
+    /// picks the reference kernel; [`crate::tune::TunedPlanner`]
+    /// selects per tile size from measured throughput.
+    pub kernel: KernelVariant,
 }
 
 /// Work (in output elements) below which threading overhead dominates
@@ -87,7 +93,7 @@ impl Planner {
             Schedule::BinParallel => workers.min(bins),
             Schedule::Wavefront => workers.min(diag.max(1)),
         };
-        Plan { schedule, tile, workers }
+        Plan { schedule, tile, workers, kernel: KernelVariant::Reference }
     }
 }
 
@@ -164,6 +170,12 @@ mod tests {
         let p = Planner { schedule_override: Some(Schedule::BinParallel), ..Default::default() }
             .plan(512, 512, 4, 16);
         assert_eq!(p.workers, 4);
+    }
+
+    #[test]
+    fn static_plans_use_the_reference_kernel() {
+        assert_eq!(Planner::default().plan(512, 512, 32, 8).kernel, KernelVariant::Reference);
+        assert_eq!(Planner::default().plan(64, 64, 8, 1).kernel, KernelVariant::Reference);
     }
 
     #[test]

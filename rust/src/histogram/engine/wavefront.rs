@@ -26,7 +26,7 @@
 //! frame spawns no threads and allocates nothing (see
 //! [`crate::histogram::engine::worker_pool`]).
 
-use crate::histogram::engine::kernel::{scan_tile, SharedTensor, TileScratch};
+use crate::histogram::engine::kernel::{scan_tile_v, KernelVariant, SharedTensor, TileScratch};
 use crate::histogram::engine::worker_pool::WorkerPool;
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
 use std::sync::{Condvar, Mutex};
@@ -59,6 +59,21 @@ pub fn fused_scan_into(
     scratch: &mut TileScratch,
     out: &mut [f32],
 ) {
+    fused_scan_into_v(img, tile, colc, scratch, out, KernelVariant::Reference);
+}
+
+/// [`fused_scan_into`] with an explicit tile-kernel variant — the entry
+/// the tuned plan drives ([`crate::tune::TunedPlanner`]).  Both
+/// variants are bit-identical; see
+/// [`crate::histogram::engine::kernel`].
+pub fn fused_scan_into_v(
+    img: &BinnedImage,
+    tile: usize,
+    colc: &mut [f32],
+    scratch: &mut TileScratch,
+    out: &mut [f32],
+    variant: KernelVariant,
+) {
     assert!(tile >= 1, "tile must be positive");
     let (h, w) = (img.h, img.w);
     scratch.ensure(tile, img.bins);
@@ -70,7 +85,7 @@ pub fn fused_scan_into(
         let mut tj = 0;
         while tj < w {
             let tw = tile.min(w - tj);
-            scan_tile(img, ti, tj, th, tw, &colc_win, &out_win, scratch);
+            scan_tile_v(img, ti, tj, th, tw, &colc_win, &out_win, scratch, variant);
             tj += tile;
         }
         ti += tile;
@@ -95,6 +110,36 @@ pub fn wavefront_scan_into(
     ws: &mut WavefrontScratch,
     out: &mut [f32],
 ) {
+    wavefront_scan_into_v(
+        img,
+        tile,
+        workers,
+        colc,
+        scratch,
+        pool,
+        ws,
+        out,
+        KernelVariant::Reference,
+    );
+}
+
+/// [`wavefront_scan_into`] with an explicit tile-kernel variant — the
+/// parallel counterpart of [`fused_scan_into_v`].  The variant changes
+/// only each tile's internal loop shape, never the inter-tile
+/// dependency order, so the aliasing and determinism arguments are
+/// unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn wavefront_scan_into_v(
+    img: &BinnedImage,
+    tile: usize,
+    workers: usize,
+    colc: &mut [f32],
+    scratch: &mut TileScratch,
+    pool: &mut WorkerPool,
+    ws: &mut WavefrontScratch,
+    out: &mut [f32],
+    variant: KernelVariant,
+) {
     assert!(tile >= 1, "tile must be positive");
     let (h, w) = (img.h, img.w);
     let tr = h.div_ceil(tile);
@@ -102,7 +147,7 @@ pub fn wavefront_scan_into(
     let n_tasks = tr * tc;
     let workers = workers.clamp(1, tr.min(tc));
     if workers <= 1 || n_tasks == 1 {
-        fused_scan_into(img, tile, colc, scratch, out);
+        fused_scan_into_v(img, tile, colc, scratch, out, variant);
         return;
     }
     assert_eq!(colc.len(), img.bins * h);
@@ -158,7 +203,7 @@ pub fn wavefront_scan_into(
             // tile above's bottom row) were published under the
             // scheduler mutex we just acquired.  `scan_tile` borrows
             // exactly those disjoint segments through the windows.
-            scan_tile(img, ti, tj, th, tw, &colc_win, &out_win, scratch);
+            scan_tile_v(img, ti, tj, th, tw, &colc_win, &out_win, scratch, variant);
             // Publish completion: unlock right/down neighbours.
             let mut st = state.lock().expect("scheduler lock");
             st.remaining -= 1;
@@ -196,10 +241,21 @@ pub fn wavefront_scan_into(
 /// Allocating convenience wrapper over [`fused_scan_into`] — the
 /// single-thread fused baseline for benches and property tests.
 pub fn integral_histogram_fused(img: &BinnedImage, tile: usize) -> IntegralHistogram {
+    integral_histogram_fused_v(img, tile, KernelVariant::Reference)
+}
+
+/// Allocating wrapper over [`fused_scan_into_v`] — lets benches, the
+/// calibrator's microbench and property tests drive a specific kernel
+/// variant.
+pub fn integral_histogram_fused_v(
+    img: &BinnedImage,
+    tile: usize,
+    variant: KernelVariant,
+) -> IntegralHistogram {
     let mut out = IntegralHistogram::zeros(img.bins, img.h, img.w);
     let mut colc = vec![0.0f32; img.bins * img.h];
     let mut scratch = TileScratch::default();
-    fused_scan_into(img, tile, &mut colc, &mut scratch, &mut out.data);
+    fused_scan_into_v(img, tile, &mut colc, &mut scratch, &mut out.data, variant);
     out
 }
 
@@ -211,12 +267,23 @@ pub fn integral_histogram_wavefront(
     tile: usize,
     workers: usize,
 ) -> IntegralHistogram {
+    integral_histogram_wavefront_v(img, tile, workers, KernelVariant::Reference)
+}
+
+/// Allocating wrapper over [`wavefront_scan_into_v`] with a transient
+/// pool.
+pub fn integral_histogram_wavefront_v(
+    img: &BinnedImage,
+    tile: usize,
+    workers: usize,
+    variant: KernelVariant,
+) -> IntegralHistogram {
     let mut out = IntegralHistogram::zeros(img.bins, img.h, img.w);
     let mut colc = vec![0.0f32; img.bins * img.h];
     let mut scratch = TileScratch::default();
     let mut pool = WorkerPool::new(workers.saturating_sub(1));
     let mut ws = WavefrontScratch::default();
-    wavefront_scan_into(
+    wavefront_scan_into_v(
         img,
         tile,
         workers,
@@ -225,6 +292,7 @@ pub fn integral_histogram_wavefront(
         &mut pool,
         &mut ws,
         &mut out.data,
+        variant,
     );
     out
 }
@@ -294,6 +362,27 @@ mod tests {
         let expected = integral_histogram_seq(&img);
         let got = integral_histogram_wavefront(&img, 8, 2);
         assert_eq!(expected.max_abs_diff(&got), 0.0);
+    }
+
+    /// The tuned kernel variant under both schedules is bit-identical
+    /// to the reference — including shapes narrower than the unroll
+    /// lane and ragged tile grids.
+    #[test]
+    fn tuned_variant_schedules_are_bit_identical() {
+        for (h, w, bins, tile, workers) in [
+            (45usize, 77usize, 4usize, 16usize, 4usize),
+            (64, 96, 8, 32, 3),
+            (3, 2, 5, 8, 2), // w < lane width
+            (29, 1, 3, 8, 4),
+        ] {
+            let img = random_image(h, w, bins, (h * 31 + w) as u64);
+            let reference = integral_histogram_wavefront(&img, tile, workers);
+            let tuned_wf =
+                integral_histogram_wavefront_v(&img, tile, workers, KernelVariant::Tuned);
+            let tuned_fused = integral_histogram_fused_v(&img, tile, KernelVariant::Tuned);
+            assert_eq!(reference, tuned_wf, "{h}x{w}x{bins} wavefront");
+            assert_eq!(reference, tuned_fused, "{h}x{w}x{bins} fused");
+        }
     }
 
     /// Integer counts in f32: the parallel schedule must be bit-identical

@@ -45,6 +45,7 @@ pub mod histogram;
 pub mod runtime;
 pub mod shard;
 pub mod simulator;
+pub mod tune;
 pub mod util;
 pub mod video;
 
@@ -69,9 +70,10 @@ pub mod prelude {
     pub use crate::runtime::artifact::{ArtifactManifest, ArtifactMeta};
     pub use crate::runtime::client::HistogramExecutor;
     pub use crate::shard::{
-        FrameTicket, ShardError, ShardExecutor, ShardExecutorConfig, ShardPlan, ShardPlanner,
-        ShardPolicy, ShardReport, TensorStore,
+        FrameTicket, ShardCost, ShardError, ShardExecutor, ShardExecutorConfig, ShardPlan,
+        ShardPlanner, ShardPolicy, ShardReport, TensorStore,
     };
     pub use crate::simulator::pcie::PcieModel;
+    pub use crate::tune::{Calibrator, CostSnapshot, TunedPlanner, TuneStats};
     pub use crate::video::source::{FrameSource, VideoFrame};
 }

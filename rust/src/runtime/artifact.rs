@@ -6,6 +6,7 @@
 //! padded image geometry (§3.4 padding rule), bin count, tile size and
 //! the I/O signature of the lowered HLO module.
 
+use crate::fault::{corrupt_bytes, FaultAction, FaultInjector, FaultSite};
 use crate::histogram::types::Strategy;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Context, Result};
@@ -158,10 +159,37 @@ pub struct ArtifactManifest {
 impl ArtifactManifest {
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactManifest> {
+        Self::load_with_faults(dir, None)
+    }
+
+    /// [`Self::load`] with the artifact-load chaos probe armed: the
+    /// disk read consults [`FaultSite::SpillRead`], so a seeded
+    /// schedule can hand the parser a corrupted or torn (truncated)
+    /// manifest — the same failure classes the spill store's read path
+    /// probes.  The parse layer must then reject the bytes typed, never
+    /// serve from them silently.  Inert (identical to [`Self::load`])
+    /// without `--features fault-injection`.
+    pub fn load_with_faults(
+        dir: impl AsRef<Path>,
+        faults: Option<&FaultInjector>,
+    ) -> Result<ArtifactManifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let text = match faults.and_then(|f| f.decide(FaultSite::SpillRead)) {
+            Some(FaultAction::Corrupt) => {
+                let mut bytes = text.into_bytes();
+                corrupt_bytes(&mut bytes, 0xA871_FAC7);
+                String::from_utf8_lossy(&bytes).into_owned()
+            }
+            // A torn file read back: only a prefix survived (byte-wise
+            // — a torn disk page does not respect char boundaries).
+            Some(FaultAction::ShortWrite) => {
+                String::from_utf8_lossy(&text.as_bytes()[..text.len() / 2]).into_owned()
+            }
+            _ => text,
+        };
         Self::parse(&text, dir)
     }
 
@@ -310,6 +338,35 @@ mod tests {
         assert!(ArtifactManifest::parse("not json", PathBuf::new()).is_err());
         let missing = r#"{"artifacts": [{"name": "x"}]}"#;
         assert!(ArtifactManifest::parse(missing, PathBuf::new()).is_err());
+    }
+
+    /// The artifact load path's `SpillRead` probe: a corrupted disk
+    /// read must surface as a typed parse error or a visibly different
+    /// manifest — never a silent clean load — and the probe budget
+    /// makes the very next load clean again.
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn armed_load_probe_corrupts_the_manifest_read() {
+        use crate::fault::FaultSpec;
+        let dir = std::env::temp_dir().join(format!("ih_artifact_fault_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let clean = ArtifactManifest::load(&dir).expect("clean load");
+        let fi = FaultInjector::new(
+            7,
+            FaultSpec { spill_corrupt_read: 1.0, max_per_site: 1, ..FaultSpec::default() },
+        );
+        match ArtifactManifest::load_with_faults(&dir, Some(&fi)) {
+            Err(_) => {} // typed rejection — the preferred outcome
+            Ok(m) => assert!(
+                m.profile != clean.profile || m.artifacts != clean.artifacts,
+                "a corrupted manifest must not come back identical to the clean one"
+            ),
+        }
+        assert_eq!(fi.stats().corrupt_reads, 1, "the probe fired exactly once");
+        let again = ArtifactManifest::load_with_faults(&dir, Some(&fi)).expect("budget spent");
+        assert_eq!(again.artifacts.len(), clean.artifacts.len());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

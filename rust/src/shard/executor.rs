@@ -54,6 +54,7 @@ use crate::shard::planner::{ShardPlan, ShardSpec};
 use crate::shard::reassemble::{RamSink, Reassembler, ShardSink};
 use crate::shard::store::TensorStore;
 use crate::shard::{ResidentGauge, ShardError, TaggedShard};
+use crate::tune::{Calibrator, TunedPlanner, TuneStats};
 use crate::util::sync::lock_recover;
 use anyhow::{anyhow, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -130,6 +131,9 @@ pub struct ShardExecutorStats {
     pub workers_alive: usize,
     /// Partial-tensor arena counters.
     pub partial_pool: PoolStats,
+    /// Tuning-cache counters when the executor was built with a
+    /// calibrator ([`ShardExecutor::with_instruments`]).
+    pub tune: Option<TuneStats>,
 }
 
 struct Shared {
@@ -143,6 +147,10 @@ struct Shared {
     inflight_peak: AtomicUsize,
     max_attempts: usize,
     faults: Option<Arc<FaultInjector>>,
+    /// Shared auto-tuner: every checked-out engine plans through it and
+    /// feeds its tile timings back to the calibrator, so live shard
+    /// traffic keeps refining the estimates the planner costs with.
+    tuner: Option<Arc<TunedPlanner>>,
     attempt_failures: AtomicUsize,
     attempt_panics: AtomicUsize,
     shards_recovered: AtomicUsize,
@@ -180,10 +188,25 @@ impl ShardExecutor {
     /// the spill sites).  Inert unless the crate was compiled with
     /// `--features fault-injection`.
     pub fn with_faults(config: ShardExecutorConfig, faults: Arc<FaultInjector>) -> ShardExecutor {
-        ShardExecutor::build(config, Some(faults))
+        ShardExecutor::build(config, Some(faults), None)
     }
 
-    fn build(config: ShardExecutorConfig, faults: Option<Arc<FaultInjector>>) -> ShardExecutor {
+    /// Build an executor with any combination of instruments: a fault
+    /// injector (chaos) and/or a calibrator (auto-tuned engines whose
+    /// measured tile timings flow back into the calibration loop).
+    pub fn with_instruments(
+        config: ShardExecutorConfig,
+        faults: Option<Arc<FaultInjector>>,
+        calibrator: Option<Arc<Calibrator>>,
+    ) -> ShardExecutor {
+        ShardExecutor::build(config, faults, calibrator)
+    }
+
+    fn build(
+        config: ShardExecutorConfig,
+        faults: Option<Arc<FaultInjector>>,
+        calibrator: Option<Arc<Calibrator>>,
+    ) -> ShardExecutor {
         let workers = config.workers.max(1);
         let shared = Arc::new(Shared {
             engines: Mutex::new(Vec::new()),
@@ -196,6 +219,7 @@ impl ShardExecutor {
             inflight_peak: AtomicUsize::new(0),
             max_attempts: config.max_attempts.max(1),
             faults,
+            tuner: calibrator.map(|c| Arc::new(TunedPlanner::new(c))),
             attempt_failures: AtomicUsize::new(0),
             attempt_panics: AtomicUsize::new(0),
             shards_recovered: AtomicUsize::new(0),
@@ -245,6 +269,11 @@ impl ShardExecutor {
         self.shared.faults.as_ref()
     }
 
+    /// The shared auto-tuner, when built with a calibrator.
+    pub fn tuner(&self) -> Option<&Arc<TunedPlanner>> {
+        self.shared.tuner.as_ref()
+    }
+
     pub fn stats(&self) -> ShardExecutorStats {
         let s = &self.shared;
         ShardExecutorStats {
@@ -262,6 +291,7 @@ impl ShardExecutor {
             frames_abandoned: s.frames_abandoned.load(Ordering::Relaxed),
             workers_alive: self.workers_alive(),
             partial_pool: s.pool.stats(),
+            tune: s.tuner.as_ref().map(|t| t.stats()),
         }
     }
 
@@ -391,7 +421,10 @@ fn worker_loop(
                 Some(e) => e,
                 None => {
                     shared.engines_created.fetch_add(1, Ordering::Relaxed);
-                    ScanEngine::new(engine_workers)
+                    match &shared.tuner {
+                        Some(t) => ScanEngine::with_tuner(engine_workers, Arc::clone(t)),
+                        None => ScanEngine::new(engine_workers),
+                    }
                 }
             };
             let mut partial = shared.pool.acquire(spec.nbins, spec.nrows, w);
@@ -911,6 +944,29 @@ mod tests {
         let expected_ih = integral_histogram_seq(&img);
         assert_eq!(expected_ih.max_abs_diff(&out), 0.0);
         assert_eq!(report.shards, plan.shards.len());
+    }
+
+    #[test]
+    fn calibrated_executor_stays_bit_identical_and_feeds_the_loop() {
+        let cal = Arc::new(Calibrator::default());
+        let exec = ShardExecutor::with_instruments(
+            ShardExecutorConfig { workers: 3, ..Default::default() },
+            None,
+            Some(Arc::clone(&cal)),
+        );
+        let img = random_image(50, 38, 9, 31);
+        let plan = planner(32 << 10, 3).plan(9, 50, 38);
+        for _ in 0..3 {
+            let ticket = exec.submit(&img, &plan).expect("submit");
+            let mut out = IntegralHistogram::zeros(0, 0, 0);
+            ticket.reassemble_into(&mut out).expect("reassemble");
+            let expected = integral_histogram_seq(&img);
+            assert_eq!(expected.max_abs_diff(&out), 0.0);
+        }
+        let tune = exec.stats().tune.expect("tuner stats present");
+        assert!(tune.misses >= 1, "shard geometry searched");
+        assert!(tune.hits > 0, "repeat shards hit the shared cache");
+        assert!(cal.snapshot().samples > 0, "shard timings fed the calibrator");
     }
 
     #[test]

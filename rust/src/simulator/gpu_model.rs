@@ -33,6 +33,15 @@ pub fn device_mem_bandwidth(card: Card) -> f64 {
     }
 }
 
+/// The §3.5 bandwidth-bound throughput prior in **output elements per
+/// second**: each f32 element of the `b×h×w` tensor moves
+/// `tensor_passes × 4` bytes through device memory, so
+/// `elements/s = bw / (passes × 4)`.  This is the cold-start seed for
+/// [`crate::tune::Calibrator`] before any measurement exists.
+pub fn kernel_throughput_prior(card: Card, strategy: Strategy) -> f64 {
+    device_mem_bandwidth(card) / (strategy.tensor_passes() as f64 * 4.0)
+}
+
 /// Total launch overhead for a strategy on an `h×w`, `bins`-bin frame.
 pub fn launch_overhead(strategy: Strategy, h: usize, w: usize, bins: usize, tile: usize) -> Duration {
     LAUNCH_OVERHEAD * strategy.kernel_launches(h, w, bins, tile) as u32
@@ -164,6 +173,22 @@ mod tests {
         // 64×64 tile fits the Kepler SMX at least twice
         let (resident, _) = occupancy(SmResources::kepler_smx(), d);
         assert!(resident >= 2);
+    }
+
+    #[test]
+    fn throughput_prior_tracks_passes_and_bandwidth() {
+        // WF-TiS reads+writes the tensor once each (2 passes) → bw/8.
+        let p = kernel_throughput_prior(Card::Gtx480, Strategy::WfTis);
+        assert_eq!(p, device_mem_bandwidth(Card::Gtx480) / 8.0);
+        // More passes → strictly lower prior, on every card.
+        for c in Card::ALL {
+            assert!(
+                kernel_throughput_prior(c, Strategy::CwB)
+                    < kernel_throughput_prior(c, Strategy::WfTis),
+                "{}",
+                c.name()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,400 @@
+//! [`TunedPlanner`] — the engine planner's choice (schedule × tile ×
+//! kernel variant) as a cached search over the calibrated cost model.
+//!
+//! The static [`Planner`] is a decision table tuned for the paper's
+//! hardware; this wrapper re-derives the decision from what the
+//! [`Calibrator`] actually measured on *this* host.  Per distinct
+//! `(h, w, bins, workers)` the search runs **once** and the winning
+//! [`Plan`] is cached — steady-state frames pay one `BTreeMap` lookup
+//! under a short-lived mutex (planning is off the per-tile hot path;
+//! the kernel itself never touches it).  The cache persists to JSON
+//! ([`TunedPlanner::save_to`] / [`TunedPlanner::load_from`]) so a
+//! restarted server skips the search too.
+//!
+//! **The static plan is always a candidate**, costed under the same
+//! snapshot — so in model terms the tuned choice can only match or
+//! beat the static one, and with a pure-prior snapshot (no
+//! measurements yet) the search degenerates gracefully: every tile
+//! shows the same prior throughput and the static decision wins its
+//! ties.  Snapshots are [`CostSnapshot::sanitized`] before costing, so
+//! adversarial calibration inputs cannot make planning panic or emit
+//! an inexecutable plan (property-tested in `tests/tune_property.rs`).
+
+use super::{Calibrator, CostSnapshot, TILE_CANDIDATES};
+use crate::histogram::engine::kernel::KernelVariant;
+use crate::histogram::engine::planner::{Plan, Planner, Schedule};
+use crate::util::json;
+use crate::util::sync::lock_recover;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cache observability: searches run vs skipped.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TuneStats {
+    /// Plans served straight from the cache.
+    pub hits: usize,
+    /// Searches performed (one per distinct geometry).
+    pub misses: usize,
+    /// Entries currently cached.
+    pub cached: usize,
+}
+
+/// The auto-tuning planner.  Cheap to share: clone the `Arc` it lives
+/// in; engines holding the same instance share one cache, so a
+/// geometry is searched once per process, not once per engine.
+#[derive(Debug)]
+pub struct TunedPlanner {
+    base: Planner,
+    cal: Arc<Calibrator>,
+    cache: Mutex<BTreeMap<(usize, usize, usize, usize), Plan>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl TunedPlanner {
+    pub fn new(cal: Arc<Calibrator>) -> TunedPlanner {
+        Self::with_base(Planner::default(), cal)
+    }
+
+    /// A tuned planner wrapping a specific base planner.  Base
+    /// *overrides* (pinned tile/schedule) win outright: an override is
+    /// a test/bench pin, and tuning around it would un-pin it.
+    pub fn with_base(base: Planner, cal: Arc<Calibrator>) -> TunedPlanner {
+        TunedPlanner {
+            base,
+            cal,
+            cache: Mutex::new(BTreeMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// The calibrator whose snapshots cost the searches (and which
+    /// engines feed their live timings back into).
+    pub fn calibrator(&self) -> &Arc<Calibrator> {
+        &self.cal
+    }
+
+    pub fn stats(&self) -> TuneStats {
+        TuneStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            cached: lock_recover(&self.cache).len(),
+        }
+    }
+
+    /// Plan for an `h×w`, `bins`-bin request with up to `workers`
+    /// threads: cached auto-tune over the calibrated model (see module
+    /// docs).
+    pub fn plan(&self, h: usize, w: usize, bins: usize, workers: usize) -> Plan {
+        assert!(h >= 1 && w >= 1 && bins >= 1, "empty request");
+        let workers = workers.max(1);
+        if self.base.tile_override.is_some() || self.base.schedule_override.is_some() {
+            return self.base.plan(h, w, bins, workers);
+        }
+        let key = (h, w, bins, workers);
+        if let Some(&p) = lock_recover(&self.cache).get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return p;
+        }
+        let snap = self.cal.snapshot().sanitized(self.cal.card());
+        let plan = search_plan(&self.base, &snap, h, w, bins, workers);
+        lock_recover(&self.cache).insert(key, plan);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        plan
+    }
+
+    /// Persist the tuning cache as JSON (hand-built; the repo's JSON
+    /// util is parse-only by design).
+    pub fn save_to(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut entries = String::new();
+        {
+            let cache = lock_recover(&self.cache);
+            for (&(h, w, bins, workers), p) in cache.iter() {
+                if !entries.is_empty() {
+                    entries.push(',');
+                }
+                entries.push_str(&format!(
+                    "{{\"h\":{h},\"w\":{w},\"bins\":{bins},\"workers\":{workers},\
+                     \"schedule\":\"{}\",\"tile\":{},\"plan_workers\":{},\"kernel\":\"{}\"}}",
+                    schedule_name(p.schedule),
+                    p.tile,
+                    p.workers,
+                    p.kernel.name()
+                ));
+            }
+        }
+        let doc = format!("{{\"version\":1,\"entries\":[{entries}]}}\n");
+        std::fs::write(path, doc)
+            .with_context(|| format!("write tuning cache {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a tuning cache saved by [`Self::save_to`]; returns the
+    /// number of entries adopted.  Malformed documents error typed;
+    /// entries for geometries already cached are kept as-is (live
+    /// searches beat stale files).
+    pub fn load_from(&self, path: impl AsRef<Path>) -> Result<usize> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read tuning cache {}", path.display()))?;
+        let doc = json::parse(&text)
+            .map_err(|e| anyhow!("tuning cache {}: {e}", path.display()))?;
+        if doc.get("version").and_then(|v| v.as_usize()) != Some(1) {
+            return Err(anyhow!("tuning cache {}: unsupported version", path.display()));
+        }
+        let entries = doc
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow!("tuning cache {}: missing entries", path.display()))?;
+        let mut adopted = 0usize;
+        let mut cache = lock_recover(&self.cache);
+        for (i, e) in entries.iter().enumerate() {
+            let field = |k: &str| {
+                e.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("tuning cache entry {i}: bad '{k}'"))
+            };
+            let (h, w, bins, workers) =
+                (field("h")?, field("w")?, field("bins")?, field("workers")?);
+            let tile = field("tile")?.max(1);
+            let plan_workers = field("plan_workers")?.max(1);
+            let schedule = e
+                .get("schedule")
+                .and_then(|v| v.as_str())
+                .and_then(schedule_from_name)
+                .ok_or_else(|| anyhow!("tuning cache entry {i}: bad schedule"))?;
+            let kernel = e
+                .get("kernel")
+                .and_then(|v| v.as_str())
+                .and_then(KernelVariant::from_name)
+                .ok_or_else(|| anyhow!("tuning cache entry {i}: bad kernel"))?;
+            if h == 0 || w == 0 || bins == 0 || workers == 0 {
+                return Err(anyhow!("tuning cache entry {i}: degenerate geometry"));
+            }
+            let plan = Plan { schedule, tile, workers: plan_workers, kernel };
+            cache.entry((h, w, bins, workers)).or_insert(plan);
+            adopted += 1;
+        }
+        Ok(adopted)
+    }
+}
+
+fn schedule_name(s: Schedule) -> &'static str {
+    match s {
+        Schedule::Serial => "serial",
+        Schedule::BinParallel => "bin_parallel",
+        Schedule::Wavefront => "wavefront",
+    }
+}
+
+fn schedule_from_name(s: &str) -> Option<Schedule> {
+    match s {
+        "serial" => Some(Schedule::Serial),
+        "bin_parallel" => Some(Schedule::BinParallel),
+        "wavefront" => Some(Schedule::Wavefront),
+        _ => None,
+    }
+}
+
+/// The tuned-kernel variant a snapshot recommends at `tile` — strict
+/// improvement required, so ties (e.g. a pure prior, where both
+/// variants share one number) keep the reference kernel.
+fn best_variant(snap: &CostSnapshot, tile: usize) -> KernelVariant {
+    if snap.throughput(tile, KernelVariant::Tuned) > snap.throughput(tile, KernelVariant::Reference)
+    {
+        KernelVariant::Tuned
+    } else {
+        KernelVariant::Reference
+    }
+}
+
+/// Modeled wall seconds for executing `plan` on an `h×w×bins` request
+/// under `snap` — the cost function the search minimizes.  Shapes
+/// mirror the schedules:
+///
+/// * Serial: one sweep at the tile's calibrated throughput plus one
+///   dispatch.
+/// * BinParallel: planes spread over the plan's workers; each plane
+///   claim is one dispatch (the §3.3 launch-overhead analog).
+/// * Wavefront: the anti-diagonal critical path — at least `tr+tc−1`
+///   steps regardless of worker count (Algorithm 5's ramp), otherwise
+///   work-bound at the effective width; each step costs one full tile
+///   at calibrated throughput plus one dispatch.
+pub fn model_cost(snap: &CostSnapshot, plan: &Plan, h: usize, w: usize, bins: usize) -> f64 {
+    let pixel_bins = (bins * h * w) as f64;
+    let tput = snap.throughput(plan.tile, plan.kernel);
+    let d = snap.dispatch_overhead_s;
+    match plan.schedule {
+        Schedule::Serial => pixel_bins / tput + d,
+        Schedule::BinParallel => {
+            let wk = plan.workers.max(1) as f64;
+            pixel_bins / tput / wk + (bins as f64 / wk).ceil() * d
+        }
+        Schedule::Wavefront => {
+            let tr = h.div_ceil(plan.tile);
+            let tc = w.div_ceil(plan.tile);
+            let weff = plan.workers.clamp(1, tr.min(tc)) as f64;
+            let steps = ((tr * tc) as f64 / weff).max((tr + tc - 1) as f64);
+            let tile_elems = (plan.tile * plan.tile * bins) as f64;
+            steps * (tile_elems / tput + d)
+        }
+    }
+}
+
+/// One search: the static plan plus every executable
+/// `(schedule, tile, kernel)` candidate, lowest modeled cost wins.
+/// Deterministic: candidates are enumerated in a fixed order and only
+/// a strictly lower cost replaces the incumbent (so the static plan
+/// wins all ties).
+fn search_plan(
+    base: &Planner,
+    snap: &CostSnapshot,
+    h: usize,
+    w: usize,
+    bins: usize,
+    workers: usize,
+) -> Plan {
+    let mut best = base.plan(h, w, bins, workers);
+    let mut best_cost = model_cost(snap, &best, h, w, bins);
+    for &tile in TILE_CANDIDATES.iter() {
+        let kernel = best_variant(snap, tile);
+        let tr = h.div_ceil(tile);
+        let tc = w.div_ceil(tile);
+        let diag = tr.min(tc);
+        let mut consider = |cand: Plan| {
+            let cost = model_cost(snap, &cand, h, w, bins);
+            if cost < best_cost {
+                best = cand;
+                best_cost = cost;
+            }
+        };
+        consider(Plan { schedule: Schedule::Serial, tile, workers: 1, kernel });
+        if workers > 1 && diag >= 2 {
+            consider(Plan {
+                schedule: Schedule::Wavefront,
+                tile,
+                workers: workers.min(diag),
+                kernel,
+            });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::pcie::Card;
+    use std::time::Duration;
+
+    fn tuner() -> TunedPlanner {
+        TunedPlanner::new(Arc::new(Calibrator::new(Card::Gtx480)))
+    }
+
+    /// Plans must satisfy the same invariants the static planner's
+    /// outputs do — anything the engine can execute.
+    fn assert_executable(p: &Plan, workers: usize) {
+        assert!(p.tile >= 1);
+        assert!(p.workers >= 1 && p.workers <= workers.max(1));
+        if p.schedule == Schedule::Serial {
+            assert_eq!(p.workers, 1);
+        }
+    }
+
+    #[test]
+    fn repeated_shape_returns_the_identical_cached_plan() {
+        let t = tuner();
+        let a = t.plan(512, 512, 32, 8);
+        let b = t.plan(512, 512, 32, 8);
+        assert_eq!(a, b, "cache must return a stable plan");
+        let s = t.stats();
+        assert_eq!((s.misses, s.hits, s.cached), (1, 1, 1));
+        t.plan(511, 512, 32, 8);
+        assert_eq!(t.stats().misses, 2, "new geometry searches once");
+    }
+
+    #[test]
+    fn pure_prior_matches_or_beats_the_static_plan_in_model_terms() {
+        let t = tuner();
+        let snap = t.calibrator().snapshot().sanitized(Card::Gtx480);
+        for (h, w, bins, workers) in
+            [(512usize, 512usize, 32usize, 8usize), (64, 64, 8, 4), (8, 4096, 32, 4), (1, 1, 1, 1)]
+        {
+            let tuned = t.plan(h, w, bins, workers);
+            assert_executable(&tuned, workers);
+            let fixed = Planner::default().plan(h, w, bins, workers);
+            assert!(
+                model_cost(&snap, &tuned, h, w, bins) <= model_cost(&snap, &fixed, h, w, bins),
+                "{h}x{w}x{bins}@{workers}: tuned must not model-cost worse than static"
+            );
+        }
+    }
+
+    #[test]
+    fn measured_tile_advantage_steers_the_choice() {
+        let cal = Arc::new(Calibrator::new(Card::Gtx480));
+        // Live traffic says tile 16 with the tuned kernel is 100× the
+        // prior; everything else stays at the prior.
+        for _ in 0..64 {
+            cal.observe_tile(16, KernelVariant::Tuned, 1e8, Duration::from_millis(1));
+        }
+        let t = TunedPlanner::new(cal);
+        let p = t.plan(512, 512, 32, 8);
+        assert_eq!(p.tile, 16, "search must follow the measurement");
+        assert_eq!(p.kernel, KernelVariant::Tuned);
+        assert_executable(&p, 8);
+    }
+
+    #[test]
+    fn prior_ties_keep_the_reference_kernel() {
+        let t = tuner();
+        let p = t.plan(512, 512, 32, 8);
+        assert_eq!(p.kernel, KernelVariant::Reference, "no measurement → no tuned claim");
+    }
+
+    #[test]
+    fn base_overrides_are_respected_verbatim() {
+        let base = Planner { tile_override: Some(16), schedule_override: Some(Schedule::Serial) };
+        let t = TunedPlanner::with_base(base, Arc::new(Calibrator::default()));
+        let p = t.plan(512, 512, 32, 8);
+        assert_eq!(p, base.plan(512, 512, 32, 8), "overrides must pin the plan");
+        assert_eq!(t.stats().cached, 0, "pinned plans bypass the cache");
+    }
+
+    #[test]
+    fn cache_roundtrips_through_json() {
+        let t = tuner();
+        let a = t.plan(512, 512, 32, 8);
+        let b = t.plan(100, 350, 16, 4);
+        let path = std::env::temp_dir()
+            .join(format!("inthist-tune-cache-{}.json", std::process::id()));
+        t.save_to(&path).expect("save");
+        let fresh = tuner();
+        let n = fresh.load_from(&path).expect("load");
+        assert_eq!(n, 2);
+        assert_eq!(fresh.plan(512, 512, 32, 8), a);
+        assert_eq!(fresh.plan(100, 350, 16, 4), b);
+        let s = fresh.stats();
+        assert_eq!((s.hits, s.misses), (2, 0), "loaded entries must skip the search");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn malformed_cache_documents_error_typed() {
+        let path = std::env::temp_dir()
+            .join(format!("inthist-tune-bad-{}.json", std::process::id()));
+        std::fs::write(&path, "{\"version\":1,\"entries\":[{\"h\":0}]}").expect("write");
+        let t = tuner();
+        assert!(t.load_from(&path).is_err());
+        std::fs::write(&path, "not json").expect("write");
+        assert!(t.load_from(&path).is_err());
+        std::fs::write(&path, "{\"version\":2,\"entries\":[]}").expect("write");
+        assert!(t.load_from(&path).is_err(), "future versions must be rejected, not guessed");
+        std::fs::remove_file(&path).ok();
+    }
+}

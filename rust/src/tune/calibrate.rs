@@ -1,0 +1,347 @@
+//! The [`Calibrator`] — one-shot startup microbenches plus lock-free
+//! EWMA estimates fed from live traffic.
+//!
+//! Lifecycle: construct with the cold-start prior for a card
+//! ([`super::CostSnapshot::static_prior`]); optionally run
+//! [`Calibrator::calibrate`] once at startup (a few milliseconds of
+//! microbenches: memcpy bandwidth, fused-kernel throughput at every
+//! [`super::TILE_CANDIDATES`] edge × [`KernelVariant`], spill-file read
+//! latency/bandwidth); thereafter every engine compute and spill read
+//! folds its measurement in through [`Calibrator::observe_tile`] /
+//! [`Calibrator::observe_spill_read`].
+//!
+//! **Concurrency contract.** Estimates are `f64` bit patterns in
+//! `AtomicU64`s.  Observers update with a relaxed `fetch_update` EWMA
+//! (`new = old + α·(x − old)`); [`Calibrator::snapshot`] is a handful
+//! of relaxed loads into a `Copy` [`CostSnapshot`].  No mutex exists
+//! anywhere on the path, so a shard worker publishing a timing can
+//! never block a planner taking a snapshot (and vice versa).  Estimate
+//! fields are independent — a snapshot may mix updates from different
+//! instants, which is harmless for cost modeling and the price of
+//! being lock-free.
+//!
+//! Degenerate observations (zero/negative durations from coarse
+//! clocks, non-finite throughputs) are dropped at the door, and
+//! planners additionally sanitize snapshots against the prior — see
+//! [`super::CostSnapshot::sanitized`].
+
+use super::{CostSnapshot, TILE_CANDIDATES};
+use crate::histogram::engine::kernel::KernelVariant;
+use crate::histogram::engine::wavefront::fused_scan_into_v;
+use crate::histogram::engine::TileScratch;
+use crate::histogram::types::BinnedImage;
+use crate::shard::TensorStore;
+use crate::simulator::pcie::Card;
+use crate::util::prng::Xoshiro256;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// EWMA smoothing factor: one live measurement moves an estimate 25%
+/// of the way — a few frames converge, one outlier doesn't whipsaw the
+/// planner.
+pub const EWMA_ALPHA: f64 = 0.25;
+
+/// Geometry of the calibration microbench frame: large enough that the
+/// biggest tile candidate still gets a 2×2 grid and per-run time is
+/// well above timer resolution, small enough that the whole sweep
+/// (all tiles × variants) stays in the low milliseconds.
+const BENCH_H: usize = 192;
+const BENCH_W: usize = 192;
+const BENCH_BINS: usize = 8;
+/// Timed repetitions per microbench point (after one warmup run).
+const BENCH_REPS: usize = 2;
+/// Memcpy microbench buffer (8 MiB — larger than any sane LLC slice,
+/// so this measures memory, not cache).
+const MEMCPY_BYTES: usize = 8 << 20;
+/// Spill microbench tensor: 1 bin × 32 rows × 1024 cols = 128 KiB.
+const SPILL_ROWS: usize = 32;
+const SPILL_COLS: usize = 1024;
+
+#[inline]
+fn load_f64(cell: &AtomicU64) -> f64 {
+    f64::from_bits(cell.load(Ordering::Relaxed))
+}
+
+#[inline]
+fn store_f64(cell: &AtomicU64, x: f64) {
+    if x.is_finite() && x > 0.0 {
+        cell.store(x.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Lock-free EWMA fold; drops degenerate samples, adopts the first
+/// valid sample outright if the cell itself is degenerate.
+#[inline]
+fn ewma_f64(cell: &AtomicU64, x: f64) {
+    if !x.is_finite() || x <= 0.0 {
+        return;
+    }
+    let _ = cell.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+        let old = f64::from_bits(bits);
+        let new = if old.is_finite() && old > 0.0 { old + EWMA_ALPHA * (x - old) } else { x };
+        Some(new.to_bits())
+    });
+}
+
+/// Self-calibrating cost-model state.  See the module docs for the
+/// lifecycle and concurrency contract.
+#[derive(Debug)]
+pub struct Calibrator {
+    card: Card,
+    memcpy_bps: AtomicU64,
+    tile_tput: [AtomicU64; TILE_CANDIDATES.len()],
+    tile_tput_tuned: [AtomicU64; TILE_CANDIDATES.len()],
+    dispatch_s: AtomicU64,
+    spill_lat_s: AtomicU64,
+    spill_bps: AtomicU64,
+    samples: AtomicU64,
+}
+
+impl Default for Calibrator {
+    /// Prior for the default simulation card (matching
+    /// [`crate::shard::ShardPolicy::default`]).
+    fn default() -> Calibrator {
+        Calibrator::new(Card::Gtx480)
+    }
+}
+
+impl Calibrator {
+    /// A calibrator seeded entirely from the static paper prior for
+    /// `card`; no measurement has happened yet.
+    pub fn new(card: Card) -> Calibrator {
+        let p = CostSnapshot::static_prior(card);
+        let seed =
+            |x: f64| AtomicU64::new(x.to_bits());
+        Calibrator {
+            card,
+            memcpy_bps: seed(p.memcpy_bps),
+            tile_tput: std::array::from_fn(|i| seed(p.tile_throughput[i])),
+            tile_tput_tuned: std::array::from_fn(|i| seed(p.tile_throughput_tuned[i])),
+            dispatch_s: seed(p.dispatch_overhead_s),
+            spill_lat_s: seed(p.spill_read_latency_s),
+            spill_bps: seed(p.spill_read_bps),
+            samples: AtomicU64::new(0),
+        }
+    }
+
+    /// The card whose paper constants back this calibrator's prior.
+    pub fn card(&self) -> Card {
+        self.card
+    }
+
+    /// The cold-start prior this calibrator was seeded with.
+    pub fn prior(&self) -> CostSnapshot {
+        CostSnapshot::static_prior(self.card)
+    }
+
+    /// Lock-free point-in-time view — a handful of relaxed loads.
+    pub fn snapshot(&self) -> CostSnapshot {
+        CostSnapshot {
+            memcpy_bps: load_f64(&self.memcpy_bps),
+            tile_throughput: std::array::from_fn(|i| load_f64(&self.tile_tput[i])),
+            tile_throughput_tuned: std::array::from_fn(|i| load_f64(&self.tile_tput_tuned[i])),
+            dispatch_overhead_s: load_f64(&self.dispatch_s),
+            spill_read_latency_s: load_f64(&self.spill_lat_s),
+            spill_read_bps: load_f64(&self.spill_bps),
+            samples: self.samples.load(Ordering::Relaxed),
+        }
+    }
+
+    /// One-shot startup microbench: overwrites the prior with direct
+    /// measurements (live EWMA updates refine from there).  Takes a few
+    /// milliseconds; call once, off the serving path.  Any section that
+    /// fails (e.g. no writable temp dir for the spill probe) leaves its
+    /// prior in place rather than erroring.
+    pub fn calibrate(&self) -> CostSnapshot {
+        self.bench_memcpy();
+        self.bench_tiles();
+        self.bench_spill();
+        self.samples.fetch_add(1, Ordering::Relaxed);
+        self.snapshot()
+    }
+
+    fn bench_memcpy(&self) {
+        let src = vec![0x5Au8; MEMCPY_BYTES];
+        let mut dst = vec![0u8; MEMCPY_BYTES];
+        dst.copy_from_slice(&src); // warmup + page fault
+        let t0 = Instant::now();
+        for _ in 0..BENCH_REPS {
+            dst.copy_from_slice(&src);
+            std::hint::black_box(&mut dst);
+        }
+        let s = t0.elapsed().as_secs_f64();
+        // copy_from_slice touches 2 bytes of memory per output byte
+        // (read + write); report deliverable bandwidth (bytes moved per
+        // second), matching how the PCIe beta term is used.
+        store_f64(&self.memcpy_bps, (MEMCPY_BYTES * BENCH_REPS) as f64 / s);
+    }
+
+    fn bench_tiles(&self) {
+        let mut rng = Xoshiro256::new(0xCA11B);
+        let mut data = vec![0i32; BENCH_H * BENCH_W];
+        rng.fill_bins(&mut data, BENCH_BINS as u32);
+        let img = BinnedImage::new(BENCH_H, BENCH_W, BENCH_BINS, data);
+        let pixel_bins = (BENCH_H * BENCH_W * BENCH_BINS) as f64;
+        let mut colc = vec![0.0f32; BENCH_BINS * BENCH_H];
+        let mut out = vec![0.0f32; BENCH_BINS * BENCH_H * BENCH_W];
+        let mut scratch = TileScratch::default();
+        for (i, &tile) in TILE_CANDIDATES.iter().enumerate() {
+            for variant in KernelVariant::ALL {
+                // Warmup sizes the scratch and faults the pages in.
+                colc.fill(0.0);
+                fused_scan_into_v(&img, tile, &mut colc, &mut scratch, &mut out, variant);
+                let t0 = Instant::now();
+                for _ in 0..BENCH_REPS {
+                    colc.fill(0.0);
+                    fused_scan_into_v(&img, tile, &mut colc, &mut scratch, &mut out, variant);
+                    std::hint::black_box(&mut out);
+                }
+                let s = t0.elapsed().as_secs_f64();
+                let tput = pixel_bins * BENCH_REPS as f64 / s;
+                let cell = match variant {
+                    KernelVariant::Reference => &self.tile_tput[i],
+                    KernelVariant::Tuned => &self.tile_tput_tuned[i],
+                };
+                store_f64(cell, tput);
+            }
+        }
+    }
+
+    fn bench_spill(&self) {
+        let Ok(store) = TensorStore::spill(1, SPILL_ROWS, SPILL_COLS) else { return };
+        let rows: Vec<f32> = (0..SPILL_ROWS * SPILL_COLS).map(|i| i as f32).collect();
+        if store.write_rows(0, 0, &rows).is_err() {
+            return;
+        }
+        let _ = store.flush();
+        // Latency: positioned single-row reads (the Eq. 2 corner-read
+        // access shape, amortized over the checksum verify).
+        let mut row = vec![0.0f32; SPILL_COLS];
+        let t0 = Instant::now();
+        let mut reads = 0usize;
+        for r in 0..SPILL_ROWS {
+            if store.read_rows(0, r, 1, &mut row).is_ok() {
+                reads += 1;
+            }
+        }
+        if reads > 0 {
+            store_f64(&self.spill_lat_s, t0.elapsed().as_secs_f64() / reads as f64);
+        }
+        // Bandwidth: one sequential full-tensor read.
+        let mut all = vec![0.0f32; SPILL_ROWS * SPILL_COLS];
+        let t1 = Instant::now();
+        if store.read_rows(0, 0, SPILL_ROWS, &mut all).is_ok() {
+            store_f64(&self.spill_bps, (all.len() * 4) as f64 / t1.elapsed().as_secs_f64());
+        }
+        std::hint::black_box(&all);
+    }
+
+    /// Fold one live tile-kernel measurement: an engine (or shard
+    /// worker) computed `pixel_bins` output elements with `variant` at
+    /// `tile` in `dur` — the `ShardReport.kernel_by_shard` feedback
+    /// path.  Lock-free; safe from any thread.
+    pub fn observe_tile(&self, tile: usize, variant: KernelVariant, pixel_bins: f64, dur: Duration) {
+        let s = dur.as_secs_f64();
+        if s <= 0.0 || pixel_bins <= 0.0 {
+            return;
+        }
+        let i = CostSnapshot::tile_index(tile);
+        let cell = match variant {
+            KernelVariant::Reference => &self.tile_tput[i],
+            KernelVariant::Tuned => &self.tile_tput_tuned[i],
+        };
+        ewma_f64(cell, pixel_bins / s);
+        self.samples.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one live spill-read measurement (`bytes` read in `dur`).
+    pub fn observe_spill_read(&self, bytes: usize, dur: Duration) {
+        let s = dur.as_secs_f64();
+        if s <= 0.0 || bytes == 0 {
+            return;
+        }
+        ewma_f64(&self.spill_lat_s, s);
+        ewma_f64(&self.spill_bps, bytes as f64 / s);
+        self.samples.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn snapshot_starts_at_the_prior() {
+        let c = Calibrator::new(Card::TitanX);
+        assert_eq!(c.snapshot(), CostSnapshot::static_prior(Card::TitanX));
+        assert!(c.snapshot().is_prior());
+    }
+
+    #[test]
+    fn observe_tile_moves_the_estimate() {
+        let c = Calibrator::new(Card::Gtx480);
+        let before = c.snapshot().tile_throughput[1];
+        // 1e6 elements in 1 ms → 1e9 el/s, far from the prior.
+        c.observe_tile(32, KernelVariant::Reference, 1e6, Duration::from_millis(1));
+        let after = c.snapshot();
+        let expect = before + EWMA_ALPHA * (1e9 - before);
+        assert!((after.tile_throughput[1] - expect).abs() < expect * 1e-9);
+        assert_eq!(after.samples, 1);
+        assert!(!after.is_prior());
+        // Other slots untouched.
+        assert_eq!(after.tile_throughput[0], before);
+        assert_eq!(after.tile_throughput_tuned[1], before);
+    }
+
+    #[test]
+    fn degenerate_observations_are_dropped() {
+        let c = Calibrator::new(Card::Gtx480);
+        let before = c.snapshot();
+        c.observe_tile(64, KernelVariant::Tuned, 1e6, Duration::ZERO);
+        c.observe_tile(64, KernelVariant::Tuned, 0.0, Duration::from_millis(1));
+        c.observe_spill_read(0, Duration::from_millis(1));
+        c.observe_spill_read(100, Duration::ZERO);
+        assert_eq!(c.snapshot(), before, "degenerate samples must not move anything");
+    }
+
+    #[test]
+    fn calibrate_produces_positive_finite_estimates() {
+        let c = Calibrator::new(Card::Gtx480);
+        let t0 = Instant::now();
+        let s = c.calibrate();
+        assert!(t0.elapsed() < Duration::from_secs(10), "microbench must be quick");
+        assert!(!s.is_prior());
+        assert!(s.memcpy_bps.is_finite() && s.memcpy_bps > 0.0);
+        for i in 0..TILE_CANDIDATES.len() {
+            assert!(s.tile_throughput[i] > 0.0 && s.tile_throughput[i].is_finite(), "tile {i}");
+            assert!(s.tile_throughput_tuned[i] > 0.0, "tuned tile {i}");
+        }
+        assert!(s.spill_read_latency_s > 0.0 && s.spill_read_bps > 0.0);
+        // Sanitizing a real calibration is the identity.
+        assert_eq!(s.sanitized(Card::Gtx480), s);
+    }
+
+    #[test]
+    fn concurrent_observers_never_poison_the_snapshot() {
+        let c = Arc::new(Calibrator::new(Card::K40c));
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let c = Arc::clone(&c);
+                scope.spawn(move || {
+                    for n in 1..200u64 {
+                        let tile = TILE_CANDIDATES[(n % 4) as usize];
+                        let v = if n % 2 == 0 { KernelVariant::Reference } else { KernelVariant::Tuned };
+                        c.observe_tile(tile, v, (t * n) as f64 + 1.0, Duration::from_nanos(n));
+                        c.observe_spill_read(n as usize, Duration::from_nanos(n));
+                        let s = c.snapshot();
+                        assert!(s.best_throughput().is_finite());
+                    }
+                });
+            }
+        });
+        let s = c.snapshot();
+        assert_eq!(s.samples, 4 * 199 * 2);
+        assert_eq!(s.sanitized(Card::K40c), s, "all estimates stay healthy");
+    }
+}

@@ -222,6 +222,77 @@ fn spill_write_corruption_fails_typed_not_silent() {
     assert_eq!(store.verify_failures(), 1);
 }
 
+/// A torn (short) spill write — the prefix a power cut leaves behind —
+/// is DETECTED on read, never served: the missing tail fails the row
+/// checksum typed, and the injector counted exactly one short write
+/// (partitioned from the corrupt-write draw, which stays at zero).
+#[test]
+fn spill_short_write_fails_typed_not_silent() {
+    let _wd = Watchdog::arm("spill_short_write", Duration::from_secs(60));
+    let spec = FaultSpec { spill_short_write: 1.0, max_per_site: 1, ..FaultSpec::default() };
+    let fi = Arc::new(FaultInjector::new(17, spec));
+    let exec = ShardExecutor::with_faults(
+        ShardExecutorConfig { workers: 2, ..Default::default() },
+        Arc::clone(&fi),
+    );
+    let img = random_image(45, 21, 7, 8);
+    let plan = ShardPlanner::new(policy(10 << 10, 2)).plan(7, 45, 21);
+    let (store, _report) =
+        exec.submit(&img, &plan).expect("submit").reassemble_spilled().expect("spill completes");
+    let st = fi.stats();
+    assert_eq!((st.short_writes, st.corrupt_writes), (1, 0), "one torn write, no byte flips");
+    let err = store
+        .to_histogram()
+        .err()
+        .expect("a torn plane must not materialize")
+        .to_string();
+    assert!(err.contains("checksum mismatch"), "{err}");
+    assert!(store.verify_failures() >= 1);
+}
+
+/// The artifact load path's `SpillRead` probe at the integration
+/// level: under a corrupt-read schedule the manifest load either fails
+/// typed or visibly differs from the clean parse — and once the
+/// schedule caps out, loads are clean again (no residue).
+#[test]
+fn artifact_load_corruption_is_never_served_silently() {
+    use inthist::runtime::artifact::ArtifactManifest;
+
+    let _wd = Watchdog::arm("artifact_load_corruption", Duration::from_secs(60));
+    let dir = std::env::temp_dir().join(format!("ih_chaos_artifact_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let manifest_text = r#"{
+      "profile": "chaos",
+      "artifacts": [
+        {"name": "wf_tis_32x32_b8_t16", "kind": "strategy", "strategy": "wf_tis",
+         "height": 32, "width": 32, "padded_h": 32, "padded_w": 32,
+         "bins": 8, "tile": 16, "n_rects": 0, "file": "wf_tis_32x32_b8_t16.hlo.txt",
+         "inputs": [{"name": "image", "dtype": "i32", "shape": [32, 32]}],
+         "outputs": [{"name": "ih", "dtype": "f32", "shape": [8, 32, 32]}]}
+      ]
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest_text).expect("write manifest");
+    let clean = ArtifactManifest::load(&dir).expect("clean load");
+
+    let spec = FaultSpec { spill_corrupt_read: 1.0, max_per_site: 2, ..FaultSpec::default() };
+    let fi = FaultInjector::new(19, spec);
+    for round in 0..2 {
+        match ArtifactManifest::load_with_faults(&dir, Some(&fi)) {
+            Err(_) => {} // typed rejection
+            Ok(m) => assert!(
+                m.profile != clean.profile || m.artifacts != clean.artifacts,
+                "round {round}: corrupted manifest must not come back clean"
+            ),
+        }
+    }
+    assert_eq!(fi.stats().corrupt_reads, 2);
+    // Schedule capped: trailing loads are clean, parse equals clean.
+    let after = ArtifactManifest::load_with_faults(&dir, Some(&fi)).expect("clean after cap");
+    assert_eq!(after.profile, clean.profile);
+    assert_eq!(after.artifacts, clean.artifacts);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Interleaving independence: the multiset of injected faults depends
 /// only on (seed, site, occurrence index), not on which threads hit
 /// the probes — four racing threads and one serial run inject the
