@@ -21,10 +21,19 @@ they do in Rust:
 The out-of-core section streams a 128-bin tensor's strips to a real
 temp file in arrival order with carry correction, tracking peak bytes
 held in the parent — the TensorStore + Reassembler mirror.
+
+The process-isolation section (benches/shard.rs §5 mirror) runs the
+same schedule through real child *processes* with a file data plane —
+the frame spilled once, each shard's partial written to its own spill
+file, only paths and geometry crossing the process boundary — then
+SIGKILLs a worker mid-frame and recovers the frame via the
+supervisor's timeout-requeue ladder, measuring the recovery latency.
 """
 
 import json
+import multiprocessing as mp
 import os
+import signal
 import sys
 import tempfile
 import threading
@@ -87,6 +96,47 @@ def supervised_group_task(img, b0, nb, r0, nr, counters, mx):
     with mx:
         counters["ok"] += 1
     return out
+
+
+def proc_shard_task(img_path, h, w, b0, nb, r0, nr, out_path):
+    """Child half of the proc-plane mirror (rust/src/proc/worker.rs):
+    read the frame from its spill file, compute the shard, write the
+    partial to the shard's own spill file.  Only paths and geometry
+    cross the process boundary — never tensors."""
+    img = np.fromfile(img_path, dtype="<f4").reshape(h, w).astype(np.int64)
+    part = group_task(img, b0, nb, r0, nr)
+    part.astype("<f4").tofile(out_path)
+    return out_path
+
+
+def proc_frame(pool, img_path, shards, tmp, fid, timeout=30.0, after_submit=None):
+    """One frame through the process pool with the supervisor's requeue
+    ladder: a shard whose worker was SIGKILLed with the task in hand
+    never resolves, times out, and is resubmitted to the replenished
+    pool (ProcSupervisor::child_died + pump).  Returns the assembled
+    tensor and the number of requeues."""
+    rs = []
+    for sid, b0, nb, r0, nr in shards:
+        op = os.path.join(tmp, f"f{fid}-s{sid}.bin")
+        rs.append((b0, nb, r0, nr, op,
+                   pool.apply_async(proc_shard_task, (img_path, H, W, b0, nb, r0, nr, op))))
+    if after_submit is not None:
+        after_submit()
+    out = np.zeros((BINS, H, W), dtype=np.float32)
+    requeues = 0
+    for b0, nb, r0, nr, op, r in rs:
+        for _attempt in range(3):
+            try:
+                r.get(timeout=timeout)
+                break
+            except mp.TimeoutError:
+                requeues += 1
+                r = pool.apply_async(proc_shard_task, (img_path, H, W, b0, nb, r0, nr, op))
+        else:
+            raise RuntimeError("shard lost after max attempts")
+        out[b0 : b0 + nb, r0 : r0 + nr, :] = np.fromfile(op, dtype="<f4").reshape(nb, nr, W)
+        os.unlink(op)
+    return out, requeues
 
 
 def serial_queue_schedule(pool, imgs, frames, shards):
@@ -305,6 +355,59 @@ def main():
         assert counters["failed"] == 0
         overhead_pct = 100.0 * (plain_fps - sup_fps) / max(plain_fps, 1e-9)
 
+    # --- process isolation (benches/shard.rs §5): same schedule, real
+    # child processes, file data plane, SIGKILL recovery ---
+    proc_workers = 2
+    ctx = mp.get_context("fork")
+    tmp = tempfile.mkdtemp(prefix="inthist-py-proc-")
+    img_paths = []
+    for i, img in enumerate(imgs):
+        p = os.path.join(tmp, f"img{i}.bin")
+        np.asarray(img, dtype="<f4").tofile(p)
+        img_paths.append(p)
+    with ctx.Pool(proc_workers) as ppool:
+        proc_frame(ppool, img_paths[0], shards, tmp, 9000)  # warm-up
+        t0 = time.perf_counter()
+        for f in range(FRAMES):
+            proc_frame(ppool, img_paths[f % DISTINCT], shards, tmp, f)
+        proc_fps = FRAMES / max(time.perf_counter() - t0, 1e-9)
+
+        # Bit-identity across the process boundary, one frame.
+        tensor, _ = proc_frame(ppool, img_paths[0], shards, tmp, 9050)
+        dense = np.cumsum(
+            np.cumsum((imgs[0][None] == np.arange(BINS)[:, None, None]).astype(np.float32), 1, dtype=np.float32),
+            2, dtype=np.float32,
+        )
+        assert np.array_equal(tensor, dense), "proc plane deviates from dense oracle"
+
+        t0 = time.perf_counter()
+        proc_frame(ppool, img_paths[0], shards, tmp, 9100)
+        clean_frame_ms = (time.perf_counter() - t0) * 1e3
+
+        # SIGKILL a worker with the frame's shards in flight (mirrors
+        # FaultSite::WorkerAbort).  The 5 ms delay lands the kill inside
+        # a shard compute, not inside the task-queue read; the 1 s get
+        # timeout is the heartbeat-timeout analog that detects the loss.
+        before_pids = {w.pid for w in ppool._pool}
+
+        def kill_one():
+            time.sleep(0.005)
+            os.kill(next(iter(before_pids)), signal.SIGKILL)
+
+        t0 = time.perf_counter()
+        killed_tensor, requeues = proc_frame(
+            ppool, img_paths[0], shards, tmp, 9200, timeout=1.0, after_submit=kill_one
+        )
+        killed_frame_ms = (time.perf_counter() - t0) * 1e3
+        assert np.array_equal(killed_tensor, dense), "frame across a SIGKILL deviates"
+        time.sleep(0.2)  # let the pool's maintenance thread replenish
+        respawns = len({w.pid for w in ppool._pool} - before_pids)
+    for p in img_paths:
+        os.unlink(p)
+    os.rmdir(tmp)
+    respawn_recovery_ms = max(killed_frame_ms - clean_frame_ms, 0.0)
+    isolation_tax_pct = 100.0 * (plain_fps - proc_fps) / max(plain_fps, 1e-9)
+
     speed2 = by_window[2] / serial_fps
     report = {
         "bench": "shard",
@@ -337,6 +440,17 @@ def main():
             "overhead_pct": round(overhead_pct, 3),
             "within_2pct": overhead_pct < 2.0,
         },
+        "proc": {
+            "workers": proc_workers,
+            "fps_in_process": round(plain_fps, 2),
+            "fps_multi_process": round(proc_fps, 2),
+            "isolation_tax_pct": round(isolation_tax_pct, 2),
+            "clean_frame_ms": round(clean_frame_ms, 2),
+            "killed_frame_ms": round(killed_frame_ms, 2),
+            "respawn_recovery_ms": round(respawn_recovery_ms, 2),
+            "respawns": respawns,
+            "requeues": requeues,
+        },
         "derived": {
             "interleaved_2_inflight_vs_serial_queue": round(speed2, 3),
             "interleaved_beats_serial_queue": by_window[2] > serial_fps,
@@ -352,6 +466,7 @@ def main():
     print(json.dumps(report["derived"], indent=2))
     print(json.dumps(report["out_of_core"], indent=2))
     print(json.dumps(report["supervision"], indent=2))
+    print(json.dumps(report["proc"], indent=2))
     print(f"wrote {os.path.abspath(out)}")
 
 

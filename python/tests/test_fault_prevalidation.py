@@ -31,7 +31,7 @@ import numpy as np
 
 MASK64 = (1 << 64) - 1
 
-SITES = ("shard_compute", "spill_write", "spill_read", "compile")
+SITES = ("shard_compute", "spill_write", "spill_read", "compile", "worker_abort")
 
 
 def splitmix64(z):

@@ -1,0 +1,506 @@
+"""Pre-validation of the rust/src/proc/ multi-process execution plane,
+mirrored in Python (the dev container ships no Rust toolchain; the Rust
+side asserts the same invariants in-tree: protocol unit tests in
+rust/src/proc/protocol.rs, process-boundary property tests in
+rust/tests/proc_property.rs).
+
+1. Framing (mirror of proc::protocol::ProcMsg): byte-exact encode /
+   decode of every message type over the
+   `[magic u16 LE][version u16 LE][type u8][len u32 LE][payload]`
+   wire format; truncation at EVERY byte prefix, foreign magic, version
+   skew, unknown types, oversized lengths, trailing payload bytes and
+   degenerate shard geometry all land in a typed error — never a crash,
+   never a partially-decoded message.
+2. Checksum (mirror of proc::protocol::checksum_f32): FNV-1a over f32
+   LE bytes — deterministic, bit-sensitive, empty input is the basis.
+3. Supervision (mirror of proc::supervisor::ProcSupervisor): a
+   deterministic state machine driving dispatch / child death /
+   heartbeat timeout proves the requeue ladder — a dead child's
+   in-flight shards are requeued with attempts+1 and complete on the
+   replacement; a shard that exhausts max_attempts fails its frame
+   typed EXACTLY once; the frame's outstanding count drains to zero and
+   its image spill file is cleaned up exactly once; an expired deadline
+   drops shards before any dispatch.
+
+Run: python3 python/tests/test_proc_prevalidation.py  (or pytest)
+"""
+
+import struct
+from collections import deque
+
+MAGIC = 0x4948  # "IH"
+VERSION = 1
+MAX_PAYLOAD = 1 << 20
+HEADER_LEN = 9
+
+TY_ASSIGN, TY_DONE, TY_FAILED, TY_HEARTBEAT, TY_CALIBRATION, TY_SHUTDOWN = 1, 2, 3, 4, 5, 6
+
+
+class ProtocolError(Exception):
+    """kind in: truncated, bad_magic, version_mismatch, oversized,
+    unknown_type, malformed — the ProtocolError variant surface."""
+
+    def __init__(self, kind, detail=""):
+        super().__init__(f"{kind}: {detail}")
+        self.kind = kind
+
+
+def fnv1a32(data):
+    """Mirror of proc::protocol::checksum_f32's inner loop (keep in
+    sync with shard::store::fnv1a32 — same constants)."""
+    h = 0x811C9DC5
+    for b in data:
+        h = ((h ^ b) * 0x01000193) & 0xFFFFFFFF
+    return h
+
+
+def checksum_f32(values):
+    """Mirror of proc::protocol::checksum_f32: FNV-1a over f32 LE bytes."""
+    return fnv1a32(struct.pack(f"<{len(values)}f", *values))
+
+
+def _put_string(out, s):
+    b = s.encode("utf-8")
+    out += struct.pack("<I", len(b)) + b
+
+
+def encode(msg):
+    """Mirror of ProcMsg::encode — msg is (type_name, fields dict)."""
+    ty_name, f = msg
+    p = bytearray()
+    if ty_name == "assign":
+        ty = TY_ASSIGN
+        for k in ("frame_id", "shard_id", "bin0", "nbins", "row0", "nrows", "img_h", "img_w"):
+            p += struct.pack("<Q", f[k])
+        _put_string(p, f["img_path"])
+        _put_string(p, f["out_path"])
+    elif ty_name == "done":
+        ty = TY_DONE
+        p += struct.pack("<QQQI", f["frame_id"], f["shard_id"], f["kernel_time_us"], f["checksum"])
+    elif ty_name == "failed":
+        ty = TY_FAILED
+        p += struct.pack("<QQ", f["frame_id"], f["shard_id"])
+        p += bytes([1 if f["panicked"] else 0])
+        _put_string(p, f["reason"])
+    elif ty_name == "heartbeat":
+        ty = TY_HEARTBEAT
+        p += struct.pack("<Q", f["seq"])
+    elif ty_name == "calibration":
+        ty = TY_CALIBRATION
+        p += struct.pack("<d", f["memcpy_bps"])
+        for t in f["tile_throughput"] + f["tile_throughput_tuned"]:
+            p += struct.pack("<d", t)
+        p += struct.pack("<ddd", f["dispatch_overhead_s"], f["spill_read_latency_s"], f["spill_read_bps"])
+        p += struct.pack("<Q", f["samples"])
+    elif ty_name == "shutdown":
+        ty = TY_SHUTDOWN
+    else:
+        raise AssertionError(ty_name)
+    assert len(p) <= MAX_PAYLOAD
+    return struct.pack("<HHBI", MAGIC, VERSION, ty, len(p)) + bytes(p)
+
+
+class _Cursor:
+    def __init__(self, buf):
+        self.buf, self.pos = buf, 0
+
+    def take(self, n):
+        if self.pos + n > len(self.buf):
+            raise ProtocolError("truncated")
+        s = self.buf[self.pos : self.pos + n]
+        self.pos += n
+        return s
+
+    def u32(self):
+        return struct.unpack("<I", self.take(4))[0]
+
+    def u64(self):
+        return struct.unpack("<Q", self.take(8))[0]
+
+    def f64(self):
+        return struct.unpack("<d", self.take(8))[0]
+
+    def string(self):
+        n = self.u32()
+        if n > MAX_PAYLOAD:
+            raise ProtocolError("malformed", f"string length {n}")
+        try:
+            return self.take(n).decode("utf-8")
+        except UnicodeDecodeError:
+            raise ProtocolError("malformed", "non-UTF-8 string")
+
+    def done(self):
+        if self.pos != len(self.buf):
+            raise ProtocolError("malformed", f"{len(self.buf) - self.pos} trailing payload bytes")
+
+
+def decode(buf):
+    """Mirror of ProcMsg::decode: returns (msg, used) or raises a typed
+    ProtocolError.  Total over arbitrary bytes."""
+    if len(buf) < HEADER_LEN:
+        raise ProtocolError("truncated")
+    magic, version, ty, plen = struct.unpack("<HHBI", buf[:HEADER_LEN])
+    if magic != MAGIC:
+        raise ProtocolError("bad_magic", hex(magic))
+    if version != VERSION:
+        raise ProtocolError("version_mismatch", str(version))
+    if plen > MAX_PAYLOAD:
+        raise ProtocolError("oversized", str(plen))
+    if len(buf) < HEADER_LEN + plen:
+        raise ProtocolError("truncated")
+    c = _Cursor(buf[HEADER_LEN : HEADER_LEN + plen])
+    if ty == TY_ASSIGN:
+        f = {k: c.u64() for k in ("frame_id", "shard_id", "bin0", "nbins", "row0", "nrows", "img_h", "img_w")}
+        f["img_path"], f["out_path"] = c.string(), c.string()
+        if f["nbins"] == 0 or f["nrows"] == 0 or f["img_h"] == 0 or f["img_w"] == 0:
+            raise ProtocolError("malformed", "degenerate shard geometry")
+        if f["row0"] + f["nrows"] > f["img_h"]:
+            raise ProtocolError("malformed", "shard strip past image")
+        msg = ("assign", f)
+    elif ty == TY_DONE:
+        fid, sid, us, ck = c.u64(), c.u64(), c.u64(), c.u32()
+        msg = ("done", {"frame_id": fid, "shard_id": sid, "kernel_time_us": us, "checksum": ck})
+    elif ty == TY_FAILED:
+        fid, sid = c.u64(), c.u64()
+        pb = c.take(1)[0]
+        if pb not in (0, 1):
+            raise ProtocolError("malformed", f"bool byte {pb}")
+        msg = ("failed", {"frame_id": fid, "shard_id": sid, "panicked": pb == 1, "reason": c.string()})
+    elif ty == TY_HEARTBEAT:
+        msg = ("heartbeat", {"seq": c.u64()})
+    elif ty == TY_CALIBRATION:
+        f = {"memcpy_bps": c.f64()}
+        f["tile_throughput"] = [c.f64() for _ in range(4)]
+        f["tile_throughput_tuned"] = [c.f64() for _ in range(4)]
+        f["dispatch_overhead_s"], f["spill_read_latency_s"], f["spill_read_bps"] = c.f64(), c.f64(), c.f64()
+        f["samples"] = c.u64()
+        msg = ("calibration", f)
+    elif ty == TY_SHUTDOWN:
+        msg = ("shutdown", {})
+    else:
+        raise ProtocolError("unknown_type", str(ty))
+    c.done()
+    return msg, HEADER_LEN + plen
+
+
+def samples():
+    return [
+        ("assign", {"frame_id": 7, "shard_id": 3, "bin0": 8, "nbins": 4, "row0": 16, "nrows": 10,
+                    "img_h": 64, "img_w": 48, "img_path": "/tmp/img.bin", "out_path": "/tmp/out-7-3.bin"}),
+        ("done", {"frame_id": 7, "shard_id": 3, "kernel_time_us": 1234, "checksum": 0xDEAD}),
+        ("failed", {"frame_id": 7, "shard_id": 3, "panicked": True, "reason": "injected"}),
+        ("heartbeat", {"seq": 42}),
+        ("calibration", {"memcpy_bps": 6.0e9, "tile_throughput": [1e8, 2e8, 3e8, 4e8],
+                         "tile_throughput_tuned": [1.5e8, 2.5e8, 3.5e8, 4.5e8],
+                         "dispatch_overhead_s": 2e-5, "spill_read_latency_s": 1e-4,
+                         "spill_read_bps": 4e8, "samples": 3}),
+        ("shutdown", {}),
+    ]
+
+
+def test_roundtrip_every_type():
+    stream = b""
+    for msg in samples():
+        wire = encode(msg)
+        back, used = decode(wire)
+        assert back == msg and used == len(wire), msg[0]
+        stream += wire
+    # Back-to-back frames decode in order off one buffer.
+    off = 0
+    for want in samples():
+        got, used = decode(stream[off:])
+        assert got == want
+        off += used
+    assert off == len(stream)
+    print("framing: every message type round-trips byte-exact, frames stream")
+
+
+def test_every_truncation_point_is_typed():
+    for msg in samples():
+        wire = encode(msg)
+        for cut in range(len(wire)):
+            try:
+                decode(wire[:cut])
+                raise AssertionError(f"{msg[0]} decoded from {cut}/{len(wire)} bytes")
+            except ProtocolError as e:
+                assert e.kind in ("truncated", "malformed"), (msg[0], cut, e.kind)
+    print("framing: truncation at every byte prefix is a typed error")
+
+
+def test_header_corruptions_are_typed():
+    good = encode(("heartbeat", {"seq": 1}))
+    cases = [
+        (b"\xff" + good[1:], "bad_magic"),
+        (good[:2] + b"\x63\x00" + good[4:], "version_mismatch"),
+        (good[:4] + b"\xc8" + good[5:], "unknown_type"),
+        (good[:5] + struct.pack("<I", MAX_PAYLOAD + 1) + good[9:], "oversized"),
+        (good[:5] + struct.pack("<I", 9) + good[9:] + b"\x00", "malformed"),  # trailing byte
+    ]
+    for wire, kind in cases:
+        try:
+            decode(wire)
+            raise AssertionError(f"expected {kind}")
+        except ProtocolError as e:
+            assert e.kind == kind, (kind, e.kind)
+    # Degenerate geometry is rejected at decode, not trusted downstream.
+    a = dict(samples()[0][1])
+    a["nbins"] = 0
+    try:
+        decode(encode(("assign", a)))
+        raise AssertionError("degenerate geometry decoded")
+    except ProtocolError as e:
+        assert e.kind == "malformed"
+    a["nbins"], a["row0"] = 2, 60  # row0+nrows=70 > img_h=64
+    try:
+        decode(encode(("assign", a)))
+        raise AssertionError("strip past image decoded")
+    except ProtocolError as e:
+        assert e.kind == "malformed"
+    print("framing: magic/version/type/length/geometry corruption all typed")
+
+
+def test_random_bytes_never_crash_the_decoder():
+    # xorshift-ish deterministic garbage, half with a valid header so
+    # the payload decoders get fuzzed too (mirror of the Rust fuzz).
+    state = 0x9E3779B97F4A7C15
+    for trial in range(500):
+        state = (state * 6364136223846793005 + 1442695040888963407) & ((1 << 64) - 1)
+        n = state % 64
+        buf = bytearray((state >> (8 * (i % 8))) & 0xFF for i in range(n))
+        if trial % 2 == 0 and len(buf) >= HEADER_LEN:
+            buf[0:4] = struct.pack("<HH", MAGIC, VERSION)
+            buf[4] = (state % 8) + 1
+            buf[5:9] = struct.pack("<I", len(buf) - HEADER_LEN)
+        try:
+            decode(bytes(buf))
+        except ProtocolError:
+            pass  # typed is the contract; any other exception propagates
+    print("framing: 500 garbage buffers decoded or rejected typed, no crash")
+
+
+def test_checksum_stable_and_bit_sensitive():
+    data = [1.0, 2.0, 3.5, -0.0]
+    a = checksum_f32(data)
+    assert a == checksum_f32(data)
+    flipped = list(data)
+    flipped[2] = struct.unpack("<f", struct.pack("<I", struct.unpack("<I", struct.pack("<f", 3.5))[0] + 1))[0]
+    assert checksum_f32(flipped) != a, "one mantissa step must change the sum"
+    assert checksum_f32([]) == 0x811C9DC5, "empty input is the FNV basis"
+    print("checksum: deterministic, bit-sensitive, basis on empty input")
+
+
+class SupervisorSim:
+    """Deterministic mirror of ProcSupervisor's dispatcher: pending
+    queue, per-child in-flight maps, the requeue ladder and the
+    at-most-once frame-failure discipline.  Time is an integer tick."""
+
+    def __init__(self, workers=2, max_attempts=3, per_child_inflight=2, heartbeat_timeout=10):
+        self.max_attempts = max_attempts
+        self.cap = per_child_inflight
+        self.hb_timeout = heartbeat_timeout
+        self.now = 0
+        self.slots = [{"alive": True, "inflight": {}, "last_seen": 0} for _ in range(workers)]
+        self.pending = deque()
+        self.frames = {}
+        self.stats = {"dispatched": 0, "requeued": 0, "completed": 0, "shard_failures": 0,
+                      "respawns": 0, "skipped_deadline": 0, "img_deleted": [], "typed_failures": []}
+
+    def submit(self, frame_id, nshards, expires=None):
+        self.frames[frame_id] = {"outstanding": nshards, "failed": False, "expires": expires,
+                                 "results": []}
+        for sid in range(nshards):
+            self.pending.append({"frame": frame_id, "shard": sid, "attempts": 0})
+
+    def _retire(self, frame_id):
+        f = self.frames[frame_id]
+        f["outstanding"] -= 1
+        assert f["outstanding"] >= 0, "retire underflow"
+        if f["outstanding"] == 0:
+            # Outstanding-zero cleanup: the frame's image spill file is
+            # deleted exactly once (supervisor.rs retire()).
+            self.stats["img_deleted"].append(frame_id)
+            del self.frames[frame_id]
+
+    def _fail_frame(self, frame_id, error):
+        f = self.frames.get(frame_id)
+        if f is None or f["failed"]:
+            return  # at-most-once: later shard outcomes stay silent
+        f["failed"] = True
+        self.stats["typed_failures"].append((frame_id, error))
+
+    def _retry_or_fail(self, task, reason):
+        task["attempts"] += 1
+        if task["attempts"] >= self.max_attempts:
+            self.stats["shard_failures"] += 1
+            self._fail_frame(task["frame"], reason)
+            self._retire(task["frame"])
+        else:
+            self.stats["requeued"] += 1
+            self.pending.append(task)
+
+    def pump(self):
+        progressed = True
+        while progressed and self.pending:
+            progressed = False
+            task = self.pending[0]
+            f = self.frames.get(task["frame"])
+            if f is None:
+                self.pending.popleft()
+                progressed = True
+                continue
+            if f["failed"]:
+                self.pending.popleft()
+                self._retire(task["frame"])
+                progressed = True
+                continue
+            if f["expires"] is not None and self.now >= f["expires"]:
+                # Deadline satellite: dropped BEFORE dispatch.
+                self.pending.popleft()
+                self.stats["skipped_deadline"] += 1
+                self._fail_frame(task["frame"], "deadline")
+                self._retire(task["frame"])
+                progressed = True
+                continue
+            candidates = [i for i, s in enumerate(self.slots)
+                          if s["alive"] and len(s["inflight"]) < self.cap]
+            if not any(s["alive"] for s in self.slots):
+                self.pending.popleft()
+                self._fail_frame(task["frame"], "workers_gone")
+                self._retire(task["frame"])
+                progressed = True
+                continue
+            if not candidates:
+                return  # every live child saturated; head-of-line waits
+            node = min(candidates, key=lambda i: len(self.slots[i]["inflight"]))
+            self.pending.popleft()
+            self.slots[node]["inflight"][(task["frame"], task["shard"])] = task
+            self.stats["dispatched"] += 1
+            progressed = True
+
+    def child_dies(self, node):
+        """SIGKILL analog: requeue everything in flight, respawn."""
+        s = self.slots[node]
+        assert s["alive"]
+        s["alive"] = False
+        orphans = list(s["inflight"].values())
+        s["inflight"] = {}
+        for t in orphans:
+            self._retry_or_fail(t, "worker process died")
+        self.slots[node] = {"alive": True, "inflight": {}, "last_seen": self.now}
+        self.stats["respawns"] += 1
+
+    def heartbeat(self, node):
+        self.slots[node]["last_seen"] = self.now
+
+    def check_heartbeats(self):
+        for i, s in enumerate(self.slots):
+            if s["alive"] and self.now - s["last_seen"] > self.hb_timeout:
+                self.child_dies(i)
+
+    def complete(self, node, frame_id, shard_id, ok=True, reason=""):
+        task = self.slots[node]["inflight"].pop((frame_id, shard_id))
+        f = self.frames.get(frame_id)
+        if f is None:
+            return
+        if f["failed"]:
+            self._retire(frame_id)
+            return
+        if ok:
+            self.stats["completed"] += 1
+            f["results"].append(shard_id)
+            self._retire(frame_id)
+        else:
+            self._retry_or_fail(task, reason)
+
+    def drain_inflight(self):
+        return [(i, k) for i, s in enumerate(self.slots) for k in s["inflight"]]
+
+
+def test_child_death_requeues_and_frame_completes():
+    sim = SupervisorSim(workers=2, max_attempts=3, per_child_inflight=2)
+    sim.submit(1, 4)
+    sim.pump()
+    assert sim.stats["dispatched"] == 4, "2 children x cap 2"
+    victim_inflight = [k for (n, k) in sim.drain_inflight() if n == 0]
+    assert victim_inflight, "child 0 must hold work"
+    sim.child_dies(0)
+    assert sim.stats["requeued"] == len(victim_inflight), "every orphan requeued, attempts+1"
+    sim.pump()  # replacement picks the orphans back up
+    for node, (fid, sid) in sim.drain_inflight():
+        sim.complete(node, fid, sid)
+    assert sim.pending == deque() and not sim.drain_inflight()
+    assert sim.stats["completed"] == 4 and sim.stats["shard_failures"] == 0
+    assert sim.stats["img_deleted"] == [1], "outstanding-zero cleanup fired exactly once"
+    assert sim.stats["typed_failures"] == [], "a survivable kill fails nothing"
+    assert 1 not in sim.frames
+    print("supervision: child death requeues orphans; frame completes, cleanup once")
+
+
+def test_attempt_exhaustion_fails_frame_exactly_once():
+    sim = SupervisorSim(workers=1, max_attempts=2, per_child_inflight=4)
+    sim.submit(5, 3)
+    sim.pump()
+    # Shard 0 fails both its attempts; shards 1-2 also report failures
+    # afterwards — the frame error must still be recorded exactly once.
+    sim.complete(0, 5, 0, ok=False, reason="compute failed")
+    sim.pump()
+    sim.complete(0, 5, 0, ok=False, reason="compute failed")  # attempt 2 of 2
+    assert sim.stats["shard_failures"] == 1
+    assert len(sim.stats["typed_failures"]) == 1, "typed failure is at-most-once"
+    sim.complete(0, 5, 1, ok=False, reason="compute failed")
+    sim.pump()
+    while sim.drain_inflight():
+        for node, (fid, sid) in sim.drain_inflight():
+            sim.complete(node, fid, sid)
+        sim.pump()
+    assert len(sim.stats["typed_failures"]) == 1, "later outcomes stay silent"
+    assert sim.stats["img_deleted"] == [5], "failed frames still clean up exactly once"
+    assert 5 not in sim.frames and not sim.pending
+    print("supervision: attempts ladder bounds retries; frame fails typed exactly once")
+
+
+def test_heartbeat_timeout_is_a_death():
+    sim = SupervisorSim(workers=2, max_attempts=3, heartbeat_timeout=5)
+    sim.submit(9, 4)
+    sim.pump()
+    sim.now = 4
+    sim.heartbeat(1)  # child 1 is chatty; child 0 went dark at t=0
+    sim.now = 6
+    sim.check_heartbeats()
+    assert sim.stats["respawns"] == 1, "only the silent child is declared dead"
+    sim.pump()
+    while sim.drain_inflight():
+        for node, (fid, sid) in sim.drain_inflight():
+            sim.complete(node, fid, sid)
+        sim.pump()
+    assert sim.stats["completed"] == 4 and sim.stats["typed_failures"] == []
+    print("supervision: heartbeat silence past the timeout = child death + requeue")
+
+
+def test_expired_deadline_drops_before_dispatch():
+    sim = SupervisorSim(workers=2)
+    sim.now = 100
+    sim.submit(3, 5, expires=50)  # already blown at submit
+    before = sim.stats["dispatched"]
+    sim.pump()
+    assert sim.stats["dispatched"] == before, "expired shards never reach a child"
+    # The first expired shard fails the frame; its siblings then retire
+    # through the at-most-once failed branch (supervisor.rs pump()).
+    assert sim.stats["skipped_deadline"] == 1
+    assert [f for (f, e) in sim.stats["typed_failures"]] == [3] and \
+        sim.stats["typed_failures"][0][1] == "deadline"
+    assert sim.stats["img_deleted"] == [3] and 3 not in sim.frames
+    print("supervision: blown deadline drops the whole frame pre-dispatch, typed once")
+
+
+if __name__ == "__main__":
+    test_roundtrip_every_type()
+    test_every_truncation_point_is_typed()
+    test_header_corruptions_are_typed()
+    test_random_bytes_never_crash_the_decoder()
+    test_checksum_stable_and_bit_sensitive()
+    test_child_death_requeues_and_frame_completes()
+    test_attempt_exhaustion_fails_frame_exactly_once()
+    test_heartbeat_timeout_is_a_death()
+    test_expired_deadline_drops_before_dispatch()
+    print("proc plane pre-validation: ALL OK")

@@ -16,10 +16,17 @@
 //! 3. **Out-of-core** — a 128-bin frame whose tensor exceeds the
 //!    budget streamed into a spill-backed `TensorStore`: wall time,
 //!    peak resident bytes vs tensor size, and spilled query rate.
+//! 4. **Supervision overhead** — the armed zero-probability fault
+//!    probe vs the plain supervised executor.
+//! 5. **Process isolation** — the same schedule through real
+//!    `proc-worker` child processes: the isolation tax (pipes +
+//!    spill-file data plane vs shared memory) and the latency of a
+//!    frame that survives a SIGKILL mid-flight (respawn recovery).
 //!
 //! Run: `cargo bench --bench shard` (BENCH_REPS=1 for the CI smoke).
 
 use inthist::coordinator::task_queue::{BinTaskQueue, TaskQueueConfig};
+use inthist::proc::{ProcPoolConfig, ProcSupervisor};
 use inthist::histogram::region::Rect;
 use inthist::histogram::types::{BinnedImage, IntegralHistogram};
 use inthist::runtime::artifact::ArtifactManifest;
@@ -83,6 +90,37 @@ fn run_interleaved(
         done += 1;
     }
     (frames as f64 / t0.elapsed().as_secs_f64().max(1e-9), peak)
+}
+
+/// `run_interleaved`, but submitting through the multi-process
+/// supervisor.  Same ticket type, same drain order, so the comparison
+/// isolates exactly the process boundary: pipes, spill files, checksums.
+fn run_proc_interleaved(
+    sup: &ProcSupervisor,
+    plan: &ShardPlan,
+    imgs: &[Arc<BinnedImage>],
+    frames: usize,
+    window: usize,
+) -> f64 {
+    let mut outs: Vec<IntegralHistogram> =
+        (0..window).map(|_| IntegralHistogram::zeros(0, 0, 0)).collect();
+    let mut inflight: VecDeque<FrameTicket> = VecDeque::new();
+    let mut submitted = 0usize;
+    let mut done = 0usize;
+    let t0 = Instant::now();
+    while done < frames {
+        while inflight.len() < window && submitted < frames {
+            let img = &imgs[submitted % imgs.len()];
+            inflight.push_back(sup.submit(img, plan).expect("proc submit"));
+            submitted += 1;
+        }
+        let ticket = inflight.pop_front().expect("ticket in flight");
+        let out = &mut outs[done % window];
+        ticket.reassemble_into(out).expect("proc reassemble");
+        std::hint::black_box(&out.data);
+        done += 1;
+    }
+    frames as f64 / t0.elapsed().as_secs_f64().max(1e-9)
 }
 
 struct SweepRow {
@@ -292,6 +330,49 @@ fn main() {
         _ => println!("with armed zero-prob injector:  n/a (build with --features fault-injection)"),
     }
 
+    // --- 5. process isolation tax + respawn recovery ---
+    // The same section-2 schedule submitted through real `proc-worker`
+    // children: every shard crosses a pipe-controlled process boundary
+    // and its tensors travel through spill files.  The delta vs the
+    // supervised in-process executor (`sup_fps`) is the full isolation
+    // tax.  The recovery row SIGKILLs a child with a frame in flight
+    // and times the frame end-to-end anyway — respawn + requeue + the
+    // recomputed shards, the latency a production kill actually costs.
+    let proc_workers = 2usize;
+    let sup = ProcSupervisor::new(ProcPoolConfig {
+        workers: proc_workers,
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_proc-worker"))),
+        calibrate_children: false,
+        ..Default::default()
+    })
+    .expect("spawn proc pool");
+    let _ = run_proc_interleaved(&sup, &plan, &imgs, 2, 1); // warm-up
+    let proc_fps = run_proc_interleaved(&sup, &plan, &imgs, frames, 2);
+    let isolation_tax_pct = 100.0 * (sup_fps - proc_fps) / sup_fps.max(1e-9);
+
+    let t0 = Instant::now();
+    let ticket = sup.submit(&imgs[0], &plan).expect("clean submit");
+    let mut out = IntegralHistogram::zeros(0, 0, 0);
+    ticket.reassemble_into(&mut out).expect("clean frame");
+    let clean_frame_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t0 = Instant::now();
+    let ticket = sup.submit(&imgs[0], &plan).expect("kill submit");
+    sup.kill_worker(0).expect("kill hook");
+    ticket.reassemble_into(&mut out).expect("frame survives the kill");
+    let killed_frame_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let respawn_recovery_ms = (killed_frame_ms - clean_frame_ms).max(0.0);
+    let proc_stats = sup.stats();
+    println!("\n## process isolation, {proc_workers} worker processes, {frames} frames");
+    println!("in-process executor:            {sup_fps:>8.2} fps");
+    println!(
+        "multi-process supervisor:       {proc_fps:>8.2} fps ({isolation_tax_pct:+.1}% isolation tax)"
+    );
+    println!(
+        "clean frame {clean_frame_ms:.1} ms | frame across a SIGKILL {killed_frame_ms:.1} ms | respawn recovery {respawn_recovery_ms:.1} ms | respawns {}",
+        proc_stats.respawns
+    );
+
     // --- machine-readable report at the repo root ---
     let mut json = String::new();
     json.push_str("{\n");
@@ -331,6 +412,10 @@ fn main() {
         probed_fps.map_or("null".into(), |p| format!("{p:.2}")),
         overhead_pct.map_or("null".into(), |o| format!("{o:.3}")),
         overhead_pct.map_or("null".into(), |o| format!("{}", o < 2.0)),
+    ));
+    json.push_str(&format!(
+        "  \"proc\": {{\"workers\": {proc_workers}, \"fps_in_process\": {sup_fps:.2}, \"fps_multi_process\": {proc_fps:.2}, \"isolation_tax_pct\": {isolation_tax_pct:.2}, \"clean_frame_ms\": {clean_frame_ms:.2}, \"killed_frame_ms\": {killed_frame_ms:.2}, \"respawn_recovery_ms\": {respawn_recovery_ms:.2}, \"respawns\": {}}},\n",
+        proc_stats.respawns
     ));
     json.push_str("  \"derived\": {\n");
     json.push_str(&format!(

@@ -1,0 +1,107 @@
+//! `proc-worker` — the child half of the multi-process execution
+//! plane (see `inthist::proc`).  Speaks the length-prefixed control
+//! protocol on stdin/stdout; bulk tensors ride `TensorStore` spill
+//! files named in each assignment.  Never launched by hand: the
+//! `ProcSupervisor` spawns, monitors, kills and respawns these.
+//!
+//! Flags (hand-rolled `--key value`, matching the main CLI):
+//!   --calibrate 0|1       run the startup microbench (default 1)
+//!   --engine-workers N    ScanEngine thread budget (default 1)
+//!   --heartbeat-ms N      liveness tick interval (default 200)
+//!   --selftest            protocol round-trip smoke, then exit 0
+//!                         (CI hook; no supervisor needed)
+
+use inthist::proc::protocol::{ProcMsg, WireAssign};
+use inthist::proc::worker::{run, WorkerConfig};
+use std::time::Duration;
+
+fn usage() -> ! {
+    eprintln!(
+        "proc-worker: child process of the inthist multi-process plane\n\
+         usage: proc-worker [--calibrate 0|1] [--engine-workers N] \
+         [--heartbeat-ms N] [--selftest]"
+    );
+    std::process::exit(2)
+}
+
+/// Round-trip every message shape through encode/decode — a cheap CI
+/// smoke that the built binary speaks the protocol it was built with.
+fn selftest() -> Result<(), String> {
+    let msgs = [
+        ProcMsg::AssignShard(WireAssign {
+            frame_id: 7,
+            shard_id: 3,
+            bin0: 8,
+            nbins: 8,
+            row0: 32,
+            nrows: 16,
+            img_h: 64,
+            img_w: 48,
+            img_path: "/tmp/img.bin".into(),
+            out_path: "/tmp/out.bin".into(),
+        }),
+        ProcMsg::ShardDone { frame_id: 7, shard_id: 3, kernel_time_us: 120, checksum: 0xDEAD },
+        ProcMsg::ShardFailed {
+            frame_id: 7,
+            shard_id: 3,
+            panicked: true,
+            reason: "selftest".into(),
+        },
+        ProcMsg::Heartbeat { seq: 42 },
+        ProcMsg::Shutdown,
+    ];
+    for msg in &msgs {
+        let wire = msg.encode();
+        let (back, used) = ProcMsg::decode(&wire).map_err(|e| format!("decode: {e}"))?;
+        if used != wire.len() || &back != msg {
+            return Err(format!("round-trip mismatch for {msg:?}"));
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = WorkerConfig::default();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--selftest" => match selftest() {
+                Ok(()) => {
+                    println!("proc-worker selftest ok");
+                    return;
+                }
+                Err(e) => {
+                    eprintln!("proc-worker selftest FAILED: {e}");
+                    std::process::exit(1);
+                }
+            },
+            "--calibrate" => {
+                let v = argv.get(i + 1).unwrap_or_else(|| usage());
+                cfg.calibrate = match v.as_str() {
+                    "0" | "false" => false,
+                    "1" | "true" => true,
+                    _ => usage(),
+                };
+                i += 2;
+            }
+            "--engine-workers" => {
+                let v = argv.get(i + 1).unwrap_or_else(|| usage());
+                cfg.engine_workers = v.parse().unwrap_or_else(|_| usage());
+                i += 2;
+            }
+            "--heartbeat-ms" => {
+                let v = argv.get(i + 1).unwrap_or_else(|| usage());
+                let ms: u64 = v.parse().unwrap_or_else(|_| usage());
+                cfg.heartbeat = Duration::from_millis(ms.max(1));
+                i += 2;
+            }
+            "--help" | "-h" => usage(),
+            _ => usage(),
+        }
+    }
+    if let Err(e) = run(cfg) {
+        eprintln!("proc-worker: {e:#}");
+        std::process::exit(1);
+    }
+}

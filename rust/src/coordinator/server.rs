@@ -67,15 +67,18 @@ use crate::fault::FaultInjector;
 use crate::histogram::engine::ScanEngine;
 use crate::histogram::region::Rect;
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
+use crate::proc::{ProcPoolConfig, ProcStats, ProcSupervisor};
 use crate::runtime::artifact::ArtifactManifest;
 use crate::runtime::compile_cache::{CompileCache, ExecutorScope, RetryPolicy};
 use crate::shard::{
-    ShardExecutor, ShardExecutorConfig, ShardExecutorStats, ShardPlanner, ShardReport, TensorStore,
+    FrameTicket, ShardExecutor, ShardExecutorConfig, ShardExecutorStats, ShardPlan, ShardPlanner,
+    ShardReport, TensorStore,
 };
 use crate::tune::{Calibrator, CostSnapshot, TunedPlanner};
 use crate::util::sync::lock_recover;
 use crate::video::source::{FrameSource, VideoFrame};
 use anyhow::{anyhow, Result};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -131,6 +134,23 @@ pub struct ServerConfig {
     /// sizes shard plans with measured numbers instead of the paper's
     /// static priors.  `None` keeps the pre-calibration static paths.
     pub calibrator: Option<Arc<Calibrator>>,
+    /// Route large frames through the multi-process execution plane
+    /// ([`crate::proc`]): shard compute runs in supervised `proc-worker`
+    /// child processes that survive aborts and OOM kills, not just
+    /// panics.  Off by default — the in-process [`ShardExecutor`] stays
+    /// the fast path; isolation buys fault containment at an IPC +
+    /// spill tax (measured in `benches/shard.rs`).
+    pub process_isolation: bool,
+    /// Pool knobs for the proc plane (child count, attempt ladder,
+    /// heartbeats, worker-binary discovery).  Read only when
+    /// [`Self::process_isolation`] is on.
+    pub proc: ProcPoolConfig,
+    /// Persist the [`TunedPlanner`] cache here: loaded at
+    /// [`Server::new`] (missing/corrupt files are ignored — the cache
+    /// simply starts cold) and saved on [`Server::drain`] /
+    /// [`Server::shutdown`], so a restarted server skips its plan
+    /// searches.  [`Server::recalibrate`] deletes it explicitly.
+    pub tune_cache_path: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -148,6 +168,9 @@ impl Default for ServerConfig {
             overload_inflight_limit: 0,
             faults: None,
             calibrator: None,
+            process_isolation: false,
+            proc: ProcPoolConfig::default(),
+            tune_cache_path: None,
         }
     }
 }
@@ -176,6 +199,10 @@ pub struct ServerHealth {
     pub sessions_active: usize,
     /// True when overload shedding is active for the large route.
     pub degraded: bool,
+    /// Effective shedding threshold: calibration-derived when the cost
+    /// model has measured samples, else the static config value
+    /// (0 = shedding disabled).
+    pub overload_limit: usize,
     /// Large-route ops refused under overload.
     pub shed_large: usize,
     /// Small-frame ops refused under overload (≥ 2× the limit).
@@ -288,6 +315,9 @@ pub struct ServerSnapshot {
     /// Shard executor counters (None until the first large request
     /// builds it).
     pub shard: Option<ShardExecutorStats>,
+    /// Multi-process plane counters (None until `process_isolation`
+    /// routes its first large request).
+    pub proc: Option<ProcStats>,
     /// Live calibration snapshot (None when the server runs static;
     /// `samples > 0` once live frames have fed the EWMA loop).
     pub calibration: Option<CostSnapshot>,
@@ -308,10 +338,19 @@ struct Inner {
     /// apart), unlike the old whole-frame-serialized `BinTaskQueue`
     /// route.  Geometry-agnostic: plans are per-request.
     shard: Mutex<Option<Arc<ShardExecutor>>>,
+    /// The multi-process plane, built lazily on the first large frame
+    /// when `config.process_isolation` is on (same discipline as the
+    /// in-process executor above: the lock guards construction only).
+    proc: Mutex<Option<Arc<ProcSupervisor>>>,
     /// One shared auto-tuning planner for every checkout engine (one
     /// plan search per geometry per server), present iff the config
     /// carries a calibrator.
     tuner: Option<Arc<TunedPlanner>>,
+    /// Overload limit derived from the calibrated per-frame cost of a
+    /// nominal large frame (0 = not derived; the static
+    /// `overload_inflight_limit` applies).  Refreshed by
+    /// [`Server::recalibrate`].
+    overload_limit_derived: AtomicUsize,
     metrics: Metrics,
     admission: Arc<AdmissionControl>,
     session_seq: AtomicUsize,
@@ -346,7 +385,7 @@ impl Inner {
             STATE_DRAINING => return Err(anyhow!("server draining: new work refused")),
             _ => return Err(anyhow!("server stopped")),
         }
-        let limit = self.config.overload_inflight_limit;
+        let limit = self.overload_limit();
         if limit > 0 {
             let inflight = self.inflight.load(Ordering::Acquire);
             if large && inflight >= limit {
@@ -366,6 +405,52 @@ impl Inner {
         self.inflight.fetch_add(1, Ordering::AcqRel);
         Ok(OpGuard { inner: self })
     }
+
+    /// Effective shedding threshold: the calibration-derived limit when
+    /// one has been computed (measured per-frame cost against the frame
+    /// deadline — see [`Server::recalibrate`]), else the static
+    /// `overload_inflight_limit` as cold-start fallback.
+    fn overload_limit(&self) -> usize {
+        let derived = self.overload_limit_derived.load(Ordering::Relaxed);
+        if derived > 0 {
+            derived
+        } else {
+            self.config.overload_inflight_limit
+        }
+    }
+
+    /// Derive the shedding threshold from the calibrated cost model:
+    /// how many nominal large frames fit inside the frame deadline
+    /// (default 1 s of queueing tolerance) at the measured throughput.
+    /// Returns 0 — "not derived" — while the snapshot is still the
+    /// static prior, so cold start falls back to the static limit.
+    fn derive_overload_limit(&self) -> usize {
+        let Some(cal) = &self.config.calibrator else { return 0 };
+        let snap = cal.snapshot();
+        if snap.is_prior() {
+            return 0;
+        }
+        // Nominal large frame: the smallest tensor that takes the
+        // shard route (the device-budget boundary), square.
+        let bins = self.config.engine.bins.max(1);
+        let pixels = (self.config.engine.device_memory_budget / 4).max(1) / bins;
+        let side = (pixels as f64).sqrt().ceil().max(8.0) as usize;
+        let plan = self.shard_plan(bins, side, side);
+        let wall = plan
+            .predict_total_with(&snap, self.config.shard_workers.max(1))
+            .wall
+            .as_secs_f64();
+        if wall <= 0.0 {
+            return 0;
+        }
+        let budget = self
+            .config
+            .frame_deadline
+            .unwrap_or(Duration::from_secs(1))
+            .as_secs_f64();
+        ((budget / wall) as usize).clamp(2, 256)
+    }
+
     fn route_for(&self, h: usize, w: usize) -> Route {
         self.config.engine.route_for(h, w)
     }
@@ -422,6 +507,46 @@ impl Inner {
         Arc::clone(guard.as_ref().expect("executor just built"))
     }
 
+    /// The server's multi-process plane, built on first use when
+    /// `process_isolation` is on.  Spawn failure (e.g. the
+    /// `proc-worker` binary is missing) surfaces typed to the caller —
+    /// it is a deployment error, not a reason to silently fall back to
+    /// the unisolated path the operator opted out of.
+    fn proc_supervisor(&self) -> Result<Arc<ProcSupervisor>> {
+        let mut guard = lock_recover(&self.proc);
+        if guard.is_none() {
+            let cfg = ProcPoolConfig {
+                workers: self.config.proc.workers.max(1),
+                max_attempts: self.config.shard_max_attempts.max(1),
+                ..self.config.proc.clone()
+            };
+            let sup = ProcSupervisor::with_faults(cfg, self.config.faults.clone())?;
+            *guard = Some(Arc::new(sup));
+        }
+        Ok(Arc::clone(guard.as_ref().expect("supervisor just built")))
+    }
+
+    /// Submit a planned large frame to whichever execution plane the
+    /// config selects, pushing the frame deadline into the dispatch
+    /// queue (expired shards are dropped before compute on both
+    /// planes).  Returns the same [`FrameTicket`] either way —
+    /// reassembly and the bit-identity contract are shared code.
+    fn submit_ticket(&self, image: &Arc<BinnedImage>, plan: &ShardPlan) -> Result<FrameTicket> {
+        if self.config.process_isolation {
+            let sup = self.proc_supervisor()?;
+            match self.config.frame_deadline {
+                Some(d) => sup.submit_with_deadline(image, plan, d),
+                None => sup.submit(image, plan),
+            }
+        } else {
+            let exec = self.shard_executor();
+            match self.config.frame_deadline {
+                Some(d) => exec.submit_with_deadline(image, plan, d),
+                None => exec.submit(image, plan),
+            }
+        }
+    }
+
     /// Plan a request under the server's shard policy.  With a
     /// calibrator, shards are sized against the measured cost snapshot
     /// (closing the predicted-vs-measured loop); without one, the
@@ -451,10 +576,9 @@ impl Inner {
                 self.config.host_memory_budget
             ));
         }
-        let exec = self.shard_executor();
         let plan = self.shard_plan(img.bins, img.h, img.w);
         let image = Arc::new(img.clone());
-        let ticket = exec.submit(&image, &plan)?;
+        let ticket = self.submit_ticket(&image, &plan)?;
         let mut out = PooledTensor::acquire(&self.pool, img.bins, img.h, img.w);
         let report = match self.config.frame_deadline {
             Some(d) => ticket.reassemble_into_deadline(&mut out, d)?,
@@ -468,9 +592,8 @@ impl Inner {
     /// budget, never the full tensor.
     fn compute_spilled(&self, image: &Arc<BinnedImage>) -> Result<(TensorStore, ShardReport)> {
         let _op = self.begin_op(true)?;
-        let exec = self.shard_executor();
         let plan = self.shard_plan(image.bins, image.h, image.w);
-        let ticket = exec.submit(image, &plan)?;
+        let ticket = self.submit_ticket(image, &plan)?;
         let (store, report) = match self.config.frame_deadline {
             Some(d) => ticket.reassemble_spilled_deadline(d)?,
             None => ticket.reassemble_spilled()?,
@@ -552,22 +675,55 @@ impl Server {
             cal.calibrate();
             Arc::new(TunedPlanner::new(Arc::clone(cal)))
         });
-        Server {
+        // Warm the tuning cache from the persisted file, if configured.
+        // Errors (missing file on first boot, corrupt content) are
+        // deliberately ignored — the cache just starts cold.
+        if let (Some(t), Some(p)) = (&tuner, &config.tune_cache_path) {
+            let _ = t.load_from(p);
+        }
+        let server = Server {
             inner: Arc::new(Inner {
                 compile,
                 pool: Arc::new(FramePool::new()),
                 engines: Mutex::new(Vec::new()),
                 engines_created: AtomicUsize::new(0),
                 shard: Mutex::new(None),
+                proc: Mutex::new(None),
                 tuner,
                 metrics: Metrics::default(),
                 admission,
                 session_seq: AtomicUsize::new(0),
                 state: AtomicU8::new(STATE_RUNNING),
                 inflight: AtomicUsize::new(0),
+                overload_limit_derived: AtomicUsize::new(0),
                 config,
             }),
+        };
+        // The startup microbench has run by now, so the calibrated
+        // shedding threshold can be derived immediately.
+        let derived = server.inner.derive_overload_limit();
+        server.inner.overload_limit_derived.store(derived, Ordering::Relaxed);
+        server
+    }
+
+    /// Drop every learned tuning artifact and re-run the startup
+    /// microbenches: clears the [`TunedPlanner`] cache, deletes the
+    /// persisted cache file (if configured), recalibrates the cost
+    /// model and re-derives the overload limit.  The admin hook for
+    /// "the machine changed under me" — new hardware, new thermal
+    /// envelope, suspicious tail latencies.  Returns the number of
+    /// cached plans dropped.
+    pub fn recalibrate(&self) -> usize {
+        let dropped = self.inner.tuner.as_ref().map(|t| t.clear()).unwrap_or(0);
+        if let Some(p) = &self.inner.config.tune_cache_path {
+            let _ = std::fs::remove_file(p);
         }
+        if let Some(cal) = &self.inner.config.calibrator {
+            cal.calibrate();
+        }
+        let derived = self.inner.derive_overload_limit();
+        self.inner.overload_limit_derived.store(derived, Ordering::Relaxed);
+        dropped
     }
 
     pub fn config(&self) -> &ServerConfig {
@@ -654,7 +810,7 @@ impl Server {
             _ => ServerState::Stopped,
         };
         let inflight = inner.inflight.load(Ordering::Acquire);
-        let limit = inner.config.overload_inflight_limit;
+        let limit = inner.overload_limit();
         let shard = lock_recover(&inner.shard).as_ref().map(|e| e.stats());
         let (alive, total, failed, abandoned) = match &shard {
             Some(s) => (
@@ -670,6 +826,7 @@ impl Server {
             inflight,
             sessions_active: inner.admission.active(),
             degraded: limit > 0 && inflight >= limit,
+            overload_limit: limit,
             shed_large: inner.metrics.shed_large.load(Ordering::Relaxed),
             shed_small: inner.metrics.shed_small.load(Ordering::Relaxed),
             shard_workers_alive: alive,
@@ -686,13 +843,22 @@ impl Server {
     pub fn drain(&self, timeout: Duration) -> bool {
         self.inner.state.store(STATE_DRAINING, Ordering::Release);
         let t0 = Instant::now();
-        while self.inner.inflight.load(Ordering::Acquire) > 0 {
+        let drained = loop {
+            if self.inner.inflight.load(Ordering::Acquire) == 0 {
+                break true;
+            }
             if t0.elapsed() >= timeout {
-                return false;
+                break false;
             }
             std::thread::sleep(Duration::from_millis(1));
+        };
+        // Persist the tuning cache at the quiet point so a restarted
+        // server skips its plan searches (best-effort: an unwritable
+        // path costs the warm start, not the drain).
+        if let (Some(t), Some(p)) = (&self.inner.tuner, &self.inner.config.tune_cache_path) {
+            let _ = t.save_to(p);
         }
-        true
+        drained
     }
 
     /// [`Self::drain`], then stop for good: the shard executor is
@@ -704,6 +870,9 @@ impl Server {
         // Joining the workers happens in the executor's Drop; a timed-
         // out drain leaves stragglers to finish against the channel.
         *lock_recover(&self.inner.shard) = None;
+        // The proc supervisor's Drop shuts the children down (Shutdown
+        // frame, grace period, then kill) and joins its dispatcher.
+        *lock_recover(&self.inner.proc) = None;
         drained
     }
 
@@ -769,6 +938,7 @@ impl Server {
             frame_pool: inner.pool.stats(),
             latency,
             shard,
+            proc: lock_recover(&inner.proc).as_ref().map(|p| p.stats()),
             calibration: inner.config.calibrator.as_ref().map(|c| c.snapshot()),
         }
     }
@@ -1294,6 +1464,79 @@ mod tests {
         assert!(live.samples > baseline.samples, "live frames must feed the EWMA loop");
         let shard = snap.shard.expect("large frame built the executor");
         assert!(shard.tune.is_some(), "shard engines run through the tuned planner");
+    }
+
+    /// The calibrated-shedding satellite: with a measured cost model
+    /// and the static limit left at 0 (disabled), the effective limit
+    /// is derived from per-frame cost — and enforced.
+    #[test]
+    fn calibrated_cost_model_derives_the_overload_limit() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine.bins = 8;
+        cfg.engine.device_memory_budget = 1 << 10;
+        cfg.shard_workers = 2;
+        cfg.calibrator = Some(Arc::new(Calibrator::default()));
+        let srv = Server::new(manifest(), cfg);
+        let h = srv.health();
+        assert!(
+            (2..=256).contains(&h.overload_limit),
+            "derived limit must land in the clamp range, got {}",
+            h.overload_limit
+        );
+        // Saturate past the clamp ceiling: the large route sheds.
+        srv.force_inflight(256);
+        let large = SyntheticVideo::new(40, 40, 1, 2).frame(0).binned(8);
+        let err = srv.compute(&large).err().expect("calibrated shedding").to_string();
+        assert!(err.contains("overload"), "{err}");
+        srv.force_inflight(0);
+        let _ = srv.compute(&large).expect("recovers when load falls");
+        // Cold-start fallback: no calibrator ⇒ the static value (here
+        // 0 = disabled) stays in force.
+        let srv2 = server();
+        assert_eq!(srv2.health().overload_limit, 0);
+    }
+
+    /// The tuning-cache persistence satellite: drain saves the learned
+    /// plans, a fresh server generation warms from the file, and
+    /// `recalibrate()` drops both cache and file explicitly.
+    #[test]
+    fn tune_cache_persists_across_server_generations() {
+        let path = std::env::temp_dir()
+            .join(format!("inthist-tunecache-test-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut cfg = ServerConfig::default();
+        cfg.calibrator = Some(Arc::new(Calibrator::default()));
+        cfg.tune_cache_path = Some(path.clone());
+        let srv = Server::new(manifest(), cfg.clone());
+        let img = SyntheticVideo::new(48, 48, 1, 1).frame(0).binned(8);
+        let _ = srv.compute(&img).expect("compute populates the tuner");
+        assert!(srv.drain(Duration::from_secs(1)));
+        assert!(path.exists(), "drain persists the tuning cache");
+        // A fresh generation warms from the file: recalibrate() reports
+        // how many cached plans it dropped, which proves the load.
+        let srv2 = Server::new(manifest(), cfg);
+        let dropped = srv2.recalibrate();
+        assert!(dropped >= 1, "warmed cache must hold the persisted plan, got {dropped}");
+        assert!(!path.exists(), "recalibrate deletes the persisted cache");
+    }
+
+    /// Process isolation is opt-in and fails loud: a missing
+    /// `proc-worker` binary is a typed deployment error, never a
+    /// silent fallback to the unisolated path.  (Live child-process
+    /// coverage runs in `tests/proc_property.rs`, where cargo provides
+    /// the built binary.)
+    #[test]
+    fn process_isolation_with_missing_worker_binary_fails_typed() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine.bins = 8;
+        cfg.engine.device_memory_budget = 1 << 10;
+        cfg.process_isolation = true;
+        cfg.proc.worker_bin = Some(PathBuf::from("/nonexistent/proc-worker"));
+        let srv = Server::new(manifest(), cfg);
+        let img = SyntheticVideo::new(40, 40, 1, 2).frame(0).binned(8);
+        let err = srv.compute(&img).err().expect("missing worker binary").to_string();
+        assert!(err.contains("does not exist"), "{err}");
+        assert!(srv.snapshot().proc.is_none(), "no supervisor was built");
     }
 
     /// A configured frame deadline rides through the server to the

@@ -42,10 +42,14 @@ pub enum FaultSite {
     SpillRead,
     /// `runtime::compile_cache` compile attempt.
     Compile,
+    /// `proc::supervisor` shard dispatch: fire → the supervisor
+    /// SIGKILLs the target child process (abort/OOM simulation — the
+    /// failure mode `catch_unwind` cannot contain).
+    WorkerAbort,
 }
 
 /// Number of distinct [`FaultSite`] values (array-indexed counters).
-pub const FAULT_SITES: usize = 4;
+pub const FAULT_SITES: usize = 5;
 
 impl FaultSite {
     /// Stable dense index for counter arrays and hashing.
@@ -55,6 +59,7 @@ impl FaultSite {
             FaultSite::SpillWrite => 1,
             FaultSite::SpillRead => 2,
             FaultSite::Compile => 3,
+            FaultSite::WorkerAbort => 4,
         }
     }
 
@@ -64,6 +69,7 @@ impl FaultSite {
             FaultSite::SpillWrite => "spill_write",
             FaultSite::SpillRead => "spill_read",
             FaultSite::Compile => "compile",
+            FaultSite::WorkerAbort => "worker_abort",
         }
     }
 }
@@ -82,6 +88,9 @@ pub enum FaultAction {
     /// Persist only a truncated prefix of the buffer (`SpillWrite`) —
     /// the classic torn/short disk write a power cut leaves behind.
     ShortWrite,
+    /// Kill the worker *process* (`WorkerAbort`) — SIGKILL, not a
+    /// catchable panic; exercises the proc supervisor's respawn ladder.
+    Abort,
 }
 
 /// Per-site probabilities of a seeded fault schedule.
@@ -109,6 +118,8 @@ pub struct FaultSpec {
     pub spill_corrupt_read: f64,
     /// P(spurious failure) per compile attempt.
     pub compile_error: f64,
+    /// P(child process SIGKILL) per proc-supervisor shard dispatch.
+    pub worker_abort: f64,
     /// Cap on injections per site; 0 means unbounded.
     pub max_per_site: usize,
 }
@@ -124,6 +135,7 @@ impl Default for FaultSpec {
             spill_short_write: 0.0,
             spill_corrupt_read: 0.0,
             compile_error: 0.0,
+            worker_abort: 0.0,
             max_per_site: 0,
         }
     }
@@ -143,6 +155,7 @@ pub struct FaultStats {
     pub short_writes: usize,
     pub corrupt_reads: usize,
     pub compile_errors: usize,
+    pub worker_aborts: usize,
 }
 
 impl FaultStats {
@@ -201,6 +214,7 @@ mod imp {
         short_writes: AtomicUsize,
         corrupt_reads: AtomicUsize,
         compile_errors: AtomicUsize,
+        worker_aborts: AtomicUsize,
     }
 
     impl FaultInjector {
@@ -221,6 +235,7 @@ mod imp {
                 short_writes: AtomicUsize::new(0),
                 corrupt_reads: AtomicUsize::new(0),
                 compile_errors: AtomicUsize::new(0),
+                worker_aborts: AtomicUsize::new(0),
             }
         }
 
@@ -262,6 +277,7 @@ mod imp {
                 }
                 FaultSite::SpillRead => (u < self.spec.spill_corrupt_read).then_some(FaultAction::Corrupt),
                 FaultSite::Compile => (u < self.spec.compile_error).then_some(FaultAction::Error),
+                FaultSite::WorkerAbort => (u < self.spec.worker_abort).then_some(FaultAction::Abort),
             };
             if let Some(a) = action {
                 self.injected[i].fetch_add(1, Ordering::Relaxed);
@@ -277,6 +293,7 @@ mod imp {
                         _ => self.corrupt_reads.fetch_add(1, Ordering::Relaxed),
                     },
                     FaultAction::ShortWrite => self.short_writes.fetch_add(1, Ordering::Relaxed),
+                    FaultAction::Abort => self.worker_aborts.fetch_add(1, Ordering::Relaxed),
                 };
             }
             action
@@ -301,6 +318,7 @@ mod imp {
                 short_writes: self.short_writes.load(Ordering::Relaxed),
                 corrupt_reads: self.corrupt_reads.load(Ordering::Relaxed),
                 compile_errors: self.compile_errors.load(Ordering::Relaxed),
+                worker_aborts: self.worker_aborts.load(Ordering::Relaxed),
             }
         }
     }

@@ -14,7 +14,9 @@
 //!   zero-allocation wavefront `ScanEngine` plus the CPU baselines and
 //!   region-query engine ([`histogram`]), the sharded out-of-core
 //!   execution subsystem — shard planner, interleaved executor,
-//!   tagged reassembly, spill-backed tensor store ([`shard`]) — a PCIe
+//!   tagged reassembly, spill-backed tensor store ([`shard`]) — the
+//!   multi-process execution plane with supervised, process-isolated
+//!   shard workers ([`proc`]) — a PCIe
 //!   transfer simulator ([`simulator`]), synthetic video sources
 //!   ([`video`]) and histogram-based analytics built on top
 //!   ([`analytics`]).
@@ -42,6 +44,7 @@ pub mod coordinator;
 pub mod fault;
 pub mod figures;
 pub mod histogram;
+pub mod proc;
 pub mod runtime;
 pub mod shard;
 pub mod simulator;
@@ -67,6 +70,9 @@ pub mod prelude {
     pub use crate::histogram::region::Rect;
     pub use crate::histogram::types::{IntegralHistogram, Strategy};
     pub use crate::fault::{FaultAction, FaultInjector, FaultSite, FaultSpec, FaultStats};
+    pub use crate::proc::{
+        PlacementMap, ProcMsg, ProcPoolConfig, ProcStats, ProcSupervisor, ProtocolError,
+    };
     pub use crate::runtime::artifact::{ArtifactManifest, ArtifactMeta};
     pub use crate::runtime::client::HistogramExecutor;
     pub use crate::shard::{

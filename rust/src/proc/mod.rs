@@ -1,0 +1,44 @@
+//! Multi-process execution plane: process-isolated shard workers.
+//!
+//! The in-process `ShardExecutor` (see [`crate::shard`]) contains
+//! worker *panics* with `catch_unwind`, but a panic is the gentlest
+//! way compute dies.  An abort in native code, the kernel's OOM
+//! killer, or a stray SIGKILL takes the whole server with it — the
+//! paper's per-node scheduling story needs a failure domain smaller
+//! than the process.  This subsystem provides one:
+//!
+//! * [`protocol`] — a versioned, length-prefixed binary control
+//!   protocol spoken over the child's stdin/stdout pipes.  *Control
+//!   only*: assignments, completions, failures, heartbeats and
+//!   calibration reports.  Bulk tensor data never rides the pipes —
+//!   it travels through `TensorStore` spill files in the paper's
+//!   Fig. 2 bin-major layout, so a shard handoff is one small message
+//!   plus a file the child strip-reads directly.
+//! * [`worker`] — the child side: a `ScanEngine` loop that executes
+//!   assignments and streams back `(frame_id, shard_id)`-tagged
+//!   results (compiled into the `proc-worker` bin target).
+//! * [`supervisor`] — the parent side: spawns and monitors the pool
+//!   (pipe EOF + exit status + heartbeat age), respawns dead children,
+//!   requeues their in-flight shards under the bounded attempt ladder,
+//!   and fails frames *typed* through `ShardError` — never a hang.
+//! * [`placement`] — per-node calibrated placement: every child runs
+//!   the `Calibrator` microbench on the node it actually landed on,
+//!   and shard groups are sized and assigned per process from the
+//!   measured snapshots.
+//!
+//! The plane hangs off the same `FrameTicket` API as the in-process
+//! executor, so reassembly, deadline accounting and the bit-identity
+//! contract are shared code, and `Server` can route frames to either
+//! behind a config flag (`ServerConfig::process_isolation`; the
+//! in-process path stays the default — process isolation buys fault
+//! containment at an IPC + spill tax, measured in `benches/shard.rs`).
+
+pub mod placement;
+pub mod protocol;
+pub mod supervisor;
+pub mod worker;
+
+pub use placement::{plan_for_nodes, PlacementMap};
+pub use protocol::{checksum_f32, ProcMsg, ProtocolError, WireAssign};
+pub use supervisor::{resolve_worker_bin, ProcPoolConfig, ProcStats, ProcSupervisor};
+pub use worker::{run as run_worker, WorkerConfig};

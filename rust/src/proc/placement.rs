@@ -1,0 +1,113 @@
+//! Per-node calibrated placement for the proc plane.
+//!
+//! Each child process runs the `Calibrator` startup microbench on the
+//! node it actually landed on and reports its [`CostSnapshot`] over
+//! the control protocol.  This module turns those per-child reports
+//! into a shard plan sized for the *aggregate* pool and a per-shard
+//! child assignment weighted by each child's measured throughput
+//! (LPT greedy — see [`ShardPlanner::plan_per_node`]).
+//!
+//! Children that have not (yet) reported — still calibrating, or
+//! freshly respawned after a death — take no part in sizing; the
+//! planner places shards across the calibrated subset and the
+//! supervisor's soft-affinity dispatch spreads overflow onto the
+//! rest.  With *zero* reports the whole plan degrades to the static
+//! prior on child 0, so cold start is never blocked on calibration.
+
+use crate::shard::{ShardPlan, ShardPlanner};
+use crate::tune::CostSnapshot;
+
+/// A per-shard child assignment plus how many children informed it.
+#[derive(Debug, Clone)]
+pub struct PlacementMap {
+    /// `assignment[i]` = child index that should run `plan.shards[i]`
+    /// (soft affinity — the supervisor falls back when that child is
+    /// dead or saturated).
+    pub assignment: Vec<usize>,
+    /// Children whose measured snapshot informed the placement.
+    pub calibrated_nodes: usize,
+}
+
+/// Size a plan for the pool described by `snaps` (one entry per child,
+/// `None` = not yet calibrated) and assign each shard a child.
+///
+/// The planner works over the *calibrated* children only; the returned
+/// assignment maps its compact node indices back to real child
+/// indices, skipping uncalibrated gaps.
+pub fn plan_for_nodes(
+    planner: &ShardPlanner,
+    bins: usize,
+    h: usize,
+    w: usize,
+    snaps: &[Option<CostSnapshot>],
+) -> (ShardPlan, PlacementMap) {
+    // Compact the calibrated children: child_of[k] = child index of
+    // the planner's node k.
+    let child_of: Vec<usize> =
+        snaps.iter().enumerate().filter(|(_, s)| s.is_some()).map(|(i, _)| i).collect();
+    let measured: Vec<CostSnapshot> = snaps.iter().filter_map(|s| *s).collect();
+    let (plan, nodes) = planner.plan_per_node(bins, h, w, &measured);
+    let assignment: Vec<usize> = nodes
+        .into_iter()
+        .map(|k| child_of.get(k).copied().unwrap_or(0))
+        .collect();
+    (
+        plan,
+        PlacementMap { assignment, calibrated_nodes: child_of.len() },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::ShardPolicy;
+    use crate::tune::calibrate::Calibrator;
+
+    fn snap(scale: f64) -> CostSnapshot {
+        let mut s = Calibrator::default().snapshot();
+        for t in s.tile_throughput.iter_mut() {
+            *t *= scale;
+        }
+        for t in s.tile_throughput_tuned.iter_mut() {
+            *t *= scale;
+        }
+        s.samples = 1;
+        s
+    }
+
+    fn planner() -> ShardPlanner {
+        ShardPlanner::new(ShardPolicy { workers: 4, ..Default::default() })
+    }
+
+    #[test]
+    fn gaps_map_back_to_real_child_indices() {
+        // Children 0 and 2 calibrated; child 1 still booting.
+        let snaps = vec![Some(snap(1.0)), None, Some(snap(1.0))];
+        let (plan, map) = plan_for_nodes(&planner(), 24, 96, 80, &snaps);
+        assert_eq!(map.calibrated_nodes, 2);
+        assert_eq!(map.assignment.len(), plan.shards.len());
+        for &c in &map.assignment {
+            assert!(c == 0 || c == 2, "child 1 is uncalibrated, got {c}");
+        }
+        assert!(map.assignment.iter().any(|&c| c == 0));
+        assert!(map.assignment.iter().any(|&c| c == 2));
+    }
+
+    #[test]
+    fn no_snapshots_degrades_to_child_zero() {
+        let snaps: Vec<Option<CostSnapshot>> = vec![None, None];
+        let (plan, map) = plan_for_nodes(&planner(), 16, 64, 64, &snaps);
+        assert!(!plan.shards.is_empty());
+        assert_eq!(map.calibrated_nodes, 0);
+        assert!(map.assignment.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let snaps = vec![Some(snap(1.0)), Some(snap(3.0))];
+        let a = plan_for_nodes(&planner(), 32, 128, 96, &snaps);
+        let b = plan_for_nodes(&planner(), 32, 128, 96, &snaps);
+        assert_eq!(a.1.assignment, b.1.assignment);
+        assert_eq!(a.0.shards.len(), b.0.shards.len());
+    }
+}

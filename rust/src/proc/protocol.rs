@@ -1,0 +1,590 @@
+//! The proc-plane control protocol: versioned, length-prefixed binary
+//! frames over a child's stdin/stdout pipes.
+//!
+//! **Control only.**  The messages here carry assignments, completions,
+//! heartbeats and calibration snapshots — kilobytes.  Bulk tensor data
+//! never crosses a pipe: the supervisor spills the binned image to a
+//! [`TensorStore`](crate::shard::TensorStore) file, the child writes
+//! its partial tensor to another, and the protocol exchanges *paths*
+//! (plus a payload checksum, because the store's per-row checksums
+//! live in the writer's RAM and cannot follow the file across the
+//! process boundary).
+//!
+//! **Wire format.**  Every frame is
+//!
+//! ```text
+//! [magic u16 LE][version u16 LE][type u8][len u32 LE][payload: len bytes]
+//! ```
+//!
+//! All integers little-endian and fixed-width; strings are a `u32`
+//! length followed by UTF-8 bytes.  Decoding is total: truncated
+//! frames, foreign magic, version skew, oversized lengths and unknown
+//! type bytes all land in a typed [`ProtocolError`] — never a panic,
+//! never UB, never a partial message acted upon (fuzzed in the module
+//! tests and pre-validated in
+//! `python/tests/test_proc_prevalidation.py`).
+
+use crate::tune::CostSnapshot;
+use std::io::{Read, Write};
+
+/// "IH" — rejects garbage on the pipe before any length is trusted.
+pub const PROTOCOL_MAGIC: u16 = 0x4948;
+/// Bumped on any wire-format change; both sides must match exactly.
+pub const PROTOCOL_VERSION: u16 = 1;
+/// Control frames are small; anything bigger than this is a corrupt
+/// length field, not a message worth buffering.
+pub const MAX_PAYLOAD: u32 = 1 << 20;
+/// Frame header bytes (magic + version + type + len).
+pub const HEADER_LEN: usize = 9;
+
+/// Typed protocol failure — the complete decode error surface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// The stream ended inside a frame (header or payload).
+    Truncated,
+    /// First two bytes were not [`PROTOCOL_MAGIC`].
+    BadMagic { got: u16 },
+    /// Frame speaks a different protocol version.
+    VersionMismatch { got: u16 },
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized { len: u32 },
+    /// Type byte names no known message.
+    UnknownType { ty: u8 },
+    /// Payload failed structural validation (bad lengths, non-UTF-8
+    /// strings, trailing bytes, value out of range).
+    Malformed(String),
+    /// The underlying pipe failed (kind carried as text; `io::Error`
+    /// is not `Clone`/`PartialEq`).
+    Io(String),
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtocolError::Truncated => write!(f, "truncated protocol frame"),
+            ProtocolError::BadMagic { got } => write!(f, "bad protocol magic {got:#06x}"),
+            ProtocolError::VersionMismatch { got } => {
+                write!(f, "protocol version {got} (this side speaks {PROTOCOL_VERSION})")
+            }
+            ProtocolError::Oversized { len } => {
+                write!(f, "payload length {len} exceeds cap {MAX_PAYLOAD}")
+            }
+            ProtocolError::UnknownType { ty } => write!(f, "unknown message type {ty}"),
+            ProtocolError::Malformed(why) => write!(f, "malformed payload: {why}"),
+            ProtocolError::Io(why) => write!(f, "pipe error: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+impl From<std::io::Error> for ProtocolError {
+    fn from(e: std::io::Error) -> ProtocolError {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            ProtocolError::Truncated
+        } else {
+            ProtocolError::Io(e.to_string())
+        }
+    }
+}
+
+/// A shard assignment as it travels the wire — mirrors
+/// [`ShardSpec`](crate::shard::ShardSpec) plus the frame geometry and
+/// the two data-plane paths.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireAssign {
+    pub frame_id: u64,
+    pub shard_id: u64,
+    pub bin0: u64,
+    pub nbins: u64,
+    pub row0: u64,
+    pub nrows: u64,
+    /// Full-image geometry (the image store is `1×h×w`).
+    pub img_h: u64,
+    pub img_w: u64,
+    /// Spilled binned image (bin indices as f32, Fig. 2 layout).
+    pub img_path: String,
+    /// Where the child must leave its `nbins×nrows×w` partial.
+    pub out_path: String,
+}
+
+/// One control-plane message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProcMsg {
+    /// Parent → child: compute one shard.
+    AssignShard(WireAssign),
+    /// Child → parent: shard done; partial at `AssignShard.out_path`,
+    /// `checksum` = FNV-1a over its f32 LE bytes.
+    ShardDone { frame_id: u64, shard_id: u64, kernel_time_us: u64, checksum: u32 },
+    /// Child → parent: one compute attempt failed (the *supervisor*
+    /// owns the retry budget).
+    ShardFailed { frame_id: u64, shard_id: u64, panicked: bool, reason: String },
+    /// Child → parent: liveness tick.
+    Heartbeat { seq: u64 },
+    /// Child → parent, once at startup: this node's measured costs.
+    CalibrationReport { snapshot: CostSnapshot },
+    /// Parent → child: drain and exit cleanly.
+    Shutdown,
+}
+
+const TY_ASSIGN: u8 = 1;
+const TY_DONE: u8 = 2;
+const TY_FAILED: u8 = 3;
+const TY_HEARTBEAT: u8 = 4;
+const TY_CALIBRATION: u8 = 5;
+const TY_SHUTDOWN: u8 = 6;
+
+/// FNV-1a over the LE bytes of an f32 slice — the cross-process
+/// payload checksum (the store's per-row sums stay in the writer's
+/// RAM, so integrity must ride the control message).
+pub fn checksum_f32(data: &[f32]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for v in data {
+        for b in v.to_le_bytes() {
+            h ^= b as u32;
+            h = h.wrapping_mul(0x0100_0193);
+        }
+    }
+    h
+}
+
+/// Bounded cursor over a payload: every read is range-checked, so a
+/// hostile payload can only produce a typed error.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtocolError> {
+        if self.pos + n > self.buf.len() {
+            return Err(ProtocolError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtocolError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtocolError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtocolError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn string(&mut self) -> Result<String, ProtocolError> {
+        let len = self.u32()? as usize;
+        if len > MAX_PAYLOAD as usize {
+            return Err(ProtocolError::Malformed(format!("string length {len}")));
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| ProtocolError::Malformed("non-UTF-8 string".into()))
+    }
+
+    fn done(&self) -> Result<(), ProtocolError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(ProtocolError::Malformed(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+fn put_string(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+impl ProcMsg {
+    fn type_byte(&self) -> u8 {
+        match self {
+            ProcMsg::AssignShard(_) => TY_ASSIGN,
+            ProcMsg::ShardDone { .. } => TY_DONE,
+            ProcMsg::ShardFailed { .. } => TY_FAILED,
+            ProcMsg::Heartbeat { .. } => TY_HEARTBEAT,
+            ProcMsg::CalibrationReport { .. } => TY_CALIBRATION,
+            ProcMsg::Shutdown => TY_SHUTDOWN,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            ProcMsg::AssignShard(a) => {
+                for v in [a.frame_id, a.shard_id, a.bin0, a.nbins, a.row0, a.nrows, a.img_h, a.img_w]
+                {
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+                put_string(&mut p, &a.img_path);
+                put_string(&mut p, &a.out_path);
+            }
+            ProcMsg::ShardDone { frame_id, shard_id, kernel_time_us, checksum } => {
+                p.extend_from_slice(&frame_id.to_le_bytes());
+                p.extend_from_slice(&shard_id.to_le_bytes());
+                p.extend_from_slice(&kernel_time_us.to_le_bytes());
+                p.extend_from_slice(&checksum.to_le_bytes());
+            }
+            ProcMsg::ShardFailed { frame_id, shard_id, panicked, reason } => {
+                p.extend_from_slice(&frame_id.to_le_bytes());
+                p.extend_from_slice(&shard_id.to_le_bytes());
+                p.push(u8::from(*panicked));
+                put_string(&mut p, reason);
+            }
+            ProcMsg::Heartbeat { seq } => p.extend_from_slice(&seq.to_le_bytes()),
+            ProcMsg::CalibrationReport { snapshot } => {
+                p.extend_from_slice(&snapshot.memcpy_bps.to_bits().to_le_bytes());
+                for t in snapshot.tile_throughput.iter().chain(snapshot.tile_throughput_tuned.iter())
+                {
+                    p.extend_from_slice(&t.to_bits().to_le_bytes());
+                }
+                p.extend_from_slice(&snapshot.dispatch_overhead_s.to_bits().to_le_bytes());
+                p.extend_from_slice(&snapshot.spill_read_latency_s.to_bits().to_le_bytes());
+                p.extend_from_slice(&snapshot.spill_read_bps.to_bits().to_le_bytes());
+                p.extend_from_slice(&snapshot.samples.to_le_bytes());
+            }
+            ProcMsg::Shutdown => {}
+        }
+        p
+    }
+
+    /// Encode one complete frame (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.payload();
+        debug_assert!(payload.len() <= MAX_PAYLOAD as usize);
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&PROTOCOL_MAGIC.to_le_bytes());
+        out.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+        out.push(self.type_byte());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Decode one frame from `buf`, returning the message and the
+    /// bytes consumed.  Total: every failure is a typed error.
+    pub fn decode(buf: &[u8]) -> Result<(ProcMsg, usize), ProtocolError> {
+        if buf.len() < HEADER_LEN {
+            return Err(ProtocolError::Truncated);
+        }
+        let magic = u16::from_le_bytes([buf[0], buf[1]]);
+        if magic != PROTOCOL_MAGIC {
+            return Err(ProtocolError::BadMagic { got: magic });
+        }
+        let version = u16::from_le_bytes([buf[2], buf[3]]);
+        if version != PROTOCOL_VERSION {
+            return Err(ProtocolError::VersionMismatch { got: version });
+        }
+        let ty = buf[4];
+        let len = u32::from_le_bytes([buf[5], buf[6], buf[7], buf[8]]);
+        if len > MAX_PAYLOAD {
+            return Err(ProtocolError::Oversized { len });
+        }
+        let len = len as usize;
+        if buf.len() < HEADER_LEN + len {
+            return Err(ProtocolError::Truncated);
+        }
+        let msg = Self::decode_payload(ty, &buf[HEADER_LEN..HEADER_LEN + len])?;
+        Ok((msg, HEADER_LEN + len))
+    }
+
+    fn decode_payload(ty: u8, payload: &[u8]) -> Result<ProcMsg, ProtocolError> {
+        let mut c = Cursor { buf: payload, pos: 0 };
+        let msg = match ty {
+            TY_ASSIGN => {
+                let frame_id = c.u64()?;
+                let shard_id = c.u64()?;
+                let bin0 = c.u64()?;
+                let nbins = c.u64()?;
+                let row0 = c.u64()?;
+                let nrows = c.u64()?;
+                let img_h = c.u64()?;
+                let img_w = c.u64()?;
+                let img_path = c.string()?;
+                let out_path = c.string()?;
+                if nbins == 0 || nrows == 0 || img_h == 0 || img_w == 0 {
+                    return Err(ProtocolError::Malformed("degenerate shard geometry".into()));
+                }
+                if row0 + nrows > img_h {
+                    return Err(ProtocolError::Malformed("shard strip past image".into()));
+                }
+                ProcMsg::AssignShard(WireAssign {
+                    frame_id,
+                    shard_id,
+                    bin0,
+                    nbins,
+                    row0,
+                    nrows,
+                    img_h,
+                    img_w,
+                    img_path,
+                    out_path,
+                })
+            }
+            TY_DONE => ProcMsg::ShardDone {
+                frame_id: c.u64()?,
+                shard_id: c.u64()?,
+                kernel_time_us: c.u64()?,
+                checksum: c.u32()?,
+            },
+            TY_FAILED => {
+                let frame_id = c.u64()?;
+                let shard_id = c.u64()?;
+                let panicked = match c.take(1)?[0] {
+                    0 => false,
+                    1 => true,
+                    other => {
+                        return Err(ProtocolError::Malformed(format!("bool byte {other}")));
+                    }
+                };
+                let reason = c.string()?;
+                ProcMsg::ShardFailed { frame_id, shard_id, panicked, reason }
+            }
+            TY_HEARTBEAT => ProcMsg::Heartbeat { seq: c.u64()? },
+            TY_CALIBRATION => {
+                let memcpy_bps = c.f64()?;
+                let mut tile_throughput = [0.0f64; 4];
+                for t in tile_throughput.iter_mut() {
+                    *t = c.f64()?;
+                }
+                let mut tile_throughput_tuned = [0.0f64; 4];
+                for t in tile_throughput_tuned.iter_mut() {
+                    *t = c.f64()?;
+                }
+                let dispatch_overhead_s = c.f64()?;
+                let spill_read_latency_s = c.f64()?;
+                let spill_read_bps = c.f64()?;
+                let samples = c.u64()?;
+                ProcMsg::CalibrationReport {
+                    snapshot: CostSnapshot {
+                        memcpy_bps,
+                        tile_throughput,
+                        tile_throughput_tuned,
+                        dispatch_overhead_s,
+                        spill_read_latency_s,
+                        spill_read_bps,
+                        samples,
+                    },
+                }
+            }
+            TY_SHUTDOWN => ProcMsg::Shutdown,
+            other => return Err(ProtocolError::UnknownType { ty: other }),
+        };
+        c.done()?;
+        Ok(msg)
+    }
+
+    /// Write one frame to a pipe (single `write_all` — callers holding
+    /// a shared stdout lock get whole-frame atomicity from the lock,
+    /// not from the OS).
+    pub fn write_to(&self, w: &mut impl Write) -> Result<(), ProtocolError> {
+        w.write_all(&self.encode())?;
+        Ok(())
+    }
+
+    /// Read one frame from a pipe.  `Ok(None)` is a *clean* EOF — the
+    /// peer closed between frames; EOF inside a frame is
+    /// [`ProtocolError::Truncated`].
+    pub fn read_from(r: &mut impl Read) -> Result<Option<ProcMsg>, ProtocolError> {
+        let mut header = [0u8; HEADER_LEN];
+        let mut got = 0usize;
+        while got < HEADER_LEN {
+            match r.read(&mut header[got..]) {
+                Ok(0) if got == 0 => return Ok(None),
+                Ok(0) => return Err(ProtocolError::Truncated),
+                Ok(n) => got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let magic = u16::from_le_bytes([header[0], header[1]]);
+        if magic != PROTOCOL_MAGIC {
+            return Err(ProtocolError::BadMagic { got: magic });
+        }
+        let version = u16::from_le_bytes([header[2], header[3]]);
+        if version != PROTOCOL_VERSION {
+            return Err(ProtocolError::VersionMismatch { got: version });
+        }
+        let ty = header[4];
+        let len = u32::from_le_bytes([header[5], header[6], header[7], header[8]]);
+        if len > MAX_PAYLOAD {
+            return Err(ProtocolError::Oversized { len });
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload)?;
+        Self::decode_payload(ty, &payload).map(Some)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::pcie::Card;
+    use crate::util::prng::Xoshiro256;
+
+    fn samples() -> Vec<ProcMsg> {
+        vec![
+            ProcMsg::AssignShard(WireAssign {
+                frame_id: 7,
+                shard_id: 3,
+                bin0: 8,
+                nbins: 4,
+                row0: 16,
+                nrows: 10,
+                img_h: 64,
+                img_w: 48,
+                img_path: "/tmp/img.bin".into(),
+                out_path: "/tmp/out-7-3.bin".into(),
+            }),
+            ProcMsg::ShardDone { frame_id: 7, shard_id: 3, kernel_time_us: 1234, checksum: 0xDEAD },
+            ProcMsg::ShardFailed {
+                frame_id: 7,
+                shard_id: 3,
+                panicked: true,
+                reason: "injected".into(),
+            },
+            ProcMsg::Heartbeat { seq: 42 },
+            ProcMsg::CalibrationReport { snapshot: CostSnapshot::static_prior(Card::Gtx480) },
+            ProcMsg::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn every_message_roundtrips_bit_identical() {
+        for msg in samples() {
+            let bytes = msg.encode();
+            let (back, used) = ProcMsg::decode(&bytes).expect("decode");
+            assert_eq!(back, msg);
+            assert_eq!(used, bytes.len(), "whole frame consumed");
+            // Stream API agrees with the slice API.
+            let mut r = &bytes[..];
+            assert_eq!(ProcMsg::read_from(&mut r).expect("read"), Some(msg));
+            assert_eq!(ProcMsg::read_from(&mut r).expect("eof"), None, "clean EOF after frame");
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_stream() {
+        let mut stream = Vec::new();
+        for m in samples() {
+            stream.extend_from_slice(&m.encode());
+        }
+        let mut r = &stream[..];
+        for want in samples() {
+            assert_eq!(ProcMsg::read_from(&mut r).expect("read"), Some(want));
+        }
+        assert_eq!(ProcMsg::read_from(&mut r).expect("eof"), None);
+    }
+
+    #[test]
+    fn every_truncation_point_errors_typed() {
+        for msg in samples() {
+            let bytes = msg.encode();
+            for cut in 0..bytes.len() {
+                let err = ProcMsg::decode(&bytes[..cut]).expect_err("truncated must fail");
+                assert!(
+                    matches!(err, ProtocolError::Truncated | ProtocolError::Malformed(_)),
+                    "cut at {cut}: {err:?}"
+                );
+                if cut > 0 {
+                    let mut r = &bytes[..cut];
+                    assert!(ProcMsg::read_from(&mut r).is_err(), "mid-frame EOF at {cut}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_type_and_length_are_rejected() {
+        let good = ProcMsg::Heartbeat { seq: 1 }.encode();
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(ProcMsg::decode(&bad), Err(ProtocolError::BadMagic { .. })));
+        let mut bad = good.clone();
+        bad[2] = 99;
+        assert!(matches!(
+            ProcMsg::decode(&bad),
+            Err(ProtocolError::VersionMismatch { got: 99 })
+        ));
+        let mut bad = good.clone();
+        bad[4] = 200;
+        assert!(matches!(ProcMsg::decode(&bad), Err(ProtocolError::UnknownType { ty: 200 })));
+        let mut bad = good.clone();
+        bad[5..9].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(ProcMsg::decode(&bad), Err(ProtocolError::Oversized { .. })));
+        // Trailing payload bytes are malformed, not silently ignored.
+        let mut bad = good;
+        bad[5..9].copy_from_slice(&9u32.to_le_bytes());
+        bad.extend_from_slice(&[0u8; 1]);
+        assert!(matches!(ProcMsg::decode(&bad), Err(ProtocolError::Malformed(_))));
+    }
+
+    #[test]
+    fn degenerate_assignments_are_rejected() {
+        let mut a = WireAssign {
+            frame_id: 1,
+            shard_id: 0,
+            bin0: 0,
+            nbins: 0, // degenerate
+            row0: 0,
+            nrows: 4,
+            img_h: 8,
+            img_w: 8,
+            img_path: "x".into(),
+            out_path: "y".into(),
+        };
+        let bytes = ProcMsg::AssignShard(a.clone()).encode();
+        assert!(matches!(ProcMsg::decode(&bytes), Err(ProtocolError::Malformed(_))));
+        a.nbins = 2;
+        a.row0 = 6;
+        a.nrows = 4; // past the image
+        let bytes = ProcMsg::AssignShard(a).encode();
+        assert!(matches!(ProcMsg::decode(&bytes), Err(ProtocolError::Malformed(_))));
+    }
+
+    #[test]
+    fn random_bytes_never_panic_the_decoder() {
+        let mut rng = Xoshiro256::new(0xF00D);
+        for trial in 0..500 {
+            let len = rng.range(0, 64);
+            let mut buf = vec![0u8; len];
+            for b in buf.iter_mut() {
+                *b = rng.range(0, 256) as u8;
+            }
+            // Half the trials get a valid header prefix so the fuzz
+            // reaches the payload decoders too.
+            if trial % 2 == 0 && buf.len() >= HEADER_LEN {
+                buf[0..2].copy_from_slice(&PROTOCOL_MAGIC.to_le_bytes());
+                buf[2..4].copy_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+                buf[4] = (rng.range(0, 8) + 1) as u8;
+                let plen = (buf.len() - HEADER_LEN) as u32;
+                buf[5..9].copy_from_slice(&plen.to_le_bytes());
+            }
+            let _ = ProcMsg::decode(&buf); // must return, never panic
+            let mut r = &buf[..];
+            let _ = ProcMsg::read_from(&mut r);
+        }
+    }
+
+    #[test]
+    fn checksum_is_stable_and_bit_sensitive() {
+        let data = [1.0f32, 2.0, 3.5, -0.0];
+        let a = checksum_f32(&data);
+        assert_eq!(a, checksum_f32(&data), "deterministic");
+        let mut flipped = data;
+        flipped[2] = 3.5000002; // one mantissa step
+        assert_ne!(a, checksum_f32(&flipped));
+        // Mirrors the Python pre-validation constant.
+        assert_eq!(checksum_f32(&[]), 0x811C_9DC5);
+    }
+}

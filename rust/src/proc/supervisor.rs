@@ -1,0 +1,1039 @@
+//! Parent side of the proc plane: a supervised pool of `proc-worker`
+//! child processes behind the unchanged [`FrameTicket`] API.
+//!
+//! The in-process `ShardExecutor` contains *panics* with
+//! `catch_unwind`; it cannot contain aborts, OOM kills or a stray
+//! SIGKILL — those take the whole server with them.  This supervisor
+//! moves shard compute behind a process boundary and supervises it
+//! with the same bounded ladder the thread pool uses:
+//!
+//! * **death detection** — pipe EOF is the primary signal (closed the
+//!   instant the child dies, however it dies), `try_wait` reaps the
+//!   exit status, and a heartbeat age guard catches the
+//!   hung-but-alive case;
+//! * **replace + requeue** — a dead child is respawned and every shard
+//!   it had in flight goes back on the queue with its attempt count
+//!   bumped; a shard that exhausts
+//!   [`ProcPoolConfig::max_attempts`] fails its frame typed through
+//!   [`ShardError`], never silently;
+//! * **unchanged contract** — tickets come from
+//!   `FrameTicket::external`, so reassembly, deadlines, spilling and
+//!   the bit-identity guarantee are byte-for-byte the in-process code
+//!   paths.
+//!
+//! Dispatch honors the per-node placement computed from child
+//! [`CalibrationReport`](crate::proc::protocol::ProcMsg)s (see
+//! [`crate::proc::placement`]) as a *soft* affinity: a dead or
+//! saturated preferred node falls back to the least-loaded live one —
+//! placement is an optimization, supervision is the invariant.
+//!
+//! Chaos hooks: [`ProcSupervisor::kill_worker`] SIGKILLs a child on
+//! demand, and a wired [`FaultInjector`] consults
+//! [`FaultSite::WorkerAbort`] per dispatch — when it fires, the chosen
+//! child is killed *for real* (`tests/fault_property.rs`).
+
+use crate::fault::{FaultAction, FaultInjector, FaultSite};
+use crate::histogram::types::BinnedImage;
+use crate::proc::protocol::{checksum_f32, ProcMsg, WireAssign};
+use crate::shard::executor::{Shared, ShardMsg};
+use crate::shard::{
+    FrameTicket, ResidentGauge, ShardError, ShardPlan, ShardSpec, TaggedShard, TensorStore,
+};
+use crate::tune::CostSnapshot;
+use crate::util::sync::lock_recover;
+use anyhow::{anyhow, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Process-pool knobs.
+#[derive(Debug, Clone)]
+pub struct ProcPoolConfig {
+    /// Child processes (the per-NUMA-node analog of device count).
+    pub workers: usize,
+    /// `ScanEngine` thread budget inside each child.
+    pub engine_workers: usize,
+    /// Attempts per shard across all children before its frame fails
+    /// typed (a child death burns one attempt for each shard it held).
+    pub max_attempts: usize,
+    /// Shards one child may hold concurrently (1 computing + queue).
+    pub per_child_inflight: usize,
+    /// Completed-shard backpressure depth per frame
+    /// (0 ⇒ `workers × per_child_inflight + 1`).
+    pub channel_depth: usize,
+    /// Child heartbeat interval.
+    pub heartbeat: Duration,
+    /// Silence longer than this marks a child hung: it is killed and
+    /// replaced like any other death.
+    pub heartbeat_timeout: Duration,
+    /// Children run the `Calibrator` microbench at startup (slower
+    /// boot, measured placement); off reports the static prior.
+    pub calibrate_children: bool,
+    /// Explicit `proc-worker` binary; `None` ⇒ `INTHIST_PROC_WORKER`
+    /// env var, then a sibling of the current executable.
+    pub worker_bin: Option<PathBuf>,
+    /// Directory for the data-plane spill files (`None` ⇒ temp dir).
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl Default for ProcPoolConfig {
+    fn default() -> ProcPoolConfig {
+        ProcPoolConfig {
+            workers: 2,
+            engine_workers: 1,
+            max_attempts: 3,
+            per_child_inflight: 2,
+            channel_depth: 0,
+            heartbeat: Duration::from_millis(200),
+            heartbeat_timeout: Duration::from_secs(5),
+            calibrate_children: false,
+            worker_bin: None,
+            spill_dir: None,
+        }
+    }
+}
+
+/// Locate the `proc-worker` binary: explicit config path, then the
+/// `INTHIST_PROC_WORKER` env var, then a sibling of the current
+/// executable (popping a `deps/` segment for cargo test layouts).
+pub fn resolve_worker_bin(explicit: Option<&Path>) -> Result<PathBuf> {
+    if let Some(p) = explicit {
+        if p.exists() {
+            return Ok(p.to_path_buf());
+        }
+        return Err(anyhow!("worker binary {} does not exist", p.display()));
+    }
+    if let Ok(p) = std::env::var("INTHIST_PROC_WORKER") {
+        let p = PathBuf::from(p);
+        if p.exists() {
+            return Ok(p);
+        }
+        return Err(anyhow!("INTHIST_PROC_WORKER={} does not exist", p.display()));
+    }
+    let exe = std::env::current_exe().context("locate current executable")?;
+    let mut dir = exe.parent().map(Path::to_path_buf).unwrap_or_default();
+    if dir.file_name().map(|n| n == "deps").unwrap_or(false) {
+        dir.pop();
+    }
+    for name in ["proc-worker", "proc-worker.exe"] {
+        let cand = dir.join(name);
+        if cand.exists() {
+            return Ok(cand);
+        }
+    }
+    Err(anyhow!(
+        "proc-worker binary not found near {} — set INTHIST_PROC_WORKER or \
+         ProcPoolConfig::worker_bin",
+        dir.display()
+    ))
+}
+
+/// Supervisor observability snapshot.
+#[derive(Debug, Clone)]
+pub struct ProcStats {
+    /// Configured child count.
+    pub workers: usize,
+    /// Children currently alive.
+    pub workers_alive: usize,
+    /// Children respawned after a death (any cause).
+    pub respawns: usize,
+    /// Assignments written to children.
+    pub dispatched: usize,
+    /// Shards materialized and delivered to tickets.
+    pub completed: usize,
+    /// Shards put back on the queue after a failed attempt or death.
+    pub requeued: usize,
+    /// Shards that exhausted their attempt budget (typed error sent).
+    pub shard_failures: usize,
+    /// Cross-process payloads whose checksum did not verify (each one
+    /// a failed attempt, never served).
+    pub checksum_failures: usize,
+    /// Shards dropped pre-dispatch on an expired frame deadline.
+    pub skipped_deadline: usize,
+    /// Heartbeats observed across all children.
+    pub heartbeats: usize,
+    /// Children that have reported a calibration snapshot.
+    pub calibrated_nodes: usize,
+}
+
+#[derive(Default)]
+struct Counters {
+    alive: AtomicUsize,
+    respawns: AtomicUsize,
+    dispatched: AtomicUsize,
+    completed: AtomicUsize,
+    requeued: AtomicUsize,
+    shard_failures: AtomicUsize,
+    checksum_failures: AtomicUsize,
+    skipped_deadline: AtomicUsize,
+    heartbeats: AtomicUsize,
+}
+
+enum Event {
+    Msg { node: usize, gen: u64, msg: ProcMsg },
+    Eof { node: usize, gen: u64 },
+    Submit(FrameJob),
+    Kill(usize),
+    Shutdown,
+}
+
+struct FrameJob {
+    frame_id: u64,
+    img_h: usize,
+    w: usize,
+    img_path: PathBuf,
+    shards: Vec<ShardSpec>,
+    assignment: Option<Vec<usize>>,
+    out: mpsc::SyncSender<ShardMsg>,
+    gauge: Arc<ResidentGauge>,
+    expires: Option<Instant>,
+    deadline: Duration,
+}
+
+struct FrameState {
+    img_h: usize,
+    w: usize,
+    img_path: PathBuf,
+    out: mpsc::SyncSender<ShardMsg>,
+    gauge: Arc<ResidentGauge>,
+    expires: Option<Instant>,
+    deadline: Duration,
+    expected: usize,
+    /// Shards not yet retired (completed, failed, skipped or dropped);
+    /// at zero the frame's image spill file is deleted.
+    outstanding: usize,
+    /// A typed error was already delivered; remaining shards retire
+    /// silently.
+    failed: bool,
+}
+
+struct Task {
+    frame_id: u64,
+    spec: ShardSpec,
+    attempts: usize,
+    preferred: Option<usize>,
+    out_path: PathBuf,
+}
+
+struct Slot {
+    child: Child,
+    stdin: ChildStdin,
+    gen: u64,
+    alive: bool,
+    last_seen: Instant,
+    inflight: HashMap<(u64, u64), Task>,
+    reader: Option<JoinHandle<()>>,
+}
+
+fn reader_loop(node: usize, gen: u64, mut stdout: ChildStdout, tx: mpsc::Sender<Event>) {
+    loop {
+        match ProcMsg::read_from(&mut stdout) {
+            Ok(Some(msg)) => {
+                if tx.send(Event::Msg { node, gen, msg }).is_err() {
+                    return; // dispatcher gone
+                }
+            }
+            Ok(None) | Err(_) => {
+                // Clean EOF and a torn frame look the same from here:
+                // the child is no longer speaking the protocol.
+                let _ = tx.send(Event::Eof { node, gen });
+                return;
+            }
+        }
+    }
+}
+
+fn spawn_child(
+    cfg: &ProcPoolConfig,
+    bin: &Path,
+    node: usize,
+    gen: u64,
+    evt_tx: &mpsc::Sender<Event>,
+) -> Result<Slot> {
+    let mut child = Command::new(bin)
+        .arg("--calibrate")
+        .arg(if cfg.calibrate_children { "1" } else { "0" })
+        .arg("--engine-workers")
+        .arg(cfg.engine_workers.max(1).to_string())
+        .arg("--heartbeat-ms")
+        .arg(cfg.heartbeat.as_millis().max(1).to_string())
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .with_context(|| format!("spawn proc worker {node} from {}", bin.display()))?;
+    let stdin = child.stdin.take().expect("piped stdin");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let tx = evt_tx.clone();
+    let reader = std::thread::Builder::new()
+        .name(format!("inthist-proc-reader-{node}"))
+        .spawn(move || reader_loop(node, gen, stdout, tx))
+        .context("spawn reader thread")?;
+    Ok(Slot {
+        child,
+        stdin,
+        gen,
+        alive: true,
+        last_seen: Instant::now(),
+        inflight: HashMap::new(),
+        reader: Some(reader),
+    })
+}
+
+struct Dispatcher {
+    cfg: ProcPoolConfig,
+    bin: PathBuf,
+    rx: mpsc::Receiver<Event>,
+    evt_tx: mpsc::Sender<Event>,
+    slots: Vec<Slot>,
+    next_gen: u64,
+    pending: VecDeque<Task>,
+    frames: HashMap<u64, FrameState>,
+    shared: Arc<Shared>,
+    counters: Arc<Counters>,
+    snapshots: Arc<Mutex<Vec<Option<CostSnapshot>>>>,
+    faults: Option<Arc<FaultInjector>>,
+    spill_dir: PathBuf,
+    shutting_down: bool,
+}
+
+impl Dispatcher {
+    fn run(mut self) {
+        loop {
+            match self.rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(ev) => self.handle(ev),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            while let Ok(ev) = self.rx.try_recv() {
+                self.handle(ev);
+            }
+            self.check_children();
+            self.pump();
+            if self.shutting_down && self.frames.is_empty() && self.pending.is_empty() {
+                break;
+            }
+        }
+        self.shutdown_children();
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::Submit(job) => self.admit(job),
+            Event::Kill(node) => {
+                if let Some(slot) = self.slots.get_mut(node) {
+                    if slot.alive {
+                        let _ = slot.child.kill(); // death lands as Eof
+                    }
+                }
+            }
+            Event::Shutdown => self.shutting_down = true,
+            Event::Eof { node, gen } => {
+                if self.slots[node].gen == gen {
+                    self.child_died(node, "pipe closed");
+                }
+            }
+            Event::Msg { node, gen, msg } => {
+                if self.slots[node].gen != gen {
+                    return; // stale reader of a replaced child
+                }
+                self.slots[node].last_seen = Instant::now();
+                match msg {
+                    ProcMsg::Heartbeat { .. } => {
+                        self.counters.heartbeats.fetch_add(1, Ordering::Relaxed);
+                    }
+                    ProcMsg::CalibrationReport { snapshot } => {
+                        lock_recover(&self.snapshots)[node] = Some(snapshot);
+                    }
+                    ProcMsg::ShardDone { frame_id, shard_id, kernel_time_us, checksum } => {
+                        self.on_done(node, frame_id, shard_id, kernel_time_us, checksum);
+                    }
+                    ProcMsg::ShardFailed { frame_id, shard_id, panicked, reason } => {
+                        if let Some(task) = self.slots[node].inflight.remove(&(frame_id, shard_id))
+                        {
+                            std::fs::remove_file(&task.out_path).ok();
+                            self.retry_or_fail(node, task, panicked, reason);
+                        }
+                    }
+                    // Parent-bound only; a child echoing parent
+                    // messages is confused but not fatal.
+                    ProcMsg::AssignShard(_) | ProcMsg::Shutdown => {}
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, job: FrameJob) {
+        let n = job.shards.len();
+        self.frames.insert(
+            job.frame_id,
+            FrameState {
+                img_h: job.img_h,
+                w: job.w,
+                img_path: job.img_path,
+                out: job.out,
+                gauge: job.gauge,
+                expires: job.expires,
+                deadline: job.deadline,
+                expected: n,
+                outstanding: n,
+                failed: false,
+            },
+        );
+        for (i, spec) in job.shards.iter().enumerate() {
+            let preferred = job.assignment.as_ref().and_then(|a| a.get(i).copied());
+            self.pending.push_back(Task {
+                frame_id: job.frame_id,
+                spec: *spec,
+                attempts: 0,
+                preferred,
+                out_path: PathBuf::new(), // named at dispatch
+            });
+        }
+    }
+
+    /// Retire one shard of `frame_id`; at zero outstanding the frame's
+    /// image spill file goes away.
+    fn retire(&mut self, frame_id: u64) {
+        let done = match self.frames.get_mut(&frame_id) {
+            Some(f) => {
+                f.outstanding = f.outstanding.saturating_sub(1);
+                f.outstanding == 0
+            }
+            None => false,
+        };
+        if done {
+            if let Some(f) = self.frames.remove(&frame_id) {
+                std::fs::remove_file(&f.img_path).ok();
+            }
+        }
+    }
+
+    /// Deliver a typed error for the frame (first one wins) and mark
+    /// it failed so the rest of its shards retire silently.
+    fn fail_frame(&mut self, frame_id: u64, err: ShardError) {
+        if let Some(f) = self.frames.get_mut(&frame_id) {
+            if !f.failed {
+                f.failed = true;
+                let _ = f.out.send(Err(err));
+            }
+        }
+    }
+
+    fn retry_or_fail(&mut self, node: usize, mut task: Task, panicked: bool, reason: String) {
+        task.attempts += 1;
+        if task.attempts >= self.cfg.max_attempts.max(1) {
+            self.counters.shard_failures.fetch_add(1, Ordering::Relaxed);
+            self.shared.note_job(node);
+            let err = if panicked {
+                ShardError::ComputePanicked {
+                    frame_id: task.frame_id,
+                    shard_id: task.spec.shard_id,
+                    attempts: task.attempts,
+                }
+            } else {
+                ShardError::ComputeFailed {
+                    frame_id: task.frame_id,
+                    shard_id: task.spec.shard_id,
+                    attempts: task.attempts,
+                    reason,
+                }
+            };
+            self.fail_frame(task.frame_id, err);
+            self.retire(task.frame_id);
+        } else {
+            self.counters.requeued.fetch_add(1, Ordering::Relaxed);
+            self.pending.push_back(task);
+        }
+    }
+
+    fn on_done(&mut self, node: usize, frame_id: u64, shard_id: u64, kernel_us: u64, sum: u32) {
+        let task = match self.slots[node].inflight.remove(&(frame_id, shard_id)) {
+            Some(t) => t,
+            None => return, // stale (e.g. answer raced a requeue)
+        };
+        let (failed, w) = match self.frames.get(&frame_id) {
+            Some(f) => (f.failed, f.w),
+            None => {
+                std::fs::remove_file(&task.out_path).ok();
+                return;
+            }
+        };
+        if failed {
+            std::fs::remove_file(&task.out_path).ok();
+            self.retire(frame_id);
+            return;
+        }
+        let spec = task.spec;
+        // Materialize the child's partial from the data plane and
+        // verify the protocol checksum over exactly the bytes read —
+        // the cross-process analog of the store's in-RAM row sums.
+        let materialized = (|| -> Result<crate::histogram::types::IntegralHistogram> {
+            let store = TensorStore::open(&task.out_path, spec.nbins, spec.nrows, w)?;
+            let mut partial = self.shared.acquire_partial(spec.nbins, spec.nrows, w);
+            let plane = spec.nrows * w;
+            for b in 0..spec.nbins {
+                if let Err(e) =
+                    store.read_rows(b, 0, spec.nrows, &mut partial.data[b * plane..(b + 1) * plane])
+                {
+                    self.shared.release_partial(partial);
+                    return Err(e);
+                }
+            }
+            if checksum_f32(&partial.data) != sum {
+                self.shared.release_partial(partial);
+                return Err(anyhow!("payload checksum mismatch"));
+            }
+            Ok(partial)
+        })();
+        std::fs::remove_file(&task.out_path).ok();
+        match materialized {
+            Ok(partial) => {
+                self.counters.completed.fetch_add(1, Ordering::Relaxed);
+                self.shared.note_job(node);
+                let charged = spec.nbytes(w);
+                let (gauge, out) = {
+                    let f = self.frames.get(&frame_id).expect("frame checked above");
+                    (Arc::clone(&f.gauge), f.out.clone())
+                };
+                gauge.add(charged);
+                let tagged = TaggedShard {
+                    frame_id,
+                    spec,
+                    partial,
+                    worker: node,
+                    kernel_time: Duration::from_micros(kernel_us),
+                };
+                if let Err(e) = out.send(Ok(tagged)) {
+                    // Ticket dropped before reassembly: recycle.
+                    if let Ok(t) = e.0 {
+                        self.shared.release_partial(t.partial);
+                        gauge.sub(charged);
+                    }
+                }
+                self.retire(frame_id);
+            }
+            Err(e) => {
+                self.counters.checksum_failures.fetch_add(1, Ordering::Relaxed);
+                self.retry_or_fail(node, task, false, format!("materialize partial: {e:#}"));
+            }
+        }
+    }
+
+    fn child_died(&mut self, node: usize, why: &str) {
+        if !self.slots[node].alive {
+            return;
+        }
+        self.slots[node].alive = false;
+        let _ = self.slots[node].child.kill();
+        let _ = self.slots[node].child.wait(); // reap
+        if let Some(r) = self.slots[node].reader.take() {
+            let _ = r.join();
+        }
+        lock_recover(&self.snapshots)[node] = None;
+        // Every shard the child held burns one attempt and requeues —
+        // the survival path for aborts and OOM kills, not just panics.
+        let inflight: Vec<Task> =
+            self.slots[node].inflight.drain().map(|(_, t)| t).collect();
+        for task in inflight {
+            std::fs::remove_file(&task.out_path).ok();
+            self.retry_or_fail(node, task, false, format!("worker process died: {why}"));
+        }
+        // Replace the child (unless we are draining for shutdown).
+        if !self.shutting_down {
+            let gen = self.next_gen;
+            self.next_gen += 1;
+            match spawn_child(&self.cfg, &self.bin, node, gen, &self.evt_tx) {
+                Ok(slot) => {
+                    self.slots[node] = slot;
+                    self.counters.respawns.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    // Spawn failed; the slot stays dead.  pump() fails
+                    // frames typed if the whole pool is gone.
+                }
+            }
+        }
+        let alive = self.slots.iter().filter(|s| s.alive).count();
+        self.counters.alive.store(alive, Ordering::Relaxed);
+    }
+
+    fn check_children(&mut self) {
+        for node in 0..self.slots.len() {
+            if !self.slots[node].alive {
+                continue;
+            }
+            if let Ok(Some(_status)) = self.slots[node].child.try_wait() {
+                self.child_died(node, "process exited");
+                continue;
+            }
+            if self.slots[node].last_seen.elapsed() > self.cfg.heartbeat_timeout {
+                let _ = self.slots[node].child.kill();
+                self.child_died(node, "heartbeat timeout");
+            }
+        }
+    }
+
+    fn pump(&mut self) {
+        let cap = self.cfg.per_child_inflight.max(1);
+        let mut tries = self.pending.len();
+        while tries > 0 {
+            tries -= 1;
+            let mut task = match self.pending.pop_front() {
+                Some(t) => t,
+                None => return,
+            };
+            let frame_id = task.frame_id;
+            let (frame_failed, expires, deadline, expected, img_h, w, img_path) =
+                match self.frames.get(&frame_id) {
+                    Some(f) => (
+                        f.failed,
+                        f.expires,
+                        f.deadline,
+                        f.expected,
+                        f.img_h,
+                        f.w,
+                        f.img_path.clone(),
+                    ),
+                    None => continue, // frame already gone
+                };
+            if frame_failed {
+                self.retire(frame_id);
+                continue;
+            }
+            // Deadline-aware scheduling, proc flavor: expired frames
+            // never reach a child.
+            if let Some(exp) = expires {
+                if Instant::now() >= exp {
+                    self.counters.skipped_deadline.fetch_add(1, Ordering::Relaxed);
+                    self.shared.note_skipped_deadline();
+                    self.fail_frame(
+                        frame_id,
+                        ShardError::DeadlineExceeded {
+                            frame_id,
+                            deadline,
+                            completed: 0,
+                            expected,
+                        },
+                    );
+                    self.retire(frame_id);
+                    continue;
+                }
+            }
+            // Soft placement: the calibrated node if it is alive and
+            // has a slot, else least-loaded alive node with capacity.
+            let chosen = {
+                let ok = |n: usize| {
+                    self.slots.get(n).map(|s| s.alive && s.inflight.len() < cap).unwrap_or(false)
+                };
+                match task.preferred.filter(|&n| ok(n)) {
+                    Some(n) => Some(n),
+                    None => self
+                        .slots
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| s.alive && s.inflight.len() < cap)
+                        .min_by_key(|(_, s)| s.inflight.len())
+                        .map(|(n, _)| n),
+                }
+            };
+            let node = match chosen {
+                Some(n) => n,
+                None => {
+                    if self.slots.iter().all(|s| !s.alive) {
+                        // Whole pool gone and irreplaceable: no hangs.
+                        self.fail_frame(frame_id, ShardError::WorkersGone { frame_id });
+                        self.retire(frame_id);
+                        continue;
+                    }
+                    self.pending.push_front(task);
+                    return; // all live children saturated; wait
+                }
+            };
+            // Chaos arm: the injected abort kills the chosen child for
+            // real — SIGKILL, not a catchable panic.  The task requeues
+            // through the normal death path.
+            if let Some(f) = &self.faults {
+                if f.decide(FaultSite::WorkerAbort) == Some(FaultAction::Abort) {
+                    let _ = self.slots[node].child.kill();
+                    self.pending.push_front(task);
+                    return;
+                }
+            }
+            task.out_path = self.spill_dir.join(format!(
+                "inthist-proc-{}-f{}-s{}-a{}.bin",
+                std::process::id(),
+                frame_id,
+                task.spec.shard_id,
+                task.attempts
+            ));
+            let assign = ProcMsg::AssignShard(WireAssign {
+                frame_id,
+                shard_id: task.spec.shard_id as u64,
+                bin0: task.spec.bin0 as u64,
+                nbins: task.spec.nbins as u64,
+                row0: task.spec.row0 as u64,
+                nrows: task.spec.nrows as u64,
+                img_h: img_h as u64,
+                img_w: w as u64,
+                img_path: img_path.to_string_lossy().into_owned(),
+                out_path: task.out_path.to_string_lossy().into_owned(),
+            });
+            let wrote = assign
+                .write_to(&mut self.slots[node].stdin)
+                .and_then(|()| self.slots[node].stdin.flush().map_err(Into::into));
+            match wrote {
+                Ok(()) => {
+                    self.counters.dispatched.fetch_add(1, Ordering::Relaxed);
+                    let key = (frame_id, task.spec.shard_id as u64);
+                    self.slots[node].inflight.insert(key, task);
+                }
+                Err(_) => {
+                    // Broken pipe: the child is dead; requeue through
+                    // the death path (which bumps no attempt for this
+                    // task — it never reached the child).
+                    self.pending.push_front(task);
+                    self.child_died(node, "write failed");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn shutdown_children(&mut self) {
+        for slot in self.slots.iter_mut() {
+            if slot.alive {
+                let _ = ProcMsg::Shutdown.write_to(&mut slot.stdin);
+                let _ = slot.stdin.flush();
+            }
+        }
+        let grace = Instant::now() + Duration::from_millis(500);
+        for slot in self.slots.iter_mut() {
+            loop {
+                match slot.child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < grace => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    _ => {
+                        let _ = slot.child.kill();
+                        let _ = slot.child.wait();
+                        break;
+                    }
+                }
+            }
+            if let Some(r) = slot.reader.take() {
+                let _ = r.join();
+            }
+        }
+        self.counters.alive.store(0, Ordering::Relaxed);
+        // Any stray data-plane files from frames that never retired.
+        for (_, f) in self.frames.drain() {
+            std::fs::remove_file(&f.img_path).ok();
+        }
+    }
+}
+
+/// The multi-process shard executor.  All methods take `&self`; submit
+/// from any number of threads.  See the module docs for the contract.
+pub struct ProcSupervisor {
+    cfg: ProcPoolConfig,
+    tx: Mutex<Option<mpsc::Sender<Event>>>,
+    dispatcher: Option<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    counters: Arc<Counters>,
+    snapshots: Arc<Mutex<Vec<Option<CostSnapshot>>>>,
+    frame_seq: AtomicU64,
+    spill_dir: PathBuf,
+}
+
+impl std::fmt::Debug for ProcSupervisor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProcSupervisor")
+            .field("workers", &self.cfg.workers)
+            .field("alive", &self.counters.alive.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl ProcSupervisor {
+    pub fn new(cfg: ProcPoolConfig) -> Result<ProcSupervisor> {
+        ProcSupervisor::with_faults(cfg, None)
+    }
+
+    /// Build a supervisor whose dispatch loop consults `faults` at the
+    /// [`FaultSite::WorkerAbort`] site (inert unless compiled with
+    /// `--features fault-injection`).
+    pub fn with_faults(
+        cfg: ProcPoolConfig,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Result<ProcSupervisor> {
+        let workers = cfg.workers.max(1);
+        let bin = resolve_worker_bin(cfg.worker_bin.as_deref())?;
+        let spill_dir = cfg.spill_dir.clone().unwrap_or_else(std::env::temp_dir);
+        let (evt_tx, evt_rx) = mpsc::channel::<Event>();
+        let mut slots = Vec::with_capacity(workers);
+        for node in 0..workers {
+            slots.push(spawn_child(&cfg, &bin, node, node as u64, &evt_tx)?);
+        }
+        let counters = Arc::new(Counters::default());
+        counters.alive.store(workers, Ordering::Relaxed);
+        let snapshots = Arc::new(Mutex::new(vec![None; workers]));
+        let shared = Shared::external(workers, cfg.max_attempts);
+        let dispatcher = Dispatcher {
+            cfg: ProcPoolConfig { workers, ..cfg.clone() },
+            bin,
+            rx: evt_rx,
+            evt_tx: evt_tx.clone(),
+            slots,
+            next_gen: workers as u64,
+            pending: VecDeque::new(),
+            frames: HashMap::new(),
+            shared: Arc::clone(&shared),
+            counters: Arc::clone(&counters),
+            snapshots: Arc::clone(&snapshots),
+            faults,
+            spill_dir: spill_dir.clone(),
+            shutting_down: false,
+        };
+        let handle = std::thread::Builder::new()
+            .name("inthist-proc-dispatcher".into())
+            .spawn(move || dispatcher.run())
+            .context("spawn dispatcher thread")?;
+        Ok(ProcSupervisor {
+            cfg,
+            tx: Mutex::new(Some(evt_tx)),
+            dispatcher: Some(handle),
+            shared,
+            counters,
+            snapshots,
+            frame_seq: AtomicU64::new(0),
+            spill_dir,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.cfg.workers.max(1)
+    }
+
+    pub fn config(&self) -> &ProcPoolConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> ProcStats {
+        let c = &self.counters;
+        ProcStats {
+            workers: self.workers(),
+            workers_alive: c.alive.load(Ordering::Relaxed),
+            respawns: c.respawns.load(Ordering::Relaxed),
+            dispatched: c.dispatched.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            requeued: c.requeued.load(Ordering::Relaxed),
+            shard_failures: c.shard_failures.load(Ordering::Relaxed),
+            checksum_failures: c.checksum_failures.load(Ordering::Relaxed),
+            skipped_deadline: c.skipped_deadline.load(Ordering::Relaxed),
+            heartbeats: c.heartbeats.load(Ordering::Relaxed),
+            calibrated_nodes: lock_recover(&self.snapshots).iter().filter(|s| s.is_some()).count(),
+        }
+    }
+
+    /// Per-node calibration snapshots as reported so far (`None` for a
+    /// node that has not reported since its last spawn).
+    pub fn snapshots(&self) -> Vec<Option<CostSnapshot>> {
+        lock_recover(&self.snapshots).clone()
+    }
+
+    /// Block until every node has reported a calibration snapshot or
+    /// `timeout` elapses; returns the number of calibrated nodes.
+    pub fn wait_calibrated(&self, timeout: Duration) -> usize {
+        let until = Instant::now() + timeout;
+        loop {
+            let n = lock_recover(&self.snapshots).iter().filter(|s| s.is_some()).count();
+            if n >= self.workers() || Instant::now() >= until {
+                return n;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// SIGKILL child `node` — the chaos/bench hook behind the respawn
+    /// ladder (the supervisor treats it exactly like an OOM kill).
+    pub fn kill_worker(&self, node: usize) -> Result<()> {
+        self.send_event(Event::Kill(node))
+    }
+
+    /// Submit every shard of `plan` against `image` (unbounded queue
+    /// deadline).  Non-blocking; drive the returned ticket exactly as
+    /// with the in-process executor.
+    pub fn submit(&self, image: &Arc<BinnedImage>, plan: &ShardPlan) -> Result<FrameTicket> {
+        self.submit_inner(image, plan, None, None)
+    }
+
+    /// [`Self::submit`] with the frame deadline pushed into the
+    /// dispatch queue (expired shards never reach a child).
+    pub fn submit_with_deadline(
+        &self,
+        image: &Arc<BinnedImage>,
+        plan: &ShardPlan,
+        deadline: Duration,
+    ) -> Result<FrameTicket> {
+        self.submit_inner(image, plan, Some(deadline), None)
+    }
+
+    /// [`Self::submit`] with a per-shard node assignment (from
+    /// [`crate::proc::placement`]) applied as soft affinity.
+    pub fn submit_assigned(
+        &self,
+        image: &Arc<BinnedImage>,
+        plan: &ShardPlan,
+        assignment: &[usize],
+    ) -> Result<FrameTicket> {
+        if assignment.len() != plan.shards.len() {
+            return Err(anyhow!(
+                "assignment covers {} shards, plan has {}",
+                assignment.len(),
+                plan.shards.len()
+            ));
+        }
+        self.submit_inner(image, plan, None, Some(assignment.to_vec()))
+    }
+
+    fn submit_inner(
+        &self,
+        image: &Arc<BinnedImage>,
+        plan: &ShardPlan,
+        deadline: Option<Duration>,
+        assignment: Option<Vec<usize>>,
+    ) -> Result<FrameTicket> {
+        if (image.h, image.w, image.bins) != (plan.h, plan.w, plan.bins) {
+            return Err(anyhow!(
+                "plan {}x{}x{} does not match image {}x{}x{}",
+                plan.bins,
+                plan.h,
+                plan.w,
+                image.bins,
+                image.h,
+                image.w
+            ));
+        }
+        let frame_id = self.frame_seq.fetch_add(1, Ordering::Relaxed);
+        // Data plane, inbound: spill the binned image once as f32 (bin
+        // indices are small integers — exact in f32) for all children
+        // to strip-read.
+        let img_path = self.spill_dir.join(format!(
+            "inthist-proc-{}-img-{}.bin",
+            std::process::id(),
+            frame_id
+        ));
+        let store = TensorStore::create(&img_path, 1, image.h, image.w)
+            .context("spill image for proc plane")?;
+        let chunk_rows = 256usize.max(1);
+        let mut row0 = 0usize;
+        let mut scratch: Vec<f32> = Vec::with_capacity(chunk_rows * image.w);
+        while row0 < image.h {
+            let nrows = chunk_rows.min(image.h - row0);
+            scratch.clear();
+            scratch.extend(
+                image.data[row0 * image.w..(row0 + nrows) * image.w].iter().map(|&v| v as f32),
+            );
+            store.write_rows(0, row0, &scratch).context("spill image rows")?;
+            row0 += nrows;
+        }
+        store.flush().context("flush spilled image")?;
+
+        let depth = if self.cfg.channel_depth == 0 {
+            self.workers() * self.cfg.per_child_inflight.max(1) + 1
+        } else {
+            self.cfg.channel_depth
+        };
+        let (out_tx, out_rx) = mpsc::sync_channel::<ShardMsg>(depth.max(1));
+        let gauge = Arc::new(ResidentGauge::default());
+        let job = FrameJob {
+            frame_id,
+            img_h: image.h,
+            w: image.w,
+            img_path: img_path.clone(),
+            shards: plan.shards.clone(),
+            assignment,
+            out: out_tx,
+            gauge: Arc::clone(&gauge),
+            expires: deadline.map(|d| Instant::now() + d),
+            deadline: deadline.unwrap_or(Duration::ZERO),
+        };
+        if let Err(e) = self.send_event(Event::Submit(job)) {
+            std::fs::remove_file(&img_path).ok();
+            return Err(e);
+        }
+        self.shared.note_submitted();
+        Ok(FrameTicket::external(frame_id, plan.clone(), out_rx, gauge, Arc::clone(&self.shared)))
+    }
+
+    fn send_event(&self, ev: Event) -> Result<()> {
+        let tx = {
+            let guard = lock_recover(&self.tx);
+            guard.as_ref().ok_or_else(|| anyhow!("supervisor already shut down"))?.clone()
+        };
+        tx.send(ev).map_err(|_| anyhow!("dispatcher exited"))
+    }
+
+    /// Drain, stop the children and join the dispatcher (also done on
+    /// drop).
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        let tx = lock_recover(&self.tx).take();
+        if let Some(tx) = tx {
+            let _ = tx.send(Event::Shutdown);
+        }
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ProcSupervisor {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Child-spawning coverage lives in `tests/proc_property.rs` (which
+    // cargo hands the built `proc-worker` path via CARGO_BIN_EXE_);
+    // unit tests here cover the pieces that need no subprocess.
+
+    #[test]
+    fn explicit_missing_worker_bin_errors_typed() {
+        let err = resolve_worker_bin(Some(Path::new("/nonexistent/proc-worker")))
+            .expect_err("missing binary must not resolve");
+        assert!(err.to_string().contains("does not exist"), "{err}");
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = ProcPoolConfig::default();
+        assert!(cfg.workers >= 1);
+        assert!(cfg.max_attempts >= 1);
+        assert!(cfg.per_child_inflight >= 1);
+        assert!(cfg.heartbeat < cfg.heartbeat_timeout);
+    }
+
+    #[test]
+    fn supervisor_with_missing_bin_fails_construction() {
+        let cfg = ProcPoolConfig {
+            worker_bin: Some(PathBuf::from("/nonexistent/proc-worker")),
+            ..Default::default()
+        };
+        assert!(ProcSupervisor::new(cfg).is_err());
+    }
+}

@@ -1,0 +1,313 @@
+//! Child-process side of the proc plane — the loop behind the
+//! `proc-worker` bin target.
+//!
+//! One worker process is deliberately boring: a single thread blocks
+//! on stdin decoding [`ProcMsg`] frames, executes each
+//! [`AssignShard`](ProcMsg::AssignShard) with a locally checked-out
+//! [`ScanEngine`], and answers on stdout.  Bulk data stays in
+//! [`TensorStore`] files: the image strip is *read* from the path the
+//! supervisor spilled, the partial tensor is *written* to the path the
+//! assignment names, and only paths + a payload checksum cross the
+//! pipe.  A heartbeat thread ticks on the shared stdout so the
+//! supervisor can tell a hung child from a busy one; calibration runs
+//! once at startup and is reported before the first assignment, which
+//! is what per-node placement feeds on.
+//!
+//! Compute runs under `catch_unwind` exactly like the in-process
+//! executor — a panic discards the engine and reports a typed
+//! [`ShardFailed`](ProcMsg::ShardFailed); the *supervisor* owns the
+//! retry budget, so the child never retries on its own.  Anything the
+//! child cannot survive (abort, OOM kill, SIGKILL) ends the process,
+//! which the supervisor observes as pipe EOF — that is the whole point
+//! of the process boundary.
+
+use crate::histogram::engine::ScanEngine;
+use crate::histogram::types::{BinnedImage, IntegralHistogram};
+use crate::proc::protocol::{checksum_f32, ProcMsg, WireAssign};
+use crate::shard::TensorStore;
+use crate::tune::Calibrator;
+use crate::util::sync::lock_recover;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Worker-side knobs (mirrored by the `proc-worker` CLI flags).
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Run the `Calibrator` startup microbench and report measured
+    /// numbers; off ⇒ report the static prior (fast startup for
+    /// tests).
+    pub calibrate: bool,
+    /// `ScanEngine` thread budget (the in-process executor's
+    /// `engine_workers` analog).
+    pub engine_workers: usize,
+    /// Heartbeat interval on stdout.
+    pub heartbeat: Duration,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> WorkerConfig {
+        WorkerConfig {
+            calibrate: true,
+            engine_workers: 1,
+            heartbeat: Duration::from_millis(200),
+        }
+    }
+}
+
+/// Execute one wire assignment against the spill-file data plane and
+/// produce the reply frame.  Pure with respect to the pipes (pulled
+/// out of [`run`] so tests can drive it in-process): reads
+/// `a.img_path`, writes `a.out_path`, returns `ShardDone` or a typed
+/// `ShardFailed`.  `engine` is a cache slot — a panicking compute
+/// discards the engine (its scheduler state is suspect), matching the
+/// in-process executor's discipline.
+pub fn execute_assign(
+    a: &WireAssign,
+    engine_workers: usize,
+    engine: &mut Option<ScanEngine>,
+) -> ProcMsg {
+    let fail = |panicked: bool, reason: String| ProcMsg::ShardFailed {
+        frame_id: a.frame_id,
+        shard_id: a.shard_id,
+        panicked,
+        reason,
+    };
+    let (h, w) = (a.img_h as usize, a.img_w as usize);
+    let (nbins, nrows, row0) = (a.nbins as usize, a.nrows as usize, a.row0 as usize);
+    // Pull the strip from the spilled image (bin indices as f32 — small
+    // integers, exact in f32, so the i32 roundtrip is lossless).
+    let img = match TensorStore::open(&a.img_path, 1, h, w) {
+        Ok(s) => s,
+        Err(e) => return fail(false, format!("open image: {e:#}")),
+    };
+    let mut strip = vec![0.0f32; nrows * w];
+    if let Err(e) = img.read_rows(0, row0, nrows, &mut strip) {
+        return fail(false, format!("read image strip: {e:#}"));
+    }
+    // Bin shift: values in [bin0, bin0+nbins) land in [0, nbins),
+    // everything else is -1 (counts toward no bin) — the same slicing
+    // the in-process worker_loop applies.
+    let lo = a.bin0 as i32;
+    let hi = (a.bin0 + a.nbins) as i32;
+    let data: Vec<i32> = strip
+        .iter()
+        .map(|&f| {
+            let v = f as i32;
+            if v >= lo && v < hi {
+                v - lo
+            } else {
+                -1
+            }
+        })
+        .collect();
+    let sub = BinnedImage { h: nrows, w, bins: nbins, data };
+
+    let mut eng = match engine.take() {
+        Some(e) => e,
+        None => ScanEngine::new(engine_workers.max(1)),
+    };
+    let mut partial = IntegralHistogram::zeros(nbins, nrows, w);
+    let t0 = Instant::now();
+    let run = catch_unwind(AssertUnwindSafe(|| {
+        eng.compute_into(&sub, &mut partial);
+    }));
+    let kernel_time = t0.elapsed();
+    match run {
+        Ok(()) => *engine = Some(eng),
+        Err(_) => {
+            drop(eng); // suspect mid-job state: rebuild on next checkout
+            return fail(true, "compute panicked".into());
+        }
+    }
+
+    // Commit the partial to the out store, flush to stable storage,
+    // and checksum what we committed — the supervisor verifies the
+    // same function over the bytes it reads back.
+    let out = match TensorStore::create(&a.out_path, nbins, nrows, w) {
+        Ok(s) => s,
+        Err(e) => return fail(false, format!("create out store: {e:#}")),
+    };
+    for b in 0..nbins {
+        if let Err(e) = out.write_rows(b, 0, partial.plane(b)) {
+            return fail(false, format!("commit plane {b}: {e:#}"));
+        }
+    }
+    if let Err(e) = out.flush() {
+        return fail(false, format!("flush out store: {e:#}"));
+    }
+    ProcMsg::ShardDone {
+        frame_id: a.frame_id,
+        shard_id: a.shard_id,
+        kernel_time_us: kernel_time.as_micros() as u64,
+        checksum: checksum_f32(&partial.data),
+    }
+}
+
+/// Send one frame on the shared stdout: whole frame under the lock,
+/// flushed immediately (a buffered reply is an invisible reply).
+fn send(out: &Arc<Mutex<std::io::Stdout>>, msg: &ProcMsg) -> Result<()> {
+    let mut o = lock_recover(out);
+    msg.write_to(&mut *o).context("write protocol frame")?;
+    o.flush().context("flush stdout")?;
+    Ok(())
+}
+
+/// The worker main loop: calibrate → report → serve assignments until
+/// `Shutdown` or clean stdin EOF.
+pub fn run(cfg: WorkerConfig) -> Result<()> {
+    let out = Arc::new(Mutex::new(std::io::stdout()));
+
+    // Calibrate this node and report before accepting work — the
+    // supervisor's placement pass wants every node's snapshot up
+    // front.  `calibrate: false` reports the prior (cheap startup).
+    let cal = Calibrator::default();
+    let snapshot = if cfg.calibrate { cal.calibrate() } else { cal.snapshot() };
+    send(&out, &ProcMsg::CalibrationReport { snapshot })?;
+
+    // Heartbeat ticker: liveness on the same pipe, serialized by the
+    // stdout lock so frames never interleave mid-frame.
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb_out = Arc::clone(&out);
+    let hb_stop = Arc::clone(&stop);
+    let interval = cfg.heartbeat.max(Duration::from_millis(10));
+    let seq = Arc::new(AtomicU64::new(0));
+    let hb_seq = Arc::clone(&seq);
+    let ticker = std::thread::Builder::new()
+        .name("proc-worker-heartbeat".into())
+        .spawn(move || {
+            while !hb_stop.load(Ordering::Relaxed) {
+                std::thread::sleep(interval);
+                if hb_stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let n = hb_seq.fetch_add(1, Ordering::Relaxed);
+                if send(&hb_out, &ProcMsg::Heartbeat { seq: n }).is_err() {
+                    break; // parent gone: nothing left to signal
+                }
+            }
+        })
+        .context("spawn heartbeat thread")?;
+
+    let mut stdin = std::io::stdin().lock();
+    let mut engine: Option<ScanEngine> = None;
+    loop {
+        match ProcMsg::read_from(&mut stdin) {
+            Ok(None) | Ok(Some(ProcMsg::Shutdown)) => break,
+            Ok(Some(ProcMsg::AssignShard(a))) => {
+                let reply = execute_assign(&a, cfg.engine_workers, &mut engine);
+                if send(&out, &reply).is_err() {
+                    break; // parent gone
+                }
+            }
+            // Parent-bound message types arriving here mean a confused
+            // peer; ignore rather than die (the supervisor's heartbeat
+            // timeout is the backstop).
+            Ok(Some(_)) => {}
+            Err(e) => {
+                // A framing error on stdin is unrecoverable — resync
+                // is impossible on a byte pipe.  Exit; the supervisor
+                // sees EOF and respawns.
+                stop.store(true, Ordering::Relaxed);
+                let _ = ticker.join();
+                return Err(anyhow::anyhow!("protocol error on stdin: {e}"));
+            }
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    let _ = ticker.join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histogram::sequential::integral_histogram_seq;
+    use crate::util::prng::Xoshiro256;
+
+    fn spill_image(h: usize, w: usize, bins: usize, seed: u64) -> (BinnedImage, std::path::PathBuf) {
+        let mut rng = Xoshiro256::new(seed);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        let img = BinnedImage::new(h, w, bins, data);
+        let path = std::env::temp_dir().join(format!(
+            "inthist-proc-test-img-{}-{seed}.bin",
+            std::process::id()
+        ));
+        let store = TensorStore::create(&path, 1, h, w).expect("create");
+        let rows: Vec<f32> = img.data.iter().map(|&v| v as f32).collect();
+        store.write_rows(0, 0, &rows).expect("write");
+        store.flush().expect("flush");
+        (img, path)
+    }
+
+    #[test]
+    fn execute_assign_matches_the_in_process_bin_shift_compute() {
+        let (img, img_path) = spill_image(24, 18, 6, 77);
+        let out_path = std::env::temp_dir()
+            .join(format!("inthist-proc-test-out-{}.bin", std::process::id()));
+        let a = WireAssign {
+            frame_id: 5,
+            shard_id: 2,
+            bin0: 2,
+            nbins: 3,
+            row0: 6,
+            nrows: 10,
+            img_h: 24,
+            img_w: 18,
+            img_path: img_path.to_string_lossy().into_owned(),
+            out_path: out_path.to_string_lossy().into_owned(),
+        };
+        let mut engine = None;
+        let reply = execute_assign(&a, 1, &mut engine);
+        let (checksum, kernel_time_us) = match reply {
+            ProcMsg::ShardDone { frame_id: 5, shard_id: 2, kernel_time_us, checksum } => {
+                (checksum, kernel_time_us)
+            }
+            other => panic!("expected ShardDone, got {other:?}"),
+        };
+        assert!(engine.is_some(), "engine cached for the next shard");
+        let _ = kernel_time_us;
+
+        // Oracle: the same slice + shift computed directly.
+        let mut sub = BinnedImage { h: 10, w: 18, bins: 3, data: Vec::new() };
+        sub.data = img.data[6 * 18..16 * 18]
+            .iter()
+            .map(|&v| if (2..5).contains(&v) { v - 2 } else { -1 })
+            .collect();
+        let want = integral_histogram_seq(&sub);
+
+        let store = TensorStore::open(&out_path, 3, 10, 18).expect("open out");
+        let got = store.to_histogram().expect("read back");
+        assert_eq!(want.max_abs_diff(&got), 0.0, "cross-file result bit-identical");
+        assert_eq!(checksum, checksum_f32(&want.data), "checksum covers the payload");
+        std::fs::remove_file(&img_path).ok();
+        std::fs::remove_file(&out_path).ok();
+    }
+
+    #[test]
+    fn missing_image_fails_typed_not_fatal() {
+        let a = WireAssign {
+            frame_id: 1,
+            shard_id: 0,
+            bin0: 0,
+            nbins: 2,
+            row0: 0,
+            nrows: 4,
+            img_h: 8,
+            img_w: 8,
+            img_path: "/nonexistent/img.bin".into(),
+            out_path: "/nonexistent/out.bin".into(),
+        };
+        let mut engine = None;
+        match execute_assign(&a, 1, &mut engine) {
+            ProcMsg::ShardFailed { frame_id: 1, shard_id: 0, panicked: false, reason } => {
+                assert!(reason.contains("open image"), "{reason}");
+            }
+            other => panic!("expected typed ShardFailed, got {other:?}"),
+        }
+    }
+}

@@ -86,8 +86,10 @@ impl Default for ShardExecutorConfig {
 }
 
 /// What flows through a frame's result channel: a completed shard or
-/// the typed failure that retired it.
-type ShardMsg = std::result::Result<TaggedShard, ShardError>;
+/// the typed failure that retired it.  `pub(crate)` so the proc-plane
+/// supervisor ([`crate::proc`]) can feed the same [`FrameTicket`]
+/// drain loop from child-process results.
+pub(crate) type ShardMsg = std::result::Result<TaggedShard, ShardError>;
 
 /// One tagged unit of work against a shared frame.
 struct ShardJob {
@@ -96,6 +98,13 @@ struct ShardJob {
     image: Arc<BinnedImage>,
     out: mpsc::SyncSender<ShardMsg>,
     gauge: Arc<ResidentGauge>,
+    /// Deadline propagated from [`ShardExecutor::submit_with_deadline`]:
+    /// a shard whose frame has already blown its deadline is dropped
+    /// *before* compute (typed, counted) instead of burning a worker.
+    expires: Option<Instant>,
+    /// `(deadline, expected_shards)` needed to type the skip error.
+    deadline: Duration,
+    expected: usize,
 }
 
 /// Executor observability counters.
@@ -123,6 +132,10 @@ pub struct ShardExecutorStats {
     pub shards_recovered: usize,
     /// Shards that exhausted their retry budget (typed error sent).
     pub shards_failed: usize,
+    /// Shards dropped before compute because their frame's deadline
+    /// (from [`ShardExecutor::submit_with_deadline`]) had already
+    /// expired when a worker picked them up.
+    pub shards_skipped_deadline: usize,
     /// Frames that resolved to a typed [`ShardError`].
     pub frames_failed: usize,
     /// Tickets dropped before completing and without a typed error.
@@ -136,7 +149,7 @@ pub struct ShardExecutorStats {
     pub tune: Option<TuneStats>,
 }
 
-struct Shared {
+pub(crate) struct Shared {
     engines: Mutex<Vec<ScanEngine>>,
     engines_created: AtomicUsize,
     engines_discarded: AtomicUsize,
@@ -155,8 +168,72 @@ struct Shared {
     attempt_panics: AtomicUsize,
     shards_recovered: AtomicUsize,
     shards_failed: AtomicUsize,
+    shards_skipped_deadline: AtomicUsize,
     frames_failed: AtomicUsize,
     frames_abandoned: AtomicUsize,
+}
+
+impl Shared {
+    /// Ticket bookkeeping state for an *external* executor — the
+    /// proc-plane supervisor drives child processes instead of the
+    /// in-process worker loop, but reuses [`FrameTicket`] (and so the
+    /// whole reassembly/deadline/spill contract) verbatim.  `workers`
+    /// sizes the per-worker tally ([`TaggedShard::worker`] indexes it).
+    pub(crate) fn external(workers: usize, max_attempts: usize) -> Arc<Shared> {
+        Arc::new(Shared {
+            engines: Mutex::new(Vec::new()),
+            engines_created: AtomicUsize::new(0),
+            engines_discarded: AtomicUsize::new(0),
+            pool: Arc::new(FramePool::new()),
+            jobs: AtomicUsize::new(0),
+            per_worker: (0..workers.max(1)).map(|_| AtomicUsize::new(0)).collect(),
+            inflight: AtomicUsize::new(0),
+            inflight_peak: AtomicUsize::new(0),
+            max_attempts: max_attempts.max(1),
+            faults: None,
+            tuner: None,
+            attempt_failures: AtomicUsize::new(0),
+            attempt_panics: AtomicUsize::new(0),
+            shards_recovered: AtomicUsize::new(0),
+            shards_failed: AtomicUsize::new(0),
+            shards_skipped_deadline: AtomicUsize::new(0),
+            frames_failed: AtomicUsize::new(0),
+            frames_abandoned: AtomicUsize::new(0),
+        })
+    }
+
+    /// Count one submitted frame (external drivers call this once per
+    /// ticket, after its shards are safely queued).
+    pub(crate) fn note_submitted(&self) {
+        let now = self.inflight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.inflight_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Count one retired shard against `worker`'s tally.
+    pub(crate) fn note_job(&self, worker: usize) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        if let Some(c) = self.per_worker.get(worker) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Check out a pooled partial tensor (external drivers materialize
+    /// child results into these so reassembly recycles allocations the
+    /// same way the in-process path does).
+    pub(crate) fn acquire_partial(&self, bins: usize, h: usize, w: usize) -> IntegralHistogram {
+        self.pool.acquire(bins, h, w)
+    }
+
+    /// Return a partial checked out with [`Self::acquire_partial`] that
+    /// never reached reassembly (dropped ticket, failed frame).
+    pub(crate) fn release_partial(&self, t: IntegralHistogram) {
+        self.pool.release(t);
+    }
+
+    /// Count one shard dropped pre-compute on an expired deadline.
+    pub(crate) fn note_skipped_deadline(&self) {
+        self.shards_skipped_deadline.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// The shared shard scheduler.  All methods take `&self`; submit from
@@ -224,6 +301,7 @@ impl ShardExecutor {
             attempt_panics: AtomicUsize::new(0),
             shards_recovered: AtomicUsize::new(0),
             shards_failed: AtomicUsize::new(0),
+            shards_skipped_deadline: AtomicUsize::new(0),
             frames_failed: AtomicUsize::new(0),
             frames_abandoned: AtomicUsize::new(0),
         });
@@ -287,6 +365,7 @@ impl ShardExecutor {
             attempt_panics: s.attempt_panics.load(Ordering::Relaxed),
             shards_recovered: s.shards_recovered.load(Ordering::Relaxed),
             shards_failed: s.shards_failed.load(Ordering::Relaxed),
+            shards_skipped_deadline: s.shards_skipped_deadline.load(Ordering::Relaxed),
             frames_failed: s.frames_failed.load(Ordering::Relaxed),
             frames_abandoned: s.frames_abandoned.load(Ordering::Relaxed),
             workers_alive: self.workers_alive(),
@@ -299,6 +378,32 @@ impl ShardExecutor {
     /// frame's ticket.  Non-blocking: shards queue behind whatever
     /// other frames already have in flight.
     pub fn submit(&self, image: &Arc<BinnedImage>, plan: &ShardPlan) -> Result<FrameTicket> {
+        self.submit_inner(image, plan, None)
+    }
+
+    /// [`Self::submit`] with a frame deadline pushed into the *queue*:
+    /// workers drop this frame's shards before compute once `deadline`
+    /// (measured from this call) has elapsed, so a frame that already
+    /// blew its budget stops consuming worker time instead of being
+    /// rejected only at reassembly.  Skips are typed
+    /// ([`ShardError::DeadlineExceeded`]) and counted
+    /// ([`ShardExecutorStats::shards_skipped_deadline`]).  Pair with
+    /// `reassemble_*_deadline` for the drain-side bound.
+    pub fn submit_with_deadline(
+        &self,
+        image: &Arc<BinnedImage>,
+        plan: &ShardPlan,
+        deadline: Duration,
+    ) -> Result<FrameTicket> {
+        self.submit_inner(image, plan, Some(deadline))
+    }
+
+    fn submit_inner(
+        &self,
+        image: &Arc<BinnedImage>,
+        plan: &ShardPlan,
+        deadline: Option<Duration>,
+    ) -> Result<FrameTicket> {
         if (image.h, image.w, image.bins) != (plan.h, plan.w, plan.bins) {
             return Err(anyhow!(
                 "plan {}x{}x{} does not match image {}x{}x{}",
@@ -322,6 +427,7 @@ impl ShardExecutor {
         };
         let (out_tx, out_rx) = mpsc::sync_channel::<ShardMsg>(depth.max(1));
         let gauge = Arc::new(ResidentGauge::default());
+        let expires = deadline.map(|d| Instant::now() + d);
         for spec in &plan.shards {
             tx.send(ShardJob {
                 frame_id,
@@ -329,6 +435,9 @@ impl ShardExecutor {
                 image: Arc::clone(image),
                 out: out_tx.clone(),
                 gauge: Arc::clone(&gauge),
+                expires,
+                deadline: deadline.unwrap_or(Duration::ZERO),
+                expected: plan.shards.len(),
             })
             .map_err(|_| anyhow!("all shard workers exited"))?;
         }
@@ -384,6 +493,25 @@ fn worker_loop(
             Err(_) => break, // queue closed: drain done, exit
         };
         let spec = job.spec;
+        // Deadline-aware scheduling: a shard whose frame already blew
+        // its deadline is dropped here, before any slicing or compute —
+        // the queue time was the budget, the worker slot goes to a
+        // frame that can still make it.  Typed + counted; the ticket's
+        // drain loop surfaces the first such error.
+        if let Some(exp) = job.expires {
+            if Instant::now() >= exp {
+                shared.shards_skipped_deadline.fetch_add(1, Ordering::Relaxed);
+                shared.jobs.fetch_add(1, Ordering::Relaxed);
+                shared.per_worker[worker_id].fetch_add(1, Ordering::Relaxed);
+                let _ = job.out.send(Err(ShardError::DeadlineExceeded {
+                    frame_id: job.frame_id,
+                    deadline: job.deadline,
+                    completed: 0,
+                    expected: job.expected,
+                }));
+                continue;
+            }
+        }
         let w = job.image.w;
         // Slice rows [row0, row0+nrows) and shift values so this
         // shard's bins land in [0, nbins) — the device pool's bin
@@ -552,6 +680,32 @@ pub struct FrameTicket {
 }
 
 impl FrameTicket {
+    /// Build a ticket for an *externally* driven frame (the proc-plane
+    /// supervisor): the caller owns job dispatch and pushes
+    /// [`ShardMsg`]s into the paired sender; reassembly, deadlines,
+    /// spill, carry composition and settle accounting are all reused
+    /// from here unchanged.  Call [`Shared::note_submitted`] once the
+    /// frame's shards are queued.
+    pub(crate) fn external(
+        frame_id: u64,
+        plan: ShardPlan,
+        rx: mpsc::Receiver<ShardMsg>,
+        gauge: Arc<ResidentGauge>,
+        shared: Arc<Shared>,
+    ) -> FrameTicket {
+        FrameTicket {
+            frame_id,
+            plan,
+            rx,
+            gauge,
+            shared,
+            settled: false,
+            finished: false,
+            failed: false,
+            t_submit: Instant::now(),
+        }
+    }
+
     pub fn frame_id(&self) -> u64 {
         self.frame_id
     }
@@ -944,6 +1098,38 @@ mod tests {
         let expected_ih = integral_histogram_seq(&img);
         assert_eq!(expected_ih.max_abs_diff(&out), 0.0);
         assert_eq!(report.shards, plan.shards.len());
+    }
+
+    #[test]
+    fn expired_deadline_skips_shards_before_compute() {
+        let exec = ShardExecutor::new(ShardExecutorConfig { workers: 2, ..Default::default() });
+        let img = random_image(40, 24, 5, 15);
+        let plan = planner(12 << 10, 2).plan(5, 40, 24);
+        // A zero deadline has expired by the time any worker dequeues,
+        // so every shard is dropped at the queue, not at reassembly.
+        let ticket = exec.submit_with_deadline(&img, &plan, Duration::ZERO).expect("submit");
+        let mut out = IntegralHistogram::zeros(0, 0, 0);
+        let err = ticket.reassemble_into(&mut out).expect_err("deadline already blown");
+        match err {
+            ShardError::DeadlineExceeded { completed, expected, .. } => {
+                assert_eq!(completed, 0, "skipped shards never computed");
+                assert_eq!(expected, plan.shards.len());
+            }
+            other => panic!("wrong error variant: {other}"),
+        }
+        let stats = exec.stats();
+        assert!(stats.shards_skipped_deadline >= 1, "skips are counted");
+        assert_eq!(stats.attempt_failures, 0, "no compute was attempted for skips");
+        // A generous queue deadline completes bit-identical, skipping
+        // nothing new.
+        let skipped_before = stats.shards_skipped_deadline;
+        let ticket = exec
+            .submit_with_deadline(&img, &plan, Duration::from_secs(60))
+            .expect("submit");
+        ticket.reassemble_into(&mut out).expect("reassemble");
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&out), 0.0);
+        assert_eq!(exec.stats().shards_skipped_deadline, skipped_before);
     }
 
     #[test]

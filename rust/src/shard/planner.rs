@@ -346,6 +346,88 @@ impl ShardPlanner {
         }
         best
     }
+
+    /// Per-node calibrated planning — the process-per-NUMA-node step:
+    /// each execution node (child process) runs its own `Calibrator`
+    /// and reports a [`CostSnapshot`]; this sizes one plan for the
+    /// whole fleet and assigns every shard to a node.
+    ///
+    /// * **Sizing** runs [`Self::plan_calibrated`] with the worker
+    ///   count set to the node count and an element-wise mean of the
+    ///   sanitized node snapshots (one aggregate machine model — shard
+    ///   granularity should reflect fleet-average cost, while *balance*
+    ///   reflects per-node differences);
+    /// * **Assignment** is LPT greedy weighted by measured node speed:
+    ///   shards in descending element-count order, each placed on the
+    ///   node whose finish time `(load + weight) / best_throughput` is
+    ///   lowest (ties → lowest node index), so a node that calibrated
+    ///   2× faster ends up with ≈ 2× the work.
+    ///
+    /// Deterministic: same snapshots, same `(plan, assignment)`.  The
+    /// returned vector maps `shard_id → node index`; an empty snapshot
+    /// slice degrades to one prior-model node (everything on node 0).
+    pub fn plan_per_node(
+        &self,
+        bins: usize,
+        h: usize,
+        w: usize,
+        snaps: &[CostSnapshot],
+    ) -> (ShardPlan, Vec<usize>) {
+        let card = self.policy.card;
+        let clean: Vec<CostSnapshot> = if snaps.is_empty() {
+            vec![CostSnapshot::static_prior(card)]
+        } else {
+            snaps.iter().map(|s| s.sanitized(card)).collect()
+        };
+        let nodes = clean.len();
+        // Aggregate fleet model: element-wise mean of the node snapshots.
+        let mut agg = clean[0];
+        if nodes > 1 {
+            let inv = 1.0 / nodes as f64;
+            agg.memcpy_bps = clean.iter().map(|s| s.memcpy_bps).sum::<f64>() * inv;
+            agg.dispatch_overhead_s =
+                clean.iter().map(|s| s.dispatch_overhead_s).sum::<f64>() * inv;
+            agg.spill_read_latency_s =
+                clean.iter().map(|s| s.spill_read_latency_s).sum::<f64>() * inv;
+            agg.spill_read_bps = clean.iter().map(|s| s.spill_read_bps).sum::<f64>() * inv;
+            for i in 0..agg.tile_throughput.len() {
+                agg.tile_throughput[i] =
+                    clean.iter().map(|s| s.tile_throughput[i]).sum::<f64>() * inv;
+                agg.tile_throughput_tuned[i] =
+                    clean.iter().map(|s| s.tile_throughput_tuned[i]).sum::<f64>() * inv;
+            }
+            agg.samples = clean.iter().map(|s| s.samples).sum();
+        }
+        let sizer = ShardPlanner::new(ShardPolicy { workers: nodes, ..self.policy });
+        let plan = sizer.plan_calibrated(bins, h, w, &agg);
+
+        // LPT greedy: heaviest shards first onto the node that finishes
+        // them earliest at its measured speed.
+        let speeds: Vec<f64> = clean.iter().map(|s| s.best_throughput()).collect();
+        let mut order: Vec<usize> = (0..plan.shards.len()).collect();
+        order.sort_by(|&a, &b| {
+            let wa = plan.shards[a].nbins * plan.shards[a].nrows;
+            let wb = plan.shards[b].nbins * plan.shards[b].nrows;
+            wb.cmp(&wa).then(a.cmp(&b))
+        });
+        let mut load = vec![0.0f64; nodes];
+        let mut assignment = vec![0usize; plan.shards.len()];
+        for &i in &order {
+            let weight = (plan.shards[i].nbins * plan.shards[i].nrows * w) as f64;
+            let mut best_node = 0;
+            let mut best_t = f64::INFINITY;
+            for (n, &speed) in speeds.iter().enumerate() {
+                let t = (load[n] + weight) / speed;
+                if t < best_t {
+                    best_t = t;
+                    best_node = n;
+                }
+            }
+            load[best_node] += weight;
+            assignment[i] = best_node;
+        }
+        (plan, assignment)
+    }
 }
 
 #[cfg(test)]
@@ -491,6 +573,51 @@ mod tests {
             assert!(plan.max_shard_nbytes() <= plan.per_shard_budget);
             assert!(!plan.shards.is_empty());
         }
+    }
+
+    #[test]
+    fn per_node_assignment_covers_and_balances_identical_nodes() {
+        let p = planner(1 << 26, 4);
+        let snaps = vec![CostSnapshot::static_prior(Card::Gtx480); 3];
+        let (plan, assignment) = p.plan_per_node(32, 256, 256, &snaps);
+        assert_exact_cover(&plan);
+        assert_eq!(assignment.len(), plan.shards.len());
+        assert!(assignment.iter().all(|&n| n < 3));
+        // Identical nodes → near-even element loads (LPT bound).
+        let mut load = [0usize; 3];
+        for (i, s) in plan.shards.iter().enumerate() {
+            load[assignment[i]] += s.nbins * s.nrows;
+        }
+        let (lo, hi) = (*load.iter().min().unwrap(), *load.iter().max().unwrap());
+        assert!(load.iter().all(|&l| l > 0), "every node gets work: {load:?}");
+        assert!(hi <= 2 * lo.max(1), "balanced within LPT slack: {load:?}");
+        // Deterministic: same snapshots, same assignment.
+        let (_, again) = p.plan_per_node(32, 256, 256, &snaps);
+        assert_eq!(assignment, again);
+    }
+
+    #[test]
+    fn per_node_assignment_favors_the_faster_node() {
+        let p = planner(1 << 26, 4);
+        let slow = CostSnapshot::static_prior(Card::Gtx480);
+        let mut fast = slow;
+        for t in fast.tile_throughput.iter_mut().chain(fast.tile_throughput_tuned.iter_mut()) {
+            *t *= 3.0;
+        }
+        let (plan, assignment) = p.plan_per_node(16, 192, 192, &[slow, fast]);
+        let mut load = [0usize; 2];
+        for (i, s) in plan.shards.iter().enumerate() {
+            load[assignment[i]] += s.nbins * s.nrows;
+        }
+        assert!(load[1] > load[0], "3x-faster node carries more work: {load:?}");
+    }
+
+    #[test]
+    fn per_node_with_no_snapshots_degrades_to_one_prior_node() {
+        let p = planner(1 << 26, 4);
+        let (plan, assignment) = p.plan_per_node(8, 64, 64, &[]);
+        assert_exact_cover(&plan);
+        assert!(assignment.iter().all(|&n| n == 0));
     }
 
     #[test]

@@ -153,6 +153,54 @@ impl TensorStore {
         })
     }
 
+    /// Open an *existing* store at `path` without truncating it — the
+    /// cross-process read side of the proc-plane data plane (the
+    /// writer `flush()`es, hands the path over the control protocol,
+    /// and the reader opens it here).  The file length must match the
+    /// declared geometry exactly; a mismatch is a typed error, not a
+    /// silent short read.  Per-row checksums live in the *writer's*
+    /// RAM only, so rows read through a reopened store are served
+    /// unverified — integrity across the process boundary rides the
+    /// control protocol (`ShardDone` carries a payload checksum).
+    pub fn open(path: impl AsRef<Path>, bins: usize, h: usize, w: usize) -> Result<TensorStore> {
+        assert!(bins >= 1 && h >= 1 && w >= 1, "degenerate tensor");
+        let path = path.as_ref().to_path_buf();
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("open tensor store {}", path.display()))?;
+        let want = (bins * h * w * 4) as u64;
+        let got = file.metadata().context("stat tensor store")?.len();
+        if got != want {
+            return Err(anyhow!(
+                "tensor store {} is {got} bytes, expected {want} for {bins}x{h}x{w}",
+                path.display()
+            ));
+        }
+        Ok(TensorStore {
+            bins,
+            h,
+            w,
+            file,
+            #[cfg(not(unix))]
+            io_lock: Mutex::new(()),
+            write_scratch: Mutex::new(Vec::new()),
+            check: Mutex::new(RowCheck {
+                sums: vec![0u32; bins * h],
+                written: vec![false; bins * h],
+            }),
+            path,
+            delete_on_drop: false,
+            bytes_written: AtomicUsize::new(0),
+            corner_reads: AtomicUsize::new(0),
+            read_calls: AtomicUsize::new(0),
+            verify_rereads: AtomicUsize::new(0),
+            verify_failures: AtomicUsize::new(0),
+            faults: None,
+        })
+    }
+
     /// Create a store on a fresh temp file, deleted when the store
     /// drops (the out-of-core serving default).
     pub fn spill(bins: usize, h: usize, w: usize) -> Result<TensorStore> {
@@ -659,6 +707,27 @@ mod tests {
         assert!(path.exists());
         drop(store);
         assert!(!path.exists(), "temp spill must be cleaned up");
+    }
+
+    #[test]
+    fn open_reads_a_kept_file_without_truncating() {
+        let img = random_image(11, 6, 3, 29);
+        let ih = integral_histogram_seq(&img);
+        let store = spill_of(&ih);
+        store.flush().expect("flush");
+        let path = store.keep();
+        // Reopen (simulating another process) — contents must survive
+        // and read back bit-identical; reopened rows are unverified so
+        // no rereads fire.
+        let back = TensorStore::open(&path, 3, 11, 6).expect("open");
+        let got = back.to_histogram().expect("read back");
+        assert_eq!(ih.max_abs_diff(&got), 0.0);
+        assert_eq!(back.verify_rereads(), 0);
+        // Geometry mismatch is a typed error, never a short read.
+        assert!(TensorStore::open(&path, 3, 11, 7).is_err(), "length mismatch");
+        assert!(TensorStore::open("/nonexistent/x.bin", 1, 1, 1).is_err());
+        drop(back);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -107,6 +107,17 @@ impl TunedPlanner {
         plan
     }
 
+    /// Drop every cached plan (and reset the hit/miss tallies for it):
+    /// the explicit-recalibration path — subsequent plans re-search
+    /// under whatever the calibrator measures next.  Returns the number
+    /// of entries dropped.
+    pub fn clear(&self) -> usize {
+        let mut cache = lock_recover(&self.cache);
+        let n = cache.len();
+        cache.clear();
+        n
+    }
+
     /// Persist the tuning cache as JSON (hand-built; the repo's JSON
     /// util is parse-only by design).
     pub fn save_to(&self, path: impl AsRef<Path>) -> Result<()> {
@@ -382,6 +393,19 @@ mod tests {
         let s = fresh.stats();
         assert_eq!((s.hits, s.misses), (2, 0), "loaded entries must skip the search");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn clear_drops_every_cached_plan() {
+        let t = tuner();
+        t.plan(512, 512, 32, 8);
+        t.plan(100, 350, 16, 4);
+        assert_eq!(t.clear(), 2);
+        assert_eq!(t.stats().cached, 0);
+        // Next plan re-searches instead of serving a stale entry.
+        let misses_before = t.stats().misses;
+        t.plan(512, 512, 32, 8);
+        assert_eq!(t.stats().misses, misses_before + 1);
     }
 
     #[test]

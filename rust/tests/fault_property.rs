@@ -405,3 +405,85 @@ fn server_survives_chaos_and_drains() {
     assert!(srv.shutdown(Duration::from_secs(30)));
     assert_eq!(srv.health().state, ServerState::Stopped);
 }
+
+/// The multi-process plane under a seeded abort schedule: when
+/// `FaultSite::WorkerAbort` fires at dispatch, the supervisor SIGKILLs
+/// the chosen child — a real `kill -9` mid-frame, the failure mode
+/// `catch_unwind` cannot contain.  Every frame must still reassemble
+/// bit-identical after the respawn or fail typed; the pool must be
+/// back at full strength; trailing traffic after the schedule caps
+/// must be clean.
+#[test]
+fn proc_worker_sigkills_are_survived_bit_identical() {
+    use inthist::proc::{ProcPoolConfig, ProcSupervisor};
+    use std::path::PathBuf;
+
+    let _wd = Watchdog::arm("proc_worker_sigkills", Duration::from_secs(240));
+    let spec = FaultSpec { worker_abort: 0.15, max_per_site: 6, ..FaultSpec::default() };
+    let fi = Arc::new(FaultInjector::new(23, spec));
+    let cfg = ProcPoolConfig {
+        workers: 2,
+        max_attempts: 6,
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_proc-worker"))),
+        calibrate_children: false,
+        ..Default::default()
+    };
+    let sup = ProcSupervisor::with_faults(cfg, Some(Arc::clone(&fi))).expect("spawn pool");
+    let plan = ShardPlanner::new(policy(10 << 10, 3)).plan(6, 40, 30);
+    assert!(plan.shards.len() >= 4, "want real fan-out");
+
+    let mut ok_frames = 0usize;
+    let mut failed_frames = 0usize;
+    let mut frame = 0u64;
+    while fi.stats().injected[FaultSite::WorkerAbort.index()] < spec.max_per_site {
+        let img = random_image(40, 30, 6, 5000 + frame);
+        let expected = integral_histogram_seq(&img);
+        let ticket = sup.submit(&img, &plan).expect("submit");
+        let mut out = IntegralHistogram::zeros(0, 0, 0);
+        match ticket.reassemble_into_deadline(&mut out, Duration::from_secs(60)) {
+            Ok(rep) => {
+                assert_eq!(
+                    expected.max_abs_diff(&out),
+                    0.0,
+                    "frame {frame}: bit-identity must survive SIGKILL + respawn"
+                );
+                assert_eq!(rep.shards, plan.shards.len());
+                ok_frames += 1;
+            }
+            Err(e) => match &e {
+                // Attempt exhaustion across repeated kills is a legal,
+                // typed outcome; anything else is a bug.
+                ShardError::ComputeFailed { .. } | ShardError::ComputePanicked { .. } => {
+                    failed_frames += 1;
+                }
+                other => panic!("frame {frame}: unexpected error {other}"),
+            },
+        }
+        frame += 1;
+        assert!(frame < 400, "abort schedule should cap out quickly");
+    }
+
+    // Trailing clean traffic: the capped schedule kills no more
+    // children, and recovery left no residue.
+    for t in 0..2u64 {
+        let img = random_image(40, 30, 6, 7000 + t);
+        let expected = integral_histogram_seq(&img);
+        let ticket = sup.submit(&img, &plan).expect("submit");
+        let mut out = IntegralHistogram::zeros(0, 0, 0);
+        ticket
+            .reassemble_into_deadline(&mut out, Duration::from_secs(60))
+            .expect("clean trailing frame");
+        assert_eq!(expected.max_abs_diff(&out), 0.0, "trailing frame {t}");
+    }
+
+    let st = fi.stats();
+    let ps = sup.stats();
+    assert_eq!(st.worker_aborts, spec.max_per_site, "schedule capped exactly");
+    assert!(ps.respawns >= 1, "kills must be survived by respawn: {ps:?}");
+    assert_eq!(ps.workers_alive, 2, "pool back at full strength: {ps:?}");
+    assert!(ok_frames >= 1, "some frames must survive the kills: {ps:?}");
+    assert!(
+        ok_frames + failed_frames == frame as usize,
+        "every frame resolved exactly once: {ok_frames}+{failed_frames} != {frame}"
+    );
+}

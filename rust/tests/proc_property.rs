@@ -1,0 +1,243 @@
+//! Property tests of the multi-process execution plane against real
+//! child processes.  Cargo builds the `proc-worker` bin for
+//! integration tests and hands us its path via
+//! `CARGO_BIN_EXE_proc-worker`, so everything here exercises true
+//! process boundaries: spawn, pipes, spill files, SIGKILL, respawn.
+//!
+//! The contract under test is the executor's, verbatim: every
+//! submitted frame either reassembles **bit-identical** to the
+//! in-process result or resolves to exactly one typed `ShardError`.
+
+use inthist::histogram::sequential::integral_histogram_seq;
+use inthist::histogram::types::{BinnedImage, IntegralHistogram};
+use inthist::proc::{plan_for_nodes, ProcPoolConfig, ProcSupervisor};
+use inthist::shard::{ShardError, ShardExecutor, ShardExecutorConfig, ShardPlanner, ShardPolicy};
+use inthist::video::synth::SyntheticVideo;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_proc-worker"))
+}
+
+fn pool_config(workers: usize) -> ProcPoolConfig {
+    ProcPoolConfig {
+        workers,
+        worker_bin: Some(worker_bin()),
+        calibrate_children: false, // prior snapshots: fast startup
+        ..Default::default()
+    }
+}
+
+/// A planner forced into several shards even at test-sized frames.
+fn planner(workers: usize, budget: usize) -> ShardPlanner {
+    ShardPlanner::new(ShardPolicy { workers, memory_budget: budget, ..Default::default() })
+}
+
+fn binned(h: usize, w: usize, bins: usize, seed: u64) -> BinnedImage {
+    SyntheticVideo::new(h, w, 2, seed).frame(0).binned(bins)
+}
+
+/// Watchdog: a hung supervisor must fail the suite loudly, not stall
+/// CI (same idiom as tests/fault_property.rs).
+struct Watchdog {
+    cancel: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl Watchdog {
+    fn arm(limit: Duration, what: &'static str) -> Watchdog {
+        let cancel = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let c = Arc::clone(&cancel);
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            while t0.elapsed() < limit {
+                if c.load(std::sync::atomic::Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            eprintln!("WATCHDOG: {what} exceeded {limit:?}; aborting");
+            std::process::abort();
+        });
+        Watchdog { cancel }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.cancel.store(true, std::sync::atomic::Ordering::Release);
+    }
+}
+
+/// Cross-process bit-identity on adversarial geometries: single-row
+/// strips, single-column images, prime dimensions, bins ≫ rows — the
+/// shapes where off-by-one strip/bin arithmetic dies.  Each frame is
+/// computed by real child processes and must match both the serial
+/// oracle and the in-process executor exactly.
+#[test]
+fn cross_process_results_are_bit_identical_on_adversarial_shapes() {
+    let _wd = Watchdog::arm(Duration::from_secs(120), "cross-process bit-identity");
+    let shapes: &[(usize, usize, usize)] = &[
+        (33, 1, 7),   // single-column image
+        (1, 64, 4),   // single-row image
+        (61, 37, 13), // everything prime
+        (16, 16, 32), // more bins than rows
+        (96, 80, 8),  // bread-and-butter
+    ];
+    let sup = ProcSupervisor::new(pool_config(2)).expect("spawn pool");
+    let exec = ShardExecutor::new(ShardExecutorConfig {
+        workers: 2,
+        engine_workers: 1,
+        channel_depth: 0,
+        max_attempts: 3,
+    });
+    for (i, &(h, w, bins)) in shapes.iter().enumerate() {
+        let img = binned(h, w, bins, 40 + i as u64);
+        let image = Arc::new(img.clone());
+        // Budget small enough to force several shards per frame.
+        let plan = planner(2, (bins * h * w * 4 / 3).max(4096)).plan(bins, h, w);
+        let oracle = integral_histogram_seq(&img);
+
+        let ticket = sup.submit(&image, &plan).expect("proc submit");
+        let mut got = IntegralHistogram::zeros(bins, h, w);
+        ticket.reassemble_into(&mut got).expect("proc reassembly");
+        assert_eq!(oracle.max_abs_diff(&got), 0.0, "proc vs serial, shape {h}x{w}x{bins}");
+
+        let ticket = exec.submit(&image, &plan).expect("in-process submit");
+        let mut inproc = IntegralHistogram::zeros(bins, h, w);
+        ticket.reassemble_into(&mut inproc).expect("in-process reassembly");
+        assert_eq!(
+            inproc.max_abs_diff(&got),
+            0.0,
+            "proc vs in-process executor, shape {h}x{w}x{bins}"
+        );
+    }
+    let stats = sup.stats();
+    assert_eq!(stats.shard_failures, 0, "{stats:?}");
+    assert_eq!(stats.checksum_failures, 0, "{stats:?}");
+    assert!(stats.completed >= shapes.len(), "{stats:?}");
+}
+
+/// The headline guarantee: SIGKILL a child mid-frame and every
+/// in-flight frame still completes bit-identical after the respawn.
+#[test]
+fn sigkilled_worker_is_respawned_and_frames_complete_bit_identical() {
+    let _wd = Watchdog::arm(Duration::from_secs(120), "SIGKILL respawn");
+    let sup = ProcSupervisor::new(pool_config(2)).expect("spawn pool");
+    let (h, w, bins) = (72, 56, 16);
+    let oracles: Vec<IntegralHistogram> = (0..6)
+        .map(|t| integral_histogram_seq(&binned(h, w, bins, 900 + t)))
+        .collect();
+    for (t, oracle) in oracles.iter().enumerate() {
+        let img = Arc::new(binned(h, w, bins, 900 + t as u64));
+        let plan = planner(2, bins * h * w).plan(bins, h, w);
+        let ticket = sup.submit(&img, &plan).expect("submit");
+        if t == 1 || t == 3 {
+            // Mid-frame: shards of this ticket are in flight right now.
+            sup.kill_worker(t % 2).expect("kill hook");
+        }
+        let mut got = IntegralHistogram::zeros(bins, h, w);
+        ticket.reassemble_into(&mut got).expect("frame must survive the kill");
+        assert_eq!(oracle.max_abs_diff(&got), 0.0, "frame {t} bit-identity across a kill");
+    }
+    let stats = sup.stats();
+    assert!(stats.respawns >= 1, "a killed child must be replaced: {stats:?}");
+    assert_eq!(stats.workers_alive, 2, "pool back at full strength: {stats:?}");
+    assert_eq!(stats.shard_failures, 0, "no frame may fail for a survivable kill: {stats:?}");
+}
+
+/// Deadline-aware scheduling on the proc plane: a frame submitted with
+/// an already-blown deadline resolves typed without its shards ever
+/// reaching a child.
+#[test]
+fn expired_deadline_is_dropped_before_dispatch() {
+    let _wd = Watchdog::arm(Duration::from_secs(60), "proc deadline drop");
+    let sup = ProcSupervisor::new(pool_config(1)).expect("spawn pool");
+    let (h, w, bins) = (64, 48, 8);
+    let img = Arc::new(binned(h, w, bins, 7));
+    let plan = planner(1, bins * h * w).plan(bins, h, w);
+    let before = sup.stats().dispatched;
+    let ticket = sup.submit_with_deadline(&img, &plan, Duration::ZERO).expect("submit");
+    std::thread::sleep(Duration::from_millis(60)); // let the dispatcher see it
+    let mut out = IntegralHistogram::zeros(bins, h, w);
+    match ticket.reassemble_into(&mut out) {
+        Err(ShardError::DeadlineExceeded { completed, .. }) => {
+            assert_eq!(completed, 0, "nothing was computed for a dead frame");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    let stats = sup.stats();
+    assert!(stats.skipped_deadline >= 1, "{stats:?}");
+    assert_eq!(stats.dispatched, before, "expired shards never reach a child: {stats:?}");
+
+    // And a generous deadline still completes bit-identically.
+    let ticket = sup.submit_with_deadline(&img, &plan, Duration::from_secs(60)).expect("submit");
+    let mut got = IntegralHistogram::zeros(bins, h, w);
+    ticket.reassemble_into(&mut got).expect("healthy deadline");
+    let oracle = integral_histogram_seq(&binned(h, w, bins, 7));
+    assert_eq!(oracle.max_abs_diff(&got), 0.0);
+}
+
+/// Per-node calibrated placement end-to-end: children report their
+/// snapshots over the protocol, the placement pass sizes a plan per
+/// node, and an assigned submit completes bit-identical.
+#[test]
+fn calibration_reports_drive_per_node_placement() {
+    let _wd = Watchdog::arm(Duration::from_secs(60), "per-node placement");
+    let sup = ProcSupervisor::new(pool_config(2)).expect("spawn pool");
+    let calibrated = sup.wait_calibrated(Duration::from_secs(30));
+    assert_eq!(calibrated, 2, "every child must report a snapshot");
+    let snaps = sup.snapshots();
+    assert!(snaps.iter().all(|s| s.is_some()), "{snaps:?}");
+
+    let (h, w, bins) = (80, 64, 16);
+    let planner = planner(2, bins * h * w);
+    let (plan, map) = plan_for_nodes(&planner, bins, h, w, &snaps);
+    assert_eq!(map.calibrated_nodes, 2);
+    assert_eq!(map.assignment.len(), plan.shards.len());
+    assert!(map.assignment.iter().all(|&n| n < 2));
+
+    let img = Arc::new(binned(h, w, bins, 3));
+    let ticket = sup.submit_assigned(&img, &plan, &map.assignment).expect("assigned submit");
+    let mut got = IntegralHistogram::zeros(bins, h, w);
+    ticket.reassemble_into(&mut got).expect("assigned reassembly");
+    let oracle = integral_histogram_seq(&binned(h, w, bins, 3));
+    assert_eq!(oracle.max_abs_diff(&got), 0.0);
+}
+
+/// The server front door behind `process_isolation`: large frames run
+/// in child processes, bit-identical to the in-process route, and the
+/// snapshot exposes the proc-plane counters.
+#[test]
+fn server_routes_large_frames_through_the_proc_plane() {
+    use inthist::prelude::*;
+    use inthist::runtime::artifact::ArtifactManifest;
+
+    let _wd = Watchdog::arm(Duration::from_secs(120), "server proc route");
+    let manifest = Arc::new(ArtifactManifest {
+        dir: PathBuf::from("/nonexistent"),
+        profile: "test".into(),
+        artifacts: vec![],
+    });
+    let mut cfg = ServerConfig::default();
+    cfg.engine.bins = 8;
+    cfg.engine.device_memory_budget = 1 << 10; // 40×40 routes large
+    cfg.process_isolation = true;
+    cfg.proc = ProcPoolConfig {
+        workers: 2,
+        worker_bin: Some(worker_bin()),
+        calibrate_children: false,
+        ..Default::default()
+    };
+    let srv = Server::new(manifest, cfg);
+    let img = SyntheticVideo::new(40, 40, 1, 2).frame(0).binned(8);
+    let (ih, _) = srv.compute(&img).expect("proc-isolated large route");
+    let oracle = integral_histogram_seq(&img);
+    assert_eq!(oracle.max_abs_diff(&ih), 0.0, "process-isolated route is bit-identical");
+    let snap = srv.snapshot();
+    let proc = snap.proc.expect("proc supervisor built on first large frame");
+    assert_eq!(proc.workers_alive, 2, "{proc:?}");
+    assert!(proc.completed >= 1, "{proc:?}");
+    assert!(srv.shutdown(Duration::from_secs(10)), "shutdown joins the proc plane");
+}
