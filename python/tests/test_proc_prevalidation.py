@@ -4,12 +4,17 @@ side asserts the same invariants in-tree: protocol unit tests in
 rust/src/proc/protocol.rs, process-boundary property tests in
 rust/tests/proc_property.rs).
 
-1. Framing (mirror of proc::protocol::ProcMsg): byte-exact encode /
-   decode of every message type over the
+1. Framing (mirror of proc::protocol::ProcMsg, wire v2): byte-exact
+   encode / decode of every message type over the
    `[magic u16 LE][version u16 LE][type u8][len u32 LE][payload]`
-   wire format; truncation at EVERY byte prefix, foreign magic, version
-   skew, unknown types, oversized lengths, trailing payload bytes and
-   degenerate shard geometry all land in a typed error — never a crash,
+   wire format.  v2 appends the shm data-plane tail to `AssignShard`
+   (`plane u8, slot u64, slot_off u64, ring_bytes u64, ring_path str`)
+   and a `slot u64` to `ShardDone`; v1 frames still decode, as
+   file-plane payloads (minor version bump).  Truncation at EVERY byte
+   prefix, foreign magic, version skew, unknown types, oversized
+   lengths, trailing payload bytes, degenerate shard geometry and
+   hostile slot geometry (region past the ring, ringless shm assign,
+   unknown plane byte) all land in a typed error — never a crash,
    never a partially-decoded message.
 2. Checksum (mirror of proc::protocol::checksum_f32): FNV-1a over f32
    LE bytes — deterministic, bit-sensitive, empty input is the basis.
@@ -20,7 +25,12 @@ rust/tests/proc_property.rs).
    replacement; a shard that exhausts max_attempts fails its frame
    typed EXACTLY once; the frame's outstanding count drains to zero and
    its image spill file is cleaned up exactly once; an expired deadline
-   drops shards before any dispatch.
+   drops shards before any dispatch.  The shm-plane additions: ring
+   slots acquired at dispatch are released on completion and RECLAIMED
+   when a child is reaped mid-flight (counter-asserted), and the
+   heartbeat watchdog defers enforcement until a child's first message
+   (the boot false-kill fix) with a boot-grace backstop for children
+   that never speak at all.
 
 Run: python3 python/tests/test_proc_prevalidation.py  (or pytest)
 """
@@ -29,9 +39,12 @@ import struct
 from collections import deque
 
 MAGIC = 0x4948  # "IH"
-VERSION = 1
+VERSION = 2
+VERSION_MIN = 1  # v1 = file-plane payloads, still decoded
 MAX_PAYLOAD = 1 << 20
 HEADER_LEN = 9
+PLANE_FILE, PLANE_SHM = 0, 1
+NO_SLOT = (1 << 64) - 1
 
 TY_ASSIGN, TY_DONE, TY_FAILED, TY_HEARTBEAT, TY_CALIBRATION, TY_SHUTDOWN = 1, 2, 3, 4, 5, 6
 
@@ -64,8 +77,9 @@ def _put_string(out, s):
     out += struct.pack("<I", len(b)) + b
 
 
-def encode(msg):
-    """Mirror of ProcMsg::encode — msg is (type_name, fields dict)."""
+def encode(msg, version=VERSION):
+    """Mirror of ProcMsg::encode — msg is (type_name, fields dict).
+    `version=1` emits legacy file-plane frames for the compat tests."""
     ty_name, f = msg
     p = bytearray()
     if ty_name == "assign":
@@ -74,9 +88,17 @@ def encode(msg):
             p += struct.pack("<Q", f[k])
         _put_string(p, f["img_path"])
         _put_string(p, f["out_path"])
+        if version >= 2:
+            # shm data-plane tail (protocol.rs v2): plane, slot,
+            # slot_off, ring_bytes, ring_path.
+            p += bytes([f["plane"]])
+            p += struct.pack("<QQQ", f["slot"], f["slot_off"], f["ring_bytes"])
+            _put_string(p, f["ring_path"])
     elif ty_name == "done":
         ty = TY_DONE
         p += struct.pack("<QQQI", f["frame_id"], f["shard_id"], f["kernel_time_us"], f["checksum"])
+        if version >= 2:
+            p += struct.pack("<Q", f["slot"])
     elif ty_name == "failed":
         ty = TY_FAILED
         p += struct.pack("<QQ", f["frame_id"], f["shard_id"])
@@ -97,7 +119,7 @@ def encode(msg):
     else:
         raise AssertionError(ty_name)
     assert len(p) <= MAX_PAYLOAD
-    return struct.pack("<HHBI", MAGIC, VERSION, ty, len(p)) + bytes(p)
+    return struct.pack("<HHBI", MAGIC, version, ty, len(p)) + bytes(p)
 
 
 class _Cursor:
@@ -142,7 +164,7 @@ def decode(buf):
     magic, version, ty, plen = struct.unpack("<HHBI", buf[:HEADER_LEN])
     if magic != MAGIC:
         raise ProtocolError("bad_magic", hex(magic))
-    if version != VERSION:
+    if not (VERSION_MIN <= version <= VERSION):
         raise ProtocolError("version_mismatch", str(version))
     if plen > MAX_PAYLOAD:
         raise ProtocolError("oversized", str(plen))
@@ -152,14 +174,36 @@ def decode(buf):
     if ty == TY_ASSIGN:
         f = {k: c.u64() for k in ("frame_id", "shard_id", "bin0", "nbins", "row0", "nrows", "img_h", "img_w")}
         f["img_path"], f["out_path"] = c.string(), c.string()
+        if version >= 2:
+            f["plane"] = c.take(1)[0]
+            f["slot"], f["slot_off"], f["ring_bytes"] = c.u64(), c.u64(), c.u64()
+            f["ring_path"] = c.string()
+        else:
+            # v1 peers only speak the spill-file plane.
+            f["plane"], f["slot"], f["slot_off"], f["ring_bytes"] = PLANE_FILE, 0, 0, 0
+            f["ring_path"] = ""
         if f["nbins"] == 0 or f["nrows"] == 0 or f["img_h"] == 0 or f["img_w"] == 0:
             raise ProtocolError("malformed", "degenerate shard geometry")
         if f["row0"] + f["nrows"] > f["img_h"]:
             raise ProtocolError("malformed", "shard strip past image")
+        if f["plane"] not in (PLANE_FILE, PLANE_SHM):
+            raise ProtocolError("malformed", f"data plane byte {f['plane']}")
+        if f["plane"] == PLANE_SHM:
+            # Hostile slot geometry never reaches the mmap: the strip
+            # plus the partial written back in place must fit the slot
+            # region inside the advertised ring (protocol.rs decode).
+            if not f["ring_path"]:
+                raise ProtocolError("malformed", "shm assign without a ring path")
+            strip = f["nrows"] * f["img_w"] * 4
+            partial = f["nbins"] * f["nrows"] * f["img_w"] * 4
+            if strip + partial + f["slot_off"] > f["ring_bytes"]:
+                raise ProtocolError("malformed", "shm slot region past ring")
         msg = ("assign", f)
     elif ty == TY_DONE:
         fid, sid, us, ck = c.u64(), c.u64(), c.u64(), c.u32()
-        msg = ("done", {"frame_id": fid, "shard_id": sid, "kernel_time_us": us, "checksum": ck})
+        slot = c.u64() if version >= 2 else NO_SLOT
+        msg = ("done", {"frame_id": fid, "shard_id": sid, "kernel_time_us": us,
+                        "checksum": ck, "slot": slot})
     elif ty == TY_FAILED:
         fid, sid = c.u64(), c.u64()
         pb = c.take(1)[0]
@@ -185,9 +229,20 @@ def decode(buf):
 
 def samples():
     return [
+        # File-plane assign (slot fields zeroed, as the Rust encoder
+        # emits them) and an shm assign mirroring protocol.rs's
+        # shm_assign sample: slot 1 of a 2x16 KiB ring.
         ("assign", {"frame_id": 7, "shard_id": 3, "bin0": 8, "nbins": 4, "row0": 16, "nrows": 10,
-                    "img_h": 64, "img_w": 48, "img_path": "/tmp/img.bin", "out_path": "/tmp/out-7-3.bin"}),
-        ("done", {"frame_id": 7, "shard_id": 3, "kernel_time_us": 1234, "checksum": 0xDEAD}),
+                    "img_h": 64, "img_w": 48, "img_path": "/tmp/img.bin", "out_path": "/tmp/out-7-3.bin",
+                    "plane": PLANE_FILE, "slot": 0, "slot_off": 0, "ring_bytes": 0, "ring_path": ""}),
+        ("assign", {"frame_id": 7, "shard_id": 4, "bin0": 8, "nbins": 4, "row0": 16, "nrows": 10,
+                    "img_h": 64, "img_w": 48, "img_path": "", "out_path": "",
+                    "plane": PLANE_SHM, "slot": 1, "slot_off": 16384, "ring_bytes": 32768,
+                    "ring_path": "/dev/shm/inthist-shm-1-n0.ring"}),
+        ("done", {"frame_id": 7, "shard_id": 3, "kernel_time_us": 1234, "checksum": 0xDEAD,
+                  "slot": NO_SLOT}),
+        ("done", {"frame_id": 7, "shard_id": 4, "kernel_time_us": 987, "checksum": 0xBEEF,
+                  "slot": 1}),
         ("failed", {"frame_id": 7, "shard_id": 3, "panicked": True, "reason": "injected"}),
         ("heartbeat", {"seq": 42}),
         ("calibration", {"memcpy_bps": 6.0e9, "tile_throughput": [1e8, 2e8, 3e8, 4e8],
@@ -259,6 +314,52 @@ def test_header_corruptions_are_typed():
     print("framing: magic/version/type/length/geometry corruption all typed")
 
 
+def test_v1_frames_decode_as_file_plane():
+    # The shm tail is a MINOR version bump: a v1 peer's frames must
+    # still decode, landing on the spill-file plane with no slot.
+    a = dict(samples()[0][1])
+    wire = encode(("assign", a), version=1)
+    assert len(wire) < len(encode(("assign", a))), "v1 assign has no shm tail"
+    got, used = decode(wire)
+    assert used == len(wire)
+    assert got[1]["plane"] == PLANE_FILE and got[1]["ring_path"] == ""
+    assert got[1]["slot"] == 0 and got[1]["slot_off"] == 0 and got[1]["ring_bytes"] == 0
+    assert got[1]["img_path"] == a["img_path"] and got[1]["out_path"] == a["out_path"]
+    d = {"frame_id": 9, "shard_id": 1, "kernel_time_us": 55, "checksum": 0xF00D}
+    got, _ = decode(encode(("done", d), version=1))
+    assert got[1]["slot"] == NO_SLOT, "v1 done carries no slot to release"
+    # Versions PAST ours are still refused — only older minors decode.
+    future = encode(("heartbeat", {"seq": 1}))
+    future = future[:2] + struct.pack("<H", VERSION + 1) + future[4:]
+    try:
+        decode(future)
+        raise AssertionError("future version decoded")
+    except ProtocolError as e:
+        assert e.kind == "version_mismatch"
+    print("framing: v1 frames decode as file-plane; future versions refused")
+
+
+def test_hostile_slot_geometry_is_typed():
+    shm = dict(samples()[1][1])
+    hostile = [
+        dict(shm, ring_bytes=1024),          # slot region past the ring
+        dict(shm, slot_off=(1 << 63)),       # offset overflows the region sum
+        dict(shm, ring_path=""),             # shm plane without a ring
+        dict(shm, plane=7),                  # unknown data-plane byte
+    ]
+    for a in hostile:
+        try:
+            decode(encode(("assign", a)))
+            raise AssertionError(f"hostile slot geometry decoded: {a}")
+        except ProtocolError as e:
+            assert e.kind == "malformed", (a, e.kind)
+    # The in-bounds shm sample itself round-trips — validation rejects
+    # hostile geometry, not the plane.
+    back, _ = decode(encode(("assign", shm)))
+    assert back == ("assign", shm)
+    print("framing: hostile slot geometry (past-ring/ringless/bad plane) all typed")
+
+
 def test_random_bytes_never_crash_the_decoder():
     # xorshift-ish deterministic garbage, half with a valid header so
     # the payload decoders get fuzzed too (mirror of the Rust fuzz).
@@ -291,19 +392,31 @@ def test_checksum_stable_and_bit_sensitive():
 
 class SupervisorSim:
     """Deterministic mirror of ProcSupervisor's dispatcher: pending
-    queue, per-child in-flight maps, the requeue ladder and the
-    at-most-once frame-failure discipline.  Time is an integer tick."""
+    queue, per-child in-flight maps, the requeue ladder, the
+    at-most-once frame-failure discipline, the per-child shm slot ring
+    (`ring_slots` > 0 enables it) and the boot-deferred heartbeat
+    watchdog.  Time is an integer tick."""
 
-    def __init__(self, workers=2, max_attempts=3, per_child_inflight=2, heartbeat_timeout=10):
+    def __init__(self, workers=2, max_attempts=3, per_child_inflight=2, heartbeat_timeout=10,
+                 ring_slots=0):
         self.max_attempts = max_attempts
         self.cap = per_child_inflight
         self.hb_timeout = heartbeat_timeout
+        self.ring_slots = ring_slots
         self.now = 0
-        self.slots = [{"alive": True, "inflight": {}, "last_seen": 0} for _ in range(workers)]
+        self.slots = [{"alive": True, "inflight": {}, "last_seen": 0,
+                       "spoken": False, "spawned_at": 0, "averted": False}
+                      for _ in range(workers)]
+        # Rings OUTLIVE their child: a replacement child remaps the same
+        # ring file, so in-use slots must be reclaimed on reap or the
+        # ring leaks capacity (supervisor.rs reap path).
+        self.rings = [set() for _ in range(workers)]
         self.pending = deque()
         self.frames = {}
         self.stats = {"dispatched": 0, "requeued": 0, "completed": 0, "shard_failures": 0,
-                      "respawns": 0, "skipped_deadline": 0, "img_deleted": [], "typed_failures": []}
+                      "respawns": 0, "skipped_deadline": 0, "img_deleted": [], "typed_failures": [],
+                      "shm_dispatched": 0, "shm_fallbacks": 0, "slots_reclaimed": 0,
+                      "kills_averted": 0}
 
     def submit(self, frame_id, nshards, expires=None):
         self.frames[frame_id] = {"outstanding": nshards, "failed": False, "expires": expires,
@@ -373,32 +486,71 @@ class SupervisorSim:
                 return  # every live child saturated; head-of-line waits
             node = min(candidates, key=lambda i: len(self.slots[i]["inflight"]))
             self.pending.popleft()
+            if self.ring_slots:
+                free = set(range(self.ring_slots)) - self.rings[node]
+                if free:
+                    task["slot"] = min(free)
+                    self.rings[node].add(task["slot"])
+                    self.stats["shm_dispatched"] += 1
+                else:
+                    # Ring full: this shard rides the spill-file plane
+                    # rather than blocking the dispatcher.
+                    task["slot"] = None
+                    self.stats["shm_fallbacks"] += 1
             self.slots[node]["inflight"][(task["frame"], task["shard"])] = task
             self.stats["dispatched"] += 1
             progressed = True
 
+    def _free_slot(self, node, task):
+        slot = task.pop("slot", None)
+        if slot is not None:
+            self.rings[node].discard(slot)
+
     def child_dies(self, node):
-        """SIGKILL analog: requeue everything in flight, respawn."""
+        """SIGKILL analog: reclaim its ring slots, requeue everything
+        in flight, respawn."""
         s = self.slots[node]
         assert s["alive"]
         s["alive"] = False
         orphans = list(s["inflight"].values())
         s["inflight"] = {}
+        # Reclaim-on-reap: a SIGKILLed child never sends ShardDone for
+        # its in-flight slots, so the reaper releases them before the
+        # replacement spawns — counted, so tests can assert it fired.
+        reclaimed = len(self.rings[node])
+        if reclaimed:
+            self.stats["slots_reclaimed"] += reclaimed
+            self.rings[node] = set()
         for t in orphans:
+            t.pop("slot", None)  # the reaper already released it
             self._retry_or_fail(t, "worker process died")
-        self.slots[node] = {"alive": True, "inflight": {}, "last_seen": self.now}
+        self.slots[node] = {"alive": True, "inflight": {}, "last_seen": self.now,
+                            "spoken": False, "spawned_at": self.now, "averted": False}
         self.stats["respawns"] += 1
 
     def heartbeat(self, node):
         self.slots[node]["last_seen"] = self.now
+        self.slots[node]["spoken"] = True
 
     def check_heartbeats(self):
+        # Boot false-kill fix: heartbeat age is only enforced once the
+        # child has SPOKEN — a slow boot (calibration, cold binary) is
+        # not a hang.  The backstop: a child silent past 10x the
+        # timeout without ever speaking is truly hung and still dies.
+        boot_grace = self.hb_timeout * 10
         for i, s in enumerate(self.slots):
             if s["alive"] and self.now - s["last_seen"] > self.hb_timeout:
+                if not s["spoken"] and self.now - s["spawned_at"] <= boot_grace:
+                    if not s["averted"]:
+                        s["averted"] = True
+                        self.stats["kills_averted"] += 1
+                    continue
                 self.child_dies(i)
 
     def complete(self, node, frame_id, shard_id, ok=True, reason=""):
         task = self.slots[node]["inflight"].pop((frame_id, shard_id))
+        self.heartbeat(node)  # any message refreshes liveness
+        self._free_slot(node, task)  # slot freed on EVERY outcome path
         f = self.frames.get(frame_id)
         if f is None:
             return
@@ -463,11 +615,14 @@ def test_heartbeat_timeout_is_a_death():
     sim = SupervisorSim(workers=2, max_attempts=3, heartbeat_timeout=5)
     sim.submit(9, 4)
     sim.pump()
-    sim.now = 4
-    sim.heartbeat(1)  # child 1 is chatty; child 0 went dark at t=0
-    sim.now = 6
+    sim.now = 1
+    sim.heartbeat(0)  # both children boot and speak...
+    sim.heartbeat(1)
+    sim.now = 7
+    sim.heartbeat(1)  # ...then child 0 goes dark; child 1 stays chatty
     sim.check_heartbeats()
     assert sim.stats["respawns"] == 1, "only the silent child is declared dead"
+    assert sim.stats["kills_averted"] == 0, "post-boot silence is never an aversion"
     sim.pump()
     while sim.drain_inflight():
         for node, (fid, sid) in sim.drain_inflight():
@@ -475,6 +630,83 @@ def test_heartbeat_timeout_is_a_death():
         sim.pump()
     assert sim.stats["completed"] == 4 and sim.stats["typed_failures"] == []
     print("supervision: heartbeat silence past the timeout = child death + requeue")
+
+
+def test_booting_child_is_spared_until_first_message():
+    # The false-kill bug: a child still calibrating has sent NOTHING, so
+    # its heartbeat age is its spawn age — the old watchdog killed it.
+    sim = SupervisorSim(workers=2, heartbeat_timeout=5)
+    sim.submit(11, 4)
+    sim.pump()
+    sim.now = 6
+    sim.heartbeat(1)  # child 1 booted fast; child 0 has never spoken
+    sim.check_heartbeats()
+    assert sim.stats["respawns"] == 0, "silent boot must be spared, not reaped"
+    assert sim.stats["kills_averted"] == 1
+    sim.now = 12
+    sim.heartbeat(1)
+    sim.check_heartbeats()
+    assert sim.stats["kills_averted"] == 1, "the aversion is counted once per boot"
+    # First message starts enforcement: speak at 20, dark again by 26.
+    sim.now = 20
+    sim.heartbeat(0)
+    sim.now = 26
+    sim.heartbeat(1)
+    sim.check_heartbeats()
+    assert sim.stats["respawns"] == 1, "post-boot silence is still a death"
+    sim.pump()
+    while sim.drain_inflight():
+        for node, (fid, sid) in sim.drain_inflight():
+            sim.complete(node, fid, sid)
+        sim.pump()
+    assert sim.stats["completed"] == 4 and sim.stats["typed_failures"] == []
+    # Backstop: a child that NEVER speaks past 10x the timeout is a
+    # genuine hang and still dies.
+    sim2 = SupervisorSim(workers=1, heartbeat_timeout=5)
+    sim2.submit(12, 1)
+    sim2.pump()
+    sim2.now = 50
+    sim2.check_heartbeats()
+    assert sim2.stats["respawns"] == 0, "within boot grace: spared"
+    sim2.now = 51
+    sim2.check_heartbeats()
+    assert sim2.stats["respawns"] == 1, "past boot grace: a hung boot is reaped"
+    print("supervision: heartbeat enforcement deferred to first message, graced backstop")
+
+
+def test_ring_slots_released_on_completion_and_reclaimed_on_reap():
+    sim = SupervisorSim(workers=2, per_child_inflight=2, ring_slots=2)
+    sim.submit(21, 6)
+    sim.pump()
+    assert sim.stats["shm_dispatched"] == 4, "2 children x 2 ring slots in flight"
+    held = len(sim.rings[0])
+    assert held == 2, "child 0's ring is fully loaded"
+    sim.child_dies(0)
+    assert sim.stats["slots_reclaimed"] == held, "reap reclaims every in-flight slot"
+    assert sim.rings[0] == set(), "the replacement starts with an empty ring"
+    sim.pump()
+    while sim.drain_inflight():
+        for node, (fid, sid) in sim.drain_inflight():
+            sim.complete(node, fid, sid)
+        sim.pump()
+    assert sim.stats["completed"] == 6 and sim.stats["typed_failures"] == []
+    assert all(not r for r in sim.rings), "every slot released once drained"
+    print("supervision: ring slots released on completion, reclaimed on reap")
+
+
+def test_full_ring_falls_back_to_the_file_plane():
+    # inflight cap 3 > ring capacity 1: the third dispatch to a child
+    # finds no free slot and must ride the spill-file plane instead of
+    # wedging the dispatcher.
+    sim = SupervisorSim(workers=1, per_child_inflight=3, ring_slots=1)
+    sim.submit(31, 3)
+    sim.pump()
+    assert sim.stats["dispatched"] == 3
+    assert sim.stats["shm_dispatched"] == 1 and sim.stats["shm_fallbacks"] == 2
+    for node, (fid, sid) in sim.drain_inflight():
+        sim.complete(node, fid, sid)
+    assert sim.stats["completed"] == 3 and not sim.rings[0]
+    print("supervision: a full ring degrades to the file plane, never deadlocks")
 
 
 def test_expired_deadline_drops_before_dispatch():
@@ -497,10 +729,15 @@ if __name__ == "__main__":
     test_roundtrip_every_type()
     test_every_truncation_point_is_typed()
     test_header_corruptions_are_typed()
+    test_v1_frames_decode_as_file_plane()
+    test_hostile_slot_geometry_is_typed()
     test_random_bytes_never_crash_the_decoder()
     test_checksum_stable_and_bit_sensitive()
     test_child_death_requeues_and_frame_completes()
     test_attempt_exhaustion_fails_frame_exactly_once()
     test_heartbeat_timeout_is_a_death()
+    test_booting_child_is_spared_until_first_message()
+    test_ring_slots_released_on_completion_and_reclaimed_on_reap()
+    test_full_ring_falls_back_to_the_file_plane()
     test_expired_deadline_drops_before_dispatch()
     print("proc plane pre-validation: ALL OK")

@@ -19,14 +19,16 @@
 //! 4. **Supervision overhead** — the armed zero-probability fault
 //!    probe vs the plain supervised executor.
 //! 5. **Process isolation** — the same schedule through real
-//!    `proc-worker` child processes: the isolation tax (pipes +
-//!    spill-file data plane vs shared memory) and the latency of a
-//!    frame that survives a SIGKILL mid-flight (respawn recovery).
+//!    `proc-worker` child processes, once per data plane: the
+//!    spill-file round-trip (`proc` row) and the shared-memory slot
+//!    ring (`proc.shm` row), so the JSON carries both isolation-tax
+//!    numbers and their ratio — plus the latency of a frame that
+//!    survives a SIGKILL mid-flight (respawn recovery).
 //!
 //! Run: `cargo bench --bench shard` (BENCH_REPS=1 for the CI smoke).
 
 use inthist::coordinator::task_queue::{BinTaskQueue, TaskQueueConfig};
-use inthist::proc::{ProcPoolConfig, ProcSupervisor};
+use inthist::proc::{DataPlane, ProcPoolConfig, ProcSupervisor};
 use inthist::histogram::region::Rect;
 use inthist::histogram::types::{BinnedImage, IntegralHistogram};
 use inthist::runtime::artifact::ArtifactManifest;
@@ -339,10 +341,13 @@ fn main() {
     // and times the frame end-to-end anyway — respawn + requeue + the
     // recomputed shards, the latency a production kill actually costs.
     let proc_workers = 2usize;
+    // Pinned to the spill-file plane: this row is the baseline tax the
+    // shm data plane exists to cut.
     let sup = ProcSupervisor::new(ProcPoolConfig {
         workers: proc_workers,
         worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_proc-worker"))),
         calibrate_children: false,
+        data_plane: DataPlane::File,
         ..Default::default()
     })
     .expect("spawn proc pool");
@@ -366,11 +371,38 @@ fn main() {
     println!("\n## process isolation, {proc_workers} worker processes, {frames} frames");
     println!("in-process executor:            {sup_fps:>8.2} fps");
     println!(
-        "multi-process supervisor:       {proc_fps:>8.2} fps ({isolation_tax_pct:+.1}% isolation tax)"
+        "multi-process (spill files):    {proc_fps:>8.2} fps ({isolation_tax_pct:+.1}% isolation tax)"
     );
     println!(
         "clean frame {clean_frame_ms:.1} ms | frame across a SIGKILL {killed_frame_ms:.1} ms | respawn recovery {respawn_recovery_ms:.1} ms | respawns {}",
         proc_stats.respawns
+    );
+
+    // The same schedule on the shared-memory slot ring (Auto resolves
+    // to shm where the platform has it, file elsewhere — the emitted
+    // row records which plane actually ran).
+    let shm_sup = ProcSupervisor::new(ProcPoolConfig {
+        workers: proc_workers,
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_proc-worker"))),
+        calibrate_children: false,
+        data_plane: DataPlane::Auto,
+        ..Default::default()
+    })
+    .expect("spawn shm proc pool");
+    let shm_plane = shm_sup.data_plane() == DataPlane::Shm;
+    let _ = run_proc_interleaved(&shm_sup, &plan, &imgs, 2, 1); // warm-up
+    let shm_fps = run_proc_interleaved(&shm_sup, &plan, &imgs, frames, 2);
+    let shm_tax_pct = 100.0 * (sup_fps - shm_fps) / sup_fps.max(1e-9);
+    let shm_stats = shm_sup.stats();
+    println!(
+        "multi-process (shm ring):       {shm_fps:>8.2} fps ({shm_tax_pct:+.1}% isolation tax, plane={}, {} shm dispatches, {} fallbacks)",
+        if shm_plane { "shm" } else { "file" },
+        shm_stats.shm_dispatched,
+        shm_stats.shm_fallbacks
+    );
+    println!(
+        "shm tax vs spill-file tax: {shm_tax_pct:.1}% vs {isolation_tax_pct:.1}% — {}",
+        if !shm_plane || shm_tax_pct < isolation_tax_pct { "PASS" } else { "FAIL" }
     );
 
     // --- machine-readable report at the repo root ---
@@ -414,8 +446,16 @@ fn main() {
         overhead_pct.map_or("null".into(), |o| format!("{}", o < 2.0)),
     ));
     json.push_str(&format!(
-        "  \"proc\": {{\"workers\": {proc_workers}, \"fps_in_process\": {sup_fps:.2}, \"fps_multi_process\": {proc_fps:.2}, \"isolation_tax_pct\": {isolation_tax_pct:.2}, \"clean_frame_ms\": {clean_frame_ms:.2}, \"killed_frame_ms\": {killed_frame_ms:.2}, \"respawn_recovery_ms\": {respawn_recovery_ms:.2}, \"respawns\": {}}},\n",
+        "  \"proc\": {{\"workers\": {proc_workers}, \"data_plane\": \"file\", \"fps_in_process\": {sup_fps:.2}, \"fps_multi_process\": {proc_fps:.2}, \"isolation_tax_pct\": {isolation_tax_pct:.2}, \"clean_frame_ms\": {clean_frame_ms:.2}, \"killed_frame_ms\": {killed_frame_ms:.2}, \"respawn_recovery_ms\": {respawn_recovery_ms:.2}, \"respawns\": {}}},\n",
         proc_stats.respawns
+    ));
+    json.push_str(&format!(
+        "  \"proc.shm\": {{\"workers\": {proc_workers}, \"data_plane\": \"{}\", \"fps_in_process\": {sup_fps:.2}, \"fps_multi_process\": {shm_fps:.2}, \"isolation_tax_pct\": {shm_tax_pct:.2}, \"shm_dispatched\": {}, \"shm_fallbacks\": {}, \"slots_reclaimed\": {}, \"shm_mapped_bytes\": {}}},\n",
+        if shm_plane { "shm" } else { "file" },
+        shm_stats.shm_dispatched,
+        shm_stats.shm_fallbacks,
+        shm_stats.slots_reclaimed,
+        shm_stats.shm_mapped_bytes
     ));
     json.push_str("  \"derived\": {\n");
     json.push_str(&format!(
@@ -425,6 +465,14 @@ fn main() {
     json.push_str(&format!("    \"interleaved_beats_serial_queue\": {beats},\n"));
     json.push_str(&format!(
         "    \"calibrated_matches_or_beats_static_all_rows\": {cal_dominates},\n"
+    ));
+    json.push_str(&format!(
+        "    \"shm_vs_file_fps_ratio\": {:.3},\n",
+        shm_fps / proc_fps.max(1e-9)
+    ));
+    json.push_str(&format!(
+        "    \"shm_tax_below_file_tax\": {},\n",
+        !shm_plane || shm_tax_pct < isolation_tax_pct
     ));
     json.push_str(&format!(
         "    \"calibration_samples\": {}\n",

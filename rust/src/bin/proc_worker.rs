@@ -8,10 +8,12 @@
 //!   --calibrate 0|1       run the startup microbench (default 1)
 //!   --engine-workers N    ScanEngine thread budget (default 1)
 //!   --heartbeat-ms N      liveness tick interval (default 200)
+//!   --boot-delay-ms N     chaos hook: sleep before any output
+//!                         (default 0; heartbeat-deferral tests)
 //!   --selftest            protocol round-trip smoke, then exit 0
 //!                         (CI hook; no supervisor needed)
 
-use inthist::proc::protocol::{ProcMsg, WireAssign};
+use inthist::proc::protocol::{ProcMsg, WireAssign, NO_SLOT, PLANE_SHM};
 use inthist::proc::worker::{run, WorkerConfig};
 use std::time::Duration;
 
@@ -19,7 +21,7 @@ fn usage() -> ! {
     eprintln!(
         "proc-worker: child process of the inthist multi-process plane\n\
          usage: proc-worker [--calibrate 0|1] [--engine-workers N] \
-         [--heartbeat-ms N] [--selftest]"
+         [--heartbeat-ms N] [--boot-delay-ms N] [--selftest]"
     );
     std::process::exit(2)
 }
@@ -39,8 +41,26 @@ fn selftest() -> Result<(), String> {
             img_w: 48,
             img_path: "/tmp/img.bin".into(),
             out_path: "/tmp/out.bin".into(),
+            plane: PLANE_SHM,
+            slot: 2,
+            slot_off: 2 * (3072 + 98304),
+            ring_bytes: 4 * (3072 + 98304),
+            ring_path: "/dev/shm/inthist-selftest.ring".into(),
         }),
-        ProcMsg::ShardDone { frame_id: 7, shard_id: 3, kernel_time_us: 120, checksum: 0xDEAD },
+        ProcMsg::ShardDone {
+            frame_id: 7,
+            shard_id: 3,
+            kernel_time_us: 120,
+            checksum: 0xDEAD,
+            slot: 2,
+        },
+        ProcMsg::ShardDone {
+            frame_id: 7,
+            shard_id: 4,
+            kernel_time_us: 120,
+            checksum: 0xBEEF,
+            slot: NO_SLOT,
+        },
         ProcMsg::ShardFailed {
             frame_id: 7,
             shard_id: 3,
@@ -94,6 +114,12 @@ fn main() {
                 let v = argv.get(i + 1).unwrap_or_else(|| usage());
                 let ms: u64 = v.parse().unwrap_or_else(|_| usage());
                 cfg.heartbeat = Duration::from_millis(ms.max(1));
+                i += 2;
+            }
+            "--boot-delay-ms" => {
+                let v = argv.get(i + 1).unwrap_or_else(|| usage());
+                let ms: u64 = v.parse().unwrap_or_else(|_| usage());
+                cfg.boot_delay = Duration::from_millis(ms);
                 i += 2;
             }
             "--help" | "-h" => usage(),

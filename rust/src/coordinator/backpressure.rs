@@ -210,6 +210,110 @@ impl Drop for AdmissionGuard {
     }
 }
 
+/// Server-wide host-memory token bucket — [`AdmissionControl`]
+/// generalized from unit slots to byte-weighted ones.
+///
+/// The shard planner's budget is per-plan, so N concurrent spilled
+/// frames could legitimately each stay under their own budget while
+/// the server residents N× the host's — the overcommit bug this type
+/// fixes.  Every byte-weighted holding (a frame's peak-resident
+/// projection, a proc-plane ring mapping) CAS-reserves here first; a
+/// refused reservation sheds typed at the caller instead of silently
+/// overcommitting.
+///
+/// `cap == 0` means *unlimited but metered*: reservations always
+/// succeed and the gauge still tracks, so enabling enforcement later
+/// is a config change, not a code change.
+#[derive(Debug)]
+pub struct MemoryBudget {
+    cap: usize,
+    reserved: AtomicUsize,
+    high_water: AtomicUsize,
+    shed: AtomicUsize,
+}
+
+impl MemoryBudget {
+    pub fn new(cap: usize) -> Arc<MemoryBudget> {
+        Arc::new(MemoryBudget {
+            cap,
+            reserved: AtomicUsize::new(0),
+            high_water: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+        })
+    }
+
+    /// Reserve `bytes` against the bucket: `None` (and a `shed` tick)
+    /// when the reservation would exceed `cap`.  The returned guard
+    /// releases on drop — any path, including unwind.
+    pub fn try_reserve(self: &Arc<Self>, bytes: usize) -> Option<MemoryReservation> {
+        let mut cur = self.reserved.load(Ordering::Relaxed);
+        loop {
+            let next = match cur.checked_add(bytes) {
+                Some(n) => n,
+                None => {
+                    self.shed.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+            };
+            if self.cap != 0 && next > self.cap {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            match self.reserved.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.high_water.fetch_max(next, Ordering::Relaxed);
+                    return Some(MemoryReservation { budget: Arc::clone(self), bytes });
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Configured cap in bytes (`0` ⇒ unlimited).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Bytes currently reserved by live guards.
+    pub fn reserved(&self) -> usize {
+        self.reserved.load(Ordering::Relaxed)
+    }
+
+    /// Highest concurrent reservation observed.
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    /// Reservations refused so far.
+    pub fn shed(&self) -> usize {
+        self.shed.load(Ordering::Relaxed)
+    }
+}
+
+/// A held byte reservation; dropping it returns the bytes.
+#[derive(Debug)]
+pub struct MemoryReservation {
+    budget: Arc<MemoryBudget>,
+    bytes: usize,
+}
+
+impl MemoryReservation {
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for MemoryReservation {
+    fn drop(&mut self) {
+        self.budget.reserved.fetch_sub(self.bytes, Ordering::AcqRel);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,6 +405,49 @@ mod tests {
         drop(c);
         assert_eq!(ctl.active(), 0);
         assert_eq!(ctl.admitted(), 3);
+    }
+
+    #[test]
+    fn memory_budget_caps_bytes_and_reservation_frees_on_drop() {
+        let mem = MemoryBudget::new(1000);
+        let a = mem.try_reserve(600).expect("first reservation fits");
+        assert_eq!(mem.reserved(), 600);
+        assert!(mem.try_reserve(600).is_none(), "1200 > cap must shed");
+        assert_eq!(mem.shed(), 1);
+        let b = mem.try_reserve(400).expect("exact fit");
+        assert_eq!(mem.reserved(), 1000);
+        assert_eq!(mem.high_water(), 1000);
+        drop(a);
+        assert_eq!(mem.reserved(), 400);
+        let c = mem.try_reserve(500).expect("freed bytes reusable");
+        assert_eq!(c.bytes(), 500);
+        drop(b);
+        drop(c);
+        assert_eq!(mem.reserved(), 0);
+        assert_eq!(mem.high_water(), 1000, "peak survives the drops");
+    }
+
+    #[test]
+    fn zero_cap_budget_meters_without_shedding() {
+        let mem = MemoryBudget::new(0);
+        let r = mem.try_reserve(usize::MAX / 2).expect("unlimited always admits");
+        assert_eq!(mem.reserved(), usize::MAX / 2);
+        assert_eq!(mem.shed(), 0);
+        drop(r);
+        assert_eq!(mem.reserved(), 0);
+    }
+
+    #[test]
+    fn panicking_reservation_holder_returns_bytes() {
+        let mem = MemoryBudget::new(100);
+        let mem2 = Arc::clone(&mem);
+        let t = std::thread::spawn(move || {
+            let _r = mem2.try_reserve(100).expect("bytes");
+            panic!("frame died mid-flight");
+        });
+        assert!(t.join().is_err());
+        assert_eq!(mem.reserved(), 0, "unwind must return the bytes");
+        assert!(mem.try_reserve(100).is_some());
     }
 
     /// The token-leak regression this type exists to fix: a holder that

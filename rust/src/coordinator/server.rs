@@ -57,7 +57,9 @@
 
 use crate::analytics::motion::{MotionDetector, MotionMap};
 use crate::analytics::tracker::{Track, TrackerConfig};
-use crate::coordinator::backpressure::{AdmissionControl, AdmissionGuard};
+use crate::coordinator::backpressure::{
+    AdmissionControl, AdmissionGuard, MemoryBudget, MemoryReservation,
+};
 use crate::coordinator::batcher::{QueryBatcher, QueryResponse};
 use crate::coordinator::frame_pool::{FramePool, PoolStats, PooledTensor};
 use crate::coordinator::metrics::LatencySummary;
@@ -110,6 +112,17 @@ pub struct ServerConfig {
     /// set `cpu_fallback_budget ≤ host_memory_budget` to enforce
     /// strict residency.
     pub host_memory_budget: usize,
+    /// Server-wide cap on *concurrently reserved* host bytes across
+    /// every in-flight compute op (sharded reassembly buffers, spilled
+    /// peak residency, proc-plane shm rings).  `host_memory_budget`
+    /// above is per-frame; this bucket is what stops N concurrent
+    /// in-budget frames from overcommitting the host N× — the
+    /// accounting bug the per-frame check alone cannot catch.  Work
+    /// past the cap is shed typed (an `overload:` error), never
+    /// queued.  `0` (the default) = unlimited but still metered, so
+    /// [`Server::health`] reports live reservation/high-water numbers
+    /// either way.
+    pub host_memory_cap: usize,
     /// Compile retry/backoff/negative-TTL policy for the shared
     /// [`CompileCache`].
     pub compile_retry: RetryPolicy,
@@ -162,6 +175,7 @@ impl Default for ServerConfig {
             workers_per_stream: 2,
             shard_workers: 4,
             host_memory_budget: 1 << 30,
+            host_memory_cap: 0,
             compile_retry: RetryPolicy::default(),
             shard_max_attempts: 3,
             frame_deadline: None,
@@ -216,6 +230,15 @@ pub struct ServerHealth {
     pub shard_frames_failed: usize,
     /// Frames whose ticket was dropped before reassembly.
     pub shard_frames_abandoned: usize,
+    /// Host bytes currently reserved against the server-wide memory
+    /// bucket (sharded buffers + spilled peaks + proc shm rings).
+    pub mem_reserved: usize,
+    /// High-water mark of `mem_reserved` — ≤ `mem_cap` when capped.
+    pub mem_high_water: usize,
+    /// Compute ops shed because a reservation would overcommit the cap.
+    pub mem_shed: usize,
+    /// The configured [`ServerConfig::host_memory_cap`] (0 = unlimited).
+    pub mem_cap: usize,
 }
 
 /// Capacity of the global latency reservoir (ring overwrite beyond).
@@ -351,6 +374,12 @@ struct Inner {
     /// `overload_inflight_limit` applies).  Refreshed by
     /// [`Server::recalibrate`].
     overload_limit_derived: AtomicUsize,
+    /// Server-wide host-memory token bucket ([`ServerConfig::
+    /// host_memory_cap`]): every route's peak-residency bytes are
+    /// reserved here for the life of the op, and the proc plane's shm
+    /// ring mappings charge it too, so concurrent in-budget frames
+    /// can no longer overcommit the host unmetered.
+    mem: Arc<MemoryBudget>,
     metrics: Metrics,
     admission: Arc<AdmissionControl>,
     session_seq: AtomicUsize,
@@ -520,7 +549,14 @@ impl Inner {
                 max_attempts: self.config.shard_max_attempts.max(1),
                 ..self.config.proc.clone()
             };
-            let sup = ProcSupervisor::with_faults(cfg, self.config.faults.clone())?;
+            // The supervisor charges its shm ring mappings against the
+            // same server-wide bucket every compute op reserves from,
+            // so data-plane memory is part of the overcommit math.
+            let sup = ProcSupervisor::with_instruments(
+                cfg,
+                self.config.faults.clone(),
+                Some(Arc::clone(&self.mem)),
+            )?;
             *guard = Some(Arc::new(sup));
         }
         Ok(Arc::clone(guard.as_ref().expect("supervisor just built")))
@@ -564,6 +600,36 @@ impl Inner {
         }
     }
 
+    /// Reserve `bytes` of an op's peak host residency against the
+    /// server-wide bucket for the life of the returned guard, or shed
+    /// typed.  The per-frame `host_memory_budget` check cannot see
+    /// *concurrent* frames — N in-budget ops used to overcommit the
+    /// host N× unmetered; this bucket is the fix.
+    fn reserve_host(&self, bytes: usize) -> Result<MemoryReservation> {
+        self.mem.try_reserve(bytes).ok_or_else(|| {
+            anyhow!(
+                "overload: host memory overcommit refused ({bytes} B requested, \
+                 {} B of {} B cap already reserved)",
+                self.mem.reserved(),
+                self.mem.cap()
+            )
+        })
+    }
+
+    /// Close the predicted-vs-measured loop on the tuning cache: when
+    /// a frame's report contradicts the cost model's prediction badly
+    /// enough, the [`TunedPlanner`] entry for that geometry is stale
+    /// (machine changed, thermal shift) and gets evicted so the next
+    /// frame re-searches instead of serving the stale plan forever.
+    fn note_drift(&self, bins: usize, h: usize, w: usize, plan: &ShardPlan, measured: Duration) {
+        let (Some(tuner), Some(cal)) = (&self.tuner, &self.config.calibrator) else {
+            return;
+        };
+        let workers = self.config.shard_workers.max(1);
+        let predicted = plan.predict_total_with(&cal.snapshot(), workers).wall;
+        tuner.observe_report(h, w, bins, workers, predicted, measured);
+    }
+
     /// Large-image route: interleaved sharded execution reassembled
     /// into a pooled host tensor.  Refused when the tensor exceeds the
     /// host budget — that is [`Self::compute_spilled`]'s job.
@@ -576,6 +642,9 @@ impl Inner {
                 self.config.host_memory_budget
             ));
         }
+        // The reassembly tensor is resident for the whole op; charge it
+        // against the server-wide bucket before committing any work.
+        let _mem = self.reserve_host(tensor_bytes)?;
         let plan = self.shard_plan(img.bins, img.h, img.w);
         let image = Arc::new(img.clone());
         let ticket = self.submit_ticket(&image, &plan)?;
@@ -584,6 +653,7 @@ impl Inner {
             Some(d) => ticket.reassemble_into_deadline(&mut out, d)?,
             None => ticket.reassemble_into(&mut out)?,
         };
+        self.note_drift(img.bins, img.h, img.w, &plan, report.wall);
         Ok((out, report.wall))
     }
 
@@ -592,12 +662,19 @@ impl Inner {
     /// budget, never the full tensor.
     fn compute_spilled(&self, image: &Arc<BinnedImage>) -> Result<(TensorStore, ShardReport)> {
         let _op = self.begin_op(true)?;
+        // Peak residency on this route is bounded by the shard plan
+        // (never the full tensor — that's the point of spilling), so
+        // the bucket charge is the per-frame budget ceiling, settled
+        // against `ShardReport::peak_resident_bytes` by the tests.
+        let tensor_bytes = image.bins * image.h * image.w * 4;
+        let _mem = self.reserve_host(tensor_bytes.min(self.config.host_memory_budget))?;
         let plan = self.shard_plan(image.bins, image.h, image.w);
         let ticket = self.submit_ticket(image, &plan)?;
         let (store, report) = match self.config.frame_deadline {
             Some(d) => ticket.reassemble_spilled_deadline(d)?,
             None => ticket.reassemble_spilled()?,
         };
+        self.note_drift(image.bins, image.h, image.w, &plan, report.wall);
         self.metrics.frames.fetch_add(1, Ordering::Relaxed);
         self.metrics.push_latency(report.wall.as_secs_f64() * 1e3);
         Ok((store, report))
@@ -690,6 +767,7 @@ impl Server {
                 shard: Mutex::new(None),
                 proc: Mutex::new(None),
                 tuner,
+                mem: MemoryBudget::new(config.host_memory_cap),
                 metrics: Metrics::default(),
                 admission,
                 session_seq: AtomicUsize::new(0),
@@ -833,6 +911,10 @@ impl Server {
             shard_workers_total: total,
             shard_frames_failed: failed,
             shard_frames_abandoned: abandoned,
+            mem_reserved: inner.mem.reserved(),
+            mem_high_water: inner.mem.high_water(),
+            mem_shed: inner.mem.shed(),
+            mem_cap: inner.mem.cap(),
         }
     }
 
@@ -1317,6 +1399,71 @@ mod tests {
             crate::histogram::region::region_histogram(&expected, rect)
         );
         assert_eq!(session.stats().frames, 1);
+    }
+
+    /// The server-wide memory-accounting fix: the per-frame
+    /// `host_memory_budget` check cannot see *concurrent* frames, so
+    /// N in-budget ops used to overcommit the host N× unmetered.  Now
+    /// every op reserves its peak-residency bytes from one shared
+    /// token bucket and overcommit sheds typed — and the bucket's
+    /// high-water mark proves it never exceeded the cap.
+    #[test]
+    fn host_memory_cap_sheds_concurrent_overcommit_typed() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine.bins = 8;
+        cfg.engine.device_memory_budget = 1 << 10; // large route
+        cfg.engine.cpu_fallback_budget = 16 << 10;
+        cfg.host_memory_budget = 8 << 10; // per-frame: the spill route
+        cfg.host_memory_cap = 12 << 10; // server-wide: one frame fits, two don't
+        cfg.shard_workers = 2;
+        let srv = Server::new(manifest(), cfg);
+        let img = SyntheticVideo::new(48, 40, 1, 6).frame(0).binned(8);
+        let image = Arc::new(img.clone());
+
+        // A concurrent op's worth of bytes held against the bucket…
+        let hold = srv.inner.mem.try_reserve(8 << 10).expect("first reservation fits the cap");
+        // …means this frame's 8 KiB charge would overcommit the cap.
+        let err = srv.compute_spilled(&image).err().expect("must shed").to_string();
+        assert!(err.contains("overcommit"), "{err}");
+        drop(hold);
+
+        // Once the concurrent hold frees, the same frame serves.
+        let (store, report) = srv.compute_spilled(&image).expect("fits after the hold frees");
+        assert!(report.peak_resident_bytes <= srv.config().host_memory_budget);
+        let expected = integral_histogram_seq(&img);
+        let back = store.to_histogram().expect("materialize for verification");
+        assert_eq!(expected.max_abs_diff(&back), 0.0);
+
+        let h = srv.health();
+        assert_eq!(h.mem_cap, 12 << 10);
+        assert!(h.mem_high_water <= h.mem_cap, "bucket never overcommitted: {h:?}");
+        assert!(h.mem_shed >= 1, "the refused op is counted");
+        assert_eq!(h.mem_reserved, 0, "reservations settle when ops finish");
+    }
+
+    /// With no cap configured (the default) the bucket is unlimited
+    /// but still metered: health reports a live high-water mark and
+    /// nothing sheds — the tier-1 behaviour is unchanged.
+    #[test]
+    fn uncapped_memory_bucket_meters_without_shedding() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine.bins = 8;
+        cfg.engine.device_memory_budget = 1 << 10; // large route
+        cfg.shard_workers = 2;
+        let srv = Server::new(manifest(), cfg);
+        let img = SyntheticVideo::new(40, 40, 1, 2).frame(0).binned(8);
+        let (ih, _) = srv.compute(&img).expect("uncapped bucket never sheds");
+        let expected = integral_histogram_seq(&img);
+        assert_eq!(expected.max_abs_diff(&ih), 0.0);
+        let h = srv.health();
+        assert_eq!(h.mem_cap, 0);
+        assert_eq!(h.mem_shed, 0);
+        assert!(
+            h.mem_high_water >= 8 * 40 * 40 * 4,
+            "the sharded op's tensor bytes were metered: {}",
+            h.mem_high_water
+        );
+        assert_eq!(h.mem_reserved, 0);
     }
 
     #[test]

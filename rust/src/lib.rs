@@ -71,7 +71,8 @@ pub mod prelude {
     pub use crate::histogram::types::{IntegralHistogram, Strategy};
     pub use crate::fault::{FaultAction, FaultInjector, FaultSite, FaultSpec, FaultStats};
     pub use crate::proc::{
-        PlacementMap, ProcMsg, ProcPoolConfig, ProcStats, ProcSupervisor, ProtocolError,
+        DataPlane, PlacementMap, ProcMsg, ProcPoolConfig, ProcStats, ProcSupervisor,
+        ProtocolError,
     };
     pub use crate::runtime::artifact::{ArtifactManifest, ArtifactMeta};
     pub use crate::runtime::client::HistogramExecutor;

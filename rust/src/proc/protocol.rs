@@ -3,12 +3,23 @@
 //!
 //! **Control only.**  The messages here carry assignments, completions,
 //! heartbeats and calibration snapshots — kilobytes.  Bulk tensor data
-//! never crosses a pipe: the supervisor spills the binned image to a
+//! never crosses a pipe.  On the **file plane** (v1) the supervisor
+//! spills the binned image to a
 //! [`TensorStore`](crate::shard::TensorStore) file, the child writes
-//! its partial tensor to another, and the protocol exchanges *paths*
-//! (plus a payload checksum, because the store's per-row checksums
-//! live in the writer's RAM and cannot follow the file across the
-//! process boundary).
+//! its partial tensor to another, and the protocol exchanges *paths*.
+//! On the **shared-memory plane** (v2, [`crate::proc::shm`]) the
+//! assignment instead names a ring slot — `(ring_path, ring_bytes,
+//! slot, slot_off)` — whose interior holds the input strip and, after
+//! compute, the partial written in place.  Either way a payload
+//! checksum rides the control frame, because the store's per-row
+//! checksums live in the writer's RAM and cannot follow the bytes
+//! across the process boundary.
+//!
+//! **Versioning.**  Version 2 is a minor bump: the v2 `AssignShard` /
+//! `ShardDone` payloads are the v1 layouts with the data-plane fields
+//! appended, and this side still *decodes* v1 frames (as file-plane
+//! assignments) so a mixed-version pipe fails soft, not weird.
+//! Writers always emit v2.
 //!
 //! **Wire format.**  Every frame is
 //!
@@ -29,8 +40,18 @@ use std::io::{Read, Write};
 
 /// "IH" — rejects garbage on the pipe before any length is trusted.
 pub const PROTOCOL_MAGIC: u16 = 0x4948;
-/// Bumped on any wire-format change; both sides must match exactly.
-pub const PROTOCOL_VERSION: u16 = 1;
+/// Bumped on any wire-format change.  v2 added the shared-memory
+/// data-plane fields to `AssignShard`/`ShardDone`; frames down to
+/// [`PROTOCOL_VERSION_MIN`] still decode (minor bump).
+pub const PROTOCOL_VERSION: u16 = 2;
+/// Oldest version this side still decodes (v1 = file-plane payloads).
+pub const PROTOCOL_VERSION_MIN: u16 = 1;
+/// `WireAssign::plane` — spill-file data plane (v1 behaviour).
+pub const PLANE_FILE: u8 = 0;
+/// `WireAssign::plane` — shared-memory ring slot data plane.
+pub const PLANE_SHM: u8 = 1;
+/// `ShardDone::slot` value meaning "no ring slot" (file plane / v1).
+pub const NO_SLOT: u64 = u64::MAX;
 /// Control frames are small; anything bigger than this is a corrupt
 /// length field, not a message worth buffering.
 pub const MAX_PAYLOAD: u32 = 1 << 20;
@@ -64,7 +85,11 @@ impl std::fmt::Display for ProtocolError {
             ProtocolError::Truncated => write!(f, "truncated protocol frame"),
             ProtocolError::BadMagic { got } => write!(f, "bad protocol magic {got:#06x}"),
             ProtocolError::VersionMismatch { got } => {
-                write!(f, "protocol version {got} (this side speaks {PROTOCOL_VERSION})")
+                write!(
+                    f,
+                    "protocol version {got} (this side speaks \
+                     {PROTOCOL_VERSION_MIN}..={PROTOCOL_VERSION})"
+                )
             }
             ProtocolError::Oversized { len } => {
                 write!(f, "payload length {len} exceeds cap {MAX_PAYLOAD}")
@@ -103,9 +128,40 @@ pub struct WireAssign {
     pub img_h: u64,
     pub img_w: u64,
     /// Spilled binned image (bin indices as f32, Fig. 2 layout).
+    /// Empty on the shm plane — the strip is already in the slot.
     pub img_path: String,
-    /// Where the child must leave its `nbins×nrows×w` partial.
+    /// Where the child must leave its `nbins×nrows×w` partial
+    /// ([`PLANE_FILE`] only; empty on the shm plane).
     pub out_path: String,
+    /// Data plane: [`PLANE_FILE`] or [`PLANE_SHM`] (v2; v1 frames
+    /// decode as [`PLANE_FILE`]).
+    pub plane: u8,
+    /// Ring slot index ([`PLANE_SHM`] only).
+    pub slot: u64,
+    /// Byte offset of the slot within the ring.  The input strip
+    /// (`nrows×img_w` f32 LE) starts here; the partial
+    /// (`nbins×nrows×img_w` f32 LE) is written in place directly
+    /// after it.
+    pub slot_off: u64,
+    /// Total mapped ring size — the child validates `slot_off + strip
+    /// + partial` against this *and* against the ring file's real
+    /// length before touching the mapping.
+    pub ring_bytes: u64,
+    /// Ring file to `mmap` ([`PLANE_SHM`] only).
+    pub ring_path: String,
+}
+
+impl WireAssign {
+    /// Input strip bytes (`nrows × img_w` f32 LE).  `None` on overflow
+    /// — decode rejects such frames as malformed.
+    pub fn strip_bytes(&self) -> Option<u64> {
+        self.nrows.checked_mul(self.img_w)?.checked_mul(4)
+    }
+
+    /// Partial tensor bytes (`nbins × nrows × img_w` f32 LE).
+    pub fn partial_bytes(&self) -> Option<u64> {
+        self.nbins.checked_mul(self.nrows)?.checked_mul(self.img_w)?.checked_mul(4)
+    }
 }
 
 /// One control-plane message.
@@ -113,9 +169,11 @@ pub struct WireAssign {
 pub enum ProcMsg {
     /// Parent → child: compute one shard.
     AssignShard(WireAssign),
-    /// Child → parent: shard done; partial at `AssignShard.out_path`,
-    /// `checksum` = FNV-1a over its f32 LE bytes.
-    ShardDone { frame_id: u64, shard_id: u64, kernel_time_us: u64, checksum: u32 },
+    /// Child → parent: shard done; partial at `AssignShard.out_path`
+    /// (file plane) or in ring slot `slot` ([`NO_SLOT`] = file plane),
+    /// `checksum` = FNV-1a over its f32 LE bytes — computed over the
+    /// ring-slot bytes on the shm plane, the file payload otherwise.
+    ShardDone { frame_id: u64, shard_id: u64, kernel_time_us: u64, checksum: u32, slot: u64 },
     /// Child → parent: one compute attempt failed (the *supervisor*
     /// owns the retry budget).
     ShardFailed { frame_id: u64, shard_id: u64, panicked: bool, reason: String },
@@ -228,12 +286,20 @@ impl ProcMsg {
                 }
                 put_string(&mut p, &a.img_path);
                 put_string(&mut p, &a.out_path);
+                // v2 data-plane tail (appended so the v1 prefix layout
+                // is unchanged).
+                p.push(a.plane);
+                p.extend_from_slice(&a.slot.to_le_bytes());
+                p.extend_from_slice(&a.slot_off.to_le_bytes());
+                p.extend_from_slice(&a.ring_bytes.to_le_bytes());
+                put_string(&mut p, &a.ring_path);
             }
-            ProcMsg::ShardDone { frame_id, shard_id, kernel_time_us, checksum } => {
+            ProcMsg::ShardDone { frame_id, shard_id, kernel_time_us, checksum, slot } => {
                 p.extend_from_slice(&frame_id.to_le_bytes());
                 p.extend_from_slice(&shard_id.to_le_bytes());
                 p.extend_from_slice(&kernel_time_us.to_le_bytes());
                 p.extend_from_slice(&checksum.to_le_bytes());
+                p.extend_from_slice(&slot.to_le_bytes());
             }
             ProcMsg::ShardFailed { frame_id, shard_id, panicked, reason } => {
                 p.extend_from_slice(&frame_id.to_le_bytes());
@@ -282,7 +348,7 @@ impl ProcMsg {
             return Err(ProtocolError::BadMagic { got: magic });
         }
         let version = u16::from_le_bytes([buf[2], buf[3]]);
-        if version != PROTOCOL_VERSION {
+        if !(PROTOCOL_VERSION_MIN..=PROTOCOL_VERSION).contains(&version) {
             return Err(ProtocolError::VersionMismatch { got: version });
         }
         let ty = buf[4];
@@ -294,11 +360,11 @@ impl ProcMsg {
         if buf.len() < HEADER_LEN + len {
             return Err(ProtocolError::Truncated);
         }
-        let msg = Self::decode_payload(ty, &buf[HEADER_LEN..HEADER_LEN + len])?;
+        let msg = Self::decode_payload(ty, version, &buf[HEADER_LEN..HEADER_LEN + len])?;
         Ok((msg, HEADER_LEN + len))
     }
 
-    fn decode_payload(ty: u8, payload: &[u8]) -> Result<ProcMsg, ProtocolError> {
+    fn decode_payload(ty: u8, version: u16, payload: &[u8]) -> Result<ProcMsg, ProtocolError> {
         let mut c = Cursor { buf: payload, pos: 0 };
         let msg = match ty {
             TY_ASSIGN => {
@@ -312,13 +378,20 @@ impl ProcMsg {
                 let img_w = c.u64()?;
                 let img_path = c.string()?;
                 let out_path = c.string()?;
+                // v1 frames stop here and are file-plane by definition.
+                let (plane, slot, slot_off, ring_bytes, ring_path) = if version >= 2 {
+                    let plane = c.take(1)?[0];
+                    (plane, c.u64()?, c.u64()?, c.u64()?, c.string()?)
+                } else {
+                    (PLANE_FILE, 0, 0, 0, String::new())
+                };
                 if nbins == 0 || nrows == 0 || img_h == 0 || img_w == 0 {
                     return Err(ProtocolError::Malformed("degenerate shard geometry".into()));
                 }
-                if row0 + nrows > img_h {
+                if row0.checked_add(nrows).map_or(true, |end| end > img_h) {
                     return Err(ProtocolError::Malformed("shard strip past image".into()));
                 }
-                ProcMsg::AssignShard(WireAssign {
+                let a = WireAssign {
                     frame_id,
                     shard_id,
                     bin0,
@@ -329,13 +402,46 @@ impl ProcMsg {
                     img_w,
                     img_path,
                     out_path,
-                })
+                    plane,
+                    slot,
+                    slot_off,
+                    ring_bytes,
+                    ring_path,
+                };
+                match a.plane {
+                    PLANE_FILE => {}
+                    PLANE_SHM => {
+                        // A hostile/corrupt slot geometry must never
+                        // reach the child's mmap arithmetic.
+                        if a.ring_path.is_empty() {
+                            return Err(ProtocolError::Malformed("shm assign without ring".into()));
+                        }
+                        let need = a
+                            .strip_bytes()
+                            .zip(a.partial_bytes())
+                            .and_then(|(s, p)| s.checked_add(p))
+                            .and_then(|n| n.checked_add(a.slot_off));
+                        match need {
+                            Some(n) if n <= a.ring_bytes => {}
+                            _ => {
+                                return Err(ProtocolError::Malformed(
+                                    "shm slot region past ring".into(),
+                                ))
+                            }
+                        }
+                    }
+                    other => {
+                        return Err(ProtocolError::Malformed(format!("data plane byte {other}")))
+                    }
+                }
+                ProcMsg::AssignShard(a)
             }
             TY_DONE => ProcMsg::ShardDone {
                 frame_id: c.u64()?,
                 shard_id: c.u64()?,
                 kernel_time_us: c.u64()?,
                 checksum: c.u32()?,
+                slot: if version >= 2 { c.u64()? } else { NO_SLOT },
             },
             TY_FAILED => {
                 let frame_id = c.u64()?;
@@ -412,7 +518,7 @@ impl ProcMsg {
             return Err(ProtocolError::BadMagic { got: magic });
         }
         let version = u16::from_le_bytes([header[2], header[3]]);
-        if version != PROTOCOL_VERSION {
+        if !(PROTOCOL_VERSION_MIN..=PROTOCOL_VERSION).contains(&version) {
             return Err(ProtocolError::VersionMismatch { got: version });
         }
         let ty = header[4];
@@ -422,7 +528,7 @@ impl ProcMsg {
         }
         let mut payload = vec![0u8; len as usize];
         r.read_exact(&mut payload)?;
-        Self::decode_payload(ty, &payload).map(Some)
+        Self::decode_payload(ty, version, &payload).map(Some)
     }
 }
 
@@ -432,21 +538,51 @@ mod tests {
     use crate::simulator::pcie::Card;
     use crate::util::prng::Xoshiro256;
 
+    fn file_assign() -> WireAssign {
+        WireAssign {
+            frame_id: 7,
+            shard_id: 3,
+            bin0: 8,
+            nbins: 4,
+            row0: 16,
+            nrows: 10,
+            img_h: 64,
+            img_w: 48,
+            img_path: "/tmp/img.bin".into(),
+            out_path: "/tmp/out-7-3.bin".into(),
+            plane: PLANE_FILE,
+            slot: 0,
+            slot_off: 0,
+            ring_bytes: 0,
+            ring_path: String::new(),
+        }
+    }
+
+    fn shm_assign() -> WireAssign {
+        // strip = 10×48×4 = 1920 B, partial = 4×10×48×4 = 7680 B.
+        WireAssign {
+            img_path: String::new(),
+            out_path: String::new(),
+            plane: PLANE_SHM,
+            slot: 1,
+            slot_off: 16384,
+            ring_bytes: 32768,
+            ring_path: "/dev/shm/inthist-shm-1-n0.ring".into(),
+            ..file_assign()
+        }
+    }
+
     fn samples() -> Vec<ProcMsg> {
         vec![
-            ProcMsg::AssignShard(WireAssign {
+            ProcMsg::AssignShard(file_assign()),
+            ProcMsg::AssignShard(shm_assign()),
+            ProcMsg::ShardDone {
                 frame_id: 7,
                 shard_id: 3,
-                bin0: 8,
-                nbins: 4,
-                row0: 16,
-                nrows: 10,
-                img_h: 64,
-                img_w: 48,
-                img_path: "/tmp/img.bin".into(),
-                out_path: "/tmp/out-7-3.bin".into(),
-            }),
-            ProcMsg::ShardDone { frame_id: 7, shard_id: 3, kernel_time_us: 1234, checksum: 0xDEAD },
+                kernel_time_us: 1234,
+                checksum: 0xDEAD,
+                slot: 1,
+            },
             ProcMsg::ShardFailed {
                 frame_id: 7,
                 shard_id: 3,
@@ -531,25 +667,94 @@ mod tests {
 
     #[test]
     fn degenerate_assignments_are_rejected() {
-        let mut a = WireAssign {
-            frame_id: 1,
-            shard_id: 0,
-            bin0: 0,
-            nbins: 0, // degenerate
-            row0: 0,
-            nrows: 4,
-            img_h: 8,
-            img_w: 8,
-            img_path: "x".into(),
-            out_path: "y".into(),
-        };
+        let mut a = WireAssign { nbins: 0, ..file_assign() }; // degenerate
         let bytes = ProcMsg::AssignShard(a.clone()).encode();
         assert!(matches!(ProcMsg::decode(&bytes), Err(ProtocolError::Malformed(_))));
         a.nbins = 2;
-        a.row0 = 6;
-        a.nrows = 4; // past the image
+        a.row0 = 60;
+        a.nrows = 10; // past the image
         let bytes = ProcMsg::AssignShard(a).encode();
         assert!(matches!(ProcMsg::decode(&bytes), Err(ProtocolError::Malformed(_))));
+    }
+
+    /// The v2 slot geometry is validated at decode, before any mmap
+    /// arithmetic could trust it: a slot region past the ring, a
+    /// ringless shm assign and an unknown plane byte are all malformed.
+    #[test]
+    fn hostile_slot_geometry_is_rejected() {
+        let past_ring = WireAssign { ring_bytes: 1024, ..shm_assign() };
+        let bytes = ProcMsg::AssignShard(past_ring).encode();
+        assert!(matches!(ProcMsg::decode(&bytes), Err(ProtocolError::Malformed(_))));
+
+        let no_ring = WireAssign { ring_path: String::new(), ..shm_assign() };
+        let bytes = ProcMsg::AssignShard(no_ring).encode();
+        assert!(matches!(ProcMsg::decode(&bytes), Err(ProtocolError::Malformed(_))));
+
+        // Overflowing strip/partial arithmetic is malformed, not UB.
+        let huge = WireAssign { nrows: 1, row0: 0, img_h: u64::MAX, img_w: u64::MAX, ..shm_assign() };
+        let bytes = ProcMsg::AssignShard(huge).encode();
+        assert!(matches!(ProcMsg::decode(&bytes), Err(ProtocolError::Malformed(_))));
+
+        let bad_plane = WireAssign { plane: 7, ..shm_assign() };
+        let bytes = ProcMsg::AssignShard(bad_plane).encode();
+        assert!(matches!(ProcMsg::decode(&bytes), Err(ProtocolError::Malformed(_))));
+    }
+
+    /// Minor-version compatibility: a v1 frame (no data-plane tail)
+    /// still decodes, as a file-plane assignment / slotless completion.
+    #[test]
+    fn v1_frames_decode_as_file_plane() {
+        // Hand-build the v1 AssignShard payload: 8 u64s + two strings.
+        let a = file_assign();
+        let mut p = Vec::new();
+        for v in [a.frame_id, a.shard_id, a.bin0, a.nbins, a.row0, a.nrows, a.img_h, a.img_w] {
+            p.extend_from_slice(&v.to_le_bytes());
+        }
+        for s in [&a.img_path, &a.out_path] {
+            p.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            p.extend_from_slice(s.as_bytes());
+        }
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&PROTOCOL_MAGIC.to_le_bytes());
+        wire.extend_from_slice(&1u16.to_le_bytes());
+        wire.push(1); // TY_ASSIGN
+        wire.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        wire.extend_from_slice(&p);
+        let (msg, used) = ProcMsg::decode(&wire).expect("v1 assign decodes");
+        assert_eq!(used, wire.len());
+        assert_eq!(msg, ProcMsg::AssignShard(a), "v1 decodes to the file plane");
+
+        // v1 ShardDone: three u64s + u32, no slot.
+        let mut p = Vec::new();
+        p.extend_from_slice(&7u64.to_le_bytes());
+        p.extend_from_slice(&3u64.to_le_bytes());
+        p.extend_from_slice(&1234u64.to_le_bytes());
+        p.extend_from_slice(&0xDEADu32.to_le_bytes());
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&PROTOCOL_MAGIC.to_le_bytes());
+        wire.extend_from_slice(&1u16.to_le_bytes());
+        wire.push(2); // TY_DONE
+        wire.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        wire.extend_from_slice(&p);
+        let (msg, _) = ProcMsg::decode(&wire).expect("v1 done decodes");
+        assert_eq!(
+            msg,
+            ProcMsg::ShardDone {
+                frame_id: 7,
+                shard_id: 3,
+                kernel_time_us: 1234,
+                checksum: 0xDEAD,
+                slot: NO_SLOT,
+            }
+        );
+
+        // Version 0 and future versions stay rejected.
+        let mut bad = wire.clone();
+        bad[2..4].copy_from_slice(&0u16.to_le_bytes());
+        assert!(matches!(ProcMsg::decode(&bad), Err(ProtocolError::VersionMismatch { got: 0 })));
+        let mut bad = wire;
+        bad[2..4].copy_from_slice(&(PROTOCOL_VERSION + 1).to_le_bytes());
+        assert!(matches!(ProcMsg::decode(&bad), Err(ProtocolError::VersionMismatch { .. })));
     }
 
     #[test]

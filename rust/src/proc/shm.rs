@@ -1,0 +1,452 @@
+//! Shared-memory data plane for the multi-process execution plane
+//! (DESIGN.md §10): a per-child ring of fixed-size slots in one
+//! `mmap`-shared tmpfs file, replacing the spill-file round-trip that
+//! every shard's input strip and output partial used to make.
+//!
+//! The file plane is the software analog of an unpinned, unoverlapped
+//! PCIe copy (the §4.4 failure mode): the child `write`s + `fsync`s a
+//! partial to disk and the supervisor `open`s + `read`s + `unlink`s it
+//! back.  Here the supervisor copies the input strip into a ring slot,
+//! the child computes the partial *in place* in the same slot, and the
+//! only per-shard traffic left on the pipe is the fixed-size control
+//! frame — the shard bytes never touch a filesystem that isn't RAM.
+//!
+//! ## Ring layout and slot lifecycle
+//!
+//! One ring per child, `nslots` (= `per_child_inflight`) slots of
+//! `slot_bytes` each, sized from the plan's largest shard
+//! (`strip + partial` bytes).  A slot's interior is task-shaped:
+//! the input strip occupies `[0, strip_bytes)` and the partial is
+//! written contiguously at `[strip_bytes, strip_bytes + partial_bytes)`
+//! — no per-ring header, so slot bookkeeping lives entirely in the
+//! supervisor and the protocol carries `(slot, slot_off, ring_bytes,
+//! ring_path)` (v2 `AssignShard`).
+//!
+//! Slot states (supervisor-side; the child never tracks them):
+//!
+//! ```text
+//!   Free ──acquire──▶ Loaded ──AssignShard──▶ (child computes) ──ShardDone──▶ verify ──▶ Free
+//!                        │                                                        │
+//!                        └────────── child died: reclaimed on reap ◀──────────────┘
+//! ```
+//!
+//! A SIGKILLed child's in-flight slots are reclaimed when the
+//! supervisor reaps the corpse — *before* the respawn — so a
+//! replacement child never races a ghost writer: the orphaned task is
+//! requeued and lands in a freshly acquired slot (possibly on another
+//! node).  Reclaims are counted (`ProcStats::slots_reclaimed`).
+//!
+//! ## Integrity and accounting
+//!
+//! The cross-process FNV-1a checksum moves from the spill-file payload
+//! to the ring slot: the child checksums the partial it wrote in
+//! place, the supervisor recomputes over the bytes it reads back out
+//! of the slot, and a mismatch is a retry, exactly like the file
+//! plane.  Mapped ring bytes are metered through the supervisor's
+//! [`ResidentGauge`](crate::shard::ResidentGauge) and (when the server
+//! provides one) reserved against the server-wide
+//! [`MemoryBudget`](crate::coordinator::backpressure::MemoryBudget),
+//! so shared mappings can't silently overcommit the host.
+//!
+//! ## Fallback ladder
+//!
+//! [`available`] is false when the platform has no usable `mmap` or no
+//! tmpfs mount; `ProcPoolConfig::data_plane = Auto` then resolves to
+//! the spill-file plane.  At runtime, a task too large for the ring's
+//! slots falls back to the file plane per-task when the ring is busy
+//! (and the ring is re-created larger once idle), and a ring-creation
+//! failure downgrades the node to the file plane — every downgrade is
+//! counted, never silent.
+
+use anyhow::{anyhow, Context, Result};
+use std::fs::OpenOptions;
+use std::path::{Path, PathBuf};
+
+/// Preferred tmpfs mount for ring files on Linux.
+const DEV_SHM: &str = "/dev/shm";
+
+/// True when this platform can serve the shared-memory plane: a
+/// working `mmap` and a tmpfs directory to back the ring files.
+pub fn available() -> bool {
+    cfg!(unix) && default_dir().is_some()
+}
+
+/// The directory ring files live in: `/dev/shm` when it exists (RAM,
+/// no disk I/O, no fsync cost), else `None` — callers fall back to
+/// the spill-file plane rather than paying disk latency for a "shared
+/// memory" that isn't.
+pub fn default_dir() -> Option<PathBuf> {
+    let p = PathBuf::from(DEV_SHM);
+    if p.is_dir() {
+        Some(p)
+    } else {
+        None
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const PROT_WRITE: c_int = 2;
+    pub const MAP_SHARED: c_int = 1;
+
+    // std already links libc on every unix target; declaring the two
+    // symbols we need avoids growing a dependency the container can't
+    // install (the repo vendors no libc crate).
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+}
+
+/// A shared read-write mapping of a ring file.  Raw-pointer copies
+/// only — the mapping is written concurrently by another process, so
+/// no long-lived `&[u8]`/`&mut [u8]` over it is ever materialized;
+/// every access is bounds-checked against the mapped length.
+struct MmapRegion {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// The region is an owned OS mapping; the raw pointer is not tied to
+// any thread. Cross-process synchronization rides the pipe protocol
+// (a slot is only touched by one side at a time).
+unsafe impl Send for MmapRegion {}
+
+impl MmapRegion {
+    #[cfg(unix)]
+    fn map(file: &std::fs::File, len: usize) -> Result<MmapRegion> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return Err(anyhow!("refusing to map an empty ring"));
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::map_failed() || ptr.is_null() {
+            return Err(anyhow!("mmap of {len} B ring failed"));
+        }
+        Ok(MmapRegion { ptr: ptr as *mut u8, len })
+    }
+
+    #[cfg(not(unix))]
+    fn map(_file: &std::fs::File, _len: usize) -> Result<MmapRegion> {
+        Err(anyhow!("shared-memory plane unavailable on this platform"))
+    }
+
+    fn copy_in(&self, off: usize, src: &[u8]) {
+        assert!(
+            off.checked_add(src.len()).is_some_and(|end| end <= self.len),
+            "shm write of {} B at {off} past mapping of {} B",
+            src.len(),
+            self.len
+        );
+        unsafe { std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(off), src.len()) };
+    }
+
+    fn copy_out(&self, off: usize, dst: &mut [u8]) {
+        assert!(
+            off.checked_add(dst.len()).is_some_and(|end| end <= self.len),
+            "shm read of {} B at {off} past mapping of {} B",
+            dst.len(),
+            self.len
+        );
+        unsafe { std::ptr::copy_nonoverlapping(self.ptr.add(off), dst.as_mut_ptr(), dst.len()) };
+    }
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        unsafe {
+            sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+        }
+    }
+}
+
+/// Supervisor side: the per-child slot ring.  Owns the backing file
+/// (unlinked on drop — the child's own mapping survives until it
+/// unmaps) and the slot free-list; the child never sees the
+/// bookkeeping, only `(slot, slot_off)` coordinates in `AssignShard`.
+pub struct ShmRing {
+    path: PathBuf,
+    map: MmapRegion,
+    nslots: usize,
+    slot_bytes: usize,
+    free: Vec<bool>,
+}
+
+impl ShmRing {
+    /// Create a ring of `nslots × slot_bytes` under `dir` (tmpfs for
+    /// the real plane; any directory works for tests).  `tag` keys the
+    /// file name so one process can own many rings (one per child,
+    /// re-created on growth).
+    pub fn create(dir: &Path, tag: &str, nslots: usize, slot_bytes: usize) -> Result<ShmRing> {
+        if nslots == 0 || slot_bytes == 0 {
+            return Err(anyhow!("degenerate ring geometry {nslots}x{slot_bytes}"));
+        }
+        let ring_bytes = nslots
+            .checked_mul(slot_bytes)
+            .ok_or_else(|| anyhow!("ring size overflow {nslots}x{slot_bytes}"))?;
+        let path = dir.join(format!("inthist-shm-{}-{tag}.ring", std::process::id()));
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("create ring file {}", path.display()))?;
+        file.set_len(ring_bytes as u64)
+            .with_context(|| format!("size ring file {}", path.display()))?;
+        let map = match MmapRegion::map(&file, ring_bytes) {
+            Ok(m) => m,
+            Err(e) => {
+                let _ = std::fs::remove_file(&path);
+                return Err(e);
+            }
+        };
+        Ok(ShmRing { path, map, nslots, slot_bytes, free: vec![true; nslots] })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn ring_bytes(&self) -> usize {
+        self.nslots * self.slot_bytes
+    }
+
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_bytes
+    }
+
+    pub fn nslots(&self) -> usize {
+        self.nslots
+    }
+
+    /// Byte offset of `slot` within the ring (what `AssignShard`
+    /// carries as `slot_off`).
+    pub fn slot_off(&self, slot: usize) -> u64 {
+        assert!(slot < self.nslots, "slot {slot} out of {}", self.nslots);
+        (slot * self.slot_bytes) as u64
+    }
+
+    /// Claim a free slot (`None` when all are in flight — the caller
+    /// queues, exactly like a full `per_child_inflight` window).
+    pub fn acquire(&mut self) -> Option<usize> {
+        let slot = self.free.iter().position(|f| *f)?;
+        self.free[slot] = false;
+        Some(slot)
+    }
+
+    /// Return a slot to the free list after its partial was read out
+    /// (or its task was requeued).
+    pub fn release(&mut self, slot: usize) {
+        assert!(slot < self.nslots, "slot {slot} out of {}", self.nslots);
+        self.free[slot] = true;
+    }
+
+    /// Reclaim-on-reap: free every in-flight slot of a child that just
+    /// died (called after the corpse is reaped, before the respawn, so
+    /// no ghost writer can race the replacement).  Returns how many
+    /// slots were reclaimed.
+    pub fn release_all(&mut self) -> usize {
+        let mut n = 0;
+        for f in &mut self.free {
+            if !*f {
+                *f = true;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Slots currently assigned.
+    pub fn in_use(&self) -> usize {
+        self.free.iter().filter(|f| !**f).count()
+    }
+
+    /// Copy `src` into `slot` at byte offset `off` (supervisor loads
+    /// the input strip here before sending `AssignShard`).
+    pub fn write(&mut self, slot: usize, off: usize, src: &[u8]) {
+        assert!(off + src.len() <= self.slot_bytes, "write past slot capacity");
+        self.map.copy_in(slot * self.slot_bytes + off, src);
+    }
+
+    /// Copy `dst.len()` bytes out of `slot` at byte offset `off`
+    /// (supervisor reads the partial back after `ShardDone`).
+    pub fn read(&self, slot: usize, off: usize, dst: &mut [u8]) {
+        assert!(off + dst.len() <= self.slot_bytes, "read past slot capacity");
+        self.map.copy_out(slot * self.slot_bytes + off, dst);
+    }
+}
+
+impl Drop for ShmRing {
+    fn drop(&mut self) {
+        // The supervisor owns the file; children hold their own
+        // mappings, which stay valid after the unlink.
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Child side: a flat mapping of a ring file the supervisor named in
+/// `AssignShard`.  The child does no slot bookkeeping — it reads the
+/// strip at `slot_off`, writes the partial contiguously after it, and
+/// the supervisor's free-list does the rest.
+pub struct ShmMap {
+    map: MmapRegion,
+    len: usize,
+}
+
+impl ShmMap {
+    /// Map an existing ring file read-write.  `ring_bytes` comes from
+    /// the wire and is validated against the file's actual length so a
+    /// malformed assignment can't map past the file.
+    pub fn open(path: &Path, ring_bytes: usize) -> Result<ShmMap> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("open ring file {}", path.display()))?;
+        let actual = file.metadata()?.len();
+        if actual < ring_bytes as u64 {
+            return Err(anyhow!(
+                "ring file {} is {actual} B, assignment claims {ring_bytes} B",
+                path.display()
+            ));
+        }
+        let map = MmapRegion::map(&file, ring_bytes)?;
+        Ok(ShmMap { map, len: ring_bytes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read `dst.len()` bytes at absolute ring offset `off`.
+    pub fn read(&self, off: usize, dst: &mut [u8]) {
+        self.map.copy_out(off, dst);
+    }
+
+    /// Write `src` at absolute ring offset `off`.
+    pub fn write(&self, off: usize, src: &[u8]) {
+        self.map.copy_in(off, src);
+    }
+}
+
+#[cfg(test)]
+#[cfg(unix)]
+mod tests {
+    use super::*;
+
+    fn ring_dir() -> PathBuf {
+        // Prefer the real tmpfs when present; any dir works for the
+        // mapping semantics under test.
+        default_dir().unwrap_or_else(std::env::temp_dir)
+    }
+
+    #[test]
+    fn plane_is_available_on_unix_with_tmpfs() {
+        if default_dir().is_some() {
+            assert!(available());
+        }
+    }
+
+    #[test]
+    fn ring_round_trips_bytes_through_both_sides() {
+        let mut ring = ShmRing::create(&ring_dir(), "t-rt", 2, 4096).expect("ring");
+        let slot = ring.acquire().expect("slot");
+        let strip: Vec<u8> = (0..1024u32).map(|i| (i % 251) as u8).collect();
+        ring.write(slot, 0, &strip);
+
+        // The child's view: an independent mapping of the same file.
+        let child = ShmMap::open(ring.path(), ring.ring_bytes()).expect("child map");
+        let off = ring.slot_off(slot) as usize;
+        let mut seen = vec![0u8; strip.len()];
+        child.read(off, &mut seen);
+        assert_eq!(seen, strip, "child must see the supervisor's strip");
+
+        // Child writes the partial in place after the strip…
+        let partial: Vec<u8> = (0..512u32).map(|i| (i % 97) as u8 ^ 0x5A).collect();
+        child.write(off + strip.len(), &partial);
+        // …and the supervisor reads it back out of the slot.
+        let mut back = vec![0u8; partial.len()];
+        ring.read(slot, strip.len(), &mut back);
+        assert_eq!(back, partial, "supervisor must see the child's partial");
+        ring.release(slot);
+        assert_eq!(ring.in_use(), 0);
+    }
+
+    #[test]
+    fn acquire_exhausts_and_release_recycles() {
+        let mut ring = ShmRing::create(&ring_dir(), "t-acq", 2, 64).expect("ring");
+        let a = ring.acquire().expect("slot a");
+        let b = ring.acquire().expect("slot b");
+        assert_ne!(a, b);
+        assert!(ring.acquire().is_none(), "two slots, two holders");
+        assert_eq!(ring.in_use(), 2);
+        ring.release(a);
+        assert_eq!(ring.acquire(), Some(a), "freed slot is reusable");
+    }
+
+    #[test]
+    fn release_all_reclaims_in_flight_slots() {
+        let mut ring = ShmRing::create(&ring_dir(), "t-reap", 3, 64).expect("ring");
+        let _ = ring.acquire().expect("a");
+        let _ = ring.acquire().expect("b");
+        assert_eq!(ring.release_all(), 2, "both in-flight slots reclaimed");
+        assert_eq!(ring.release_all(), 0, "reclaim is idempotent");
+        assert_eq!(ring.in_use(), 0);
+    }
+
+    #[test]
+    fn drop_unlinks_the_ring_file_but_child_mapping_survives() {
+        let dir = ring_dir();
+        let ring = ShmRing::create(&dir, "t-drop", 1, 256).expect("ring");
+        let path = ring.path().to_path_buf();
+        let child = ShmMap::open(&path, ring.ring_bytes()).expect("child map");
+        assert!(path.exists());
+        drop(ring);
+        assert!(!path.exists(), "supervisor drop unlinks the ring file");
+        // The unlinked file's pages stay valid under the live mapping.
+        let mut buf = [0u8; 16];
+        child.read(0, &mut buf);
+    }
+
+    #[test]
+    fn degenerate_geometry_is_refused() {
+        assert!(ShmRing::create(&ring_dir(), "t-degen", 0, 64).is_err());
+        assert!(ShmRing::create(&ring_dir(), "t-degen2", 4, 0).is_err());
+    }
+
+    #[test]
+    fn open_rejects_oversized_claims() {
+        let ring = ShmRing::create(&ring_dir(), "t-claim", 1, 128).expect("ring");
+        let err = ShmMap::open(ring.path(), ring.ring_bytes() * 2).expect_err("overclaim");
+        assert!(err.to_string().contains("claims"), "{err}");
+    }
+}

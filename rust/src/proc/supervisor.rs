@@ -32,9 +32,11 @@
 //! [`FaultSite::WorkerAbort`] per dispatch — when it fires, the chosen
 //! child is killed *for real* (`tests/fault_property.rs`).
 
+use crate::coordinator::backpressure::{MemoryBudget, MemoryReservation};
 use crate::fault::{FaultAction, FaultInjector, FaultSite};
 use crate::histogram::types::BinnedImage;
-use crate::proc::protocol::{checksum_f32, ProcMsg, WireAssign};
+use crate::proc::protocol::{checksum_f32, ProcMsg, WireAssign, PLANE_FILE, PLANE_SHM};
+use crate::proc::shm::{self, ShmRing};
 use crate::shard::executor::{Shared, ShardMsg};
 use crate::shard::{
     FrameTicket, ResidentGauge, ShardError, ShardPlan, ShardSpec, TaggedShard, TensorStore,
@@ -50,6 +52,35 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Which data plane carries shard bytes between supervisor and child.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataPlane {
+    /// Pick at construction: shm when the platform supports it
+    /// ([`shm::available`]), else the spill-file plane.
+    Auto,
+    /// Spill-file round-trip (`TensorStore` files named per shard).
+    File,
+    /// Shared-memory ring ([`crate::proc::shm`]): strips in, partials
+    /// out of per-child mmap slots; only control frames on the pipe.
+    Shm,
+}
+
+impl DataPlane {
+    /// Collapse `Auto` to what this host can actually serve.
+    pub fn resolve(self) -> DataPlane {
+        match self {
+            DataPlane::Auto => {
+                if shm::available() {
+                    DataPlane::Shm
+                } else {
+                    DataPlane::File
+                }
+            }
+            other => other,
+        }
+    }
+}
 
 /// Process-pool knobs.
 #[derive(Debug, Clone)]
@@ -77,8 +108,17 @@ pub struct ProcPoolConfig {
     /// Explicit `proc-worker` binary; `None` ⇒ `INTHIST_PROC_WORKER`
     /// env var, then a sibling of the current executable.
     pub worker_bin: Option<PathBuf>,
-    /// Directory for the data-plane spill files (`None` ⇒ temp dir).
+    /// Directory for the data-plane spill files (`None` ⇒ the shm
+    /// tmpfs dir on the shm plane — a spill there is a memcpy — else
+    /// the temp dir).
     pub spill_dir: Option<PathBuf>,
+    /// How shard bytes travel (see [`DataPlane`]); `Auto` resolves at
+    /// construction.
+    pub data_plane: DataPlane,
+    /// Chaos hook, forwarded to every child as `--boot-delay-ms`: the
+    /// child sleeps this long before its first byte of output,
+    /// modeling a slow boot for the heartbeat-deferral tests.
+    pub boot_delay: Duration,
 }
 
 impl Default for ProcPoolConfig {
@@ -94,6 +134,8 @@ impl Default for ProcPoolConfig {
             calibrate_children: false,
             worker_bin: None,
             spill_dir: None,
+            data_plane: DataPlane::Auto,
+            boot_delay: Duration::ZERO,
         }
     }
 }
@@ -159,6 +201,20 @@ pub struct ProcStats {
     pub heartbeats: usize,
     /// Children that have reported a calibration snapshot.
     pub calibrated_nodes: usize,
+    /// Heartbeat kills *not* issued because the child had never spoken
+    /// yet (boot/calibration still in progress) — each one was a
+    /// spurious kill→respawn→recalibrate loop before the fix.
+    pub heartbeat_kills_averted: usize,
+    /// Assignments that rode the shared-memory plane.
+    pub shm_dispatched: usize,
+    /// Shm-eligible assignments that fell back to the spill-file plane
+    /// (ring busy, too small while busy, creation failed, or budget
+    /// refused the mapping).
+    pub shm_fallbacks: usize,
+    /// Ring slots reclaimed from dead children on reap.
+    pub slots_reclaimed: usize,
+    /// Ring bytes currently mapped (all nodes).
+    pub shm_mapped_bytes: usize,
 }
 
 #[derive(Default)]
@@ -172,6 +228,10 @@ struct Counters {
     checksum_failures: AtomicUsize,
     skipped_deadline: AtomicUsize,
     heartbeats: AtomicUsize,
+    heartbeat_kills_averted: AtomicUsize,
+    shm_dispatched: AtomicUsize,
+    shm_fallbacks: AtomicUsize,
+    slots_reclaimed: AtomicUsize,
 }
 
 enum Event {
@@ -218,6 +278,9 @@ struct Task {
     attempts: usize,
     preferred: Option<usize>,
     out_path: PathBuf,
+    /// Ring slot this dispatch holds on its node's ring (`None` on the
+    /// file plane and always `None` while the task sits in `pending`).
+    slot: Option<usize>,
 }
 
 struct Slot {
@@ -226,6 +289,15 @@ struct Slot {
     gen: u64,
     alive: bool,
     last_seen: Instant,
+    /// When this child was spawned — bounds the boot grace for a child
+    /// that has never spoken.
+    spawned_at: Instant,
+    /// The child has produced at least one protocol frame; heartbeat
+    /// age is only enforced after this (a booting/calibrating child is
+    /// silent but not hung).
+    spoken: bool,
+    /// A heartbeat kill was already averted (and counted) this boot.
+    averted: bool,
     inflight: HashMap<(u64, u64), Task>,
     reader: Option<JoinHandle<()>>,
 }
@@ -255,13 +327,17 @@ fn spawn_child(
     gen: u64,
     evt_tx: &mpsc::Sender<Event>,
 ) -> Result<Slot> {
-    let mut child = Command::new(bin)
-        .arg("--calibrate")
+    let mut cmd = Command::new(bin);
+    cmd.arg("--calibrate")
         .arg(if cfg.calibrate_children { "1" } else { "0" })
         .arg("--engine-workers")
         .arg(cfg.engine_workers.max(1).to_string())
         .arg("--heartbeat-ms")
-        .arg(cfg.heartbeat.as_millis().max(1).to_string())
+        .arg(cfg.heartbeat.as_millis().max(1).to_string());
+    if !cfg.boot_delay.is_zero() {
+        cmd.arg("--boot-delay-ms").arg(cfg.boot_delay.as_millis().to_string());
+    }
+    let mut child = cmd
         .stdin(Stdio::piped())
         .stdout(Stdio::piped())
         .stderr(Stdio::inherit())
@@ -280,6 +356,9 @@ fn spawn_child(
         gen,
         alive: true,
         last_seen: Instant::now(),
+        spawned_at: Instant::now(),
+        spoken: false,
+        averted: false,
         inflight: HashMap::new(),
         reader: Some(reader),
     })
@@ -299,6 +378,28 @@ struct Dispatcher {
     snapshots: Arc<Mutex<Vec<Option<CostSnapshot>>>>,
     faults: Option<Arc<FaultInjector>>,
     spill_dir: PathBuf,
+    /// Resolved data plane (never `Auto` here).
+    plane: DataPlane,
+    /// Where ring files live (tmpfs when the platform has one).
+    shm_dir: PathBuf,
+    /// Per-node rings, created lazily at first shm dispatch and
+    /// re-created (larger, under a fresh name) when an idle ring is
+    /// too small for a task.  Survive child respawns.
+    rings: Vec<Option<ShmRing>>,
+    /// Host-memory reservations backing each node's ring mapping
+    /// (held for their RAII drop only — never read back).
+    #[allow(dead_code)]
+    ring_res: Vec<Option<MemoryReservation>>,
+    /// Nodes downgraded to the file plane after a ring-creation
+    /// failure.
+    shm_ok: Vec<bool>,
+    /// Monotonic ring name generation — a re-created ring must never
+    /// reuse a path a child may still have cached.
+    ring_gen: u64,
+    /// Server-wide memory bucket (rings reserve; `None` ⇒ unmetered).
+    mem: Option<Arc<MemoryBudget>>,
+    /// Mapped ring bytes, for `ProcStats::shm_mapped_bytes`.
+    shm_gauge: Arc<ResidentGauge>,
     shutting_down: bool,
 }
 
@@ -343,6 +444,7 @@ impl Dispatcher {
                     return; // stale reader of a replaced child
                 }
                 self.slots[node].last_seen = Instant::now();
+                self.slots[node].spoken = true;
                 match msg {
                     ProcMsg::Heartbeat { .. } => {
                         self.counters.heartbeats.fetch_add(1, Ordering::Relaxed);
@@ -350,12 +452,14 @@ impl Dispatcher {
                     ProcMsg::CalibrationReport { snapshot } => {
                         lock_recover(&self.snapshots)[node] = Some(snapshot);
                     }
-                    ProcMsg::ShardDone { frame_id, shard_id, kernel_time_us, checksum } => {
+                    ProcMsg::ShardDone { frame_id, shard_id, kernel_time_us, checksum, .. } => {
                         self.on_done(node, frame_id, shard_id, kernel_time_us, checksum);
                     }
                     ProcMsg::ShardFailed { frame_id, shard_id, panicked, reason } => {
-                        if let Some(task) = self.slots[node].inflight.remove(&(frame_id, shard_id))
+                        if let Some(mut task) =
+                            self.slots[node].inflight.remove(&(frame_id, shard_id))
                         {
+                            self.free_task_slot(node, &mut task);
                             std::fs::remove_file(&task.out_path).ok();
                             self.retry_or_fail(node, task, panicked, reason);
                         }
@@ -393,6 +497,7 @@ impl Dispatcher {
                 attempts: 0,
                 preferred,
                 out_path: PathBuf::new(), // named at dispatch
+                slot: None,               // acquired at dispatch
             });
         }
     }
@@ -452,19 +557,81 @@ impl Dispatcher {
         }
     }
 
+    /// Return a dispatched task's ring slot (if any) to its node's
+    /// free list.  Every path that takes a task out of `inflight` must
+    /// come through here — a slot leak is a permanently smaller ring.
+    fn free_task_slot(&mut self, node: usize, task: &mut Task) {
+        if let Some(slot) = task.slot.take() {
+            if let Some(ring) = self.rings.get_mut(node).and_then(Option::as_mut) {
+                ring.release(slot);
+            }
+        }
+    }
+
+    /// Claim a ring slot on `node` able to hold `need` bytes, creating
+    /// or growing the node's ring when possible.  `None` means "use
+    /// the file plane for this task" — ring busy, budget refused, or
+    /// the node is downgraded.
+    fn acquire_slot(&mut self, node: usize, need: usize) -> Option<usize> {
+        // Round slot capacity up so frames of similar geometry reuse
+        // the ring instead of re-creating it every submit.
+        const ALIGN: usize = 64 * 1024;
+        let want = need.checked_add(ALIGN - 1)? / ALIGN * ALIGN;
+        let recreate = match &self.rings[node] {
+            Some(r) if r.slot_bytes() >= need => false,
+            Some(r) if r.in_use() == 0 => true,
+            Some(_) => return None, // too small but busy: per-task fallback
+            None => true,
+        };
+        if recreate {
+            if let Some(old) = self.rings[node].take() {
+                self.shm_gauge.sub(old.ring_bytes());
+            }
+            self.ring_res[node] = None; // release the old reservation first
+            let nslots = self.cfg.per_child_inflight.max(1);
+            let ring_bytes = want.checked_mul(nslots)?;
+            let res = match &self.mem {
+                Some(m) => match m.try_reserve(ring_bytes) {
+                    Some(r) => Some(r),
+                    None => return None, // budget refused: file plane, not overcommit
+                },
+                None => None,
+            };
+            let tag = format!("n{node}-g{}", self.ring_gen);
+            self.ring_gen += 1;
+            match ShmRing::create(&self.shm_dir, &tag, nslots, want) {
+                Ok(ring) => {
+                    self.shm_gauge.add(ring.ring_bytes());
+                    self.rings[node] = Some(ring);
+                    self.ring_res[node] = res;
+                }
+                Err(_) => {
+                    // This node cannot serve shm; downgrade it for good
+                    // rather than paying a failed create per dispatch.
+                    self.shm_ok[node] = false;
+                    return None;
+                }
+            }
+        }
+        self.rings[node].as_mut().and_then(ShmRing::acquire)
+    }
+
     fn on_done(&mut self, node: usize, frame_id: u64, shard_id: u64, kernel_us: u64, sum: u32) {
-        let task = match self.slots[node].inflight.remove(&(frame_id, shard_id)) {
+        let mut task = match self.slots[node].inflight.remove(&(frame_id, shard_id)) {
             Some(t) => t,
             None => return, // stale (e.g. answer raced a requeue)
         };
+        let was_shm = task.slot.is_some();
         let (failed, w) = match self.frames.get(&frame_id) {
             Some(f) => (f.failed, f.w),
             None => {
+                self.free_task_slot(node, &mut task);
                 std::fs::remove_file(&task.out_path).ok();
                 return;
             }
         };
         if failed {
+            self.free_task_slot(node, &mut task);
             std::fs::remove_file(&task.out_path).ok();
             self.retire(frame_id);
             return;
@@ -473,25 +640,55 @@ impl Dispatcher {
         // Materialize the child's partial from the data plane and
         // verify the protocol checksum over exactly the bytes read —
         // the cross-process analog of the store's in-RAM row sums.
-        let materialized = (|| -> Result<crate::histogram::types::IntegralHistogram> {
-            let store = TensorStore::open(&task.out_path, spec.nbins, spec.nrows, w)?;
-            let mut partial = self.shared.acquire_partial(spec.nbins, spec.nrows, w);
-            let plane = spec.nrows * w;
-            for b in 0..spec.nbins {
-                if let Err(e) =
-                    store.read_rows(b, 0, spec.nrows, &mut partial.data[b * plane..(b + 1) * plane])
-                {
-                    self.shared.release_partial(partial);
-                    return Err(e);
+        // Shm plane: the partial sits in the task's ring slot right
+        // after the strip; the checksum moved there with it.
+        let materialized = if let Some(slot) = task.slot {
+            let res = match self.rings[node].as_ref() {
+                Some(ring) => {
+                    let strip_bytes = spec.nrows * w * 4;
+                    let mut bytes = vec![0u8; spec.nbins * spec.nrows * w * 4];
+                    ring.read(slot, strip_bytes, &mut bytes);
+                    let mut partial = self.shared.acquire_partial(spec.nbins, spec.nrows, w);
+                    for (dst, src) in partial.data.iter_mut().zip(bytes.chunks_exact(4)) {
+                        *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+                    }
+                    if checksum_f32(&partial.data) == sum {
+                        Ok(partial)
+                    } else {
+                        self.shared.release_partial(partial);
+                        Err(anyhow!("ring slot checksum mismatch"))
+                    }
                 }
-            }
-            if checksum_f32(&partial.data) != sum {
-                self.shared.release_partial(partial);
-                return Err(anyhow!("payload checksum mismatch"));
-            }
-            Ok(partial)
-        })();
-        std::fs::remove_file(&task.out_path).ok();
+                None => Err(anyhow!("ring vanished under an in-flight slot")),
+            };
+            self.free_task_slot(node, &mut task);
+            res
+        } else {
+            (|| -> Result<crate::histogram::types::IntegralHistogram> {
+                let store = TensorStore::open(&task.out_path, spec.nbins, spec.nrows, w)?;
+                let mut partial = self.shared.acquire_partial(spec.nbins, spec.nrows, w);
+                let plane = spec.nrows * w;
+                for b in 0..spec.nbins {
+                    if let Err(e) = store.read_rows(
+                        b,
+                        0,
+                        spec.nrows,
+                        &mut partial.data[b * plane..(b + 1) * plane],
+                    ) {
+                        self.shared.release_partial(partial);
+                        return Err(e);
+                    }
+                }
+                if checksum_f32(&partial.data) != sum {
+                    self.shared.release_partial(partial);
+                    return Err(anyhow!("payload checksum mismatch"));
+                }
+                Ok(partial)
+            })()
+        };
+        if !was_shm {
+            std::fs::remove_file(&task.out_path).ok();
+        }
         match materialized {
             Ok(partial) => {
                 self.counters.completed.fetch_add(1, Ordering::Relaxed);
@@ -536,11 +733,21 @@ impl Dispatcher {
             let _ = r.join();
         }
         lock_recover(&self.snapshots)[node] = None;
+        // Reclaim-on-reap: free every ring slot the corpse held
+        // *before* the respawn, so the replacement child can never
+        // race a ghost writer for a slot.
+        if let Some(ring) = self.rings.get_mut(node).and_then(Option::as_mut) {
+            let reclaimed = ring.release_all();
+            if reclaimed > 0 {
+                self.counters.slots_reclaimed.fetch_add(reclaimed, Ordering::Relaxed);
+            }
+        }
         // Every shard the child held burns one attempt and requeues —
         // the survival path for aborts and OOM kills, not just panics.
         let inflight: Vec<Task> =
             self.slots[node].inflight.drain().map(|(_, t)| t).collect();
-        for task in inflight {
+        for mut task in inflight {
+            task.slot = None; // its slot was just reclaimed wholesale
             std::fs::remove_file(&task.out_path).ok();
             self.retry_or_fail(node, task, false, format!("worker process died: {why}"));
         }
@@ -564,6 +771,10 @@ impl Dispatcher {
     }
 
     fn check_children(&mut self) {
+        // A never-spoken child gets this much total boot time before
+        // silence is treated as a hang anyway — the backstop for a
+        // child wedged before its heartbeat ticker even started.
+        let boot_grace = self.cfg.heartbeat_timeout * 10;
         for node in 0..self.slots.len() {
             if !self.slots[node].alive {
                 continue;
@@ -573,6 +784,20 @@ impl Dispatcher {
                 continue;
             }
             if self.slots[node].last_seen.elapsed() > self.cfg.heartbeat_timeout {
+                // Heartbeat age only convicts a child that has already
+                // spoken: a silent *booting* child is almost always the
+                // startup Calibrator microbench, and killing it just
+                // buys another slow boot (the pre-fix respawn loop).
+                if !self.slots[node].spoken {
+                    if self.slots[node].spawned_at.elapsed() <= boot_grace {
+                        if !self.slots[node].averted {
+                            self.slots[node].averted = true;
+                            self.counters.heartbeat_kills_averted.fetch_add(1, Ordering::Relaxed);
+                        }
+                        continue;
+                    }
+                    // Past the grace with zero frames ever: truly hung.
+                }
                 let _ = self.slots[node].child.kill();
                 self.child_died(node, "heartbeat timeout");
             }
@@ -672,7 +897,7 @@ impl Dispatcher {
                 task.spec.shard_id,
                 task.attempts
             ));
-            let assign = ProcMsg::AssignShard(WireAssign {
+            let mut wire = WireAssign {
                 frame_id,
                 shard_id: task.spec.shard_id as u64,
                 bin0: task.spec.bin0 as u64,
@@ -683,20 +908,67 @@ impl Dispatcher {
                 img_w: w as u64,
                 img_path: img_path.to_string_lossy().into_owned(),
                 out_path: task.out_path.to_string_lossy().into_owned(),
-            });
+                plane: PLANE_FILE,
+                slot: 0,
+                slot_off: 0,
+                ring_bytes: 0,
+                ring_path: String::new(),
+            };
+            // Shm plane: load the strip into a ring slot and point the
+            // assignment at it; any miss (busy ring, budget refusal,
+            // downgraded node, unreadable image) rides the file plane
+            // for this task — counted, never silent.
+            if self.plane == DataPlane::Shm && self.shm_ok[node] {
+                let strip_bytes = task.spec.nrows * w * 4;
+                let need = strip_bytes + task.spec.nbins * task.spec.nrows * w * 4;
+                match self.acquire_slot(node, need) {
+                    Some(slot) => {
+                        let strip = TensorStore::open(&img_path, 1, img_h, w)
+                            .and_then(|s| s.read_rows_raw(0, task.spec.row0, task.spec.nrows));
+                        match strip {
+                            Ok(bytes) => {
+                                let ring =
+                                    self.rings[node].as_mut().expect("acquired slot implies ring");
+                                ring.write(slot, 0, &bytes);
+                                wire.plane = PLANE_SHM;
+                                wire.slot = slot as u64;
+                                wire.slot_off = ring.slot_off(slot);
+                                wire.ring_bytes = ring.ring_bytes() as u64;
+                                wire.ring_path = ring.path().to_string_lossy().into_owned();
+                                task.slot = Some(slot);
+                            }
+                            Err(_) => {
+                                if let Some(r) = self.rings[node].as_mut() {
+                                    r.release(slot);
+                                }
+                                self.counters.shm_fallbacks.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    None => {
+                        self.counters.shm_fallbacks.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            let assign = ProcMsg::AssignShard(wire);
             let wrote = assign
                 .write_to(&mut self.slots[node].stdin)
                 .and_then(|()| self.slots[node].stdin.flush().map_err(Into::into));
             match wrote {
                 Ok(()) => {
                     self.counters.dispatched.fetch_add(1, Ordering::Relaxed);
+                    if task.slot.is_some() {
+                        self.counters.shm_dispatched.fetch_add(1, Ordering::Relaxed);
+                    }
                     let key = (frame_id, task.spec.shard_id as u64);
                     self.slots[node].inflight.insert(key, task);
                 }
                 Err(_) => {
                     // Broken pipe: the child is dead; requeue through
                     // the death path (which bumps no attempt for this
-                    // task — it never reached the child).
+                    // task — it never reached the child).  The slot it
+                    // held goes back first: pending tasks own no slots.
+                    self.free_task_slot(node, &mut task);
                     self.pending.push_front(task);
                     self.child_died(node, "write failed");
                     return;
@@ -750,6 +1022,8 @@ pub struct ProcSupervisor {
     snapshots: Arc<Mutex<Vec<Option<CostSnapshot>>>>,
     frame_seq: AtomicU64,
     spill_dir: PathBuf,
+    plane: DataPlane,
+    shm_gauge: Arc<ResidentGauge>,
 }
 
 impl std::fmt::Debug for ProcSupervisor {
@@ -773,9 +1047,32 @@ impl ProcSupervisor {
         cfg: ProcPoolConfig,
         faults: Option<Arc<FaultInjector>>,
     ) -> Result<ProcSupervisor> {
+        ProcSupervisor::with_instruments(cfg, faults, None)
+    }
+
+    /// [`Self::with_faults`] plus a server-wide [`MemoryBudget`] that
+    /// ring mappings are reserved against — the proc plane's share of
+    /// the host-memory accounting fix (a refused reservation falls the
+    /// task back to the file plane instead of overcommitting).
+    pub fn with_instruments(
+        cfg: ProcPoolConfig,
+        faults: Option<Arc<FaultInjector>>,
+        mem: Option<Arc<MemoryBudget>>,
+    ) -> Result<ProcSupervisor> {
         let workers = cfg.workers.max(1);
         let bin = resolve_worker_bin(cfg.worker_bin.as_deref())?;
-        let spill_dir = cfg.spill_dir.clone().unwrap_or_else(std::env::temp_dir);
+        let plane = cfg.data_plane.resolve();
+        let shm_dir = shm::default_dir().unwrap_or_else(std::env::temp_dir);
+        // On the shm plane the image spill defaults into the same
+        // tmpfs: spilling becomes a memcpy and the children's strip
+        // reads never touch a disk.
+        let spill_dir = cfg.spill_dir.clone().unwrap_or_else(|| {
+            if plane == DataPlane::Shm {
+                shm_dir.clone()
+            } else {
+                std::env::temp_dir()
+            }
+        });
         let (evt_tx, evt_rx) = mpsc::channel::<Event>();
         let mut slots = Vec::with_capacity(workers);
         for node in 0..workers {
@@ -785,6 +1082,7 @@ impl ProcSupervisor {
         counters.alive.store(workers, Ordering::Relaxed);
         let snapshots = Arc::new(Mutex::new(vec![None; workers]));
         let shared = Shared::external(workers, cfg.max_attempts);
+        let shm_gauge = Arc::new(ResidentGauge::default());
         let dispatcher = Dispatcher {
             cfg: ProcPoolConfig { workers, ..cfg.clone() },
             bin,
@@ -799,6 +1097,14 @@ impl ProcSupervisor {
             snapshots: Arc::clone(&snapshots),
             faults,
             spill_dir: spill_dir.clone(),
+            plane,
+            shm_dir,
+            rings: (0..workers).map(|_| None).collect(),
+            ring_res: (0..workers).map(|_| None).collect(),
+            shm_ok: vec![plane == DataPlane::Shm; workers],
+            ring_gen: 0,
+            mem,
+            shm_gauge: Arc::clone(&shm_gauge),
             shutting_down: false,
         };
         let handle = std::thread::Builder::new()
@@ -814,7 +1120,14 @@ impl ProcSupervisor {
             snapshots,
             frame_seq: AtomicU64::new(0),
             spill_dir,
+            plane,
+            shm_gauge,
         })
+    }
+
+    /// The data plane this supervisor resolved to (never `Auto`).
+    pub fn data_plane(&self) -> DataPlane {
+        self.plane
     }
 
     pub fn workers(&self) -> usize {
@@ -839,6 +1152,11 @@ impl ProcSupervisor {
             skipped_deadline: c.skipped_deadline.load(Ordering::Relaxed),
             heartbeats: c.heartbeats.load(Ordering::Relaxed),
             calibrated_nodes: lock_recover(&self.snapshots).iter().filter(|s| s.is_some()).count(),
+            heartbeat_kills_averted: c.heartbeat_kills_averted.load(Ordering::Relaxed),
+            shm_dispatched: c.shm_dispatched.load(Ordering::Relaxed),
+            shm_fallbacks: c.shm_fallbacks.load(Ordering::Relaxed),
+            slots_reclaimed: c.slots_reclaimed.load(Ordering::Relaxed),
+            shm_mapped_bytes: self.shm_gauge.current(),
         }
     }
 

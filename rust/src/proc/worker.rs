@@ -23,13 +23,16 @@
 
 use crate::histogram::engine::ScanEngine;
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
-use crate::proc::protocol::{checksum_f32, ProcMsg, WireAssign};
+use crate::proc::protocol::{checksum_f32, ProcMsg, WireAssign, NO_SLOT, PLANE_SHM};
+use crate::proc::shm::ShmMap;
 use crate::shard::TensorStore;
 use crate::tune::Calibrator;
 use crate::util::sync::lock_recover;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::io::Write;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -46,6 +49,10 @@ pub struct WorkerConfig {
     pub engine_workers: usize,
     /// Heartbeat interval on stdout.
     pub heartbeat: Duration,
+    /// Chaos hook: sleep this long before the first byte of output —
+    /// simulates a slow boot (cold page cache, loaded node, long
+    /// calibration) for the supervisor's heartbeat-deferral tests.
+    pub boot_delay: Duration,
 }
 
 impl Default for WorkerConfig {
@@ -54,21 +61,48 @@ impl Default for WorkerConfig {
             calibrate: true,
             engine_workers: 1,
             heartbeat: Duration::from_millis(200),
+            boot_delay: Duration::ZERO,
         }
     }
 }
 
-/// Execute one wire assignment against the spill-file data plane and
-/// produce the reply frame.  Pure with respect to the pipes (pulled
-/// out of [`run`] so tests can drive it in-process): reads
-/// `a.img_path`, writes `a.out_path`, returns `ShardDone` or a typed
+/// Child-side ring cache: one [`ShmMap`] per ring file named by an
+/// assignment.  Rings are re-created (under new names) when the
+/// supervisor grows slots, so a bounded cache with wholesale eviction
+/// is enough — stale mappings are merely unused pages.
+const MAX_CACHED_RINGS: usize = 16;
+
+fn ring_map<'m>(
+    rings: &'m mut HashMap<String, ShmMap>,
+    a: &WireAssign,
+) -> std::result::Result<&'m ShmMap, String> {
+    let need = a.ring_bytes as usize;
+    let cached = rings.get(&a.ring_path).map_or(false, |m| m.len() >= need);
+    if !cached {
+        if rings.len() >= MAX_CACHED_RINGS {
+            rings.clear();
+        }
+        let m = ShmMap::open(Path::new(&a.ring_path), need).map_err(|e| format!("map ring: {e:#}"))?;
+        rings.insert(a.ring_path.clone(), m);
+    }
+    Ok(rings.get(&a.ring_path).expect("just inserted"))
+}
+
+/// Execute one wire assignment and produce the reply frame.  Pure with
+/// respect to the pipes (pulled out of [`run`] so tests can drive it
+/// in-process).  On the file plane it reads `a.img_path` and writes
+/// `a.out_path`; on the shm plane the strip is read from the ring slot
+/// at `a.slot_off` and the partial is written in place right after it —
+/// no store round-trip at all.  Returns `ShardDone` or a typed
 /// `ShardFailed`.  `engine` is a cache slot — a panicking compute
 /// discards the engine (its scheduler state is suspect), matching the
-/// in-process executor's discipline.
+/// in-process executor's discipline.  `rings` caches child-side ring
+/// mappings across assignments.
 pub fn execute_assign(
     a: &WireAssign,
     engine_workers: usize,
     engine: &mut Option<ScanEngine>,
+    rings: &mut HashMap<String, ShmMap>,
 ) -> ProcMsg {
     let fail = |panicked: bool, reason: String| ProcMsg::ShardFailed {
         frame_id: a.frame_id,
@@ -78,15 +112,30 @@ pub fn execute_assign(
     };
     let (h, w) = (a.img_h as usize, a.img_w as usize);
     let (nbins, nrows, row0) = (a.nbins as usize, a.nrows as usize, a.row0 as usize);
-    // Pull the strip from the spilled image (bin indices as f32 — small
-    // integers, exact in f32, so the i32 roundtrip is lossless).
-    let img = match TensorStore::open(&a.img_path, 1, h, w) {
-        Ok(s) => s,
-        Err(e) => return fail(false, format!("open image: {e:#}")),
-    };
+    // Pull the strip (bin indices as f32 — small integers, exact in
+    // f32, so the i32 roundtrip is lossless): from the ring slot on
+    // the shm plane, from the spilled image store otherwise.
+    let shm = a.plane == PLANE_SHM;
+    let strip_bytes = nrows * w * 4;
     let mut strip = vec![0.0f32; nrows * w];
-    if let Err(e) = img.read_rows(0, row0, nrows, &mut strip) {
-        return fail(false, format!("read image strip: {e:#}"));
+    if shm {
+        let map = match ring_map(rings, a) {
+            Ok(m) => m,
+            Err(e) => return fail(false, e),
+        };
+        let mut bytes = vec![0u8; strip_bytes];
+        map.read(a.slot_off as usize, &mut bytes);
+        for (dst, src) in strip.iter_mut().zip(bytes.chunks_exact(4)) {
+            *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+        }
+    } else {
+        let img = match TensorStore::open(&a.img_path, 1, h, w) {
+            Ok(s) => s,
+            Err(e) => return fail(false, format!("open image: {e:#}")),
+        };
+        if let Err(e) = img.read_rows(0, row0, nrows, &mut strip) {
+            return fail(false, format!("read image strip: {e:#}"));
+        }
     }
     // Bin shift: values in [bin0, bin0+nbins) land in [0, nbins),
     // everything else is -1 (counts toward no bin) — the same slicing
@@ -124,26 +173,37 @@ pub fn execute_assign(
         }
     }
 
-    // Commit the partial to the out store, flush to stable storage,
-    // and checksum what we committed — the supervisor verifies the
-    // same function over the bytes it reads back.
-    let out = match TensorStore::create(&a.out_path, nbins, nrows, w) {
-        Ok(s) => s,
-        Err(e) => return fail(false, format!("create out store: {e:#}")),
-    };
-    for b in 0..nbins {
-        if let Err(e) = out.write_rows(b, 0, partial.plane(b)) {
-            return fail(false, format!("commit plane {b}: {e:#}"));
+    // Commit the partial and checksum what we committed — the
+    // supervisor verifies the same function over the bytes it reads
+    // back.  Shm plane: raw f32 LE bytes in place, directly after the
+    // strip in the same slot.  File plane: out store + flush.
+    if shm {
+        let map = rings.get(&a.ring_path).expect("mapped while reading the strip");
+        let mut bytes = Vec::with_capacity(partial.data.len() * 4);
+        for v in &partial.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
         }
-    }
-    if let Err(e) = out.flush() {
-        return fail(false, format!("flush out store: {e:#}"));
+        map.write(a.slot_off as usize + strip_bytes, &bytes);
+    } else {
+        let out = match TensorStore::create(&a.out_path, nbins, nrows, w) {
+            Ok(s) => s,
+            Err(e) => return fail(false, format!("create out store: {e:#}")),
+        };
+        for b in 0..nbins {
+            if let Err(e) = out.write_rows(b, 0, partial.plane(b)) {
+                return fail(false, format!("commit plane {b}: {e:#}"));
+            }
+        }
+        if let Err(e) = out.flush() {
+            return fail(false, format!("flush out store: {e:#}"));
+        }
     }
     ProcMsg::ShardDone {
         frame_id: a.frame_id,
         shard_id: a.shard_id,
         kernel_time_us: kernel_time.as_micros() as u64,
         checksum: checksum_f32(&partial.data),
+        slot: if shm { a.slot } else { NO_SLOT },
     }
 }
 
@@ -156,20 +216,26 @@ fn send(out: &Arc<Mutex<std::io::Stdout>>, msg: &ProcMsg) -> Result<()> {
     Ok(())
 }
 
-/// The worker main loop: calibrate → report → serve assignments until
-/// `Shutdown` or clean stdin EOF.
+/// The worker main loop: heartbeat ticker → calibrate → report → serve
+/// assignments until `Shutdown` or clean stdin EOF.
+///
+/// Order matters: the ticker spawns *before* calibration so the
+/// supervisor hears from a slow-booting child while the microbench is
+/// still running — calibration can legitimately exceed the heartbeat
+/// timeout, and a silent boot used to read as a hang (spurious
+/// kill→respawn→recalibrate loop).  The supervisor additionally defers
+/// age enforcement until the first frame arrives, so even a child
+/// stalled before the ticker (see `boot_delay`) is not killed early.
 pub fn run(cfg: WorkerConfig) -> Result<()> {
+    if !cfg.boot_delay.is_zero() {
+        // Chaos hook: model the pre-fix world where nothing reaches
+        // the pipe until calibration finishes.
+        std::thread::sleep(cfg.boot_delay);
+    }
     let out = Arc::new(Mutex::new(std::io::stdout()));
 
-    // Calibrate this node and report before accepting work — the
-    // supervisor's placement pass wants every node's snapshot up
-    // front.  `calibrate: false` reports the prior (cheap startup).
-    let cal = Calibrator::default();
-    let snapshot = if cfg.calibrate { cal.calibrate() } else { cal.snapshot() };
-    send(&out, &ProcMsg::CalibrationReport { snapshot })?;
-
-    // Heartbeat ticker: liveness on the same pipe, serialized by the
-    // stdout lock so frames never interleave mid-frame.
+    // Heartbeat ticker first: liveness on the shared pipe, serialized
+    // by the stdout lock so frames never interleave mid-frame.
     let stop = Arc::new(AtomicBool::new(false));
     let hb_out = Arc::clone(&out);
     let hb_stop = Arc::clone(&stop);
@@ -192,13 +258,21 @@ pub fn run(cfg: WorkerConfig) -> Result<()> {
         })
         .context("spawn heartbeat thread")?;
 
+    // Calibrate this node and report before accepting work — the
+    // supervisor's placement pass wants every node's snapshot up
+    // front.  `calibrate: false` reports the prior (cheap startup).
+    let cal = Calibrator::default();
+    let snapshot = if cfg.calibrate { cal.calibrate() } else { cal.snapshot() };
+    send(&out, &ProcMsg::CalibrationReport { snapshot })?;
+
     let mut stdin = std::io::stdin().lock();
     let mut engine: Option<ScanEngine> = None;
+    let mut rings: HashMap<String, ShmMap> = HashMap::new();
     loop {
         match ProcMsg::read_from(&mut stdin) {
             Ok(None) | Ok(Some(ProcMsg::Shutdown)) => break,
             Ok(Some(ProcMsg::AssignShard(a))) => {
-                let reply = execute_assign(&a, cfg.engine_workers, &mut engine);
+                let reply = execute_assign(&a, cfg.engine_workers, &mut engine, &mut rings);
                 if send(&out, &reply).is_err() {
                     break; // parent gone
                 }
@@ -226,6 +300,8 @@ pub fn run(cfg: WorkerConfig) -> Result<()> {
 mod tests {
     use super::*;
     use crate::histogram::sequential::integral_histogram_seq;
+    use crate::proc::protocol::PLANE_FILE;
+    use crate::proc::shm::ShmRing;
     use crate::util::prng::Xoshiro256;
 
     fn spill_image(h: usize, w: usize, bins: usize, seed: u64) -> (BinnedImage, std::path::PathBuf) {
@@ -260,11 +336,18 @@ mod tests {
             img_w: 18,
             img_path: img_path.to_string_lossy().into_owned(),
             out_path: out_path.to_string_lossy().into_owned(),
+            plane: PLANE_FILE,
+            slot: 0,
+            slot_off: 0,
+            ring_bytes: 0,
+            ring_path: String::new(),
         };
         let mut engine = None;
-        let reply = execute_assign(&a, 1, &mut engine);
+        let mut rings = HashMap::new();
+        let reply = execute_assign(&a, 1, &mut engine, &mut rings);
         let (checksum, kernel_time_us) = match reply {
-            ProcMsg::ShardDone { frame_id: 5, shard_id: 2, kernel_time_us, checksum } => {
+            ProcMsg::ShardDone { frame_id: 5, shard_id: 2, kernel_time_us, checksum, slot } => {
+                assert_eq!(slot, NO_SLOT, "file plane replies carry no slot");
                 (checksum, kernel_time_us)
             }
             other => panic!("expected ShardDone, got {other:?}"),
@@ -301,13 +384,100 @@ mod tests {
             img_w: 8,
             img_path: "/nonexistent/img.bin".into(),
             out_path: "/nonexistent/out.bin".into(),
+            plane: PLANE_FILE,
+            slot: 0,
+            slot_off: 0,
+            ring_bytes: 0,
+            ring_path: String::new(),
         };
         let mut engine = None;
-        match execute_assign(&a, 1, &mut engine) {
+        let mut rings = HashMap::new();
+        match execute_assign(&a, 1, &mut engine, &mut rings) {
             ProcMsg::ShardFailed { frame_id: 1, shard_id: 0, panicked: false, reason } => {
                 assert!(reason.contains("open image"), "{reason}");
             }
             other => panic!("expected typed ShardFailed, got {other:?}"),
         }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn shm_plane_matches_the_file_plane_bit_for_bit() {
+        let (img, img_path) = spill_image(17, 13, 5, 91);
+        let out_path = std::env::temp_dir()
+            .join(format!("inthist-proc-test-shmcmp-{}.bin", std::process::id()));
+        let (nrows, row0, nbins, w) = (9usize, 4usize, 3usize, 13usize);
+        let strip_bytes = nrows * w * 4;
+        let partial_bytes = nbins * nrows * w * 4;
+
+        // Ring with one slot: supervisor-side write of the strip bytes.
+        let dir = crate::proc::shm::default_dir().unwrap_or_else(std::env::temp_dir);
+        let mut ring =
+            ShmRing::create(&dir, "worker-ut", 1, strip_bytes + partial_bytes).expect("ring");
+        let slot = ring.acquire().expect("free slot");
+        let mut strip_raw = Vec::with_capacity(strip_bytes);
+        for r in row0..row0 + nrows {
+            for c in 0..w {
+                strip_raw.extend_from_slice(&(img.data[r * w + c] as f32).to_le_bytes());
+            }
+        }
+        ring.write(slot, 0, &strip_raw);
+
+        let base = WireAssign {
+            frame_id: 9,
+            shard_id: 1,
+            bin0: 1,
+            nbins: nbins as u64,
+            row0: row0 as u64,
+            nrows: nrows as u64,
+            img_h: 17,
+            img_w: w as u64,
+            img_path: img_path.to_string_lossy().into_owned(),
+            out_path: out_path.to_string_lossy().into_owned(),
+            plane: PLANE_FILE,
+            slot: 0,
+            slot_off: 0,
+            ring_bytes: 0,
+            ring_path: String::new(),
+        };
+        let shm_a = WireAssign {
+            plane: PLANE_SHM,
+            slot: slot as u64,
+            slot_off: ring.slot_off(slot),
+            ring_bytes: ring.ring_bytes() as u64,
+            ring_path: ring.path().to_string_lossy().into_owned(),
+            ..base.clone()
+        };
+
+        let mut engine = None;
+        let mut rings = HashMap::new();
+        let file_reply = execute_assign(&base, 1, &mut engine, &mut rings);
+        let shm_reply = execute_assign(&shm_a, 1, &mut engine, &mut rings);
+        let file_ck = match file_reply {
+            ProcMsg::ShardDone { checksum, .. } => checksum,
+            other => panic!("file plane: {other:?}"),
+        };
+        let (shm_ck, shm_slot) = match shm_reply {
+            ProcMsg::ShardDone { checksum, slot, .. } => (checksum, slot),
+            other => panic!("shm plane: {other:?}"),
+        };
+        assert_eq!(shm_ck, file_ck, "same payload checksum on both planes");
+        assert_eq!(shm_slot, slot as u64, "reply names the slot it filled");
+
+        // The slot's partial region holds the same bytes the file plane
+        // committed to its out store.
+        let store = TensorStore::open(&out_path, nbins, nrows, w).expect("open out");
+        let file_hist = store.to_histogram().expect("read back");
+        let mut slot_partial = vec![0u8; partial_bytes];
+        ring.read(slot, strip_bytes, &mut slot_partial);
+        let slot_f32: Vec<f32> = slot_partial
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(slot_f32, file_hist.data, "ring partial bit-identical to out store");
+        assert_eq!(checksum_f32(&slot_f32), shm_ck, "slot bytes match the wire checksum");
+
+        std::fs::remove_file(&img_path).ok();
+        std::fs::remove_file(&out_path).ok();
     }
 }

@@ -382,10 +382,27 @@ impl TensorStore {
     /// second mismatch returns a typed error rather than wrong data.
     pub fn read_rows(&self, bin: usize, row0: usize, nrows: usize, out: &mut [f32]) -> Result<()> {
         assert_eq!(out.len(), nrows * self.w, "output length mismatch");
+        let bytes = self.read_rows_raw(bin, row0, nrows)?;
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(())
+    }
+
+    /// [`Self::read_rows`] without the f32 decode: the same verified
+    /// positioned read, returned as raw little-endian bytes.  This is
+    /// the proc plane's strip export — the supervisor copies the bytes
+    /// straight into a shm ring slot and the child decodes them in
+    /// place, so the strip never takes an f32 round-trip through the
+    /// host heap on its way to shared memory.
+    pub fn read_rows_raw(&self, bin: usize, row0: usize, nrows: usize) -> Result<Vec<u8>> {
         if bin >= self.bins || row0 + nrows > self.h {
             return Err(anyhow!("read outside tensor"));
         }
-        let mut bytes = vec![0u8; out.len() * 4];
+        if nrows == 0 {
+            return Ok(Vec::new());
+        }
+        let mut bytes = vec![0u8; nrows * self.w * 4];
         self.read_at_off(&mut bytes, self.offset(bin, row0, 0))?;
         if let Some(f) = &self.faults {
             if f.decide(FaultSite::SpillRead) == Some(FaultAction::Corrupt) {
@@ -419,10 +436,7 @@ impl TensorStore {
                 }
             }
         }
-        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
-            out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
-        }
-        Ok(())
+        Ok(bytes)
     }
 
     /// One corner value — a single positioned read; on unix concurrent
@@ -660,6 +674,22 @@ mod tests {
         assert!(store.write_rows(0, 0, &[0.0; 3]).is_err(), "ragged rows");
         assert!(store.write_rows(0, 3, &[0.0; 8]).is_err(), "past bottom");
         assert!(store.query(Rect::new(0, 0, 4, 4)).is_err(), "rect outside");
+    }
+
+    #[test]
+    fn raw_strip_export_matches_the_decoded_read() {
+        let img = random_image(14, 9, 3, 41);
+        let ih = integral_histogram_seq(&img);
+        let store = spill_of(&ih);
+        let raw = store.read_rows_raw(1, 3, 6).expect("raw strip");
+        assert_eq!(raw.len(), 6 * 9 * 4);
+        let mut decoded = vec![0.0f32; 6 * 9];
+        store.read_rows(1, 3, 6, &mut decoded).expect("decoded strip");
+        let reencoded: Vec<u8> = decoded.iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(raw, reencoded, "raw export is the same verified bytes");
+        assert!(store.read_rows_raw(3, 0, 1).is_err(), "bin out of range");
+        assert!(store.read_rows_raw(0, 10, 5).is_err(), "past bottom");
+        assert!(store.read_rows_raw(0, 5, 0).expect("empty strip").is_empty());
     }
 
     #[test]

@@ -30,6 +30,15 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Relative-error band for drift eviction: a cached plan whose
+/// prediction misses the measurement by more than this factor of the
+/// measurement is stale (cold-start priors, migrated host, thermal
+/// change) and gets dropped so the next plan re-searches under fresh
+/// numbers.  Wide on purpose — predictions are model-grade, not
+/// clock-grade, and evicting on ordinary noise would thrash the cache.
+pub const DRIFT_BAND: f64 = 1.5;
 
 /// Cache observability: searches run vs skipped.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -40,6 +49,9 @@ pub struct TuneStats {
     pub misses: usize,
     /// Entries currently cached.
     pub cached: usize,
+    /// Entries dropped because a measured report contradicted the
+    /// cached plan's prediction beyond [`DRIFT_BAND`].
+    pub drift_evictions: usize,
 }
 
 /// The auto-tuning planner.  Cheap to share: clone the `Arc` it lives
@@ -52,6 +64,7 @@ pub struct TunedPlanner {
     cache: Mutex<BTreeMap<(usize, usize, usize, usize), Plan>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    drift_evictions: AtomicUsize,
 }
 
 impl TunedPlanner {
@@ -69,6 +82,7 @@ impl TunedPlanner {
             cache: Mutex::new(BTreeMap::new()),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
+            drift_evictions: AtomicUsize::new(0),
         }
     }
 
@@ -83,6 +97,7 @@ impl TunedPlanner {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             cached: lock_recover(&self.cache).len(),
+            drift_evictions: self.drift_evictions.load(Ordering::Relaxed),
         }
     }
 
@@ -116,6 +131,41 @@ impl TunedPlanner {
         let n = cache.len();
         cache.clear();
         n
+    }
+
+    /// Drift check: compare what the cached plan *predicted* for this
+    /// geometry against what a completed frame *measured*, and evict
+    /// exactly that cache entry when the relative error exceeds
+    /// [`DRIFT_BAND`] — the fix for entries cached under cold-start
+    /// priors surviving forever after the measurements contradict them
+    /// (before this, only an explicit [`Self::clear`] could unstick
+    /// them).  Returns `true` when an entry was actually evicted; an
+    /// uncached geometry never counts, so the caller can feed every
+    /// report through unconditionally.
+    pub fn observe_report(
+        &self,
+        h: usize,
+        w: usize,
+        bins: usize,
+        workers: usize,
+        predicted: Duration,
+        measured: Duration,
+    ) -> bool {
+        let (p, m) = (predicted.as_secs_f64(), measured.as_secs_f64());
+        if !(p.is_finite() && m.is_finite()) || m <= 0.0 {
+            return false; // degenerate clocks prove nothing
+        }
+        let rel = (p - m).abs() / m;
+        if rel <= DRIFT_BAND {
+            return false;
+        }
+        let evicted = lock_recover(&self.cache)
+            .remove(&(h, w, bins, workers.max(1)))
+            .is_some();
+        if evicted {
+            self.drift_evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        evicted
     }
 
     /// Persist the tuning cache as JSON (hand-built; the repo's JSON
@@ -406,6 +456,79 @@ mod tests {
         let misses_before = t.stats().misses;
         t.plan(512, 512, 32, 8);
         assert_eq!(t.stats().misses, misses_before + 1);
+    }
+
+    /// The drift-eviction regression: before `observe_report`, an
+    /// entry cached under cold-start priors was kept forever no matter
+    /// how badly measurements contradicted it — only an explicit
+    /// `clear()` (the whole cache) could unstick it.
+    #[test]
+    fn seeded_drift_evicts_exactly_the_contradicted_entry() {
+        let t = tuner();
+        t.plan(512, 512, 32, 8);
+        t.plan(100, 350, 16, 4);
+        assert_eq!(t.stats().cached, 2);
+
+        // In-band error: a 20% miss is model noise, not drift.
+        let kept = t.observe_report(
+            512,
+            512,
+            32,
+            8,
+            Duration::from_millis(120),
+            Duration::from_millis(100),
+        );
+        assert!(!kept, "in-band error must not evict");
+        assert_eq!(t.stats().cached, 2);
+        assert_eq!(t.stats().drift_evictions, 0);
+
+        // Seeded drift: prediction 10× the measurement — the cached
+        // plan was costed under numbers this host contradicts.
+        let evicted = t.observe_report(
+            512,
+            512,
+            32,
+            8,
+            Duration::from_millis(1000),
+            Duration::from_millis(100),
+        );
+        assert!(evicted, "out-of-band error must evict");
+        let s = t.stats();
+        assert_eq!(s.cached, 1, "exactly one entry dropped");
+        assert_eq!(s.drift_evictions, 1);
+        // The untouched geometry still serves from cache...
+        let misses = t.stats().misses;
+        t.plan(100, 350, 16, 4);
+        assert_eq!(t.stats().misses, misses, "other entry undisturbed");
+        // ...while the evicted one re-searches.
+        t.plan(512, 512, 32, 8);
+        assert_eq!(t.stats().misses, misses + 1, "evicted entry re-searches");
+
+        // Re-reporting the same drift on the now-uncached geometry is
+        // a no-op: eviction counts actual removals only.
+        let again = t.observe_report(
+            512,
+            512,
+            32,
+            8,
+            Duration::from_millis(1000),
+            Duration::from_millis(100),
+        );
+        // (the re-search just re-cached it, so this evicts again)
+        assert!(again);
+        assert_eq!(t.stats().drift_evictions, 2);
+        let ghost = t.observe_report(
+            9999,
+            9999,
+            9,
+            9,
+            Duration::from_secs(10),
+            Duration::from_millis(1),
+        );
+        assert!(!ghost, "uncached geometry never counts an eviction");
+        assert_eq!(t.stats().drift_evictions, 2);
+        // Degenerate measurements prove nothing.
+        assert!(!t.observe_report(100, 350, 16, 4, Duration::from_secs(1), Duration::ZERO));
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use inthist::histogram::sequential::integral_histogram_seq;
 use inthist::histogram::types::{BinnedImage, IntegralHistogram};
-use inthist::proc::{plan_for_nodes, ProcPoolConfig, ProcSupervisor};
+use inthist::proc::{plan_for_nodes, DataPlane, ProcPoolConfig, ProcSupervisor};
 use inthist::shard::{ShardError, ShardExecutor, ShardExecutorConfig, ShardPlanner, ShardPolicy};
 use inthist::video::synth::SyntheticVideo;
 use std::path::PathBuf;
@@ -204,6 +204,140 @@ fn calibration_reports_drive_per_node_placement() {
     ticket.reassemble_into(&mut got).expect("assigned reassembly");
     let oracle = integral_histogram_seq(&binned(h, w, bins, 3));
     assert_eq!(oracle.max_abs_diff(&got), 0.0);
+}
+
+/// The shm data plane against the spill-file plane, same frames, same
+/// adversarial geometries: results must be bit-identical, and the shm
+/// supervisor must actually have used its ring (counter-asserted) —
+/// otherwise this test would vacuously compare the file plane to
+/// itself.
+#[cfg(unix)]
+#[test]
+fn shm_data_plane_is_bit_identical_to_the_file_plane() {
+    if !inthist::proc::shm::available() {
+        eprintln!("skipping: no shared-memory data plane on this platform");
+        return;
+    }
+    let _wd = Watchdog::arm(Duration::from_secs(120), "shm vs file plane");
+    let shapes: &[(usize, usize, usize)] = &[
+        (33, 1, 7),   // single-column image
+        (1, 64, 4),   // single-row image
+        (61, 37, 13), // everything prime
+        (16, 16, 32), // more bins than rows
+        (96, 80, 8),  // bread-and-butter
+    ];
+    let file_sup = ProcSupervisor::new(ProcPoolConfig {
+        data_plane: DataPlane::File,
+        ..pool_config(2)
+    })
+    .expect("spawn file-plane pool");
+    let shm_sup = ProcSupervisor::new(ProcPoolConfig {
+        data_plane: DataPlane::Shm,
+        ..pool_config(2)
+    })
+    .expect("spawn shm-plane pool");
+    for (i, &(h, w, bins)) in shapes.iter().enumerate() {
+        let img = binned(h, w, bins, 70 + i as u64);
+        let image = Arc::new(img.clone());
+        let plan = planner(2, (bins * h * w * 4 / 3).max(4096)).plan(bins, h, w);
+        let oracle = integral_histogram_seq(&img);
+
+        let ticket = shm_sup.submit(&image, &plan).expect("shm submit");
+        let mut shm_got = IntegralHistogram::zeros(bins, h, w);
+        ticket.reassemble_into(&mut shm_got).expect("shm reassembly");
+        assert_eq!(oracle.max_abs_diff(&shm_got), 0.0, "shm vs serial, shape {h}x{w}x{bins}");
+
+        let ticket = file_sup.submit(&image, &plan).expect("file submit");
+        let mut file_got = IntegralHistogram::zeros(bins, h, w);
+        ticket.reassemble_into(&mut file_got).expect("file reassembly");
+        assert_eq!(
+            file_got.max_abs_diff(&shm_got),
+            0.0,
+            "shm vs file plane, shape {h}x{w}x{bins}"
+        );
+    }
+    let shm_stats = shm_sup.stats();
+    assert!(shm_stats.shm_dispatched >= 1, "the ring must have carried shards: {shm_stats:?}");
+    assert_eq!(shm_stats.checksum_failures, 0, "{shm_stats:?}");
+    assert_eq!(shm_stats.shard_failures, 0, "{shm_stats:?}");
+    let file_stats = file_sup.stats();
+    assert_eq!(file_stats.shm_dispatched, 0, "file plane must never touch a ring: {file_stats:?}");
+}
+
+/// Reclaim-on-reap: SIGKILL a child while its ring slots are loaded
+/// and the supervisor must take the slots back before the respawn —
+/// counter-asserted, and the killed frames still complete
+/// bit-identical.  Dispatch timing is racy by nature, so the kill is
+/// retried across frames until a reap observes in-flight slots (the
+/// watchdog bounds the loop).
+#[cfg(unix)]
+#[test]
+fn sigkilled_worker_has_its_ring_slots_reclaimed() {
+    if !inthist::proc::shm::available() {
+        eprintln!("skipping: no shared-memory data plane on this platform");
+        return;
+    }
+    let _wd = Watchdog::arm(Duration::from_secs(120), "shm SIGKILL slot reclaim");
+    let sup = ProcSupervisor::new(ProcPoolConfig {
+        data_plane: DataPlane::Shm,
+        ..pool_config(2)
+    })
+    .expect("spawn pool");
+    let (h, w, bins) = (72, 56, 16);
+    let mut reclaimed = 0;
+    for t in 0..20u64 {
+        let img = Arc::new(binned(h, w, bins, 500 + t));
+        let oracle = integral_histogram_seq(&binned(h, w, bins, 500 + t));
+        let plan = planner(2, bins * h * w).plan(bins, h, w);
+        let ticket = sup.submit(&img, &plan).expect("submit");
+        // Let the dispatcher load strips into ring slots, then kill.
+        std::thread::sleep(Duration::from_millis(10));
+        sup.kill_worker((t % 2) as usize).expect("kill hook");
+        let mut got = IntegralHistogram::zeros(bins, h, w);
+        ticket.reassemble_into(&mut got).expect("frame must survive the kill");
+        assert_eq!(oracle.max_abs_diff(&got), 0.0, "frame {t} bit-identity across a kill");
+        reclaimed = sup.stats().slots_reclaimed;
+        if reclaimed >= 1 {
+            break;
+        }
+    }
+    let stats = sup.stats();
+    assert!(reclaimed >= 1, "a reap must reclaim the dead child's in-flight slots: {stats:?}");
+    assert!(stats.respawns >= 1, "{stats:?}");
+    assert_eq!(stats.workers_alive, 2, "pool back at full strength: {stats:?}");
+    assert_eq!(stats.shard_failures, 0, "no frame may fail for a survivable kill: {stats:?}");
+}
+
+/// The heartbeat false-kill regression: a child that is slow to boot
+/// (long calibration, cold page cache) used to be killed by the
+/// heartbeat watchdog before it ever spoke, looping the pool through
+/// useless respawns.  Enforcement now starts at the child's first
+/// message — the averted kill is counted, the child is never killed,
+/// and its first frame completes bit-identical.
+#[test]
+fn slow_booting_child_survives_the_heartbeat_watchdog() {
+    let _wd = Watchdog::arm(Duration::from_secs(60), "slow-boot heartbeat aversion");
+    let mut cfg = pool_config(1);
+    cfg.heartbeat = Duration::from_millis(50);
+    cfg.heartbeat_timeout = Duration::from_millis(150);
+    // Child silent for 3× the heartbeat timeout before its first byte.
+    cfg.boot_delay = Duration::from_millis(500);
+    let sup = ProcSupervisor::new(cfg).expect("spawn pool");
+    let (h, w, bins) = (64, 48, 8);
+    let img = Arc::new(binned(h, w, bins, 11));
+    let plan = planner(1, bins * h * w).plan(bins, h, w);
+    let ticket = sup.submit(&img, &plan).expect("submit");
+    let mut got = IntegralHistogram::zeros(bins, h, w);
+    ticket.reassemble_into(&mut got).expect("the slow-booting child must serve the frame");
+    let oracle = integral_histogram_seq(&binned(h, w, bins, 11));
+    assert_eq!(oracle.max_abs_diff(&got), 0.0);
+    let stats = sup.stats();
+    assert_eq!(stats.respawns, 0, "a booting child must never be heartbeat-killed: {stats:?}");
+    assert!(
+        stats.heartbeat_kills_averted >= 1,
+        "the watchdog must have observed (and spared) the silent boot: {stats:?}"
+    );
+    assert_eq!(stats.shard_failures, 0, "{stats:?}");
 }
 
 /// The server front door behind `process_isolation`: large frames run
