@@ -35,7 +35,17 @@ same schedule through real child *processes*, once per data plane:
     each shard's input strip into a free slot, the child computes and
     writes the partial *in place* after the strip, and only the slot
     offset and geometry cross the process boundary.  The delta between
-    the two rows is the spill-file round-trip the shm plane deletes.
+    the two rows is the spill-file round-trip the shm plane deletes;
+  * remote stream plane ("proc.remote" row, rust/src/proc/transport.rs
+    mirror) — a worker process behind a real TCP socket on loopback,
+    speaking the byte-exact v3 wire mirror from
+    test_proc_prevalidation.py: Hello handshake, strips pushed
+    parent→worker and partials pulled back as bounded Chunk frames,
+    both payloads checksummed (crc32 stands in for the wire's FNV-1a
+    purely for host speed — the FNV mirror itself is asserted in the
+    prevalidation suite).  A mid-shard disconnect + reconnect
+    (handshake again, shard re-dispatched) must still assemble the
+    frame bit-identical — the reconnect ladder's data path.
 """
 
 import json
@@ -43,16 +53,28 @@ import mmap
 import multiprocessing as mp
 import os
 import signal
+import socket
+import struct
 import sys
 import tempfile
 import threading
 import time
+import zlib
 from collections import deque
 from multiprocessing.pool import ThreadPool
 
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests"))
+from test_proc_prevalidation import (  # noqa: E402
+    CAPS_ALL,
+    CHUNK_DATA_MAX,
+    HEADER_LEN,
+    PLANE_STREAM,
+    VERSION as PROTO_VERSION,
+    decode as proto_decode,
+    encode as proto_encode,
+)
 from test_shard_prevalidation import ceil_div, plan  # noqa: E402
 from test_tune_prevalidation import (  # noqa: E402
     plan_calibrated,
@@ -168,6 +190,156 @@ def shm_frame(pool, img, shards, slot_bytes, free_slots, timeout=30.0):
     while rs:
         drain_one()
     return out
+
+
+# --- remote stream plane (rust/src/proc/transport.rs + worker.rs
+# serve_conn mirror).  The parent and the worker process share nothing
+# but the socket: v3 frames from the prevalidation codec carry the
+# assignment, the strip chunks (dir 0) and the partial chunks (dir 1).
+
+
+def _crc32(b):
+    return zlib.crc32(b) & 0xFFFFFFFF
+
+
+def _recv_exact(sock, n):
+    buf = b""
+    while len(buf) < n:
+        got = sock.recv(n - len(buf))
+        if not got:
+            return None  # peer gone: EOF mid-frame is a dropped link
+        buf += got
+    return buf
+
+
+def _send_msg(sock, msg):
+    sock.sendall(proto_encode(msg))
+
+
+def _recv_msg(sock):
+    hdr = _recv_exact(sock, HEADER_LEN)
+    if hdr is None:
+        return None
+    plen = struct.unpack("<I", hdr[5:9])[0]
+    payload = _recv_exact(sock, plen) if plen else b""
+    if plen and payload is None:
+        return None
+    msg, _ = proto_decode(hdr + payload)
+    return msg
+
+
+def _send_chunks(sock, fid, sid, direction, payload):
+    total, off = len(payload), 0
+    while True:
+        end = min(off + CHUNK_DATA_MAX, total)
+        _send_msg(sock, ("chunk", {"frame_id": fid, "shard_id": sid, "dir": direction,
+                                   "offset": off, "total": total, "data": payload[off:end]}))
+        if end == total:
+            return
+        off = end
+
+
+def _serve_remote_conn(conn):
+    """Worker half, one connection (worker.rs serve over a socket):
+    speak Hello first, reassemble strip chunks dense and in order,
+    verify the strip checksum, compute, stream the partial back."""
+    try:
+        _send_msg(conn, ("hello", {"version": PROTO_VERSION, "caps": CAPS_ALL, "tag": "py-worker"}))
+        pending = {}
+        while True:
+            msg = _recv_msg(conn)
+            if msg is None or msg[0] == "shutdown":
+                return
+            if msg[0] == "assign":
+                a = msg[1]
+                pending[(a["frame_id"], a["shard_id"])] = (a, bytearray())
+            elif msg[0] == "chunk":
+                c = msg[1]
+                if c["dir"] != 0:
+                    continue  # echoed partial direction: nonsense, drop
+                key = (c["frame_id"], c["shard_id"])
+                if key not in pending:
+                    continue  # stale chunk for a requeued shard
+                a, buf = pending[key]
+                if c["offset"] != len(buf):
+                    del pending[key]  # torn stream: the parent re-dispatches
+                    continue
+                buf += c["data"]
+                if len(buf) < c["total"]:
+                    continue
+                del pending[key]
+                nb, nr, w = a["nbins"], a["nrows"], a["img_w"]
+                if _crc32(bytes(buf)) != a["strip_checksum"]:
+                    _send_msg(conn, ("failed", {"frame_id": key[0], "shard_id": key[1],
+                                                "panicked": False, "deadline": False,
+                                                "reason": "strip checksum mismatch"}))
+                    continue
+                strip = np.frombuffer(bytes(buf), dtype="<f4").reshape(nr, w)
+                sub = strip.astype(np.int64) - a["bin0"]
+                sub[(sub < 0) | (sub >= nb)] = -1
+                onehot = (sub[None, :, :] == np.arange(nb)[:, None, None]).astype(np.float32)
+                part = np.cumsum(np.cumsum(onehot, axis=1, dtype=np.float32), axis=2,
+                                 dtype=np.float32)
+                pbytes = part.astype("<f4").tobytes()
+                _send_chunks(conn, key[0], key[1], 1, pbytes)
+                _send_msg(conn, ("done", {"frame_id": key[0], "shard_id": key[1],
+                                          "kernel_time_us": 0, "checksum": _crc32(pbytes),
+                                          "slot": (1 << 64) - 1}))
+    except (OSError, ValueError):
+        pass  # dropped link: the parent's reconnect ladder owns recovery
+    finally:
+        conn.close()
+
+
+def remote_listener_main(port_q):
+    """Worker process: one listening socket, a serving thread per
+    accepted connection (proc-worker --listen)."""
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(8)
+    port_q.put(srv.getsockname()[1])
+    while True:
+        conn, _ = srv.accept()
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        threading.Thread(target=_serve_remote_conn, args=(conn,), daemon=True).start()
+
+
+def _connect_remote(addr):
+    """Supervisor half of the handshake (transport.rs connect_remote):
+    the worker speaks Hello first; validate its capabilities, reply."""
+    s = socket.create_connection(addr, timeout=10)
+    s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    hello = _recv_msg(s)
+    assert hello is not None and hello[0] == "hello", "worker must speak Hello first"
+    assert hello[1]["caps"] & CAPS_ALL == CAPS_ALL, "worker missing stream/deadline caps"
+    _send_msg(s, ("hello", {"version": PROTO_VERSION, "caps": CAPS_ALL, "tag": "py-supervisor"}))
+    return s
+
+
+def _remote_shard(sock, fid, sid, img, b0, nb, r0, nr):
+    """One stream-plane dispatch: assign + strip chunks out, partial
+    chunks + done back, both payloads checksum-verified."""
+    strip = np.asarray(img[r0 : r0 + nr, :], dtype="<f4").tobytes()
+    _send_msg(sock, ("assign", {
+        "frame_id": fid, "shard_id": sid, "bin0": b0, "nbins": nb, "row0": r0, "nrows": nr,
+        "img_h": H, "img_w": W, "img_path": "", "out_path": "", "plane": PLANE_STREAM,
+        "slot": 0, "slot_off": 0, "ring_bytes": 0, "ring_path": "",
+        "deadline_us": 0, "strip_checksum": _crc32(strip)}))
+    _send_chunks(sock, fid, sid, 0, strip)
+    buf = bytearray()
+    while True:
+        msg = _recv_msg(sock)
+        if msg is None:
+            raise ConnectionError("link dropped mid-shard")
+        if msg[0] == "chunk" and msg[1]["dir"] == 1:
+            assert msg[1]["offset"] == len(buf), "partial chunks must arrive dense"
+            buf += msg[1]["data"]
+        elif msg[0] == "done":
+            assert len(buf) == nb * nr * W * 4, "partial truncated"
+            assert _crc32(bytes(buf)) == msg[1]["checksum"], "partial checksum mismatch"
+            return np.frombuffer(bytes(buf), dtype="<f4").reshape(nb, nr, W)
+        elif msg[0] == "failed":
+            raise RuntimeError(f"remote shard failed: {msg[1]['reason']}")
 
 
 def proc_frame(pool, img_path, shards, tmp, fid, timeout=30.0, after_submit=None):
@@ -500,6 +672,77 @@ def main():
         os.unlink(ring_path)
     shm_tax_pct = 100.0 * (plain_fps - shm_fps) / max(plain_fps, 1e-9)
 
+    # --- process isolation, remote stream plane (PR 10 tentpole): the
+    # identical schedule against a worker process behind a TCP socket
+    # on loopback, two connections over one listener exactly like the
+    # Rust loopback tests — nothing crosses but checksummed frames ---
+    port_q = ctx.Queue()
+    listener = ctx.Process(target=remote_listener_main, args=(port_q,), daemon=True)
+    listener.start()
+    addr = ("127.0.0.1", port_q.get(timeout=10))
+    socks = [_connect_remote(addr) for _ in range(proc_workers)]
+    conn_shards = [list(shards)[ci::proc_workers] for ci in range(proc_workers)]
+    remote_reconnects = 0
+    try:
+        with ThreadPool(proc_workers) as rpool:
+            def conn_run(ci, fid, img):
+                return [(b0, nb, r0, nr, _remote_shard(socks[ci], fid, sid, img, b0, nb, r0, nr))
+                        for (sid, b0, nb, r0, nr) in conn_shards[ci]]
+
+            def remote_frame(fid):
+                img = imgs[fid % DISTINCT]
+                out = np.zeros((BINS, H, W), dtype=np.float32)
+                rs = [rpool.apply_async(conn_run, (ci, fid, img)) for ci in range(proc_workers)]
+                for r in rs:
+                    for b0, nb, r0, nr, part in r.get(timeout=60):
+                        out[b0 : b0 + nb, r0 : r0 + nr, :] = part
+                return out
+
+            remote_frame(0)  # warm-up
+            t0 = time.perf_counter()
+            for f in range(FRAMES):
+                remote_frame(f)
+            remote_fps = FRAMES / max(time.perf_counter() - t0, 1e-9)
+            stream_dispatched = (FRAMES + 2) * len(shards)
+            rtensor = remote_frame(0)
+            assert np.array_equal(rtensor, dense), "remote stream plane deviates from dense oracle"
+
+        # Mid-shard disconnect: dispatch a shard, drop the link before
+        # its partial comes back, reconnect (Hello handshake again) and
+        # re-dispatch — the frame must still assemble bit-identical
+        # (the reconnect ladder's data path, proc_property.rs mirror).
+        out = np.zeros((BINS, H, W), dtype=np.float32)
+        for i, (sid, b0, nb, r0, nr) in enumerate(shards):
+            ci = i % proc_workers
+            if i == 1:
+                strip = np.asarray(imgs[0][r0 : r0 + nr, :], dtype="<f4").tobytes()
+                _send_msg(socks[ci], ("assign", {
+                    "frame_id": 9300, "shard_id": sid, "bin0": b0, "nbins": nb,
+                    "row0": r0, "nrows": nr, "img_h": H, "img_w": W, "img_path": "",
+                    "out_path": "", "plane": PLANE_STREAM, "slot": 0, "slot_off": 0,
+                    "ring_bytes": 0, "ring_path": "", "deadline_us": 0,
+                    "strip_checksum": _crc32(strip)}))
+                _send_chunks(socks[ci], 9300, sid, 0, strip)
+                socks[ci].close()  # mid-shard drop: the partial never lands
+                socks[ci] = _connect_remote(addr)
+                remote_reconnects += 1
+            out[b0 : b0 + nb, r0 : r0 + nr, :] = _remote_shard(
+                socks[ci], 9300, sid, imgs[0], b0, nb, r0, nr
+            )
+            stream_dispatched += 1
+        assert np.array_equal(out, dense), "frame across a dropped link deviates"
+        assert remote_reconnects == 1
+    finally:
+        for s in socks:
+            try:
+                _send_msg(s, ("shutdown", {}))
+            except OSError:
+                pass
+            s.close()
+        listener.terminate()
+        listener.join(timeout=5)
+    remote_tax_pct = 100.0 * (plain_fps - remote_fps) / max(plain_fps, 1e-9)
+
     speed2 = by_window[2] / serial_fps
     report = {
         "bench": "shard",
@@ -556,12 +799,25 @@ def main():
             "ring_slots": nslots,
             "ring_bytes": nslots * slot_bytes,
         },
+        "proc.remote": {
+            "workers": proc_workers,
+            "data_plane": "stream",
+            "transport": "tcp-loopback",
+            "fps_in_process": round(plain_fps, 2),
+            "fps_multi_process": round(remote_fps, 2),
+            "isolation_tax_pct": round(remote_tax_pct, 2),
+            "stream_dispatched": stream_dispatched,
+            "chunk_data_max": CHUNK_DATA_MAX,
+            "reconnects": remote_reconnects,
+            "disconnect_frame_bit_identical": True,
+        },
         "derived": {
             "interleaved_2_inflight_vs_serial_queue": round(speed2, 3),
             "interleaved_beats_serial_queue": by_window[2] > serial_fps,
             "calibrated_matches_or_beats_static_all_rows": cal_dominates,
             "shm_vs_file_fps_ratio": round(shm_fps / max(proc_fps, 1e-9), 3),
             "shm_tax_below_file_tax": shm_tax_pct < isolation_tax_pct,
+            "stream_vs_file_fps_ratio": round(remote_fps / max(proc_fps, 1e-9), 3),
             "calibration_samples": snap["samples"],
         },
     }
@@ -575,6 +831,7 @@ def main():
     print(json.dumps(report["supervision"], indent=2))
     print(json.dumps(report["proc"], indent=2))
     print(json.dumps(report["proc.shm"], indent=2))
+    print(json.dumps(report["proc.remote"], indent=2))
     print(f"wrote {os.path.abspath(out)}")
 
 

@@ -4,21 +4,35 @@ side asserts the same invariants in-tree: protocol unit tests in
 rust/src/proc/protocol.rs, process-boundary property tests in
 rust/tests/proc_property.rs).
 
-1. Framing (mirror of proc::protocol::ProcMsg, wire v2): byte-exact
+1. Framing (mirror of proc::protocol::ProcMsg, wire v3): byte-exact
    encode / decode of every message type over the
    `[magic u16 LE][version u16 LE][type u8][len u32 LE][payload]`
    wire format.  v2 appends the shm data-plane tail to `AssignShard`
    (`plane u8, slot u64, slot_off u64, ring_bytes u64, ring_path str`)
-   and a `slot u64` to `ShardDone`; v1 frames still decode, as
-   file-plane payloads (minor version bump).  Truncation at EVERY byte
-   prefix, foreign magic, version skew, unknown types, oversized
-   lengths, trailing payload bytes, degenerate shard geometry and
-   hostile slot geometry (region past the ring, ringless shm assign,
-   unknown plane byte) all land in a typed error — never a crash,
-   never a partially-decoded message.
-2. Checksum (mirror of proc::protocol::checksum_f32): FNV-1a over f32
-   LE bytes — deterministic, bit-sensitive, empty input is the basis.
-3. Supervision (mirror of proc::supervisor::ProcSupervisor): a
+   and a `slot u64` to `ShardDone`.  v3 appends the remote-worker
+   tail: `deadline_us u64` (remaining budget at dispatch, 0 = none)
+   and `strip_checksum u32` to `AssignShard`, a `deadline` bool byte
+   to `ShardFailed`, plus two new frame types — `Chunk` (bounded
+   stream-plane payload slice, dir 0 = strip parent→child, 1 = partial
+   child→parent) and `Hello` (socket handshake: version + capability
+   bits).  v1/v2 frames still decode, as file/shm-plane payloads with
+   no deadline (minor version bumps); Chunk/Hello under a pre-v3
+   header are unknown types.  Truncation at EVERY byte prefix, foreign
+   magic, version skew, unknown types, oversized lengths, trailing
+   payload bytes, degenerate shard geometry, hostile slot geometry
+   (region past the ring, ringless shm assign, unknown plane byte) and
+   hostile chunk geometry (bad dir byte, data past the declared total,
+   offset overflow, oversized data) all land in a typed error — never
+   a crash, never a partially-decoded message.
+2. Checksum (mirror of proc::protocol::checksum_f32 / checksum_bytes):
+   FNV-1a — deterministic, bit-sensitive, empty input is the basis.
+3. Stream plane (mirror of supervisor.rs stream_rx / worker.rs
+   PendingStream): chunked payloads must arrive dense and in order; a
+   gap, replay or overrun drops the buffer and fails typed — never a
+   torn reassembly.  Deadlines cross the clock domain as remaining
+   budget anchored at arrival (worker.rs deadline_expired), so skew
+   between parent and worker clocks can never expire a fresh shard.
+4. Supervision (mirror of proc::supervisor::ProcSupervisor): a
    deterministic state machine driving dispatch / child death /
    heartbeat timeout proves the requeue ladder — a dead child's
    in-flight shards are requeued with attempts+1 and complete on the
@@ -30,7 +44,12 @@ rust/tests/proc_property.rs).
    when a child is reaped mid-flight (counter-asserted), and the
    heartbeat watchdog defers enforcement until a child's first message
    (the boot false-kill fix) with a boot-grace backstop for children
-   that never speak at all.
+   that never speak at all.  The remote additions: a dropped socket
+   link reconnects under a bounded backoff ladder (in-flight shards
+   burn one attempt each, exactly like a local death); reconnect
+   exhaustion leaves the slot dead and frames fail typed, never
+   silent; a worker-side deadline skip (`ShardFailed{deadline:true}`)
+   is charged to the deadline counter, not the retry ladder.
 
 Run: python3 python/tests/test_proc_prevalidation.py  (or pytest)
 """
@@ -39,14 +58,19 @@ import struct
 from collections import deque
 
 MAGIC = 0x4948  # "IH"
-VERSION = 2
+VERSION = 3
 VERSION_MIN = 1  # v1 = file-plane payloads, still decoded
 MAX_PAYLOAD = 1 << 20
 HEADER_LEN = 9
-PLANE_FILE, PLANE_SHM = 0, 1
+PLANE_FILE, PLANE_SHM, PLANE_STREAM = 0, 1, 2
 NO_SLOT = (1 << 64) - 1
+CHUNK_DATA_MAX = 256 * 1024
+U64 = 1 << 64
+CAP_STREAM, CAP_DEADLINE = 1, 2
+CAPS_ALL = CAP_STREAM | CAP_DEADLINE
 
 TY_ASSIGN, TY_DONE, TY_FAILED, TY_HEARTBEAT, TY_CALIBRATION, TY_SHUTDOWN = 1, 2, 3, 4, 5, 6
+TY_CHUNK, TY_HELLO = 7, 8  # v3+
 
 
 class ProtocolError(Exception):
@@ -94,6 +118,10 @@ def encode(msg, version=VERSION):
             p += bytes([f["plane"]])
             p += struct.pack("<QQQ", f["slot"], f["slot_off"], f["ring_bytes"])
             _put_string(p, f["ring_path"])
+        if version >= 3:
+            # remote tail (protocol.rs v3): deadline budget + stream
+            # strip checksum.
+            p += struct.pack("<QI", f["deadline_us"], f["strip_checksum"])
     elif ty_name == "done":
         ty = TY_DONE
         p += struct.pack("<QQQI", f["frame_id"], f["shard_id"], f["kernel_time_us"], f["checksum"])
@@ -104,6 +132,19 @@ def encode(msg, version=VERSION):
         p += struct.pack("<QQ", f["frame_id"], f["shard_id"])
         p += bytes([1 if f["panicked"] else 0])
         _put_string(p, f["reason"])
+        if version >= 3:
+            # v3 tail: deadline-skip marker.
+            p += bytes([1 if f["deadline"] else 0])
+    elif ty_name == "chunk":
+        ty = TY_CHUNK
+        p += struct.pack("<QQ", f["frame_id"], f["shard_id"])
+        p += bytes([f["dir"]])
+        p += struct.pack("<QQI", f["offset"], f["total"], len(f["data"]))
+        p += f["data"]
+    elif ty_name == "hello":
+        ty = TY_HELLO
+        p += struct.pack("<HI", f["version"], f["caps"])
+        _put_string(p, f["tag"])
     elif ty_name == "heartbeat":
         ty = TY_HEARTBEAT
         p += struct.pack("<Q", f["seq"])
@@ -182,22 +223,37 @@ def decode(buf):
             # v1 peers only speak the spill-file plane.
             f["plane"], f["slot"], f["slot_off"], f["ring_bytes"] = PLANE_FILE, 0, 0, 0
             f["ring_path"] = ""
+        if version >= 3:
+            f["deadline_us"], f["strip_checksum"] = c.u64(), c.u32()
+        else:
+            # v1/v2 peers carry no deadline budget and no strip sum.
+            f["deadline_us"], f["strip_checksum"] = 0, 0
         if f["nbins"] == 0 or f["nrows"] == 0 or f["img_h"] == 0 or f["img_w"] == 0:
             raise ProtocolError("malformed", "degenerate shard geometry")
         if f["row0"] + f["nrows"] > f["img_h"]:
             raise ProtocolError("malformed", "shard strip past image")
-        if f["plane"] not in (PLANE_FILE, PLANE_SHM):
-            raise ProtocolError("malformed", f"data plane byte {f['plane']}")
-        if f["plane"] == PLANE_SHM:
+        # The strip/partial sizes drive buffer allocation on both ends;
+        # the Rust side computes them with checked u64 arithmetic
+        # (WireAssign::strip_bytes / partial_bytes).
+        strip = f["nrows"] * f["img_w"] * 4
+        partial = f["nbins"] * f["nrows"] * f["img_w"] * 4
+        if f["plane"] == PLANE_FILE:
+            pass
+        elif f["plane"] == PLANE_STREAM:
+            if version < 3:
+                raise ProtocolError("malformed", "stream plane needs protocol v3")
+            if strip >= U64 or partial >= U64:
+                raise ProtocolError("malformed", "stream payload size overflows")
+        elif f["plane"] == PLANE_SHM:
             # Hostile slot geometry never reaches the mmap: the strip
             # plus the partial written back in place must fit the slot
             # region inside the advertised ring (protocol.rs decode).
             if not f["ring_path"]:
                 raise ProtocolError("malformed", "shm assign without a ring path")
-            strip = f["nrows"] * f["img_w"] * 4
-            partial = f["nbins"] * f["nrows"] * f["img_w"] * 4
             if strip + partial + f["slot_off"] > f["ring_bytes"]:
                 raise ProtocolError("malformed", "shm slot region past ring")
+        else:
+            raise ProtocolError("malformed", f"data plane byte {f['plane']}")
         msg = ("assign", f)
     elif ty == TY_DONE:
         fid, sid, us, ck = c.u64(), c.u64(), c.u64(), c.u32()
@@ -209,7 +265,34 @@ def decode(buf):
         pb = c.take(1)[0]
         if pb not in (0, 1):
             raise ProtocolError("malformed", f"bool byte {pb}")
-        msg = ("failed", {"frame_id": fid, "shard_id": sid, "panicked": pb == 1, "reason": c.string()})
+        reason = c.string()
+        if version >= 3:
+            db = c.take(1)[0]
+            if db not in (0, 1):
+                raise ProtocolError("malformed", f"bool byte {db}")
+        else:
+            db = 0  # pre-v3 peers never deadline-skip
+        msg = ("failed", {"frame_id": fid, "shard_id": sid, "panicked": pb == 1,
+                          "deadline": db == 1, "reason": reason})
+    elif ty == TY_CHUNK and version >= 3:
+        fid, sid = c.u64(), c.u64()
+        d = c.take(1)[0]
+        if d > 1:
+            raise ProtocolError("malformed", f"chunk dir byte {d}")
+        offset, total, dlen = c.u64(), c.u64(), c.u32()
+        if dlen > CHUNK_DATA_MAX:
+            raise ProtocolError("malformed", f"chunk data {dlen} B")
+        data = c.take(dlen)
+        # A chunk past its declared total is corrupt framing (the
+        # Rust side also treats offset+len overflow as malformed —
+        # with bignums the comparison subsumes it, total < 2^64).
+        if offset + dlen > total:
+            raise ProtocolError("malformed", "chunk past declared total")
+        msg = ("chunk", {"frame_id": fid, "shard_id": sid, "dir": d, "offset": offset,
+                         "total": total, "data": bytes(data)})
+    elif ty == TY_HELLO and version >= 3:
+        hver = struct.unpack("<H", c.take(2))[0]
+        msg = ("hello", {"version": hver, "caps": c.u32(), "tag": c.string()})
     elif ty == TY_HEARTBEAT:
         msg = ("heartbeat", {"seq": c.u64()})
     elif ty == TY_CALIBRATION:
@@ -230,20 +313,33 @@ def decode(buf):
 def samples():
     return [
         # File-plane assign (slot fields zeroed, as the Rust encoder
-        # emits them) and an shm assign mirroring protocol.rs's
-        # shm_assign sample: slot 1 of a 2x16 KiB ring.
+        # emits them), an shm assign mirroring protocol.rs's
+        # shm_assign sample (slot 1 of a 2x16 KiB ring), and a
+        # stream-plane assign carrying a deadline budget + strip sum.
         ("assign", {"frame_id": 7, "shard_id": 3, "bin0": 8, "nbins": 4, "row0": 16, "nrows": 10,
                     "img_h": 64, "img_w": 48, "img_path": "/tmp/img.bin", "out_path": "/tmp/out-7-3.bin",
-                    "plane": PLANE_FILE, "slot": 0, "slot_off": 0, "ring_bytes": 0, "ring_path": ""}),
+                    "plane": PLANE_FILE, "slot": 0, "slot_off": 0, "ring_bytes": 0, "ring_path": "",
+                    "deadline_us": 0, "strip_checksum": 0}),
         ("assign", {"frame_id": 7, "shard_id": 4, "bin0": 8, "nbins": 4, "row0": 16, "nrows": 10,
                     "img_h": 64, "img_w": 48, "img_path": "", "out_path": "",
                     "plane": PLANE_SHM, "slot": 1, "slot_off": 16384, "ring_bytes": 32768,
-                    "ring_path": "/dev/shm/inthist-shm-1-n0.ring"}),
+                    "ring_path": "/dev/shm/inthist-shm-1-n0.ring",
+                    "deadline_us": 0, "strip_checksum": 0}),
+        ("assign", {"frame_id": 7, "shard_id": 5, "bin0": 8, "nbins": 4, "row0": 16, "nrows": 10,
+                    "img_h": 64, "img_w": 48, "img_path": "", "out_path": "",
+                    "plane": PLANE_STREAM, "slot": 0, "slot_off": 0, "ring_bytes": 0, "ring_path": "",
+                    "deadline_us": 250_000, "strip_checksum": 0xBEEFCAFE}),
         ("done", {"frame_id": 7, "shard_id": 3, "kernel_time_us": 1234, "checksum": 0xDEAD,
                   "slot": NO_SLOT}),
         ("done", {"frame_id": 7, "shard_id": 4, "kernel_time_us": 987, "checksum": 0xBEEF,
                   "slot": 1}),
-        ("failed", {"frame_id": 7, "shard_id": 3, "panicked": True, "reason": "injected"}),
+        ("failed", {"frame_id": 7, "shard_id": 3, "panicked": True, "deadline": False,
+                    "reason": "injected"}),
+        ("failed", {"frame_id": 7, "shard_id": 5, "panicked": False, "deadline": True,
+                    "reason": "deadline budget expired before compute"}),
+        ("chunk", {"frame_id": 7, "shard_id": 5, "dir": 1, "offset": 512, "total": 1024,
+                   "data": bytes(range(256)) * 2}),
+        ("hello", {"version": VERSION, "caps": CAPS_ALL, "tag": "proc-worker"}),
         ("heartbeat", {"seq": 42}),
         ("calibration", {"memcpy_bps": 6.0e9, "tile_throughput": [1e8, 2e8, 3e8, 4e8],
                          "tile_throughput_tuned": [1.5e8, 2.5e8, 3.5e8, 4.5e8],
@@ -314,20 +410,42 @@ def test_header_corruptions_are_typed():
     print("framing: magic/version/type/length/geometry corruption all typed")
 
 
-def test_v1_frames_decode_as_file_plane():
-    # The shm tail is a MINOR version bump: a v1 peer's frames must
-    # still decode, landing on the spill-file plane with no slot.
+def test_old_version_frames_still_decode():
+    # The shm tail (v2) and the remote tail (v3) are MINOR version
+    # bumps: a v1 peer's frames must still decode, landing on the
+    # spill-file plane with no slot and no deadline.
     a = dict(samples()[0][1])
     wire = encode(("assign", a), version=1)
-    assert len(wire) < len(encode(("assign", a))), "v1 assign has no shm tail"
+    assert len(wire) < len(encode(("assign", a), version=2)) < len(encode(("assign", a)))
     got, used = decode(wire)
     assert used == len(wire)
     assert got[1]["plane"] == PLANE_FILE and got[1]["ring_path"] == ""
     assert got[1]["slot"] == 0 and got[1]["slot_off"] == 0 and got[1]["ring_bytes"] == 0
     assert got[1]["img_path"] == a["img_path"] and got[1]["out_path"] == a["out_path"]
+    assert got[1]["deadline_us"] == 0 and got[1]["strip_checksum"] == 0
+    # A v2 peer's shm assign keeps its slot geometry; the v3 fields
+    # default (no deadline, no strip sum).
+    shm = dict(samples()[1][1])
+    got, _ = decode(encode(("assign", shm), version=2))
+    assert got[1]["plane"] == PLANE_SHM and got[1]["slot"] == shm["slot"]
+    assert got[1]["deadline_us"] == 0 and got[1]["strip_checksum"] == 0
     d = {"frame_id": 9, "shard_id": 1, "kernel_time_us": 55, "checksum": 0xF00D}
     got, _ = decode(encode(("done", d), version=1))
     assert got[1]["slot"] == NO_SLOT, "v1 done carries no slot to release"
+    # Pre-v3 ShardFailed has no deadline byte: never a deadline skip.
+    fl = {"frame_id": 9, "shard_id": 1, "panicked": False, "deadline": True, "reason": "x"}
+    for v in (1, 2):
+        got, _ = decode(encode(("failed", fl), version=v))
+        assert got[1]["deadline"] is False, "pre-v3 peers cannot deadline-skip"
+    # Chunk and Hello are v3 frame types: under a pre-v3 header the
+    # type byte is unknown, not silently misparsed.
+    for msg in (samples()[7], samples()[8]):
+        assert msg[0] in ("chunk", "hello"), "sample order moved"
+        try:
+            decode(encode(msg, version=2))
+            raise AssertionError(f"{msg[0]} decoded under a v2 header")
+        except ProtocolError as e:
+            assert e.kind == "unknown_type", (msg[0], e.kind)
     # Versions PAST ours are still refused — only older minors decode.
     future = encode(("heartbeat", {"seq": 1}))
     future = future[:2] + struct.pack("<H", VERSION + 1) + future[4:]
@@ -336,7 +454,7 @@ def test_v1_frames_decode_as_file_plane():
         raise AssertionError("future version decoded")
     except ProtocolError as e:
         assert e.kind == "version_mismatch"
-    print("framing: v1 frames decode as file-plane; future versions refused")
+    print("framing: v1/v2 frames decode with defaulted tails; future versions refused")
 
 
 def test_hostile_slot_geometry_is_typed():
@@ -358,6 +476,143 @@ def test_hostile_slot_geometry_is_typed():
     back, _ = decode(encode(("assign", shm)))
     assert back == ("assign", shm)
     print("framing: hostile slot geometry (past-ring/ringless/bad plane) all typed")
+
+
+def test_stream_assign_validation():
+    stream = dict(samples()[2][1])
+    assert stream["plane"] == PLANE_STREAM, "sample order moved"
+    # In-bounds stream assign round-trips with its budget and strip sum.
+    back, _ = decode(encode(("assign", stream)))
+    assert back == ("assign", stream)
+    # The stream plane did not exist before v3: a v2 header claiming it
+    # is malformed, not trusted.
+    try:
+        decode(encode(("assign", stream), version=2))
+        raise AssertionError("stream plane decoded under a v2 header")
+    except ProtocolError as e:
+        assert e.kind == "malformed"
+    # Strip/partial byte counts that overflow u64 would poison buffer
+    # allocation on both ends — rejected at decode.
+    huge = dict(stream, nrows=1 << 62, img_h=1 << 62, row0=0)
+    try:
+        decode(encode(("assign", huge)))
+        raise AssertionError("overflowing stream geometry decoded")
+    except ProtocolError as e:
+        assert e.kind == "malformed"
+    print("framing: stream assign validated (v3-only plane, size overflow typed)")
+
+
+def test_hostile_chunk_geometry_is_typed():
+    chunk = dict(samples()[7][1])
+    hostile = [
+        dict(chunk, dir=2),                         # unknown direction byte
+        dict(chunk, offset=1024),                   # offset+len past declared total
+        dict(chunk, offset=U64 - 1, total=U64 - 1), # offset+len overflows u64
+        dict(chunk, total=len(chunk["data"]) - 1),  # data alone past total
+        dict(chunk, offset=0, total=CHUNK_DATA_MAX + 9,
+             data=bytes(CHUNK_DATA_MAX + 1)),       # data above the chunk cap
+    ]
+    for a in hostile:
+        try:
+            decode(encode(("chunk", a)))
+            raise AssertionError(f"hostile chunk decoded: dir={a['dir']} off={a['offset']}")
+        except ProtocolError as e:
+            assert e.kind == "malformed", e.kind
+    # Boundary cases that MUST decode: a final chunk ending exactly at
+    # total, an empty keepalive-shaped chunk, and a max-size chunk.
+    for a in (dict(chunk, offset=512, data=bytes(512)),
+              dict(chunk, offset=0, data=b""),
+              dict(chunk, offset=0, total=CHUNK_DATA_MAX, data=bytes(CHUNK_DATA_MAX))):
+        back, _ = decode(encode(("chunk", a)))
+        assert back == ("chunk", a)
+    print("framing: hostile chunk geometry (dir/overrun/overflow/cap) all typed")
+
+
+class StreamRx:
+    """Mirror of the chunk reassembly rule shared by supervisor.rs
+    (stream_rx, partials child→parent) and worker.rs (PendingStream,
+    strips parent→child): chunks append dense and in order; a gap,
+    replay or overrun drops the buffer — the shard retries typed
+    instead of computing on torn bytes."""
+
+    def __init__(self, total):
+        self.total = total
+        self.buf = bytearray()
+        self.dead = False
+
+    def push(self, offset, data):
+        in_order = (offset == len(self.buf)
+                    and len(data) <= CHUNK_DATA_MAX
+                    and len(self.buf) + len(data) <= self.total)
+        if not in_order:
+            self.dead = True
+            return False
+        self.buf += data
+        return True
+
+    def complete(self):
+        return not self.dead and len(self.buf) == self.total
+
+
+def test_chunk_reassembly_is_dense_in_order_or_dead():
+    payload = bytes((i * 37) & 0xFF for i in range(3 * CHUNK_DATA_MAX // 2))
+    rx = StreamRx(len(payload))
+    for off in range(0, len(payload), CHUNK_DATA_MAX):
+        assert rx.push(off, payload[off:off + CHUNK_DATA_MAX])
+    assert rx.complete() and bytes(rx.buf) == payload
+    assert fnv1a32(rx.buf) == fnv1a32(payload), "reassembly is byte-exact"
+    # A gap (skipped chunk), a replay (stale offset) and an overrun
+    # (bytes past the declared total) each kill the buffer for good.
+    for bad_off, n in ((CHUNK_DATA_MAX, 16), (0, 16), (0, 32)):
+        rx = StreamRx(24)
+        rx.push(0, bytes(8))
+        if bad_off == 0 and n == 32:
+            assert not rx.push(8, bytes(n)), "overrun past total must be rejected"
+        else:
+            assert not rx.push(bad_off if bad_off else 4, bytes(n)), "gap/replay rejected"
+        assert rx.dead and not rx.complete()
+    # Truncation is not completion: a dense prefix short of total never
+    # reads as done (the ShardDone handler checks exact length).
+    rx = StreamRx(64)
+    rx.push(0, bytes(32))
+    assert not rx.complete()
+    print("stream plane: chunk reassembly byte-exact; gap/replay/overrun kill the buffer")
+
+
+def deadline_budget_us(now_us, expires_us):
+    """Mirror of supervisor.rs pump(): the deadline crosses the process
+    (and host) boundary as *remaining budget* in micros — an Instant is
+    meaningless in another clock domain.  0 is the no-deadline
+    sentinel; the expired case is dropped pre-dispatch, so a dispatched
+    budget clamps to >= 1."""
+    if expires_us is None:
+        return 0
+    return max(expires_us - now_us, 1)
+
+
+def worker_deadline_expired(deadline_us, elapsed_since_arrival_us):
+    """Mirror of worker.rs deadline_expired(): the budget is anchored
+    at the assignment's ARRIVAL — the only instant both clock domains
+    agree on, because the worker observed it."""
+    return deadline_us > 0 and elapsed_since_arrival_us >= deadline_us
+
+
+def test_deadline_crosses_clock_domains_as_budget():
+    # No deadline → the 0 sentinel, which never expires.
+    assert deadline_budget_us(1_000, None) == 0
+    assert not worker_deadline_expired(0, 10**12)
+    # A live budget is the remaining micros at dispatch.
+    assert deadline_budget_us(1_000, 251_000) == 250_000
+    # Already-expired frames are dropped pre-dispatch; if one races the
+    # clamp, >= 1 keeps it distinct from the sentinel (the worker then
+    # skips it immediately instead of computing forever).
+    assert deadline_budget_us(999_999, 500) == 1
+    # The worker re-anchors at arrival: clock skew between the hosts is
+    # irrelevant, only transfer+queue time burns the budget.
+    assert not worker_deadline_expired(250_000, 100_000)
+    assert worker_deadline_expired(250_000, 250_000)
+    assert worker_deadline_expired(1, 1)
+    print("deadline: budget-at-dispatch encoding, worker re-anchors at arrival")
 
 
 def test_random_bytes_never_crash_the_decoder():
@@ -398,15 +653,23 @@ class SupervisorSim:
     watchdog.  Time is an integer tick."""
 
     def __init__(self, workers=2, max_attempts=3, per_child_inflight=2, heartbeat_timeout=10,
-                 ring_slots=0):
+                 ring_slots=0, remote=(), reconnect_attempts=3):
         self.max_attempts = max_attempts
         self.cap = per_child_inflight
         self.hb_timeout = heartbeat_timeout
         self.ring_slots = ring_slots
+        self.reconnect_attempts = reconnect_attempts
+        # Per-attempt outcomes for remote reconnects, consumed front to
+        # back; exhausted plan means the endpoint accepts (the chaos
+        # schedule, mirror of fault_property.rs's proxy).
+        self.reconnect_plan = deque()
         self.now = 0
+        # Remote slots start `spoken`: the Hello handshake already
+        # proved the peer talks (supervisor.rs connect_slot).
         self.slots = [{"alive": True, "inflight": {}, "last_seen": 0,
-                       "spoken": False, "spawned_at": 0, "averted": False}
-                      for _ in range(workers)]
+                       "spoken": i in remote, "spawned_at": 0, "averted": False,
+                       "remote": i in remote}
+                      for i in range(workers)]
         # Rings OUTLIVE their child: a replacement child remaps the same
         # ring file, so in-use slots must be reclaimed on reap or the
         # ring leaks capacity (supervisor.rs reap path).
@@ -416,7 +679,7 @@ class SupervisorSim:
         self.stats = {"dispatched": 0, "requeued": 0, "completed": 0, "shard_failures": 0,
                       "respawns": 0, "skipped_deadline": 0, "img_deleted": [], "typed_failures": [],
                       "shm_dispatched": 0, "shm_fallbacks": 0, "slots_reclaimed": 0,
-                      "kills_averted": 0}
+                      "kills_averted": 0, "remote_reconnects": 0, "skipped_deadline_worker": 0}
 
     def submit(self, frame_id, nshards, expires=None):
         self.frames[frame_id] = {"outstanding": nshards, "failed": False, "expires": expires,
@@ -507,11 +770,13 @@ class SupervisorSim:
             self.rings[node].discard(slot)
 
     def child_dies(self, node):
-        """SIGKILL analog: reclaim its ring slots, requeue everything
-        in flight, respawn."""
+        """SIGKILL / dropped-link analog: reclaim its ring slots,
+        requeue everything in flight, then respawn (local) or
+        re-connect under the bounded ladder (remote)."""
         s = self.slots[node]
         assert s["alive"]
         s["alive"] = False
+        remote = s["remote"]
         orphans = list(s["inflight"].values())
         s["inflight"] = {}
         # Reclaim-on-reap: a SIGKILLed child never sends ShardDone for
@@ -524,8 +789,23 @@ class SupervisorSim:
         for t in orphans:
             t.pop("slot", None)  # the reaper already released it
             self._retry_or_fail(t, "worker process died")
+        if remote:
+            # The reconnect ladder (supervisor.rs child_died, remote
+            # arm): bounded attempts; exhaustion leaves the slot DEAD —
+            # pump() then fails frames typed instead of hanging.
+            for _ in range(self.reconnect_attempts):
+                ok = self.reconnect_plan.popleft() if self.reconnect_plan else True
+                if ok:
+                    self.slots[node] = {"alive": True, "inflight": {}, "last_seen": self.now,
+                                        "spoken": True, "spawned_at": self.now,
+                                        "averted": False, "remote": True}
+                    self.stats["remote_reconnects"] += 1
+                    self.stats["respawns"] += 1
+                    return
+            return  # ladder exhausted: slot stays dead
         self.slots[node] = {"alive": True, "inflight": {}, "last_seen": self.now,
-                            "spoken": False, "spawned_at": self.now, "averted": False}
+                            "spoken": False, "spawned_at": self.now, "averted": False,
+                            "remote": False}
         self.stats["respawns"] += 1
 
     def heartbeat(self, node):
@@ -547,7 +827,7 @@ class SupervisorSim:
                     continue
                 self.child_dies(i)
 
-    def complete(self, node, frame_id, shard_id, ok=True, reason=""):
+    def complete(self, node, frame_id, shard_id, ok=True, reason="", deadline_skip=False):
         task = self.slots[node]["inflight"].pop((frame_id, shard_id))
         self.heartbeat(node)  # any message refreshes liveness
         self._free_slot(node, task)  # slot freed on EVERY outcome path
@@ -555,6 +835,16 @@ class SupervisorSim:
         if f is None:
             return
         if f["failed"]:
+            self._retire(frame_id)
+            return
+        if deadline_skip:
+            # ShardFailed{deadline:true}: the worker's remaining-budget
+            # clock ran out after dispatch.  That is the frame's
+            # deadline expiring, not a compute fault — typed, charged
+            # to its own counter, and NO retry attempt burned (a retry
+            # would only be later).  Mirror of supervisor.rs handle().
+            self.stats["skipped_deadline_worker"] += 1
+            self._fail_frame(frame_id, "deadline")
             self._retire(frame_id)
             return
         if ok:
@@ -725,12 +1015,88 @@ def test_expired_deadline_drops_before_dispatch():
     print("supervision: blown deadline drops the whole frame pre-dispatch, typed once")
 
 
+def test_remote_disconnect_reconnects_and_completes():
+    # Pure-remote pool (mirror of proc_property.rs's loopback test):
+    # a dropped link requeues its in-flight shards with attempts+1 and
+    # the reconnected slot picks them back up — bit-identical outcome,
+    # one reconnect counted.
+    sim = SupervisorSim(workers=2, max_attempts=3, per_child_inflight=2, remote=(0, 1))
+    sim.submit(41, 4)
+    sim.pump()
+    assert sim.stats["dispatched"] == 4
+    victim = [k for (n, k) in sim.drain_inflight() if n == 0]
+    assert victim, "node 0 must hold work"
+    sim.reconnect_plan = deque([False, True])  # first attempt refused, second accepts
+    sim.child_dies(0)
+    assert sim.stats["remote_reconnects"] == 1, "the ladder retried past the refusal"
+    assert sim.stats["requeued"] == len(victim), "every orphan burned one attempt"
+    assert sim.slots[0]["alive"] and sim.slots[0]["spoken"], \
+        "a reconnected link is live and has proven it speaks"
+    sim.pump()
+    while sim.drain_inflight():
+        for node, (fid, sid) in sim.drain_inflight():
+            sim.complete(node, fid, sid)
+        sim.pump()
+    assert sim.stats["completed"] == 4 and sim.stats["typed_failures"] == []
+    assert sim.stats["img_deleted"] == [41]
+    print("supervision: remote disconnect reconnects under the ladder; frame completes")
+
+
+def test_remote_reconnect_exhaustion_fails_typed():
+    # Every reconnect attempt refused: the slot stays dead and pending
+    # shards fail TYPED through workers_gone — never a silent hang
+    # (supervisor.rs pump() whole-pool-gone arm).
+    sim = SupervisorSim(workers=1, max_attempts=5, per_child_inflight=2,
+                        remote=(0,), reconnect_attempts=3)
+    sim.submit(43, 3)
+    sim.pump()
+    sim.reconnect_plan = deque([False] * 8)
+    sim.child_dies(0)
+    assert sim.stats["remote_reconnects"] == 0 and not sim.slots[0]["alive"]
+    assert len(sim.reconnect_plan) == 5, "the ladder stopped at its bound (3 attempts)"
+    sim.pump()
+    assert [f for (f, e) in sim.stats["typed_failures"]] == [43]
+    assert sim.stats["typed_failures"][0][1] == "workers_gone"
+    assert sim.stats["img_deleted"] == [43] and 43 not in sim.frames and not sim.pending
+    print("supervision: reconnect exhaustion leaves the slot dead; frames fail typed")
+
+
+def test_worker_deadline_skip_is_typed_and_burns_no_retry():
+    # A worker-side deadline skip (budget burned in transfer/queue) is
+    # the deadline expiring, not a compute fault: typed exactly once,
+    # charged to skipped_deadline_worker, and the shard is NOT requeued
+    # — a retry would only finish later.
+    sim = SupervisorSim(workers=2, max_attempts=3, remote=(0, 1))
+    sim.submit(47, 4)
+    sim.pump()
+    requeued_before = sim.stats["requeued"]
+    (node, (fid, sid)) = sim.drain_inflight()[0]
+    sim.complete(node, fid, sid, deadline_skip=True)
+    assert sim.stats["skipped_deadline_worker"] == 1
+    assert sim.stats["requeued"] == requeued_before, "a deadline skip burns no retry"
+    assert [f for (f, e) in sim.stats["typed_failures"]] == [47]
+    assert sim.stats["typed_failures"][0][1] == "deadline"
+    # Siblings retire silently through the at-most-once failed branch.
+    while sim.drain_inflight():
+        for node, key in sim.drain_inflight():
+            sim.complete(node, key[0], key[1])
+        sim.pump()
+    sim.pump()
+    assert len(sim.stats["typed_failures"]) == 1
+    assert sim.stats["img_deleted"] == [47] and 47 not in sim.frames
+    print("supervision: worker deadline skip typed once, no retry burned")
+
+
 if __name__ == "__main__":
     test_roundtrip_every_type()
     test_every_truncation_point_is_typed()
     test_header_corruptions_are_typed()
-    test_v1_frames_decode_as_file_plane()
+    test_old_version_frames_still_decode()
     test_hostile_slot_geometry_is_typed()
+    test_stream_assign_validation()
+    test_hostile_chunk_geometry_is_typed()
+    test_chunk_reassembly_is_dense_in_order_or_dead()
+    test_deadline_crosses_clock_domains_as_budget()
     test_random_bytes_never_crash_the_decoder()
     test_checksum_stable_and_bit_sensitive()
     test_child_death_requeues_and_frame_completes()
@@ -740,4 +1106,7 @@ if __name__ == "__main__":
     test_ring_slots_released_on_completion_and_reclaimed_on_reap()
     test_full_ring_falls_back_to_the_file_plane()
     test_expired_deadline_drops_before_dispatch()
+    test_remote_disconnect_reconnects_and_completes()
+    test_remote_reconnect_exhaustion_fails_typed()
+    test_worker_deadline_skip_is_typed_and_burns_no_retry()
     print("proc plane pre-validation: ALL OK")

@@ -20,10 +20,12 @@
 //!    probe vs the plain supervised executor.
 //! 5. **Process isolation** — the same schedule through real
 //!    `proc-worker` child processes, once per data plane: the
-//!    spill-file round-trip (`proc` row) and the shared-memory slot
-//!    ring (`proc.shm` row), so the JSON carries both isolation-tax
-//!    numbers and their ratio — plus the latency of a frame that
-//!    survives a SIGKILL mid-flight (respawn recovery).
+//!    spill-file round-trip (`proc` row), the shared-memory slot
+//!    ring (`proc.shm` row), and loopback TCP remote nodes on the
+//!    chunked stream plane (`proc.remote` row), so the JSON carries
+//!    all three isolation-tax numbers and their ratios — plus the
+//!    latency of a frame that survives a SIGKILL mid-flight
+//!    (respawn recovery).
 //!
 //! Run: `cargo bench --bench shard` (BENCH_REPS=1 for the CI smoke).
 
@@ -405,6 +407,48 @@ fn main() {
         if !shm_plane || shm_tax_pct < isolation_tax_pct { "PASS" } else { "FAIL" }
     );
 
+    // The same schedule once more over loopback TCP: one `proc-worker
+    // --listen` process backs two remote node slots (each connection
+    // gets its own serve loop, like two hosts would), and every strip
+    // and partial rides the chunked in-band stream plane — remote
+    // nodes have no spill-file or shm alternative.  The delta vs the
+    // in-process executor is the full remote tax: socket framing,
+    // FNV-1a checksums both ways, and the chunk copies.
+    let mut listener = std::process::Command::new(env!("CARGO_BIN_EXE_proc-worker"))
+        .args(["--listen", "127.0.0.1:0", "--calibrate", "0"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn listening proc-worker");
+    let remote_addr = {
+        use std::io::BufRead;
+        let stdout = listener.stdout.take().expect("listener stdout");
+        let mut line = String::new();
+        std::io::BufReader::new(stdout).read_line(&mut line).expect("read LISTEN line");
+        line.trim()
+            .strip_prefix("LISTEN ")
+            .unwrap_or_else(|| panic!("expected LISTEN <addr>, got {line:?}"))
+            .to_string()
+    };
+    let remote_sup = ProcSupervisor::new(ProcPoolConfig {
+        workers: 0,
+        remote_workers: vec![remote_addr.clone(), remote_addr],
+        calibrate_children: false,
+        ..Default::default()
+    })
+    .expect("connect remote pool");
+    let _ = run_proc_interleaved(&remote_sup, &plan, &imgs, 2, 1); // warm-up
+    let remote_fps = run_proc_interleaved(&remote_sup, &plan, &imgs, frames, 2);
+    let remote_tax_pct = 100.0 * (sup_fps - remote_fps) / sup_fps.max(1e-9);
+    let remote_stats = remote_sup.stats();
+    drop(remote_sup);
+    let _ = listener.kill();
+    let _ = listener.wait();
+    println!(
+        "multi-process (tcp stream):     {remote_fps:>8.2} fps ({remote_tax_pct:+.1}% isolation tax, {} stream dispatches, {} reconnects)",
+        remote_stats.stream_dispatched, remote_stats.remote_reconnects
+    );
+
     // --- machine-readable report at the repo root ---
     let mut json = String::new();
     json.push_str("{\n");
@@ -457,6 +501,11 @@ fn main() {
         shm_stats.slots_reclaimed,
         shm_stats.shm_mapped_bytes
     ));
+    json.push_str(&format!(
+        "  \"proc.remote\": {{\"workers\": 2, \"data_plane\": \"stream\", \"transport\": \"tcp-loopback\", \"fps_in_process\": {sup_fps:.2}, \"fps_multi_process\": {remote_fps:.2}, \"isolation_tax_pct\": {remote_tax_pct:.2}, \"stream_dispatched\": {}, \"reconnects\": {}}},\n",
+        remote_stats.stream_dispatched,
+        remote_stats.remote_reconnects
+    ));
     json.push_str("  \"derived\": {\n");
     json.push_str(&format!(
         "    \"interleaved_2_inflight_vs_serial_queue\": {:.3},\n",
@@ -473,6 +522,10 @@ fn main() {
     json.push_str(&format!(
         "    \"shm_tax_below_file_tax\": {},\n",
         !shm_plane || shm_tax_pct < isolation_tax_pct
+    ));
+    json.push_str(&format!(
+        "    \"stream_vs_file_fps_ratio\": {:.3},\n",
+        remote_fps / proc_fps.max(1e-9)
     ));
     json.push_str(&format!(
         "    \"calibration_samples\": {}\n",

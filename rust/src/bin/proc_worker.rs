@@ -1,8 +1,10 @@
 //! `proc-worker` — the child half of the multi-process execution
 //! plane (see `inthist::proc`).  Speaks the length-prefixed control
-//! protocol on stdin/stdout; bulk tensors ride `TensorStore` spill
-//! files named in each assignment.  Never launched by hand: the
-//! `ProcSupervisor` spawns, monitors, kills and respawns these.
+//! protocol on stdin/stdout when spawned by a local `ProcSupervisor`,
+//! or serves the same protocol over TCP in `--listen` mode so a
+//! supervisor on another host can attach it as a remote node (bulk
+//! tensors then ride the in-band chunked stream plane instead of
+//! spill files).
 //!
 //! Flags (hand-rolled `--key value`, matching the main CLI):
 //!   --calibrate 0|1       run the startup microbench (default 1)
@@ -10,18 +12,29 @@
 //!   --heartbeat-ms N      liveness tick interval (default 200)
 //!   --boot-delay-ms N     chaos hook: sleep before any output
 //!                         (default 0; heartbeat-deferral tests)
+//!   --listen ADDR         serve remote supervisors on ADDR (e.g.
+//!                         127.0.0.1:0); prints `LISTEN <addr>` on
+//!                         stdout once bound, then accepts any number
+//!                         of connections, one serve loop each
 //!   --selftest            protocol round-trip smoke, then exit 0
-//!                         (CI hook; no supervisor needed)
+//!                         (CI hook; no supervisor needed); with
+//!                         --listen, also runs a loopback TCP
+//!                         handshake + stream-plane round-trip
 
-use inthist::proc::protocol::{ProcMsg, WireAssign, NO_SLOT, PLANE_SHM};
-use inthist::proc::worker::{run, WorkerConfig};
+use inthist::proc::protocol::{
+    checksum_bytes, ProcMsg, WireAssign, CAPS_ALL, CHUNK_DATA_MAX, NO_SLOT, PLANE_SHM,
+    PLANE_STREAM, PROTOCOL_VERSION,
+};
+use inthist::proc::worker::{run, serve_conn, WorkerConfig};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 
 fn usage() -> ! {
     eprintln!(
         "proc-worker: child process of the inthist multi-process plane\n\
          usage: proc-worker [--calibrate 0|1] [--engine-workers N] \
-         [--heartbeat-ms N] [--boot-delay-ms N] [--selftest]"
+         [--heartbeat-ms N] [--boot-delay-ms N] [--listen ADDR] [--selftest]"
     );
     std::process::exit(2)
 }
@@ -46,6 +59,27 @@ fn selftest() -> Result<(), String> {
             slot_off: 2 * (3072 + 98304),
             ring_bytes: 4 * (3072 + 98304),
             ring_path: "/dev/shm/inthist-selftest.ring".into(),
+            deadline_us: 250_000,
+            strip_checksum: 0,
+        }),
+        ProcMsg::AssignShard(WireAssign {
+            frame_id: 8,
+            shard_id: 0,
+            bin0: 0,
+            nbins: 4,
+            row0: 0,
+            nrows: 16,
+            img_h: 64,
+            img_w: 48,
+            img_path: String::new(),
+            out_path: String::new(),
+            plane: PLANE_STREAM,
+            slot: 0,
+            slot_off: 0,
+            ring_bytes: 0,
+            ring_path: String::new(),
+            deadline_us: 0,
+            strip_checksum: 0xBEEF_CAFE,
         }),
         ProcMsg::ShardDone {
             frame_id: 7,
@@ -65,8 +99,25 @@ fn selftest() -> Result<(), String> {
             frame_id: 7,
             shard_id: 3,
             panicked: true,
+            deadline: false,
             reason: "selftest".into(),
         },
+        ProcMsg::ShardFailed {
+            frame_id: 7,
+            shard_id: 5,
+            panicked: false,
+            deadline: true,
+            reason: "deadline budget expired".into(),
+        },
+        ProcMsg::Chunk {
+            frame_id: 8,
+            shard_id: 0,
+            dir: 1,
+            offset: 4096,
+            total: 8192,
+            data: vec![0xA5; 512],
+        },
+        ProcMsg::Hello { version: PROTOCOL_VERSION, caps: CAPS_ALL, tag: "selftest".into() },
         ProcMsg::Heartbeat { seq: 42 },
         ProcMsg::Shutdown,
     ];
@@ -80,22 +131,161 @@ fn selftest() -> Result<(), String> {
     Ok(())
 }
 
+/// Loopback smoke of the remote path: serve one connection from a
+/// thread of this very process, drive the client side by hand —
+/// handshake, a stream-plane assignment whose strip arrives as two
+/// chunks, then verify the partial comes back chunked, checksummed
+/// and complete, followed by `ShardDone`.  Exercises the exact code a
+/// remote supervisor hits, with zero network assumptions beyond
+/// loopback.
+fn listen_selftest(cfg: &WorkerConfig) -> Result<(), String> {
+    let listener =
+        TcpListener::bind("127.0.0.1:0").map_err(|e| format!("bind loopback: {e}"))?;
+    let addr = listener.local_addr().map_err(|e| format!("local addr: {e}"))?;
+    let serve_cfg = WorkerConfig { calibrate: false, ..cfg.clone() };
+    let server = std::thread::spawn(move || {
+        if let Ok((stream, _)) = listener.accept() {
+            let _ = serve_conn(stream, &serve_cfg);
+        }
+    });
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect loopback: {e}"))?;
+    stream.set_nodelay(true).ok();
+    let mut r = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+    // Worker speaks Hello first.
+    match ProcMsg::read_from(&mut r) {
+        Ok(Some(ProcMsg::Hello { caps, .. })) if caps & CAPS_ALL == CAPS_ALL => {}
+        other => return Err(format!("expected capable Hello, got {other:?}")),
+    }
+    let mut w = &stream;
+    ProcMsg::Hello { version: PROTOCOL_VERSION, caps: CAPS_ALL, tag: "selftest-sup".into() }
+        .write_to(&mut w)
+        .map_err(|e| format!("handshake reply: {e}"))?;
+    // One 8-row × 6-col strip, 3 bins, pushed as two chunks.
+    let (nrows, width, nbins) = (8usize, 6usize, 3usize);
+    let strip: Vec<u8> = (0..nrows * width)
+        .flat_map(|i| ((i % nbins) as f32).to_le_bytes())
+        .collect();
+    let assign = WireAssign {
+        frame_id: 1,
+        shard_id: 0,
+        bin0: 0,
+        nbins: nbins as u64,
+        row0: 0,
+        nrows: nrows as u64,
+        img_h: nrows as u64,
+        img_w: width as u64,
+        img_path: String::new(),
+        out_path: String::new(),
+        plane: PLANE_STREAM,
+        slot: 0,
+        slot_off: 0,
+        ring_bytes: 0,
+        ring_path: String::new(),
+        deadline_us: 0,
+        strip_checksum: checksum_bytes(&strip),
+    };
+    ProcMsg::AssignShard(assign).write_to(&mut w).map_err(|e| format!("send assign: {e}"))?;
+    let split = strip.len() / 2;
+    for (off, part) in [(0usize, &strip[..split]), (split, &strip[split..])] {
+        ProcMsg::Chunk {
+            frame_id: 1,
+            shard_id: 0,
+            dir: 0,
+            offset: off as u64,
+            total: strip.len() as u64,
+            data: part.to_vec(),
+        }
+        .write_to(&mut w)
+        .map_err(|e| format!("send chunk: {e}"))?;
+    }
+    w.flush().ok();
+    // Collect the chunked partial + ShardDone, skipping liveness noise.
+    let expected = nbins * nrows * width * 4;
+    let mut partial = Vec::with_capacity(expected);
+    loop {
+        match ProcMsg::read_from(&mut r) {
+            Ok(Some(ProcMsg::Heartbeat { .. })) | Ok(Some(ProcMsg::CalibrationReport { .. })) => {}
+            Ok(Some(ProcMsg::Chunk { dir: 1, offset, data, total, .. })) => {
+                if offset as usize != partial.len() || total as usize != expected {
+                    return Err(format!(
+                        "partial chunk out of order: offset {offset}, have {}, total {total}",
+                        partial.len()
+                    ));
+                }
+                if data.len() > CHUNK_DATA_MAX {
+                    return Err(format!("oversized chunk: {}", data.len()));
+                }
+                partial.extend_from_slice(&data);
+            }
+            Ok(Some(ProcMsg::ShardDone { frame_id: 1, shard_id: 0, .. })) => break,
+            other => return Err(format!("unexpected frame: {other:?}")),
+        }
+    }
+    if partial.len() != expected {
+        return Err(format!("partial truncated: {} of {expected} bytes", partial.len()));
+    }
+    ProcMsg::Shutdown.write_to(&mut w).map_err(|e| format!("send shutdown: {e}"))?;
+    w.flush().ok();
+    drop(stream);
+    drop(r);
+    server.join().map_err(|_| "serve thread panicked".to_string())?;
+    Ok(())
+}
+
+/// Bind `addr`, announce the bound address on stdout (so a script can
+/// pass `:0` and read the port back), then serve every connection —
+/// each gets its own serve loop and thread, so a supervisor
+/// reconnecting after a drop just works.
+fn listen(addr: &str, cfg: WorkerConfig) -> ! {
+    let listener = match TcpListener::bind(addr) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("proc-worker: bind {addr}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let bound = listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.into());
+    println!("LISTEN {bound}");
+    std::io::stdout().flush().ok();
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let conn_cfg = cfg.clone();
+                let tag = format!("inthist-proc-conn-{peer}");
+                let spawned = std::thread::Builder::new().name(tag).spawn(move || {
+                    if let Err(e) = serve_conn(stream, &conn_cfg) {
+                        eprintln!("proc-worker: connection {peer}: {e:#}");
+                    }
+                });
+                if let Err(e) = spawned {
+                    eprintln!("proc-worker: spawn connection thread: {e}");
+                }
+            }
+            Err(e) => {
+                eprintln!("proc-worker: accept: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut cfg = WorkerConfig::default();
+    let mut listen_addr: Option<String> = None;
+    let mut run_selftest = false;
     let mut i = 0;
     while i < argv.len() {
         match argv[i].as_str() {
-            "--selftest" => match selftest() {
-                Ok(()) => {
-                    println!("proc-worker selftest ok");
-                    return;
-                }
-                Err(e) => {
-                    eprintln!("proc-worker selftest FAILED: {e}");
-                    std::process::exit(1);
-                }
-            },
+            "--selftest" => {
+                run_selftest = true;
+                i += 1;
+            }
+            "--listen" => {
+                let v = argv.get(i + 1).unwrap_or_else(|| usage());
+                listen_addr = Some(v.clone());
+                i += 2;
+            }
             "--calibrate" => {
                 let v = argv.get(i + 1).unwrap_or_else(|| usage());
                 cfg.calibrate = match v.as_str() {
@@ -125,6 +315,25 @@ fn main() {
             "--help" | "-h" => usage(),
             _ => usage(),
         }
+    }
+    if run_selftest {
+        if let Err(e) = selftest() {
+            eprintln!("proc-worker selftest FAILED: {e}");
+            std::process::exit(1);
+        }
+        if listen_addr.is_some() {
+            if let Err(e) = listen_selftest(&cfg) {
+                eprintln!("proc-worker listen selftest FAILED: {e}");
+                std::process::exit(1);
+            }
+            println!("proc-worker selftest ok (protocol + loopback stream plane)");
+        } else {
+            println!("proc-worker selftest ok");
+        }
+        return;
+    }
+    if let Some(addr) = listen_addr {
+        listen(&addr, cfg);
     }
     if let Err(e) = run(cfg) {
         eprintln!("proc-worker: {e:#}");

@@ -81,7 +81,7 @@ use crate::util::sync::lock_recover;
 use crate::video::source::{FrameSource, VideoFrame};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -158,6 +158,15 @@ pub struct ServerConfig {
     /// heartbeats, worker-binary discovery).  Read only when
     /// [`Self::process_isolation`] is on.
     pub proc: ProcPoolConfig,
+    /// Remote `proc-worker --listen` endpoints attached as extra node
+    /// slots of the multi-process plane (shards to them ride the
+    /// chunked in-band stream data plane; see
+    /// [`crate::proc::transport`]).  Read only when
+    /// [`Self::process_isolation`] is on; non-empty overrides
+    /// `proc.remote_workers`.  With remote nodes present,
+    /// `proc.workers: 0` builds a pure-remote pool — the same
+    /// [`FrameTicket`] API either way.
+    pub remote_workers: Vec<String>,
     /// Persist the [`TunedPlanner`] cache here: loaded at
     /// [`Server::new`] (missing/corrupt files are ignored — the cache
     /// simply starts cold) and saved on [`Server::drain`] /
@@ -184,6 +193,7 @@ impl Default for ServerConfig {
             calibrator: None,
             process_isolation: false,
             proc: ProcPoolConfig::default(),
+            remote_workers: Vec::new(),
             tune_cache_path: None,
         }
     }
@@ -380,6 +390,17 @@ struct Inner {
     /// ring mappings charge it too, so concurrent in-budget frames
     /// can no longer overcommit the host unmetered.
     mem: Arc<MemoryBudget>,
+    /// Feedback-corrected admission ratio for the sharded route
+    /// (measured peak residency ÷ planned charge, EWMA α = 0.25,
+    /// stored as `f64` bits).  The planned charge is a static estimate
+    /// — the reassembly tensor alone — that ignores the shard partial
+    /// buffers genuinely resident on top of it, so the bucket used to
+    /// under-admit protection; the measured ratio corrects it.
+    admit_ratio_sharded: AtomicU64,
+    /// Same feedback loop for the spilled route, where the static
+    /// charge (the per-frame budget ceiling) over-states typical peak
+    /// residency and used to shed frames the host could serve.
+    admit_ratio_spilled: AtomicU64,
     metrics: Metrics,
     admission: Arc<AdmissionControl>,
     session_seq: AtomicUsize,
@@ -544,9 +565,23 @@ impl Inner {
     fn proc_supervisor(&self) -> Result<Arc<ProcSupervisor>> {
         let mut guard = lock_recover(&self.proc);
         if guard.is_none() {
+            let remote_workers = if self.config.remote_workers.is_empty() {
+                self.config.proc.remote_workers.clone()
+            } else {
+                self.config.remote_workers.clone()
+            };
+            // With remote nodes attached, `workers: 0` is a valid
+            // pure-remote pool — only an all-local pool is floored to
+            // one child.
+            let workers = if remote_workers.is_empty() {
+                self.config.proc.workers.max(1)
+            } else {
+                self.config.proc.workers
+            };
             let cfg = ProcPoolConfig {
-                workers: self.config.proc.workers.max(1),
+                workers,
                 max_attempts: self.config.shard_max_attempts.max(1),
+                remote_workers,
                 ..self.config.proc.clone()
             };
             // The supervisor charges its shm ring mappings against the
@@ -616,6 +651,33 @@ impl Inner {
         })
     }
 
+    /// The feedback-corrected admission charge for a route: the
+    /// static `planned` estimate scaled by the route's measured EWMA
+    /// ratio, clamped to `[planned/4, 4·planned]` so a few wild
+    /// reports can never collapse admission control to zero or
+    /// quadruple-charge it forever.
+    fn admission_charge(planned: usize, ratio_bits: &AtomicU64) -> usize {
+        let ratio = f64::from_bits(ratio_bits.load(Ordering::Relaxed));
+        let raw = (planned as f64 * ratio) as usize;
+        raw.clamp(planned / 4, planned.saturating_mul(4)).max(1)
+    }
+
+    /// Fold one measured peak-residency observation into a route's
+    /// EWMA ratio (α = 0.25).  The observation itself is clamped to
+    /// the same `[1/4, 4]` band as the charge, so a single hostile
+    /// `ShardReport` cannot slam the ratio outside the range the
+    /// charge clamp honours anyway.  Racy read-modify-write by
+    /// design: concurrent frames may drop an update, never corrupt.
+    fn observe_admission(planned: usize, measured: usize, ratio_bits: &AtomicU64) {
+        if planned == 0 {
+            return;
+        }
+        let obs = (measured as f64 / planned as f64).clamp(0.25, 4.0);
+        let old = f64::from_bits(ratio_bits.load(Ordering::Relaxed));
+        let new = old * 0.75 + obs * 0.25;
+        ratio_bits.store(new.to_bits(), Ordering::Relaxed);
+    }
+
     /// Close the predicted-vs-measured loop on the tuning cache: when
     /// a frame's report contradicts the cost model's prediction badly
     /// enough, the [`TunedPlanner`] entry for that geometry is stale
@@ -642,9 +704,13 @@ impl Inner {
                 self.config.host_memory_budget
             ));
         }
-        // The reassembly tensor is resident for the whole op; charge it
-        // against the server-wide bucket before committing any work.
-        let _mem = self.reserve_host(tensor_bytes)?;
+        // The reassembly tensor is resident for the whole op, plus
+        // whatever shard partials ride on top of it — charge the
+        // EWMA-corrected estimate against the server-wide bucket
+        // before committing any work, and settle the ratio from the
+        // measured report afterwards.
+        let _mem =
+            self.reserve_host(Self::admission_charge(tensor_bytes, &self.admit_ratio_sharded))?;
         let plan = self.shard_plan(img.bins, img.h, img.w);
         let image = Arc::new(img.clone());
         let ticket = self.submit_ticket(&image, &plan)?;
@@ -653,6 +719,11 @@ impl Inner {
             Some(d) => ticket.reassemble_into_deadline(&mut out, d)?,
             None => ticket.reassemble_into(&mut out)?,
         };
+        Self::observe_admission(
+            tensor_bytes,
+            tensor_bytes + report.peak_resident_bytes,
+            &self.admit_ratio_sharded,
+        );
         self.note_drift(img.bins, img.h, img.w, &plan, report.wall);
         Ok((out, report.wall))
     }
@@ -663,17 +734,21 @@ impl Inner {
     fn compute_spilled(&self, image: &Arc<BinnedImage>) -> Result<(TensorStore, ShardReport)> {
         let _op = self.begin_op(true)?;
         // Peak residency on this route is bounded by the shard plan
-        // (never the full tensor — that's the point of spilling), so
-        // the bucket charge is the per-frame budget ceiling, settled
-        // against `ShardReport::peak_resident_bytes` by the tests.
+        // (never the full tensor — that's the point of spilling).
+        // The per-frame budget ceiling is the static estimate; the
+        // EWMA of measured `ShardReport::peak_resident_bytes` corrects
+        // it, so frames the host can actually serve stop being shed
+        // on the pessimistic ceiling alone.
         let tensor_bytes = image.bins * image.h * image.w * 4;
-        let _mem = self.reserve_host(tensor_bytes.min(self.config.host_memory_budget))?;
+        let planned = tensor_bytes.min(self.config.host_memory_budget);
+        let _mem = self.reserve_host(Self::admission_charge(planned, &self.admit_ratio_spilled))?;
         let plan = self.shard_plan(image.bins, image.h, image.w);
         let ticket = self.submit_ticket(image, &plan)?;
         let (store, report) = match self.config.frame_deadline {
             Some(d) => ticket.reassemble_spilled_deadline(d)?,
             None => ticket.reassemble_spilled()?,
         };
+        Self::observe_admission(planned, report.peak_resident_bytes, &self.admit_ratio_spilled);
         self.note_drift(image.bins, image.h, image.w, &plan, report.wall);
         self.metrics.frames.fetch_add(1, Ordering::Relaxed);
         self.metrics.push_latency(report.wall.as_secs_f64() * 1e3);
@@ -768,6 +843,8 @@ impl Server {
                 proc: Mutex::new(None),
                 tuner,
                 mem: MemoryBudget::new(config.host_memory_cap),
+                admit_ratio_sharded: AtomicU64::new(1f64.to_bits()),
+                admit_ratio_spilled: AtomicU64::new(1f64.to_bits()),
                 metrics: Metrics::default(),
                 admission,
                 session_seq: AtomicUsize::new(0),
@@ -1439,6 +1516,67 @@ mod tests {
         assert!(h.mem_high_water <= h.mem_cap, "bucket never overcommitted: {h:?}");
         assert!(h.mem_shed >= 1, "the refused op is counted");
         assert_eq!(h.mem_reserved, 0, "reservations settle when ops finish");
+    }
+
+    /// The admission-estimate bugfix: the spilled route used to charge
+    /// the per-frame budget *ceiling* against the bucket no matter
+    /// what frames actually measured, so a host with room for the real
+    /// peak residency kept shedding on the pessimistic static
+    /// estimate.  The EWMA of measured `peak_resident_bytes` corrects
+    /// the charge (clamped to `[planned/4, 4·planned]`), and a taught
+    /// server admits a frame the untaught one sheds.
+    #[test]
+    fn ewma_admission_learns_measured_residency_and_admits() {
+        // The clamp contract first, on a bare ratio cell: hostile
+        // taught ratios can move the charge at most 4× either way,
+        // and a zero-planned observation is ignored outright.
+        let r = AtomicU64::new(1f64.to_bits());
+        assert_eq!(Inner::admission_charge(8 << 10, &r), 8 << 10);
+        r.store(100.0f64.to_bits(), Ordering::Relaxed);
+        assert_eq!(Inner::admission_charge(8 << 10, &r), 32 << 10);
+        r.store(0.0f64.to_bits(), Ordering::Relaxed);
+        assert_eq!(Inner::admission_charge(8 << 10, &r), 2 << 10);
+        assert_eq!(Inner::admission_charge(0, &r), 1, "charge never hits zero");
+        Inner::observe_admission(0, 123, &r);
+        assert_eq!(r.load(Ordering::Relaxed), 0.0f64.to_bits());
+
+        let mut cfg = ServerConfig::default();
+        cfg.engine.bins = 8;
+        cfg.engine.device_memory_budget = 1 << 10; // large route
+        cfg.engine.cpu_fallback_budget = 16 << 10;
+        cfg.host_memory_budget = 8 << 10;
+        cfg.host_memory_cap = 12 << 10;
+        cfg.shard_workers = 2;
+        let srv = Server::new(manifest(), cfg);
+        let img = SyntheticVideo::new(48, 40, 1, 6).frame(0).binned(8);
+        let image = Arc::new(img.clone());
+
+        // Untaught (ratio 1.0): the ceiling charge of 8 KiB cannot fit
+        // beside an 8 KiB concurrent hold under the 12 KiB cap.
+        let hold = srv.inner.mem.try_reserve(8 << 10).expect("hold fits the cap");
+        let err = srv.compute_spilled(&image).err().expect("untaught charge sheds").to_string();
+        assert!(err.contains("overcommit"), "{err}");
+
+        // Taught — the state observe_admission converges to once
+        // measured peaks run well under the ceiling — the charge
+        // shrinks toward measured reality and the same frame fits
+        // beside the same hold, bit-identical.
+        srv.inner.admit_ratio_spilled.store(0.3f64.to_bits(), Ordering::Relaxed);
+        let (store, report) = srv.compute_spilled(&image).expect("taught charge admits");
+        assert!(report.peak_resident_bytes <= srv.config().host_memory_budget);
+        let expected = integral_histogram_seq(&img);
+        let back = store.to_histogram().expect("materialize for verification");
+        assert_eq!(expected.max_abs_diff(&back), 0.0);
+        drop(hold);
+
+        // The successful op settled its own measured observation into
+        // the ratio: moved off the forced value, still in-band.
+        let taught = f64::from_bits(srv.inner.admit_ratio_spilled.load(Ordering::Relaxed));
+        assert!(taught > 0.25 && taught < 4.0 && taught != 0.3, "taught ratio {taught}");
+
+        let h = srv.health();
+        assert!(h.mem_high_water <= h.mem_cap, "bucket never overcommitted: {h:?}");
+        assert!(h.mem_shed >= 1, "the untaught refusal is counted");
     }
 
     /// With no cap configured (the default) the bucket is unlimited

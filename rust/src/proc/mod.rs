@@ -30,6 +30,14 @@
 //!   the `Calibrator` microbench on the node it actually landed on,
 //!   and shard groups are sized and assigned per process from the
 //!   measured snapshots.
+//! * [`transport`] — the child-link abstraction: the same protocol
+//!   frames flow over a local pipe pair ([`transport::PipeTransport`])
+//!   or a TCP socket to a `proc-worker --listen` process on another
+//!   host ([`transport::SocketTransport`], v3 `Hello` handshake).
+//!   Remote nodes use the chunked in-band **stream data plane** —
+//!   strips pushed and partials pulled as bounded `Chunk` frames with
+//!   FNV-1a checksums — because neither spill files nor `/dev/shm`
+//!   cross hosts.
 //!
 //! The plane hangs off the same `FrameTicket` API as the in-process
 //! executor, so reassembly, deadline accounting and the bit-identity
@@ -42,12 +50,16 @@ pub mod placement;
 pub mod protocol;
 pub mod shm;
 pub mod supervisor;
+pub mod transport;
 pub mod worker;
 
 pub use placement::{plan_for_nodes, PlacementMap};
-pub use protocol::{checksum_f32, ProcMsg, ProtocolError, WireAssign};
+pub use protocol::{checksum_bytes, checksum_f32, ProcMsg, ProtocolError, WireAssign};
 pub use shm::{ShmMap, ShmRing};
 pub use supervisor::{
     resolve_worker_bin, DataPlane, ProcPoolConfig, ProcStats, ProcSupervisor,
 };
-pub use worker::{run as run_worker, WorkerConfig};
+pub use transport::{connect_remote, PipeTransport, SocketTransport, Transport};
+pub use worker::{
+    run as run_worker, serve as serve_worker, serve_conn as serve_worker_conn, WorkerConfig,
+};

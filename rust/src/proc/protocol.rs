@@ -15,11 +15,19 @@
 //! checksums live in the writer's RAM and cannot follow the bytes
 //! across the process boundary.
 //!
-//! **Versioning.**  Version 2 is a minor bump: the v2 `AssignShard` /
-//! `ShardDone` payloads are the v1 layouts with the data-plane fields
-//! appended, and this side still *decodes* v1 frames (as file-plane
-//! assignments) so a mixed-version pipe fails soft, not weird.
-//! Writers always emit v2.
+//! On the **stream plane** (v3, remote workers) no filesystem is
+//! shared at all: the supervisor pushes the input strip as bounded
+//! [`ProcMsg::Chunk`] frames over the same connection, the worker
+//! pulls the partial back the same way, and both directions carry the
+//! FNV-1a checksum of the full payload.
+//!
+//! **Versioning.**  Versions 2 and 3 are minor bumps: the v2 payloads
+//! are the v1 layouts with the data-plane fields appended, v3 appends
+//! the deadline budget / stream-plane fields and adds the `Chunk` and
+//! `Hello` frames, and this side still *decodes* v1/v2 frames (as
+//! file-/shm-plane assignments with no deadline) so a mixed-version
+//! link fails soft, not weird.  Writers always emit the current
+//! version.
 //!
 //! **Wire format.**  Every frame is
 //!
@@ -41,15 +49,30 @@ use std::io::{Read, Write};
 /// "IH" — rejects garbage on the pipe before any length is trusted.
 pub const PROTOCOL_MAGIC: u16 = 0x4948;
 /// Bumped on any wire-format change.  v2 added the shared-memory
-/// data-plane fields to `AssignShard`/`ShardDone`; frames down to
-/// [`PROTOCOL_VERSION_MIN`] still decode (minor bump).
-pub const PROTOCOL_VERSION: u16 = 2;
+/// data-plane fields to `AssignShard`/`ShardDone`; v3 added the
+/// deadline budget, the chunked stream plane and the `Hello`
+/// handshake; frames down to [`PROTOCOL_VERSION_MIN`] still decode
+/// (minor bumps).
+pub const PROTOCOL_VERSION: u16 = 3;
 /// Oldest version this side still decodes (v1 = file-plane payloads).
 pub const PROTOCOL_VERSION_MIN: u16 = 1;
 /// `WireAssign::plane` — spill-file data plane (v1 behaviour).
 pub const PLANE_FILE: u8 = 0;
 /// `WireAssign::plane` — shared-memory ring slot data plane.
 pub const PLANE_SHM: u8 = 1;
+/// `WireAssign::plane` — chunked in-band stream data plane (v3,
+/// remote workers: no shared filesystem, no shared memory).
+pub const PLANE_STREAM: u8 = 2;
+/// Largest `Chunk::data` a well-formed peer sends.  Keeps any single
+/// frame well under [`MAX_PAYLOAD`] and bounds per-frame latency so
+/// heartbeats interleave with bulk transfer.
+pub const CHUNK_DATA_MAX: u32 = 256 * 1024;
+/// `Hello::caps` bit: peer speaks the chunked stream data plane.
+pub const CAP_STREAM: u32 = 1;
+/// `Hello::caps` bit: peer honours wire deadline budgets.
+pub const CAP_DEADLINE: u32 = 2;
+/// Every capability this build implements.
+pub const CAPS_ALL: u32 = CAP_STREAM | CAP_DEADLINE;
 /// `ShardDone::slot` value meaning "no ring slot" (file plane / v1).
 pub const NO_SLOT: u64 = u64::MAX;
 /// Control frames are small; anything bigger than this is a corrupt
@@ -149,6 +172,14 @@ pub struct WireAssign {
     pub ring_bytes: u64,
     /// Ring file to `mmap` ([`PLANE_SHM`] only).
     pub ring_path: String,
+    /// Remaining deadline budget in microseconds at dispatch time;
+    /// `0` = no deadline.  A *duration*, never an instant — wall
+    /// clocks and `Instant` epochs do not agree across process or
+    /// host boundaries (v3; v1/v2 frames decode as `0`).
+    pub deadline_us: u64,
+    /// FNV-1a checksum of the input strip bytes ([`PLANE_STREAM`]
+    /// only — the worker verifies the assembled strip before compute).
+    pub strip_checksum: u32,
 }
 
 impl WireAssign {
@@ -175,14 +206,27 @@ pub enum ProcMsg {
     /// ring-slot bytes on the shm plane, the file payload otherwise.
     ShardDone { frame_id: u64, shard_id: u64, kernel_time_us: u64, checksum: u32, slot: u64 },
     /// Child → parent: one compute attempt failed (the *supervisor*
-    /// owns the retry budget).
-    ShardFailed { frame_id: u64, shard_id: u64, panicked: bool, reason: String },
+    /// owns the retry budget).  `deadline` marks a shard the worker
+    /// skipped pre-compute because its wire budget had already
+    /// expired — not a compute failure, so the supervisor charges it
+    /// to `skipped_deadline`, not to the retry ladder (v3; v1/v2
+    /// frames decode as `false`).
+    ShardFailed { frame_id: u64, shard_id: u64, panicked: bool, deadline: bool, reason: String },
     /// Child → parent: liveness tick.
     Heartbeat { seq: u64 },
     /// Child → parent, once at startup: this node's measured costs.
     CalibrationReport { snapshot: CostSnapshot },
     /// Parent → child: drain and exit cleanly.
     Shutdown,
+    /// Bulk payload chunk on the stream plane (v3).  `dir` 0 = input
+    /// strip parent→child, 1 = partial child→parent; chunks arrive in
+    /// offset order and `data` is capped at [`CHUNK_DATA_MAX`].
+    Chunk { frame_id: u64, shard_id: u64, dir: u8, offset: u64, total: u64, data: Vec<u8> },
+    /// Socket handshake (v3): each side announces its protocol
+    /// version and capability bits before any work flows.  The worker
+    /// speaks first on `accept`; the supervisor replies after
+    /// validating version overlap and required capabilities.
+    Hello { version: u16, caps: u32, tag: String },
 }
 
 const TY_ASSIGN: u8 = 1;
@@ -191,10 +235,23 @@ const TY_FAILED: u8 = 3;
 const TY_HEARTBEAT: u8 = 4;
 const TY_CALIBRATION: u8 = 5;
 const TY_SHUTDOWN: u8 = 6;
+const TY_CHUNK: u8 = 7;
+const TY_HELLO: u8 = 8;
 
-/// FNV-1a over the LE bytes of an f32 slice — the cross-process
-/// payload checksum (the store's per-row sums stay in the writer's
-/// RAM, so integrity must ride the control message).
+/// FNV-1a over a raw byte slice — the cross-process payload checksum
+/// (the store's per-row sums stay in the writer's RAM, so integrity
+/// must ride the control message).
+pub fn checksum_bytes(data: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in data {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// [`checksum_bytes`] over the LE bytes of an f32 slice — identical
+/// to hashing the raw on-wire representation of the tensor.
 pub fn checksum_f32(data: &[f32]) -> u32 {
     let mut h: u32 = 0x811C_9DC5;
     for v in data {
@@ -273,6 +330,8 @@ impl ProcMsg {
             ProcMsg::Heartbeat { .. } => TY_HEARTBEAT,
             ProcMsg::CalibrationReport { .. } => TY_CALIBRATION,
             ProcMsg::Shutdown => TY_SHUTDOWN,
+            ProcMsg::Chunk { .. } => TY_CHUNK,
+            ProcMsg::Hello { .. } => TY_HELLO,
         }
     }
 
@@ -293,6 +352,9 @@ impl ProcMsg {
                 p.extend_from_slice(&a.slot_off.to_le_bytes());
                 p.extend_from_slice(&a.ring_bytes.to_le_bytes());
                 put_string(&mut p, &a.ring_path);
+                // v3 tail: deadline budget + stream-plane strip checksum.
+                p.extend_from_slice(&a.deadline_us.to_le_bytes());
+                p.extend_from_slice(&a.strip_checksum.to_le_bytes());
             }
             ProcMsg::ShardDone { frame_id, shard_id, kernel_time_us, checksum, slot } => {
                 p.extend_from_slice(&frame_id.to_le_bytes());
@@ -301,11 +363,13 @@ impl ProcMsg {
                 p.extend_from_slice(&checksum.to_le_bytes());
                 p.extend_from_slice(&slot.to_le_bytes());
             }
-            ProcMsg::ShardFailed { frame_id, shard_id, panicked, reason } => {
+            ProcMsg::ShardFailed { frame_id, shard_id, panicked, deadline, reason } => {
                 p.extend_from_slice(&frame_id.to_le_bytes());
                 p.extend_from_slice(&shard_id.to_le_bytes());
                 p.push(u8::from(*panicked));
                 put_string(&mut p, reason);
+                // v3 tail: deadline-skip marker.
+                p.push(u8::from(*deadline));
             }
             ProcMsg::Heartbeat { seq } => p.extend_from_slice(&seq.to_le_bytes()),
             ProcMsg::CalibrationReport { snapshot } => {
@@ -320,6 +384,20 @@ impl ProcMsg {
                 p.extend_from_slice(&snapshot.samples.to_le_bytes());
             }
             ProcMsg::Shutdown => {}
+            ProcMsg::Chunk { frame_id, shard_id, dir, offset, total, data } => {
+                p.extend_from_slice(&frame_id.to_le_bytes());
+                p.extend_from_slice(&shard_id.to_le_bytes());
+                p.push(*dir);
+                p.extend_from_slice(&offset.to_le_bytes());
+                p.extend_from_slice(&total.to_le_bytes());
+                p.extend_from_slice(&(data.len() as u32).to_le_bytes());
+                p.extend_from_slice(data);
+            }
+            ProcMsg::Hello { version, caps, tag } => {
+                p.extend_from_slice(&version.to_le_bytes());
+                p.extend_from_slice(&caps.to_le_bytes());
+                put_string(&mut p, tag);
+            }
         }
         p
     }
@@ -385,6 +463,9 @@ impl ProcMsg {
                 } else {
                     (PLANE_FILE, 0, 0, 0, String::new())
                 };
+                // v2 frames stop here: no deadline, no stream plane.
+                let (deadline_us, strip_checksum) =
+                    if version >= 3 { (c.u64()?, c.u32()?) } else { (0, 0) };
                 if nbins == 0 || nrows == 0 || img_h == 0 || img_w == 0 {
                     return Err(ProtocolError::Malformed("degenerate shard geometry".into()));
                 }
@@ -407,9 +488,26 @@ impl ProcMsg {
                     slot_off,
                     ring_bytes,
                     ring_path,
+                    deadline_us,
+                    strip_checksum,
                 };
                 match a.plane {
                     PLANE_FILE => {}
+                    PLANE_STREAM => {
+                        if version < 3 {
+                            return Err(ProtocolError::Malformed(
+                                "stream plane needs protocol v3".into(),
+                            ));
+                        }
+                        // The strip/partial sizes drive buffer
+                        // allocation on both ends — overflow is
+                        // malformed, not UB.
+                        if a.strip_bytes().zip(a.partial_bytes()).is_none() {
+                            return Err(ProtocolError::Malformed(
+                                "stream payload size overflows".into(),
+                            ));
+                        }
+                    }
                     PLANE_SHM => {
                         // A hostile/corrupt slot geometry must never
                         // reach the child's mmap arithmetic.
@@ -454,7 +552,18 @@ impl ProcMsg {
                     }
                 };
                 let reason = c.string()?;
-                ProcMsg::ShardFailed { frame_id, shard_id, panicked, reason }
+                let deadline = if version >= 3 {
+                    match c.take(1)?[0] {
+                        0 => false,
+                        1 => true,
+                        other => {
+                            return Err(ProtocolError::Malformed(format!("bool byte {other}")));
+                        }
+                    }
+                } else {
+                    false
+                };
+                ProcMsg::ShardFailed { frame_id, shard_id, panicked, deadline, reason }
             }
             TY_HEARTBEAT => ProcMsg::Heartbeat { seq: c.u64()? },
             TY_CALIBRATION => {
@@ -484,6 +593,32 @@ impl ProcMsg {
                 }
             }
             TY_SHUTDOWN => ProcMsg::Shutdown,
+            TY_CHUNK if version >= 3 => {
+                let frame_id = c.u64()?;
+                let shard_id = c.u64()?;
+                let dir = c.take(1)?[0];
+                if dir > 1 {
+                    return Err(ProtocolError::Malformed(format!("chunk dir byte {dir}")));
+                }
+                let offset = c.u64()?;
+                let total = c.u64()?;
+                let dlen = c.u32()?;
+                if dlen > CHUNK_DATA_MAX {
+                    return Err(ProtocolError::Malformed(format!("chunk data {dlen} B")));
+                }
+                let data = c.take(dlen as usize)?.to_vec();
+                // A chunk past its declared total is corrupt framing.
+                if offset.checked_add(dlen as u64).map_or(true, |end| end > total) {
+                    return Err(ProtocolError::Malformed("chunk past declared total".into()));
+                }
+                ProcMsg::Chunk { frame_id, shard_id, dir, offset, total, data }
+            }
+            TY_HELLO if version >= 3 => {
+                let hver = u16::from_le_bytes(c.take(2)?.try_into().expect("2 bytes"));
+                let caps = c.u32()?;
+                let tag = c.string()?;
+                ProcMsg::Hello { version: hver, caps, tag }
+            }
             other => return Err(ProtocolError::UnknownType { ty: other }),
         };
         c.done()?;
@@ -555,6 +690,8 @@ mod tests {
             slot_off: 0,
             ring_bytes: 0,
             ring_path: String::new(),
+            deadline_us: 0,
+            strip_checksum: 0,
         }
     }
 
@@ -572,10 +709,22 @@ mod tests {
         }
     }
 
+    fn stream_assign() -> WireAssign {
+        WireAssign {
+            img_path: String::new(),
+            out_path: String::new(),
+            plane: PLANE_STREAM,
+            deadline_us: 250_000,
+            strip_checksum: 0xBEEF_CAFE,
+            ..file_assign()
+        }
+    }
+
     fn samples() -> Vec<ProcMsg> {
         vec![
             ProcMsg::AssignShard(file_assign()),
             ProcMsg::AssignShard(shm_assign()),
+            ProcMsg::AssignShard(stream_assign()),
             ProcMsg::ShardDone {
                 frame_id: 7,
                 shard_id: 3,
@@ -587,11 +736,28 @@ mod tests {
                 frame_id: 7,
                 shard_id: 3,
                 panicked: true,
+                deadline: false,
                 reason: "injected".into(),
+            },
+            ProcMsg::ShardFailed {
+                frame_id: 8,
+                shard_id: 0,
+                panicked: false,
+                deadline: true,
+                reason: "deadline budget expired at worker".into(),
             },
             ProcMsg::Heartbeat { seq: 42 },
             ProcMsg::CalibrationReport { snapshot: CostSnapshot::static_prior(Card::Gtx480) },
             ProcMsg::Shutdown,
+            ProcMsg::Chunk {
+                frame_id: 7,
+                shard_id: 3,
+                dir: 1,
+                offset: 4096,
+                total: 7680,
+                data: vec![0xAB; 512],
+            },
+            ProcMsg::Hello { version: PROTOCOL_VERSION, caps: CAPS_ALL, tag: "proc-worker".into() },
         ]
     }
 
@@ -755,6 +921,137 @@ mod tests {
         let mut bad = wire;
         bad[2..4].copy_from_slice(&(PROTOCOL_VERSION + 1).to_le_bytes());
         assert!(matches!(ProcMsg::decode(&bad), Err(ProtocolError::VersionMismatch { .. })));
+    }
+
+    /// v2 frames (data-plane tail, no deadline tail) still decode:
+    /// assignments carry no deadline budget, failures no deadline
+    /// marker, and the v3-only frame types are rejected at v2.
+    #[test]
+    fn v2_frames_decode_without_deadline_tail() {
+        // Hand-build the v2 AssignShard payload: v1 prefix + plane tail.
+        let a = shm_assign();
+        let mut p = Vec::new();
+        for v in [a.frame_id, a.shard_id, a.bin0, a.nbins, a.row0, a.nrows, a.img_h, a.img_w] {
+            p.extend_from_slice(&v.to_le_bytes());
+        }
+        for s in [&a.img_path, &a.out_path] {
+            p.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            p.extend_from_slice(s.as_bytes());
+        }
+        p.push(a.plane);
+        p.extend_from_slice(&a.slot.to_le_bytes());
+        p.extend_from_slice(&a.slot_off.to_le_bytes());
+        p.extend_from_slice(&a.ring_bytes.to_le_bytes());
+        p.extend_from_slice(&(a.ring_path.len() as u32).to_le_bytes());
+        p.extend_from_slice(a.ring_path.as_bytes());
+        let frame = |ty: u8, p: &[u8]| {
+            let mut wire = Vec::new();
+            wire.extend_from_slice(&PROTOCOL_MAGIC.to_le_bytes());
+            wire.extend_from_slice(&2u16.to_le_bytes());
+            wire.push(ty);
+            wire.extend_from_slice(&(p.len() as u32).to_le_bytes());
+            wire.extend_from_slice(p);
+            wire
+        };
+        let (msg, _) = ProcMsg::decode(&frame(1, &p)).expect("v2 assign decodes");
+        let want = WireAssign { deadline_us: 0, strip_checksum: 0, ..shm_assign() };
+        assert_eq!(msg, ProcMsg::AssignShard(want), "v2 decodes with no deadline budget");
+
+        // v2 ShardFailed: ids + bool + reason, no deadline marker.
+        let mut p = Vec::new();
+        p.extend_from_slice(&7u64.to_le_bytes());
+        p.extend_from_slice(&3u64.to_le_bytes());
+        p.push(1);
+        p.extend_from_slice(&8u32.to_le_bytes());
+        p.extend_from_slice(b"injected");
+        let (msg, _) = ProcMsg::decode(&frame(3, &p)).expect("v2 failed decodes");
+        assert_eq!(
+            msg,
+            ProcMsg::ShardFailed {
+                frame_id: 7,
+                shard_id: 3,
+                panicked: true,
+                deadline: false,
+                reason: "injected".into(),
+            }
+        );
+
+        // Chunk and Hello are v3-only: at v2 the type byte is unknown.
+        let chunk = ProcMsg::Chunk {
+            frame_id: 1,
+            shard_id: 0,
+            dir: 0,
+            offset: 0,
+            total: 4,
+            data: vec![1, 2, 3, 4],
+        };
+        let mut wire = chunk.encode();
+        wire[2..4].copy_from_slice(&2u16.to_le_bytes());
+        assert!(matches!(ProcMsg::decode(&wire), Err(ProtocolError::UnknownType { ty: 7 })));
+        // And a stream-plane assign cannot claim to be v2.
+        let mut wire = ProcMsg::AssignShard(stream_assign()).encode();
+        wire[2..4].copy_from_slice(&2u16.to_le_bytes());
+        assert!(ProcMsg::decode(&wire).is_err(), "v2 stream assign must not decode");
+    }
+
+    /// Chunk framing is validated before any buffer trusts it: an
+    /// out-of-range dir byte, a data run past the declared total and
+    /// an oversized data length are all malformed.
+    #[test]
+    fn hostile_chunks_are_rejected() {
+        let good = ProcMsg::Chunk {
+            frame_id: 7,
+            shard_id: 3,
+            dir: 0,
+            offset: 0,
+            total: 512,
+            data: vec![0u8; 512],
+        };
+        let bytes = good.encode();
+        let (back, _) = ProcMsg::decode(&bytes).expect("good chunk decodes");
+        assert_eq!(back, good);
+
+        let bad_dir = ProcMsg::Chunk { dir: 2, ..good.clone() };
+        assert!(matches!(
+            ProcMsg::decode(&bad_dir.encode()),
+            Err(ProtocolError::Malformed(_))
+        ));
+
+        let past_total = ProcMsg::Chunk { offset: 1, ..good.clone() };
+        assert!(matches!(
+            ProcMsg::decode(&past_total.encode()),
+            Err(ProtocolError::Malformed(_))
+        ));
+
+        let overflow = ProcMsg::Chunk { offset: u64::MAX, total: u64::MAX, ..good };
+        assert!(matches!(
+            ProcMsg::decode(&overflow.encode()),
+            Err(ProtocolError::Malformed(_))
+        ));
+
+        let oversized = ProcMsg::Chunk {
+            frame_id: 7,
+            shard_id: 3,
+            dir: 0,
+            offset: 0,
+            total: CHUNK_DATA_MAX as u64 + 1,
+            data: vec![0u8; CHUNK_DATA_MAX as usize + 1],
+        };
+        assert!(matches!(
+            ProcMsg::decode(&oversized.encode()),
+            Err(ProtocolError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn checksum_bytes_matches_checksum_f32() {
+        let data = [1.0f32, -2.5, 3.25, 0.0];
+        let mut raw = Vec::new();
+        for v in data {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(checksum_bytes(&raw), checksum_f32(&data));
+        assert_eq!(checksum_bytes(&[]), 0x811C_9DC5);
     }
 
     #[test]

@@ -28,15 +28,35 @@
 //! placement is an optimization, supervision is the invariant.
 //!
 //! Chaos hooks: [`ProcSupervisor::kill_worker`] SIGKILLs a child on
-//! demand, and a wired [`FaultInjector`] consults
-//! [`FaultSite::WorkerAbort`] per dispatch — when it fires, the chosen
-//! child is killed *for real* (`tests/fault_property.rs`).
+//! demand (force-disconnects a remote link), and a wired
+//! [`FaultInjector`] consults [`FaultSite::WorkerAbort`] per dispatch —
+//! when it fires, the chosen child is killed *for real*
+//! (`tests/fault_property.rs`).
+//!
+//! **Remote nodes.**  `ProcPoolConfig::remote_workers` adds socket
+//! slots behind the same ladder: each address is a `proc-worker
+//! --listen` endpoint, connected through
+//! [`connect_remote`](crate::proc::transport::connect_remote) (v3
+//! `Hello` handshake with capability bits).  Remote shards ride the
+//! in-band **stream data plane** — the strip is pushed and the partial
+//! pulled as bounded `Chunk` frames over the same connection — since
+//! neither spill files nor `/dev/shm` cross hosts.  A dropped
+//! connection is a death like any other: in-flight shards requeue with
+//! a burned attempt, and the slot reconnects under a bounded
+//! backoff ladder (`remote_reconnect_attempts`); exhaustion leaves the
+//! slot dead and frames fail typed, never silent.  Deadlines cross the
+//! clock domain as *remaining budget* (micros at dispatch), never as
+//! an `Instant` — the worker re-anchors at assignment arrival.
 
 use crate::coordinator::backpressure::{MemoryBudget, MemoryReservation};
 use crate::fault::{FaultAction, FaultInjector, FaultSite};
 use crate::histogram::types::BinnedImage;
-use crate::proc::protocol::{checksum_f32, ProcMsg, WireAssign, PLANE_FILE, PLANE_SHM};
+use crate::proc::protocol::{
+    checksum_bytes, checksum_f32, ProcMsg, WireAssign, CHUNK_DATA_MAX, PLANE_FILE, PLANE_SHM,
+    PLANE_STREAM,
+};
 use crate::proc::shm::{self, ShmRing};
+use crate::proc::transport::{connect_remote, PipeTransport, Transport};
 use crate::shard::executor::{Shared, ShardMsg};
 use crate::shard::{
     FrameTicket, ResidentGauge, ShardError, ShardPlan, ShardSpec, TaggedShard, TensorStore,
@@ -45,9 +65,9 @@ use crate::tune::CostSnapshot;
 use crate::util::sync::lock_recover;
 use anyhow::{anyhow, Context, Result};
 use std::collections::{HashMap, VecDeque};
-use std::io::Write;
+use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
-use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::process::{Command, Stdio};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -119,6 +139,19 @@ pub struct ProcPoolConfig {
     /// child sleeps this long before its first byte of output,
     /// modeling a slow boot for the heartbeat-deferral tests.
     pub boot_delay: Duration,
+    /// `proc-worker --listen` endpoints to attach as remote node slots
+    /// (in addition to the `workers` local children; with remote nodes
+    /// present `workers: 0` builds a pure-remote pool).  Remote shards
+    /// ride the in-band stream data plane.
+    pub remote_workers: Vec<String>,
+    /// Connect + handshake timeout per remote attempt.
+    pub remote_connect_timeout: Duration,
+    /// Reconnect attempts after a remote link drops before the slot is
+    /// left dead (each drop also burns one attempt per in-flight
+    /// shard, exactly like a local child death).
+    pub remote_reconnect_attempts: usize,
+    /// Pause between remote reconnect attempts.
+    pub remote_reconnect_backoff: Duration,
 }
 
 impl Default for ProcPoolConfig {
@@ -136,6 +169,10 @@ impl Default for ProcPoolConfig {
             spill_dir: None,
             data_plane: DataPlane::Auto,
             boot_delay: Duration::ZERO,
+            remote_workers: Vec::new(),
+            remote_connect_timeout: Duration::from_secs(2),
+            remote_reconnect_attempts: 3,
+            remote_reconnect_backoff: Duration::from_millis(50),
         }
     }
 }
@@ -215,6 +252,17 @@ pub struct ProcStats {
     pub slots_reclaimed: usize,
     /// Ring bytes currently mapped (all nodes).
     pub shm_mapped_bytes: usize,
+    /// Remote node slots configured (subset of `workers`).
+    pub remote_workers: usize,
+    /// Remote links re-established after a drop.
+    pub remote_reconnects: usize,
+    /// Assignments that rode the in-band stream data plane.
+    pub stream_dispatched: usize,
+    /// Shards a *worker* skipped because their remaining-budget
+    /// deadline expired after dispatch (in transfer or in queue) —
+    /// distinct from `skipped_deadline`, the parent-side pre-dispatch
+    /// drop.
+    pub skipped_deadline_worker: usize,
 }
 
 #[derive(Default)]
@@ -232,6 +280,9 @@ struct Counters {
     shm_dispatched: AtomicUsize,
     shm_fallbacks: AtomicUsize,
     slots_reclaimed: AtomicUsize,
+    remote_reconnects: AtomicUsize,
+    stream_dispatched: AtomicUsize,
+    skipped_deadline_worker: AtomicUsize,
 }
 
 enum Event {
@@ -281,11 +332,22 @@ struct Task {
     /// Ring slot this dispatch holds on its node's ring (`None` on the
     /// file plane and always `None` while the task sits in `pending`).
     slot: Option<usize>,
+    /// This dispatch rode the stream plane: the partial arrives as
+    /// `Chunk` frames, not through a spill file or ring slot.
+    stream: bool,
+}
+
+/// What stands behind a node slot: a spawned local child, or a
+/// connected remote `proc-worker --listen` endpoint (kept for the
+/// reconnect ladder — a respawn of a remote node is a re-connect).
+enum NodeKind {
+    Local,
+    Remote { addr: String },
 }
 
 struct Slot {
-    child: Child,
-    stdin: ChildStdin,
+    link: Box<dyn Transport>,
+    kind: NodeKind,
     gen: u64,
     alive: bool,
     last_seen: Instant,
@@ -294,7 +356,8 @@ struct Slot {
     spawned_at: Instant,
     /// The child has produced at least one protocol frame; heartbeat
     /// age is only enforced after this (a booting/calibrating child is
-    /// silent but not hung).
+    /// silent but not hung).  Remote links start `true` — the
+    /// handshake already proved the peer speaks.
     spoken: bool,
     /// A heartbeat kill was already averted (and counted) this boot.
     averted: bool,
@@ -302,7 +365,7 @@ struct Slot {
     reader: Option<JoinHandle<()>>,
 }
 
-fn reader_loop(node: usize, gen: u64, mut stdout: ChildStdout, tx: mpsc::Sender<Event>) {
+fn reader_loop<R: Read>(node: usize, gen: u64, mut stdout: R, tx: mpsc::Sender<Event>) {
     loop {
         match ProcMsg::read_from(&mut stdout) {
             Ok(Some(msg)) => {
@@ -351,8 +414,8 @@ fn spawn_child(
         .spawn(move || reader_loop(node, gen, stdout, tx))
         .context("spawn reader thread")?;
     Ok(Slot {
-        child,
-        stdin,
+        link: Box::new(PipeTransport::new(child, stdin)),
+        kind: NodeKind::Local,
         gen,
         alive: true,
         last_seen: Instant::now(),
@@ -362,6 +425,72 @@ fn spawn_child(
         inflight: HashMap::new(),
         reader: Some(reader),
     })
+}
+
+/// Connect (or re-connect) node slot `node` to a remote worker at
+/// `addr`: TCP connect, v3 `Hello` handshake with capability checks,
+/// then a reader thread over the socket's read half — the exact shape
+/// the pipe reader has, so every downstream event path is shared.
+fn connect_slot(
+    cfg: &ProcPoolConfig,
+    addr: &str,
+    node: usize,
+    gen: u64,
+    evt_tx: &mpsc::Sender<Event>,
+) -> Result<Slot> {
+    let (link, read_half) =
+        connect_remote(addr, cfg.remote_connect_timeout, &format!("inthist-supervisor-n{node}"))?;
+    let tx = evt_tx.clone();
+    let reader = std::thread::Builder::new()
+        .name(format!("inthist-proc-reader-{node}"))
+        .spawn(move || reader_loop(node, gen, read_half, tx))
+        .context("spawn remote reader thread")?;
+    Ok(Slot {
+        link: Box::new(link),
+        kind: NodeKind::Remote { addr: addr.to_string() },
+        gen,
+        alive: true,
+        last_seen: Instant::now(),
+        spawned_at: Instant::now(),
+        spoken: true, // the handshake already round-tripped
+        averted: false,
+        inflight: HashMap::new(),
+        reader: Some(reader),
+    })
+}
+
+/// Write one stream-plane dispatch: the assignment frame followed by
+/// the strip as dense, in-order chunks of at most [`CHUNK_DATA_MAX`]
+/// bytes, then a single flush — the worker sees the whole dispatch or
+/// a torn stream, never an interleaving.
+fn write_stream_assign(
+    w: &mut dyn Write,
+    assign: &ProcMsg,
+    key: (u64, u64),
+    strip: &[u8],
+) -> Result<(), crate::proc::protocol::ProtocolError> {
+    let mut w = w;
+    assign.write_to(&mut w)?;
+    let total = strip.len() as u64;
+    let mut off = 0usize;
+    loop {
+        let end = (off + CHUNK_DATA_MAX).min(strip.len());
+        ProcMsg::Chunk {
+            frame_id: key.0,
+            shard_id: key.1,
+            dir: 0,
+            offset: off as u64,
+            total,
+            data: strip[off..end].to_vec(),
+        }
+        .write_to(&mut w)?;
+        if end == strip.len() {
+            break;
+        }
+        off = end;
+    }
+    w.flush()?;
+    Ok(())
 }
 
 struct Dispatcher {
@@ -400,6 +529,12 @@ struct Dispatcher {
     mem: Option<Arc<MemoryBudget>>,
     /// Mapped ring bytes, for `ProcStats::shm_mapped_bytes`.
     shm_gauge: Arc<ResidentGauge>,
+    /// Partial-result reassembly buffers for in-flight stream-plane
+    /// shards, keyed `(frame_id, shard_id)`.  Chunks append in order;
+    /// any gap or overrun drops the buffer and the shard retries
+    /// typed.  Entries die with their task (done, failed, requeued or
+    /// node death) — never leaked.
+    stream_rx: HashMap<(u64, u64), Vec<u8>>,
     shutting_down: bool,
 }
 
@@ -429,7 +564,7 @@ impl Dispatcher {
             Event::Kill(node) => {
                 if let Some(slot) = self.slots.get_mut(node) {
                     if slot.alive {
-                        let _ = slot.child.kill(); // death lands as Eof
+                        slot.link.kill(); // death lands as Eof
                     }
                 }
             }
@@ -455,18 +590,51 @@ impl Dispatcher {
                     ProcMsg::ShardDone { frame_id, shard_id, kernel_time_us, checksum, .. } => {
                         self.on_done(node, frame_id, shard_id, kernel_time_us, checksum);
                     }
-                    ProcMsg::ShardFailed { frame_id, shard_id, panicked, reason } => {
+                    ProcMsg::ShardFailed { frame_id, shard_id, panicked, deadline, reason } => {
                         if let Some(mut task) =
                             self.slots[node].inflight.remove(&(frame_id, shard_id))
                         {
                             self.free_task_slot(node, &mut task);
+                            self.stream_rx.remove(&(frame_id, shard_id));
                             std::fs::remove_file(&task.out_path).ok();
-                            self.retry_or_fail(node, task, panicked, reason);
+                            if deadline {
+                                // The worker's remaining-budget clock
+                                // ran out after dispatch (transfer or
+                                // queue latency).  That is the frame's
+                                // deadline expiring, not a compute
+                                // fault: surface it typed and burn no
+                                // retry attempt — a retry would only
+                                // be *later*.
+                                self.counters
+                                    .skipped_deadline_worker
+                                    .fetch_add(1, Ordering::Relaxed);
+                                self.shared.note_skipped_deadline();
+                                let (dl, expected) = self
+                                    .frames
+                                    .get(&frame_id)
+                                    .map(|f| (f.deadline, f.expected))
+                                    .unwrap_or((Duration::ZERO, 0));
+                                self.fail_frame(
+                                    frame_id,
+                                    ShardError::DeadlineExceeded {
+                                        frame_id,
+                                        deadline: dl,
+                                        completed: 0,
+                                        expected,
+                                    },
+                                );
+                                self.retire(frame_id);
+                            } else {
+                                self.retry_or_fail(node, task, panicked, reason);
+                            }
                         }
                     }
-                    // Parent-bound only; a child echoing parent
-                    // messages is confused but not fatal.
-                    ProcMsg::AssignShard(_) | ProcMsg::Shutdown => {}
+                    ProcMsg::Chunk { frame_id, shard_id, dir, offset, total, data } => {
+                        self.on_chunk(node, frame_id, shard_id, dir, offset, total, data);
+                    }
+                    // A late Hello is just liveness; parent-bound-only
+                    // frames from a confused child are not fatal.
+                    ProcMsg::Hello { .. } | ProcMsg::AssignShard(_) | ProcMsg::Shutdown => {}
                 }
             }
         }
@@ -498,6 +666,7 @@ impl Dispatcher {
                 preferred,
                 out_path: PathBuf::new(), // named at dispatch
                 slot: None,               // acquired at dispatch
+                stream: false,            // decided at dispatch
             });
         }
     }
@@ -616,6 +785,57 @@ impl Dispatcher {
         self.rings[node].as_mut().and_then(ShmRing::acquire)
     }
 
+    /// Append one inbound partial chunk (stream plane, child→parent).
+    /// Chunks must arrive dense and in order on the per-shard buffer;
+    /// a gap, replay or overrun is wire corruption — the buffer drops
+    /// and the shard retries under the normal attempt ladder.  Chunks
+    /// for keys this node does not hold are stale (e.g. the shard was
+    /// requeued past this worker) and are ignored.
+    #[allow(clippy::too_many_arguments)]
+    fn on_chunk(
+        &mut self,
+        node: usize,
+        frame_id: u64,
+        shard_id: u64,
+        dir: u8,
+        offset: u64,
+        total: u64,
+        data: Vec<u8>,
+    ) {
+        if dir != 1 {
+            return; // parent→child direction echoed back: nonsense, drop
+        }
+        let key = (frame_id, shard_id);
+        if !self.slots[node].inflight.contains_key(&key) {
+            return;
+        }
+        let buf = self
+            .stream_rx
+            .entry(key)
+            .or_insert_with(|| Vec::with_capacity((total as usize).min(1 << 20)));
+        let in_order = offset as usize == buf.len()
+            && data.len() <= CHUNK_DATA_MAX
+            && buf.len() + data.len() <= total as usize;
+        if in_order {
+            buf.extend_from_slice(&data);
+            return;
+        }
+        let have = buf.len();
+        self.stream_rx.remove(&key);
+        if let Some(mut task) = self.slots[node].inflight.remove(&key) {
+            self.free_task_slot(node, &mut task);
+            self.retry_or_fail(
+                node,
+                task,
+                false,
+                format!(
+                    "stream partial chunk out of order (offset {offset}, have {have}, \
+                     total {total})"
+                ),
+            );
+        }
+    }
+
     fn on_done(&mut self, node: usize, frame_id: u64, shard_id: u64, kernel_us: u64, sum: u32) {
         let mut task = match self.slots[node].inflight.remove(&(frame_id, shard_id)) {
             Some(t) => t,
@@ -626,12 +846,14 @@ impl Dispatcher {
             Some(f) => (f.failed, f.w),
             None => {
                 self.free_task_slot(node, &mut task);
+                self.stream_rx.remove(&(frame_id, shard_id));
                 std::fs::remove_file(&task.out_path).ok();
                 return;
             }
         };
         if failed {
             self.free_task_slot(node, &mut task);
+            self.stream_rx.remove(&(frame_id, shard_id));
             std::fs::remove_file(&task.out_path).ok();
             self.retire(frame_id);
             return;
@@ -640,9 +862,33 @@ impl Dispatcher {
         // Materialize the child's partial from the data plane and
         // verify the protocol checksum over exactly the bytes read —
         // the cross-process analog of the store's in-RAM row sums.
-        // Shm plane: the partial sits in the task's ring slot right
-        // after the strip; the checksum moved there with it.
-        let materialized = if let Some(slot) = task.slot {
+        // Stream plane: the partial was reassembled chunk by chunk in
+        // `stream_rx`; shm plane: it sits in the task's ring slot
+        // right after the strip.  The checksum moved with it either
+        // way.
+        let materialized = if task.stream {
+            let key = (frame_id, shard_id);
+            let expected = spec.nbins * spec.nrows * w * 4;
+            match self.stream_rx.remove(&key) {
+                Some(bytes) if bytes.len() == expected => {
+                    let mut partial = self.shared.acquire_partial(spec.nbins, spec.nrows, w);
+                    for (dst, src) in partial.data.iter_mut().zip(bytes.chunks_exact(4)) {
+                        *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+                    }
+                    if checksum_f32(&partial.data) == sum {
+                        Ok(partial)
+                    } else {
+                        self.shared.release_partial(partial);
+                        Err(anyhow!("stream partial checksum mismatch"))
+                    }
+                }
+                Some(bytes) => Err(anyhow!(
+                    "stream partial truncated: {} of {expected} bytes",
+                    bytes.len()
+                )),
+                None => Err(anyhow!("stream partial never arrived before ShardDone")),
+            }
+        } else if let Some(slot) = task.slot {
             let res = match self.rings[node].as_ref() {
                 Some(ring) => {
                     let strip_bytes = spec.nrows * w * 4;
@@ -727,8 +973,8 @@ impl Dispatcher {
             return;
         }
         self.slots[node].alive = false;
-        let _ = self.slots[node].child.kill();
-        let _ = self.slots[node].child.wait(); // reap
+        self.slots[node].link.kill();
+        self.slots[node].link.reap();
         if let Some(r) = self.slots[node].reader.take() {
             let _ = r.join();
         }
@@ -744,25 +990,45 @@ impl Dispatcher {
         }
         // Every shard the child held burns one attempt and requeues —
         // the survival path for aborts and OOM kills, not just panics.
+        // Stream partials mid-reassembly die with their tasks.
         let inflight: Vec<Task> =
             self.slots[node].inflight.drain().map(|(_, t)| t).collect();
         for mut task in inflight {
             task.slot = None; // its slot was just reclaimed wholesale
+            self.stream_rx.remove(&(task.frame_id, task.spec.shard_id as u64));
             std::fs::remove_file(&task.out_path).ok();
             self.retry_or_fail(node, task, false, format!("worker process died: {why}"));
         }
-        // Replace the child (unless we are draining for shutdown).
+        // Replace the node (unless we are draining for shutdown): a
+        // local child respawns, a remote link re-connects under a
+        // bounded backoff ladder.  Either failure leaves the slot
+        // dead — pump() fails frames typed if the whole pool is gone.
         if !self.shutting_down {
             let gen = self.next_gen;
             self.next_gen += 1;
-            match spawn_child(&self.cfg, &self.bin, node, gen, &self.evt_tx) {
-                Ok(slot) => {
-                    self.slots[node] = slot;
-                    self.counters.respawns.fetch_add(1, Ordering::Relaxed);
+            let remote_addr = match &self.slots[node].kind {
+                NodeKind::Local => None,
+                NodeKind::Remote { addr } => Some(addr.clone()),
+            };
+            match remote_addr {
+                None => {
+                    if let Ok(slot) = spawn_child(&self.cfg, &self.bin, node, gen, &self.evt_tx) {
+                        self.slots[node] = slot;
+                        self.counters.respawns.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
-                Err(_) => {
-                    // Spawn failed; the slot stays dead.  pump() fails
-                    // frames typed if the whole pool is gone.
+                Some(addr) => {
+                    for attempt in 0..self.cfg.remote_reconnect_attempts.max(1) {
+                        if attempt > 0 {
+                            std::thread::sleep(self.cfg.remote_reconnect_backoff);
+                        }
+                        if let Ok(slot) = connect_slot(&self.cfg, &addr, node, gen, &self.evt_tx) {
+                            self.slots[node] = slot;
+                            self.counters.remote_reconnects.fetch_add(1, Ordering::Relaxed);
+                            self.counters.respawns.fetch_add(1, Ordering::Relaxed);
+                            break;
+                        }
+                    }
                 }
             }
         }
@@ -779,7 +1045,9 @@ impl Dispatcher {
             if !self.slots[node].alive {
                 continue;
             }
-            if let Ok(Some(_status)) = self.slots[node].child.try_wait() {
+            // Pipes observe child exit directly; a remote link's death
+            // arrives as reader EOF instead (`exited` is never true).
+            if self.slots[node].link.exited() {
                 self.child_died(node, "process exited");
                 continue;
             }
@@ -798,7 +1066,7 @@ impl Dispatcher {
                     }
                     // Past the grace with zero frames ever: truly hung.
                 }
-                let _ = self.slots[node].child.kill();
+                self.slots[node].link.kill();
                 self.child_died(node, "heartbeat timeout");
             }
         }
@@ -885,11 +1153,21 @@ impl Dispatcher {
             // through the normal death path.
             if let Some(f) = &self.faults {
                 if f.decide(FaultSite::WorkerAbort) == Some(FaultAction::Abort) {
-                    let _ = self.slots[node].child.kill();
+                    self.slots[node].link.kill();
                     self.pending.push_front(task);
                     return;
                 }
             }
+            // Deadline crosses the process (and possibly host) boundary
+            // as *remaining budget* in micros, computed at dispatch —
+            // an `Instant` is meaningless in another clock domain.  The
+            // expired case was already dropped above, so clamp to ≥ 1
+            // (0 is the "no deadline" sentinel).
+            let deadline_us = expires
+                .map(|e| {
+                    (e.saturating_duration_since(Instant::now()).as_micros() as u64).max(1)
+                })
+                .unwrap_or(0);
             task.out_path = self.spill_dir.join(format!(
                 "inthist-proc-{}-f{}-s{}-a{}.bin",
                 std::process::id(),
@@ -913,7 +1191,57 @@ impl Dispatcher {
                 slot_off: 0,
                 ring_bytes: 0,
                 ring_path: String::new(),
+                deadline_us,
+                strip_checksum: 0,
             };
+            // Remote nodes always ride the stream plane: the strip is
+            // pushed as bounded chunks over the socket and the partial
+            // comes back the same way.  A strip-read failure burns an
+            // attempt through the normal ladder (the spill file may be
+            // gone with its frame).
+            if self.slots[node].link.is_remote() {
+                let strip = TensorStore::open(&img_path, 1, img_h, w)
+                    .and_then(|s| s.read_rows_raw(0, task.spec.row0, task.spec.nrows));
+                let bytes = match strip {
+                    Ok(b) => b,
+                    Err(e) => {
+                        self.retry_or_fail(
+                            node,
+                            task,
+                            false,
+                            format!("read strip for stream dispatch: {e:#}"),
+                        );
+                        continue;
+                    }
+                };
+                wire.plane = PLANE_STREAM;
+                wire.strip_checksum = checksum_bytes(&bytes);
+                wire.out_path = String::new();
+                task.out_path = PathBuf::new();
+                task.stream = true;
+                let key = (frame_id, task.spec.shard_id as u64);
+                self.stream_rx.remove(&key); // no stale partial survives a re-dispatch
+                let assign = ProcMsg::AssignShard(wire);
+                let wrote = write_stream_assign(self.slots[node].link.writer(), &assign, key, &bytes);
+                match wrote {
+                    Ok(()) => {
+                        self.counters.dispatched.fetch_add(1, Ordering::Relaxed);
+                        self.counters.stream_dispatched.fetch_add(1, Ordering::Relaxed);
+                        self.slots[node].inflight.insert(key, task);
+                    }
+                    Err(_) => {
+                        // Link dropped mid-dispatch: requeue through the
+                        // death path (no attempt burned — the shard
+                        // never fully reached the worker).
+                        task.stream = false;
+                        self.pending.push_front(task);
+                        self.child_died(node, "write failed");
+                        return;
+                    }
+                }
+                continue;
+            }
+            task.stream = false;
             // Shm plane: load the strip into a ring slot and point the
             // assignment at it; any miss (busy ring, budget refusal,
             // downgraded node, unreadable image) rides the file plane
@@ -951,9 +1279,10 @@ impl Dispatcher {
                 }
             }
             let assign = ProcMsg::AssignShard(wire);
-            let wrote = assign
-                .write_to(&mut self.slots[node].stdin)
-                .and_then(|()| self.slots[node].stdin.flush().map_err(Into::into));
+            let wrote = {
+                let mut link = self.slots[node].link.writer();
+                assign.write_to(&mut link).and_then(|()| link.flush().map_err(Into::into))
+            };
             match wrote {
                 Ok(()) => {
                     self.counters.dispatched.fetch_add(1, Ordering::Relaxed);
@@ -980,25 +1309,14 @@ impl Dispatcher {
     fn shutdown_children(&mut self) {
         for slot in self.slots.iter_mut() {
             if slot.alive {
-                let _ = ProcMsg::Shutdown.write_to(&mut slot.stdin);
-                let _ = slot.stdin.flush();
+                let mut w = slot.link.writer();
+                let _ = ProcMsg::Shutdown.write_to(&mut w);
+                let _ = w.flush();
             }
         }
         let grace = Instant::now() + Duration::from_millis(500);
         for slot in self.slots.iter_mut() {
-            loop {
-                match slot.child.try_wait() {
-                    Ok(Some(_)) => break,
-                    Ok(None) if Instant::now() < grace => {
-                        std::thread::sleep(Duration::from_millis(10));
-                    }
-                    _ => {
-                        let _ = slot.child.kill();
-                        let _ = slot.child.wait();
-                        break;
-                    }
-                }
-            }
+            slot.link.wait_exit(grace);
             if let Some(r) = slot.reader.take() {
                 let _ = r.join();
             }
@@ -1015,6 +1333,8 @@ impl Dispatcher {
 /// from any number of threads.  See the module docs for the contract.
 pub struct ProcSupervisor {
     cfg: ProcPoolConfig,
+    /// Total node slots: local children plus remote links.
+    nodes: usize,
     tx: Mutex<Option<mpsc::Sender<Event>>>,
     dispatcher: Option<JoinHandle<()>>,
     shared: Arc<Shared>,
@@ -1059,8 +1379,21 @@ impl ProcSupervisor {
         faults: Option<Arc<FaultInjector>>,
         mem: Option<Arc<MemoryBudget>>,
     ) -> Result<ProcSupervisor> {
-        let workers = cfg.workers.max(1);
-        let bin = resolve_worker_bin(cfg.worker_bin.as_deref())?;
+        // With remote endpoints configured, `workers: 0` is a valid
+        // pure-remote pool; an all-local config keeps the ≥ 1 floor.
+        let local = if cfg.remote_workers.is_empty() {
+            cfg.workers.max(1)
+        } else {
+            cfg.workers
+        };
+        let nodes = local + cfg.remote_workers.len();
+        // The worker binary is only needed for local children — a
+        // pure-remote supervisor must not fail on a missing sibling.
+        let bin = if local > 0 {
+            resolve_worker_bin(cfg.worker_bin.as_deref())?
+        } else {
+            PathBuf::new()
+        };
         let plane = cfg.data_plane.resolve();
         let shm_dir = shm::default_dir().unwrap_or_else(std::env::temp_dir);
         // On the shm plane the image spill defaults into the same
@@ -1074,22 +1407,32 @@ impl ProcSupervisor {
             }
         });
         let (evt_tx, evt_rx) = mpsc::channel::<Event>();
-        let mut slots = Vec::with_capacity(workers);
-        for node in 0..workers {
+        let mut slots = Vec::with_capacity(nodes);
+        for node in 0..local {
             slots.push(spawn_child(&cfg, &bin, node, node as u64, &evt_tx)?);
         }
+        for (i, addr) in cfg.remote_workers.iter().enumerate() {
+            let node = local + i;
+            slots.push(connect_slot(&cfg, addr, node, node as u64, &evt_tx)?);
+        }
         let counters = Arc::new(Counters::default());
-        counters.alive.store(workers, Ordering::Relaxed);
-        let snapshots = Arc::new(Mutex::new(vec![None; workers]));
-        let shared = Shared::external(workers, cfg.max_attempts);
+        counters.alive.store(nodes, Ordering::Relaxed);
+        let snapshots = Arc::new(Mutex::new(vec![None; nodes]));
+        let shared = Shared::external(nodes, cfg.max_attempts);
         let shm_gauge = Arc::new(ResidentGauge::default());
+        // Shm is a local plane: remote nodes never qualify (their
+        // shards ride the stream plane instead).
+        let shm_ok = slots
+            .iter()
+            .map(|s| plane == DataPlane::Shm && !s.link.is_remote())
+            .collect();
         let dispatcher = Dispatcher {
-            cfg: ProcPoolConfig { workers, ..cfg.clone() },
+            cfg: ProcPoolConfig { workers: local, ..cfg.clone() },
             bin,
             rx: evt_rx,
             evt_tx: evt_tx.clone(),
             slots,
-            next_gen: workers as u64,
+            next_gen: nodes as u64,
             pending: VecDeque::new(),
             frames: HashMap::new(),
             shared: Arc::clone(&shared),
@@ -1099,12 +1442,13 @@ impl ProcSupervisor {
             spill_dir: spill_dir.clone(),
             plane,
             shm_dir,
-            rings: (0..workers).map(|_| None).collect(),
-            ring_res: (0..workers).map(|_| None).collect(),
-            shm_ok: vec![plane == DataPlane::Shm; workers],
+            rings: (0..nodes).map(|_| None).collect(),
+            ring_res: (0..nodes).map(|_| None).collect(),
+            shm_ok,
             ring_gen: 0,
             mem,
             shm_gauge: Arc::clone(&shm_gauge),
+            stream_rx: HashMap::new(),
             shutting_down: false,
         };
         let handle = std::thread::Builder::new()
@@ -1113,6 +1457,7 @@ impl ProcSupervisor {
             .context("spawn dispatcher thread")?;
         Ok(ProcSupervisor {
             cfg,
+            nodes,
             tx: Mutex::new(Some(evt_tx)),
             dispatcher: Some(handle),
             shared,
@@ -1130,8 +1475,9 @@ impl ProcSupervisor {
         self.plane
     }
 
+    /// Total node slots (local children + remote links).
     pub fn workers(&self) -> usize {
-        self.cfg.workers.max(1)
+        self.nodes
     }
 
     pub fn config(&self) -> &ProcPoolConfig {
@@ -1157,6 +1503,10 @@ impl ProcSupervisor {
             shm_fallbacks: c.shm_fallbacks.load(Ordering::Relaxed),
             slots_reclaimed: c.slots_reclaimed.load(Ordering::Relaxed),
             shm_mapped_bytes: self.shm_gauge.current(),
+            remote_workers: self.cfg.remote_workers.len(),
+            remote_reconnects: c.remote_reconnects.load(Ordering::Relaxed),
+            stream_dispatched: c.stream_dispatched.load(Ordering::Relaxed),
+            skipped_deadline_worker: c.skipped_deadline_worker.load(Ordering::Relaxed),
         }
     }
 
@@ -1344,6 +1694,39 @@ mod tests {
         assert!(cfg.max_attempts >= 1);
         assert!(cfg.per_child_inflight >= 1);
         assert!(cfg.heartbeat < cfg.heartbeat_timeout);
+        assert!(cfg.remote_workers.is_empty());
+        assert!(cfg.remote_reconnect_attempts >= 1);
+        assert!(cfg.remote_reconnect_backoff < cfg.remote_connect_timeout);
+    }
+
+    /// The stream dispatch writer splits a strip into dense, in-order
+    /// chunks of at most `CHUNK_DATA_MAX` bytes that reassemble
+    /// bit-identically, with one trailing short chunk.
+    #[test]
+    fn stream_assign_chunks_are_dense_and_bounded() {
+        let strip: Vec<u8> = (0..CHUNK_DATA_MAX * 2 + 12345).map(|i| (i * 7 % 251) as u8).collect();
+        let assign = ProcMsg::Heartbeat { seq: 0 }; // any frame works as the header here
+        let mut wire = Vec::new();
+        write_stream_assign(&mut wire, &assign, (3, 4), &strip).expect("write stream");
+        let mut off = 0usize;
+        let (first, used) = ProcMsg::decode(&wire).expect("decode header frame");
+        assert_eq!(first, assign);
+        off += used;
+        let mut rebuilt = Vec::new();
+        while off < wire.len() {
+            let (msg, used) = ProcMsg::decode(&wire[off..]).expect("decode chunk");
+            off += used;
+            match msg {
+                ProcMsg::Chunk { frame_id: 3, shard_id: 4, dir: 0, offset, total, data } => {
+                    assert_eq!(offset as usize, rebuilt.len(), "chunks arrive dense");
+                    assert_eq!(total as usize, strip.len());
+                    assert!(!data.is_empty() && data.len() <= CHUNK_DATA_MAX);
+                    rebuilt.extend_from_slice(&data);
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        assert_eq!(rebuilt, strip, "reassembly is bit-identical");
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Child-link transports for the proc plane: the supervisor speaks
+//! the same length-prefixed [`protocol`](crate::proc::protocol) frames
+//! whether the worker hangs off a pipe pair or a TCP socket.
+//!
+//! [`PipeTransport`] owns a spawned local child and its stdin;
+//! [`SocketTransport`] owns a connected stream to a `proc-worker
+//! --listen` process that may live on another host.  Both hand their
+//! read half to the supervisor's per-node reader thread at
+//! construction, so the trait only carries the write half plus the
+//! lifecycle verbs the dispatcher needs: `kill`, `reap`, a
+//! non-blocking death probe and a graceful-exit wait.
+//!
+//! **Handshake.**  A socket link starts with a [`ProcMsg::Hello`]
+//! exchange — the worker announces first on `accept`, the supervisor
+//! validates protocol-version overlap plus required capability bits
+//! ([`CAP_STREAM`], [`CAP_DEADLINE`]) and replies.  Pipes skip the
+//! handshake: both ends are the same build by construction.
+
+use super::protocol::{ProcMsg, CAPS_ALL, CAP_DEADLINE, CAP_STREAM, PROTOCOL_VERSION};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::process::{Child, ChildStdin};
+use std::time::{Duration, Instant};
+
+/// One child byte-stream link, write half + lifecycle.  The read half
+/// is split off at construction and lives in the reader thread.
+pub trait Transport: Send {
+    /// The frame sink toward the worker.
+    fn writer(&mut self) -> &mut dyn Write;
+    /// Force-disconnect: SIGKILL a local child, shut down a socket.
+    fn kill(&mut self);
+    /// Release OS resources after `kill` (reap a zombie; no-op for
+    /// sockets).
+    fn reap(&mut self);
+    /// Non-blocking death probe.  Pipes can observe child exit
+    /// directly; sockets report death through reader EOF instead, so
+    /// they always answer `false` here.
+    fn exited(&mut self) -> bool;
+    /// Wait until `deadline` for a voluntary exit after `Shutdown`,
+    /// then force the link down.
+    fn wait_exit(&mut self, deadline: Instant);
+    /// Human-readable peer identity for error text.
+    fn describe(&self) -> String;
+    /// `true` when the worker is not a local child process.
+    fn is_remote(&self) -> bool;
+}
+
+/// Local child over its stdin/stdout pipe pair (stdout already moved
+/// to the reader thread).
+pub struct PipeTransport {
+    child: Child,
+    stdin: ChildStdin,
+}
+
+impl PipeTransport {
+    pub fn new(child: Child, stdin: ChildStdin) -> Self {
+        PipeTransport { child, stdin }
+    }
+}
+
+impl Transport for PipeTransport {
+    fn writer(&mut self) -> &mut dyn Write {
+        &mut self.stdin
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+    }
+
+    fn reap(&mut self) {
+        let _ = self.child.wait();
+    }
+
+    fn exited(&mut self) -> bool {
+        matches!(self.child.try_wait(), Ok(Some(_)))
+    }
+
+    fn wait_exit(&mut self, deadline: Instant) {
+        loop {
+            match self.child.try_wait() {
+                Ok(Some(_)) => return,
+                Ok(None) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                _ => {
+                    let _ = self.child.kill();
+                    let _ = self.child.wait();
+                    return;
+                }
+            }
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("local child pid {}", self.child.id())
+    }
+
+    fn is_remote(&self) -> bool {
+        false
+    }
+}
+
+/// Remote worker over TCP.  Death is observed as reader EOF; `kill`
+/// is a bidirectional shutdown that forces that EOF promptly.
+pub struct SocketTransport {
+    stream: TcpStream,
+    peer: String,
+}
+
+impl Transport for SocketTransport {
+    fn writer(&mut self) -> &mut dyn Write {
+        &mut self.stream
+    }
+
+    fn kill(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+
+    fn reap(&mut self) {}
+
+    fn exited(&mut self) -> bool {
+        false
+    }
+
+    fn wait_exit(&mut self, _deadline: Instant) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+
+    fn describe(&self) -> String {
+        format!("remote worker {}", self.peer)
+    }
+
+    fn is_remote(&self) -> bool {
+        true
+    }
+}
+
+/// Connect to a `proc-worker --listen` endpoint and run the v3
+/// handshake.  Returns the write-half transport and the read half for
+/// the caller's reader thread.  Every failure is typed: unreachable
+/// address, handshake timeout, version skew and missing capabilities
+/// all surface as errors, never as a wedged dispatcher.
+pub fn connect_remote(
+    addr: &str,
+    timeout: Duration,
+    tag: &str,
+) -> Result<(SocketTransport, Box<dyn Read + Send>)> {
+    let sockaddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolve remote worker address {addr:?}"))?
+        .next()
+        .ok_or_else(|| anyhow!("remote worker address {addr:?} resolves to nothing"))?;
+    let stream = TcpStream::connect_timeout(&sockaddr, timeout)
+        .with_context(|| format!("connect to remote worker {addr}"))?;
+    stream.set_nodelay(true).ok();
+    // The handshake is the only read on this half; a peer that
+    // connects but never speaks must not wedge the dispatcher.
+    stream
+        .set_read_timeout(Some(timeout))
+        .context("arm handshake read timeout")?;
+    let mut reader = stream.try_clone().context("clone socket read half")?;
+    // The worker speaks first on accept.
+    match ProcMsg::read_from(&mut reader) {
+        Ok(Some(ProcMsg::Hello { version, caps, tag: peer_tag })) => {
+            if caps & CAP_STREAM == 0 || caps & CAP_DEADLINE == 0 {
+                bail!(
+                    "remote worker {addr} ({peer_tag}, protocol v{version}) lacks required \
+                     capabilities (caps {caps:#x})"
+                );
+            }
+        }
+        Ok(other) => bail!("remote worker {addr} handshake: expected Hello, got {other:?}"),
+        Err(e) => bail!("remote worker {addr} handshake: {e}"),
+    }
+    {
+        let mut w = &stream;
+        ProcMsg::Hello { version: PROTOCOL_VERSION, caps: CAPS_ALL, tag: tag.to_string() }
+            .write_to(&mut w)
+            .with_context(|| format!("send handshake reply to {addr}"))?;
+        w.flush().ok();
+    }
+    stream.set_read_timeout(None).context("disarm handshake read timeout")?;
+    Ok((SocketTransport { stream, peer: addr.to_string() }, Box::new(reader)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// A peer that sends garbage instead of a Hello is rejected with a
+    /// typed error, and a silent peer trips the handshake timeout.
+    #[test]
+    fn handshake_rejects_garbage_and_silence() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let server = std::thread::spawn(move || {
+            // First connection: garbage banner.
+            let (mut s, _) = listener.accept().expect("accept");
+            s.write_all(b"HTTP/1.1 200 OK\r\n\r\n").ok();
+            // Second connection: say nothing until the client gives up.
+            let (s2, _) = listener.accept().expect("accept");
+            std::thread::sleep(Duration::from_millis(400));
+            drop(s2);
+            drop(s);
+        });
+        let err = connect_remote(&addr, Duration::from_millis(200), "test")
+            .expect_err("garbage banner must fail");
+        assert!(err.to_string().contains("handshake"), "typed handshake error: {err:#}");
+        let err = connect_remote(&addr, Duration::from_millis(200), "test")
+            .expect_err("silent peer must time out");
+        assert!(err.to_string().contains("handshake"), "typed timeout error: {err:#}");
+        server.join().expect("server thread");
+    }
+
+    /// A peer advertising no stream capability is refused even when it
+    /// speaks valid protocol frames.
+    #[test]
+    fn handshake_requires_stream_capability() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().expect("accept");
+            let mut w = &s;
+            ProcMsg::Hello { version: PROTOCOL_VERSION, caps: 0, tag: "legacy".into() }
+                .write_to(&mut w)
+                .expect("send hello");
+            w.flush().ok();
+            std::thread::sleep(Duration::from_millis(100));
+            drop(s);
+        });
+        let err = connect_remote(&addr, Duration::from_millis(500), "test")
+            .expect_err("capability-less peer must be refused");
+        assert!(err.to_string().contains("capabilities"), "typed caps error: {err:#}");
+        server.join().expect("server thread");
+    }
+
+    /// Unreachable addresses fail typed and promptly.
+    #[test]
+    fn connect_to_dead_endpoint_errors_typed() {
+        // Bind then drop to get a port nobody is listening on.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+            l.local_addr().expect("addr").to_string()
+        };
+        let err = connect_remote(&addr, Duration::from_millis(300), "test")
+            .expect_err("dead endpoint must fail");
+        assert!(err.to_string().contains("connect"), "typed connect error: {err:#}");
+    }
+}

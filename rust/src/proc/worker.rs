@@ -2,35 +2,53 @@
 //! `proc-worker` bin target.
 //!
 //! One worker process is deliberately boring: a single thread blocks
-//! on stdin decoding [`ProcMsg`] frames, executes each
+//! on its control stream decoding [`ProcMsg`] frames, executes each
 //! [`AssignShard`](ProcMsg::AssignShard) with a locally checked-out
-//! [`ScanEngine`], and answers on stdout.  Bulk data stays in
-//! [`TensorStore`] files: the image strip is *read* from the path the
-//! supervisor spilled, the partial tensor is *written* to the path the
-//! assignment names, and only paths + a payload checksum cross the
-//! pipe.  A heartbeat thread ticks on the shared stdout so the
-//! supervisor can tell a hung child from a busy one; calibration runs
-//! once at startup and is reported before the first assignment, which
-//! is what per-node placement feeds on.
+//! [`ScanEngine`], and answers on the shared write half.  The loop is
+//! generic over the byte streams ([`serve`]): the classic pipe worker
+//! feeds it stdin/stdout, the socket worker (`proc-worker --listen`)
+//! feeds it a connected [`TcpStream`] after the `Hello` handshake.
+//!
+//! Bulk data rides whichever plane the assignment names: the file
+//! plane exchanges [`TensorStore`] paths, the shm plane a ring slot,
+//! and the v3 **stream plane** moves the strip and the partial as
+//! bounded [`Chunk`](ProcMsg::Chunk) frames over the connection
+//! itself — the remote worker shares neither filesystem nor memory
+//! with the supervisor.  A heartbeat thread ticks on the shared write
+//! half so the supervisor can tell a hung child from a busy one;
+//! calibration runs once at startup and is reported before the first
+//! assignment, which is what per-node placement feeds on.
+//!
+//! Deadlines arrive as *remaining budget* (`deadline_us`), never as
+//! instants — wall clocks and `Instant` epochs do not line up across
+//! process or host boundaries.  The worker anchors the budget at the
+//! assignment's arrival and skips shards whose budget has already
+//! burned down before compute starts (strip transfer on the stream
+//! plane), reporting a `deadline`-flagged `ShardFailed` the supervisor
+//! charges to `skipped_deadline` rather than the retry ladder.
 //!
 //! Compute runs under `catch_unwind` exactly like the in-process
 //! executor — a panic discards the engine and reports a typed
 //! [`ShardFailed`](ProcMsg::ShardFailed); the *supervisor* owns the
 //! retry budget, so the child never retries on its own.  Anything the
 //! child cannot survive (abort, OOM kill, SIGKILL) ends the process,
-//! which the supervisor observes as pipe EOF — that is the whole point
-//! of the process boundary.
+//! which the supervisor observes as pipe EOF or socket disconnect —
+//! that is the whole point of the process boundary.
 
 use crate::histogram::engine::ScanEngine;
 use crate::histogram::types::{BinnedImage, IntegralHistogram};
-use crate::proc::protocol::{checksum_f32, ProcMsg, WireAssign, NO_SLOT, PLANE_SHM};
+use crate::proc::protocol::{
+    checksum_bytes, checksum_f32, ProcMsg, WireAssign, CAPS_ALL, CHUNK_DATA_MAX, NO_SLOT,
+    PLANE_SHM, PLANE_STREAM, PROTOCOL_VERSION,
+};
 use crate::proc::shm::ShmMap;
 use crate::shard::TensorStore;
 use crate::tune::Calibrator;
 use crate::util::sync::lock_recover;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::io::Write;
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -47,7 +65,7 @@ pub struct WorkerConfig {
     /// `ScanEngine` thread budget (the in-process executor's
     /// `engine_workers` analog).
     pub engine_workers: usize,
-    /// Heartbeat interval on stdout.
+    /// Heartbeat interval on the write half.
     pub heartbeat: Duration,
     /// Chaos hook: sleep this long before the first byte of output —
     /// simulates a slow boot (cold page cache, loaded node, long
@@ -88,55 +106,23 @@ fn ring_map<'m>(
     Ok(rings.get(&a.ring_path).expect("just inserted"))
 }
 
-/// Execute one wire assignment and produce the reply frame.  Pure with
-/// respect to the pipes (pulled out of [`run`] so tests can drive it
-/// in-process).  On the file plane it reads `a.img_path` and writes
-/// `a.out_path`; on the shm plane the strip is read from the ring slot
-/// at `a.slot_off` and the partial is written in place right after it —
-/// no store round-trip at all.  Returns `ShardDone` or a typed
-/// `ShardFailed`.  `engine` is a cache slot — a panicking compute
-/// discards the engine (its scheduler state is suspect), matching the
-/// in-process executor's discipline.  `rings` caches child-side ring
-/// mappings across assignments.
-pub fn execute_assign(
+/// Has a wire deadline budget burned down since the assignment
+/// arrived?  `deadline_us == 0` means no deadline.  The budget is
+/// anchored at *arrival* — the only instant both clock domains agree
+/// on, because this side observed it.
+pub fn deadline_expired(deadline_us: u64, arrival: Instant) -> bool {
+    deadline_us > 0 && arrival.elapsed() >= Duration::from_micros(deadline_us)
+}
+
+/// Bin-shift the strip and run the engine under `catch_unwind`.
+/// Shared by every data plane.  `Err((panicked, reason))` on failure.
+fn compute_partial(
+    strip: &[f32],
     a: &WireAssign,
     engine_workers: usize,
     engine: &mut Option<ScanEngine>,
-    rings: &mut HashMap<String, ShmMap>,
-) -> ProcMsg {
-    let fail = |panicked: bool, reason: String| ProcMsg::ShardFailed {
-        frame_id: a.frame_id,
-        shard_id: a.shard_id,
-        panicked,
-        reason,
-    };
-    let (h, w) = (a.img_h as usize, a.img_w as usize);
-    let (nbins, nrows, row0) = (a.nbins as usize, a.nrows as usize, a.row0 as usize);
-    // Pull the strip (bin indices as f32 — small integers, exact in
-    // f32, so the i32 roundtrip is lossless): from the ring slot on
-    // the shm plane, from the spilled image store otherwise.
-    let shm = a.plane == PLANE_SHM;
-    let strip_bytes = nrows * w * 4;
-    let mut strip = vec![0.0f32; nrows * w];
-    if shm {
-        let map = match ring_map(rings, a) {
-            Ok(m) => m,
-            Err(e) => return fail(false, e),
-        };
-        let mut bytes = vec![0u8; strip_bytes];
-        map.read(a.slot_off as usize, &mut bytes);
-        for (dst, src) in strip.iter_mut().zip(bytes.chunks_exact(4)) {
-            *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
-        }
-    } else {
-        let img = match TensorStore::open(&a.img_path, 1, h, w) {
-            Ok(s) => s,
-            Err(e) => return fail(false, format!("open image: {e:#}")),
-        };
-        if let Err(e) = img.read_rows(0, row0, nrows, &mut strip) {
-            return fail(false, format!("read image strip: {e:#}"));
-        }
-    }
+) -> std::result::Result<(IntegralHistogram, Duration), (bool, String)> {
+    let (w, nbins, nrows) = (a.img_w as usize, a.nbins as usize, a.nrows as usize);
     // Bin shift: values in [bin0, bin0+nbins) land in [0, nbins),
     // everything else is -1 (counts toward no bin) — the same slicing
     // the in-process worker_loop applies.
@@ -166,12 +152,71 @@ pub fn execute_assign(
     }));
     let kernel_time = t0.elapsed();
     match run {
-        Ok(()) => *engine = Some(eng),
+        Ok(()) => {
+            *engine = Some(eng);
+            Ok((partial, kernel_time))
+        }
         Err(_) => {
             drop(eng); // suspect mid-job state: rebuild on next checkout
-            return fail(true, "compute panicked".into());
+            Err((true, "compute panicked".into()))
         }
     }
+}
+
+/// Execute one wire assignment and produce the reply frame.  Pure with
+/// respect to the pipes (pulled out of [`serve`] so tests can drive it
+/// in-process).  On the file plane it reads `a.img_path` and writes
+/// `a.out_path`; on the shm plane the strip is read from the ring slot
+/// at `a.slot_off` and the partial is written in place right after it —
+/// no store round-trip at all.  Returns `ShardDone` or a typed
+/// `ShardFailed`.  `engine` is a cache slot — a panicking compute
+/// discards the engine (its scheduler state is suspect), matching the
+/// in-process executor's discipline.  `rings` caches child-side ring
+/// mappings across assignments.
+pub fn execute_assign(
+    a: &WireAssign,
+    engine_workers: usize,
+    engine: &mut Option<ScanEngine>,
+    rings: &mut HashMap<String, ShmMap>,
+) -> ProcMsg {
+    let fail = |panicked: bool, reason: String| ProcMsg::ShardFailed {
+        frame_id: a.frame_id,
+        shard_id: a.shard_id,
+        panicked,
+        deadline: false,
+        reason,
+    };
+    let (h, w) = (a.img_h as usize, a.img_w as usize);
+    let (nbins, nrows, row0) = (a.nbins as usize, a.nrows as usize, a.row0 as usize);
+    // Pull the strip (bin indices as f32 — small integers, exact in
+    // f32, so the i32 roundtrip is lossless): from the ring slot on
+    // the shm plane, from the spilled image store otherwise.
+    let shm = a.plane == PLANE_SHM;
+    let strip_bytes = nrows * w * 4;
+    let mut strip = vec![0.0f32; nrows * w];
+    if shm {
+        let map = match ring_map(rings, a) {
+            Ok(m) => m,
+            Err(e) => return fail(false, e),
+        };
+        let mut bytes = vec![0u8; strip_bytes];
+        map.read(a.slot_off as usize, &mut bytes);
+        for (dst, src) in strip.iter_mut().zip(bytes.chunks_exact(4)) {
+            *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+        }
+    } else {
+        let img = match TensorStore::open(&a.img_path, 1, h, w) {
+            Ok(s) => s,
+            Err(e) => return fail(false, format!("open image: {e:#}")),
+        };
+        if let Err(e) = img.read_rows(0, row0, nrows, &mut strip) {
+            return fail(false, format!("read image strip: {e:#}"));
+        }
+    }
+    let (partial, kernel_time) = match compute_partial(&strip, a, engine_workers, engine) {
+        Ok(r) => r,
+        Err((panicked, reason)) => return fail(panicked, reason),
+    };
 
     // Commit the partial and checksum what we committed — the
     // supervisor verifies the same function over the bytes it reads
@@ -207,17 +252,68 @@ pub fn execute_assign(
     }
 }
 
-/// Send one frame on the shared stdout: whole frame under the lock,
-/// flushed immediately (a buffered reply is an invisible reply).
-fn send(out: &Arc<Mutex<std::io::Stdout>>, msg: &ProcMsg) -> Result<()> {
+/// Execute a stream-plane assignment whose strip was assembled from
+/// [`Chunk`](ProcMsg::Chunk) frames.  Returns the reply plus, on
+/// success, the partial's raw f32 LE bytes for the caller to stream
+/// back before the `ShardDone`.
+pub fn execute_stream(
+    a: &WireAssign,
+    strip_raw: &[u8],
+    engine_workers: usize,
+    engine: &mut Option<ScanEngine>,
+) -> (ProcMsg, Option<Vec<u8>>) {
+    let fail = |panicked: bool, reason: String| ProcMsg::ShardFailed {
+        frame_id: a.frame_id,
+        shard_id: a.shard_id,
+        panicked,
+        deadline: false,
+        reason,
+    };
+    let strip: Vec<f32> = strip_raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    match compute_partial(&strip, a, engine_workers, engine) {
+        Ok((partial, kernel_time)) => {
+            let mut bytes = Vec::with_capacity(partial.data.len() * 4);
+            for v in &partial.data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            let done = ProcMsg::ShardDone {
+                frame_id: a.frame_id,
+                shard_id: a.shard_id,
+                kernel_time_us: kernel_time.as_micros() as u64,
+                checksum: checksum_f32(&partial.data),
+                slot: NO_SLOT,
+            };
+            (done, Some(bytes))
+        }
+        Err((panicked, reason)) => (fail(panicked, reason), None),
+    }
+}
+
+/// Send one frame on the shared write half: whole frame under the
+/// lock, flushed immediately (a buffered reply is an invisible reply).
+fn send<W: Write>(out: &Arc<Mutex<W>>, msg: &ProcMsg) -> Result<()> {
     let mut o = lock_recover(out);
     msg.write_to(&mut *o).context("write protocol frame")?;
-    o.flush().context("flush stdout")?;
+    o.flush().context("flush control stream")?;
     Ok(())
 }
 
-/// The worker main loop: heartbeat ticker → calibrate → report → serve
-/// assignments until `Shutdown` or clean stdin EOF.
+/// A stream-plane assignment whose strip is still in flight.
+struct PendingStream {
+    a: WireAssign,
+    /// When the assignment arrived — the anchor for its deadline
+    /// budget.
+    arrival: Instant,
+    buf: Vec<u8>,
+}
+
+/// The worker main loop over arbitrary byte streams: heartbeat ticker
+/// → calibrate → report → serve assignments until `Shutdown` or clean
+/// EOF.  [`run`] feeds it stdin/stdout; [`serve_conn`] feeds it a
+/// connected socket.
 ///
 /// Order matters: the ticker spawns *before* calibration so the
 /// supervisor hears from a slow-booting child while the microbench is
@@ -226,16 +322,13 @@ fn send(out: &Arc<Mutex<std::io::Stdout>>, msg: &ProcMsg) -> Result<()> {
 /// kill→respawn→recalibrate loop).  The supervisor additionally defers
 /// age enforcement until the first frame arrives, so even a child
 /// stalled before the ticker (see `boot_delay`) is not killed early.
-pub fn run(cfg: WorkerConfig) -> Result<()> {
-    if !cfg.boot_delay.is_zero() {
-        // Chaos hook: model the pre-fix world where nothing reaches
-        // the pipe until calibration finishes.
-        std::thread::sleep(cfg.boot_delay);
-    }
-    let out = Arc::new(Mutex::new(std::io::stdout()));
-
-    // Heartbeat ticker first: liveness on the shared pipe, serialized
-    // by the stdout lock so frames never interleave mid-frame.
+pub fn serve<R: Read, W: Write + Send + 'static>(
+    mut input: R,
+    out: Arc<Mutex<W>>,
+    cfg: &WorkerConfig,
+) -> Result<()> {
+    // Heartbeat ticker first: liveness on the shared write half,
+    // serialized by its lock so frames never interleave mid-frame.
     let stop = Arc::new(AtomicBool::new(false));
     let hb_out = Arc::clone(&out);
     let hb_stop = Arc::clone(&stop);
@@ -257,24 +350,125 @@ pub fn run(cfg: WorkerConfig) -> Result<()> {
             }
         })
         .context("spawn heartbeat thread")?;
+    let stop_ticker = |err: Option<anyhow::Error>| {
+        stop.store(true, Ordering::Relaxed);
+        let _ = ticker.join();
+        match err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    };
 
     // Calibrate this node and report before accepting work — the
     // supervisor's placement pass wants every node's snapshot up
     // front.  `calibrate: false` reports the prior (cheap startup).
     let cal = Calibrator::default();
     let snapshot = if cfg.calibrate { cal.calibrate() } else { cal.snapshot() };
-    send(&out, &ProcMsg::CalibrationReport { snapshot })?;
+    if let Err(e) = send(&out, &ProcMsg::CalibrationReport { snapshot }) {
+        return stop_ticker(Some(e));
+    }
 
-    let mut stdin = std::io::stdin().lock();
     let mut engine: Option<ScanEngine> = None;
     let mut rings: HashMap<String, ShmMap> = HashMap::new();
+    let mut streams: HashMap<(u64, u64), PendingStream> = HashMap::new();
     loop {
-        match ProcMsg::read_from(&mut stdin) {
+        match ProcMsg::read_from(&mut input) {
             Ok(None) | Ok(Some(ProcMsg::Shutdown)) => break,
             Ok(Some(ProcMsg::AssignShard(a))) => {
-                let reply = execute_assign(&a, cfg.engine_workers, &mut engine, &mut rings);
+                let arrival = Instant::now();
+                if a.plane == PLANE_STREAM {
+                    // Strip follows as chunks; anchor the deadline now.
+                    // Capacity is a hint capped defensively — growth is
+                    // bounded by the per-chunk checks below either way.
+                    let total = (a.strip_bytes().unwrap_or(0) as usize).min(1 << 20);
+                    streams.insert(
+                        (a.frame_id, a.shard_id),
+                        PendingStream { a, arrival, buf: Vec::with_capacity(total) },
+                    );
+                    continue;
+                }
+                let reply = if deadline_expired(a.deadline_us, arrival) {
+                    ProcMsg::ShardFailed {
+                        frame_id: a.frame_id,
+                        shard_id: a.shard_id,
+                        panicked: false,
+                        deadline: true,
+                        reason: "deadline budget expired before compute".into(),
+                    }
+                } else {
+                    execute_assign(&a, cfg.engine_workers, &mut engine, &mut rings)
+                };
                 if send(&out, &reply).is_err() {
                     break; // parent gone
+                }
+            }
+            Ok(Some(ProcMsg::Chunk { frame_id, shard_id, dir, offset, total, data })) => {
+                if dir != 0 {
+                    continue; // parent-bound chunk echoed here: confused peer
+                }
+                let key = (frame_id, shard_id);
+                let Some(p) = streams.get_mut(&key) else {
+                    // Chunk without a pending assignment — stale after
+                    // a reconnect; the supervisor re-sends everything.
+                    continue;
+                };
+                let expected = p.a.strip_bytes().unwrap_or(0);
+                let in_order = offset as usize == p.buf.len()
+                    && total == expected
+                    && (p.buf.len() + data.len()) as u64 <= expected;
+                if !in_order {
+                    streams.remove(&key);
+                    let reply = ProcMsg::ShardFailed {
+                        frame_id,
+                        shard_id,
+                        panicked: false,
+                        deadline: false,
+                        reason: format!(
+                            "stream chunk out of order (offset {offset}, total {total}, \
+                             expected strip {expected} B)"
+                        ),
+                    };
+                    if send(&out, &reply).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                p.buf.extend_from_slice(&data);
+                if (p.buf.len() as u64) < expected {
+                    continue; // strip still in flight
+                }
+                let p = streams.remove(&key).expect("pending stream present");
+                let reply = if checksum_bytes(&p.buf) != p.a.strip_checksum {
+                    ProcMsg::ShardFailed {
+                        frame_id,
+                        shard_id,
+                        panicked: false,
+                        deadline: false,
+                        reason: "strip checksum mismatch after transfer".into(),
+                    }
+                } else if deadline_expired(p.a.deadline_us, p.arrival) {
+                    // The budget burned down during transfer: skip the
+                    // compute entirely, flagged so the supervisor
+                    // charges `skipped_deadline`, not the retry ladder.
+                    ProcMsg::ShardFailed {
+                        frame_id,
+                        shard_id,
+                        panicked: false,
+                        deadline: true,
+                        reason: "deadline budget expired before compute".into(),
+                    }
+                } else {
+                    let (done, partial) =
+                        execute_stream(&p.a, &p.buf, cfg.engine_workers, &mut engine);
+                    if let Some(bytes) = partial {
+                        if send_chunks(&out, frame_id, shard_id, 1, &bytes).is_err() {
+                            break;
+                        }
+                    }
+                    done
+                };
+                if send(&out, &reply).is_err() {
+                    break;
                 }
             }
             // Parent-bound message types arriving here mean a confused
@@ -282,18 +476,83 @@ pub fn run(cfg: WorkerConfig) -> Result<()> {
             // timeout is the backstop).
             Ok(Some(_)) => {}
             Err(e) => {
-                // A framing error on stdin is unrecoverable — resync
-                // is impossible on a byte pipe.  Exit; the supervisor
-                // sees EOF and respawns.
-                stop.store(true, Ordering::Relaxed);
-                let _ = ticker.join();
-                return Err(anyhow::anyhow!("protocol error on stdin: {e}"));
+                // A framing error on the control stream is
+                // unrecoverable — resync is impossible on a byte
+                // stream.  Exit; the supervisor sees EOF/disconnect
+                // and respawns or reconnects.
+                return stop_ticker(Some(anyhow::anyhow!("protocol error on control stream: {e}")));
             }
         }
     }
-    stop.store(true, Ordering::Relaxed);
-    let _ = ticker.join();
+    stop_ticker(None)
+}
+
+/// Push `bytes` as ordered [`Chunk`](ProcMsg::Chunk) frames, each at
+/// most [`CHUNK_DATA_MAX`] so heartbeats interleave with the transfer.
+fn send_chunks<W: Write>(
+    out: &Arc<Mutex<W>>,
+    frame_id: u64,
+    shard_id: u64,
+    dir: u8,
+    bytes: &[u8],
+) -> Result<()> {
+    let total = bytes.len() as u64;
+    let mut off = 0usize;
+    while off < bytes.len() {
+        let end = (off + CHUNK_DATA_MAX as usize).min(bytes.len());
+        send(
+            out,
+            &ProcMsg::Chunk {
+                frame_id,
+                shard_id,
+                dir,
+                offset: off as u64,
+                total,
+                data: bytes[off..end].to_vec(),
+            },
+        )?;
+        off = end;
+    }
     Ok(())
+}
+
+/// The classic pipe worker: [`serve`] over stdin/stdout.
+pub fn run(cfg: WorkerConfig) -> Result<()> {
+    if !cfg.boot_delay.is_zero() {
+        // Chaos hook: model the pre-fix world where nothing reaches
+        // the pipe until calibration finishes.
+        std::thread::sleep(cfg.boot_delay);
+    }
+    let out = Arc::new(Mutex::new(std::io::stdout()));
+    let stdin = std::io::stdin().lock();
+    serve(stdin, out, &cfg)
+}
+
+/// Serve one accepted socket connection: `Hello` handshake (worker
+/// speaks first), then the same [`serve`] loop the pipe worker runs.
+/// Returns when the supervisor disconnects or sends `Shutdown`; the
+/// listener keeps accepting, which is what makes reconnect cheap.
+pub fn serve_conn(stream: TcpStream, cfg: &WorkerConfig) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = stream.try_clone().context("clone socket read half")?;
+    let out = Arc::new(Mutex::new(stream));
+    send(
+        &out,
+        &ProcMsg::Hello { version: PROTOCOL_VERSION, caps: CAPS_ALL, tag: "proc-worker".into() },
+    )
+    .context("send handshake")?;
+    // Require the supervisor's reply before any work flows — and don't
+    // let a silent peer pin this connection thread forever.
+    lock_recover(&out)
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .context("arm handshake read timeout")?;
+    match ProcMsg::read_from(&mut reader) {
+        Ok(Some(ProcMsg::Hello { .. })) => {}
+        Ok(other) => anyhow::bail!("handshake: expected Hello, got {other:?}"),
+        Err(e) => anyhow::bail!("handshake: {e}"),
+    }
+    lock_recover(&out).set_read_timeout(None).context("disarm handshake read timeout")?;
+    serve(reader, out, cfg)
 }
 
 #[cfg(test)]
@@ -303,6 +562,7 @@ mod tests {
     use crate::proc::protocol::PLANE_FILE;
     use crate::proc::shm::ShmRing;
     use crate::util::prng::Xoshiro256;
+    use std::sync::mpsc;
 
     fn spill_image(h: usize, w: usize, bins: usize, seed: u64) -> (BinnedImage, std::path::PathBuf) {
         let mut rng = Xoshiro256::new(seed);
@@ -341,6 +601,8 @@ mod tests {
             slot_off: 0,
             ring_bytes: 0,
             ring_path: String::new(),
+            deadline_us: 0,
+            strip_checksum: 0,
         };
         let mut engine = None;
         let mut rings = HashMap::new();
@@ -367,6 +629,36 @@ mod tests {
         let got = store.to_histogram().expect("read back");
         assert_eq!(want.max_abs_diff(&got), 0.0, "cross-file result bit-identical");
         assert_eq!(checksum, checksum_f32(&want.data), "checksum covers the payload");
+
+        // The stream plane produces the very same partial from the
+        // same strip bytes — bit-identical across data planes.
+        let mut strip_raw = Vec::new();
+        for r in 6..16 {
+            for c in 0..18 {
+                strip_raw.extend_from_slice(&(img.data[r * 18 + c] as f32).to_le_bytes());
+            }
+        }
+        let sa = WireAssign {
+            img_path: String::new(),
+            out_path: String::new(),
+            plane: PLANE_STREAM,
+            strip_checksum: checksum_bytes(&strip_raw),
+            ..a
+        };
+        let (reply, partial) = execute_stream(&sa, &strip_raw, 1, &mut engine);
+        match reply {
+            ProcMsg::ShardDone { checksum: sck, .. } => {
+                assert_eq!(sck, checksum, "stream plane checksum matches file plane")
+            }
+            other => panic!("expected ShardDone, got {other:?}"),
+        }
+        let bytes = partial.expect("stream success carries the partial bytes");
+        let got: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(got, want.data, "streamed partial bit-identical");
+
         std::fs::remove_file(&img_path).ok();
         std::fs::remove_file(&out_path).ok();
     }
@@ -389,11 +681,14 @@ mod tests {
             slot_off: 0,
             ring_bytes: 0,
             ring_path: String::new(),
+            deadline_us: 0,
+            strip_checksum: 0,
         };
         let mut engine = None;
         let mut rings = HashMap::new();
         match execute_assign(&a, 1, &mut engine, &mut rings) {
-            ProcMsg::ShardFailed { frame_id: 1, shard_id: 0, panicked: false, reason } => {
+            ProcMsg::ShardFailed { frame_id: 1, shard_id: 0, panicked: false, deadline, reason } => {
+                assert!(!deadline, "an I/O failure is not a deadline skip");
                 assert!(reason.contains("open image"), "{reason}");
             }
             other => panic!("expected typed ShardFailed, got {other:?}"),
@@ -439,6 +734,8 @@ mod tests {
             slot_off: 0,
             ring_bytes: 0,
             ring_path: String::new(),
+            deadline_us: 0,
+            strip_checksum: 0,
         };
         let shm_a = WireAssign {
             plane: PLANE_SHM,
@@ -479,5 +776,232 @@ mod tests {
 
         std::fs::remove_file(&img_path).ok();
         std::fs::remove_file(&out_path).ok();
+    }
+
+    /// Feed [`serve`] from an in-memory channel so the test controls
+    /// inter-frame timing exactly.
+    struct ChanReader {
+        rx: mpsc::Receiver<Vec<u8>>,
+        buf: Vec<u8>,
+        pos: usize,
+    }
+
+    impl Read for ChanReader {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.buf.len() {
+                match self.rx.recv() {
+                    Ok(b) => {
+                        self.buf = b;
+                        self.pos = 0;
+                    }
+                    Err(_) => return Ok(0), // clean EOF
+                }
+            }
+            let n = (self.buf.len() - self.pos).min(out.len());
+            out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn serve_script(frames: Vec<(Vec<u8>, Duration)>, cfg: &WorkerConfig) -> Vec<ProcMsg> {
+        let (tx, rx) = mpsc::channel();
+        let out: Arc<Mutex<std::io::Cursor<Vec<u8>>>> =
+            Arc::new(Mutex::new(std::io::Cursor::new(Vec::new())));
+        let captured = Arc::clone(&out);
+        let reader = ChanReader { rx, buf: Vec::new(), pos: 0 };
+        let cfg = cfg.clone();
+        let server = std::thread::spawn(move || serve(reader, captured, &cfg));
+        for (bytes, pause) in frames {
+            if !pause.is_zero() {
+                std::thread::sleep(pause);
+            }
+            tx.send(bytes).expect("feed frame");
+        }
+        drop(tx); // EOF
+        server.join().expect("serve thread").expect("serve exits clean");
+        let raw = lock_recover(&out).get_ref().clone();
+        let mut msgs = Vec::new();
+        let mut r = &raw[..];
+        while let Some(m) = ProcMsg::read_from(&mut r).expect("parse worker output") {
+            msgs.push(m);
+        }
+        msgs
+    }
+
+    fn quiet_cfg() -> WorkerConfig {
+        // Short heartbeat so the ticker join after EOF is prompt;
+        // parsers below skip Heartbeat frames.
+        WorkerConfig {
+            calibrate: false,
+            engine_workers: 1,
+            heartbeat: Duration::from_millis(20),
+            boot_delay: Duration::ZERO,
+        }
+    }
+
+    fn stream_assign_for(img: &BinnedImage, deadline_us: u64) -> (WireAssign, Vec<u8>) {
+        let mut strip_raw = Vec::new();
+        for &v in &img.data {
+            strip_raw.extend_from_slice(&(v as f32).to_le_bytes());
+        }
+        let a = WireAssign {
+            frame_id: 3,
+            shard_id: 1,
+            bin0: 0,
+            nbins: img.bins as u64,
+            row0: 0,
+            nrows: img.h as u64,
+            img_h: img.h as u64,
+            img_w: img.w as u64,
+            img_path: String::new(),
+            out_path: String::new(),
+            plane: PLANE_STREAM,
+            slot: 0,
+            slot_off: 0,
+            ring_bytes: 0,
+            ring_path: String::new(),
+            deadline_us,
+            strip_checksum: checksum_bytes(&strip_raw),
+        };
+        (a, strip_raw)
+    }
+
+    /// Full stream-plane round trip through [`serve`]: assign + strip
+    /// chunks in, partial chunks + `ShardDone` out, all bit-identical
+    /// to the sequential oracle.
+    #[test]
+    fn serve_stream_plane_round_trips_bit_identical() {
+        let mut rng = Xoshiro256::new(0xA11CE);
+        let (h, w, bins) = (14usize, 11usize, 4usize);
+        let mut data = vec![0i32; h * w];
+        rng.fill_bins(&mut data, bins as u32);
+        let img = BinnedImage::new(h, w, bins, data);
+        let (a, strip_raw) = stream_assign_for(&img, 0);
+
+        // Deliberately tiny chunks so reassembly is exercised.
+        let mut frames = vec![(ProcMsg::AssignShard(a.clone()).encode(), Duration::ZERO)];
+        let total = strip_raw.len() as u64;
+        for (i, piece) in strip_raw.chunks(97).enumerate() {
+            frames.push((
+                ProcMsg::Chunk {
+                    frame_id: a.frame_id,
+                    shard_id: a.shard_id,
+                    dir: 0,
+                    offset: (i * 97) as u64,
+                    total,
+                    data: piece.to_vec(),
+                }
+                .encode(),
+                Duration::ZERO,
+            ));
+        }
+        let msgs = serve_script(frames, &quiet_cfg());
+
+        let mut partial_buf = Vec::new();
+        let mut done_ck = None;
+        for m in msgs {
+            match m {
+                ProcMsg::Chunk { dir: 1, offset, data, .. } => {
+                    assert_eq!(offset as usize, partial_buf.len(), "ordered partial chunks");
+                    partial_buf.extend_from_slice(&data);
+                }
+                ProcMsg::ShardDone { checksum, slot, .. } => {
+                    assert_eq!(slot, NO_SLOT);
+                    done_ck = Some(checksum);
+                }
+                ProcMsg::ShardFailed { reason, .. } => panic!("unexpected failure: {reason}"),
+                _ => {} // heartbeats, calibration
+            }
+        }
+        let want = integral_histogram_seq(&img);
+        let got: Vec<f32> = partial_buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(got, want.data, "streamed partial bit-identical to oracle");
+        assert_eq!(done_ck, Some(checksum_f32(&want.data)), "checksum covers the payload");
+    }
+
+    /// A strip whose bytes were corrupted in flight is rejected by the
+    /// checksum before compute — typed, never silent.
+    #[test]
+    fn serve_rejects_corrupted_strip_checksum() {
+        let img = BinnedImage::new(6, 5, 3, vec![1i32; 30]);
+        let (a, mut strip_raw) = stream_assign_for(&img, 0);
+        strip_raw[8] ^= 0x40; // flip one payload bit after checksumming
+        let total = strip_raw.len() as u64;
+        let frames = vec![
+            (ProcMsg::AssignShard(a.clone()).encode(), Duration::ZERO),
+            (
+                ProcMsg::Chunk {
+                    frame_id: a.frame_id,
+                    shard_id: a.shard_id,
+                    dir: 0,
+                    offset: 0,
+                    total,
+                    data: strip_raw,
+                }
+                .encode(),
+                Duration::ZERO,
+            ),
+        ];
+        let msgs = serve_script(frames, &quiet_cfg());
+        let failed = msgs.iter().find_map(|m| match m {
+            ProcMsg::ShardFailed { deadline, reason, .. } => Some((*deadline, reason.clone())),
+            _ => None,
+        });
+        let (deadline, reason) = failed.expect("corruption must fail typed");
+        assert!(!deadline, "corruption is not a deadline skip");
+        assert!(reason.contains("checksum"), "{reason}");
+        assert!(
+            !msgs.iter().any(|m| matches!(m, ProcMsg::ShardDone { .. })),
+            "no completion for a corrupt strip"
+        );
+    }
+
+    /// A deadline budget that burns down while the strip is still in
+    /// flight makes the worker skip compute and flag the failure as a
+    /// deadline skip — the supervisor charges `skipped_deadline`.
+    #[test]
+    fn serve_skips_shard_whose_budget_expired_in_transfer() {
+        let img = BinnedImage::new(6, 5, 3, vec![1i32; 30]);
+        // 1 ms budget, 60 ms transfer stall: unambiguously expired.
+        let (a, strip_raw) = stream_assign_for(&img, 1_000);
+        let total = strip_raw.len() as u64;
+        let frames = vec![
+            (ProcMsg::AssignShard(a.clone()).encode(), Duration::ZERO),
+            (
+                ProcMsg::Chunk {
+                    frame_id: a.frame_id,
+                    shard_id: a.shard_id,
+                    dir: 0,
+                    offset: 0,
+                    total,
+                    data: strip_raw,
+                }
+                .encode(),
+                Duration::from_millis(60),
+            ),
+        ];
+        let msgs = serve_script(frames, &quiet_cfg());
+        let failed = msgs.iter().find_map(|m| match m {
+            ProcMsg::ShardFailed { deadline, reason, .. } => Some((*deadline, reason.clone())),
+            _ => None,
+        });
+        let (deadline, reason) = failed.expect("expired budget must fail");
+        assert!(deadline, "flagged as a deadline skip: {reason}");
+        assert!(
+            !msgs.iter().any(|m| matches!(m, ProcMsg::ShardDone { .. })),
+            "no completion for a skipped shard"
+        );
+    }
+
+    #[test]
+    fn deadline_expired_anchors_at_arrival() {
+        let now = Instant::now();
+        assert!(!deadline_expired(0, now - Duration::from_secs(10)), "0 = no deadline");
+        assert!(deadline_expired(1_000, now - Duration::from_secs(10)), "stale arrival expired");
+        assert!(!deadline_expired(u64::MAX, now), "huge budget never expires");
     }
 }

@@ -402,8 +402,14 @@ impl ShardPlanner {
         let plan = sizer.plan_calibrated(bins, h, w, &agg);
 
         // LPT greedy: heaviest shards first onto the node that finishes
-        // them earliest at its measured speed.
-        let speeds: Vec<f64> = clean.iter().map(|s| s.best_throughput()).collect();
+        // them earliest at its measured speed.  The speed divisor gets
+        // its own defense in depth on top of `sanitized`: a degenerate
+        // entry here poisons `(load + weight) / speed` into NaN finish
+        // times, and NaN comparisons make *every* `t < best_t` false —
+        // the whole frame silently piles onto node 0 and the rest of
+        // the fleet idles.  `lpt_speeds` repairs such entries before
+        // they reach the loop.
+        let speeds = lpt_speeds(&clean.iter().map(|s| s.best_throughput()).collect::<Vec<_>>());
         let mut order: Vec<usize> = (0..plan.shards.len()).collect();
         order.sort_by(|&a, &b| {
             let wa = plan.shards[a].nbins * plan.shards[a].nrows;
@@ -428,6 +434,24 @@ impl ShardPlanner {
         }
         (plan, assignment)
     }
+}
+
+/// Repair a node-speed vector for LPT assignment: every non-finite or
+/// non-positive entry is replaced by the mean of the valid entries —
+/// or `1.0` (uniform LPT) when no entry is valid — so hostile
+/// calibration can skew the *balance* of an assignment but never
+/// produce NaN weights or an assignment that starves every node but
+/// index 0.
+fn lpt_speeds(raw: &[f64]) -> Vec<f64> {
+    let valid: Vec<f64> = raw.iter().copied().filter(|s| s.is_finite() && *s > 0.0).collect();
+    let fallback = if valid.is_empty() {
+        1.0
+    } else {
+        valid.iter().sum::<f64>() / valid.len() as f64
+    };
+    raw.iter()
+        .map(|&s| if s.is_finite() && s > 0.0 { s } else { fallback })
+        .collect()
 }
 
 #[cfg(test)]
@@ -610,6 +634,58 @@ mod tests {
             load[assignment[i]] += s.nbins * s.nrows;
         }
         assert!(load[1] > load[0], "3x-faster node carries more work: {load:?}");
+    }
+
+    /// The placement-weight bugfix, unit half: degenerate speeds are
+    /// repaired, not propagated.  NaN/zero/negative/infinite entries
+    /// take the mean of the valid ones; an all-degenerate vector
+    /// degrades to uniform LPT.
+    #[test]
+    fn lpt_speeds_repairs_degenerate_entries() {
+        let fixed = lpt_speeds(&[2.0, f64::NAN, 6.0, 0.0, -3.0, f64::INFINITY]);
+        assert_eq!(fixed, vec![2.0, 4.0, 6.0, 4.0, 4.0, 4.0]);
+        assert_eq!(lpt_speeds(&[f64::NAN, 0.0, f64::NEG_INFINITY]), vec![1.0; 3]);
+        assert_eq!(lpt_speeds(&[]), Vec::<f64>::new());
+        let healthy = lpt_speeds(&[1.0, 2.0, 3.0]);
+        assert_eq!(healthy, vec![1.0, 2.0, 3.0], "valid speeds pass through untouched");
+    }
+
+    /// The placement-weight bugfix, end-to-end half: adversarial node
+    /// snapshots (NaN, ±∞, zero, negative, denormal — including mixed
+    /// fleets where only one node is hostile) still yield an exact
+    /// cover, in-range node indices, and work on every node when the
+    /// plan has at least one shard per node — never NaN weights, never
+    /// an all-idle fleet.
+    #[test]
+    fn per_node_survives_adversarial_snapshots() {
+        let p = planner(1 << 20, 4);
+        let healthy = CostSnapshot::static_prior(Card::Gtx480);
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0, 0.0, f64::MIN_POSITIVE] {
+            let mut hostile = healthy;
+            hostile.memcpy_bps = bad;
+            hostile.tile_throughput = [bad; 4];
+            hostile.tile_throughput_tuned = [bad; 4];
+            hostile.dispatch_overhead_s = bad;
+            hostile.spill_read_latency_s = bad;
+            hostile.spill_read_bps = bad;
+            for snaps in [vec![hostile; 3], vec![hostile, healthy, hostile]] {
+                let (plan, assignment) = p.plan_per_node(16, 96, 96, &snaps);
+                assert_exact_cover(&plan);
+                assert_eq!(assignment.len(), plan.shards.len());
+                assert!(assignment.iter().all(|&n| n < snaps.len()), "{bad}: {assignment:?}");
+                let mut load = vec![0usize; snaps.len()];
+                for (i, s) in plan.shards.iter().enumerate() {
+                    load[assignment[i]] += s.nbins * s.nrows;
+                }
+                assert!(
+                    plan.shards.len() < snaps.len() || load.iter().all(|&l| l > 0),
+                    "{bad}: no node starves when shards cover the fleet: {load:?}"
+                );
+                // Deterministic under hostility too.
+                let (_, again) = p.plan_per_node(16, 96, 96, &snaps);
+                assert_eq!(assignment, again, "{bad}");
+            }
+        }
     }
 
     #[test]

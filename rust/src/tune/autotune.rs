@@ -26,7 +26,7 @@ use crate::histogram::engine::planner::{Plan, Planner, Schedule};
 use crate::util::json;
 use crate::util::sync::lock_recover;
 use anyhow::{anyhow, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -61,10 +61,26 @@ pub struct TuneStats {
 pub struct TunedPlanner {
     base: Planner,
     cal: Arc<Calibrator>,
-    cache: Mutex<BTreeMap<(usize, usize, usize, usize), Plan>>,
+    cache: Mutex<CacheInner>,
     hits: AtomicUsize,
     misses: AtomicUsize,
     drift_evictions: AtomicUsize,
+}
+
+type GeomKey = (usize, usize, usize, usize);
+
+/// The cache state proper, guarded by one mutex so persistence and
+/// drift eviction observe it atomically.
+#[derive(Debug, Default)]
+struct CacheInner {
+    plans: BTreeMap<GeomKey, Plan>,
+    /// Geometries drift-evicted since this planner was built.  A cache
+    /// *file* saved before the eviction still carries the contradicted
+    /// entry; [`TunedPlanner::load_from`] consults this set so loading
+    /// such a file never resurrects what the measurements killed — only
+    /// a fresh live search (which clears the tombstone) brings the
+    /// geometry back.
+    tombstones: BTreeSet<GeomKey>,
 }
 
 impl TunedPlanner {
@@ -79,7 +95,7 @@ impl TunedPlanner {
         TunedPlanner {
             base,
             cal,
-            cache: Mutex::new(BTreeMap::new()),
+            cache: Mutex::new(CacheInner::default()),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
             drift_evictions: AtomicUsize::new(0),
@@ -96,7 +112,7 @@ impl TunedPlanner {
         TuneStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            cached: lock_recover(&self.cache).len(),
+            cached: lock_recover(&self.cache).plans.len(),
             drift_evictions: self.drift_evictions.load(Ordering::Relaxed),
         }
     }
@@ -111,13 +127,19 @@ impl TunedPlanner {
             return self.base.plan(h, w, bins, workers);
         }
         let key = (h, w, bins, workers);
-        if let Some(&p) = lock_recover(&self.cache).get(&key) {
+        if let Some(&p) = lock_recover(&self.cache).plans.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return p;
         }
         let snap = self.cal.snapshot().sanitized(self.cal.card());
         let plan = search_plan(&self.base, &snap, h, w, bins, workers);
-        lock_recover(&self.cache).insert(key, plan);
+        {
+            // A fresh search under current measurements supersedes any
+            // earlier drift eviction of this geometry.
+            let mut cache = lock_recover(&self.cache);
+            cache.tombstones.remove(&key);
+            cache.plans.insert(key, plan);
+        }
         self.misses.fetch_add(1, Ordering::Relaxed);
         plan
     }
@@ -128,8 +150,9 @@ impl TunedPlanner {
     /// of entries dropped.
     pub fn clear(&self) -> usize {
         let mut cache = lock_recover(&self.cache);
-        let n = cache.len();
-        cache.clear();
+        let n = cache.plans.len();
+        cache.plans.clear();
+        cache.tombstones.clear();
         n
     }
 
@@ -159,9 +182,15 @@ impl TunedPlanner {
         if rel <= DRIFT_BAND {
             return false;
         }
-        let evicted = lock_recover(&self.cache)
-            .remove(&(h, w, bins, workers.max(1)))
-            .is_some();
+        let key = (h, w, bins, workers.max(1));
+        let evicted = {
+            let mut cache = lock_recover(&self.cache);
+            let evicted = cache.plans.remove(&key).is_some();
+            if evicted {
+                cache.tombstones.insert(key);
+            }
+            evicted
+        };
         if evicted {
             self.drift_evictions.fetch_add(1, Ordering::Relaxed);
         }
@@ -170,24 +199,31 @@ impl TunedPlanner {
 
     /// Persist the tuning cache as JSON (hand-built; the repo's JSON
     /// util is parse-only by design).
+    ///
+    /// The cache lock is held across the `fs::write` on purpose: a
+    /// drain-time save that serialized, dropped the lock, and *then*
+    /// wrote would race a concurrent [`Self::observe_report`] drift
+    /// eviction — the file on disk keeps the entry the measurements
+    /// just killed, and the next `load_from` resurrects it.  Holding
+    /// the lock makes save-vs-evict atomic; saves are rare (drain,
+    /// explicit persist), so planners never contend on this in steady
+    /// state.
     pub fn save_to(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
+        let cache = lock_recover(&self.cache);
         let mut entries = String::new();
-        {
-            let cache = lock_recover(&self.cache);
-            for (&(h, w, bins, workers), p) in cache.iter() {
-                if !entries.is_empty() {
-                    entries.push(',');
-                }
-                entries.push_str(&format!(
-                    "{{\"h\":{h},\"w\":{w},\"bins\":{bins},\"workers\":{workers},\
-                     \"schedule\":\"{}\",\"tile\":{},\"plan_workers\":{},\"kernel\":\"{}\"}}",
-                    schedule_name(p.schedule),
-                    p.tile,
-                    p.workers,
-                    p.kernel.name()
-                ));
+        for (&(h, w, bins, workers), p) in cache.plans.iter() {
+            if !entries.is_empty() {
+                entries.push(',');
             }
+            entries.push_str(&format!(
+                "{{\"h\":{h},\"w\":{w},\"bins\":{bins},\"workers\":{workers},\
+                 \"schedule\":\"{}\",\"tile\":{},\"plan_workers\":{},\"kernel\":\"{}\"}}",
+                schedule_name(p.schedule),
+                p.tile,
+                p.workers,
+                p.kernel.name()
+            ));
         }
         let doc = format!("{{\"version\":1,\"entries\":[{entries}]}}\n");
         std::fs::write(path, doc)
@@ -198,7 +234,9 @@ impl TunedPlanner {
     /// Load a tuning cache saved by [`Self::save_to`]; returns the
     /// number of entries adopted.  Malformed documents error typed;
     /// entries for geometries already cached are kept as-is (live
-    /// searches beat stale files).
+    /// searches beat stale files), and entries for geometries this
+    /// planner drift-evicted are skipped outright — a stale file never
+    /// resurrects a plan the measurements contradicted.
     pub fn load_from(&self, path: impl AsRef<Path>) -> Result<usize> {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)
@@ -238,7 +276,11 @@ impl TunedPlanner {
                 return Err(anyhow!("tuning cache entry {i}: degenerate geometry"));
             }
             let plan = Plan { schedule, tile, workers: plan_workers, kernel };
-            cache.entry((h, w, bins, workers)).or_insert(plan);
+            let key = (h, w, bins, workers);
+            if cache.tombstones.contains(&key) || cache.plans.contains_key(&key) {
+                continue;
+            }
+            cache.plans.insert(key, plan);
             adopted += 1;
         }
         Ok(adopted)
@@ -529,6 +571,46 @@ mod tests {
         assert_eq!(t.stats().drift_evictions, 2);
         // Degenerate measurements prove nothing.
         assert!(!t.observe_report(100, 350, 16, 4, Duration::from_secs(1), Duration::ZERO));
+    }
+
+    /// The persistence-race regression: a cache file saved while an
+    /// entry was live must not resurrect that entry once a measured
+    /// report drift-evicts it — `save_to` holds the cache lock across
+    /// the write (save-vs-evict is atomic) and `load_from` consults
+    /// the tombstone set, so the evicted geometry re-searches instead
+    /// of serving the contradicted plan from disk.
+    #[test]
+    fn drift_evicted_entry_stays_evicted_across_save_and_load() {
+        let t = tuner();
+        t.plan(512, 512, 32, 8);
+        t.plan(100, 350, 16, 4);
+        let path = std::env::temp_dir()
+            .join(format!("inthist-tune-tomb-{}.json", std::process::id()));
+        // The stale file: saved while both entries were live…
+        t.save_to(&path).expect("save");
+        // …then measurements kill the 512×512 entry.
+        assert!(t.observe_report(
+            512,
+            512,
+            32,
+            8,
+            Duration::from_secs(1),
+            Duration::from_millis(10),
+        ));
+        assert_eq!(t.stats().cached, 1);
+        // Loading the stale file adopts nothing: the live entry is
+        // kept as-is, the evicted one is tombstoned.
+        assert_eq!(t.load_from(&path).expect("load"), 0);
+        assert_eq!(t.stats().cached, 1, "evicted geometry must stay evicted");
+        let misses = t.stats().misses;
+        t.plan(512, 512, 32, 8);
+        assert_eq!(t.stats().misses, misses + 1, "evicted geometry re-searches");
+        // The fresh live search superseded the tombstone: it persists
+        // and round-trips into a new planner like any other entry.
+        t.save_to(&path).expect("save again");
+        let fresh = tuner();
+        assert_eq!(fresh.load_from(&path).expect("load"), 2);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -487,3 +487,191 @@ fn proc_worker_sigkills_are_survived_bit_identical() {
         "every frame resolved exactly once: {ok_frames}+{failed_frames} != {frame}"
     );
 }
+
+/// What a deterministic chaos proxy does to the n-th supervisor
+/// connection it carries.
+#[derive(Clone, Copy, Debug)]
+enum WireFault {
+    /// Sever both directions after forwarding this many child→parent
+    /// bytes — a connection drop mid-shard, and because the cut can
+    /// land inside a frame, a half-written frame on the parent's
+    /// reader.
+    Cut(u64),
+    /// XOR `len` child→parent bytes starting at stream offset `at`
+    /// with 0xFF — checksum corruption (payload bytes) or framing
+    /// garbage (header bytes) over the wire; both must surface typed.
+    Garble { at: u64, len: u64 },
+    /// Forward verbatim (the directive every connection past the
+    /// schedule gets, so trailing traffic is provably clean).
+    Clean,
+}
+
+/// A byte-level TCP chaos proxy between a remote supervisor and a
+/// `proc-worker --listen` process: connection `n` gets `schedule[n]`,
+/// connections past the schedule run clean.  Faults target the
+/// child→parent direction — partial chunks, completions, heartbeats —
+/// the direction whose loss or corruption the supervisor must turn
+/// into reconnect + requeue, never a hang or a wrong tensor.
+fn chaos_proxy(upstream: String, schedule: Vec<WireFault>) -> String {
+    use std::net::{Shutdown, TcpListener, TcpStream};
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind proxy");
+    let addr = listener.local_addr().expect("proxy addr").to_string();
+    std::thread::spawn(move || {
+        let mut conn = 0usize;
+        loop {
+            let Ok((client, _)) = listener.accept() else { continue };
+            let fault = schedule.get(conn).copied().unwrap_or(WireFault::Clean);
+            conn += 1;
+            let Ok(up) = TcpStream::connect(&upstream) else {
+                let _ = client.shutdown(Shutdown::Both);
+                continue;
+            };
+            client.set_nodelay(true).ok();
+            up.set_nodelay(true).ok();
+            // Parent→child: verbatim.
+            let (c_rd, u_wr) = (client.try_clone().expect("clone"), up.try_clone().expect("clone"));
+            std::thread::spawn(move || {
+                let _ = std::io::copy(&mut &c_rd, &mut &u_wr);
+                let _ = u_wr.shutdown(Shutdown::Both);
+            });
+            // Child→parent: the faulted direction.
+            std::thread::spawn(move || {
+                let mut buf = [0u8; 4096];
+                let mut pos: u64 = 0;
+                loop {
+                    let n = match std::io::Read::read(&mut &up, &mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => n,
+                    };
+                    let mut end = n;
+                    match fault {
+                        WireFault::Clean => {}
+                        WireFault::Garble { at, len } => {
+                            for i in 0..n as u64 {
+                                if pos + i >= at && pos + i < at + len {
+                                    buf[i as usize] ^= 0xFF;
+                                }
+                            }
+                        }
+                        WireFault::Cut(limit) => {
+                            if pos >= limit {
+                                break;
+                            }
+                            end = end.min((limit - pos) as usize);
+                        }
+                    }
+                    if std::io::Write::write_all(&mut &client, &buf[..end]).is_err() {
+                        break;
+                    }
+                    pos += end as u64;
+                    if matches!(fault, WireFault::Cut(limit) if pos >= limit) {
+                        break;
+                    }
+                }
+                let _ = client.shutdown(Shutdown::Both);
+                let _ = up.shutdown(Shutdown::Both);
+            });
+        }
+    });
+    addr
+}
+
+/// Remote-node chaos over loopback TCP: a seeded wire-fault schedule —
+/// connection drops mid-shard, half-written frames, a reconnect storm
+/// of consecutive cuts, and checksum corruption over the wire — and
+/// every frame must still reassemble bit-identical or fail typed; the
+/// supervisor must redial through every drop (counter-asserted) and
+/// trailing clean traffic must carry no residue.
+#[test]
+fn remote_wire_chaos_keeps_frames_bit_identical_or_typed() {
+    use inthist::proc::{ProcPoolConfig, ProcSupervisor};
+    use std::path::PathBuf;
+
+    let _wd = Watchdog::arm("remote_wire_chaos", Duration::from_secs(240));
+    // The listening worker (the "remote host").
+    let mut worker = std::process::Command::new(env!("CARGO_BIN_EXE_proc-worker"))
+        .args(["--listen", "127.0.0.1:0", "--calibrate", "0"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn listening proc-worker");
+    let mut line = String::new();
+    std::io::BufRead::read_line(
+        &mut std::io::BufReader::new(worker.stdout.take().expect("stdout")),
+        &mut line,
+    )
+    .expect("LISTEN line");
+    let upstream = line.trim().strip_prefix("LISTEN ").expect("LISTEN prefix").to_string();
+    // All offsets are safely past the ~40-byte Hello handshake, so
+    // every reconnect attempt itself succeeds and the fault lands on
+    // shard traffic: one mid-shard cut, one wire corruption, then a
+    // storm of two quick cuts back-to-back, then clean forever.
+    let proxy = chaos_proxy(
+        upstream,
+        vec![
+            WireFault::Cut(1400),
+            WireFault::Garble { at: 600, len: 64 },
+            WireFault::Cut(900),
+            WireFault::Cut(700),
+        ],
+    );
+    let sup = ProcSupervisor::new(ProcPoolConfig {
+        workers: 0,
+        max_attempts: 8,
+        remote_workers: vec![proxy],
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_proc-worker"))),
+        calibrate_children: false,
+        ..Default::default()
+    })
+    .expect("connect through chaos proxy");
+    let plan = ShardPlanner::new(policy(10 << 10, 3)).plan(6, 40, 30);
+    assert!(plan.shards.len() >= 4, "want real fan-out");
+
+    let (mut ok_frames, mut failed_frames) = (0usize, 0usize);
+    for frame in 0..10u64 {
+        let img = random_image(40, 30, 6, 6000 + frame);
+        let expected = integral_histogram_seq(&img);
+        let ticket = sup.submit(&img, &plan).expect("submit");
+        let mut out = IntegralHistogram::zeros(0, 0, 0);
+        match ticket.reassemble_into_deadline(&mut out, Duration::from_secs(60)) {
+            Ok(_) => {
+                assert_eq!(
+                    expected.max_abs_diff(&out),
+                    0.0,
+                    "frame {frame}: bit-identity must survive wire chaos"
+                );
+                ok_frames += 1;
+            }
+            Err(e) => match &e {
+                ShardError::ComputeFailed { .. } | ShardError::ComputePanicked { .. } => {
+                    failed_frames += 1;
+                }
+                other => panic!("frame {frame}: unexpected error {other}"),
+            },
+        }
+    }
+    // Trailing clean traffic: the schedule is exhausted, connections
+    // run verbatim, and recovery left no residue.
+    for t in 0..2u64 {
+        let img = random_image(40, 30, 6, 8000 + t);
+        let expected = integral_histogram_seq(&img);
+        let ticket = sup.submit(&img, &plan).expect("submit");
+        let mut out = IntegralHistogram::zeros(0, 0, 0);
+        ticket
+            .reassemble_into_deadline(&mut out, Duration::from_secs(60))
+            .expect("clean trailing frame");
+        assert_eq!(expected.max_abs_diff(&out), 0.0, "trailing frame {t}");
+    }
+
+    let ps = sup.stats();
+    assert!(
+        ps.remote_reconnects >= 2,
+        "the cut schedule must have forced redials: {ps:?}"
+    );
+    assert_eq!(ps.workers_alive, 1, "the remote node ends alive: {ps:?}");
+    assert!(ps.stream_dispatched >= plan.shards.len(), "{ps:?}");
+    assert!(ok_frames >= 1, "some frames must survive wire chaos: {ps:?}");
+    assert_eq!(ok_frames + failed_frames, 10, "every frame resolved exactly once");
+    let _ = worker.kill();
+    let _ = worker.wait();
+}

@@ -70,6 +70,45 @@ impl Drop for Watchdog {
     }
 }
 
+/// A `proc-worker --listen` child on loopback: the closest thing to a
+/// remote node a single-machine test can have.  Binds port 0, parses
+/// the `LISTEN <addr>` announcement, and kills the process on drop.
+/// One listener can back any number of remote node slots — each
+/// supervisor connection gets its own serve thread — which is also
+/// how reconnect-after-drop works: the supervisor just dials again.
+struct RemoteWorker {
+    child: std::process::Child,
+    addr: String,
+}
+
+impl RemoteWorker {
+    fn spawn() -> RemoteWorker {
+        let mut child = std::process::Command::new(worker_bin())
+            .args(["--listen", "127.0.0.1:0", "--calibrate", "0"])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn listening proc-worker");
+        let stdout = child.stdout.take().expect("listener stdout");
+        let mut line = String::new();
+        std::io::BufRead::read_line(&mut std::io::BufReader::new(stdout), &mut line)
+            .expect("read LISTEN line");
+        let addr = line
+            .trim()
+            .strip_prefix("LISTEN ")
+            .unwrap_or_else(|| panic!("expected LISTEN <addr>, got {line:?}"))
+            .to_string();
+        RemoteWorker { child, addr }
+    }
+}
+
+impl Drop for RemoteWorker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
 /// Cross-process bit-identity on adversarial geometries: single-row
 /// strips, single-column images, prime dimensions, bins ≫ rows — the
 /// shapes where off-by-one strip/bin arithmetic dies.  Each frame is
@@ -117,6 +156,124 @@ fn cross_process_results_are_bit_identical_on_adversarial_shapes() {
     assert_eq!(stats.shard_failures, 0, "{stats:?}");
     assert_eq!(stats.checksum_failures, 0, "{stats:?}");
     assert!(stats.completed >= shapes.len(), "{stats:?}");
+}
+
+/// The remote tentpole, happy path: a pure-remote pool (zero local
+/// children, every node a loopback TCP socket to a `proc-worker
+/// --listen` process) must produce frames bit-identical to the serial
+/// oracle on the same adversarial shapes the pipe plane is tested on
+/// — and every shard must have travelled the chunked stream data
+/// plane (counter-asserted; remote nodes have no spill-file or shm
+/// alternative).
+#[test]
+fn remote_loopback_pool_is_bit_identical_on_adversarial_shapes() {
+    let _wd = Watchdog::arm(Duration::from_secs(120), "remote loopback bit-identity");
+    let listener = RemoteWorker::spawn();
+    // Two node slots over one listener process: each connection gets
+    // its own serve loop, like two remote hosts would.
+    let sup = ProcSupervisor::new(ProcPoolConfig {
+        workers: 0,
+        remote_workers: vec![listener.addr.clone(), listener.addr.clone()],
+        ..pool_config(0)
+    })
+    .expect("connect remote pool");
+    assert_eq!(sup.workers(), 2, "both remote slots are nodes");
+    let shapes: &[(usize, usize, usize)] = &[
+        (33, 1, 7),   // single-column image
+        (1, 64, 4),   // single-row image
+        (61, 37, 13), // everything prime
+        (16, 16, 32), // more bins than rows
+        (96, 80, 8),  // bread-and-butter
+    ];
+    let mut shards_total = 0;
+    for (i, &(h, w, bins)) in shapes.iter().enumerate() {
+        let img = binned(h, w, bins, 40 + i as u64);
+        let image = Arc::new(img.clone());
+        let plan = planner(2, (bins * h * w * 4 / 3).max(4096)).plan(bins, h, w);
+        shards_total += plan.shards.len();
+        let oracle = integral_histogram_seq(&img);
+        let ticket = sup.submit(&image, &plan).expect("remote submit");
+        let mut got = IntegralHistogram::zeros(bins, h, w);
+        ticket.reassemble_into(&mut got).expect("remote reassembly");
+        assert_eq!(oracle.max_abs_diff(&got), 0.0, "remote vs serial, shape {h}x{w}x{bins}");
+    }
+    let stats = sup.stats();
+    assert_eq!(stats.remote_workers, 2, "{stats:?}");
+    assert_eq!(stats.shard_failures, 0, "{stats:?}");
+    assert_eq!(stats.checksum_failures, 0, "{stats:?}");
+    assert!(
+        stats.stream_dispatched >= shards_total,
+        "every remote shard rides the stream plane (≥ {shards_total}): {stats:?}"
+    );
+    assert_eq!(stats.shm_dispatched, 0, "no ring on a pure-remote pool: {stats:?}");
+}
+
+/// A mixed fleet — one local pipe child beside one remote socket node
+/// — serves frames bit-identically, with the remote node's shards on
+/// the stream plane and the local node's on its native plane.
+#[test]
+fn mixed_local_and_remote_pool_is_bit_identical() {
+    let _wd = Watchdog::arm(Duration::from_secs(120), "mixed local+remote pool");
+    let listener = RemoteWorker::spawn();
+    let sup = ProcSupervisor::new(ProcPoolConfig {
+        remote_workers: vec![listener.addr.clone()],
+        ..pool_config(1)
+    })
+    .expect("spawn mixed pool");
+    assert_eq!(sup.workers(), 2);
+    let (h, w, bins) = (72, 56, 16);
+    for t in 0..4u64 {
+        let img = Arc::new(binned(h, w, bins, 300 + t));
+        let oracle = integral_histogram_seq(&binned(h, w, bins, 300 + t));
+        let plan = planner(2, bins * h * w).plan(bins, h, w);
+        let ticket = sup.submit(&img, &plan).expect("submit");
+        let mut got = IntegralHistogram::zeros(bins, h, w);
+        ticket.reassemble_into(&mut got).expect("mixed reassembly");
+        assert_eq!(oracle.max_abs_diff(&got), 0.0, "frame {t} bit-identity on a mixed pool");
+    }
+    let stats = sup.stats();
+    assert_eq!(stats.remote_workers, 1, "{stats:?}");
+    assert!(stats.stream_dispatched >= 1, "the remote node must have carried work: {stats:?}");
+    assert!(
+        stats.dispatched > stats.stream_dispatched,
+        "the local node must have carried work too: {stats:?}"
+    );
+    assert_eq!(stats.shard_failures, 0, "{stats:?}");
+}
+
+/// The remote reap→reconnect→requeue ladder: drop the socket to a
+/// remote node mid-frame and the supervisor must reconnect to the
+/// same listener, requeue the dead connection's in-flight shards, and
+/// finish every frame bit-identical — the socket analog of the
+/// SIGKILL respawn guarantee below.
+#[test]
+fn remote_disconnect_mid_frame_reconnects_and_completes() {
+    let _wd = Watchdog::arm(Duration::from_secs(120), "remote disconnect reconnect");
+    let listener = RemoteWorker::spawn();
+    let sup = ProcSupervisor::new(ProcPoolConfig {
+        workers: 0,
+        remote_workers: vec![listener.addr.clone(), listener.addr.clone()],
+        ..pool_config(0)
+    })
+    .expect("connect remote pool");
+    let (h, w, bins) = (72, 56, 16);
+    for t in 0..6u64 {
+        let img = Arc::new(binned(h, w, bins, 900 + t));
+        let oracle = integral_histogram_seq(&binned(h, w, bins, 900 + t));
+        let plan = planner(2, bins * h * w).plan(bins, h, w);
+        let ticket = sup.submit(&img, &plan).expect("submit");
+        if t == 1 || t == 3 {
+            // Mid-frame: stream chunks for this ticket are in flight.
+            sup.kill_worker((t % 2) as usize).expect("drop connection");
+        }
+        let mut got = IntegralHistogram::zeros(bins, h, w);
+        ticket.reassemble_into(&mut got).expect("frame must survive the disconnect");
+        assert_eq!(oracle.max_abs_diff(&got), 0.0, "frame {t} bit-identity across a disconnect");
+    }
+    let stats = sup.stats();
+    assert!(stats.remote_reconnects >= 1, "a dropped socket must be redialed: {stats:?}");
+    assert_eq!(stats.workers_alive, 2, "pool back at full strength: {stats:?}");
+    assert_eq!(stats.shard_failures, 0, "no frame may fail for a survivable drop: {stats:?}");
 }
 
 /// The headline guarantee: SIGKILL a child mid-frame and every
